@@ -1,0 +1,38 @@
+//! Memory-regression probe for the PJRT runtime (EXPERIMENTS.md §Perf):
+//! runs the PubMed eval executable 30x and prints RSS. With the
+//! `execute(&[Literal])` path of the vendored xla crate this grew
+//! +45 MB/call (input device buffers leaked inside the C wrapper);
+//! with the explicit `buffer_from_host_buffer` + `execute_b` path the
+//! trajectory is flat. Expect: all iterations within a few MB.
+//!
+//!     cargo run --release --example leak_test
+
+use gnn_pipe::config::Config;
+use gnn_pipe::data::generate;
+use gnn_pipe::runtime::{Engine, HostTensor};
+use gnn_pipe::train::{flatten_params, init_params};
+
+fn rss_mb() -> f64 {
+    let s = std::fs::read_to_string("/proc/self/statm").unwrap();
+    let pages: f64 = s.split_whitespace().nth(1).unwrap().parse().unwrap();
+    pages * 4096.0 / 1e6
+}
+
+fn main() {
+    let cfg = Config::load().unwrap();
+    let eng = Engine::from_artifacts_dir(&cfg.artifacts_dir()).unwrap();
+    let profile = cfg.dataset("pubmed").unwrap();
+    let ds = generate(profile).unwrap();
+    let exe = eng.executable("pubmed_ell_eval_fwd").unwrap();
+    let params = init_params(profile, &cfg.model, 0);
+    let mut inputs = flatten_params(&params, &eng.manifest.param_order).unwrap();
+    inputs.push(HostTensor::f32(vec![profile.nodes, profile.features], ds.features.clone()));
+    let ell = ds.graph.to_ell(profile.ell_k).unwrap();
+    inputs.push(HostTensor::s32(vec![profile.nodes, profile.ell_k], ell.idx));
+    inputs.push(HostTensor::f32(vec![profile.nodes, profile.ell_k], ell.mask));
+    println!("before: {:.0} MB", rss_mb());
+    for i in 0..30 {
+        let _ = exe.run(&inputs).unwrap();
+        if i % 10 == 9 { println!("iter {i}: {:.0} MB", rss_mb()); }
+    }
+}

@@ -1,0 +1,214 @@
+"""AOT compiler: lower every entry point to HLO text + write the manifest.
+
+Interchange format is HLO *text*, not a serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(the version behind the published ``xla`` 0.1.6 crate) rejects
+(``proto.id() <= INT_MAX``).  The text parser reassigns ids, so text
+round-trips cleanly.  See /opt/xla-example/README.md.
+
+Lowered with ``return_tuple=True``; the Rust side unwraps with
+``Literal::to_tuple``.
+
+The manifest (artifacts/manifest.json) is the runtime contract: for each
+artifact it records the positional input (name, shape, dtype) list, the
+output shapes, and XLA cost-analysis FLOP/byte estimates that feed the L3
+device simulator (rust/src/simulator).
+
+Usage:  cd python && python -m compile.aot [--out-dir ../artifacts]
+                     [--only pubmed_ell_train_step] [--skip-pipeline]
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from . import stages as S
+from .configs import REPO_ROOT, load_datasets, load_model, load_pipeline
+
+DTYPE_NAMES = {
+    jnp.dtype("float32"): "f32",
+    jnp.dtype("int32"): "s32",
+    jnp.dtype("uint32"): "u32",
+}
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec_entry(name: str, spec) -> dict:
+    return {
+        "name": name,
+        "shape": list(spec.shape),
+        "dtype": DTYPE_NAMES[jnp.dtype(spec.dtype)],
+    }
+
+
+def lower_one(name: str, fn, specs, out_dir: str, meta: dict) -> dict:
+    """Lower one entry point; returns its manifest record."""
+    t0 = time.time()
+    arg_specs = [s for _, s in specs]
+    # keep_unused: the positional calling convention is the contract —
+    # without it XLA drops value-unused args (e.g. a bias in its own VJP)
+    # and the Rust runtime's buffer count no longer matches the manifest.
+    lowered = jax.jit(fn, keep_unused=True).lower(*arg_specs)
+
+    flops = bytes_accessed = None
+    try:
+        cost = lowered.cost_analysis()
+        if isinstance(cost, (list, tuple)):
+            cost = cost[0]
+        flops = float(cost.get("flops", 0.0))
+        bytes_accessed = float(cost.get("bytes accessed", 0.0))
+    except Exception:
+        pass
+
+    text = to_hlo_text(lowered)
+    fname = f"{name}.hlo.txt"
+    with open(os.path.join(out_dir, fname), "w") as f:
+        f.write(text)
+
+    # Output shapes from the lowered signature.
+    out_avals = lowered.out_info
+    outs = jax.tree_util.tree_leaves(out_avals)
+    outputs = [
+        {"shape": list(o.shape), "dtype": DTYPE_NAMES[jnp.dtype(o.dtype)]}
+        for o in outs
+    ]
+
+    rec = {
+        "name": name,
+        "file": fname,
+        "inputs": [_spec_entry(n, s) for n, s in specs],
+        "outputs": outputs,
+        "flops": flops,
+        "bytes_accessed": bytes_accessed,
+        "hlo_sha256": hashlib.sha256(text.encode()).hexdigest(),
+        **meta,
+    }
+    dt = time.time() - t0
+    print(f"  [{dt:6.2f}s] {name}: {len(text)/1e6:.2f} MB HLO, "
+          f"{(flops or 0)/1e9:.3f} GFLOP", flush=True)
+    return rec
+
+
+def build_all(out_dir: str, only: str | None, skip_pipeline: bool) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    datasets = load_datasets()
+    mc = load_model()
+    pc = load_pipeline()
+    records = []
+
+    def want(name: str) -> bool:
+        return only is None or only in name
+
+    # --- Full-graph artifacts: every dataset x backend -------------------
+    for ds_name, ds in datasets.items():
+        for backend in M.BACKENDS:
+            base_meta = {"dataset": ds_name, "backend": backend, "chunks": None}
+            name = f"{ds_name}_{backend}_train_step"
+            if want(name):
+                records.append(lower_one(
+                    name,
+                    S.make_train_step(ds, mc, backend),
+                    S.train_step_specs(ds, mc, backend),
+                    out_dir, {**base_meta, "kind": "train_step"},
+                ))
+            name = f"{ds_name}_{backend}_eval_fwd"
+            if want(name):
+                records.append(lower_one(
+                    name,
+                    S.make_eval_fwd(ds, mc, backend),
+                    S.eval_fwd_specs(ds, mc, backend),
+                    out_dir, {**base_meta, "kind": "eval_fwd"},
+                ))
+
+    # --- Pipeline artifacts: pipeline dataset x backend x chunks ---------
+    if not skip_pipeline:
+        ds = datasets[pc.pipeline_dataset]
+        for backend in pc.pipeline_backends:
+            fns = S.stage_fns(ds, mc, backend)
+            for k in pc.chunks:
+                all_specs = S.stage_specs(ds, mc, backend, k)
+                for kind, fn in fns.items():
+                    name = f"{ds.name}_{backend}_c{k}_{kind}"
+                    if not want(name):
+                        continue
+                    records.append(lower_one(
+                        name, fn, all_specs[kind], out_dir,
+                        {"dataset": ds.name, "backend": backend,
+                         "chunks": k, "kind": kind},
+                    ))
+
+    # --- SIGN extension (E9): precomputed-representation MLP ------------
+    if not skip_pipeline:
+        from . import model_sign as MS
+
+        ds = datasets[pc.pipeline_dataset]
+        for k in list(pc.chunks) + [1]:
+            sp = MS.sign_specs(ds, k)
+            name = f"{ds.name}_sign_c{k}_train_step"
+            if want(name) and not any(r["name"] == name for r in records):
+                records.append(lower_one(
+                    name, MS.make_sign_train_step(ds, mc), sp["train"],
+                    out_dir,
+                    {"dataset": ds.name, "backend": "sign", "chunks": k,
+                     "kind": "sign_train_step"},
+                ))
+        name = f"{ds.name}_sign_eval_fwd"
+        if want(name):
+            records.append(lower_one(
+                name, MS.make_sign_eval(ds, mc),
+                MS.sign_specs(ds, 1)["eval"], out_dir,
+                {"dataset": ds.name, "backend": "sign", "chunks": None,
+                 "kind": "sign_eval_fwd"},
+            ))
+
+    manifest = {
+        "version": 1,
+        "model": {
+            "heads": mc.heads, "hidden": mc.hidden,
+            "feat_dropout": mc.feat_dropout, "attn_dropout": mc.attn_dropout,
+            "leaky_relu_slope": mc.leaky_relu_slope,
+        },
+        "pipeline": {
+            "devices": pc.devices, "balance": list(pc.balance),
+            "chunks": list(pc.chunks), "dataset": pc.pipeline_dataset,
+            "backends": list(pc.pipeline_backends),
+        },
+        "param_order": list(M.PARAM_NAMES),
+        "stage_params": {str(k): list(v) for k, v in M.STAGE_PARAMS.items()},
+        "artifacts": records,
+    }
+    path = os.path.join(out_dir, "manifest.json")
+    with open(path, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {len(records)} artifacts + manifest to {out_dir}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default=os.path.join(REPO_ROOT, "artifacts"))
+    ap.add_argument("--only", default=None,
+                    help="substring filter on artifact names")
+    ap.add_argument("--skip-pipeline", action="store_true")
+    args = ap.parse_args()
+    build_all(args.out_dir, args.only, args.skip_pipeline)
+
+
+if __name__ == "__main__":
+    main()

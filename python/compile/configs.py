@@ -1,0 +1,145 @@
+"""Shared configuration loading for the compile path.
+
+The JSON files under ``configs/`` are the single source of truth for every
+static shape in the system: the Rust coordinator generates data with these
+shapes and the AOT compiler lowers HLO with these shapes.  If they drift,
+``runtime::Executable`` input validation in Rust fails loudly.
+"""
+
+from __future__ import annotations
+
+import json
+import math
+import os
+from dataclasses import dataclass, field
+
+REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", ".."))
+CONFIG_DIR = os.path.join(REPO_ROOT, "configs")
+
+
+def _load(name: str) -> dict:
+    with open(os.path.join(CONFIG_DIR, name)) as f:
+        return json.load(f)
+
+
+@dataclass(frozen=True)
+class DatasetProfile:
+    """Static shape profile of one synthetic citation dataset."""
+
+    name: str
+    nodes: int
+    undirected_edges: int
+    features: int
+    classes: int
+    train_per_class: int
+    val_size: int
+    test_size: int
+    homophily: float
+    feature_density: float
+    seed: int
+    ell_k: int
+    edge_pad_multiple: int
+
+    @property
+    def e_cap(self) -> int:
+        """Padded directed-edge capacity: both directions + self-loops."""
+        raw = 2 * self.undirected_edges + self.nodes
+        m = self.edge_pad_multiple
+        return ((raw + m - 1) // m) * m
+
+    def chunk_nodes(self, chunks: int) -> int:
+        """Per-micro-batch node capacity for a given chunk count.
+
+        torchgpipe splits the leading axis into ``chunks`` near-equal
+        pieces; we pad every piece to the size of the largest (the first
+        ``ceil(n / chunks)``) so one HLO shape serves all micro-batches.
+        """
+        return math.ceil(self.nodes / chunks)
+
+    def chunk_e_cap(self, chunks: int) -> int:
+        """Padded directed-edge capacity of an induced chunk sub-graph.
+
+        A sequential chunk can retain at most all intra-chunk edges; we
+        size for the worst case of the full per-chunk edge share plus
+        self-loops, rounded up.  The Rust side validates actual counts
+        against this capacity at runtime.
+        """
+        n_c = self.chunk_nodes(chunks)
+        raw = 2 * math.ceil(self.undirected_edges / chunks) + n_c
+        m = self.edge_pad_multiple
+        return ((raw + m - 1) // m) * m
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    heads: int
+    hidden: int
+    feat_dropout: float
+    attn_dropout: float
+    leaky_relu_slope: float
+    lr: float
+    beta1: float
+    beta2: float
+    eps: float
+    weight_decay: float
+    epochs: int
+
+
+@dataclass(frozen=True)
+class PipelineConfig:
+    devices: int
+    balance: tuple
+    chunks: tuple
+    pipeline_dataset: str
+    pipeline_backends: tuple
+
+
+def load_datasets() -> dict:
+    raw = _load("datasets.json")
+    out = {}
+    for name, d in raw["datasets"].items():
+        out[name] = DatasetProfile(
+            name=name,
+            nodes=d["nodes"],
+            undirected_edges=d["undirected_edges"],
+            features=d["features"],
+            classes=d["classes"],
+            train_per_class=d["train_per_class"],
+            val_size=d["val_size"],
+            test_size=d["test_size"],
+            homophily=d["homophily"],
+            feature_density=d["feature_density"],
+            seed=d["seed"],
+            ell_k=raw["ell_k"],
+            edge_pad_multiple=raw["edge_pad_multiple"],
+        )
+    return out
+
+
+def load_model() -> ModelConfig:
+    raw = _load("model.json")
+    opt = raw["optimizer"]
+    return ModelConfig(
+        heads=raw["heads"],
+        hidden=raw["hidden"],
+        feat_dropout=raw["feat_dropout"],
+        attn_dropout=raw["attn_dropout"],
+        leaky_relu_slope=raw["leaky_relu_slope"],
+        lr=opt["lr"],
+        beta1=opt["beta1"],
+        beta2=opt["beta2"],
+        eps=opt["eps"],
+        weight_decay=opt["weight_decay"],
+        epochs=raw["epochs"],
+    )
+
+
+def load_pipeline() -> PipelineConfig:
+    raw = _load("pipeline.json")
+    return PipelineConfig(
+        devices=raw["devices"],
+        balance=tuple(raw["balance"]),
+        chunks=tuple(raw["chunks"]),
+        pipeline_dataset=raw["pipeline_dataset"],
+        pipeline_backends=tuple(raw["pipeline_backends"]),
+    )

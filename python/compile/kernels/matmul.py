@@ -1,0 +1,151 @@
+"""L1 Pallas kernel: MXU-oriented tiled matmul with a custom VJP.
+
+This is the FLOP-dominant operation of the GAT model (the feature
+projection ``X @ W``; PubMed layer-1 alone is 19717x500x64).  The paper's
+CUDA substrate gets this from cuBLAS; on a TPU-shaped machine the idiom is
+a (bm, bk) x (bk, bn) systolic-array tile schedule expressed through
+``BlockSpec``: the grid walks (M/bm, N/bn) output tiles with a K-loop in
+the minor grid axis, accumulating into the resident output tile in VMEM.
+
+Run with ``interpret=True`` everywhere (the CPU PJRT plugin cannot execute
+Mosaic custom-calls); structure, not interpret-mode wall-clock, is what is
+tuned — see DESIGN.md section "Perf" for the VMEM/MXU accounting.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile sizes.  128x128 matches the MXU systolic array; the K tile
+# keeps the three resident buffers (x-tile, w-tile, out-tile) at
+# 3 * 128*128*4 B = 192 KiB, far under a ~16 MiB VMEM budget, leaving room
+# for double-buffering the HBM->VMEM streams.
+BM, BK, BN = 128, 128, 128
+
+# Interpret-target tile profile (what `aot.py` lowers, since the CPU PJRT
+# plugin can only run interpret-mode Pallas): interpret lowering turns
+# each grid step into an XLA while-loop iteration with ~5-25 ms of
+# dynamic-slice overhead on CPU, so the only sane schedule is a single
+# grid step per call (tile = whole padded operand; sentinel 0 below).
+# Measured on the PubMed layer-1 projection (19717x500x64):
+#   128^3 grid (616 steps)       5.34 s/call
+#   2048x512x128 grid (10 steps) 0.25 s/call   (21x)
+#   single step                  0.045 s/call  (119x; raw dot is 0.013 s)
+# EXPERIMENTS.md §Perf has the full log.  The MXU/VMEM analysis and the
+# hardware-adaptation story apply to the 128^3 profile, which remains the
+# default and is swept by the tests.
+INTERPRET_BM, INTERPRET_BK, INTERPRET_BN = 0, 0, 0
+
+# Padding quantum for the single-step profile.
+_LANE = 8
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref, *, n_k: int):
+    """One (bm, bn) output tile; grid minor axis walks the K tiles."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # f32 accumulate of one (bm, bk) x (bk, bn) MXU pass.
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def _pad_to(x: jnp.ndarray, m0: int, m1: int) -> jnp.ndarray:
+    p0 = (-x.shape[0]) % m0
+    p1 = (-x.shape[1]) % m1
+    if p0 == 0 and p1 == 0:
+        return x
+    return jnp.pad(x, ((0, p0), (0, p1)))
+
+
+def _tiled_matmul_impl(
+    x: jnp.ndarray, w: jnp.ndarray, bm: int, bk: int, bn: int
+) -> jnp.ndarray:
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"contraction mismatch {x.shape} @ {w.shape}"
+    # Sentinel 0: whole-dimension tile (the interpret-target profile).
+    if bm == 0:
+        bm = max(_LANE, ((m + _LANE - 1) // _LANE) * _LANE)
+    if bk == 0:
+        bk = max(_LANE, ((k + _LANE - 1) // _LANE) * _LANE)
+    if bn == 0:
+        bn = max(_LANE, ((n + _LANE - 1) // _LANE) * _LANE)
+    xp = _pad_to(x, bm, bk)
+    wp = _pad_to(w, bk, bn)
+    mt, kt, nt = xp.shape[0] // bm, xp.shape[1] // bk, wp.shape[1] // bn
+
+    out = pl.pallas_call(
+        functools.partial(_matmul_kernel, n_k=kt),
+        grid=(mt, nt, kt),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mt * bm, nt * bn), jnp.float32),
+        interpret=True,
+    )(xp, wp)
+    return out[:m, :n]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
+def tiled_matmul(
+    x: jnp.ndarray, w: jnp.ndarray, bm: int = BM, bk: int = BK, bn: int = BN
+) -> jnp.ndarray:
+    """``x @ w`` through the Pallas tile schedule; differentiable.
+
+    Both cotangents are themselves matmuls, so the backward pass re-enters
+    the same kernel — gradients flow through Pallas end to end.
+    """
+    return _tiled_matmul_impl(x, w, bm, bk, bn)
+
+
+def _fwd(x, w, bm, bk, bn):
+    return _tiled_matmul_impl(x, w, bm, bk, bn), (x, w)
+
+
+def _bwd(bm, bk, bn, res, g):
+    x, w = res
+    # dX = g @ W^T ; dW = X^T @ g — same kernel, transposed operands.
+    dx = _tiled_matmul_impl(g, w.T, bm, bk, bn)
+    dw = _tiled_matmul_impl(x.T, g, bm, bk, bn)
+    return dx, dw
+
+
+tiled_matmul.defvjp(_fwd, _bwd)
+
+
+def vmem_bytes(bm: int = BM, bk: int = BK, bn: int = BN) -> int:
+    """Resident VMEM bytes per grid step (x-tile + w-tile + out-tile, f32).
+
+    Used by the perf accounting in DESIGN.md / EXPERIMENTS.md and asserted
+    against the VMEM budget in python/tests/test_perf_model.py.
+    """
+    return 4 * (bm * bk + bk * bn + bm * bn)
+
+
+def mxu_utilization_estimate(
+    m: int, k: int, n: int, bm: int = BM, bk: int = BK, bn: int = BN
+) -> float:
+    """Fraction of MXU issue slots doing useful work, from padding waste.
+
+    The systolic array processes full (bm, bk, bn) tiles; work on padded
+    rows/cols is wasted.  This is the structural (shape-level) utilisation
+    bound — the quantity the paper's roofline discussion translates to on
+    TPU hardware.
+    """
+    mp = ((m + bm - 1) // bm) * bm
+    kp = ((k + bk - 1) // bk) * bk
+    np_ = ((n + bn - 1) // bn) * bn
+    useful = m * k * n
+    issued = mp * kp * np_
+    return useful / issued

@@ -1,0 +1,104 @@
+"""SIGN (Scalable Inception GNN, Frasca et al. 2020) — the paper's §8
+second future-work proposal, implemented as experiment E9.
+
+SIGN sidesteps the GPipe micro-batching problem entirely: graph
+convolution filters of different radii are PRE-COMPUTED once on the host
+(here: r-hop mean-aggregated features A^r X, r = 0..R, built by
+rust/src/data::sign_features via CSR SpMM), and the trainable model is a
+plain MLP over the concatenated representations. With no message passing
+at training time, sequential micro-batching loses nothing — the property
+the paper conjectures would fix its Figure-4 accuracy collapse.
+
+The MLP mirrors the GAT's budget: dropout -> Linear(3d -> 64) -> ELU ->
+dropout -> Linear(64 -> C) -> log-softmax, same optimiser settings.
+Lowered per micro-batch shape so the Rust driver can train it chunked
+with the same sequential chunker that breaks the GAT.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .configs import DatasetProfile, ModelConfig
+
+SIGN_HOPS = 2           # representations: X, AX, A^2X
+SIGN_HIDDEN = 64
+
+SIGN_PARAM_NAMES: Tuple[str, ...] = ("sw1", "sb1", "sw2", "sb2")
+
+
+def sign_param_specs(ds: DatasetProfile) -> List[Tuple[str, Tuple[int, ...]]]:
+    d_in = (SIGN_HOPS + 1) * ds.features
+    return [
+        ("sw1", (d_in, SIGN_HIDDEN)),
+        ("sb1", (SIGN_HIDDEN,)),
+        ("sw2", (SIGN_HIDDEN, ds.classes)),
+        ("sb2", (ds.classes,)),
+    ]
+
+
+def sign_forward(params: Dict[str, jnp.ndarray], x, mc: ModelConfig, key,
+                 deterministic: bool):
+    def drop(v, k):
+        if deterministic:
+            return v
+        keep = jax.random.bernoulli(k, 1.0 - mc.feat_dropout, v.shape)
+        return jnp.where(keep, v / (1.0 - mc.feat_dropout), 0.0)
+
+    key = jnp.asarray(key, jnp.uint32)
+    k1, k2 = jax.random.split(key)
+    h = drop(x, k1)
+    h = jax.nn.elu(h @ params["sw1"] + params["sb1"])
+    h = drop(h, k2)
+    logits = h @ params["sw2"] + params["sb2"]
+    return jax.nn.log_softmax(logits, axis=-1)
+
+
+def make_sign_train_step(ds: DatasetProfile, mc: ModelConfig):
+    def train_step(sw1, sb1, sw2, sb2, x, labels, mask, key):
+        p = {"sw1": sw1, "sb1": sb1, "sw2": sw2, "sb2": sb2}
+
+        def loss_fn(pd):
+            logp = sign_forward(pd, x, mc, key, deterministic=False)
+            picked = jnp.take_along_axis(
+                logp, labels[:, None].astype(jnp.int32), axis=1
+            )[:, 0]
+            s = -jnp.sum(picked * mask)
+            return s, jnp.sum(mask)
+
+        (s, cnt), grads = jax.value_and_grad(loss_fn, has_aux=True)(p)
+        # Sum-loss + count so the chunked driver normalises once.
+        return (s, cnt) + tuple(grads[n] for n in SIGN_PARAM_NAMES)
+
+    return train_step
+
+
+def make_sign_eval(ds: DatasetProfile, mc: ModelConfig):
+    zero = jnp.zeros((2,), jnp.uint32)
+
+    def eval_fwd(sw1, sb1, sw2, sb2, x):
+        p = {"sw1": sw1, "sb1": sb1, "sw2": sw2, "sb2": sb2}
+        return (sign_forward(p, x, mc, zero, deterministic=True),)
+
+    return eval_fwd
+
+
+def sign_specs(ds: DatasetProfile, chunks: int):
+    """Input specs for the chunked train step (n_c rows) and full eval."""
+    n_c = ds.chunk_nodes(chunks)
+    d_in = (SIGN_HOPS + 1) * ds.features
+    f32 = lambda s: jax.ShapeDtypeStruct(s, jnp.float32)
+    s32 = lambda s: jax.ShapeDtypeStruct(s, jnp.int32)
+    u32 = lambda s: jax.ShapeDtypeStruct(s, jnp.uint32)
+    params = [(n, f32(s)) for n, s in sign_param_specs(ds)]
+    train = params + [
+        ("x", f32((n_c, d_in))),
+        ("labels", s32((n_c,))),
+        ("mask", f32((n_c,))),
+        ("key", u32((2,))),
+    ]
+    ev = params + [("x", f32((ds.nodes, d_in)))]
+    return {"train": train, "eval": ev}

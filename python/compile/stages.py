@@ -1,0 +1,306 @@
+"""AOT entry points: flat-signature functions lowered to HLO artifacts.
+
+Every function here has a *flat* tensor signature (no pytrees beyond
+tuples) so the Rust runtime can feed `xla::Literal`s positionally.  The
+manifest written by aot.py records the exact (name, shape, dtype) order.
+
+Artifact kinds
+==============
+Full-graph (per dataset x backend) — the single-device path:
+  * ``train_step``  (params..., x, graph..., labels, mask, key)
+                    -> (loss_mean, grads...)
+    One fused fwd+loss+bwd executable; Adam runs in Rust.
+  * ``eval_fwd``    (params..., x, graph...) -> (logp,)
+    Deterministic (dropout off).
+
+Pipeline (per backend x chunk-count, PubMed) — the GPipe path, stages
+cut at the paper's balance [2,1,2,1]:
+  * ``s{i}_fwd``    stage forward over one micro-batch.
+  * ``s{i}_bwd``    *rematerialising* stage backward (GPipe checkpointing:
+                    recompute the stage forward inside the VJP from the
+                    stashed stage *input*, so forward executables stash
+                    nothing but their inputs).
+  * ``s3loss_bwd``  fused LogSoftmax + masked-NLL backward: from the raw
+                    stage-2 logits produce (loss_sum, count, dlogits).
+
+Gradient normalisation: pipeline losses are accumulated as (sum, count)
+across micro-batches; the coordinator divides accumulated grads by the
+total count, which reproduces the full-batch mean gradient exactly when
+chunking loses no edges (proptest: ``chunk_invariance`` on the Rust side,
+``test_stages.py::test_pipeline_matches_monolith`` here).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import model as M
+from .configs import DatasetProfile, ModelConfig
+
+
+def _params_from_flat(flat, names):
+    return dict(zip(names, flat))
+
+
+def _graph_from_flat(flat, backend):
+    if backend == "ell":
+        return {"ell_idx": flat[0], "ell_mask": flat[1]}
+    return {"edge_src": flat[0], "edge_dst": flat[1], "edge_mask": flat[2]}
+
+
+def n_graph_args(backend: str) -> int:
+    return 2 if backend == "ell" else 3
+
+
+# ---------------------------------------------------------------------------
+# Full-graph entry points
+# ---------------------------------------------------------------------------
+
+def make_train_step(ds: DatasetProfile, mc: ModelConfig, backend: str):
+    names = [n for n, _ in M.param_specs(ds, mc)]
+    ng = n_graph_args(backend)
+
+    def train_step(*args):
+        p = _params_from_flat(args[:8], names)
+        x = args[8]
+        graph = _graph_from_flat(args[9 : 9 + ng], backend)
+        labels, mask, key = args[9 + ng], args[10 + ng], args[11 + ng]
+
+        def loss_fn(pd):
+            logp = M.full_forward(
+                pd, x, graph, backend, mc, ds.classes, key, deterministic=False
+            )
+            s, cnt = M.nll_loss(logp, labels, mask)
+            return s / jnp.maximum(cnt, 1.0)
+
+        loss, grads = jax.value_and_grad(loss_fn)(p)
+        return (loss,) + tuple(grads[n] for n in names)
+
+    return train_step
+
+
+def make_eval_fwd(ds: DatasetProfile, mc: ModelConfig, backend: str):
+    names = [n for n, _ in M.param_specs(ds, mc)]
+    ng = n_graph_args(backend)
+    zero_key = jnp.zeros((2,), jnp.uint32)
+
+    def eval_fwd(*args):
+        p = _params_from_flat(args[:8], names)
+        x = args[8]
+        graph = _graph_from_flat(args[9 : 9 + ng], backend)
+        logp = M.full_forward(
+            p, x, graph, backend, mc, ds.classes, zero_key, deterministic=True
+        )
+        return (logp,)
+
+    return eval_fwd
+
+
+# ---------------------------------------------------------------------------
+# Pipeline stage entry points (micro-batch shapes)
+# ---------------------------------------------------------------------------
+
+def make_s0_fwd(mc: ModelConfig, backend: str):
+    ng = n_graph_args(backend)
+
+    def s0_fwd(*args):
+        # (w1, a1_src, a1_dst, b1, x, graph..., key)
+        p = dict(zip(("w1", "a1_src", "a1_dst", "b1"), args[:4]))
+        x = args[4]
+        graph = _graph_from_flat(args[5 : 5 + ng], backend)
+        key = args[5 + ng]
+        return (M.stage0(p, x, graph, backend, mc, key, deterministic=False),)
+
+    return s0_fwd
+
+
+def make_s1_fwd(mc: ModelConfig):
+    def s1_fwd(h, key):
+        return (M.stage1(h, mc, key, deterministic=False),)
+
+    return s1_fwd
+
+
+def make_s2_fwd(mc: ModelConfig, backend: str, classes: int):
+    ng = n_graph_args(backend)
+
+    def s2_fwd(*args):
+        p = dict(zip(("w2", "a2_src", "a2_dst", "b2"), args[:4]))
+        h = args[4]
+        graph = _graph_from_flat(args[5 : 5 + ng], backend)
+        key = args[5 + ng]
+        return (
+            M.stage2(p, h, graph, backend, mc, classes, key, deterministic=False),
+        )
+
+    return s2_fwd
+
+
+def make_s3_fwd():
+    def s3_fwd(logits):
+        return (M.stage3(logits),)
+
+    return s3_fwd
+
+
+def make_s3loss_bwd():
+    """Fused LogSoftmax+NLL backward from raw logits."""
+
+    def s3loss_bwd(logits, labels, mask):
+        def f(lg):
+            logp = M.stage3(lg)
+            s, cnt = M.nll_loss(logp, labels, mask)
+            return s, cnt
+
+        (s, cnt), vjp = jax.vjp(f, logits, has_aux=False)
+        # Cotangent: d(loss_sum)=1, d(count)=0 — grads are w.r.t. the SUM;
+        # the coordinator divides by the accumulated count once per step.
+        (dlogits,) = vjp((jnp.float32(1.0), jnp.float32(0.0)))
+        return (s, cnt, dlogits)
+
+    return s3loss_bwd
+
+
+def make_s2_bwd(mc: ModelConfig, backend: str, classes: int):
+    ng = n_graph_args(backend)
+
+    def s2_bwd(*args):
+        p_flat = args[:4]
+        h = args[4]
+        graph = _graph_from_flat(args[5 : 5 + ng], backend)
+        key = args[5 + ng]
+        g = args[6 + ng]
+
+        def f(p4, hh):
+            p = dict(zip(("w2", "a2_src", "a2_dst", "b2"), p4))
+            return M.stage2(
+                p, hh, graph, backend, mc, classes, key, deterministic=False
+            )
+
+        _, vjp = jax.vjp(f, p_flat, h)   # rematerialise inside
+        dp, dh = vjp(g)
+        return tuple(dp) + (dh,)
+
+    return s2_bwd
+
+
+def make_s1_bwd(mc: ModelConfig):
+    def s1_bwd(h, key, g):
+        _, vjp = jax.vjp(lambda hh: M.stage1(hh, mc, key, deterministic=False), h)
+        (dh,) = vjp(g)
+        return (dh,)
+
+    return s1_bwd
+
+
+def make_s0_bwd(mc: ModelConfig, backend: str):
+    """Stage-0 backward: parameters only (dx is never needed — input stage)."""
+    ng = n_graph_args(backend)
+
+    def s0_bwd(*args):
+        p_flat = args[:4]
+        x = args[4]
+        graph = _graph_from_flat(args[5 : 5 + ng], backend)
+        key = args[5 + ng]
+        g = args[6 + ng]
+
+        def f(p4):
+            p = dict(zip(("w1", "a1_src", "a1_dst", "b1"), p4))
+            return M.stage0(p, x, graph, backend, mc, key, deterministic=False)
+
+        _, vjp = jax.vjp(f, p_flat)
+        (dp,) = vjp(g)
+        return tuple(dp)
+
+    return s0_bwd
+
+
+# ---------------------------------------------------------------------------
+# Input-spec builders (shared by aot.py and tests)
+# ---------------------------------------------------------------------------
+
+def f32(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def s32(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def u32(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.uint32)
+
+
+def param_arg_specs(ds: DatasetProfile, mc: ModelConfig):
+    return [(n, f32(s)) for n, s in M.param_specs(ds, mc)]
+
+
+def graph_input_specs(backend: str, n: int, e_cap: int, k: int):
+    out = []
+    for name, shape, dt in M.graph_arg_specs(backend, n, e_cap, k):
+        out.append((name, jax.ShapeDtypeStruct(shape, dt)))
+    return out
+
+
+def train_step_specs(ds: DatasetProfile, mc: ModelConfig, backend: str):
+    specs = param_arg_specs(ds, mc)
+    specs.append(("x", f32((ds.nodes, ds.features))))
+    specs += graph_input_specs(backend, ds.nodes, ds.e_cap, ds.ell_k)
+    specs.append(("labels", s32((ds.nodes,))))
+    specs.append(("mask", f32((ds.nodes,))))
+    specs.append(("key", u32((2,))))
+    return specs
+
+
+def eval_fwd_specs(ds: DatasetProfile, mc: ModelConfig, backend: str):
+    specs = param_arg_specs(ds, mc)
+    specs.append(("x", f32((ds.nodes, ds.features))))
+    specs += graph_input_specs(backend, ds.nodes, ds.e_cap, ds.ell_k)
+    return specs
+
+
+def stage_specs(
+    ds: DatasetProfile, mc: ModelConfig, backend: str, chunks: int
+) -> Dict[str, List[Tuple[str, jax.ShapeDtypeStruct]]]:
+    """Input specs for every pipeline artifact at one chunk count."""
+    n_c = ds.chunk_nodes(chunks)
+    e_c = ds.chunk_e_cap(chunks)
+    hd = mc.heads * mc.hidden
+    c = ds.classes
+    p1 = [(n, f32(s)) for n, s in M.param_specs(ds, mc)[:4]]
+    p2 = [(n, f32(s)) for n, s in M.param_specs(ds, mc)[4:]]
+    g = graph_input_specs(backend, n_c, e_c, ds.ell_k)
+    key = [("key", u32((2,)))]
+
+    return {
+        "s0_fwd": p1 + [("x", f32((n_c, ds.features)))] + g + key,
+        "s1_fwd": [("h", f32((n_c, hd)))] + key,
+        "s2_fwd": p2 + [("h", f32((n_c, hd)))] + g + key,
+        "s3_fwd": [("logits", f32((n_c, c)))],
+        "s3loss_bwd": [
+            ("logits", f32((n_c, c))),
+            ("labels", s32((n_c,))),
+            ("mask", f32((n_c,))),
+        ],
+        "s2_bwd": p2 + [("h", f32((n_c, hd)))] + g + key
+        + [("g", f32((n_c, c)))],
+        "s1_bwd": [("h", f32((n_c, hd)))] + key + [("g", f32((n_c, hd)))],
+        "s0_bwd": p1 + [("x", f32((n_c, ds.features)))] + g + key
+        + [("g", f32((n_c, hd)))],
+    }
+
+
+def stage_fns(ds: DatasetProfile, mc: ModelConfig, backend: str):
+    return {
+        "s0_fwd": make_s0_fwd(mc, backend),
+        "s1_fwd": make_s1_fwd(mc),
+        "s2_fwd": make_s2_fwd(mc, backend, ds.classes),
+        "s3_fwd": make_s3_fwd(),
+        "s3loss_bwd": make_s3loss_bwd(),
+        "s2_bwd": make_s2_bwd(mc, backend, ds.classes),
+        "s1_bwd": make_s1_bwd(mc),
+        "s0_bwd": make_s0_bwd(mc, backend),
+    }

@@ -1,0 +1,88 @@
+"""Shared fixtures: tiny dataset profiles + graph builders in both
+representations (ELL and COO), used across the kernel/model/stage tests."""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from compile.configs import DatasetProfile, load_model
+
+
+def tiny_profile(
+    n=50, edges=80, features=16, classes=3, k=8, seed=7
+) -> DatasetProfile:
+    return DatasetProfile(
+        name="tiny", nodes=n, undirected_edges=edges, features=features,
+        classes=classes, train_per_class=5, val_size=10, test_size=10,
+        homophily=0.8, feature_density=0.2, seed=seed,
+        ell_k=k, edge_pad_multiple=16,
+    )
+
+
+def build_graph(ds: DatasetProfile, rng: np.random.Generator):
+    """Random degree-capped undirected graph in ELL + COO forms.
+
+    Mirrors the Rust generator's representation contract:
+      * ELL row i: slot 0 = self-loop, then neighbours, zero-padded.
+      * COO: self-loops first-per-node then incoming edges, padded to e_cap.
+    """
+    n, k = ds.nodes, ds.ell_k
+    adj = [[] for _ in range(n)]
+    edges = set()
+    attempts = 0
+    while len(edges) < ds.undirected_edges and attempts < 50 * ds.undirected_edges:
+        attempts += 1
+        a, b = int(rng.integers(0, n)), int(rng.integers(0, n))
+        if a == b or (a, b) in edges or (b, a) in edges:
+            continue
+        if len(adj[a]) >= k - 1 or len(adj[b]) >= k - 1:
+            continue
+        edges.add((a, b))
+        adj[a].append(b)
+        adj[b].append(a)
+
+    ell_idx = np.zeros((n, k), np.int32)
+    ell_mask = np.zeros((n, k), np.float32)
+    for i in range(n):
+        nbrs = [i] + adj[i]
+        ell_idx[i, : len(nbrs)] = nbrs
+        ell_mask[i, : len(nbrs)] = 1.0
+
+    es, ed = [], []
+    for i in range(n):
+        es.append(i)
+        ed.append(i)
+        for j in adj[i]:
+            es.append(j)
+            ed.append(i)
+    e_cap = ds.e_cap
+    em = np.zeros(e_cap, np.float32)
+    em[: len(es)] = 1.0
+    es = np.pad(np.asarray(es, np.int32), (0, e_cap - len(es)))
+    ed = np.pad(np.asarray(ed, np.int32), (0, e_cap - len(ed)))
+
+    gell = {"ell_idx": jnp.asarray(ell_idx), "ell_mask": jnp.asarray(ell_mask)}
+    gcoo = {
+        "edge_src": jnp.asarray(es),
+        "edge_dst": jnp.asarray(ed),
+        "edge_mask": jnp.asarray(em),
+    }
+    return gell, gcoo
+
+
+@pytest.fixture(scope="session")
+def model_config():
+    return load_model()
+
+
+@pytest.fixture(scope="session")
+def tiny():
+    ds = tiny_profile()
+    rng = np.random.default_rng(ds.seed)
+    gell, gcoo = build_graph(ds, rng)
+    x = jnp.asarray(rng.normal(size=(ds.nodes, ds.features)).astype(np.float32))
+    labels = jnp.asarray(rng.integers(0, ds.classes, ds.nodes).astype(np.int32))
+    return ds, x, labels, gell, gcoo

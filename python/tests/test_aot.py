@@ -1,0 +1,98 @@
+"""AOT path: lowering produces parseable HLO text, faithful manifests,
+and stable positional signatures (the Rust runtime contract)."""
+
+import json
+import os
+
+import jax.numpy as jnp
+import pytest
+
+from compile import aot, model as M, stages as S
+from compile.configs import REPO_ROOT, load_datasets, load_model, load_pipeline
+from tests.conftest import tiny_profile
+
+
+def test_lower_one_writes_hlo_and_record(tmp_path):
+    ds = tiny_profile()
+    mc = load_model()
+    fn = S.make_eval_fwd(ds, mc, "ell")
+    specs = S.eval_fwd_specs(ds, mc, "ell")
+    rec = aot.lower_one(
+        "tiny_ell_eval_fwd", fn, specs, str(tmp_path),
+        {"dataset": "tiny", "backend": "ell", "chunks": None, "kind": "eval_fwd"},
+    )
+    text = (tmp_path / "tiny_ell_eval_fwd.hlo.txt").read_text()
+    assert text.startswith("HloModule")
+    # ENTRY computation must carry one parameter per spec.
+    assert text.count("parameter(") >= len(specs)
+    assert [i["name"] for i in rec["inputs"]] == [n for n, _ in specs]
+    assert rec["outputs"][0]["shape"] == [ds.nodes, ds.classes]
+    assert rec["flops"] is None or rec["flops"] > 0
+
+
+def test_keep_unused_preserves_signature(tmp_path):
+    """s2_bwd famously loses its bias arg without keep_unused — the exact
+    drift that broke the Rust pipeline once (see aot.py comment)."""
+    ds = tiny_profile()
+    mc = load_model()
+    fns = S.stage_fns(ds, mc, "ell")
+    specs = S.stage_specs(ds, mc, "ell", 1)["s2_bwd"]
+    rec = aot.lower_one(
+        "tiny_s2_bwd", fns["s2_bwd"], specs, str(tmp_path),
+        {"dataset": "tiny", "backend": "ell", "chunks": 1, "kind": "s2_bwd"},
+    )
+    text = (tmp_path / "tiny_s2_bwd.hlo.txt").read_text()
+    n_params = len({p for p in range(50) if f"parameter({p})" in text})
+    assert n_params == len(specs), "unused args must stay in the signature"
+    assert len(rec["inputs"]) == len(specs)
+
+
+def test_real_manifest_consistency():
+    """If artifacts/ has been built, cross-check it against the configs."""
+    path = os.path.join(REPO_ROOT, "artifacts", "manifest.json")
+    if not os.path.exists(path):
+        pytest.skip("run `make artifacts` first")
+    manifest = json.load(open(path))
+    assert manifest["param_order"] == list(M.PARAM_NAMES)
+    datasets = load_datasets()
+    pc = load_pipeline()
+    names = {a["name"] for a in manifest["artifacts"]}
+    for ds in datasets:
+        for be in M.BACKENDS:
+            assert f"{ds}_{be}_train_step" in names
+            assert f"{ds}_{be}_eval_fwd" in names
+    for be in pc.pipeline_backends:
+        for k in pc.chunks:
+            for kind in ("s0_fwd", "s1_fwd", "s2_fwd", "s3_fwd",
+                         "s3loss_bwd", "s2_bwd", "s1_bwd", "s0_bwd"):
+                assert f"{pc.pipeline_dataset}_{be}_c{k}_{kind}" in names
+    # every artifact file exists and content hash matches
+    by_name = {a["name"]: a for a in manifest["artifacts"]}
+    import hashlib
+
+    for a in list(by_name.values())[:8]:
+        p = os.path.join(REPO_ROOT, "artifacts", a["file"])
+        text = open(p).read()
+        assert hashlib.sha256(text.encode()).hexdigest() == a["hlo_sha256"]
+
+
+def test_dataset_shape_arithmetic():
+    """The padding arithmetic that Rust mirrors (config::tests does the
+    same assertions on the Rust side)."""
+    for ds in load_datasets().values():
+        assert ds.e_cap % ds.edge_pad_multiple == 0
+        assert ds.e_cap >= 2 * ds.undirected_edges + ds.nodes
+        for k in (1, 2, 3, 4):
+            assert ds.chunk_nodes(k) * k >= ds.nodes
+            assert ds.chunk_e_cap(k) % ds.edge_pad_multiple == 0
+        assert ds.chunk_nodes(1) == ds.nodes
+
+
+def test_graph_arg_specs_dtypes():
+    specs = M.graph_arg_specs("ell", 10, 64, 4)
+    assert [s[0] for s in specs] == ["ell_idx", "ell_mask"]
+    assert specs[0][2] == jnp.int32
+    specs = M.graph_arg_specs("edgewise", 10, 64, 4)
+    assert [s[0] for s in specs] == ["edge_src", "edge_dst", "edge_mask"]
+    with pytest.raises(ValueError):
+        M.graph_arg_specs("cuda", 1, 1, 1)

@@ -1,0 +1,18 @@
+//! cargo-bench target for E3-E8 (paper Figures 1-4 + the extension
+//! experiments). One process so the training-run cache is shared across
+//! all figures. See table1.rs for the epochs convention.
+use gnn_pipe::bench_harness::*;
+
+fn main() {
+    let epochs: usize = std::env::var("GNN_PIPE_BENCH_EPOCHS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(10);
+    let ctx = BenchCtx::new(epochs).expect("artifacts missing — run `make artifacts`");
+    println!("{}", bench_fig1(&ctx).unwrap());
+    println!("{}", bench_fig2(&ctx).unwrap());
+    println!("{}", bench_fig3(&ctx).unwrap());
+    println!("{}", bench_fig4(&ctx).unwrap());
+    println!("{}", bench_ablation_chunker(&ctx).unwrap());
+    println!("{}", bench_edge_retention(&ctx).unwrap());
+}

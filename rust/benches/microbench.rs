@@ -1,0 +1,74 @@
+//! Coordinator micro-benchmarks (no artifacts needed): the host-side hot
+//! paths — sub-graph induce/rebuild, chunk planning, ELL/COO export,
+//! schedule simulation, JSON parse — with simple wall-clock statistics.
+//! These are the L3 §Perf numbers in EXPERIMENTS.md.
+
+use std::time::Instant;
+
+use gnn_pipe::batching::{Chunker, GraphAwareChunker, SequentialChunker};
+use gnn_pipe::config::Config;
+use gnn_pipe::data::generate;
+use gnn_pipe::simulator::{simulate_pipeline, PipelineSimInput};
+use gnn_pipe::util::json::Json;
+
+fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) {
+    // warm-up
+    f();
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    let per = t0.elapsed().as_secs_f64() / iters as f64;
+    let unit = if per >= 1.0 {
+        format!("{per:.3} s")
+    } else if per >= 1e-3 {
+        format!("{:.3} ms", per * 1e3)
+    } else {
+        format!("{:.3} us", per * 1e6)
+    };
+    println!("{name:<44} {unit:>12} /iter   ({iters} iters)");
+}
+
+fn main() {
+    let cfg = Config::load().expect("configs");
+    let ds = generate(cfg.dataset("pubmed").unwrap()).unwrap();
+    let g = &ds.graph;
+    println!("== microbench (pubmed-profile graph: {} nodes, {} edges) ==",
+             g.num_nodes(), g.num_edges());
+
+    bench("generate pubmed dataset", 3, || {
+        let _ = generate(cfg.dataset("pubmed").unwrap()).unwrap();
+    });
+
+    bench("sequential chunk plan (4)", 100, || {
+        let _ = SequentialChunker.plan(g, 4);
+    });
+    bench("graph-aware chunk plan (4)", 20, || {
+        let _ = GraphAwareChunker.plan(g, 4);
+    });
+
+    let plan = SequentialChunker.plan(g, 4);
+    bench("induce 4 sub-graphs (paper's rebuild)", 50, || {
+        let _ = plan.induce_all(g);
+    });
+
+    bench("ELL export (K=32)", 50, || {
+        let _ = g.to_ell(32).unwrap();
+    });
+    bench("COO export", 50, || {
+        let _ = g.to_coo(ds.profile.e_cap()).unwrap();
+    });
+
+    let inp = PipelineSimInput::uniform(4, 4, 0.01, 0.02, 0.001, 0.005);
+    bench("pipeline schedule simulation (4x4)", 10_000, || {
+        let _ = simulate_pipeline(&inp);
+    });
+
+    let manifest_text = std::fs::read_to_string(
+        cfg.artifacts_dir().join("manifest.json"),
+    )
+    .unwrap_or_else(|_| "{}".into());
+    bench("parse manifest.json", 50, || {
+        let _ = Json::parse(&manifest_text).unwrap();
+    });
+}

@@ -1,0 +1,15 @@
+//! cargo-bench target for E1 (paper Table 1).
+//!
+//! Defaults to GNN_PIPE_BENCH_EPOCHS (or 10) so `cargo bench` finishes in
+//! minutes; the recorded 150-epoch run is in EXPERIMENTS.md (regenerate
+//! with `gnn-pipe bench table1 --epochs 150`).
+use gnn_pipe::bench_harness::{bench_table1, BenchCtx};
+
+fn main() {
+    let epochs: usize = std::env::var("GNN_PIPE_BENCH_EPOCHS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(10);
+    let ctx = BenchCtx::new(epochs).expect("artifacts missing — run `make artifacts`");
+    println!("{}", bench_table1(&ctx).unwrap());
+}

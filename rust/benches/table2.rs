@@ -1,0 +1,11 @@
+//! cargo-bench target for E2 (paper Table 2). See table1.rs for epochs.
+use gnn_pipe::bench_harness::{bench_table2, BenchCtx};
+
+fn main() {
+    let epochs: usize = std::env::var("GNN_PIPE_BENCH_EPOCHS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(10);
+    let ctx = BenchCtx::new(epochs).expect("artifacts missing — run `make artifacts`");
+    println!("{}", bench_table2(&ctx).unwrap());
+}

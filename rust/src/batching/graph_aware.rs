@@ -1,0 +1,166 @@
+//! Graph-aware chunking: the paper's proposed future-work fix (§8).
+//!
+//! Greedy BFS partition growth (a light-weight stand-in for METIS /
+//! Cluster-GCN): grow each chunk from an unvisited seed by BFS until the
+//! chunk reaches the target size, preferring frontier nodes with the most
+//! already-in-chunk neighbours.  Chunks stay balanced to the same
+//! ceil(n/chunks) capacity the sequential chunker uses, so the two plans
+//! are drop-in interchangeable for the pipeline engine (and the same HLO
+//! shapes serve both).
+
+use std::collections::BinaryHeap;
+
+use super::{ChunkPlan, Chunker};
+use crate::graph::Graph;
+
+#[derive(Debug, Default, Clone, Copy)]
+pub struct GraphAwareChunker;
+
+impl Chunker for GraphAwareChunker {
+    fn plan(&self, g: &Graph, chunks: usize) -> ChunkPlan {
+        let n = g.num_nodes();
+        let cap = n.div_ceil(chunks);
+        let mut assigned = vec![false; n];
+        // gain[v] = number of neighbours already inside the growing chunk
+        let mut gain = vec![0u32; n];
+        let mut out: Vec<Vec<u32>> = Vec::with_capacity(chunks);
+        let mut next_seed = 0usize;
+
+        for ci in 0..chunks {
+            let remaining = n - assigned.iter().filter(|&&a| a).count();
+            if remaining == 0 {
+                break;
+            }
+            // Last chunk takes everything left (keeps the partition exact).
+            let target = if ci + 1 == chunks { remaining } else { cap.min(remaining) };
+            let mut chunk = Vec::with_capacity(target);
+            // Max-heap keyed by (gain, reverse-id for determinism).
+            let mut heap: BinaryHeap<(u32, std::cmp::Reverse<u32>)> = BinaryHeap::new();
+
+            while chunk.len() < target {
+                // Pop the best frontier node still unassigned & fresh.
+                let v = loop {
+                    match heap.pop() {
+                        Some((g_, std::cmp::Reverse(v)))
+                            if !assigned[v as usize] && gain[v as usize] == g_ =>
+                        {
+                            break Some(v)
+                        }
+                        Some(_) => continue, // stale or already taken
+                        None => break None,
+                    }
+                };
+                let v = match v {
+                    Some(v) => v,
+                    None => {
+                        // New BFS seed: first unassigned node.
+                        while next_seed < n && assigned[next_seed] {
+                            next_seed += 1;
+                        }
+                        if next_seed >= n {
+                            break;
+                        }
+                        next_seed as u32
+                    }
+                };
+                assigned[v as usize] = true;
+                chunk.push(v);
+                for &w in g.neighbors(v as usize) {
+                    if !assigned[w as usize] {
+                        gain[w as usize] += 1;
+                        heap.push((gain[w as usize], std::cmp::Reverse(w)));
+                    }
+                }
+            }
+            // Reset gains touched by this chunk for the next round.
+            for &v in &chunk {
+                for &w in g.neighbors(v as usize) {
+                    gain[w as usize] = 0;
+                }
+            }
+            out.push(chunk);
+        }
+        ChunkPlan { chunks: out }
+    }
+
+    fn name(&self) -> &'static str {
+        "graph-aware"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::batching::{retention_stats, SequentialChunker};
+    use crate::data::generate;
+    use crate::config::DatasetProfile;
+
+    fn two_cliques() -> Graph {
+        // nodes 0-4 clique, 5-9 clique, one bridge 4-5, but the node ids
+        // are INTERLEAVED so sequential chunking is maximally bad.
+        // even ids -> clique A members {0,2,4,6,8}; odd -> clique B.
+        let a = [0u32, 2, 4, 6, 8];
+        let b = [1u32, 3, 5, 7, 9];
+        let mut e = Vec::new();
+        for i in 0..5 {
+            for j in i + 1..5 {
+                e.push((a[i], a[j]));
+                e.push((b[i], b[j]));
+            }
+        }
+        e.push((8, 9));
+        Graph::from_undirected_edges(10, &e).unwrap()
+    }
+
+    #[test]
+    fn partitions_exactly() {
+        let g = two_cliques();
+        let p = GraphAwareChunker.plan(&g, 2);
+        p.check(10).unwrap();
+        assert_eq!(p.num_chunks(), 2);
+        assert_eq!(p.max_chunk_len(), 5);
+    }
+
+    #[test]
+    fn beats_sequential_on_interleaved_cliques() {
+        let g = two_cliques();
+        let seq = SequentialChunker.plan(&g, 2);
+        let aware = GraphAwareChunker.plan(&g, 2);
+        let ks: usize = seq.induce_all(&g).iter().map(|s| s.kept_edges).sum();
+        let ka: usize = aware.induce_all(&g).iter().map(|s| s.kept_edges).sum();
+        // sequential keeps almost nothing (chunks = {0..4}, {5..9} mix
+        // both cliques); graph-aware recovers both cliques fully.
+        assert!(ka > ks, "aware {ka} <= seq {ks}");
+        assert_eq!(ka, 20); // both 10-edge cliques intact, bridge cut
+    }
+
+    #[test]
+    fn beats_sequential_on_synthetic_citation_graph() {
+        let p = DatasetProfile {
+            name: "t".into(),
+            nodes: 600,
+            undirected_edges: 1500,
+            features: 32,
+            classes: 3,
+            train_per_class: 5,
+            val_size: 50,
+            test_size: 100,
+            homophily: 0.8,
+            feature_density: 0.1,
+            seed: 5,
+            ell_k: 32,
+            edge_pad_multiple: 64,
+        };
+        let ds = generate(&p).unwrap();
+        for chunks in [2, 3, 4] {
+            let s = retention_stats(&ds.graph, &SequentialChunker.plan(&ds.graph, chunks));
+            let a = retention_stats(&ds.graph, &GraphAwareChunker.plan(&ds.graph, chunks));
+            assert!(
+                a.retained_fraction > s.retained_fraction,
+                "chunks={chunks}: aware {} <= seq {}",
+                a.retained_fraction,
+                s.retained_fraction
+            );
+        }
+    }
+}

@@ -1,0 +1,69 @@
+//! Micro-batch chunkers: how GPipe splits the node tensor.
+//!
+//! * [`SequentialChunker`] — torchgpipe semantics: split the leading axis
+//!   by index into near-equal contiguous pieces.  This is exactly what
+//!   the paper did (§6: "sequentially selecting the tensor indices") and
+//!   is the mechanism behind its Figure 4 accuracy collapse, because the
+//!   node ordering carries no locality, so most edges cross chunks.
+//! * [`GraphAwareChunker`] — the paper's future-work fix (§8): grow
+//!   BFS-connected partitions so chunks keep their neighbourhoods,
+//!   maximising retained edges under the same size constraints.
+//!
+//! Both produce [`ChunkPlan`]s consumed by the pipeline engine; the
+//! edge-retention statistics bench (E8) compares them quantitatively.
+
+mod graph_aware;
+mod sequential;
+mod stats;
+
+pub use graph_aware::GraphAwareChunker;
+pub use sequential::SequentialChunker;
+pub use stats::{retention_stats, RetentionStats};
+
+use crate::graph::{induce_subgraph, Graph, InducedSubgraph};
+
+/// A partition of the node set into ordered micro-batches.
+#[derive(Debug, Clone)]
+pub struct ChunkPlan {
+    /// Node ids per chunk, in pipeline order. Every node appears exactly
+    /// once across all chunks (validated by `check`).
+    pub chunks: Vec<Vec<u32>>,
+}
+
+impl ChunkPlan {
+    /// Validate the plan is a partition of 0..n.
+    pub fn check(&self, n: usize) -> anyhow::Result<()> {
+        let mut seen = vec![false; n];
+        for c in &self.chunks {
+            for &v in c {
+                anyhow::ensure!((v as usize) < n, "node {v} out of range");
+                anyhow::ensure!(!seen[v as usize], "node {v} in two chunks");
+                seen[v as usize] = true;
+            }
+        }
+        anyhow::ensure!(seen.iter().all(|&s| s), "plan misses nodes");
+        Ok(())
+    }
+
+    pub fn num_chunks(&self) -> usize {
+        self.chunks.len()
+    }
+
+    pub fn max_chunk_len(&self) -> usize {
+        self.chunks.iter().map(Vec::len).max().unwrap_or(0)
+    }
+
+    /// Induce the sub-graph of every chunk (the paper's per-layer
+    /// "re-build" — performed once per epoch here and timed by the
+    /// pipeline driver, then charged per-layer in the DGX cost model
+    /// exactly as the paper's implementation pays it per layer).
+    pub fn induce_all(&self, g: &Graph) -> Vec<InducedSubgraph> {
+        self.chunks.iter().map(|c| induce_subgraph(g, c)).collect()
+    }
+}
+
+/// A node-chunking policy.
+pub trait Chunker {
+    fn plan(&self, g: &Graph, chunks: usize) -> ChunkPlan;
+    fn name(&self) -> &'static str;
+}

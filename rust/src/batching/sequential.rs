@@ -1,0 +1,80 @@
+//! torchgpipe's micro-batching: `tensor.chunk(chunks)` semantics.
+//!
+//! PyTorch's `chunk` splits a length-n axis into pieces of size
+//! ceil(n/chunks) with a short final piece — replicated here exactly,
+//! because the paper's accuracy results depend on the chunk boundaries.
+
+use super::{ChunkPlan, Chunker};
+use crate::graph::Graph;
+
+#[derive(Debug, Default, Clone, Copy)]
+pub struct SequentialChunker;
+
+impl Chunker for SequentialChunker {
+    fn plan(&self, g: &Graph, chunks: usize) -> ChunkPlan {
+        let n = g.num_nodes();
+        let size = n.div_ceil(chunks);
+        let mut out = Vec::with_capacity(chunks);
+        let mut start = 0usize;
+        while start < n {
+            let end = (start + size).min(n);
+            out.push((start as u32..end as u32).collect());
+            start = end;
+        }
+        ChunkPlan { chunks: out }
+    }
+
+    fn name(&self) -> &'static str {
+        "sequential"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn line(n: usize) -> Graph {
+        let e: Vec<(u32, u32)> = (0..n - 1).map(|i| (i as u32, (i + 1) as u32)).collect();
+        Graph::from_undirected_edges(n, &e).unwrap()
+    }
+
+    #[test]
+    fn torch_chunk_semantics() {
+        let g = line(10);
+        let p = SequentialChunker.plan(&g, 3);
+        // torch.chunk(10, 3) -> [4, 4, 2]
+        let lens: Vec<usize> = p.chunks.iter().map(Vec::len).collect();
+        assert_eq!(lens, vec![4, 4, 2]);
+        p.check(10).unwrap();
+        assert_eq!(p.chunks[0], vec![0, 1, 2, 3]);
+        assert_eq!(p.chunks[2], vec![8, 9]);
+    }
+
+    #[test]
+    fn exact_division() {
+        let g = line(12);
+        let p = SequentialChunker.plan(&g, 4);
+        assert_eq!(p.num_chunks(), 4);
+        assert!(p.chunks.iter().all(|c| c.len() == 3));
+        p.check(12).unwrap();
+    }
+
+    #[test]
+    fn one_chunk_is_identity() {
+        let g = line(7);
+        let p = SequentialChunker.plan(&g, 1);
+        assert_eq!(p.num_chunks(), 1);
+        assert_eq!(p.chunks[0], (0..7).collect::<Vec<u32>>());
+    }
+
+    #[test]
+    fn line_graph_cuts_exactly_chunkcount_minus_one() {
+        // A path graph split sequentially cuts exactly one edge per
+        // boundary — the minimum possible; random graphs cut far more.
+        let g = line(12);
+        let p = SequentialChunker.plan(&g, 4);
+        let subs = p.induce_all(&g);
+        let kept: usize = subs.iter().map(|s| s.kept_edges).sum();
+        assert_eq!(kept, g.num_edges() - 3);
+    }
+}

@@ -1,0 +1,95 @@
+//! Edge-retention accounting for a chunk plan (experiment E8): how much
+//! of the graph structure survives micro-batching. The paper's accuracy
+//! degradation (Fig 4) tracks this quantity directly.
+
+use super::ChunkPlan;
+use crate::graph::Graph;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct RetentionStats {
+    pub chunks: usize,
+    pub total_edges: usize,
+    pub retained_edges: usize,
+    /// retained / total (1.0 when chunking is lossless).
+    pub retained_fraction: f64,
+    /// Nodes whose entire neighbourhood was cut (left with self-loop only).
+    pub stranded_nodes: usize,
+}
+
+pub fn retention_stats(g: &Graph, plan: &ChunkPlan) -> RetentionStats {
+    let subs = plan.induce_all(g);
+    let retained: usize = subs.iter().map(|s| s.kept_edges).sum();
+    let mut stranded = 0usize;
+    for s in &subs {
+        for v in 0..s.graph.num_nodes() {
+            let orig = s.nodes[v] as usize;
+            if s.graph.degree(v) == 0 && g.degree(orig) > 0 {
+                stranded += 1;
+            }
+        }
+    }
+    RetentionStats {
+        chunks: plan.num_chunks(),
+        total_edges: g.num_edges(),
+        retained_edges: retained,
+        retained_fraction: if g.num_edges() == 0 {
+            1.0
+        } else {
+            retained as f64 / g.num_edges() as f64
+        },
+        stranded_nodes: stranded,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::batching::{Chunker, SequentialChunker};
+
+    #[test]
+    fn lossless_single_chunk() {
+        let g = Graph::from_undirected_edges(5, &[(0, 1), (2, 3), (3, 4)]).unwrap();
+        let plan = SequentialChunker.plan(&g, 1);
+        let s = retention_stats(&g, &plan);
+        assert_eq!(s.retained_fraction, 1.0);
+        assert_eq!(s.stranded_nodes, 0);
+    }
+
+    #[test]
+    fn counts_stranded_nodes() {
+        // 0-4 and 1-3: chunking into [0,1,2],[3,4] cuts both edges,
+        // stranding 0,1 (chunk A keeps 2 isolated-but-already-isolated)
+        // and 3,4.
+        let g = Graph::from_undirected_edges(5, &[(0, 4), (1, 3)]).unwrap();
+        let plan = SequentialChunker.plan(&g, 2);
+        let s = retention_stats(&g, &plan);
+        assert_eq!(s.retained_edges, 0);
+        assert_eq!(s.stranded_nodes, 4); // node 2 had degree 0 originally
+    }
+
+    #[test]
+    fn retention_decreases_with_chunks_on_random_graph() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(3);
+        let n = 200;
+        let mut edges = std::collections::HashSet::new();
+        while edges.len() < 400 {
+            let a = rng.below(n) as u32;
+            let b = rng.below(n) as u32;
+            if a != b && !edges.contains(&(b, a)) {
+                edges.insert((a, b));
+            }
+        }
+        let g = Graph::from_undirected_edges(n, &edges.into_iter().collect::<Vec<_>>())
+            .unwrap();
+        let mut last = 1.01;
+        for chunks in [1, 2, 4, 8] {
+            let s = retention_stats(&g, &SequentialChunker.plan(&g, chunks));
+            assert!(
+                s.retained_fraction < last,
+                "retention should fall with chunk count"
+            );
+            last = s.retained_fraction;
+        }
+    }
+}

@@ -1,0 +1,91 @@
+//! E7/E8 — extensions beyond the paper:
+//!   * chunker ablation — the paper's future-work proposal (§8): replace
+//!     sequential index splitting with graph-aware partition growth and
+//!     measure the accuracy recovery;
+//!   * edge-retention sweep — the structural statistic underlying Fig 4.
+
+use anyhow::Result;
+
+use crate::batching::{
+    retention_stats, Chunker, GraphAwareChunker, SequentialChunker,
+};
+use crate::metrics::Table;
+
+use super::BenchCtx;
+
+/// E7: sequential vs graph-aware chunking, accuracy side by side.
+pub fn bench_ablation_chunker(ctx: &BenchCtx) -> Result<String> {
+    let backend = "ell";
+    let mut table = Table::new(&[
+        "Chunks", "Chunker", "Edges kept", "Train Acc", "Val Acc", "Val Acc (full-eval)",
+    ]);
+    let mut csv = String::from(
+        "chunks,chunker,retained_fraction,train_acc,val_acc,val_acc_full\n",
+    );
+    for chunks in ctx.cfg.pipeline.chunks.clone() {
+        if chunks == 1 {
+            continue;
+        }
+        for aware in [false, true] {
+            let run = ctx.pipeline_run(backend, chunks, false, aware)?;
+            let name = if aware { "graph-aware" } else { "sequential" };
+            table.row(&[
+                format!("{chunks}"),
+                name.into(),
+                format!("{:.3}", run.retained_fraction),
+                format!("{:.3}", run.pipeline_eval.train_acc),
+                format!("{:.3}", run.pipeline_eval.val_acc),
+                format!("{:.3}", run.full_eval.val_acc),
+            ]);
+            csv.push_str(&format!(
+                "{chunks},{name},{:.4},{:.4},{:.4},{:.4}\n",
+                run.retained_fraction,
+                run.pipeline_eval.train_acc,
+                run.pipeline_eval.val_acc,
+                run.full_eval.val_acc,
+            ));
+        }
+    }
+    ctx.write_csv("ablation_chunker.csv", &csv)?;
+    Ok(format!(
+        "E7 — chunker ablation (paper §8 future work, implemented)\n{}\n\
+         expectation: graph-aware keeps more edges and recovers accuracy\n",
+        table.render()
+    ))
+}
+
+/// E8: edge retention + stranded nodes vs chunk count, both chunkers.
+/// Pure structural statistics (no training) — fast at any scale.
+pub fn bench_edge_retention(ctx: &BenchCtx) -> Result<String> {
+    let ds = ctx.dataset(&ctx.cfg.pipeline.pipeline_dataset)?;
+    let mut table = Table::new(&[
+        "Chunks", "Chunker", "Retained edges", "Fraction", "Stranded nodes",
+    ]);
+    let mut csv =
+        String::from("chunks,chunker,retained_edges,retained_fraction,stranded_nodes\n");
+    for chunks in [1usize, 2, 3, 4, 6, 8] {
+        for (name, plan) in [
+            ("sequential", SequentialChunker.plan(&ds.graph, chunks)),
+            ("graph-aware", GraphAwareChunker.plan(&ds.graph, chunks)),
+        ] {
+            let s = retention_stats(&ds.graph, &plan);
+            table.row(&[
+                format!("{chunks}"),
+                name.into(),
+                format!("{}", s.retained_edges),
+                format!("{:.4}", s.retained_fraction),
+                format!("{}", s.stranded_nodes),
+            ]);
+            csv.push_str(&format!(
+                "{chunks},{name},{},{:.5},{}\n",
+                s.retained_edges, s.retained_fraction, s.stranded_nodes
+            ));
+        }
+    }
+    ctx.write_csv("edge_retention.csv", &csv)?;
+    Ok(format!(
+        "E8 — edge retention under micro-batch chunking ({})\n{}",
+        ds.profile.name,
+        table.render()
+    ))
+}

@@ -1,0 +1,32 @@
+//! Bench harness: regenerates every table and figure of the paper's
+//! evaluation section (§7). See DESIGN.md's experiment index (E1-E8).
+//!
+//! Conventions:
+//!   * accuracy/loss numbers are always REAL (trained end to end through
+//!     the compiled HLO on this machine);
+//!   * `cpu` timing rows are real wall-clock;
+//!   * `T4` / `V100` / `DGX` timing rows are simulator projections
+//!     calibrated from the measured CPU run, flagged with `(sim)`;
+//!   * every command prints the paper-style table AND writes CSV series
+//!     under `results/`.
+
+mod ablation;
+mod figures;
+mod runs;
+mod table1;
+mod table2;
+
+pub use ablation::{bench_ablation_chunker, bench_edge_retention};
+pub use figures::{bench_fig1, bench_fig2, bench_fig3, bench_fig4};
+pub use runs::{BenchCtx, PipelineRun, SingleRun};
+pub use table1::bench_table1;
+pub use table2::bench_table2;
+
+/// Map internal backend names to the paper's framework labels.
+pub fn framework_label(backend: &str) -> &'static str {
+    match backend {
+        "ell" => "DGL-like(ell)",
+        "edgewise" => "PyG-like(coo)",
+        _ => "?",
+    }
+}

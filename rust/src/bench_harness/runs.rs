@@ -1,0 +1,157 @@
+//! Shared experiment primitives: cached single-device and pipeline runs
+//! so multiple tables/figures reuse one training run per configuration.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::Mutex;
+
+use anyhow::Result;
+
+use crate::batching::GraphAwareChunker;
+use crate::config::Config;
+use crate::data::{generate, Dataset};
+use crate::metrics::{Curve, RunTiming};
+use crate::pipeline::{PipelineResult, PipelineTrainer};
+use crate::runtime::Engine;
+use crate::train::{EvalMetrics, SingleDeviceTrainer};
+
+#[derive(Debug, Clone)]
+pub struct SingleRun {
+    pub timing: RunTiming,
+    pub metrics: EvalMetrics,
+    pub train_loss: Curve,
+    pub train_acc: Curve,
+    pub val_acc: Curve,
+}
+
+#[derive(Debug, Clone)]
+pub struct PipelineRun {
+    pub timing: RunTiming,
+    pub pipeline_eval: EvalMetrics,
+    pub full_eval: EvalMetrics,
+    pub train_loss: Curve,
+    pub train_acc: Curve,
+    pub val_acc: Curve,
+    pub retained_fraction: f64,
+    /// Mean host rebuild seconds per epoch per micro-batch.
+    pub host_rebuild_per_chunk_s: f64,
+    pub chunks: usize,
+}
+
+/// Bench context: config + engine + per-config run caches.
+pub struct BenchCtx {
+    pub cfg: Config,
+    pub engine: Engine,
+    pub epochs: usize,
+    pub results_dir: PathBuf,
+    datasets: Mutex<BTreeMap<String, &'static Dataset>>,
+    single_cache: Mutex<BTreeMap<String, SingleRun>>,
+    pipeline_cache: Mutex<BTreeMap<String, PipelineRun>>,
+}
+
+impl BenchCtx {
+    pub fn new(epochs: usize) -> Result<BenchCtx> {
+        let cfg = Config::load()?;
+        let engine = Engine::from_artifacts_dir(&cfg.artifacts_dir())?;
+        let results_dir = cfg.root.join("results");
+        std::fs::create_dir_all(&results_dir)?;
+        Ok(BenchCtx {
+            cfg,
+            engine,
+            epochs,
+            results_dir,
+            datasets: Mutex::new(BTreeMap::new()),
+            single_cache: Mutex::new(BTreeMap::new()),
+            pipeline_cache: Mutex::new(BTreeMap::new()),
+        })
+    }
+
+    /// Generate (once) and leak the dataset — bench runs live for the
+    /// whole process and the trainer borrows it.
+    pub fn dataset(&self, name: &str) -> Result<&'static Dataset> {
+        let mut cache = self.datasets.lock().unwrap();
+        if let Some(d) = cache.get(name) {
+            return Ok(d);
+        }
+        let profile = self.cfg.dataset(name)?;
+        let ds: &'static Dataset = Box::leak(Box::new(generate(profile)?));
+        cache.insert(name.to_string(), ds);
+        Ok(ds)
+    }
+
+    /// Real single-device (CPU) training run, cached per (dataset, backend).
+    pub fn single_run(&self, dataset: &str, backend: &str) -> Result<SingleRun> {
+        let key = format!("{dataset}/{backend}/{}", self.epochs);
+        if let Some(r) = self.single_cache.lock().unwrap().get(&key) {
+            return Ok(r.clone());
+        }
+        eprintln!("[bench] training {dataset}/{backend} on CPU for {} epochs...", self.epochs);
+        let ds = self.dataset(dataset)?;
+        let trainer = SingleDeviceTrainer::new(&self.engine, ds, backend);
+        let res = trainer.train(&self.cfg.model, self.epochs)?;
+        let run = SingleRun {
+            timing: res.timing,
+            metrics: res.final_metrics,
+            train_loss: res.train_loss,
+            train_acc: res.train_acc,
+            val_acc: res.val_acc,
+        };
+        self.single_cache.lock().unwrap().insert(key, run.clone());
+        Ok(run)
+    }
+
+    /// Real pipeline training run, cached per configuration.
+    ///
+    /// `star` = the paper's "Chunk = 1*" (full graph in model, chunks=1).
+    pub fn pipeline_run(
+        &self,
+        backend: &str,
+        chunks: usize,
+        star: bool,
+        graph_aware: bool,
+    ) -> Result<PipelineRun> {
+        let key = format!("{backend}/c{chunks}/star={star}/aware={graph_aware}/{}", self.epochs);
+        if let Some(r) = self.pipeline_cache.lock().unwrap().get(&key) {
+            return Ok(r.clone());
+        }
+        let ds_name = self.cfg.pipeline.pipeline_dataset.clone();
+        eprintln!(
+            "[bench] pipeline {ds_name}/{backend} chunks={chunks}{} for {} epochs...",
+            if star { "*" } else { "" },
+            self.epochs
+        );
+        let ds = self.dataset(&ds_name)?;
+        let mut trainer = PipelineTrainer::new(&self.engine, ds, backend, chunks);
+        if star {
+            trainer = trainer.full_graph_variant();
+        }
+        if graph_aware {
+            trainer.chunker = Box::new(GraphAwareChunker);
+        }
+        let res: PipelineResult = trainer.train(&self.cfg.model, self.epochs)?;
+        // Each pipeline config compiles 8 sizeable CPU programs; purge the
+        // executable cache so long `bench all` sessions stay inside RAM.
+        self.engine.clear_cache();
+        let rebuild_events = (self.epochs * chunks).max(1);
+        let run = PipelineRun {
+            host_rebuild_per_chunk_s: res.timing.rebuild_s / rebuild_events as f64,
+            timing: res.timing,
+            pipeline_eval: res.pipeline_eval,
+            full_eval: res.full_eval,
+            train_loss: res.train_loss,
+            train_acc: res.train_acc,
+            val_acc: res.val_acc,
+            retained_fraction: res.retention.retained_fraction,
+            chunks,
+        };
+        self.pipeline_cache.lock().unwrap().insert(key, run.clone());
+        Ok(run)
+    }
+
+    pub fn write_csv(&self, name: &str, contents: &str) -> Result<()> {
+        let path = self.results_dir.join(name);
+        std::fs::write(&path, contents)?;
+        eprintln!("[bench] wrote {}", path.display());
+        Ok(())
+    }
+}

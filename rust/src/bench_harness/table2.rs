@@ -1,0 +1,128 @@
+//! E2 — Table 2: the comprehensive PubMed benchmark across compute
+//! architectures: Epoch-1 (setup) seconds, Epochs-2..N total, average
+//! epoch, train loss, train acc, val acc.
+//!
+//! Row plan mirrors the paper:
+//!   DGL/PyG x single CPU        — measured
+//!   DGL/PyG x single GPU        — V100 projection (timing), real accuracy
+//!   DGL/PyG x DGX chunk=1*      — real accuracy (full graph in model),
+//!                                  DGX projected timing
+//!   DGL     x DGX chunk=1..4    — real accuracy through chunked training,
+//!                                  DGX projected timing incl. host rebuild
+
+use anyhow::Result;
+
+use crate::metrics::Table;
+use crate::simulator::{Scenarios, DEVICES};
+
+use super::{framework_label, BenchCtx};
+
+/// The paper's DGX epoch-1 "setup" (CUDA context + GPipe init) was ~7 s;
+/// our projected DGX rows reuse that constant so the Epoch-1 column keeps
+/// the paper's shape (setup ≫ steady-state epoch).
+const DGX_SETUP_S: f64 = 7.0;
+
+pub fn bench_table2(ctx: &BenchCtx) -> Result<String> {
+    let epochs = ctx.epochs;
+    let mut table = Table::new(&[
+        "Framework", "Compute", "Epoch 1 (s)", "Epochs 2-N (s)",
+        "Ave. Epoch (s)", "Train Loss", "Train Acc.", "Val Acc.", "Source",
+    ]);
+    let mut csv = String::from(
+        "framework,compute,epoch1_s,epochs_rest_s,avg_epoch_s,train_loss,train_acc,val_acc,source\n",
+    );
+    let push = |fw: &str,
+                    compute: &str,
+                    e1: f64,
+                    rest: f64,
+                    avg: f64,
+                    loss: f64,
+                    tacc: f64,
+                    vacc: f64,
+                    src: &str,
+                    table: &mut Table,
+                    csv: &mut String| {
+        table.row(&[
+            fw.into(),
+            compute.into(),
+            format!("{e1:.4}"),
+            format!("{rest:.3}"),
+            format!("{avg:.4}"),
+            format!("{loss:.4}"),
+            format!("{tacc:.4}"),
+            format!("{vacc:.4}"),
+            src.into(),
+        ]);
+        csv.push_str(&format!(
+            "{fw},{compute},{e1:.5},{rest:.4},{avg:.5},{loss:.4},{tacc:.4},{vacc:.4},{src}\n"
+        ));
+    };
+
+    for backend in ["ell", "edgewise"] {
+        let fw = framework_label(backend);
+        let run = ctx.single_run("pubmed", backend)?;
+        // --- single CPU: measured --------------------------------------
+        push(
+            fw, "Single CPU",
+            run.timing.epoch1_s, run.timing.epochs_rest_s, run.timing.avg_epoch_s(),
+            run.metrics.train_loss, run.metrics.train_acc, run.metrics.val_acc,
+            "measured", &mut table, &mut csv,
+        );
+        // --- single GPU: projected timing, same (real) accuracy --------
+        let scen = Scenarios::calibrate_from_cpu(
+            &ctx.engine.manifest,
+            &format!("pubmed_{backend}_train_step"),
+            run.timing.avg_epoch_s(),
+        )?;
+        let gpu = scen.single_device_epoch("pubmed", backend, &DEVICES.v100)?;
+        push(
+            fw, "Single GPU",
+            // epoch-1 on GPU = sim epoch + framework setup (paper ~0.22s)
+            gpu.epoch_s + 0.22, gpu.epoch_s * (epochs - 1) as f64, gpu.epoch_s,
+            run.metrics.train_loss, run.metrics.train_acc, run.metrics.val_acc,
+            "acc measured / time sim", &mut table, &mut csv,
+        );
+        // --- DGX chunk = 1*: full graph in model ------------------------
+        let star = ctx.pipeline_run(backend, 1, true, false)?;
+        let dgx = scen.dgx_pipeline_epoch("pubmed", backend, 1, false, 0.0)?;
+        push(
+            fw, "DGX GPipe Chunk=1*",
+            DGX_SETUP_S, dgx.epoch_s * (epochs - 1) as f64, dgx.epoch_s,
+            star.pipeline_eval.train_loss, star.pipeline_eval.train_acc,
+            star.pipeline_eval.val_acc,
+            "acc measured / time sim", &mut table, &mut csv,
+        );
+    }
+
+    // --- DGX chunks 1..4, DGL-like backend (as in the paper) -----------
+    let backend = "ell";
+    let fw = framework_label(backend);
+    let run = ctx.single_run("pubmed", backend)?;
+    let scen = Scenarios::calibrate_from_cpu(
+        &ctx.engine.manifest,
+        &format!("pubmed_{backend}_train_step"),
+        run.timing.avg_epoch_s(),
+    )?;
+    for chunks in ctx.cfg.pipeline.chunks.clone() {
+        let pr = ctx.pipeline_run(backend, chunks, false, false)?;
+        let dgx = scen.dgx_pipeline_epoch(
+            "pubmed", backend, chunks, true, pr.host_rebuild_per_chunk_s,
+        )?;
+        push(
+            fw, &format!("DGX GPipe Chunk={chunks}"),
+            DGX_SETUP_S, dgx.epoch_s * (epochs - 1) as f64, dgx.epoch_s,
+            pr.pipeline_eval.train_loss, pr.pipeline_eval.train_acc,
+            pr.pipeline_eval.val_acc,
+            "acc measured / time sim", &mut table, &mut csv,
+        );
+    }
+
+    let rendered = format!(
+        "Table 2 — PubMed across architectures ({epochs} epochs)\n{}\n\
+         paper shape check: GPU ~tens of ms/epoch vs CPU ~hundreds; chunked DGX rows \
+         slower than chunk=1 AND accuracy falling monotonically with chunks\n",
+        table.render()
+    );
+    ctx.write_csv("table2.csv", &csv)?;
+    Ok(rendered)
+}

@@ -1,0 +1,240 @@
+//! Typed configuration: the Rust view of `configs/*.json`.
+//!
+//! These files are the cross-language contract — `python/compile` lowers
+//! HLO with exactly these shapes, and everything in this crate generates
+//! data and feeds executables with the same shapes. `DatasetProfile`
+//! mirrors `python/compile/configs.py` field-for-field (including the
+//! padding arithmetic, which is duplicated deliberately and checked
+//! against the manifest at runtime).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// Locate the repo root: walk up from the executable/cwd until a
+/// directory containing `configs/datasets.json` is found.
+pub fn repo_root() -> Result<PathBuf> {
+    let mut candidates = vec![std::env::current_dir()?];
+    if let Ok(exe) = std::env::current_exe() {
+        candidates.extend(exe.ancestors().map(Path::to_path_buf));
+    }
+    if let Some(dir) = std::env::var_os("GNN_PIPE_ROOT") {
+        candidates.insert(0, PathBuf::from(dir));
+    }
+    // CARGO_MANIFEST_DIR for `cargo test` / `cargo run` invocations.
+    candidates.push(PathBuf::from(env!("CARGO_MANIFEST_DIR")));
+    for base in candidates {
+        for dir in base.ancestors() {
+            if dir.join("configs/datasets.json").exists() {
+                return Ok(dir.to_path_buf());
+            }
+        }
+    }
+    anyhow::bail!(
+        "cannot locate repo root (looked for configs/datasets.json); \
+         set GNN_PIPE_ROOT"
+    )
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct DatasetProfile {
+    pub name: String,
+    pub nodes: usize,
+    pub undirected_edges: usize,
+    pub features: usize,
+    pub classes: usize,
+    pub train_per_class: usize,
+    pub val_size: usize,
+    pub test_size: usize,
+    pub homophily: f64,
+    pub feature_density: f64,
+    pub seed: u64,
+    pub ell_k: usize,
+    pub edge_pad_multiple: usize,
+}
+
+impl DatasetProfile {
+    /// Padded directed-edge capacity (mirrors configs.py::e_cap).
+    pub fn e_cap(&self) -> usize {
+        let raw = 2 * self.undirected_edges + self.nodes;
+        raw.div_ceil(self.edge_pad_multiple) * self.edge_pad_multiple
+    }
+
+    /// Per-micro-batch node capacity (mirrors configs.py::chunk_nodes).
+    pub fn chunk_nodes(&self, chunks: usize) -> usize {
+        self.nodes.div_ceil(chunks)
+    }
+
+    /// Padded per-chunk edge capacity (mirrors configs.py::chunk_e_cap).
+    pub fn chunk_e_cap(&self, chunks: usize) -> usize {
+        let n_c = self.chunk_nodes(chunks);
+        let raw = 2 * self.undirected_edges.div_ceil(chunks) + n_c;
+        raw.div_ceil(self.edge_pad_multiple) * self.edge_pad_multiple
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelConfig {
+    pub heads: usize,
+    pub hidden: usize,
+    pub feat_dropout: f64,
+    pub attn_dropout: f64,
+    pub leaky_relu_slope: f64,
+    pub lr: f64,
+    pub beta1: f64,
+    pub beta2: f64,
+    pub eps: f64,
+    pub weight_decay: f64,
+    pub epochs: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct PipelineConfig {
+    pub devices: usize,
+    pub balance: Vec<usize>,
+    pub chunks: Vec<usize>,
+    pub pipeline_dataset: String,
+    pub pipeline_backends: Vec<String>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Config {
+    pub root: PathBuf,
+    pub datasets: BTreeMap<String, DatasetProfile>,
+    pub model: ModelConfig,
+    pub pipeline: PipelineConfig,
+}
+
+fn read_json(path: &Path) -> Result<Json> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    Json::parse(&text).with_context(|| format!("parsing {}", path.display()))
+}
+
+impl Config {
+    pub fn load() -> Result<Config> {
+        Self::load_from(&repo_root()?)
+    }
+
+    pub fn load_from(root: &Path) -> Result<Config> {
+        let ds_json = read_json(&root.join("configs/datasets.json"))?;
+        let ell_k = ds_json.u("ell_k")?;
+        let edge_pad_multiple = ds_json.u("edge_pad_multiple")?;
+        let mut datasets = BTreeMap::new();
+        for (name, d) in ds_json
+            .req("datasets")?
+            .as_obj()
+            .context("datasets must be an object")?
+        {
+            datasets.insert(
+                name.clone(),
+                DatasetProfile {
+                    name: name.clone(),
+                    nodes: d.u("nodes")?,
+                    undirected_edges: d.u("undirected_edges")?,
+                    features: d.u("features")?,
+                    classes: d.u("classes")?,
+                    train_per_class: d.u("train_per_class")?,
+                    val_size: d.u("val_size")?,
+                    test_size: d.u("test_size")?,
+                    homophily: d.f("homophily")?,
+                    feature_density: d.f("feature_density")?,
+                    seed: d.u("seed")? as u64,
+                    ell_k,
+                    edge_pad_multiple,
+                },
+            );
+        }
+
+        let m = read_json(&root.join("configs/model.json"))?;
+        let opt = m.req("optimizer")?;
+        let model = ModelConfig {
+            heads: m.u("heads")?,
+            hidden: m.u("hidden")?,
+            feat_dropout: m.f("feat_dropout")?,
+            attn_dropout: m.f("attn_dropout")?,
+            leaky_relu_slope: m.f("leaky_relu_slope")?,
+            lr: opt.f("lr")?,
+            beta1: opt.f("beta1")?,
+            beta2: opt.f("beta2")?,
+            eps: opt.f("eps")?,
+            weight_decay: opt.f("weight_decay")?,
+            epochs: m.u("epochs")?,
+        };
+
+        let p = read_json(&root.join("configs/pipeline.json"))?;
+        let arr_usize = |key: &str| -> Result<Vec<usize>> {
+            Ok(p.req(key)?
+                .as_arr()
+                .with_context(|| format!("{key} must be an array"))?
+                .iter()
+                .filter_map(Json::as_usize)
+                .collect())
+        };
+        let pipeline = PipelineConfig {
+            devices: p.u("devices")?,
+            balance: arr_usize("balance")?,
+            chunks: arr_usize("chunks")?,
+            pipeline_dataset: p.s("pipeline_dataset")?.to_string(),
+            pipeline_backends: p
+                .req("pipeline_backends")?
+                .as_arr()
+                .context("pipeline_backends must be an array")?
+                .iter()
+                .filter_map(|j| j.as_str().map(String::from))
+                .collect(),
+        };
+
+        Ok(Config { root: root.to_path_buf(), datasets, model, pipeline })
+    }
+
+    pub fn dataset(&self, name: &str) -> Result<&DatasetProfile> {
+        self.datasets
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("unknown dataset {name:?}"))
+    }
+
+    pub fn artifacts_dir(&self) -> PathBuf {
+        self.root.join("artifacts")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loads_real_configs() {
+        let c = Config::load().unwrap();
+        assert_eq!(c.datasets.len(), 3);
+        let pubmed = c.dataset("pubmed").unwrap();
+        assert_eq!(pubmed.nodes, 19717);
+        assert_eq!(pubmed.classes, 3);
+        assert_eq!(c.model.heads, 8);
+        assert_eq!(c.pipeline.devices, 4);
+        assert_eq!(c.pipeline.balance, vec![2, 1, 2, 1]);
+    }
+
+    #[test]
+    fn padding_arithmetic_matches_python() {
+        // Mirrors DatasetProfile.e_cap / chunk_* in compile/configs.py;
+        // values checked against the generated manifest in the runtime
+        // integration tests too.
+        let c = Config::load().unwrap();
+        let pm = c.dataset("pubmed").unwrap();
+        let raw = 2 * pm.undirected_edges + pm.nodes;
+        assert!(pm.e_cap() >= raw && pm.e_cap() % pm.edge_pad_multiple == 0);
+        assert_eq!(pm.chunk_nodes(1), pm.nodes);
+        assert_eq!(pm.chunk_nodes(4), pm.nodes.div_ceil(4));
+        assert!(pm.chunk_e_cap(2) % pm.edge_pad_multiple == 0);
+    }
+
+    #[test]
+    fn unknown_dataset_errors() {
+        let c = Config::load().unwrap();
+        assert!(c.dataset("reddit").is_err());
+    }
+}

@@ -1,0 +1,68 @@
+//! Synthetic citation datasets: the substitution for Cora/CiteSeer/PubMed.
+//!
+//! No network access exists in this environment, so the three citation
+//! benchmarks are synthesised to their published statistics (node/edge/
+//! feature/class counts from `configs/datasets.json`) by a
+//! degree-capped, homophilous stochastic block model with
+//! class-correlated sparse bag-of-words features (see `generator`).
+//! DESIGN.md §Substitutions explains why this preserves the paper's
+//! phenomena; `gnn-pipe data --dataset X` prints the realised statistics
+//! next to the published targets.
+
+mod generator;
+mod sign;
+mod splits;
+
+pub use generator::{generate, GenerationReport};
+pub use sign::sign_features;
+pub use splits::Splits;
+
+use crate::config::DatasetProfile;
+use crate::graph::Graph;
+
+/// A fully materialised dataset: host graph + features + labels + splits.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub profile: DatasetProfile,
+    pub graph: Graph,
+    /// Row-major (nodes x features), L1-row-normalised bag-of-words.
+    pub features: Vec<f32>,
+    pub labels: Vec<i32>,
+    pub splits: Splits,
+    pub report: GenerationReport,
+}
+
+impl Dataset {
+    pub fn feature_row(&self, v: usize) -> &[f32] {
+        let d = self.profile.features;
+        &self.features[v * d..(v + 1) * d]
+    }
+
+    /// Gather feature rows for a node chunk, zero-padded to `n_pad` rows.
+    pub fn gather_features(&self, nodes: &[u32], n_pad: usize) -> Vec<f32> {
+        let d = self.profile.features;
+        let mut out = vec![0f32; n_pad * d];
+        for (i, &v) in nodes.iter().enumerate() {
+            out[i * d..(i + 1) * d].copy_from_slice(self.feature_row(v as usize));
+        }
+        out
+    }
+
+    /// Gather labels for a node chunk, zero-padded (mask handles padding).
+    pub fn gather_labels(&self, nodes: &[u32], n_pad: usize) -> Vec<i32> {
+        let mut out = vec![0i32; n_pad];
+        for (i, &v) in nodes.iter().enumerate() {
+            out[i] = self.labels[v as usize];
+        }
+        out
+    }
+
+    /// Gather a 0/1 mask (train/val/test) for a node chunk, zero-padded.
+    pub fn gather_mask(&self, mask: &[f32], nodes: &[u32], n_pad: usize) -> Vec<f32> {
+        let mut out = vec![0f32; n_pad];
+        for (i, &v) in nodes.iter().enumerate() {
+            out[i] = mask[v as usize];
+        }
+        out
+    }
+}

@@ -1,0 +1,83 @@
+//! SIGN precomputation (E9): r-hop mean-aggregated feature tables.
+//!
+//! Host-side CSR SpMM: x_r = D^-1 (A + I) x_{r-1}, r = 1..hops, then the
+//! concatenation [x_0 | x_1 | ... | x_hops] — the "graph convolutional
+//! filters of different sizes precompute intermediate node
+//! representations" of Frasca et al. that the paper's §8 names as the
+//! most promising batching-safe direction. Computed ONCE per dataset;
+//! afterwards training is pure minibatch-able MLP work.
+
+use crate::graph::Graph;
+
+/// Mean-aggregate one hop: out[i] = mean over ({i} ∪ N(i)) of x[j].
+fn hop(g: &Graph, x: &[f32], d: usize) -> Vec<f32> {
+    let n = g.num_nodes();
+    let mut out = vec![0f32; n * d];
+    for i in 0..n {
+        let row = &mut out[i * d..(i + 1) * d];
+        row.copy_from_slice(&x[i * d..(i + 1) * d]); // self
+        for &j in g.neighbors(i) {
+            let src = &x[j as usize * d..(j as usize + 1) * d];
+            for (o, s) in row.iter_mut().zip(src) {
+                *o += s;
+            }
+        }
+        let scale = 1.0 / (1 + g.degree(i)) as f32;
+        for o in row.iter_mut() {
+            *o *= scale;
+        }
+    }
+    out
+}
+
+/// Concatenated multi-hop table: (n, (hops+1) * d), row-major.
+pub fn sign_features(g: &Graph, x: &[f32], d: usize, hops: usize) -> Vec<f32> {
+    let n = g.num_nodes();
+    debug_assert_eq!(x.len(), n * d);
+    let mut tables: Vec<Vec<f32>> = vec![x.to_vec()];
+    for _ in 0..hops {
+        let next = hop(g, tables.last().unwrap(), d);
+        tables.push(next);
+    }
+    let d_out = (hops + 1) * d;
+    let mut out = vec![0f32; n * d_out];
+    for i in 0..n {
+        for (r, t) in tables.iter().enumerate() {
+            out[i * d_out + r * d..i * d_out + (r + 1) * d]
+                .copy_from_slice(&t[i * d..(i + 1) * d]);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hop_is_neighbourhood_mean() {
+        // path 0-1-2, scalar features [0, 3, 6]
+        let g = Graph::from_undirected_edges(3, &[(0, 1), (1, 2)]).unwrap();
+        let x = vec![0.0, 3.0, 6.0];
+        let h = hop(&g, &x, 1);
+        assert_eq!(h, vec![1.5, 3.0, 4.5]);
+    }
+
+    #[test]
+    fn sign_concat_layout() {
+        let g = Graph::from_undirected_edges(2, &[(0, 1)]).unwrap();
+        let x = vec![1.0, 0.0, 0.0, 1.0]; // 2 nodes x 2 feats
+        let s = sign_features(&g, &x, 2, 1);
+        // row 0 = [x0 | hop0] = [1,0 | 0.5,0.5]
+        assert_eq!(&s[0..4], &[1.0, 0.0, 0.5, 0.5]);
+        assert_eq!(s.len(), 2 * 4);
+    }
+
+    #[test]
+    fn isolated_node_keeps_own_features() {
+        let g = Graph::from_undirected_edges(2, &[]).unwrap();
+        let x = vec![2.0, 5.0];
+        let s = sign_features(&g, &x, 1, 2);
+        assert_eq!(s, vec![2.0, 2.0, 2.0, 5.0, 5.0, 5.0]);
+    }
+}

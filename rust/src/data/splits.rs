@@ -1,0 +1,115 @@
+//! Planetoid-style semi-supervised splits: `train_per_class` labelled
+//! nodes per class, then `val_size` and `test_size` nodes drawn from the
+//! remainder — the protocol of Kipf & Welling / Velickovic et al. that
+//! the paper's accuracy numbers use.
+
+use anyhow::Result;
+
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct Splits {
+    pub train: Vec<u32>,
+    pub val: Vec<u32>,
+    pub test: Vec<u32>,
+}
+
+impl Splits {
+    pub fn planetoid(
+        labels: &[i32],
+        classes: usize,
+        train_per_class: usize,
+        val_size: usize,
+        test_size: usize,
+        mut rng: Rng,
+    ) -> Result<Splits> {
+        let n = labels.len();
+        anyhow::ensure!(
+            classes * train_per_class + val_size + test_size <= n,
+            "splits larger than dataset"
+        );
+        let mut order: Vec<u32> = (0..n as u32).collect();
+        rng.shuffle(&mut order);
+
+        let mut train = Vec::with_capacity(classes * train_per_class);
+        let mut taken = vec![false; n];
+        let mut per_class = vec![0usize; classes];
+        for &v in &order {
+            let l = labels[v as usize] as usize;
+            if per_class[l] < train_per_class {
+                per_class[l] += 1;
+                taken[v as usize] = true;
+                train.push(v);
+            }
+        }
+        anyhow::ensure!(
+            train.len() == classes * train_per_class,
+            "class too small for train_per_class"
+        );
+
+        let mut rest: Vec<u32> = order
+            .iter()
+            .copied()
+            .filter(|&v| !taken[v as usize])
+            .collect();
+        let val: Vec<u32> = rest.drain(..val_size).collect();
+        let test: Vec<u32> = rest.drain(..test_size).collect();
+        Ok(Splits { train, val, test })
+    }
+
+    /// Dense 0/1 mask over all nodes for one split.
+    pub fn mask(nodes: &[u32], n: usize) -> Vec<f32> {
+        let mut m = vec![0f32; n];
+        for &v in nodes {
+            m[v as usize] = 1.0;
+        }
+        m
+    }
+
+    pub fn train_mask(&self, n: usize) -> Vec<f32> {
+        Self::mask(&self.train, n)
+    }
+
+    pub fn val_mask(&self, n: usize) -> Vec<f32> {
+        Self::mask(&self.val, n)
+    }
+
+    pub fn test_mask(&self, n: usize) -> Vec<f32> {
+        Self::mask(&self.test, n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn per_class_counts() {
+        let labels: Vec<i32> = (0..100).map(|i| (i % 4) as i32).collect();
+        let s = Splits::planetoid(&labels, 4, 3, 20, 40, Rng::new(1)).unwrap();
+        let mut counts = [0usize; 4];
+        for &v in &s.train {
+            counts[labels[v as usize] as usize] += 1;
+        }
+        assert_eq!(counts, [3, 3, 3, 3]);
+        assert_eq!(s.val.len(), 20);
+        assert_eq!(s.test.len(), 40);
+    }
+
+    #[test]
+    fn mask_roundtrip() {
+        let labels: Vec<i32> = (0..50).map(|i| (i % 2) as i32).collect();
+        let s = Splits::planetoid(&labels, 2, 2, 5, 10, Rng::new(3)).unwrap();
+        let m = s.train_mask(50);
+        assert_eq!(m.iter().filter(|&&x| x > 0.0).count(), 4);
+        for &v in &s.train {
+            assert_eq!(m[v as usize], 1.0);
+        }
+    }
+
+    #[test]
+    fn oversized_errors() {
+        let labels = vec![0i32; 10];
+        assert!(Splits::planetoid(&labels, 1, 5, 5, 5, Rng::new(0)).is_err());
+    }
+}

@@ -1,0 +1,69 @@
+//! Padded COO device representation: directed (src -> dst) edge lists
+//! with self-loops, zero-padded to a fixed capacity. Consumed by the
+//! `edgewise` (PyG-style gather/scatter) backend.
+
+use anyhow::Result;
+
+use super::Graph;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct CooGraph {
+    pub n: usize,
+    pub e_cap: usize,
+    pub src: Vec<i32>,
+    pub dst: Vec<i32>,
+    pub mask: Vec<f32>,
+    /// Number of real (unpadded) entries, self-loops included.
+    pub real: usize,
+}
+
+impl CooGraph {
+    pub fn from_graph(g: &Graph, e_cap: usize) -> Result<CooGraph> {
+        let n = g.num_nodes();
+        let real = n + 2 * g.num_edges();
+        anyhow::ensure!(
+            real <= e_cap,
+            "graph has {real} directed entries (incl self-loops) > capacity {e_cap}"
+        );
+        let mut src = Vec::with_capacity(e_cap);
+        let mut dst = Vec::with_capacity(e_cap);
+        for v in 0..n {
+            // self-loop first, then incoming edges (j -> v)
+            src.push(v as i32);
+            dst.push(v as i32);
+            for &j in g.neighbors(v) {
+                src.push(j as i32);
+                dst.push(v as i32);
+            }
+        }
+        let mut mask = vec![1.0f32; real];
+        src.resize(e_cap, 0);
+        dst.resize(e_cap, 0);
+        mask.resize(e_cap, 0.0);
+        Ok(CooGraph { n, e_cap, src, dst, mask, real })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn self_loops_and_padding() {
+        let g = Graph::from_undirected_edges(3, &[(0, 1)]).unwrap();
+        let c = g.to_coo(8).unwrap();
+        assert_eq!(c.real, 3 + 2);
+        // node0: self + incoming from 1; node1: self + incoming from 0; node2: self
+        assert_eq!(&c.src[..5], &[0, 1, 1, 0, 2]);
+        assert_eq!(&c.dst[..5], &[0, 0, 1, 1, 2]);
+        assert_eq!(c.mask.iter().filter(|&&m| m > 0.).count(), 5);
+        assert_eq!(c.src.len(), 8);
+    }
+
+    #[test]
+    fn rejects_overflow() {
+        let g = Graph::from_undirected_edges(3, &[(0, 1), (1, 2), (0, 2)]).unwrap();
+        assert!(g.to_coo(8).is_err()); // needs 3 + 6 = 9
+        assert!(g.to_coo(9).is_ok());
+    }
+}

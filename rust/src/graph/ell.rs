@@ -1,0 +1,80 @@
+//! Padded ELL device representation: fixed-width neighbour lists.
+//!
+//! Row i: slot 0 is the self-loop, then neighbours, zero-padded to K.
+//! This is the rectangular, maskable layout the Pallas kernel consumes
+//! (DESIGN.md §Hardware adaptation). Degree must be < K — the synthetic
+//! generator guarantees it (degree cap), and `from_graph` enforces it.
+
+use anyhow::Result;
+
+use super::Graph;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct EllGraph {
+    pub n: usize,
+    pub k: usize,
+    /// (n * k) neighbour ids, row-major; slot 0 of each row = self id.
+    pub idx: Vec<i32>,
+    /// (n * k) slot validity in {0.0, 1.0}.
+    pub mask: Vec<f32>,
+}
+
+impl EllGraph {
+    pub fn from_graph(g: &Graph, k: usize) -> Result<EllGraph> {
+        let n = g.num_nodes();
+        anyhow::ensure!(k >= 1, "ELL width must be >= 1");
+        let mut idx = vec![0i32; n * k];
+        let mut mask = vec![0f32; n * k];
+        for v in 0..n {
+            let nbrs = g.neighbors(v);
+            anyhow::ensure!(
+                nbrs.len() < k,
+                "node {v} degree {} >= ELL width {k} (generator must cap degree)",
+                nbrs.len()
+            );
+            let row = v * k;
+            idx[row] = v as i32;
+            mask[row] = 1.0;
+            for (s, &j) in nbrs.iter().enumerate() {
+                idx[row + 1 + s] = j as i32;
+                mask[row + 1 + s] = 1.0;
+            }
+        }
+        Ok(EllGraph { n, k, idx, mask })
+    }
+
+    /// Count of valid non-self slots (directed edge endpoints present).
+    pub fn directed_edges(&self) -> usize {
+        self.mask.iter().filter(|&&m| m > 0.0).count() - self.n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layout_and_masks() {
+        let g = Graph::from_undirected_edges(3, &[(0, 1), (1, 2)]).unwrap();
+        let e = g.to_ell(4).unwrap();
+        // node 0: [0, 1, pad, pad]
+        assert_eq!(&e.idx[0..4], &[0, 1, 0, 0]);
+        assert_eq!(&e.mask[0..4], &[1.0, 1.0, 0.0, 0.0]);
+        // node 1: [1, 0, 2, pad]
+        assert_eq!(&e.idx[4..8], &[1, 0, 2, 0]);
+        assert_eq!(&e.mask[4..8], &[1.0, 1.0, 1.0, 0.0]);
+        assert_eq!(e.directed_edges(), 4);
+    }
+
+    #[test]
+    fn rejects_over_capacity() {
+        // star: center degree 4, needs k >= 5
+        let g = Graph::from_undirected_edges(
+            5,
+            &[(0, 1), (0, 2), (0, 3), (0, 4)],
+        )
+        .unwrap();
+        assert!(g.to_ell(4).is_err());
+        assert!(g.to_ell(5).is_ok());
+    }
+}

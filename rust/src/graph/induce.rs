@@ -1,0 +1,108 @@
+//! Sub-graph induction: the paper's micro-batching hot spot.
+//!
+//! torchgpipe splits the node tensor sequentially; every GAT layer must
+//! then re-build a graph over just those nodes (paper §6/7.2). Only edges
+//! with BOTH endpoints inside the chunk survive — the information loss
+//! behind the paper's Figure 4 accuracy collapse. `InducedSubgraph`
+//! reports exactly how many edges were lost so the batching stats bench
+//! (E8) can quantify it.
+
+use super::Graph;
+
+#[derive(Debug, Clone)]
+pub struct InducedSubgraph {
+    /// Re-indexed sub-graph over the chunk's nodes (0..chunk_len).
+    pub graph: Graph,
+    /// Original node id of each sub-graph node (the chunk, in order).
+    pub nodes: Vec<u32>,
+    /// Undirected edges retained (both endpoints in the chunk).
+    pub kept_edges: usize,
+    /// Undirected edges with exactly one endpoint in the chunk — LOST.
+    pub cut_edges: usize,
+}
+
+/// Induce the sub-graph over `nodes` (original ids, unique).
+///
+/// O(|chunk| + sum of chunk degrees): one pass building an old->new map,
+/// one pass over chunk adjacency rows.
+pub fn induce_subgraph(g: &Graph, nodes: &[u32]) -> InducedSubgraph {
+    let mut remap = vec![u32::MAX; g.num_nodes()];
+    for (new, &old) in nodes.iter().enumerate() {
+        debug_assert!(remap[old as usize] == u32::MAX, "duplicate node in chunk");
+        remap[old as usize] = new as u32;
+    }
+    let mut edges = Vec::new();
+    let mut cut = 0usize;
+    for (new_a, &old_a) in nodes.iter().enumerate() {
+        for &old_b in g.neighbors(old_a as usize) {
+            let new_b = remap[old_b as usize];
+            if new_b == u32::MAX {
+                cut += 1; // counted once per direction from inside
+            } else if (new_a as u32) < new_b {
+                edges.push((new_a as u32, new_b));
+            }
+        }
+    }
+    let graph = Graph::from_undirected_edges(nodes.len(), &edges)
+        .expect("induced edges are valid by construction");
+    InducedSubgraph {
+        nodes: nodes.to_vec(),
+        kept_edges: edges.len(),
+        // Each cut undirected edge was seen once (from its inside endpoint)
+        // unless both endpoints are inside (then it isn't cut at all).
+        cut_edges: cut,
+        graph,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cycle(n: usize) -> Graph {
+        let edges: Vec<(u32, u32)> = (0..n)
+            .map(|i| (i as u32, ((i + 1) % n) as u32))
+            .collect();
+        Graph::from_undirected_edges(n, &edges).unwrap()
+    }
+
+    #[test]
+    fn full_set_is_identity() {
+        let g = cycle(6);
+        let all: Vec<u32> = (0..6).collect();
+        let s = induce_subgraph(&g, &all);
+        assert_eq!(s.kept_edges, 6);
+        assert_eq!(s.cut_edges, 0);
+        assert_eq!(s.graph.num_edges(), g.num_edges());
+    }
+
+    #[test]
+    fn sequential_half_of_cycle_cuts_two() {
+        let g = cycle(6);
+        let s = induce_subgraph(&g, &[0, 1, 2]);
+        // kept: 0-1, 1-2; cut: 2-3 and 5-0
+        assert_eq!(s.kept_edges, 2);
+        assert_eq!(s.cut_edges, 2);
+        assert_eq!(s.graph.num_nodes(), 3);
+        assert!(s.graph.has_edge(0, 1) && s.graph.has_edge(1, 2));
+    }
+
+    #[test]
+    fn reindexing_is_chunk_order() {
+        let g = cycle(6);
+        let s = induce_subgraph(&g, &[4, 5, 0]);
+        // original edges 4-5 and 5-0 survive as 0-1, 1-2
+        assert_eq!(s.nodes, vec![4, 5, 0]);
+        assert!(s.graph.has_edge(0, 1));
+        assert!(s.graph.has_edge(1, 2));
+        assert!(!s.graph.has_edge(0, 2));
+    }
+
+    #[test]
+    fn isolated_chunk() {
+        let g = cycle(6);
+        let s = induce_subgraph(&g, &[0, 3]);
+        assert_eq!(s.kept_edges, 0);
+        assert_eq!(s.cut_edges, 4);
+    }
+}

@@ -1,0 +1,158 @@
+//! Graph store: the substrate the paper gets from DGL/PyG.
+//!
+//! An undirected simple graph in CSR form, with exporters to the two
+//! padded device representations the compiled HLO expects (ELL for the
+//! Pallas backend, COO for the edgewise backend) and the sub-graph
+//! induce operation at the heart of the paper's micro-batching overhead
+//! and accuracy findings.
+
+mod coo;
+mod ell;
+mod induce;
+mod stats;
+
+pub use coo::CooGraph;
+pub use ell::EllGraph;
+pub use induce::{induce_subgraph, InducedSubgraph};
+pub use stats::GraphStats;
+
+use anyhow::Result;
+
+/// Undirected simple graph, CSR adjacency (both directions stored).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Graph {
+    n: usize,
+    indptr: Vec<usize>, // len n+1
+    indices: Vec<u32>,  // neighbour ids, sorted within each row
+}
+
+impl Graph {
+    /// Build from undirected edge pairs. Self-loops and duplicate edges
+    /// are rejected — the device representations add self-loops
+    /// themselves, and duplicates would double-count messages.
+    pub fn from_undirected_edges(n: usize, edges: &[(u32, u32)]) -> Result<Graph> {
+        let mut deg = vec![0usize; n];
+        for &(a, b) in edges {
+            anyhow::ensure!(a != b, "self-loop {a}");
+            anyhow::ensure!((a as usize) < n && (b as usize) < n, "edge ({a},{b}) out of range");
+            deg[a as usize] += 1;
+            deg[b as usize] += 1;
+        }
+        let mut indptr = vec![0usize; n + 1];
+        for i in 0..n {
+            indptr[i + 1] = indptr[i] + deg[i];
+        }
+        let mut indices = vec![0u32; indptr[n]];
+        let mut cursor = indptr[..n].to_vec();
+        for &(a, b) in edges {
+            indices[cursor[a as usize]] = b;
+            cursor[a as usize] += 1;
+            indices[cursor[b as usize]] = a;
+            cursor[b as usize] += 1;
+        }
+        for i in 0..n {
+            let row = &mut indices[indptr[i]..indptr[i + 1]];
+            row.sort_unstable();
+            for w in row.windows(2) {
+                anyhow::ensure!(w[0] != w[1], "duplicate edge ({i},{})", w[0]);
+            }
+        }
+        Ok(Graph { n, indptr, indices })
+    }
+
+    pub fn num_nodes(&self) -> usize {
+        self.n
+    }
+
+    /// Number of undirected edges.
+    pub fn num_edges(&self) -> usize {
+        self.indices.len() / 2
+    }
+
+    pub fn degree(&self, v: usize) -> usize {
+        self.indptr[v + 1] - self.indptr[v]
+    }
+
+    pub fn neighbors(&self, v: usize) -> &[u32] {
+        &self.indices[self.indptr[v]..self.indptr[v + 1]]
+    }
+
+    pub fn max_degree(&self) -> usize {
+        (0..self.n).map(|v| self.degree(v)).max().unwrap_or(0)
+    }
+
+    pub fn has_edge(&self, a: usize, b: usize) -> bool {
+        self.neighbors(a).binary_search(&(b as u32)).is_ok()
+    }
+
+    /// Iterate undirected edges (a < b), in row order.
+    pub fn edges(&self) -> impl Iterator<Item = (u32, u32)> + '_ {
+        (0..self.n).flat_map(move |a| {
+            self.neighbors(a)
+                .iter()
+                .filter(move |&&b| (a as u32) < b)
+                .map(move |&b| (a as u32, b))
+        })
+    }
+
+    /// Export to the padded ELL device representation (slot 0 = self-loop).
+    pub fn to_ell(&self, k: usize) -> Result<EllGraph> {
+        EllGraph::from_graph(self, k)
+    }
+
+    /// Export to the padded COO device representation (self-loops included).
+    pub fn to_coo(&self, e_cap: usize) -> Result<CooGraph> {
+        CooGraph::from_graph(self, e_cap)
+    }
+
+    pub fn stats(&self) -> GraphStats {
+        GraphStats::compute(self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn path_graph(n: usize) -> Graph {
+        let edges: Vec<(u32, u32)> =
+            (0..n - 1).map(|i| (i as u32, i as u32 + 1)).collect();
+        Graph::from_undirected_edges(n, &edges).unwrap()
+    }
+
+    #[test]
+    fn csr_basics() {
+        let g = path_graph(5);
+        assert_eq!(g.num_nodes(), 5);
+        assert_eq!(g.num_edges(), 4);
+        assert_eq!(g.degree(0), 1);
+        assert_eq!(g.degree(2), 2);
+        assert_eq!(g.neighbors(2), &[1, 3]);
+        assert!(g.has_edge(1, 2));
+        assert!(!g.has_edge(0, 4));
+        assert_eq!(g.max_degree(), 2);
+    }
+
+    #[test]
+    fn edges_iterator_roundtrip() {
+        let edges = vec![(0, 3), (1, 2), (2, 3)];
+        let g = Graph::from_undirected_edges(4, &edges).unwrap();
+        let mut got: Vec<_> = g.edges().collect();
+        got.sort_unstable();
+        assert_eq!(got, vec![(0, 3), (1, 2), (2, 3)]);
+    }
+
+    #[test]
+    fn rejects_self_loops_and_duplicates() {
+        assert!(Graph::from_undirected_edges(3, &[(1, 1)]).is_err());
+        assert!(Graph::from_undirected_edges(3, &[(0, 1), (1, 0)]).is_err());
+        assert!(Graph::from_undirected_edges(2, &[(0, 5)]).is_err());
+    }
+
+    #[test]
+    fn empty_graph() {
+        let g = Graph::from_undirected_edges(4, &[]).unwrap();
+        assert_eq!(g.num_edges(), 0);
+        assert_eq!(g.max_degree(), 0);
+    }
+}

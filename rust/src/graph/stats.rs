@@ -1,0 +1,118 @@
+//! Graph statistics: degree distribution, components, homophily — used
+//! by `gnn-pipe data` to validate the synthetic datasets against the
+//! published profiles and by EXPERIMENTS.md's dataset table.
+
+use super::Graph;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct GraphStats {
+    pub nodes: usize,
+    pub edges: usize,
+    pub min_degree: usize,
+    pub max_degree: usize,
+    pub mean_degree: f64,
+    pub isolated: usize,
+    pub components: usize,
+    pub largest_component: usize,
+}
+
+impl GraphStats {
+    pub fn compute(g: &Graph) -> GraphStats {
+        let n = g.num_nodes();
+        let mut min_d = usize::MAX;
+        let mut max_d = 0;
+        let mut isolated = 0;
+        for v in 0..n {
+            let d = g.degree(v);
+            min_d = min_d.min(d);
+            max_d = max_d.max(d);
+            if d == 0 {
+                isolated += 1;
+            }
+        }
+        if n == 0 {
+            min_d = 0;
+        }
+
+        // Connected components by BFS.
+        let mut comp = vec![u32::MAX; n];
+        let mut components = 0usize;
+        let mut largest = 0usize;
+        let mut queue = std::collections::VecDeque::new();
+        for start in 0..n {
+            if comp[start] != u32::MAX {
+                continue;
+            }
+            let id = components as u32;
+            components += 1;
+            let mut size = 0usize;
+            comp[start] = id;
+            queue.push_back(start as u32);
+            while let Some(v) = queue.pop_front() {
+                size += 1;
+                for &w in g.neighbors(v as usize) {
+                    if comp[w as usize] == u32::MAX {
+                        comp[w as usize] = id;
+                        queue.push_back(w);
+                    }
+                }
+            }
+            largest = largest.max(size);
+        }
+
+        GraphStats {
+            nodes: n,
+            edges: g.num_edges(),
+            min_degree: min_d,
+            max_degree: max_d,
+            mean_degree: if n == 0 { 0.0 } else { 2.0 * g.num_edges() as f64 / n as f64 },
+            isolated,
+            components,
+            largest_component: largest,
+        }
+    }
+
+    /// Edge homophily: fraction of edges joining same-label endpoints.
+    pub fn homophily(g: &Graph, labels: &[i32]) -> f64 {
+        let mut same = 0usize;
+        let mut total = 0usize;
+        for (a, b) in g.edges() {
+            total += 1;
+            if labels[a as usize] == labels[b as usize] {
+                same += 1;
+            }
+        }
+        if total == 0 {
+            0.0
+        } else {
+            same as f64 / total as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_of_two_triangles() {
+        let g = Graph::from_undirected_edges(
+            6,
+            &[(0, 1), (1, 2), (0, 2), (3, 4), (4, 5), (3, 5)],
+        )
+        .unwrap();
+        let s = g.stats();
+        assert_eq!(s.components, 2);
+        assert_eq!(s.largest_component, 3);
+        assert_eq!(s.mean_degree, 2.0);
+        assert_eq!(s.isolated, 0);
+    }
+
+    #[test]
+    fn homophily_counts() {
+        let g = Graph::from_undirected_edges(4, &[(0, 1), (2, 3), (1, 2)]).unwrap();
+        let labels = vec![0, 0, 1, 1];
+        let h = GraphStats::homophily(&g, &labels);
+        assert!((h - 2.0 / 3.0).abs() < 1e-12);
+    }
+}

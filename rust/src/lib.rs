@@ -1,0 +1,35 @@
+//! # gnn-pipe
+//!
+//! Pipe-parallel Graph Attention Network training — a ground-up
+//! reproduction of *"Analyzing the Performance of Graph Neural Networks
+//! with Pipe Parallelism"* (Dearing & Wang, 2020) as a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! * **L1/L2 (build time)** — `python/compile` authors the GAT model and
+//!   its Pallas kernels and AOT-lowers them to HLO-text artifacts.
+//! * **L3 (this crate)** — the GPipe coordinator: synthetic citation
+//!   datasets, micro-batch chunkers, the fill-drain pipeline engine with
+//!   rematerialised backward, Adam, the training loops, the device/DGX
+//!   performance simulator, and the bench harness that regenerates every
+//!   table and figure of the paper.
+//!
+//! Python never runs on the training path: after `make artifacts` the
+//! binary is self-contained, executing the HLO via the PJRT CPU client.
+//!
+//! See DESIGN.md for the system inventory and experiment index.
+
+pub mod batching;
+pub mod bench_harness;
+pub mod config;
+pub mod data;
+pub mod graph;
+pub mod metrics;
+pub mod optim;
+pub mod pipeline;
+pub mod runtime;
+pub mod simulator;
+pub mod testutil;
+pub mod train;
+pub mod util;
+
+pub use config::Config;

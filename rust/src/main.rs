@@ -1,0 +1,247 @@
+//! gnn-pipe — the launcher.
+//!
+//! Subcommands:
+//!   data      [--dataset cora|citeseer|pubmed]       synth stats vs profile
+//!   train     --dataset D --backend B [--epochs N]   single-device training
+//!   pipeline  --backend B --chunks K [--epochs N]
+//!             [--star] [--graph-aware]               GPipe pipeline training
+//!   bench     table1|table2|fig1|fig2|fig3|fig4|
+//!             ablation-chunker|edge-retention|all [--epochs N]
+//!   inspect                                          artifact manifest summary
+//!
+//! Run `make artifacts` before anything that executes HLO.
+
+use anyhow::Result;
+
+use gnn_pipe::batching::GraphAwareChunker;
+use gnn_pipe::bench_harness as bench;
+use gnn_pipe::config::Config;
+use gnn_pipe::data::generate;
+use gnn_pipe::graph::GraphStats;
+use gnn_pipe::pipeline::PipelineTrainer;
+use gnn_pipe::runtime::{Engine, Manifest};
+use gnn_pipe::train::SingleDeviceTrainer;
+use gnn_pipe::util::cli::Args;
+
+const USAGE: &str = "\
+gnn-pipe — pipe-parallel GAT training (paper reproduction)
+
+USAGE:
+  gnn-pipe data      [--dataset <name>]
+  gnn-pipe train     --dataset <name> --backend <ell|edgewise> [--epochs N] [--seed S]
+  gnn-pipe pipeline  [--backend <ell|edgewise>] [--chunks K] [--epochs N] [--star] [--graph-aware]
+  gnn-pipe bench     <table1|table2|fig1|fig2|fig3|fig4|ablation-chunker|edge-retention|all> [--epochs N]
+  gnn-pipe inspect
+";
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<()> {
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(String::as_str).unwrap_or("help");
+    match cmd {
+        "data" => cmd_data(&args),
+        "train" => cmd_train(&args),
+        "pipeline" => cmd_pipeline(&args),
+        "bench" => cmd_bench(&args),
+        "inspect" => cmd_inspect(),
+        _ => {
+            print!("{USAGE}");
+            Ok(())
+        }
+    }
+}
+
+fn cmd_data(args: &Args) -> Result<()> {
+    let cfg = Config::load()?;
+    let names: Vec<String> = match args.opt("dataset") {
+        Some(d) => vec![d.to_string()],
+        None => cfg.datasets.keys().cloned().collect(),
+    };
+    for name in names {
+        let profile = cfg.dataset(&name)?;
+        let t = std::time::Instant::now();
+        let ds = generate(profile)?;
+        let stats = ds.graph.stats();
+        let hom = GraphStats::homophily(&ds.graph, &ds.labels);
+        println!("== {name} (generated in {:.2?}) ==", t.elapsed());
+        println!(
+            "  nodes          {:>8}   (target {})",
+            stats.nodes, profile.nodes
+        );
+        println!(
+            "  edges          {:>8}   (target {})",
+            stats.edges, profile.undirected_edges
+        );
+        println!(
+            "  homophily      {hom:>8.3}   (target {:.2})",
+            profile.homophily
+        );
+        println!(
+            "  feat density   {:>8.4}   (target {:.3})",
+            ds.report.feature_density, profile.feature_density
+        );
+        println!(
+            "  degree         min {} / mean {:.2} / max {} (ELL K = {})",
+            stats.min_degree, stats.mean_degree, stats.max_degree, profile.ell_k
+        );
+        println!(
+            "  components     {:>8}   largest {}",
+            stats.components, stats.largest_component
+        );
+        println!(
+            "  splits         train {} / val {} / test {}",
+            ds.splits.train.len(),
+            ds.splits.val.len(),
+            ds.splits.test.len()
+        );
+        println!(
+            "  gen rejects    cap {} / dup {}",
+            ds.report.cap_rejections, ds.report.dup_rejections
+        );
+    }
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let cfg = Config::load()?;
+    let dataset = args.opt_str("dataset", "cora").to_string();
+    let backend = args.opt_str("backend", "ell").to_string();
+    let epochs = args.opt_usize("epochs", cfg.model.epochs)?;
+    let seed = args.opt_usize("seed", 0)? as u64;
+
+    let engine = Engine::from_artifacts_dir(&cfg.artifacts_dir())?;
+    let ds = generate(cfg.dataset(&dataset)?)?;
+    let mut trainer = SingleDeviceTrainer::new(&engine, &ds, &backend);
+    trainer.seed = seed;
+    println!("training {dataset}/{backend} for {epochs} epochs on CPU...");
+    let res = trainer.train(&cfg.model, epochs)?;
+    println!("epoch 1 (setup)    {:.4} s", res.timing.epoch1_s);
+    println!("epochs 2-{epochs}      {:.3} s total", res.timing.epochs_rest_s);
+    println!("avg epoch          {:.4} s", res.timing.avg_epoch_s());
+    println!("coordinator (opt)  {:.4} s total", res.timing.coordinator_s);
+    println!(
+        "final: train loss {:.4}  train acc {:.4}  val acc {:.4}  test acc {:.4}",
+        res.final_metrics.train_loss,
+        res.final_metrics.train_acc,
+        res.final_metrics.val_acc,
+        res.final_metrics.test_acc
+    );
+    println!("loss curve  {}", res.train_loss.sparkline(60));
+    if !res.val_acc.values.is_empty() {
+        println!("val acc     {}", res.val_acc.sparkline(60));
+    }
+    Ok(())
+}
+
+fn cmd_pipeline(args: &Args) -> Result<()> {
+    let cfg = Config::load()?;
+    let backend = args.opt_str("backend", "ell").to_string();
+    let chunks = args.opt_usize("chunks", 1)?;
+    let epochs = args.opt_usize("epochs", cfg.model.epochs)?;
+    let star = args.flag("star");
+    let dataset = cfg.pipeline.pipeline_dataset.clone();
+
+    let engine = Engine::from_artifacts_dir(&cfg.artifacts_dir())?;
+    let ds = generate(cfg.dataset(&dataset)?)?;
+    let mut trainer = PipelineTrainer::new(&engine, &ds, &backend, chunks);
+    if star {
+        trainer = trainer.full_graph_variant();
+    }
+    if args.flag("graph-aware") {
+        trainer.chunker = Box::new(GraphAwareChunker);
+    }
+    println!(
+        "pipeline training {dataset}/{backend} chunks={chunks}{} ({} devices, balance {:?}) for {epochs} epochs...",
+        if star { "*" } else { "" },
+        cfg.pipeline.devices,
+        cfg.pipeline.balance
+    );
+    let res = trainer.train(&cfg.model, epochs)?;
+    println!("edge retention     {:.4}", res.retention.retained_fraction);
+    println!("epoch 1 (setup)    {:.4} s", res.timing.epoch1_s);
+    println!("avg epoch          {:.4} s", res.timing.avg_epoch_s());
+    println!("host rebuild       {:.4} s total", res.timing.rebuild_s);
+    println!(
+        "final (pipeline-eval): train loss {:.4}  train acc {:.4}  val acc {:.4}",
+        res.pipeline_eval.train_loss,
+        res.pipeline_eval.train_acc,
+        res.pipeline_eval.val_acc
+    );
+    println!(
+        "final (full-graph eval): val acc {:.4}  test acc {:.4}",
+        res.full_eval.val_acc, res.full_eval.test_acc
+    );
+    println!("train acc   {}", res.train_acc.sparkline(60));
+    for (s, (f, b)) in res.stage_means.iter().enumerate() {
+        println!("stage {s}: mean fwd {:.2} ms, mean bwd {:.2} ms", f * 1e3, b * 1e3);
+    }
+    Ok(())
+}
+
+fn cmd_bench(args: &Args) -> Result<()> {
+    let which = args
+        .positional
+        .get(1)
+        .map(String::as_str)
+        .unwrap_or("all")
+        .to_string();
+    let cfg = Config::load()?;
+    let epochs = args.opt_usize("epochs", cfg.model.epochs)?;
+    let ctx = bench::BenchCtx::new(epochs)?;
+    let mut outputs = Vec::new();
+    let run = |name: &str, ctx: &bench::BenchCtx| -> Result<String> {
+        match name {
+            "table1" => bench::bench_table1(ctx),
+            "table2" => bench::bench_table2(ctx),
+            "fig1" => bench::bench_fig1(ctx),
+            "fig2" => bench::bench_fig2(ctx),
+            "fig3" => bench::bench_fig3(ctx),
+            "fig4" => bench::bench_fig4(ctx),
+            "ablation-chunker" => bench::bench_ablation_chunker(ctx),
+            "edge-retention" => bench::bench_edge_retention(ctx),
+            other => anyhow::bail!("unknown bench {other:?}"),
+        }
+    };
+    if which == "all" {
+        for name in [
+            "table1", "table2", "fig1", "fig2", "fig3", "fig4",
+            "ablation-chunker", "edge-retention",
+        ] {
+            outputs.push(run(name, &ctx)?);
+        }
+    } else {
+        outputs.push(run(&which, &ctx)?);
+    }
+    for o in outputs {
+        println!("{o}");
+    }
+    Ok(())
+}
+
+fn cmd_inspect() -> Result<()> {
+    let cfg = Config::load()?;
+    let m = Manifest::load(&cfg.artifacts_dir())?;
+    println!(
+        "manifest: {} artifacts, param order {:?}, balance {:?} over {} devices",
+        m.artifacts.len(),
+        m.param_order,
+        m.balance,
+        m.devices
+    );
+    for (name, a) in &m.artifacts {
+        println!(
+            "  {name:<36} {:>2} in / {:>2} out   {:>8.3} GFLOP  {:>7.2} MB traffic",
+            a.inputs.len(),
+            a.outputs.len(),
+            a.flops.unwrap_or(0.0) / 1e9,
+            a.bytes_accessed.unwrap_or(0.0) / 1e6,
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,190 @@
+//! Training/benchmark metrics: epoch timers, curves, and report emitters.
+
+use std::fmt::Write as _;
+use std::time::Instant;
+
+/// Wall-clock timing of one training run, separated the way the paper's
+/// Table 2 reports it: a "setup" first epoch (JIT/compile + warm-up)
+/// versus steady-state epochs.
+#[derive(Debug, Clone, Default)]
+pub struct RunTiming {
+    pub epoch1_s: f64,
+    pub epochs_rest_s: f64,
+    pub epochs: usize,
+    /// Per-epoch wall-clock (including epoch 1).
+    pub per_epoch_s: Vec<f64>,
+    /// Time spent inside the coordinator but outside executables
+    /// (schedule, stash, accumulate, host rebuild) — §Perf accounting.
+    pub coordinator_s: f64,
+    /// Time spent in host-side sub-graph rebuilds (the paper's §7.2 term).
+    pub rebuild_s: f64,
+}
+
+impl RunTiming {
+    /// Paper's "Ave. Epoch": mean over epochs 2..N.
+    pub fn avg_epoch_s(&self) -> f64 {
+        if self.epochs <= 1 {
+            self.epoch1_s
+        } else {
+            self.epochs_rest_s / (self.epochs - 1) as f64
+        }
+    }
+
+    pub fn total_s(&self) -> f64 {
+        self.epoch1_s + self.epochs_rest_s
+    }
+}
+
+/// Accuracy/loss curve over epochs.
+#[derive(Debug, Clone, Default)]
+pub struct Curve {
+    pub epochs: Vec<usize>,
+    pub values: Vec<f64>,
+}
+
+impl Curve {
+    pub fn push(&mut self, epoch: usize, v: f64) {
+        self.epochs.push(epoch);
+        self.values.push(v);
+    }
+
+    pub fn last(&self) -> Option<f64> {
+        self.values.last().copied()
+    }
+
+    /// Render as `epoch,value` CSV (one figure series).
+    pub fn to_csv(&self, header: &str) -> String {
+        let mut s = format!("epoch,{header}\n");
+        for (e, v) in self.epochs.iter().zip(&self.values) {
+            let _ = writeln!(s, "{e},{v:.6}");
+        }
+        s
+    }
+
+    /// Terminal sparkline for quick visual inspection of curves.
+    pub fn sparkline(&self, width: usize) -> String {
+        const BARS: &[char] = &['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+        if self.values.is_empty() {
+            return String::new();
+        }
+        let lo = self.values.iter().cloned().fold(f64::INFINITY, f64::min);
+        let hi = self.values.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let span = (hi - lo).max(1e-12);
+        let n = self.values.len();
+        let w = width.min(n).max(1);
+        let mut out = String::new();
+        for j in 0..w {
+            // Sample so that both endpoints are always included.
+            let idx = if w == 1 { 0 } else { j * (n - 1) / (w - 1) };
+            let v = self.values[idx];
+            let level = (((v - lo) / span) * (BARS.len() - 1) as f64).round() as usize;
+            out.push(BARS[level.min(BARS.len() - 1)]);
+        }
+        out
+    }
+}
+
+/// Simple scoped timer.
+pub struct Timer(Instant);
+
+impl Timer {
+    pub fn start() -> Timer {
+        Timer(Instant::now())
+    }
+
+    pub fn secs(&self) -> f64 {
+        self.0.elapsed().as_secs_f64()
+    }
+}
+
+/// Fixed-width table printer for the bench harness (paper-style rows).
+#[derive(Debug, Default)]
+pub struct Table {
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Table {
+        Table { header: header.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.header.len(), "table arity");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let mut line = String::from("|");
+            for (c, w) in cells.iter().zip(widths) {
+                let _ = write!(line, " {c:w$} |");
+            }
+            line
+        };
+        let _ = writeln!(out, "{}", fmt_row(&self.header, &widths));
+        let mut sep = String::from("|");
+        for w in &widths {
+            let _ = write!(sep, "{}|", "-".repeat(w + 2));
+        }
+        let _ = writeln!(out, "{sep}");
+        for r in &self.rows {
+            let _ = writeln!(out, "{}", fmt_row(r, &widths));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn avg_epoch_excludes_first() {
+        let t = RunTiming {
+            epoch1_s: 10.0,
+            epochs_rest_s: 9.0,
+            epochs: 10,
+            ..Default::default()
+        };
+        assert!((t.avg_epoch_s() - 1.0).abs() < 1e-12);
+        assert!((t.total_s() - 19.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn curve_csv() {
+        let mut c = Curve::default();
+        c.push(1, 0.5);
+        c.push(2, 0.75);
+        let csv = c.to_csv("acc");
+        assert!(csv.starts_with("epoch,acc\n1,0.5"));
+        assert_eq!(c.last(), Some(0.75));
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["a", "long-header"]);
+        t.row(&["x".into(), "1".into()]);
+        let s = t.render();
+        assert!(s.contains("| a | long-header |"));
+        assert!(s.lines().count() == 3);
+    }
+
+    #[test]
+    fn sparkline_monotone() {
+        let mut c = Curve::default();
+        for i in 0..32 {
+            c.push(i, i as f64);
+        }
+        let s = c.sparkline(8);
+        assert_eq!(s.chars().count(), 8);
+        assert!(s.starts_with('▁') && s.ends_with('█'));
+    }
+}

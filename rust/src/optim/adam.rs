@@ -1,0 +1,119 @@
+//! Adam with decoupled weight decay (AdamW-style, matrices only).
+
+use anyhow::Result;
+
+use super::{is_decayed, Optimizer};
+use crate::runtime::HostTensor;
+
+#[derive(Debug, Clone)]
+pub struct Adam {
+    pub lr: f64,
+    pub beta1: f64,
+    pub beta2: f64,
+    pub eps: f64,
+    pub weight_decay: f64,
+    t: u64,
+    m: Vec<Vec<f32>>,
+    v: Vec<Vec<f32>>,
+}
+
+impl Adam {
+    pub fn new(lr: f64, beta1: f64, beta2: f64, eps: f64, weight_decay: f64) -> Adam {
+        Adam { lr, beta1, beta2, eps, weight_decay, t: 0, m: Vec::new(), v: Vec::new() }
+    }
+
+    pub fn from_config(mc: &crate::config::ModelConfig) -> Adam {
+        Adam::new(mc.lr, mc.beta1, mc.beta2, mc.eps, mc.weight_decay)
+    }
+
+    fn ensure_state(&mut self, params: &[HostTensor]) {
+        if self.m.is_empty() {
+            self.m = params.iter().map(|p| vec![0.0; p.elements()]).collect();
+            self.v = params.iter().map(|p| vec![0.0; p.elements()]).collect();
+        }
+    }
+}
+
+impl Optimizer for Adam {
+    fn step(&mut self, params: &mut [HostTensor], grads: &[HostTensor]) -> Result<()> {
+        anyhow::ensure!(params.len() == grads.len(), "param/grad arity mismatch");
+        self.ensure_state(params);
+        self.t += 1;
+        let b1t = 1.0 - self.beta1.powi(self.t as i32);
+        let b2t = 1.0 - self.beta2.powi(self.t as i32);
+        let (b1, b2) = (self.beta1 as f32, self.beta2 as f32);
+        let lr = self.lr as f32;
+        let eps = self.eps as f32;
+
+        for (i, (p, g)) in params.iter_mut().zip(grads).enumerate() {
+            let decay = if is_decayed(p.shape()) { self.weight_decay as f32 } else { 0.0 };
+            let g = g.as_f32()?;
+            let w = p.as_f32_mut()?;
+            anyhow::ensure!(w.len() == g.len(), "param {i} size mismatch");
+            let m = &mut self.m[i];
+            let v = &mut self.v[i];
+            for j in 0..w.len() {
+                // L2-style decay folded into the gradient (GAT reference
+                // uses torch Adam's weight_decay, which is coupled).
+                let gj = g[j] + decay * w[j];
+                m[j] = b1 * m[j] + (1.0 - b1) * gj;
+                v[j] = b2 * v[j] + (1.0 - b2) * gj * gj;
+                let mhat = m[j] / b1t as f32;
+                let vhat = v[j] / b2t as f32;
+                w[j] -= lr * mhat / (vhat.sqrt() + eps);
+            }
+        }
+        Ok(())
+    }
+
+    fn name(&self) -> &'static str {
+        "adam"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::tests::converges_on_quadratic;
+    use super::*;
+
+    #[test]
+    fn converges() {
+        let mut adam = Adam::new(0.1, 0.9, 0.999, 1e-8, 0.0);
+        converges_on_quadratic(&mut adam, 0.02, 500);
+    }
+
+    #[test]
+    fn bias_correction_first_step() {
+        // After one step from zero state, update must be ~lr * sign(g).
+        let mut adam = Adam::new(0.01, 0.9, 0.999, 1e-8, 0.0);
+        let mut p = vec![HostTensor::f32(vec![2], vec![1.0, -1.0])];
+        let g = vec![HostTensor::f32(vec![2], vec![0.5, -2.0])];
+        adam.step(&mut p, &g).unwrap();
+        let w = p[0].as_f32().unwrap();
+        assert!((w[0] - (1.0 - 0.01)).abs() < 1e-4, "{w:?}");
+        assert!((w[1] - (-1.0 + 0.01)).abs() < 1e-4, "{w:?}");
+    }
+
+    #[test]
+    fn weight_decay_only_on_matrices() {
+        let mut adam = Adam::new(0.01, 0.9, 0.999, 1e-8, 1.0);
+        let mut p = vec![
+            HostTensor::f32(vec![2, 1], vec![1.0, 1.0]), // decayed
+            HostTensor::f32(vec![2], vec![1.0, 1.0]),    // bias: not
+        ];
+        let g = vec![
+            HostTensor::f32(vec![2, 1], vec![0.0, 0.0]),
+            HostTensor::f32(vec![2], vec![0.0, 0.0]),
+        ];
+        adam.step(&mut p, &g).unwrap();
+        assert!(p[0].as_f32().unwrap()[0] < 1.0); // decay pulled it down
+        assert_eq!(p[1].as_f32().unwrap()[0], 1.0); // untouched
+    }
+
+    #[test]
+    fn rejects_mismatched_arity() {
+        let mut adam = Adam::new(0.01, 0.9, 0.999, 1e-8, 0.0);
+        let mut p = vec![HostTensor::f32(vec![1], vec![0.0])];
+        assert!(adam.step(&mut p, &[]).is_err());
+    }
+}

@@ -1,0 +1,54 @@
+//! Optimisers over flat host parameter vectors.
+//!
+//! The compiled HLO computes gradients; the coordinator owns the
+//! optimiser state (exactly the split the pipeline path needs, since
+//! gradients from micro-batches must be accumulated before one update).
+//! Adam matches the GAT reference setup (lr 5e-3, weight decay 5e-4).
+
+mod adam;
+mod sgd;
+
+pub use adam::Adam;
+pub use sgd::Sgd;
+
+use crate::runtime::HostTensor;
+
+/// A first-order optimiser stepping named f32 parameter tensors.
+pub trait Optimizer {
+    /// Apply one update step. `params` and `grads` are parallel slices
+    /// ordered by the manifest's `param_order`.
+    fn step(&mut self, params: &mut [HostTensor], grads: &[HostTensor]) -> anyhow::Result<()>;
+    fn name(&self) -> &'static str;
+}
+
+/// Decoupled weight decay applied to matrix parameters only (biases and
+/// attention vectors exempt, as in the GAT reference implementation).
+pub(crate) fn is_decayed(shape: &[usize]) -> bool {
+    shape.len() >= 2
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Shared harness: optimisers must minimise a convex quadratic.
+    pub(crate) fn converges_on_quadratic(opt: &mut dyn Optimizer, tol: f64, iters: usize) {
+        // f(w) = 0.5 * sum((w - t)^2), grad = w - t
+        let target = [3.0f32, -1.5, 0.25, 8.0];
+        let mut params = vec![HostTensor::f32(vec![4], vec![0.0; 4])];
+        for _ in 0..iters {
+            let w = params[0].as_f32().unwrap();
+            let g: Vec<f32> = w.iter().zip(target).map(|(w, t)| w - t).collect();
+            let grads = vec![HostTensor::f32(vec![4], g)];
+            opt.step(&mut params, &grads).unwrap();
+        }
+        let w = params[0].as_f32().unwrap();
+        for (wi, ti) in w.iter().zip(target) {
+            assert!(
+                (wi - ti).abs() < tol as f32,
+                "{} did not converge: {wi} vs {ti}",
+                opt.name()
+            );
+        }
+    }
+}

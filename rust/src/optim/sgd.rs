@@ -1,0 +1,65 @@
+//! Plain SGD with optional momentum — the ablation baseline optimiser.
+
+use anyhow::Result;
+
+use super::{is_decayed, Optimizer};
+use crate::runtime::HostTensor;
+
+#[derive(Debug, Clone)]
+pub struct Sgd {
+    pub lr: f64,
+    pub momentum: f64,
+    pub weight_decay: f64,
+    velocity: Vec<Vec<f32>>,
+}
+
+impl Sgd {
+    pub fn new(lr: f64, momentum: f64, weight_decay: f64) -> Sgd {
+        Sgd { lr, momentum, weight_decay, velocity: Vec::new() }
+    }
+}
+
+impl Optimizer for Sgd {
+    fn step(&mut self, params: &mut [HostTensor], grads: &[HostTensor]) -> Result<()> {
+        anyhow::ensure!(params.len() == grads.len(), "param/grad arity mismatch");
+        if self.velocity.is_empty() {
+            self.velocity = params.iter().map(|p| vec![0.0; p.elements()]).collect();
+        }
+        let lr = self.lr as f32;
+        let mu = self.momentum as f32;
+        for (i, (p, g)) in params.iter_mut().zip(grads).enumerate() {
+            let decay = if is_decayed(p.shape()) { self.weight_decay as f32 } else { 0.0 };
+            let g = g.as_f32()?;
+            let w = p.as_f32_mut()?;
+            let vel = &mut self.velocity[i];
+            for j in 0..w.len() {
+                let gj = g[j] + decay * w[j];
+                vel[j] = mu * vel[j] + gj;
+                w[j] -= lr * vel[j];
+            }
+        }
+        Ok(())
+    }
+
+    fn name(&self) -> &'static str {
+        "sgd"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::tests::converges_on_quadratic;
+    use super::*;
+
+    #[test]
+    fn converges_plain() {
+        let mut sgd = Sgd::new(0.1, 0.0, 0.0);
+        converges_on_quadratic(&mut sgd, 1e-3, 200);
+    }
+
+    #[test]
+    fn converges_with_momentum() {
+        let mut sgd = Sgd::new(0.05, 0.9, 0.0);
+        converges_on_quadratic(&mut sgd, 1e-2, 300);
+    }
+}

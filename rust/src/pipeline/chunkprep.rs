@@ -1,0 +1,202 @@
+//! Micro-batch preparation: the host-side work torchgpipe + DGL forced
+//! onto the paper's implementation — chunk the node tensor, re-build
+//! each induced sub-graph, re-index, pad to the compiled shapes.
+
+use anyhow::Result;
+
+use crate::batching::ChunkPlan;
+use crate::config::DatasetProfile;
+use crate::data::Dataset;
+use crate::graph::{EllGraph, Graph};
+use crate::runtime::HostTensor;
+
+/// One padded micro-batch, ready for the stage executables.
+#[derive(Debug, Clone)]
+pub struct Microbatch {
+    /// Original node ids (len <= n_pad).
+    pub nodes: Vec<u32>,
+    /// Padded feature rows (n_pad, d).
+    pub x: HostTensor,
+    /// Graph tensors in artifact order (ELL: idx, mask; COO: src,dst,mask).
+    pub graph: Vec<HostTensor>,
+    pub labels: HostTensor,
+    pub mask: HostTensor,
+    /// Undirected edges lost to the chunk boundary (paper's Fig-4 driver).
+    pub cut_edges: usize,
+}
+
+/// Build padded micro-batches from a chunk plan.
+///
+/// `n_pad` rows per chunk and (for `edgewise`) `e_cap` edge slots must
+/// match the chunk-count-specific artifact shapes; callers take them
+/// from `DatasetProfile::{chunk_nodes, chunk_e_cap}`.
+pub fn prepare_microbatches(
+    ds: &Dataset,
+    plan: &ChunkPlan,
+    backend: &str,
+    train_mask: &[f32],
+) -> Result<Vec<Microbatch>> {
+    let p = &ds.profile;
+    let k = plan.num_chunks();
+    let n_pad = p.chunk_nodes(k);
+    let e_cap = p.chunk_e_cap(k);
+    let mut out = Vec::with_capacity(k);
+    for chunk in &plan.chunks {
+        anyhow::ensure!(chunk.len() <= n_pad, "chunk larger than padded capacity");
+        let sub = crate::graph::induce_subgraph(&ds.graph, chunk);
+        let graph = graph_tensors(&sub.graph, backend, n_pad, e_cap, p)?;
+        out.push(Microbatch {
+            x: HostTensor::f32(
+                vec![n_pad, p.features],
+                ds.gather_features(chunk, n_pad),
+            ),
+            labels: HostTensor::s32(vec![n_pad], ds.gather_labels(chunk, n_pad)),
+            mask: HostTensor::f32(
+                vec![n_pad],
+                ds.gather_mask(train_mask, chunk, n_pad),
+            ),
+            graph,
+            cut_edges: sub.cut_edges,
+            nodes: chunk.clone(),
+        })
+    }
+    Ok(out)
+}
+
+/// Device graph tensors for a (possibly smaller-than-padded) sub-graph.
+pub fn graph_tensors(
+    g: &Graph,
+    backend: &str,
+    n_pad: usize,
+    e_cap: usize,
+    p: &DatasetProfile,
+) -> Result<Vec<HostTensor>> {
+    match backend {
+        "ell" => {
+            let ell = EllGraph::from_graph(g, p.ell_k)?;
+            let mut idx = ell.idx;
+            let mut mask = ell.mask;
+            idx.resize(n_pad * p.ell_k, 0);
+            mask.resize(n_pad * p.ell_k, 0.0);
+            Ok(vec![
+                HostTensor::s32(vec![n_pad, p.ell_k], idx),
+                HostTensor::f32(vec![n_pad, p.ell_k], mask),
+            ])
+        }
+        "edgewise" => {
+            let coo = g.to_coo(e_cap)?;
+            Ok(vec![
+                HostTensor::s32(vec![e_cap], coo.src),
+                HostTensor::s32(vec![e_cap], coo.dst),
+                HostTensor::f32(vec![e_cap], coo.mask),
+            ])
+        }
+        other => anyhow::bail!("unknown backend {other:?}"),
+    }
+}
+
+/// The union of all chunk sub-graphs mapped back to original node ids —
+/// i.e. the full graph minus every edge the chunking cut. Deterministic
+/// full-shape evaluation on this graph is mathematically identical to a
+/// dropout-off forward through the chunked pipeline (message passing
+/// never crosses chunks), which is how Figure 4's accuracy is measured.
+pub fn lossy_union_graph(full: &Graph, plan: &ChunkPlan) -> Graph {
+    let mut edges = Vec::new();
+    for sub in plan.induce_all(full) {
+        for (a, b) in sub.graph.edges() {
+            edges.push((sub.nodes[a as usize], sub.nodes[b as usize]));
+        }
+    }
+    Graph::from_undirected_edges(full.num_nodes(), &edges)
+        .expect("union of induced sub-graphs is a valid simple graph")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::batching::{Chunker, SequentialChunker};
+    use crate::config::DatasetProfile;
+    use crate::data::generate;
+
+    fn profile() -> DatasetProfile {
+        DatasetProfile {
+            name: "t".into(),
+            nodes: 100,
+            undirected_edges: 200,
+            features: 16,
+            classes: 3,
+            train_per_class: 5,
+            val_size: 10,
+            test_size: 20,
+            homophily: 0.8,
+            feature_density: 0.2,
+            seed: 3,
+            ell_k: 16,
+            edge_pad_multiple: 32,
+        }
+    }
+
+    #[test]
+    fn microbatch_shapes_and_padding() {
+        let p = profile();
+        let ds = generate(&p).unwrap();
+        let plan = SequentialChunker.plan(&ds.graph, 3);
+        let tm = ds.splits.train_mask(p.nodes);
+        let mbs = prepare_microbatches(&ds, &plan, "ell", &tm).unwrap();
+        assert_eq!(mbs.len(), 3);
+        let n_pad = p.chunk_nodes(3); // 34
+        for mb in &mbs {
+            assert_eq!(mb.x.shape(), &[n_pad, p.features]);
+            assert_eq!(mb.graph[0].shape(), &[n_pad, p.ell_k]);
+            assert_eq!(mb.labels.shape(), &[n_pad]);
+        }
+        // last chunk is short: its padded rows must be fully masked
+        let last = &mbs[2];
+        let real = last.nodes.len();
+        let mask = last.graph[1].as_f32().unwrap();
+        for row in real..n_pad {
+            assert!(mask[row * p.ell_k..(row + 1) * p.ell_k]
+                .iter()
+                .all(|&m| m == 0.0));
+        }
+    }
+
+    #[test]
+    fn features_follow_chunk_order() {
+        let p = profile();
+        let ds = generate(&p).unwrap();
+        let plan = SequentialChunker.plan(&ds.graph, 2);
+        let tm = vec![1.0; p.nodes];
+        let mbs = prepare_microbatches(&ds, &plan, "ell", &tm).unwrap();
+        let x1 = mbs[1].x.as_f32().unwrap();
+        let first_node_of_chunk1 = mbs[1].nodes[0] as usize;
+        assert_eq!(
+            &x1[..p.features],
+            ds.feature_row(first_node_of_chunk1)
+        );
+    }
+
+    #[test]
+    fn lossy_union_loses_exactly_cut_edges() {
+        let p = profile();
+        let ds = generate(&p).unwrap();
+        let plan = SequentialChunker.plan(&ds.graph, 4);
+        let union = lossy_union_graph(&ds.graph, &plan);
+        let stats = crate::batching::retention_stats(&ds.graph, &plan);
+        assert_eq!(union.num_edges(), stats.retained_edges);
+        assert!(union.num_edges() < ds.graph.num_edges());
+        // every union edge exists in the original
+        for (a, b) in union.edges() {
+            assert!(ds.graph.has_edge(a as usize, b as usize));
+        }
+    }
+
+    #[test]
+    fn single_chunk_is_lossless() {
+        let p = profile();
+        let ds = generate(&p).unwrap();
+        let plan = SequentialChunker.plan(&ds.graph, 1);
+        let union = lossy_union_graph(&ds.graph, &plan);
+        assert_eq!(union, ds.graph);
+    }
+}

@@ -1,0 +1,267 @@
+//! The pipeline trainer: per-epoch orchestration around the engine.
+//!
+//! Reproduces the paper's experimental procedure exactly:
+//!   * `chunks = 1`, `rebuild = false`  →  Table 2's "Chunk = 1*" rows
+//!     (full graph defined inside the model; no tuple passing, no host
+//!     re-build);
+//!   * `chunks = 1..4`, `rebuild = true` →  the tuple-passing adaptation:
+//!     node tensor chunked sequentially, sub-graphs re-built on the host
+//!     every epoch (timed into `RunTiming::rebuild_s` — the §7.2
+//!     overhead), structure loss reflected in training AND evaluation
+//!     through the lossy union graph.
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use crate::batching::{retention_stats, Chunker, RetentionStats, SequentialChunker};
+use crate::config::ModelConfig;
+use crate::data::Dataset;
+use crate::metrics::{Curve, RunTiming, Timer};
+use crate::optim::{Adam, Optimizer};
+use crate::runtime::{Engine, HostTensor};
+use crate::train::{
+    flatten_params, init_params, unflatten_params, Evaluator,
+};
+
+use super::chunkprep::{lossy_union_graph, prepare_microbatches};
+use super::engine::PipelineEngine;
+
+pub struct PipelineTrainer<'e> {
+    engine: &'e Engine,
+    dataset: &'e Dataset,
+    backend: String,
+    pub chunks: usize,
+    /// false = the paper's "Chunk = 1*" configuration (graph baked into
+    /// the model, no host re-build). Only valid with chunks == 1.
+    pub rebuild: bool,
+    pub chunker: Box<dyn Chunker + Send + Sync>,
+    pub seed: u64,
+    pub eval_every: usize,
+}
+
+#[derive(Debug)]
+pub struct PipelineResult {
+    pub timing: RunTiming,
+    /// Final metrics through the chunk-lossy graph (what the paper's
+    /// chunked training loop reports — Figure 4 / Table 2 chunks rows).
+    pub pipeline_eval: crate::train::EvalMetrics,
+    /// Final metrics through the intact full graph (what the trained
+    /// parameters are worth if inference avoids chunking).
+    pub full_eval: crate::train::EvalMetrics,
+    pub train_loss: Curve,
+    /// Training accuracy per epoch from the pipeline's own (stochastic,
+    /// chunked) forward outputs — the quantity Figure 2/4 plot.
+    pub train_acc: Curve,
+    pub val_acc: Curve,
+    pub retention: RetentionStats,
+    /// Mean per-stage executable seconds (fwd, bwd), for the simulator.
+    pub stage_means: Vec<(f64, f64)>,
+    pub params: BTreeMap<String, HostTensor>,
+}
+
+impl<'e> PipelineTrainer<'e> {
+    pub fn new(
+        engine: &'e Engine,
+        dataset: &'e Dataset,
+        backend: &str,
+        chunks: usize,
+    ) -> Self {
+        PipelineTrainer {
+            engine,
+            dataset,
+            backend: backend.to_string(),
+            chunks,
+            rebuild: true,
+            chunker: Box::new(SequentialChunker),
+            seed: 0,
+            eval_every: 10,
+        }
+    }
+
+    /// The paper's "Chunk = 1*": full graph in the model, no re-build.
+    pub fn full_graph_variant(mut self) -> Self {
+        assert_eq!(self.chunks, 1, "1* variant requires chunks == 1");
+        self.rebuild = false;
+        self
+    }
+
+    pub fn train(&self, mc: &ModelConfig, epochs: usize) -> Result<PipelineResult> {
+        let ds = self.dataset;
+        let p = &ds.profile;
+        let n = p.nodes;
+        let train_mask = ds.splits.train_mask(n);
+
+        let mut timing = RunTiming { epochs, ..Default::default() };
+
+        // Chunk plan is static across epochs (torchgpipe chunks by index).
+        let plan = self.chunker.plan(&ds.graph, self.chunks);
+        plan.check(n)?;
+        let retention = retention_stats(&ds.graph, &plan);
+
+        // Epoch-1 setup: compile all stage executables (paper's "setup"
+        // epoch measured 7s on the DGX — ours is XLA CPU compile time).
+        let setup = Timer::start();
+        let pipe = PipelineEngine::new(
+            self.engine,
+            &p.name,
+            &self.backend,
+            self.chunks,
+        )?;
+        self.engine.warm_up(&pipe.artifact_names)?;
+
+        // The 1* variant skips the per-epoch re-build: batches built once.
+        let static_mbs = if self.rebuild {
+            None
+        } else {
+            Some(prepare_microbatches(ds, &plan, &self.backend, &train_mask)?)
+        };
+
+        // Lossy-graph evaluator: the deterministic equivalent of a
+        // forward through the chunked pipeline.
+        let union = lossy_union_graph(&ds.graph, &plan);
+        let pipeline_evaluator =
+            Evaluator::with_graph(self.engine, ds, &self.backend, &union)?;
+        let full_evaluator = Evaluator::new(self.engine, ds, &self.backend)?;
+
+        let order = self.engine.manifest.param_order.clone();
+        let mut flat = flatten_params(&init_params(p, mc, self.seed), &order)?;
+        let mut adam = Adam::from_config(mc);
+
+        let mut train_loss = Curve::default();
+        let mut train_acc = Curve::default();
+        let mut val_acc = Curve::default();
+        let mut stage_fwd_sum = vec![0.0f64; 4];
+        let mut stage_bwd_sum = vec![0.0f64; 4];
+        let mut stage_calls = 0usize;
+        let setup_s = setup.secs();
+
+        for epoch in 1..=epochs {
+            let t = Timer::start();
+
+            // The paper re-built sub-graphs inside every forward pass;
+            // reproduce that cost per epoch when rebuild is on.
+            let mbs_owned;
+            let mbs = match &static_mbs {
+                Some(m) => m,
+                None => {
+                    let rt = Timer::start();
+                    mbs_owned =
+                        prepare_microbatches(ds, &plan, &self.backend, &train_mask)?;
+                    timing.rebuild_s += rt.secs();
+                    &mbs_owned
+                }
+            };
+
+            let key = (self.seed as u32, epoch as u32);
+            let out = pipe.run_epoch(&flat, mbs, key)?;
+            let loss = out.loss_sum / out.mask_count.max(1.0);
+            anyhow::ensure!(loss.is_finite(), "loss diverged at epoch {epoch}");
+
+            // Normalise sum-grads to mean-grads, then one Adam step.
+            let coord = Timer::start();
+            let scale = 1.0 / out.mask_count.max(1.0) as f32;
+            let grads: Vec<HostTensor> = out
+                .grads
+                .into_iter()
+                .map(|mut g| {
+                    for v in g.as_f32_mut().unwrap() {
+                        *v *= scale;
+                    }
+                    g
+                })
+                .collect();
+            adam.step(&mut flat, &grads)?;
+            timing.coordinator_s += coord.secs();
+
+            // Stochastic training accuracy from the pipeline's own logits.
+            train_acc.push(epoch, self.pipeline_train_acc(&out.logp, &train_mask));
+            train_loss.push(epoch, loss);
+            for (s, st) in out.stage_timings.iter().enumerate() {
+                stage_fwd_sum[s] += mean(&st.fwd_s);
+                stage_bwd_sum[s] += mean(&st.bwd_s);
+            }
+            stage_calls += 1;
+
+            let dt = if epoch == 1 { t.secs() + setup_s } else { t.secs() };
+            timing.per_epoch_s.push(dt);
+            if epoch == 1 {
+                timing.epoch1_s = dt;
+            } else {
+                timing.epochs_rest_s += dt;
+            }
+
+            if self.eval_every > 0 && epoch % self.eval_every == 0 {
+                let pm = unflatten_params(flat.clone(), &order)?;
+                let m = pipeline_evaluator.metrics(&pm)?;
+                val_acc.push(epoch, m.val_acc);
+            }
+        }
+
+        let params = unflatten_params(flat, &order)?;
+        let pipeline_eval = pipeline_evaluator.metrics(&params)?;
+        let full_eval = full_evaluator.metrics(&params)?;
+        let stage_means = (0..4)
+            .map(|s| {
+                (
+                    stage_fwd_sum[s] / stage_calls.max(1) as f64,
+                    stage_bwd_sum[s] / stage_calls.max(1) as f64,
+                )
+            })
+            .collect();
+
+        Ok(PipelineResult {
+            timing,
+            pipeline_eval,
+            full_eval,
+            train_loss,
+            train_acc,
+            val_acc,
+            retention,
+            stage_means,
+            params,
+        })
+    }
+
+    /// Masked training accuracy over the pipeline's per-chunk log-probs.
+    fn pipeline_train_acc(
+        &self,
+        logp: &[(Vec<u32>, Vec<f32>)],
+        train_mask: &[f32],
+    ) -> f64 {
+        let c = self.dataset.profile.classes;
+        let mut correct = 0.0;
+        let mut total = 0.0;
+        for (nodes, rows) in logp {
+            for (i, &v) in nodes.iter().enumerate() {
+                if train_mask[v as usize] <= 0.0 {
+                    continue;
+                }
+                let row = &rows[i * c..(i + 1) * c];
+                let pred = row
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(j, _)| j as i32)
+                    .unwrap();
+                total += 1.0;
+                if pred == self.dataset.labels[v as usize] {
+                    correct += 1.0;
+                }
+            }
+        }
+        if total == 0.0 {
+            0.0
+        } else {
+            correct / total
+        }
+    }
+}
+
+fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}

@@ -1,0 +1,365 @@
+//! The fill-drain execution engine: stage workers on OS threads,
+//! micro-batches streaming through channels.
+//!
+//! Worker `s` owns the compiled executables of pipeline stage `s`
+//! (fwd + rematerialising bwd) and processes micro-batches FIFO: the
+//! forward wave runs 0→1→2→3 with stage `s` starting micro-batch `m`
+//! as soon as `(m, s-1)` hands over — the GPipe overlap — then the
+//! backward wave drains 3→2→1→0, accumulating parameter gradients
+//! locally at the parameter-owning stages (0 and 2).
+//!
+//! Everything crossing a stage boundary is a `HostTensor` copy; on the
+//! paper's DGX those copies are the NVLink/PCIe transfers, and the
+//! device simulator prices them from the same shapes.
+
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::runtime::{Engine, Executable, HostTensor};
+
+use super::chunkprep::Microbatch;
+
+/// Per-stage wall-clock accounting for one epoch.
+#[derive(Debug, Clone, Default)]
+pub struct StageTiming {
+    /// Seconds inside the fwd executable, per micro-batch.
+    pub fwd_s: Vec<f64>,
+    /// Seconds inside the bwd executable(s), per micro-batch.
+    pub bwd_s: Vec<f64>,
+    /// Total busy seconds (fwd + bwd + local bookkeeping).
+    pub busy_s: f64,
+}
+
+/// Result of one pipeline epoch (one optimiser step's worth of work).
+#[derive(Debug)]
+pub struct EpochOutput {
+    /// Sum of masked NLL over all micro-batches.
+    pub loss_sum: f64,
+    /// Total mask count (normalisation for loss and grads).
+    pub mask_count: f64,
+    /// Gradients w.r.t. the loss SUM, in manifest param order.
+    pub grads: Vec<HostTensor>,
+    /// Per micro-batch: (original node ids, row-major log-probs).
+    pub logp: Vec<(Vec<u32>, Vec<f32>)>,
+    pub stage_timings: Vec<StageTiming>,
+    pub wall_s: f64,
+}
+
+struct StageExecs {
+    s0_fwd: Arc<Executable>,
+    s1_fwd: Arc<Executable>,
+    s2_fwd: Arc<Executable>,
+    s3_fwd: Arc<Executable>,
+    s3loss_bwd: Arc<Executable>,
+    s2_bwd: Arc<Executable>,
+    s1_bwd: Arc<Executable>,
+    s0_bwd: Arc<Executable>,
+}
+
+/// A compiled pipeline for one (dataset, backend, chunk-count) triple.
+pub struct PipelineEngine {
+    execs: StageExecs,
+    pub chunks: usize,
+    pub backend: String,
+    pub artifact_names: Vec<String>,
+}
+
+impl PipelineEngine {
+    pub fn new(
+        engine: &Engine,
+        dataset: &str,
+        backend: &str,
+        chunks: usize,
+    ) -> Result<PipelineEngine> {
+        let name = |kind: &str| format!("{dataset}_{backend}_c{chunks}_{kind}");
+        let kinds = [
+            "s0_fwd", "s1_fwd", "s2_fwd", "s3_fwd", "s3loss_bwd", "s2_bwd",
+            "s1_bwd", "s0_bwd",
+        ];
+        let artifact_names: Vec<String> = kinds.iter().map(|k| name(k)).collect();
+        let get = |kind: &str| engine.executable(&name(kind));
+        Ok(PipelineEngine {
+            execs: StageExecs {
+                s0_fwd: get("s0_fwd")?,
+                s1_fwd: get("s1_fwd")?,
+                s2_fwd: get("s2_fwd")?,
+                s3_fwd: get("s3_fwd")?,
+                s3loss_bwd: get("s3loss_bwd")?,
+                s2_bwd: get("s2_bwd")?,
+                s1_bwd: get("s1_bwd")?,
+                s0_bwd: get("s0_bwd")?,
+            },
+            chunks,
+            backend: backend.to_string(),
+            artifact_names,
+        })
+    }
+
+    /// Run one synchronous fill-drain pipeline step over the prepared
+    /// micro-batches.
+    ///
+    /// `params` is the full flat parameter vector in manifest order
+    /// (stage 0 takes [0..4], stage 2 takes [4..8]). `key` seeds the
+    /// per-micro-batch dropout keys: micro-batch m uses
+    /// (key.0 + m, key.1), so chunks=1 reproduces the monolithic
+    /// train_step bit-for-bit (integration_pipeline.rs asserts this).
+    pub fn run_epoch(
+        &self,
+        params: &[HostTensor],
+        microbatches: &[Microbatch],
+        key: (u32, u32),
+    ) -> Result<EpochOutput> {
+        anyhow::ensure!(params.len() == 8, "expected 8 flat params");
+        let p1: Vec<HostTensor> = params[0..4].to_vec();
+        let p2: Vec<HostTensor> = params[4..8].to_vec();
+        let m_count = microbatches.len();
+        anyhow::ensure!(m_count >= 1, "no micro-batches");
+        let mbs: Arc<Vec<Microbatch>> = Arc::new(microbatches.to_vec());
+        let keys: Vec<HostTensor> = (0..m_count)
+            .map(|m| HostTensor::key(key.0.wrapping_add(m as u32), key.1))
+            .collect();
+
+        let wall = Instant::now();
+
+        // Channels between adjacent stages (fwd ->, bwd <-).
+        let (f01_tx, f01_rx) = mpsc::channel::<(usize, HostTensor)>();
+        let (f12_tx, f12_rx) = mpsc::channel::<(usize, HostTensor)>();
+        let (f23_tx, f23_rx) = mpsc::channel::<(usize, HostTensor)>();
+        let (b32_tx, b32_rx) = mpsc::channel::<(usize, HostTensor)>();
+        let (b21_tx, b21_rx) = mpsc::channel::<(usize, HostTensor)>();
+        let (b10_tx, b10_rx) = mpsc::channel::<(usize, HostTensor)>();
+
+        let e = &self.execs;
+        let keys = Arc::new(keys);
+
+        let result: Result<EpochOutput> = std::thread::scope(|scope| {
+            // ---- worker 0: [Dropout, GAT1] --------------------------------
+            let w0 = {
+                let mbs = mbs.clone();
+                let keys = keys.clone();
+                let p1 = p1.clone();
+                let (s0f, s0b) = (e.s0_fwd.clone(), e.s0_bwd.clone());
+                scope.spawn(move || -> Result<(Vec<HostTensor>, StageTiming)> {
+                    let mut t = StageTiming::default();
+                    let busy = Instant::now();
+                    for (m, mb) in mbs.iter().enumerate() {
+                        let mut inp = p1.clone();
+                        inp.push(mb.x.clone());
+                        inp.extend(mb.graph.iter().cloned());
+                        inp.push(keys[m].clone());
+                        let t0 = Instant::now();
+                        let out = s0f.run(&inp).context("s0_fwd")?;
+                        t.fwd_s.push(t0.elapsed().as_secs_f64());
+                        f01_tx.send((m, out.into_iter().next().unwrap())).ok();
+                    }
+                    // gradient accumulators for stage-0 params
+                    let mut acc: Vec<HostTensor> =
+                        p1.iter().map(|p| HostTensor::zeros_f32(p.shape().to_vec())).collect();
+                    for _ in 0..mbs.len() {
+                        let (m, dh0) = b10_rx.recv().context("b10 closed")?;
+                        let mb = &mbs[m];
+                        let mut inp = p1.clone();
+                        inp.push(mb.x.clone());
+                        inp.extend(mb.graph.iter().cloned());
+                        inp.push(keys[m].clone());
+                        inp.push(dh0);
+                        let t0 = Instant::now();
+                        let dps = s0b.run(&inp).context("s0_bwd")?;
+                        t.bwd_s.push(t0.elapsed().as_secs_f64());
+                        accumulate(&mut acc, &dps)?;
+                    }
+                    t.busy_s = busy.elapsed().as_secs_f64();
+                    Ok((acc, t))
+                })
+            };
+
+            // ---- worker 1: [ELU, Dropout] ---------------------------------
+            let w1 = {
+                let keys = keys.clone();
+                let m_total = m_count;
+                let (s1f, s1b) = (e.s1_fwd.clone(), e.s1_bwd.clone());
+                scope.spawn(move || -> Result<StageTiming> {
+                    let mut t = StageTiming::default();
+                    let busy = Instant::now();
+                    let mut stash: Vec<Option<HostTensor>> = vec![None; m_total];
+                    for _ in 0..m_total {
+                        let (m, h0) = f01_rx.recv().context("f01 closed")?;
+                        let t0 = Instant::now();
+                        let out = s1f.run(&[h0.clone(), keys[m].clone()]).context("s1_fwd")?;
+                        t.fwd_s.push(t0.elapsed().as_secs_f64());
+                        stash[m] = Some(h0);
+                        f12_tx.send((m, out.into_iter().next().unwrap())).ok();
+                    }
+                    for _ in 0..m_total {
+                        let (m, dh1) = b21_rx.recv().context("b21 closed")?;
+                        let h0 = stash[m].take().context("missing stash")?;
+                        let t0 = Instant::now();
+                        let out = s1b.run(&[h0, keys[m].clone(), dh1]).context("s1_bwd")?;
+                        t.bwd_s.push(t0.elapsed().as_secs_f64());
+                        b10_tx.send((m, out.into_iter().next().unwrap())).ok();
+                    }
+                    t.busy_s = busy.elapsed().as_secs_f64();
+                    Ok(t)
+                })
+            };
+
+            // ---- worker 2: [GAT2] -----------------------------------------
+            let w2 = {
+                let mbs = mbs.clone();
+                let keys = keys.clone();
+                let p2 = p2.clone();
+                let (s2f, s2b) = (e.s2_fwd.clone(), e.s2_bwd.clone());
+                scope.spawn(move || -> Result<(Vec<HostTensor>, StageTiming)> {
+                    let mut t = StageTiming::default();
+                    let busy = Instant::now();
+                    let mut stash: Vec<Option<HostTensor>> = vec![None; mbs.len()];
+                    for _ in 0..mbs.len() {
+                        let (m, h1) = f12_rx.recv().context("f12 closed")?;
+                        let mb = &mbs[m];
+                        let mut inp = p2.clone();
+                        inp.push(h1.clone());
+                        inp.extend(mb.graph.iter().cloned());
+                        inp.push(keys[m].clone());
+                        let t0 = Instant::now();
+                        let out = s2f.run(&inp).context("s2_fwd")?;
+                        t.fwd_s.push(t0.elapsed().as_secs_f64());
+                        stash[m] = Some(h1);
+                        f23_tx.send((m, out.into_iter().next().unwrap())).ok();
+                    }
+                    let mut acc: Vec<HostTensor> =
+                        p2.iter().map(|p| HostTensor::zeros_f32(p.shape().to_vec())).collect();
+                    for _ in 0..mbs.len() {
+                        let (m, dlg) = b32_rx.recv().context("b32 closed")?;
+                        let mb = &mbs[m];
+                        let h1 = stash[m].take().context("missing stash")?;
+                        let mut inp = p2.clone();
+                        inp.push(h1);
+                        inp.extend(mb.graph.iter().cloned());
+                        inp.push(keys[m].clone());
+                        inp.push(dlg);
+                        let t0 = Instant::now();
+                        let mut out = s2b.run(&inp).context("s2_bwd")?;
+                        t.bwd_s.push(t0.elapsed().as_secs_f64());
+                        let dh1 = out.pop().context("s2_bwd outputs")?;
+                        accumulate(&mut acc, &out)?;
+                        b21_tx.send((m, dh1)).ok();
+                    }
+                    t.busy_s = busy.elapsed().as_secs_f64();
+                    Ok((acc, t))
+                })
+            };
+
+            // ---- worker 3: [LogSoftmax + loss] ----------------------------
+            let w3 = {
+                let mbs = mbs.clone();
+                let (s3f, s3b) = (e.s3_fwd.clone(), e.s3loss_bwd.clone());
+                scope.spawn(move || -> Result<(f64, f64, Vec<(Vec<u32>, Vec<f32>)>, StageTiming)> {
+                    let mut t = StageTiming::default();
+                    let busy = Instant::now();
+                    let mut loss_sum = 0.0f64;
+                    let mut mask_count = 0.0f64;
+                    let mut logps: Vec<(Vec<u32>, Vec<f32>)> =
+                        vec![Default::default(); mbs.len()];
+                    for _ in 0..mbs.len() {
+                        let (m, lg) = f23_rx.recv().context("f23 closed")?;
+                        let mb = &mbs[m];
+                        let t0 = Instant::now();
+                        let logp = s3f.run(&[lg.clone()]).context("s3_fwd")?;
+                        t.fwd_s.push(t0.elapsed().as_secs_f64());
+                        logps[m] =
+                            (mb.nodes.clone(), logp[0].as_f32()?.to_vec());
+                        // loss + dlogits (fused LogSoftmax+NLL backward)
+                        let t1 = Instant::now();
+                        let out = s3b
+                            .run(&[lg, mb.labels.clone(), mb.mask.clone()])
+                            .context("s3loss_bwd")?;
+                        t.bwd_s.push(t1.elapsed().as_secs_f64());
+                        loss_sum += out[0].scalar_value()? as f64;
+                        mask_count += out[1].scalar_value()? as f64;
+                        b32_tx.send((m, out[2].clone())).ok();
+                    }
+                    t.busy_s = busy.elapsed().as_secs_f64();
+                    Ok((loss_sum, mask_count, logps, t))
+                })
+            };
+
+            // Join everything, then report the most informative error: a
+            // failing stage tears its channels down, so peers see "closed"
+            // — the real failure is the one that does NOT mention a channel.
+            let r0 = w0.join().expect("worker 0 panicked");
+            let r1 = w1.join().expect("worker 1 panicked");
+            let r2 = w2.join().expect("worker 2 panicked");
+            let r3 = w3.join().expect("worker 3 panicked");
+            let errs: Vec<String> = [
+                r0.as_ref().err().map(|e| format!("{e:#}")),
+                r1.as_ref().err().map(|e| format!("{e:#}")),
+                r2.as_ref().err().map(|e| format!("{e:#}")),
+                r3.as_ref().err().map(|e| format!("{e:#}")),
+            ]
+            .into_iter()
+            .flatten()
+            .collect();
+            if !errs.is_empty() {
+                let root = errs
+                    .iter()
+                    .find(|e| !e.contains("closed"))
+                    .unwrap_or(&errs[0]);
+                anyhow::bail!("pipeline stage failed: {root}");
+            }
+            let (acc1, t0s) = r0.unwrap();
+            let t1s = r1.unwrap();
+            let (acc2, t2s) = r2.unwrap();
+            let (loss_sum, mask_count, logp, t3s) = r3.unwrap();
+
+            let mut grads = acc1;
+            grads.extend(acc2);
+            Ok(EpochOutput {
+                loss_sum,
+                mask_count,
+                grads,
+                logp,
+                stage_timings: vec![t0s, t1s, t2s, t3s],
+                wall_s: wall.elapsed().as_secs_f64(),
+            })
+        });
+        result
+    }
+}
+
+/// acc += delta, elementwise, over parallel tensor lists.
+fn accumulate(acc: &mut [HostTensor], delta: &[HostTensor]) -> Result<()> {
+    anyhow::ensure!(acc.len() == delta.len(), "grad arity mismatch");
+    for (a, d) in acc.iter_mut().zip(delta) {
+        let d = d.as_f32()?;
+        let a = a.as_f32_mut()?;
+        anyhow::ensure!(a.len() == d.len(), "grad size mismatch");
+        for (x, y) in a.iter_mut().zip(d) {
+            *x += y;
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulate_sums() {
+        let mut acc = vec![HostTensor::zeros_f32(vec![3])];
+        let d = vec![HostTensor::f32(vec![3], vec![1.0, 2.0, 3.0])];
+        accumulate(&mut acc, &d).unwrap();
+        accumulate(&mut acc, &d).unwrap();
+        assert_eq!(acc[0].as_f32().unwrap(), &[2.0, 4.0, 6.0]);
+    }
+
+    #[test]
+    fn accumulate_rejects_mismatch() {
+        let mut acc = vec![HostTensor::zeros_f32(vec![3])];
+        let d = vec![HostTensor::zeros_f32(vec![4])];
+        assert!(accumulate(&mut acc, &d).is_err());
+    }
+}

@@ -1,0 +1,30 @@
+//! The GPipe pipeline engine: the paper's coordination contribution.
+//!
+//! The six-module GAT sequence is balanced over `devices` stage workers
+//! ([2,1,2,1] — paper Listing 1); each worker is an OS thread owning its
+//! stage's compiled executables. One training step:
+//!
+//! 1. **Chunk** — split the node tensor into `chunks` micro-batches
+//!    (torchgpipe semantics via a [`Chunker`]), and for each chunk
+//!    **re-build** the induced sub-graph on the host — the paper's §7.2
+//!    overhead, timed separately.
+//! 2. **Fill-drain schedule** — micro-batches flow forward through the
+//!    stage workers over channels (worker s starts micro-batch m as soon
+//!    as (m, s-1) arrived — the pipeline overlap), then the backward
+//!    wave runs in reverse with *rematerialising* stage backwards
+//!    (GPipe checkpointing: only stage inputs are stashed).
+//! 3. **Accumulate** — per-stage parameter gradients sum over
+//!    micro-batches; the coordinator normalises by the total mask count
+//!    and applies one Adam step — bitwise the same update a monolithic
+//!    step would make when chunking loses no edges (the GPipe gradient-
+//!    equivalence invariant; see `rust/tests/integration_pipeline.rs`).
+//!
+//! [`Chunker`]: crate::batching::Chunker
+
+mod chunkprep;
+mod engine;
+mod driver;
+
+pub use chunkprep::{lossy_union_graph, prepare_microbatches, Microbatch};
+pub use engine::{EpochOutput, PipelineEngine, StageTiming};
+pub use driver::{PipelineTrainer, PipelineResult};

@@ -1,0 +1,159 @@
+//! The PJRT engine: compile-once, execute-many, manifest-validated.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use super::manifest::{ArtifactMeta, Manifest};
+use super::tensor::HostTensor;
+
+/// A compiled artifact bound to its manifest signature.
+///
+/// # Thread safety
+/// `xla::PjRtLoadedExecutable` wraps a raw pointer without `Send`/`Sync`
+/// auto-impls, but the underlying object is the xla_extension TFRT CPU
+/// executable, which supports concurrent `Execute` calls (it is the same
+/// object JAX shares across Python threads). We assert that property
+/// here; every pipeline-stage worker thread executes through an `Arc`
+/// to the same immutable executable.
+pub struct Executable {
+    pub meta: ArtifactMeta,
+    exe: xla::PjRtLoadedExecutable,
+    /// Client handle for explicit input-buffer creation. The crate's
+    /// `execute(&[Literal])` path leaks its internally-created input
+    /// buffers (~input-size bytes per call, measured; see
+    /// EXPERIMENTS.md §Perf L3); we therefore upload inputs ourselves
+    /// via `buffer_from_host_buffer` (whose `PjRtBuffer` has a correct
+    /// Drop) and call `execute_b`.
+    client: xla::PjRtClient,
+    /// Cumulative execute() wall-clock, for the coordinator-overhead
+    /// accounting in EXPERIMENTS.md §Perf.
+    exec_nanos: Mutex<u128>,
+    exec_count: Mutex<u64>,
+}
+
+unsafe impl Send for Executable {}
+unsafe impl Sync for Executable {}
+
+impl Executable {
+    /// Execute with positional inputs, validating against the manifest.
+    pub fn run(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        anyhow::ensure!(
+            inputs.len() == self.meta.inputs.len(),
+            "{}: got {} inputs, manifest wants {}",
+            self.meta.name,
+            inputs.len(),
+            self.meta.inputs.len()
+        );
+        for (t, m) in inputs.iter().zip(&self.meta.inputs) {
+            t.check(m)
+                .with_context(|| format!("artifact {}", self.meta.name))?;
+        }
+        let t0 = Instant::now();
+        let buffers: Vec<xla::PjRtBuffer> = inputs
+            .iter()
+            .map(|t| t.to_device_buffer(&self.client))
+            .collect::<Result<_>>()?;
+        let bufs = self.exe.execute_b::<xla::PjRtBuffer>(&buffers)?;
+        let result = bufs[0][0].to_literal_sync()?;
+        let dt = t0.elapsed().as_nanos();
+        *self.exec_nanos.lock().unwrap() += dt;
+        *self.exec_count.lock().unwrap() += 1;
+
+        // aot.py lowers with return_tuple=True: always a tuple literal.
+        let parts = result.to_tuple()?;
+        anyhow::ensure!(
+            parts.len() == self.meta.outputs.len(),
+            "{}: got {} outputs, manifest says {}",
+            self.meta.name,
+            parts.len(),
+            self.meta.outputs.len()
+        );
+        parts
+            .iter()
+            .zip(&self.meta.outputs)
+            .map(|(lit, m)| HostTensor::from_literal(lit, m))
+            .collect()
+    }
+
+    /// (total seconds spent in execute, number of calls).
+    pub fn exec_stats(&self) -> (f64, u64) {
+        (
+            *self.exec_nanos.lock().unwrap() as f64 / 1e9,
+            *self.exec_count.lock().unwrap(),
+        )
+    }
+}
+
+/// Compile-once executable cache over one PJRT CPU client.
+pub struct Engine {
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    cache: Mutex<HashMap<String, Arc<Executable>>>,
+}
+
+// Safety: the PJRT CPU client is thread-safe (see Executable).
+unsafe impl Send for Engine {}
+unsafe impl Sync for Engine {}
+
+impl Engine {
+    pub fn new(manifest: Manifest) -> Result<Engine> {
+        let client = xla::PjRtClient::cpu()?;
+        log::info!(
+            "PJRT client: platform={} devices={}",
+            client.platform_name(),
+            client.device_count()
+        );
+        Ok(Engine { manifest, client, cache: Mutex::new(HashMap::new()) })
+    }
+
+    pub fn from_artifacts_dir(dir: &std::path::Path) -> Result<Engine> {
+        Engine::new(Manifest::load(dir)?)
+    }
+
+    /// Load + compile an artifact (cached). Compilation happens once per
+    /// process; the paper's "first epoch" setup cost is measured here.
+    pub fn executable(&self, name: &str) -> Result<Arc<Executable>> {
+        if let Some(e) = self.cache.lock().unwrap().get(name) {
+            return Ok(e.clone());
+        }
+        let meta = self.manifest.artifact(name)?.clone();
+        let path = self.manifest.hlo_path(&meta);
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        log::info!("compiled {name} in {:.2?}", t0.elapsed());
+        let exec = Arc::new(Executable {
+            meta,
+            exe,
+            client: self.client.clone(),
+            exec_nanos: Mutex::new(0),
+            exec_count: Mutex::new(0),
+        });
+        self.cache.lock().unwrap().insert(name.to_string(), exec.clone());
+        Ok(exec)
+    }
+
+    /// Drop all cached compiled executables. Long bench sessions compile
+    /// dozens of large CPU programs (one per dataset x backend x chunk
+    /// config x stage); purging between experiments keeps multi-hour
+    /// sessions inside RAM. In-flight `Arc<Executable>`s stay valid.
+    pub fn clear_cache(&self) {
+        self.cache.lock().unwrap().clear();
+    }
+
+    /// Pre-compile a set of artifacts (pipeline warm-up), returning the
+    /// total compile wall-clock — the paper's Table 2 "Epoch 1" term.
+    pub fn warm_up(&self, names: &[String]) -> Result<f64> {
+        let t0 = Instant::now();
+        for n in names {
+            self.executable(n)?;
+        }
+        Ok(t0.elapsed().as_secs_f64())
+    }
+}

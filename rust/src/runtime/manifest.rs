@@ -1,0 +1,217 @@
+//! The runtime contract: typed view of `artifacts/manifest.json`.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    S32,
+    U32,
+}
+
+impl Dtype {
+    pub fn parse(s: &str) -> Result<Dtype> {
+        match s {
+            "f32" => Ok(Dtype::F32),
+            "s32" => Ok(Dtype::S32),
+            "u32" => Ok(Dtype::U32),
+            other => anyhow::bail!("unknown dtype {other:?}"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Dtype::F32 => "f32",
+            Dtype::S32 => "s32",
+            Dtype::U32 => "u32",
+        }
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorMeta {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+impl TensorMeta {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: String,
+    pub dataset: Option<String>,
+    pub backend: Option<String>,
+    pub chunks: Option<usize>,
+    pub kind: String,
+    pub inputs: Vec<TensorMeta>,
+    pub outputs: Vec<TensorMeta>,
+    pub flops: Option<f64>,
+    pub bytes_accessed: Option<f64>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub param_order: Vec<String>,
+    pub stage_params: BTreeMap<usize, Vec<String>>,
+    pub balance: Vec<usize>,
+    pub devices: usize,
+    pub artifacts: BTreeMap<String, ArtifactMeta>,
+}
+
+fn tensor_meta(j: &Json, idx: usize) -> Result<TensorMeta> {
+    let shape = j
+        .req("shape")?
+        .as_arr()
+        .context("shape must be an array")?
+        .iter()
+        .filter_map(Json::as_usize)
+        .collect();
+    Ok(TensorMeta {
+        name: j
+            .get("name")
+            .and_then(Json::as_str)
+            .map(String::from)
+            .unwrap_or_else(|| format!("out{idx}")),
+        shape,
+        dtype: Dtype::parse(j.s("dtype")?)?,
+    })
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).with_context(|| {
+            format!(
+                "reading {} — run `make artifacts` first",
+                path.display()
+            )
+        })?;
+        let j = Json::parse(&text).context("parsing manifest.json")?;
+
+        let param_order = j
+            .req("param_order")?
+            .as_arr()
+            .context("param_order")?
+            .iter()
+            .filter_map(|v| v.as_str().map(String::from))
+            .collect();
+
+        let mut stage_params = BTreeMap::new();
+        for (k, v) in j.req("stage_params")?.as_obj().context("stage_params")? {
+            let stage: usize = k.parse().context("stage id")?;
+            let names = v
+                .as_arr()
+                .context("stage params")?
+                .iter()
+                .filter_map(|s| s.as_str().map(String::from))
+                .collect();
+            stage_params.insert(stage, names);
+        }
+
+        let pipe = j.req("pipeline")?;
+        let balance = pipe
+            .req("balance")?
+            .as_arr()
+            .context("balance")?
+            .iter()
+            .filter_map(Json::as_usize)
+            .collect();
+
+        let mut artifacts = BTreeMap::new();
+        for a in j.req("artifacts")?.as_arr().context("artifacts")? {
+            let inputs = a
+                .req("inputs")?
+                .as_arr()
+                .context("inputs")?
+                .iter()
+                .enumerate()
+                .map(|(i, t)| tensor_meta(t, i))
+                .collect::<Result<Vec<_>>>()?;
+            let outputs = a
+                .req("outputs")?
+                .as_arr()
+                .context("outputs")?
+                .iter()
+                .enumerate()
+                .map(|(i, t)| tensor_meta(t, i))
+                .collect::<Result<Vec<_>>>()?;
+            let meta = ArtifactMeta {
+                name: a.s("name")?.to_string(),
+                file: a.s("file")?.to_string(),
+                dataset: a.get("dataset").and_then(Json::as_str).map(String::from),
+                backend: a.get("backend").and_then(Json::as_str).map(String::from),
+                chunks: a.get("chunks").and_then(Json::as_usize),
+                kind: a.s("kind")?.to_string(),
+                inputs,
+                outputs,
+                flops: a.get("flops").and_then(Json::as_f64),
+                bytes_accessed: a.get("bytes_accessed").and_then(Json::as_f64),
+            };
+            artifacts.insert(meta.name.clone(), meta);
+        }
+
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            param_order,
+            stage_params,
+            balance,
+            devices: pipe.u("devices")?,
+            artifacts,
+        })
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactMeta> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("artifact {name:?} not in manifest"))
+    }
+
+    pub fn hlo_path(&self, meta: &ArtifactMeta) -> PathBuf {
+        self.dir.join(&meta.file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dtype_parse() {
+        assert_eq!(Dtype::parse("f32").unwrap(), Dtype::F32);
+        assert!(Dtype::parse("f64").is_err());
+    }
+
+    #[test]
+    fn loads_real_manifest_if_present() {
+        // Soft test: artifacts/ may not exist in a fresh checkout; the
+        // integration tests require it, unit tests only exercise it
+        // opportunistically.
+        let root = crate::config::repo_root().unwrap();
+        let dir = root.join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.param_order.len(), 8);
+        assert!(m.artifacts.len() >= 12);
+        let ts = m.artifact("pubmed_ell_train_step").unwrap();
+        assert_eq!(ts.kind, "train_step");
+        // inputs = 8 params + x + ell_idx + ell_mask + labels + mask + key
+        assert_eq!(ts.inputs.len(), 14);
+        // outputs = loss + 8 grads
+        assert_eq!(ts.outputs.len(), 9);
+        assert!(ts.flops.unwrap_or(0.0) > 1e8);
+    }
+}

@@ -1,0 +1,17 @@
+//! PJRT runtime: load AOT HLO-text artifacts and execute them.
+//!
+//! Wraps the `xla` crate (`PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `compile` → `execute`) behind a
+//! manifest-driven [`Engine`]: every executable knows its positional
+//! input signature (names/shapes/dtypes from `artifacts/manifest.json`)
+//! and validates tensors before they reach the device, so a config/
+//! artifact drift fails loudly at the boundary instead of deep inside
+//! XLA.
+
+mod engine;
+mod manifest;
+mod tensor;
+
+pub use engine::{Engine, Executable};
+pub use manifest::{ArtifactMeta, Dtype, Manifest, TensorMeta};
+pub use tensor::HostTensor;

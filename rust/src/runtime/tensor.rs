@@ -1,0 +1,214 @@
+//! Host-side tensors: the Send-able currency of the coordinator.
+//!
+//! PJRT `Literal`s wrap raw C pointers and are not `Send`; activations
+//! crossing pipeline-stage threads travel as `HostTensor`s instead (one
+//! copy per stage boundary — which is also exactly the device-to-device
+//! transfer the paper's DGX pays, so the cost model charges it there).
+
+use anyhow::Result;
+
+use super::manifest::{Dtype, TensorMeta};
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum HostTensor {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    S32 { shape: Vec<usize>, data: Vec<i32> },
+    U32 { shape: Vec<usize>, data: Vec<u32> },
+}
+
+impl HostTensor {
+    pub fn f32(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        debug_assert_eq!(shape.iter().product::<usize>(), data.len());
+        HostTensor::F32 { shape, data }
+    }
+
+    pub fn s32(shape: Vec<usize>, data: Vec<i32>) -> Self {
+        debug_assert_eq!(shape.iter().product::<usize>(), data.len());
+        HostTensor::S32 { shape, data }
+    }
+
+    pub fn u32(shape: Vec<usize>, data: Vec<u32>) -> Self {
+        debug_assert_eq!(shape.iter().product::<usize>(), data.len());
+        HostTensor::U32 { shape, data }
+    }
+
+    pub fn zeros_f32(shape: Vec<usize>) -> Self {
+        let n = shape.iter().product();
+        HostTensor::F32 { shape, data: vec![0.0; n] }
+    }
+
+    pub fn scalar_f32(v: f32) -> Self {
+        HostTensor::F32 { shape: vec![], data: vec![v] }
+    }
+
+    /// RNG key tensor: uint32[2], the model's only stochastic input.
+    pub fn key(a: u32, b: u32) -> Self {
+        HostTensor::U32 { shape: vec![2], data: vec![a, b] }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            HostTensor::F32 { shape, .. }
+            | HostTensor::S32 { shape, .. }
+            | HostTensor::U32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn dtype(&self) -> Dtype {
+        match self {
+            HostTensor::F32 { .. } => Dtype::F32,
+            HostTensor::S32 { .. } => Dtype::S32,
+            HostTensor::U32 { .. } => Dtype::U32,
+        }
+    }
+
+    pub fn elements(&self) -> usize {
+        self.shape().iter().product()
+    }
+
+    pub fn byte_len(&self) -> usize {
+        4 * self.elements()
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            HostTensor::F32 { data, .. } => Ok(data),
+            other => anyhow::bail!("expected f32 tensor, got {:?}", other.dtype().name()),
+        }
+    }
+
+    pub fn as_f32_mut(&mut self) -> Result<&mut Vec<f32>> {
+        match self {
+            HostTensor::F32 { data, .. } => Ok(data),
+            other => anyhow::bail!("expected f32 tensor, got {:?}", other.dtype().name()),
+        }
+    }
+
+    pub fn as_s32(&self) -> Result<&[i32]> {
+        match self {
+            HostTensor::S32 { data, .. } => Ok(data),
+            other => anyhow::bail!("expected s32 tensor, got {:?}", other.dtype().name()),
+        }
+    }
+
+    pub fn scalar_value(&self) -> Result<f32> {
+        let d = self.as_f32()?;
+        anyhow::ensure!(d.len() == 1, "not a scalar: shape {:?}", self.shape());
+        Ok(d[0])
+    }
+
+    /// Validate against a manifest signature entry.
+    pub fn check(&self, meta: &TensorMeta) -> Result<()> {
+        anyhow::ensure!(
+            self.dtype() == meta.dtype,
+            "input {:?}: dtype {} != manifest {}",
+            meta.name,
+            self.dtype().name(),
+            meta.dtype.name()
+        );
+        anyhow::ensure!(
+            self.shape() == meta.shape.as_slice(),
+            "input {:?}: shape {:?} != manifest {:?}",
+            meta.name,
+            self.shape(),
+            meta.shape
+        );
+        Ok(())
+    }
+
+    // --- Device bridge ----------------------------------------------------
+
+    /// Upload directly to a device buffer (bypasses `Literal` — see the
+    /// leak note on `runtime::Executable::client`).
+    pub fn to_device_buffer(&self, client: &xla::PjRtClient) -> Result<xla::PjRtBuffer> {
+        let buf = match self {
+            HostTensor::F32 { shape, data } => {
+                client.buffer_from_host_buffer(data, shape, None)?
+            }
+            HostTensor::S32 { shape, data } => {
+                client.buffer_from_host_buffer(data, shape, None)?
+            }
+            HostTensor::U32 { shape, data } => {
+                client.buffer_from_host_buffer(data, shape, None)?
+            }
+        };
+        Ok(buf)
+    }
+
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
+        let lit = match self {
+            HostTensor::F32 { data, .. } => xla::Literal::vec1(data),
+            HostTensor::S32 { data, .. } => xla::Literal::vec1(data),
+            HostTensor::U32 { data, .. } => xla::Literal::vec1(data),
+        };
+        Ok(lit.reshape(&dims)?)
+    }
+
+    pub fn from_literal(lit: &xla::Literal, meta: &TensorMeta) -> Result<HostTensor> {
+        let t = match meta.dtype {
+            Dtype::F32 => HostTensor::F32 {
+                shape: meta.shape.clone(),
+                data: lit.to_vec::<f32>()?,
+            },
+            Dtype::S32 => HostTensor::S32 {
+                shape: meta.shape.clone(),
+                data: lit.to_vec::<i32>()?,
+            },
+            Dtype::U32 => HostTensor::U32 {
+                shape: meta.shape.clone(),
+                data: lit.to_vec::<u32>()?,
+            },
+        };
+        anyhow::ensure!(
+            t.elements() == lit.element_count(),
+            "literal element count {} != manifest shape {:?}",
+            lit.element_count(),
+            meta.shape
+        );
+        Ok(t)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_dtype_accessors() {
+        let t = HostTensor::f32(vec![2, 3], vec![0.0; 6]);
+        assert_eq!(t.shape(), &[2, 3]);
+        assert_eq!(t.elements(), 6);
+        assert_eq!(t.byte_len(), 24);
+        assert_eq!(t.dtype(), Dtype::F32);
+        assert!(t.as_f32().is_ok());
+        assert!(t.as_s32().is_err());
+    }
+
+    #[test]
+    fn check_against_meta() {
+        let t = HostTensor::s32(vec![4], vec![1, 2, 3, 4]);
+        let good = TensorMeta { name: "labels".into(), shape: vec![4], dtype: Dtype::S32 };
+        let bad_shape = TensorMeta { name: "labels".into(), shape: vec![5], dtype: Dtype::S32 };
+        let bad_dtype = TensorMeta { name: "labels".into(), shape: vec![4], dtype: Dtype::F32 };
+        assert!(t.check(&good).is_ok());
+        assert!(t.check(&bad_shape).is_err());
+        assert!(t.check(&bad_dtype).is_err());
+    }
+
+    #[test]
+    fn literal_roundtrip() {
+        let t = HostTensor::f32(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let lit = t.to_literal().unwrap();
+        let meta = TensorMeta { name: "x".into(), shape: vec![2, 2], dtype: Dtype::F32 };
+        let back = HostTensor::from_literal(&lit, &meta).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn key_tensor() {
+        let k = HostTensor::key(7, 9);
+        assert_eq!(k.shape(), &[2]);
+        assert_eq!(k.dtype(), Dtype::U32);
+    }
+}

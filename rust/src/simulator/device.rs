@@ -1,0 +1,149 @@
+//! Device and interconnect models with rooflines from public spec sheets.
+
+/// A compute device: peak f32 throughput + memory bandwidth roofline.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DeviceModel {
+    pub name: &'static str,
+    /// Peak f32 GFLOP/s (not tensor-core — the GAT runs f32 torch ops).
+    pub peak_gflops: f64,
+    /// Memory bandwidth, GB/s.
+    pub mem_bw_gbs: f64,
+    /// Fixed per-kernel-launch / per-step overhead, seconds.
+    pub launch_overhead_s: f64,
+}
+
+/// An interconnect link.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LinkModel {
+    pub name: &'static str,
+    pub latency_s: f64,
+    pub bw_gbs: f64,
+}
+
+impl LinkModel {
+    pub fn transfer_time(&self, bytes: f64) -> f64 {
+        self.latency_s + bytes / (self.bw_gbs * 1e9)
+    }
+}
+
+/// The paper's hardware (§6): Intel Xeon @ 2.20 GHz (Colab-class, ~16
+/// effective vector lanes), NVIDIA T4, and the DGX's V100-SXM2 pods.
+pub struct Devices {
+    pub xeon: DeviceModel,
+    pub t4: DeviceModel,
+    pub v100: DeviceModel,
+    pub pcie: LinkModel,
+    pub nvlink: LinkModel,
+}
+
+pub const DEVICES: Devices = Devices {
+    xeon: DeviceModel {
+        name: "Xeon-2.2GHz",
+        // 1 socket, ~8 cores usable in the paper's environment x AVX2 FMA:
+        // 8 * 2.2e9 * 16 = ~280 GFLOP/s peak.
+        peak_gflops: 280.0,
+        mem_bw_gbs: 40.0,
+        launch_overhead_s: 10e-6,
+    },
+    t4: DeviceModel {
+        name: "Tesla-T4",
+        peak_gflops: 8_100.0, // 8.1 TFLOPS f32
+        mem_bw_gbs: 300.0,
+        launch_overhead_s: 25e-6,
+    },
+    v100: DeviceModel {
+        name: "V100-SXM2",
+        peak_gflops: 15_700.0, // 15.7 TFLOPS f32
+        mem_bw_gbs: 900.0,
+        launch_overhead_s: 25e-6,
+    },
+    pcie: LinkModel { name: "PCIe3 x16", latency_s: 15e-6, bw_gbs: 12.0 },
+    nvlink: LinkModel { name: "NVLink2", latency_s: 8e-6, bw_gbs: 50.0 },
+};
+
+/// Achieved-fraction calibration from a real measured run.
+///
+/// XLA-CPU on this GAT reaches only a fraction of the Xeon roofline
+/// (gathers, softmax, scatter — not GEMM-dense). We assume the *same
+/// achieved fraction* on GPU targets: the paper's own measurements (GPU
+/// 80-100x over CPU at PubMed scale, Table 2) are what validate this
+/// transfer, and the bench harness prints measured-vs-projected ratios
+/// so the assumption is auditable.
+#[derive(Debug, Clone, Copy)]
+pub struct Calibration {
+    /// Achieved GFLOP/s on the measuring device.
+    pub achieved_gflops: f64,
+    /// Fraction of that device's roofline actually achieved.
+    pub efficiency: f64,
+}
+
+impl Calibration {
+    /// From a measured execution: `flops` (manifest cost analysis) over
+    /// `measured_s` seconds on `dev`.
+    pub fn from_measurement(flops: f64, measured_s: f64, dev: &DeviceModel) -> Calibration {
+        let achieved = flops / measured_s.max(1e-12) / 1e9;
+        Calibration {
+            achieved_gflops: achieved,
+            efficiency: (achieved / dev.peak_gflops).min(1.0),
+        }
+    }
+}
+
+/// XLA cost analysis reports `bytes accessed` as the sum of every op's
+/// operand+result traffic; on real hardware the overwhelming share of
+/// those accesses hit on-chip caches/registers (fusion, tiling). This
+/// factor converts nominal traffic to an effective-DRAM estimate.  It is
+/// validated by the CPU cross-check: with it, the Xeon roofline's
+/// memory term stays below the *measured* CPU epoch time, as it must.
+pub const CACHE_REUSE_DISCOUNT: f64 = 0.05;
+
+impl DeviceModel {
+    /// Roofline execution-time estimate for one executable on this
+    /// device, given the calibrated achieved-fraction.
+    pub fn exec_time(&self, flops: f64, bytes: f64, cal: &Calibration) -> f64 {
+        let compute_s = flops / (self.peak_gflops * 1e9 * cal.efficiency.max(1e-4));
+        let memory_s = bytes * CACHE_REUSE_DISCOUNT / (self.mem_bw_gbs * 1e9);
+        compute_s.max(memory_s) + self.launch_overhead_s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transfer_time_latency_plus_bandwidth() {
+        let t = DEVICES.pcie.transfer_time(12e9); // 12 GB at 12 GB/s
+        assert!((t - 1.0).abs() < 1e-3);
+        let tiny = DEVICES.nvlink.transfer_time(0.0);
+        assert_eq!(tiny, DEVICES.nvlink.latency_s);
+    }
+
+    #[test]
+    fn calibration_from_measurement() {
+        // 100 GFLOP in 1s on the Xeon = 100 GFLOP/s ~ 36% of roofline.
+        let cal = Calibration::from_measurement(100e9, 1.0, &DEVICES.xeon);
+        assert!((cal.achieved_gflops - 100.0).abs() < 1e-9);
+        assert!((cal.efficiency - 100.0 / 280.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn gpu_projection_is_faster_than_cpu() {
+        let cal = Calibration { achieved_gflops: 50.0, efficiency: 0.2 };
+        let flops = 3.8e9; // ~PubMed train_step
+        let bytes = 0.4e9;
+        let cpu = DEVICES.xeon.exec_time(flops, bytes, &cal);
+        let t4 = DEVICES.t4.exec_time(flops, bytes, &cal);
+        let v100 = DEVICES.v100.exec_time(flops, bytes, &cal);
+        assert!(cpu / t4 > 10.0, "T4 speedup {}", cpu / t4);
+        assert!(t4 > v100);
+    }
+
+    #[test]
+    fn memory_bound_branch() {
+        let cal = Calibration { achieved_gflops: 1.0, efficiency: 1.0 };
+        // Tiny flops, huge bytes: memory roofline must dominate.
+        let t = DEVICES.v100.exec_time(1.0, 900e9 / super::CACHE_REUSE_DISCOUNT, &cal);
+        assert!((t - 1.0).abs() < 0.01);
+    }
+}

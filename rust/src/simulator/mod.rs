@@ -1,0 +1,22 @@
+//! Device & DGX performance simulator — the substitution for the paper's
+//! Xeon / T4 / 4xV100 testbed (DESIGN.md §Substitutions).
+//!
+//! Philosophy: *measure* everything measurable, *project* only the
+//! device speeds. A real CPU run calibrates the achieved fraction of
+//! peak throughput XLA reaches on this workload ([`Calibration`]); GPU
+//! projections apply that same achieved-fraction to the GPU's roofline
+//! ([`DeviceModel::exec_time`]), and the pipeline timeline
+//! ([`pipeline_sim`]) replays the exact fill-drain dependency structure
+//! the real engine executes, with NVLink/PCIe transfer costs and the
+//! paper's per-layer host re-build round trips.
+//!
+//! Reported numbers from this module are always flagged `sim` by the
+//! bench harness.
+
+mod device;
+mod pipeline_sim;
+mod scenarios;
+
+pub use device::{Calibration, DeviceModel, LinkModel, CACHE_REUSE_DISCOUNT, DEVICES};
+pub use pipeline_sim::{simulate_pipeline, PipelineSimInput, PipelineSimReport};
+pub use scenarios::{Scenarios, SimEpoch};

@@ -1,0 +1,190 @@
+//! Discrete-event timeline of the GPipe fill-drain schedule.
+//!
+//! Replays the exact dependency structure of `pipeline::engine`:
+//!
+//! * forward (m, s) starts after forward (m, s-1) has arrived over the
+//!   stage link AND after this stage finished (m-1, s);
+//! * backward mirrors it in reverse;
+//! * stages with a graph input (s0, s2 — the GAT layers) additionally
+//!   stall for the *host re-build round trip* when micro-batching is on:
+//!   the paper's §7.2 device→host node-tensor copy, host sub-graph
+//!   re-build, host→device sub-graph upload. That term is charged per
+//!   micro-batch per GAT layer, exactly where the paper pays it.
+//!
+//! The simulator returns per-device busy time alongside the makespan so
+//! the bench harness can report pipeline bubble fractions.
+
+/// Per-stage, per-micro-batch inputs to the timeline.
+#[derive(Debug, Clone)]
+pub struct PipelineSimInput {
+    /// fwd_s[stage][m]: projected stage-forward seconds.
+    pub fwd_s: Vec<Vec<f64>>,
+    /// bwd_s[stage][m]: projected stage-backward seconds.
+    pub bwd_s: Vec<Vec<f64>>,
+    /// xfer_fwd_s[boundary][m]: activation transfer seconds, stage s->s+1.
+    pub xfer_fwd_s: Vec<Vec<f64>>,
+    /// xfer_bwd_s[boundary][m]: cotangent transfer seconds, stage s+1->s.
+    pub xfer_bwd_s: Vec<Vec<f64>>,
+    /// rebuild_s[stage][m]: host round-trip stall before fwd (m, stage)
+    /// (zero for stages without graph inputs or when chunks == 1*).
+    pub rebuild_s: Vec<Vec<f64>>,
+}
+
+#[derive(Debug, Clone)]
+pub struct PipelineSimReport {
+    /// End-to-end step time (one optimiser step over all micro-batches).
+    pub makespan_s: f64,
+    /// Per-device busy seconds.
+    pub busy_s: Vec<f64>,
+    /// 1 - mean(busy)/makespan: the pipeline bubble + stall fraction.
+    pub bubble_fraction: f64,
+}
+
+pub fn simulate_pipeline(input: &PipelineSimInput) -> PipelineSimReport {
+    let stages = input.fwd_s.len();
+    assert!(stages >= 1);
+    let m_count = input.fwd_s[0].len();
+    assert!(input.bwd_s.len() == stages);
+    assert!(input.xfer_fwd_s.len() == stages - 1);
+    assert!(input.rebuild_s.len() == stages);
+
+    let mut fwd_end = vec![vec![0.0f64; m_count]; stages];
+    let mut busy = vec![0.0f64; stages];
+
+    // ---- forward wave ---------------------------------------------------
+    for s in 0..stages {
+        for m in 0..m_count {
+            let ready_input = if s == 0 {
+                0.0
+            } else {
+                fwd_end[s - 1][m] + input.xfer_fwd_s[s - 1][m]
+            };
+            let device_free = if m == 0 { 0.0 } else { fwd_end[s][m - 1] };
+            let start = ready_input.max(device_free);
+            let work = input.rebuild_s[s][m] + input.fwd_s[s][m];
+            fwd_end[s][m] = start + work;
+            busy[s] += input.fwd_s[s][m]; // rebuild stalls are idle time
+        }
+    }
+
+    // ---- backward wave (reverse stage order) ------------------------------
+    // bwd (m, s) needs: bwd (m, s+1) delivered, and device s free.
+    // Device s is free after its last fwd, then after bwd (m-1, s).
+    let mut bwd_end = vec![vec![0.0f64; m_count]; stages];
+    for s in (0..stages).rev() {
+        for m in 0..m_count {
+            let ready_input = if s == stages - 1 {
+                // loss backward starts as soon as the last stage's own
+                // forward for m is done
+                fwd_end[s][m]
+            } else {
+                bwd_end[s + 1][m] + input.xfer_bwd_s[s][m]
+            };
+            let device_free = if m == 0 {
+                fwd_end[s][m_count - 1]
+            } else {
+                bwd_end[s][m - 1]
+            };
+            let start = ready_input.max(device_free);
+            bwd_end[s][m] = start + input.bwd_s[s][m];
+            busy[s] += input.bwd_s[s][m];
+        }
+    }
+
+    let makespan = (0..stages)
+        .map(|s| bwd_end[s][m_count - 1])
+        .fold(0.0f64, f64::max);
+    let mean_busy: f64 = busy.iter().sum::<f64>() / stages as f64;
+    PipelineSimReport {
+        makespan_s: makespan,
+        bubble_fraction: 1.0 - (mean_busy / makespan.max(1e-12)),
+        busy_s: busy,
+    }
+}
+
+impl PipelineSimInput {
+    /// Uniform helper for tests/benches: same time per stage/microbatch.
+    pub fn uniform(
+        stages: usize,
+        m_count: usize,
+        fwd: f64,
+        bwd: f64,
+        xfer: f64,
+        rebuild: f64,
+    ) -> PipelineSimInput {
+        PipelineSimInput {
+            fwd_s: vec![vec![fwd; m_count]; stages],
+            bwd_s: vec![vec![bwd; m_count]; stages],
+            xfer_fwd_s: vec![vec![xfer; m_count]; stages.saturating_sub(1)],
+            xfer_bwd_s: vec![vec![xfer; m_count]; stages.saturating_sub(1)],
+            rebuild_s: vec![vec![rebuild; m_count]; stages],
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_stage_single_batch() {
+        let inp = PipelineSimInput::uniform(1, 1, 2.0, 3.0, 0.0, 0.0);
+        let r = simulate_pipeline(&inp);
+        assert!((r.makespan_s - 5.0).abs() < 1e-12);
+        assert!(r.bubble_fraction.abs() < 1e-12);
+    }
+
+    #[test]
+    fn classic_gpipe_bubble_formula() {
+        // Uniform stage times, no transfers: makespan = (M + S - 1) * (f + b)
+        let (s, m, f, b) = (4usize, 8usize, 1.0, 2.0);
+        let inp = PipelineSimInput::uniform(s, m, f, b, 0.0, 0.0);
+        let r = simulate_pipeline(&inp);
+        let expect = (m as f64 + s as f64 - 1.0) * (f + b);
+        assert!(
+            (r.makespan_s - expect).abs() < 1e-9,
+            "makespan {} != {expect}",
+            r.makespan_s
+        );
+        // Bubble fraction = (S-1)/(M+S-1)
+        let expect_bubble = (s as f64 - 1.0) / (m as f64 + s as f64 - 1.0);
+        assert!((r.bubble_fraction - expect_bubble).abs() < 1e-9);
+    }
+
+    #[test]
+    fn more_microbatches_amortise_the_bubble() {
+        let mk = |m: usize| {
+            simulate_pipeline(&PipelineSimInput::uniform(4, m, 1.0, 2.0, 0.0, 0.0))
+        };
+        let b2 = mk(2).bubble_fraction;
+        let b8 = mk(8).bubble_fraction;
+        let b32 = mk(32).bubble_fraction;
+        assert!(b2 > b8 && b8 > b32);
+    }
+
+    #[test]
+    fn rebuild_stalls_extend_makespan_but_not_busy() {
+        let base = simulate_pipeline(&PipelineSimInput::uniform(4, 4, 1.0, 2.0, 0.0, 0.0));
+        let stalled =
+            simulate_pipeline(&PipelineSimInput::uniform(4, 4, 1.0, 2.0, 0.0, 0.5));
+        assert!(stalled.makespan_s > base.makespan_s + 0.5);
+        assert_eq!(stalled.busy_s, base.busy_s);
+        assert!(stalled.bubble_fraction > base.bubble_fraction);
+    }
+
+    #[test]
+    fn transfers_serialise_the_fill() {
+        let no_xfer = simulate_pipeline(&PipelineSimInput::uniform(4, 1, 1.0, 1.0, 0.0, 0.0));
+        let xfer = simulate_pipeline(&PipelineSimInput::uniform(4, 1, 1.0, 1.0, 0.25, 0.0));
+        // single micro-batch: every boundary crossed twice (fwd + bwd)
+        let expect = no_xfer.makespan_s + 0.25 * 6.0;
+        assert!((xfer.makespan_s - expect).abs() < 1e-9);
+    }
+
+    #[test]
+    fn monotone_in_work() {
+        let a = simulate_pipeline(&PipelineSimInput::uniform(4, 3, 1.0, 2.0, 0.1, 0.0));
+        let b = simulate_pipeline(&PipelineSimInput::uniform(4, 3, 1.5, 2.5, 0.1, 0.0));
+        assert!(b.makespan_s > a.makespan_s);
+    }
+}

@@ -1,0 +1,66 @@
+//! Property-testing support (no proptest crate offline): a seeded
+//! case-generation loop with failing-seed reporting, plus random graph
+//! generators shared by the invariant suites in `rust/tests/`.
+
+pub mod prop {
+    use crate::util::rng::Rng;
+
+    /// Run `cases` random test cases. On panic, re-raises with the seed
+    /// so the failure is reproducible (`PROP_SEED=<seed> cargo test`).
+    pub fn check<F: Fn(&mut Rng) + std::panic::RefUnwindSafe>(cases: usize, f: F) {
+        // Deterministic by default; override with PROP_SEED for replay,
+        // PROP_CASES for deeper sweeps.
+        let base: u64 = std::env::var("PROP_SEED")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0xC0FFEE);
+        let cases: usize = std::env::var("PROP_CASES")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(cases);
+        for case in 0..cases {
+            let seed = base.wrapping_add(case as u64);
+            let result = std::panic::catch_unwind(|| {
+                let mut rng = Rng::new(seed);
+                f(&mut rng);
+            });
+            if let Err(e) = result {
+                eprintln!("property failed at case {case} (PROP_SEED={seed})");
+                std::panic::resume_unwind(e);
+            }
+        }
+    }
+}
+
+pub mod gen {
+    use std::collections::HashSet;
+
+    use crate::graph::Graph;
+    use crate::util::rng::Rng;
+
+    /// Random simple undirected graph with `n` nodes and up to `max_m`
+    /// edges, degree-capped at `cap`.
+    pub fn random_graph(rng: &mut Rng, n: usize, max_m: usize, cap: usize) -> Graph {
+        let mut edges = Vec::new();
+        let mut seen = HashSet::new();
+        let mut deg = vec![0usize; n];
+        let m = if max_m == 0 { 0 } else { rng.below(max_m + 1) };
+        for _ in 0..4 * m {
+            if edges.len() >= m {
+                break;
+            }
+            let a = rng.below(n);
+            let b = rng.below(n);
+            if a == b || deg[a] >= cap || deg[b] >= cap {
+                continue;
+            }
+            let key = (a.min(b), a.max(b));
+            if seen.insert(key) {
+                deg[a] += 1;
+                deg[b] += 1;
+                edges.push((a as u32, b as u32));
+            }
+        }
+        Graph::from_undirected_edges(n, &edges).expect("generated graph is simple")
+    }
+}

@@ -1,0 +1,173 @@
+//! Evaluation: deterministic forward through `eval_fwd` + host-side
+//! accuracy / NLL over arbitrary masks.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::data::Dataset;
+use crate::runtime::{Engine, Executable, HostTensor};
+
+use super::flatten_params;
+
+/// Masked classification accuracy from row-major log-probs.
+pub fn accuracy(logp: &[f32], labels: &[i32], mask: &[f32], classes: usize) -> f64 {
+    let mut correct = 0.0f64;
+    let mut total = 0.0f64;
+    for (i, row) in logp.chunks(classes).enumerate() {
+        if mask[i] <= 0.0 {
+            continue;
+        }
+        let pred = row
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(j, _)| j as i32)
+            .unwrap_or(-1);
+        total += 1.0;
+        if pred == labels[i] {
+            correct += 1.0;
+        }
+    }
+    if total == 0.0 {
+        0.0
+    } else {
+        correct / total
+    }
+}
+
+/// Masked mean negative log-likelihood from row-major log-probs.
+pub fn masked_nll(logp: &[f32], labels: &[i32], mask: &[f32], classes: usize) -> f64 {
+    let mut s = 0.0f64;
+    let mut cnt = 0.0f64;
+    for (i, row) in logp.chunks(classes).enumerate() {
+        if mask[i] <= 0.0 {
+            continue;
+        }
+        s -= row[labels[i] as usize] as f64;
+        cnt += 1.0;
+    }
+    if cnt == 0.0 {
+        0.0
+    } else {
+        s / cnt
+    }
+}
+
+/// Bound evaluator: dataset + compiled eval executable + cached graph
+/// tensors; computes (train/val/test) accuracy for a parameter set.
+pub struct Evaluator {
+    exe: Arc<Executable>,
+    fixed_inputs: Vec<HostTensor>, // x, graph...
+    param_order: Vec<String>,
+    classes: usize,
+    labels: Vec<i32>,
+    pub train_mask: Vec<f32>,
+    pub val_mask: Vec<f32>,
+    pub test_mask: Vec<f32>,
+}
+
+impl Evaluator {
+    pub fn new(engine: &Engine, ds: &Dataset, backend: &str) -> Result<Evaluator> {
+        Self::with_graph(engine, ds, backend, &ds.graph)
+    }
+
+    /// Evaluate on a *custom* graph over the same node set — used to
+    /// measure accuracy through the chunk-lossy union graph (a
+    /// deterministic forward through the chunked pipeline is identical
+    /// to a full-shape forward on that graph; see
+    /// `pipeline::lossy_union_graph`).
+    pub fn with_graph(
+        engine: &Engine,
+        ds: &Dataset,
+        backend: &str,
+        graph: &crate::graph::Graph,
+    ) -> Result<Evaluator> {
+        let name = format!("{}_{}_eval_fwd", ds.profile.name, backend);
+        let exe = engine.executable(&name)?;
+        let n = ds.profile.nodes;
+        anyhow::ensure!(graph.num_nodes() == n, "eval graph node count");
+        let mut fixed = vec![HostTensor::f32(
+            vec![n, ds.profile.features],
+            ds.features.clone(),
+        )];
+        match backend {
+            "ell" => {
+                let ell = graph.to_ell(ds.profile.ell_k)?;
+                fixed.push(HostTensor::s32(vec![n, ds.profile.ell_k], ell.idx));
+                fixed.push(HostTensor::f32(vec![n, ds.profile.ell_k], ell.mask));
+            }
+            "edgewise" => {
+                let coo = graph.to_coo(ds.profile.e_cap())?;
+                fixed.push(HostTensor::s32(vec![ds.profile.e_cap()], coo.src));
+                fixed.push(HostTensor::s32(vec![ds.profile.e_cap()], coo.dst));
+                fixed.push(HostTensor::f32(vec![ds.profile.e_cap()], coo.mask));
+            }
+            other => anyhow::bail!("unknown backend {other:?}"),
+        }
+        Ok(Evaluator {
+            exe,
+            fixed_inputs: fixed,
+            param_order: engine.manifest.param_order.clone(),
+            classes: ds.profile.classes,
+            labels: ds.labels.clone(),
+            train_mask: ds.splits.train_mask(n),
+            val_mask: ds.splits.val_mask(n),
+            test_mask: ds.splits.test_mask(n),
+        })
+    }
+
+    /// Run the deterministic forward, returning row-major log-probs.
+    pub fn log_probs(&self, params: &BTreeMap<String, HostTensor>) -> Result<Vec<f32>> {
+        let mut inputs = flatten_params(params, &self.param_order)?;
+        inputs.extend(self.fixed_inputs.iter().cloned());
+        let out = self.exe.run(&inputs)?;
+        Ok(out[0].as_f32()?.to_vec())
+    }
+
+    pub fn metrics(&self, params: &BTreeMap<String, HostTensor>) -> Result<EvalMetrics> {
+        let logp = self.log_probs(params)?;
+        Ok(EvalMetrics {
+            train_acc: accuracy(&logp, &self.labels, &self.train_mask, self.classes),
+            val_acc: accuracy(&logp, &self.labels, &self.val_mask, self.classes),
+            test_acc: accuracy(&logp, &self.labels, &self.test_mask, self.classes),
+            train_loss: masked_nll(&logp, &self.labels, &self.train_mask, self.classes),
+            val_loss: masked_nll(&logp, &self.labels, &self.val_mask, self.classes),
+        })
+    }
+}
+
+#[derive(Debug, Clone, Copy, Default)]
+pub struct EvalMetrics {
+    pub train_acc: f64,
+    pub val_acc: f64,
+    pub test_acc: f64,
+    pub train_loss: f64,
+    pub val_loss: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accuracy_and_nll_basics() {
+        // 3 nodes, 2 classes; log-probs favouring class 0,1,0
+        let logp = vec![-0.1f32, -2.3, -2.3, -0.1, -0.1, -2.3];
+        let labels = vec![0, 1, 1];
+        let mask = vec![1.0, 1.0, 1.0];
+        assert!((accuracy(&logp, &labels, &mask, 2) - 2.0 / 3.0).abs() < 1e-12);
+        let partial = vec![1.0, 0.0, 1.0];
+        assert!((accuracy(&logp, &labels, &partial, 2) - 0.5).abs() < 1e-12);
+        let nll = masked_nll(&logp, &labels, &mask, 2);
+        assert!((nll - (0.1 + 0.1 + 2.3) / 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn empty_mask_is_zero() {
+        let logp = vec![-0.1f32, -2.3];
+        assert_eq!(accuracy(&logp, &[0], &[0.0], 2), 0.0);
+        assert_eq!(masked_nll(&logp, &[0], &[0.0], 2), 0.0);
+    }
+}

@@ -1,0 +1,158 @@
+//! Parameter initialisation: Glorot-uniform matrices, zero biases —
+//! shapes mirror `python/compile/model.py::param_specs` and are verified
+//! against the manifest signatures by the integration tests.
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use crate::config::{DatasetProfile, ModelConfig};
+use crate::runtime::HostTensor;
+use crate::util::rng::Rng;
+
+/// Ordered (name, shape) parameter spec for one dataset profile.
+pub fn param_shapes(ds: &DatasetProfile, mc: &ModelConfig) -> Vec<(String, Vec<usize>)> {
+    let h = mc.heads;
+    let d = mc.hidden;
+    let f = ds.features;
+    let c = ds.classes;
+    vec![
+        ("w1".into(), vec![f, h * d]),
+        ("a1_src".into(), vec![h, d]),
+        ("a1_dst".into(), vec![h, d]),
+        ("b1".into(), vec![h * d]),
+        ("w2".into(), vec![h * d, h * c]),
+        ("a2_src".into(), vec![h, c]),
+        ("a2_dst".into(), vec![h, c]),
+        ("b2".into(), vec![h * c]),
+    ]
+}
+
+/// Glorot-uniform init (zero biases), deterministic from `seed`.
+pub fn init_params(
+    ds: &DatasetProfile,
+    mc: &ModelConfig,
+    seed: u64,
+) -> BTreeMap<String, HostTensor> {
+    let mut root = Rng::new(seed ^ 0x9A7A_11CE);
+    let mut out = BTreeMap::new();
+    for (i, (name, shape)) in param_shapes(ds, mc).into_iter().enumerate() {
+        let mut rng = root.fork(i as u64 + 1);
+        let n: usize = shape.iter().product();
+        let data = if shape.len() == 1 {
+            vec![0f32; n]
+        } else {
+            let limit = (6.0 / (shape[0] + shape[1]) as f64).sqrt();
+            (0..n).map(|_| rng.range_f64(-limit, limit) as f32).collect()
+        };
+        out.insert(name, HostTensor::f32(shape, data));
+    }
+    out
+}
+
+/// Flatten named params into manifest `param_order` for positional calls.
+pub fn flatten_params(
+    params: &BTreeMap<String, HostTensor>,
+    order: &[String],
+) -> Result<Vec<HostTensor>> {
+    order
+        .iter()
+        .map(|n| {
+            params
+                .get(n)
+                .cloned()
+                .ok_or_else(|| anyhow::anyhow!("missing parameter {n:?}"))
+        })
+        .collect()
+}
+
+/// Rebuild the named map from a flat ordered vector.
+pub fn unflatten_params(
+    flat: Vec<HostTensor>,
+    order: &[String],
+) -> Result<BTreeMap<String, HostTensor>> {
+    anyhow::ensure!(flat.len() == order.len(), "arity mismatch");
+    Ok(order.iter().cloned().zip(flat).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn profile() -> DatasetProfile {
+        DatasetProfile {
+            name: "t".into(),
+            nodes: 10,
+            undirected_edges: 5,
+            features: 24,
+            classes: 3,
+            train_per_class: 1,
+            val_size: 2,
+            test_size: 2,
+            homophily: 0.8,
+            feature_density: 0.1,
+            seed: 0,
+            ell_k: 8,
+            edge_pad_multiple: 16,
+        }
+    }
+
+    fn mc() -> ModelConfig {
+        ModelConfig {
+            heads: 8,
+            hidden: 8,
+            feat_dropout: 0.6,
+            attn_dropout: 0.6,
+            leaky_relu_slope: 0.2,
+            lr: 5e-3,
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            weight_decay: 5e-4,
+            epochs: 300,
+        }
+    }
+
+    #[test]
+    fn shapes_match_model_convention() {
+        let shapes = param_shapes(&profile(), &mc());
+        assert_eq!(shapes[0].1, vec![24, 64]); // w1
+        assert_eq!(shapes[4].1, vec![64, 24]); // w2: (h*d, h*c) = (64, 24)
+        assert_eq!(shapes.len(), 8);
+    }
+
+    #[test]
+    fn glorot_bounds_and_determinism() {
+        let p1 = init_params(&profile(), &mc(), 7);
+        let p2 = init_params(&profile(), &mc(), 7);
+        let p3 = init_params(&profile(), &mc(), 8);
+        assert_eq!(p1, p2);
+        assert_ne!(p1, p3);
+        let w1 = p1["w1"].as_f32().unwrap();
+        let limit = (6.0f64 / (24 + 64) as f64).sqrt() as f32;
+        assert!(w1.iter().all(|&x| x.abs() <= limit));
+        // biases zero
+        assert!(p1["b1"].as_f32().unwrap().iter().all(|&x| x == 0.0));
+        // not degenerate
+        assert!(w1.iter().any(|&x| x.abs() > limit / 2.0));
+    }
+
+    #[test]
+    fn flatten_roundtrip() {
+        let order: Vec<String> = param_shapes(&profile(), &mc())
+            .into_iter()
+            .map(|(n, _)| n)
+            .collect();
+        let p = init_params(&profile(), &mc(), 1);
+        let flat = flatten_params(&p, &order).unwrap();
+        assert_eq!(flat.len(), 8);
+        let back = unflatten_params(flat, &order).unwrap();
+        assert_eq!(p, back);
+    }
+
+    #[test]
+    fn flatten_missing_param_errors() {
+        let p = BTreeMap::new();
+        assert!(flatten_params(&p, &["w1".to_string()]).is_err());
+    }
+}

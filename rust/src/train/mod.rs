@@ -1,0 +1,12 @@
+//! Training loops: single-device (Table 1 / Table 2 rows) and helpers
+//! shared with the pipeline driver (parameter init, eval, accuracy).
+
+mod eval;
+mod init;
+mod sign;
+mod single;
+
+pub use eval::{accuracy, masked_nll, EvalMetrics, Evaluator};
+pub use init::{flatten_params, init_params, param_shapes, unflatten_params};
+pub use sign::{sign_param_names, SignResult, SignTrainer, SIGN_HOPS};
+pub use single::{SingleDeviceTrainer, TrainResult};

@@ -1,0 +1,135 @@
+//! Single-device training: one fused `train_step` executable per epoch
+//! (full-graph batch, as the paper trains Cora/CiteSeer/PubMed on one
+//! CPU or GPU), Adam in the coordinator.
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use crate::config::ModelConfig;
+use crate::data::Dataset;
+use crate::metrics::{Curve, RunTiming, Timer};
+use crate::optim::{Adam, Optimizer};
+use crate::runtime::{Engine, HostTensor};
+
+use super::eval::{EvalMetrics, Evaluator};
+use super::init::{flatten_params, init_params, unflatten_params};
+
+pub struct SingleDeviceTrainer<'e> {
+    engine: &'e Engine,
+    dataset: &'e Dataset,
+    backend: String,
+    pub seed: u64,
+    /// Evaluate metrics every `eval_every` epochs (0 = only at the end).
+    pub eval_every: usize,
+}
+
+#[derive(Debug)]
+pub struct TrainResult {
+    pub timing: RunTiming,
+    pub final_metrics: EvalMetrics,
+    /// Stochastic (dropout-on) training loss per epoch.
+    pub train_loss: Curve,
+    /// Deterministic train accuracy curve (sampled at eval_every).
+    pub train_acc: Curve,
+    pub val_acc: Curve,
+    pub params: BTreeMap<String, HostTensor>,
+}
+
+impl<'e> SingleDeviceTrainer<'e> {
+    pub fn new(engine: &'e Engine, dataset: &'e Dataset, backend: &str) -> Self {
+        SingleDeviceTrainer {
+            engine,
+            dataset,
+            backend: backend.to_string(),
+            seed: 0,
+            eval_every: 10,
+        }
+    }
+
+    /// Train `epochs` epochs; returns timings, curves, final parameters.
+    pub fn train(&self, mc: &ModelConfig, epochs: usize) -> Result<TrainResult> {
+        let ds = self.dataset;
+        let p = &ds.profile;
+        let name = format!("{}_{}_train_step", p.name, self.backend);
+        let n = p.nodes;
+
+        // --- fixed inputs (built once; the paper's data loading) --------
+        let mut fixed: Vec<HostTensor> = vec![HostTensor::f32(
+            vec![n, p.features],
+            ds.features.clone(),
+        )];
+        match self.backend.as_str() {
+            "ell" => {
+                let ell = ds.graph.to_ell(p.ell_k)?;
+                fixed.push(HostTensor::s32(vec![n, p.ell_k], ell.idx));
+                fixed.push(HostTensor::f32(vec![n, p.ell_k], ell.mask));
+            }
+            "edgewise" => {
+                let coo = ds.graph.to_coo(p.e_cap())?;
+                fixed.push(HostTensor::s32(vec![p.e_cap()], coo.src));
+                fixed.push(HostTensor::s32(vec![p.e_cap()], coo.dst));
+                fixed.push(HostTensor::f32(vec![p.e_cap()], coo.mask));
+            }
+            other => anyhow::bail!("unknown backend {other:?}"),
+        }
+        fixed.push(HostTensor::s32(vec![n], ds.labels.clone()));
+        fixed.push(HostTensor::f32(vec![n], ds.splits.train_mask(n)));
+
+        let order = self.engine.manifest.param_order.clone();
+        let params = init_params(p, mc, self.seed);
+        let mut flat = flatten_params(&params, &order)?;
+        let mut adam = Adam::from_config(mc);
+        let evaluator = Evaluator::new(self.engine, ds, &self.backend)?;
+
+        let mut timing = RunTiming { epochs, ..Default::default() };
+        let mut train_loss = Curve::default();
+        let mut train_acc = Curve::default();
+        let mut val_acc = Curve::default();
+
+        // Epoch 1 includes compile (the paper's "setup" epoch).
+        let compile_timer = Timer::start();
+        let exe = self.engine.executable(&name)?;
+
+        for epoch in 1..=epochs {
+            let t = Timer::start();
+            let mut inputs = flat.clone();
+            inputs.extend(fixed.iter().cloned());
+            inputs.push(HostTensor::key(self.seed as u32, epoch as u32));
+            let out = exe.run(&inputs)?;
+            let loss = out[0].scalar_value()? as f64;
+            anyhow::ensure!(loss.is_finite(), "loss diverged at epoch {epoch}");
+            let grads = &out[1..];
+            let coord_t = Timer::start();
+            adam.step(&mut flat, grads)?;
+            timing.coordinator_s += coord_t.secs();
+
+            let dt = if epoch == 1 { compile_timer.secs() } else { t.secs() };
+            timing.per_epoch_s.push(dt);
+            if epoch == 1 {
+                timing.epoch1_s = dt;
+            } else {
+                timing.epochs_rest_s += dt;
+            }
+            train_loss.push(epoch, loss);
+
+            if self.eval_every > 0 && epoch % self.eval_every == 0 {
+                let pm = unflatten_params(flat.clone(), &order)?;
+                let m = evaluator.metrics(&pm)?;
+                train_acc.push(epoch, m.train_acc);
+                val_acc.push(epoch, m.val_acc);
+            }
+        }
+
+        let params = unflatten_params(flat, &order)?;
+        let final_metrics = evaluator.metrics(&params)?;
+        Ok(TrainResult {
+            timing,
+            final_metrics,
+            train_loss,
+            train_acc,
+            val_acc,
+            params,
+        })
+    }
+}

@@ -1,0 +1,121 @@
+//! Tiny CLI argument parser (no clap offline): `--key value`, `--flag`,
+//! and positional arguments, with typed accessors and a usage() helper.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+/// Boolean switches recognised everywhere; `--key` tokens in this list
+/// never consume a following value. Everything else given as `--key v`
+/// (or `--key=v`) is an option.
+pub const BOOL_FLAGS: &[&str] = &[
+    "verbose", "sim-only", "real-only", "quiet", "help", "no-warmup", "fast",
+];
+
+impl Args {
+    /// Parse argv (excluding the program name). `--key=value` and
+    /// `--key value` are options; `--key` where key is in [`BOOL_FLAGS`]
+    /// (or no value follows) is a flag.
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Args {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(key) = tok.strip_prefix("--") {
+                if let Some((k, v)) = key.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                    continue;
+                }
+                let key = key.to_string();
+                let is_flag = BOOL_FLAGS.contains(&key.as_str());
+                match it.peek() {
+                    Some(next) if !is_flag && !next.starts_with("--") => {
+                        let v = it.next().unwrap();
+                        out.options.insert(key, v);
+                    }
+                    _ => out.flags.push(key),
+                }
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn opt_usize(&self, name: &str, default: usize) -> anyhow::Result<usize> {
+        match self.options.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{name} expects an integer, got {v:?}")),
+        }
+    }
+
+    pub fn opt_f64(&self, name: &str, default: f64) -> anyhow::Result<f64> {
+        match self.options.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{name} expects a number, got {v:?}")),
+        }
+    }
+
+    pub fn opt_str<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.opt(name).unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn mixes_positional_options_flags() {
+        let a = args("train --dataset pubmed --epochs 300 --verbose extra");
+        assert_eq!(a.positional, vec!["train", "extra"]);
+        assert_eq!(a.opt("dataset"), Some("pubmed"));
+        assert_eq!(a.opt_usize("epochs", 1).unwrap(), 300);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn typed_errors() {
+        let a = args("--epochs banana");
+        assert!(a.opt_usize("epochs", 1).is_err());
+        assert_eq!(a.opt_usize("missing", 7).unwrap(), 7);
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = args("--epochs=42 --dataset=cora");
+        assert_eq!(a.opt_usize("epochs", 1).unwrap(), 42);
+        assert_eq!(a.opt("dataset"), Some("cora"));
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = args("--fast");
+        assert!(a.flag("fast"));
+    }
+}

@@ -1,0 +1,5 @@
+//! Dependency-free utilities (offline environment): JSON, RNG, CLI.
+
+pub mod cli;
+pub mod json;
+pub mod rng;

@@ -1,0 +1,153 @@
+//! Integration: the GPipe pipeline engine against real PubMed artifacts.
+//!
+//! The centrepiece is the *gradient-equivalence invariant*: at chunks=1
+//! the staged fill-drain pipeline (4 workers, remat backward, sum-then-
+//! normalise) must reproduce the monolithic fused train_step gradients.
+
+use gnn_pipe::batching::{Chunker, SequentialChunker};
+use gnn_pipe::config::Config;
+use gnn_pipe::data::{generate, Dataset};
+use gnn_pipe::pipeline::{prepare_microbatches, PipelineEngine, PipelineTrainer};
+use gnn_pipe::runtime::{Engine, HostTensor};
+use gnn_pipe::train::{flatten_params, init_params};
+
+struct Ctx {
+    cfg: Config,
+    eng: Engine,
+    ds: Dataset,
+}
+
+fn ctx() -> Ctx {
+    let cfg = Config::load().unwrap();
+    let eng = Engine::from_artifacts_dir(&cfg.artifacts_dir())
+        .expect("artifacts missing — run `make artifacts`");
+    let ds = generate(cfg.dataset("pubmed").unwrap()).unwrap();
+    Ctx { cfg, eng, ds }
+}
+
+#[test]
+fn chunks1_pipeline_matches_monolithic_train_step() {
+    let Ctx { cfg, eng, ds } = ctx();
+    let p = &ds.profile;
+    let n = p.nodes;
+    let order = eng.manifest.param_order.clone();
+    let flat = flatten_params(&init_params(p, &cfg.model, 7), &order).unwrap();
+    let train_mask = ds.splits.train_mask(n);
+    let key = (123u32, 45u32);
+
+    // --- staged pipeline, one epoch, one micro-batch -------------------
+    let pipe = PipelineEngine::new(&eng, "pubmed", "ell", 1).unwrap();
+    let plan = SequentialChunker.plan(&ds.graph, 1);
+    let mbs = prepare_microbatches(&ds, &plan, "ell", &train_mask).unwrap();
+    let out = pipe.run_epoch(&flat, &mbs, key).unwrap();
+    assert_eq!(out.grads.len(), 8);
+    assert!(out.mask_count > 0.0);
+
+    // --- monolithic fused step ------------------------------------------
+    let exe = eng.executable("pubmed_ell_train_step").unwrap();
+    let ell = ds.graph.to_ell(p.ell_k).unwrap();
+    let mut inputs = flat.clone();
+    inputs.push(HostTensor::f32(vec![n, p.features], ds.features.clone()));
+    inputs.push(HostTensor::s32(vec![n, p.ell_k], ell.idx));
+    inputs.push(HostTensor::f32(vec![n, p.ell_k], ell.mask));
+    inputs.push(HostTensor::s32(vec![n], ds.labels.clone()));
+    inputs.push(HostTensor::f32(vec![n], train_mask.clone()));
+    inputs.push(HostTensor::key(key.0, key.1));
+    let mono = exe.run(&inputs).unwrap();
+    let mono_loss = mono[0].scalar_value().unwrap() as f64;
+
+    // Loss: pipeline accumulates (sum, count); monolith returns the mean.
+    let pipe_loss = out.loss_sum / out.mask_count;
+    assert!(
+        (pipe_loss - mono_loss).abs() < 1e-4 * mono_loss.abs().max(1.0),
+        "loss mismatch: pipeline {pipe_loss} vs monolith {mono_loss}"
+    );
+
+    // Gradients: pipeline grads are w.r.t. the sum; normalise and compare.
+    for (i, name) in order.iter().enumerate() {
+        let gp = out.grads[i].as_f32().unwrap();
+        let gm = mono[1 + i].as_f32().unwrap();
+        let scale = 1.0 / out.mask_count as f32;
+        let mut max_abs = 0.0f32;
+        let mut max_rel = 0.0f32;
+        for (a, b) in gp.iter().zip(gm) {
+            let a = a * scale;
+            let d = (a - b).abs();
+            max_abs = max_abs.max(d);
+            if b.abs() > 1e-4 {
+                max_rel = max_rel.max(d / b.abs());
+            }
+        }
+        assert!(
+            max_abs < 1e-4 || max_rel < 2e-2,
+            "grad {name}: max_abs {max_abs}, max_rel {max_rel}"
+        );
+    }
+}
+
+#[test]
+fn chunked_epoch_runs_and_respects_structure_loss() {
+    let Ctx { cfg, eng, ds } = ctx();
+    let p = &ds.profile;
+    let order = eng.manifest.param_order.clone();
+    let flat = flatten_params(&init_params(p, &cfg.model, 1), &order).unwrap();
+    let train_mask = ds.splits.train_mask(p.nodes);
+
+    let mut last_cut = 0usize;
+    for chunks in [2usize, 4] {
+        let pipe = PipelineEngine::new(&eng, "pubmed", "ell", chunks).unwrap();
+        let plan = SequentialChunker.plan(&ds.graph, chunks);
+        let mbs = prepare_microbatches(&ds, &plan, "ell", &train_mask).unwrap();
+        assert_eq!(mbs.len(), chunks);
+        let cut: usize = mbs.iter().map(|m| m.cut_edges).sum();
+        assert!(cut > last_cut, "more chunks must cut more edges");
+        last_cut = cut;
+
+        let out = pipe.run_epoch(&flat, &mbs, (9, chunks as u32)).unwrap();
+        let loss = out.loss_sum / out.mask_count;
+        assert!(loss.is_finite() && loss > 0.0);
+        assert_eq!(out.logp.len(), chunks);
+        assert_eq!(out.stage_timings.len(), 4);
+        for st in &out.stage_timings {
+            assert_eq!(st.fwd_s.len(), chunks);
+            assert_eq!(st.bwd_s.len(), chunks);
+        }
+        // All 140 train nodes must be seen exactly once across chunks.
+        assert_eq!(out.mask_count, 60.0); // 20/class * 3 classes
+    }
+}
+
+#[test]
+fn pipeline_trainer_learns_at_chunks_1() {
+    let Ctx { cfg, eng, ds } = ctx();
+    let trainer = PipelineTrainer::new(&eng, &ds, "ell", 1).full_graph_variant();
+    let res = trainer.train(&cfg.model, 12).unwrap();
+    assert_eq!(res.retention.retained_fraction, 1.0);
+    assert_eq!(res.timing.rebuild_s, 0.0, "1* variant must not rebuild");
+    // Val accuracy after 12 epochs must beat chance (1/3) on PubMed.
+    assert!(
+        res.pipeline_eval.val_acc > 0.40,
+        "val acc {}",
+        res.pipeline_eval.val_acc
+    );
+    // Loss must trend down.
+    let first = res.train_loss.values.first().copied().unwrap();
+    let last = res.train_loss.values.last().copied().unwrap();
+    assert!(last < first, "loss {first} -> {last}");
+}
+
+#[test]
+fn chunked_training_degrades_retention_and_pays_rebuild() {
+    let Ctx { cfg, eng, ds } = ctx();
+    let trainer = PipelineTrainer::new(&eng, &ds, "ell", 4);
+    let res = trainer.train(&cfg.model, 4).unwrap();
+    // Sequential chunking of a homophilous SBM with random ids destroys
+    // most edges (the paper's Figure 4 mechanism).
+    assert!(
+        res.retention.retained_fraction < 0.5,
+        "retention {}",
+        res.retention.retained_fraction
+    );
+    assert!(res.timing.rebuild_s > 0.0, "chunked run must pay rebuild");
+    assert!(res.pipeline_eval.val_acc <= 1.0);
+}

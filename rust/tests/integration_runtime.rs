@@ -1,0 +1,235 @@
+//! Integration: the AOT bridge — real artifacts through the PJRT engine.
+//!
+//! Requires `make artifacts` to have run (manifest + HLO text files).
+
+use gnn_pipe::config::Config;
+use gnn_pipe::data::generate;
+use gnn_pipe::runtime::{Dtype, Engine, HostTensor, Manifest};
+use gnn_pipe::train::{flatten_params, init_params};
+
+fn engine() -> Engine {
+    let cfg = Config::load().expect("configs");
+    Engine::from_artifacts_dir(&cfg.artifacts_dir())
+        .expect("artifacts missing — run `make artifacts`")
+}
+
+#[test]
+fn manifest_covers_full_matrix() {
+    let cfg = Config::load().unwrap();
+    let m = Manifest::load(&cfg.artifacts_dir()).unwrap();
+    for ds in ["cora", "citeseer", "pubmed"] {
+        for be in ["ell", "edgewise"] {
+            assert!(m.artifacts.contains_key(&format!("{ds}_{be}_train_step")));
+            assert!(m.artifacts.contains_key(&format!("{ds}_{be}_eval_fwd")));
+        }
+    }
+    for be in ["ell", "edgewise"] {
+        for c in [1, 2, 3, 4] {
+            for kind in [
+                "s0_fwd", "s1_fwd", "s2_fwd", "s3_fwd", "s3loss_bwd",
+                "s2_bwd", "s1_bwd", "s0_bwd",
+            ] {
+                let name = format!("pubmed_{be}_c{c}_{kind}");
+                assert!(m.artifacts.contains_key(&name), "missing {name}");
+            }
+        }
+    }
+}
+
+#[test]
+fn manifest_shapes_match_config_arithmetic() {
+    // The Python padding arithmetic and the Rust mirror must agree —
+    // the cross-language contract check.
+    let cfg = Config::load().unwrap();
+    let m = Manifest::load(&cfg.artifacts_dir()).unwrap();
+    for (name, ds) in &cfg.datasets {
+        let ts = m.artifact(&format!("{name}_ell_train_step")).unwrap();
+        let x = ts.inputs.iter().find(|t| t.name == "x").unwrap();
+        assert_eq!(x.shape, vec![ds.nodes, ds.features]);
+        let ell = ts.inputs.iter().find(|t| t.name == "ell_idx").unwrap();
+        assert_eq!(ell.shape, vec![ds.nodes, ds.ell_k]);
+        let ew = m.artifact(&format!("{name}_edgewise_train_step")).unwrap();
+        let src = ew.inputs.iter().find(|t| t.name == "edge_src").unwrap();
+        assert_eq!(src.shape, vec![ds.e_cap()]);
+    }
+    let pm = cfg.dataset("pubmed").unwrap();
+    for c in [1usize, 2, 3, 4] {
+        let s0 = m.artifact(&format!("pubmed_ell_c{c}_s0_fwd")).unwrap();
+        let x = s0.inputs.iter().find(|t| t.name == "x").unwrap();
+        assert_eq!(x.shape, vec![pm.chunk_nodes(c), pm.features]);
+        let coo = m.artifact(&format!("pubmed_edgewise_c{c}_s0_fwd")).unwrap();
+        let src = coo.inputs.iter().find(|t| t.name == "edge_src").unwrap();
+        assert_eq!(src.shape, vec![pm.chunk_e_cap(c)]);
+    }
+}
+
+#[test]
+fn eval_fwd_executes_and_returns_log_probs() {
+    let cfg = Config::load().unwrap();
+    let eng = engine();
+    let profile = cfg.dataset("cora").unwrap();
+    let ds = generate(profile).unwrap();
+    let exe = eng.executable("cora_ell_eval_fwd").unwrap();
+
+    let params = init_params(profile, &cfg.model, 0);
+    let mut inputs = flatten_params(&params, &eng.manifest.param_order).unwrap();
+    inputs.push(HostTensor::f32(
+        vec![profile.nodes, profile.features],
+        ds.features.clone(),
+    ));
+    let ell = ds.graph.to_ell(profile.ell_k).unwrap();
+    inputs.push(HostTensor::s32(vec![profile.nodes, profile.ell_k], ell.idx));
+    inputs.push(HostTensor::f32(vec![profile.nodes, profile.ell_k], ell.mask));
+
+    let out = exe.run(&inputs).unwrap();
+    assert_eq!(out.len(), 1);
+    let logp = out[0].as_f32().unwrap();
+    assert_eq!(logp.len(), profile.nodes * profile.classes);
+    // Valid log-probabilities: each row logsumexp ~ 0, all finite.
+    for row in logp.chunks(profile.classes).take(64) {
+        let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let lse = m + row.iter().map(|v| (v - m).exp()).sum::<f32>().ln();
+        assert!(lse.abs() < 1e-3, "row lse {lse}");
+        assert!(row.iter().all(|v| v.is_finite()));
+    }
+    let (secs, count) = exe.exec_stats();
+    assert_eq!(count, 1);
+    assert!(secs > 0.0);
+}
+
+#[test]
+fn backends_agree_on_same_graph() {
+    // The DGL-vs-PyG parity check, end to end through compiled HLO:
+    // identical params + graph => near-identical log-probs.
+    let cfg = Config::load().unwrap();
+    let eng = engine();
+    let profile = cfg.dataset("cora").unwrap();
+    let ds = generate(profile).unwrap();
+    let params = init_params(profile, &cfg.model, 3);
+    let flat = flatten_params(&params, &eng.manifest.param_order).unwrap();
+    let x = HostTensor::f32(
+        vec![profile.nodes, profile.features],
+        ds.features.clone(),
+    );
+
+    let ell = ds.graph.to_ell(profile.ell_k).unwrap();
+    let mut in_ell = flat.clone();
+    in_ell.push(x.clone());
+    in_ell.push(HostTensor::s32(vec![profile.nodes, profile.ell_k], ell.idx));
+    in_ell.push(HostTensor::f32(vec![profile.nodes, profile.ell_k], ell.mask));
+    let a = eng.executable("cora_ell_eval_fwd").unwrap().run(&in_ell).unwrap();
+
+    let coo = ds.graph.to_coo(profile.e_cap()).unwrap();
+    let mut in_coo = flat;
+    in_coo.push(x);
+    in_coo.push(HostTensor::s32(vec![profile.e_cap()], coo.src));
+    in_coo.push(HostTensor::s32(vec![profile.e_cap()], coo.dst));
+    in_coo.push(HostTensor::f32(vec![profile.e_cap()], coo.mask));
+    let b = eng
+        .executable("cora_edgewise_eval_fwd")
+        .unwrap()
+        .run(&in_coo)
+        .unwrap();
+
+    let (a, b) = (a[0].as_f32().unwrap(), b[0].as_f32().unwrap());
+    let max_diff = a
+        .iter()
+        .zip(b)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max_diff < 1e-3, "backend disagreement: {max_diff}");
+}
+
+#[test]
+fn input_validation_rejects_drift() {
+    let eng = engine();
+    let exe = eng.executable("cora_ell_eval_fwd").unwrap();
+    // Wrong arity.
+    assert!(exe.run(&[]).is_err());
+    // Right arity, wrong shape on the first input (w1).
+    let mut bad: Vec<HostTensor> = exe
+        .meta
+        .inputs
+        .iter()
+        .map(|m| match m.dtype {
+            Dtype::F32 => HostTensor::zeros_f32(m.shape.clone()),
+            Dtype::S32 => HostTensor::s32(m.shape.clone(), vec![0; m.elements()]),
+            Dtype::U32 => HostTensor::u32(m.shape.clone(), vec![0; m.elements()]),
+        })
+        .collect();
+    bad[0] = HostTensor::zeros_f32(vec![3, 3]);
+    let err = format!("{:#}", exe.run(&bad).unwrap_err());
+    assert!(err.contains("w1"), "error should name the input: {err}");
+}
+
+#[test]
+fn executables_are_cached() {
+    let eng = engine();
+    let a = eng.executable("cora_ell_eval_fwd").unwrap();
+    let b = eng.executable("cora_ell_eval_fwd").unwrap();
+    assert!(std::sync::Arc::ptr_eq(&a, &b));
+}
+
+#[test]
+fn flop_estimates_present_and_ordered() {
+    // The simulator depends on cost-analysis numbers: train_step must
+    // dominate eval_fwd, PubMed must dominate Cora (more nodes*features).
+    let cfg = Config::load().unwrap();
+    let m = Manifest::load(&cfg.artifacts_dir()).unwrap();
+    let f = |n: &str| m.artifact(n).unwrap().flops.unwrap_or(0.0);
+    assert!(f("cora_ell_train_step") > f("cora_ell_eval_fwd"));
+    assert!(f("pubmed_ell_train_step") > f("cora_ell_train_step"));
+    for a in m.artifacts.values() {
+        assert!(a.flops.unwrap_or(0.0) >= 0.0);
+        assert!(!a.outputs.is_empty());
+    }
+}
+
+#[test]
+fn corrupted_hlo_file_fails_at_compile_not_execute() {
+    // Failure injection: a truncated artifact must fail loudly when
+    // loaded, with the artifact name nearby in the error path.
+    use gnn_pipe::runtime::Manifest;
+    let cfg = Config::load().unwrap();
+    let src = Manifest::load(&cfg.artifacts_dir()).unwrap();
+
+    let dir = std::env::temp_dir().join("gnn_pipe_corrupt_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    // Copy manifest, truncate one artifact body.
+    std::fs::copy(
+        cfg.artifacts_dir().join("manifest.json"),
+        dir.join("manifest.json"),
+    )
+    .unwrap();
+    for a in src.artifacts.values() {
+        let body = std::fs::read_to_string(cfg.artifacts_dir().join(&a.file)).unwrap();
+        std::fs::write(dir.join(&a.file), &body[..body.len().min(64)]).unwrap();
+    }
+    let eng = Engine::from_artifacts_dir(&dir).unwrap();
+    assert!(eng.executable("cora_ell_eval_fwd").is_err());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn unknown_artifact_is_a_clean_error() {
+    let eng = engine();
+    let err = match eng.executable("nope_nope") {
+        Err(e) => format!("{e:#}"),
+        Ok(_) => panic!("unknown artifact must error"),
+    };
+    assert!(err.contains("nope_nope"));
+}
+
+#[test]
+fn warm_up_compiles_all_and_reports_time() {
+    let eng = engine();
+    let names = vec![
+        "cora_ell_eval_fwd".to_string(),
+        "cora_edgewise_eval_fwd".to_string(),
+    ];
+    let secs = eng.warm_up(&names).unwrap();
+    assert!(secs >= 0.0);
+    // Second warm-up hits the cache and is near-instant.
+    let secs2 = eng.warm_up(&names).unwrap();
+    assert!(secs2 < secs.max(0.05));
+}

@@ -1,0 +1,335 @@
+//! Property-based invariant suite for the coordinator substrates
+//! (proptest-style via `testutil::prop`; seeds reproducible with
+//! PROP_SEED, case counts scalable with PROP_CASES).
+//!
+//! No artifacts required — everything here is pure host logic.
+
+use gnn_pipe::batching::{
+    retention_stats, ChunkPlan, Chunker, GraphAwareChunker, SequentialChunker,
+};
+use gnn_pipe::graph::induce_subgraph;
+use gnn_pipe::optim::{Adam, Optimizer, Sgd};
+use gnn_pipe::runtime::HostTensor;
+use gnn_pipe::simulator::{simulate_pipeline, PipelineSimInput};
+use gnn_pipe::testutil::{gen, prop};
+use gnn_pipe::util::json::Json;
+
+// ---------------------------------------------------------------------------
+// Chunkers
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_chunk_plans_partition_the_node_set() {
+    prop::check(60, |rng| {
+        let n = 1 + rng.below(400);
+        let g = gen::random_graph(rng, n, 3 * n, 16);
+        let chunks = 1 + rng.below(8);
+        for plan in [
+            SequentialChunker.plan(&g, chunks),
+            GraphAwareChunker.plan(&g, chunks),
+        ] {
+            plan.check(n).expect("partition invariant");
+            assert!(plan.num_chunks() <= chunks);
+            // Chunk capacity: no chunk exceeds ceil(n/chunks) except the
+            // last graph-aware chunk, which absorbs the remainder but
+            // never exceeds the node count.
+            assert!(plan.max_chunk_len() <= n);
+        }
+        // Sequential chunks are torch.chunk-sized exactly.
+        let seq = SequentialChunker.plan(&g, chunks);
+        assert_eq!(seq.max_chunk_len(), n.div_ceil(chunks));
+    });
+}
+
+#[test]
+fn prop_edge_conservation_under_induction() {
+    // Every undirected edge is either kept in exactly one chunk or cut;
+    // cut edges are seen once per inside endpoint => sum(cut) = 2 * lost.
+    prop::check(60, |rng| {
+        let n = 2 + rng.below(300);
+        let g = gen::random_graph(rng, n, 4 * n, 12);
+        let chunks = 1 + rng.below(6);
+        let plan = SequentialChunker.plan(&g, chunks);
+        let subs = plan.induce_all(&g);
+        let kept: usize = subs.iter().map(|s| s.kept_edges).sum();
+        let cut: usize = subs.iter().map(|s| s.cut_edges).sum();
+        assert_eq!(cut % 2, 0, "cut edges counted once per endpoint");
+        assert_eq!(kept + cut / 2, g.num_edges());
+        let stats = retention_stats(&g, &plan);
+        assert_eq!(stats.retained_edges, kept);
+        assert!((0.0..=1.0).contains(&stats.retained_fraction));
+    });
+}
+
+#[test]
+fn prop_single_chunk_is_lossless_any_chunker() {
+    prop::check(40, |rng| {
+        let n = 1 + rng.below(300);
+        let g = gen::random_graph(rng, n, 2 * n, 10);
+        for plan in [
+            SequentialChunker.plan(&g, 1),
+            GraphAwareChunker.plan(&g, 1),
+        ] {
+            let s = retention_stats(&g, &plan);
+            assert_eq!(s.retained_fraction, 1.0);
+            assert_eq!(s.stranded_nodes, 0);
+        }
+    });
+}
+
+#[test]
+fn prop_retention_weakly_decreases_in_chunks_sequential() {
+    prop::check(30, |rng| {
+        let n = 16 + rng.below(300);
+        let g = gen::random_graph(rng, n, 4 * n, 12);
+        // Not strictly monotone for arbitrary graphs, but 1 -> k must not
+        // increase, and k=1 is exactly 1.0.
+        let r1 = retention_stats(&g, &SequentialChunker.plan(&g, 1)).retained_fraction;
+        let rk = retention_stats(
+            &g,
+            &SequentialChunker.plan(&g, 2 + rng.below(6)),
+        )
+        .retained_fraction;
+        assert_eq!(r1, 1.0);
+        assert!(rk <= r1);
+    });
+}
+
+#[test]
+fn prop_induced_subgraph_edges_exist_in_parent() {
+    prop::check(40, |rng| {
+        let n = 4 + rng.below(200);
+        let g = gen::random_graph(rng, n, 3 * n, 10);
+        let take = 1 + rng.below(n);
+        let nodes: Vec<u32> = rng
+            .sample_distinct(n, take)
+            .into_iter()
+            .map(|v| v as u32)
+            .collect();
+        let sub = induce_subgraph(&g, &nodes);
+        for (a, b) in sub.graph.edges() {
+            let (oa, ob) = (sub.nodes[a as usize], sub.nodes[b as usize]);
+            assert!(g.has_edge(oa as usize, ob as usize));
+        }
+    });
+}
+
+#[test]
+fn prop_chunk_plan_check_rejects_corruption() {
+    prop::check(30, |rng| {
+        let n = 10 + rng.below(100);
+        let g = gen::random_graph(rng, n, n, 8);
+        let mut plan = SequentialChunker.plan(&g, 2 + rng.below(3));
+        match rng.below(3) {
+            0 => {
+                // duplicate a node
+                let v = plan.chunks[0][0];
+                plan.chunks.last_mut().unwrap().push(v);
+            }
+            1 => {
+                // drop a node
+                plan.chunks[0].remove(0);
+            }
+            _ => {
+                // out-of-range node
+                plan.chunks[0].push(n as u32 + 7);
+            }
+        }
+        assert!(plan.check(n).is_err());
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Pipeline schedule simulator
+// ---------------------------------------------------------------------------
+
+fn random_sim_input(rng: &mut gnn_pipe::util::rng::Rng) -> PipelineSimInput {
+    let stages = 1 + rng.below(5);
+    let m = 1 + rng.below(6);
+    let r = |rng: &mut gnn_pipe::util::rng::Rng| rng.range_f64(0.001, 2.0);
+    PipelineSimInput {
+        fwd_s: (0..stages)
+            .map(|_| (0..m).map(|_| r(rng)).collect())
+            .collect(),
+        bwd_s: (0..stages)
+            .map(|_| (0..m).map(|_| r(rng)).collect())
+            .collect(),
+        xfer_fwd_s: (0..stages - 1)
+            .map(|_| (0..m).map(|_| r(rng) * 0.1).collect())
+            .collect(),
+        xfer_bwd_s: (0..stages - 1)
+            .map(|_| (0..m).map(|_| r(rng) * 0.1).collect())
+            .collect(),
+        rebuild_s: (0..stages)
+            .map(|_| (0..m).map(|_| r(rng) * 0.2).collect())
+            .collect(),
+    }
+}
+
+#[test]
+fn prop_sim_makespan_bounds() {
+    prop::check(200, |rng| {
+        let inp = random_sim_input(rng);
+        let rep = simulate_pipeline(&inp);
+        // Lower bound: no device finishes before its own busy time.
+        for (s, busy) in rep.busy_s.iter().enumerate() {
+            assert!(
+                rep.makespan_s >= *busy - 1e-9,
+                "stage {s} busy {busy} > makespan {}",
+                rep.makespan_s
+            );
+        }
+        // Upper bound: fully serial execution of everything.
+        let total: f64 = inp.fwd_s.iter().flatten().sum::<f64>()
+            + inp.bwd_s.iter().flatten().sum::<f64>()
+            + inp.xfer_fwd_s.iter().flatten().sum::<f64>()
+            + inp.xfer_bwd_s.iter().flatten().sum::<f64>()
+            + inp.rebuild_s.iter().flatten().sum::<f64>();
+        assert!(rep.makespan_s <= total + 1e-9);
+        assert!((0.0..1.0).contains(&rep.bubble_fraction));
+    });
+}
+
+#[test]
+fn prop_sim_monotone_in_work() {
+    prop::check(100, |rng| {
+        let inp = random_sim_input(rng);
+        let rep = simulate_pipeline(&inp);
+        let mut heavier = inp.clone();
+        let s = rng.below(heavier.fwd_s.len());
+        let m = rng.below(heavier.fwd_s[0].len());
+        heavier.fwd_s[s][m] += 1.0;
+        let rep2 = simulate_pipeline(&heavier);
+        assert!(rep2.makespan_s >= rep.makespan_s - 1e-9);
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Optimisers
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_optimizer_first_step_descends() {
+    prop::check(60, |rng| {
+        let n = 1 + rng.below(32);
+        let w0: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+        let g: Vec<f32> = (0..n)
+            .map(|_| rng.normal() as f32 + 0.001)
+            .collect();
+        for opt_id in 0..2 {
+            let mut opt: Box<dyn Optimizer> = if opt_id == 0 {
+                Box::new(Adam::new(0.01, 0.9, 0.999, 1e-8, 0.0))
+            } else {
+                Box::new(Sgd::new(0.01, 0.0, 0.0))
+            };
+            let mut p = vec![HostTensor::f32(vec![n], w0.clone())];
+            let gr = vec![HostTensor::f32(vec![n], g.clone())];
+            opt.step(&mut p, &gr).unwrap();
+            let w1 = p[0].as_f32().unwrap();
+            for i in 0..n {
+                if g[i].abs() > 1e-6 {
+                    let moved = w1[i] - w0[i];
+                    assert!(
+                        moved * g[i] <= 1e-9,
+                        "{}: param moved along the gradient",
+                        opt.name()
+                    );
+                }
+            }
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// JSON
+// ---------------------------------------------------------------------------
+
+fn random_json(rng: &mut gnn_pipe::util::rng::Rng, depth: usize) -> Json {
+    match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+        0 => Json::Null,
+        1 => Json::Bool(rng.bernoulli(0.5)),
+        2 => Json::Num((rng.normal() * 1e3).round()),
+        3 => Json::Str(format!("s{}-\"q\"\n", rng.below(1000))),
+        4 => Json::Arr((0..rng.below(5)).map(|_| random_json(rng, depth - 1)).collect()),
+        _ => Json::Obj(
+            (0..rng.below(5))
+                .map(|i| (format!("k{i}"), random_json(rng, depth - 1)))
+                .collect(),
+        ),
+    }
+}
+
+#[test]
+fn prop_json_roundtrip() {
+    prop::check(300, |rng| {
+        let v = random_json(rng, 3);
+        let s = v.to_string();
+        let back = Json::parse(&s).expect("serialised json must parse");
+        assert_eq!(v, back, "roundtrip failed for {s}");
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Graph exporters
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_ell_and_coo_counts() {
+    prop::check(60, |rng| {
+        let n = 1 + rng.below(200);
+        let g = gen::random_graph(rng, n, 2 * n, 7);
+        let ell = g.to_ell(8).unwrap();
+        assert_eq!(ell.directed_edges(), 2 * g.num_edges());
+        let coo = g.to_coo(n + 2 * g.num_edges() + rng.below(64)).unwrap();
+        assert_eq!(coo.real, n + 2 * g.num_edges());
+        // mask count equals real entries
+        let live = coo.mask.iter().filter(|&&m| m > 0.0).count();
+        assert_eq!(live, coo.real);
+    });
+}
+
+#[test]
+fn prop_chunkplan_union_preserves_node_order_features() {
+    // gather_* helpers must follow chunk order exactly (the pipeline
+    // depends on row i of a micro-batch being chunk[i]).
+    use gnn_pipe::config::DatasetProfile;
+    use gnn_pipe::data::generate;
+    prop::check(10, |rng| {
+        let profile = DatasetProfile {
+            name: "prop".into(),
+            nodes: 60 + rng.below(100),
+            undirected_edges: 100,
+            features: 8 + rng.below(16),
+            classes: 3,
+            train_per_class: 2,
+            val_size: 5,
+            test_size: 5,
+            homophily: 0.7,
+            feature_density: 0.3,
+            seed: rng.next_u64(),
+            ell_k: 16,
+            edge_pad_multiple: 32,
+        };
+        let ds = generate(&profile).unwrap();
+        let chunks = 2 + rng.below(3);
+        let plan = SequentialChunker.plan(&ds.graph, chunks);
+        let n_pad = profile.nodes.div_ceil(chunks);
+        for chunk in &plan.chunks {
+            let x = ds.gather_features(chunk, n_pad);
+            for (i, &v) in chunk.iter().enumerate() {
+                assert_eq!(
+                    &x[i * profile.features..(i + 1) * profile.features],
+                    ds.feature_row(v as usize)
+                );
+            }
+            // padding rows zeroed
+            for row in chunk.len()..n_pad {
+                assert!(x[row * profile.features..(row + 1) * profile.features]
+                    .iter()
+                    .all(|&v| v == 0.0));
+            }
+        }
+        // sanity: ChunkPlan from chunker really is a ChunkPlan
+        let _: &ChunkPlan = &plan;
+    });
+}
