@@ -6,7 +6,7 @@ use anyhow::Result;
 use crate::metrics::Table;
 use crate::simulator::{Scenarios, DEVICES};
 
-use super::{framework_label, BenchCtx};
+use super::{framework_label, schedule_label, BenchCtx};
 
 /// Figure 1: benchmark training times, single devices vs 4-GPU pipe
 /// (chunk=1, data parallelism disabled), both frameworks, PubMed.
@@ -22,11 +22,15 @@ pub fn bench_fig1(ctx: &BenchCtx) -> Result<String> {
             run.timing.avg_epoch_s(),
         )?;
         let gpu = scen.single_device_epoch("pubmed", backend, &DEVICES.v100)?;
-        let dgx = scen.dgx_pipeline_epoch("pubmed", backend, 1, false, 0.0)?;
+        let dgx = scen.dgx_pipeline_epoch(
+            "pubmed", backend, 1, false, 0.0, ctx.schedule.as_ref(),
+        )?;
+        let dgx_label =
+            format!("DGX 4xGPU {} c=1", schedule_label(ctx.schedule.name()));
         let rows = [
             ("Single CPU", run.timing.avg_epoch_s(), "measured"),
             ("Single GPU", gpu.epoch_s, "sim"),
-            ("DGX 4xGPU GPipe c=1", dgx.epoch_s, "sim"),
+            (dgx_label.as_str(), dgx.epoch_s, "sim"),
         ];
         for (cfgname, secs, src) in rows {
             table.row(&[
@@ -41,8 +45,9 @@ pub fn bench_fig1(ctx: &BenchCtx) -> Result<String> {
     ctx.write_csv("fig1.csv", &csv)?;
     Ok(format!(
         "Figure 1 — training time per epoch, single devices vs pipeline (chunk=1)\n{}\n\
-         paper shape check: DGX+GPipe(c=1) shows NO speedup over single GPU\n",
-        table.render()
+         paper shape check: DGX+{}(c=1) shows NO speedup over single GPU\n",
+        table.render(),
+        schedule_label(ctx.schedule.name()),
     ))
 }
 
@@ -88,6 +93,7 @@ pub fn bench_fig3(ctx: &BenchCtx) -> Result<String> {
         let pr = ctx.pipeline_run(backend, chunks, false, false)?;
         let dgx = scen.dgx_pipeline_epoch(
             "pubmed", backend, chunks, true, pr.host_rebuild_per_chunk_s,
+            ctx.schedule.as_ref(),
         )?;
         let total = dgx.epoch_s * (ctx.epochs - 1) as f64;
         table.row(&[
@@ -104,8 +110,9 @@ pub fn bench_fig3(ctx: &BenchCtx) -> Result<String> {
     }
     ctx.write_csv("fig3.csv", &csv)?;
     Ok(format!(
-        "Figure 3 — training time vs GPipe micro-batch count (PubMed, DGL-like)\n{}\n\
+        "Figure 3 — training time vs {} micro-batch count (PubMed, DGL-like)\n{}\n\
          paper shape check: time INCREASES with chunks (host re-build dominates)\n",
+        schedule_label(ctx.schedule.name()),
         table.render()
     ))
 }

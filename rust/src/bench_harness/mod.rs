@@ -30,3 +30,13 @@ pub fn framework_label(backend: &str) -> &'static str {
         _ => "?",
     }
 }
+
+/// Map schedule names to the labels used in table/figure rows, so a
+/// `--schedule 1f1b` bench session doesn't print its rows as GPipe.
+pub fn schedule_label(schedule: &str) -> &'static str {
+    match schedule {
+        "fill-drain" => "GPipe",
+        "1f1b" => "1F1B",
+        _ => "?",
+    }
+}

@@ -3,7 +3,7 @@
 
 use std::collections::BTreeMap;
 use std::path::PathBuf;
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 use anyhow::Result;
 
@@ -11,7 +11,7 @@ use crate::batching::GraphAwareChunker;
 use crate::config::Config;
 use crate::data::{generate, Dataset};
 use crate::metrics::{Curve, RunTiming};
-use crate::pipeline::{PipelineResult, PipelineTrainer};
+use crate::pipeline::{parse_schedule, PipelineResult, PipelineTrainer, Schedule};
 use crate::runtime::Engine;
 use crate::train::{EvalMetrics, SingleDeviceTrainer};
 
@@ -43,6 +43,10 @@ pub struct BenchCtx {
     pub cfg: Config,
     pub engine: Engine,
     pub epochs: usize,
+    /// Pipeline schedule for every pipeline run AND every DGX
+    /// projection in this bench session (the two must agree for the
+    /// `(sim)` rows to price what the real rows executed).
+    pub schedule: Arc<dyn Schedule>,
     pub results_dir: PathBuf,
     datasets: Mutex<BTreeMap<String, &'static Dataset>>,
     single_cache: Mutex<BTreeMap<String, SingleRun>>,
@@ -50,7 +54,17 @@ pub struct BenchCtx {
 }
 
 impl BenchCtx {
+    /// Context with the schedule named in `configs/pipeline.json` (the
+    /// same default the CLI resolves when `--schedule` is absent).
     pub fn new(epochs: usize) -> Result<BenchCtx> {
+        let cfg = Config::load()?;
+        Self::with_schedule(epochs, parse_schedule(&cfg.pipeline.schedule)?)
+    }
+
+    pub fn with_schedule(
+        epochs: usize,
+        schedule: Arc<dyn Schedule>,
+    ) -> Result<BenchCtx> {
         let cfg = Config::load()?;
         let engine = Engine::from_artifacts_dir(&cfg.artifacts_dir())?;
         let results_dir = cfg.root.join("results");
@@ -59,6 +73,7 @@ impl BenchCtx {
             cfg,
             engine,
             epochs,
+            schedule,
             results_dir,
             datasets: Mutex::new(BTreeMap::new()),
             single_cache: Mutex::new(BTreeMap::new()),
@@ -110,18 +125,24 @@ impl BenchCtx {
         star: bool,
         graph_aware: bool,
     ) -> Result<PipelineRun> {
-        let key = format!("{backend}/c{chunks}/star={star}/aware={graph_aware}/{}", self.epochs);
+        let key = format!(
+            "{backend}/c{chunks}/star={star}/aware={graph_aware}/{}/{}",
+            self.schedule.name(),
+            self.epochs
+        );
         if let Some(r) = self.pipeline_cache.lock().unwrap().get(&key) {
             return Ok(r.clone());
         }
         let ds_name = self.cfg.pipeline.pipeline_dataset.clone();
         eprintln!(
-            "[bench] pipeline {ds_name}/{backend} chunks={chunks}{} for {} epochs...",
+            "[bench] pipeline {ds_name}/{backend} chunks={chunks}{} schedule={} for {} epochs...",
             if star { "*" } else { "" },
+            self.schedule.name(),
             self.epochs
         );
         let ds = self.dataset(&ds_name)?;
         let mut trainer = PipelineTrainer::new(&self.engine, ds, backend, chunks);
+        trainer.schedule = self.schedule.clone();
         if star {
             trainer = trainer.full_graph_variant();
         }

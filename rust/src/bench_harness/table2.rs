@@ -15,7 +15,7 @@ use anyhow::Result;
 use crate::metrics::Table;
 use crate::simulator::{Scenarios, DEVICES};
 
-use super::{framework_label, BenchCtx};
+use super::{framework_label, schedule_label, BenchCtx};
 
 /// The paper's DGX epoch-1 "setup" (CUDA context + GPipe init) was ~7 s;
 /// our projected DGX rows reuse that constant so the Epoch-1 column keeps
@@ -84,9 +84,11 @@ pub fn bench_table2(ctx: &BenchCtx) -> Result<String> {
         );
         // --- DGX chunk = 1*: full graph in model ------------------------
         let star = ctx.pipeline_run(backend, 1, true, false)?;
-        let dgx = scen.dgx_pipeline_epoch("pubmed", backend, 1, false, 0.0)?;
+        let dgx = scen.dgx_pipeline_epoch(
+            "pubmed", backend, 1, false, 0.0, ctx.schedule.as_ref(),
+        )?;
         push(
-            fw, "DGX GPipe Chunk=1*",
+            fw, &format!("DGX {} Chunk=1*", schedule_label(ctx.schedule.name())),
             DGX_SETUP_S, dgx.epoch_s * (epochs - 1) as f64, dgx.epoch_s,
             star.pipeline_eval.train_loss, star.pipeline_eval.train_acc,
             star.pipeline_eval.val_acc,
@@ -107,9 +109,11 @@ pub fn bench_table2(ctx: &BenchCtx) -> Result<String> {
         let pr = ctx.pipeline_run(backend, chunks, false, false)?;
         let dgx = scen.dgx_pipeline_epoch(
             "pubmed", backend, chunks, true, pr.host_rebuild_per_chunk_s,
+            ctx.schedule.as_ref(),
         )?;
         push(
-            fw, &format!("DGX GPipe Chunk={chunks}"),
+            fw,
+            &format!("DGX {} Chunk={chunks}", schedule_label(ctx.schedule.name())),
             DGX_SETUP_S, dgx.epoch_s * (epochs - 1) as f64, dgx.epoch_s,
             pr.pipeline_eval.train_loss, pr.pipeline_eval.train_acc,
             pr.pipeline_eval.val_acc,

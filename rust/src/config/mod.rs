@@ -98,6 +98,10 @@ pub struct PipelineConfig {
     pub chunks: Vec<usize>,
     pub pipeline_dataset: String,
     pub pipeline_backends: Vec<String>,
+    /// Default pipeline schedule name ("fill-drain" or "1f1b");
+    /// overridable per run with `--schedule`. Parsed by
+    /// `pipeline::parse_schedule`.
+    pub schedule: String,
 }
 
 #[derive(Debug, Clone)]
@@ -186,6 +190,12 @@ impl Config {
                 .iter()
                 .filter_map(|j| j.as_str().map(String::from))
                 .collect(),
+            // Optional key: older configs predate schedules.
+            schedule: p
+                .get("schedule")
+                .and_then(Json::as_str)
+                .unwrap_or("fill-drain")
+                .to_string(),
         };
 
         Ok(Config { root: root.to_path_buf(), datasets, model, pipeline })
@@ -216,6 +226,8 @@ mod tests {
         assert_eq!(c.model.heads, 8);
         assert_eq!(c.pipeline.devices, 4);
         assert_eq!(c.pipeline.balance, vec![2, 1, 2, 1]);
+        // The schedule key is optional and defaults to the paper's.
+        assert!(c.pipeline.schedule == "fill-drain" || c.pipeline.schedule == "1f1b");
     }
 
     #[test]

@@ -7,11 +7,14 @@
 //!
 //! * **L1/L2 (build time)** — `python/compile` authors the GAT model and
 //!   its Pallas kernels and AOT-lowers them to HLO-text artifacts.
-//! * **L3 (this crate)** — the GPipe coordinator: synthetic citation
-//!   datasets, micro-batch chunkers, the fill-drain pipeline engine with
-//!   rematerialised backward, Adam, the training loops, the device/DGX
-//!   performance simulator, and the bench harness that regenerates every
-//!   table and figure of the paper.
+//! * **L3 (this crate)** — the pipeline coordinator: synthetic citation
+//!   datasets, micro-batch chunkers, a generic N-stage pipeline engine
+//!   (declarative [`pipeline::PipelineSpec`] + pluggable
+//!   [`pipeline::Schedule`] — GPipe fill-drain or 1F1B — with
+//!   rematerialised backward), Adam, the training loops, the device/DGX
+//!   performance simulator (which replays the same schedules to price
+//!   bubbles), and the bench harness that regenerates every table and
+//!   figure of the paper.
 //!
 //! Python never runs on the training path: after `make artifacts` the
 //! binary is self-contained, executing the HLO via the PJRT CPU client.

@@ -4,9 +4,11 @@
 //!   data      [--dataset cora|citeseer|pubmed]       synth stats vs profile
 //!   train     --dataset D --backend B [--epochs N]   single-device training
 //!   pipeline  --backend B --chunks K [--epochs N]
-//!             [--star] [--graph-aware]               GPipe pipeline training
+//!             [--schedule fill-drain|1f1b]
+//!             [--star] [--graph-aware]               pipeline training
 //!   bench     table1|table2|fig1|fig2|fig3|fig4|
-//!             ablation-chunker|edge-retention|all [--epochs N]
+//!             ablation-chunker|edge-retention|all
+//!             [--epochs N] [--schedule S]
 //!   inspect                                          artifact manifest summary
 //!
 //! Run `make artifacts` before anything that executes HLO.
@@ -18,7 +20,7 @@ use gnn_pipe::bench_harness as bench;
 use gnn_pipe::config::Config;
 use gnn_pipe::data::generate;
 use gnn_pipe::graph::GraphStats;
-use gnn_pipe::pipeline::PipelineTrainer;
+use gnn_pipe::pipeline::{parse_schedule, PipelineTrainer};
 use gnn_pipe::runtime::{Engine, Manifest};
 use gnn_pipe::train::SingleDeviceTrainer;
 use gnn_pipe::util::cli::Args;
@@ -29,9 +31,16 @@ gnn-pipe — pipe-parallel GAT training (paper reproduction)
 USAGE:
   gnn-pipe data      [--dataset <name>]
   gnn-pipe train     --dataset <name> --backend <ell|edgewise> [--epochs N] [--seed S]
-  gnn-pipe pipeline  [--backend <ell|edgewise>] [--chunks K] [--epochs N] [--star] [--graph-aware]
-  gnn-pipe bench     <table1|table2|fig1|fig2|fig3|fig4|ablation-chunker|edge-retention|all> [--epochs N]
+  gnn-pipe pipeline  [--backend <ell|edgewise>] [--chunks K] [--epochs N]
+                     [--schedule fill-drain|1f1b] [--star] [--graph-aware]
+  gnn-pipe bench     <table1|table2|fig1|fig2|fig3|fig4|ablation-chunker|edge-retention|all>
+                     [--epochs N] [--schedule fill-drain|1f1b]
   gnn-pipe inspect
+
+SCHEDULES (--schedule, default from configs/pipeline.json):
+  fill-drain   GPipe: all forwards, then all backwards (the paper's schedule)
+  1f1b         PipeDream-flush: interleave after warm-up; same gradients,
+               lower peak activation memory, never a larger bubble
 ";
 
 fn main() {
@@ -145,11 +154,13 @@ fn cmd_pipeline(args: &Args) -> Result<()> {
     let chunks = args.opt_usize("chunks", 1)?;
     let epochs = args.opt_usize("epochs", cfg.model.epochs)?;
     let star = args.flag("star");
+    let schedule = parse_schedule(args.opt_str("schedule", &cfg.pipeline.schedule))?;
     let dataset = cfg.pipeline.pipeline_dataset.clone();
 
     let engine = Engine::from_artifacts_dir(&cfg.artifacts_dir())?;
     let ds = generate(cfg.dataset(&dataset)?)?;
     let mut trainer = PipelineTrainer::new(&engine, &ds, &backend, chunks);
+    trainer.schedule = schedule;
     if star {
         trainer = trainer.full_graph_variant();
     }
@@ -157,8 +168,9 @@ fn cmd_pipeline(args: &Args) -> Result<()> {
         trainer.chunker = Box::new(GraphAwareChunker);
     }
     println!(
-        "pipeline training {dataset}/{backend} chunks={chunks}{} ({} devices, balance {:?}) for {epochs} epochs...",
+        "pipeline training {dataset}/{backend} chunks={chunks}{} schedule={} ({} devices, balance {:?}) for {epochs} epochs...",
         if star { "*" } else { "" },
+        trainer.schedule.name(),
         cfg.pipeline.devices,
         cfg.pipeline.balance
     );
@@ -193,7 +205,8 @@ fn cmd_bench(args: &Args) -> Result<()> {
         .to_string();
     let cfg = Config::load()?;
     let epochs = args.opt_usize("epochs", cfg.model.epochs)?;
-    let ctx = bench::BenchCtx::new(epochs)?;
+    let schedule = parse_schedule(args.opt_str("schedule", &cfg.pipeline.schedule))?;
+    let ctx = bench::BenchCtx::with_schedule(epochs, schedule)?;
     let mut outputs = Vec::new();
     let run = |name: &str, ctx: &bench::BenchCtx| -> Result<String> {
         match name {

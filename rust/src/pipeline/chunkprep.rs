@@ -1,6 +1,13 @@
 //! Micro-batch preparation: the host-side work torchgpipe + DGL forced
 //! onto the paper's implementation — chunk the node tensor, re-build
 //! each induced sub-graph, re-index, pad to the compiled shapes.
+//!
+//! A [`Microbatch`] carries every tensor a [`StageSpec`] can declare as
+//! a [`StageInput`] (features, graph tensors, labels+mask); the generic
+//! stage worker picks from it in the artifact's declared input order.
+//!
+//! [`StageSpec`]: super::StageSpec
+//! [`StageInput`]: super::StageInput
 
 use anyhow::Result;
 

@@ -11,6 +11,7 @@
 //!     through the lossy union graph.
 
 use std::collections::BTreeMap;
+use std::sync::Arc;
 
 use anyhow::Result;
 
@@ -26,6 +27,8 @@ use crate::train::{
 
 use super::chunkprep::{lossy_union_graph, prepare_microbatches};
 use super::engine::PipelineEngine;
+use super::schedule::{FillDrain, Schedule};
+use super::spec::PipelineSpec;
 
 pub struct PipelineTrainer<'e> {
     engine: &'e Engine,
@@ -36,6 +39,12 @@ pub struct PipelineTrainer<'e> {
     /// the model, no host re-build). Only valid with chunks == 1.
     pub rebuild: bool,
     pub chunker: Box<dyn Chunker + Send + Sync>,
+    /// Stage layout to train; defaults to the paper's 4-stage GAT.
+    pub spec: PipelineSpec,
+    /// Execution order within a step; defaults to GPipe fill-drain.
+    /// Gradients are schedule-invariant (FIFO accumulation), so this
+    /// only changes timing and peak activation memory.
+    pub schedule: Arc<dyn Schedule>,
     pub seed: u64,
     pub eval_every: usize,
 }
@@ -74,6 +83,8 @@ impl<'e> PipelineTrainer<'e> {
             chunks,
             rebuild: true,
             chunker: Box::new(SequentialChunker),
+            spec: PipelineSpec::gat4(),
+            schedule: Arc::new(FillDrain),
             seed: 0,
             eval_every: 10,
         }
@@ -107,6 +118,8 @@ impl<'e> PipelineTrainer<'e> {
             &p.name,
             &self.backend,
             self.chunks,
+            self.spec.clone(),
+            self.schedule.clone(),
         )?;
         self.engine.warm_up(&pipe.artifact_names)?;
 
@@ -131,8 +144,9 @@ impl<'e> PipelineTrainer<'e> {
         let mut train_loss = Curve::default();
         let mut train_acc = Curve::default();
         let mut val_acc = Curve::default();
-        let mut stage_fwd_sum = vec![0.0f64; 4];
-        let mut stage_bwd_sum = vec![0.0f64; 4];
+        let n_stages = self.spec.num_stages();
+        let mut stage_fwd_sum = vec![0.0f64; n_stages];
+        let mut stage_bwd_sum = vec![0.0f64; n_stages];
         let mut stage_calls = 0usize;
         let setup_s = setup.secs();
 
@@ -201,7 +215,7 @@ impl<'e> PipelineTrainer<'e> {
         let params = unflatten_params(flat, &order)?;
         let pipeline_eval = pipeline_evaluator.metrics(&params)?;
         let full_eval = full_evaluator.metrics(&params)?;
-        let stage_means = (0..4)
+        let stage_means = (0..n_stages)
             .map(|s| {
                 (
                     stage_fwd_sum[s] / stage_calls.max(1) as f64,

@@ -1,18 +1,26 @@
-//! The fill-drain execution engine: stage workers on OS threads,
-//! micro-batches streaming through channels.
+//! The generic pipeline execution engine: one OS-thread worker per
+//! [`StageSpec`], micro-batches streaming over channels in the order a
+//! [`Schedule`] dictates.
 //!
 //! Worker `s` owns the compiled executables of pipeline stage `s`
-//! (fwd + rematerialising bwd) and processes micro-batches FIFO: the
-//! forward wave runs 0→1→2→3 with stage `s` starting micro-batch `m`
-//! as soon as `(m, s-1)` hands over — the GPipe overlap — then the
-//! backward wave drains 3→2→1→0, accumulating parameter gradients
-//! locally at the parameter-owning stages (0 and 2).
+//! (fwd + rematerialising bwd) and executes the event list its schedule
+//! emits: under [`FillDrain`] the forward wave runs `0→…→S-1` with
+//! stage `s` starting micro-batch `m` as soon as `(m, s-1)` hands over —
+//! the GPipe overlap — then the backward wave drains in reverse; under
+//! 1F1B each stage interleaves backwards between forwards after its
+//! warm-up. Parameter gradients accumulate locally at the stages that
+//! own them, in FIFO micro-batch order under every schedule, so the
+//! summed gradients are schedule-invariant bit for bit.
 //!
 //! Everything crossing a stage boundary is a `HostTensor` copy; on the
 //! paper's DGX those copies are the NVLink/PCIe transfers, and the
-//! device simulator prices them from the same shapes.
+//! device simulator prices them from the same shapes — and replays the
+//! same [`Schedule`] event streams (`simulator::simulate_pipeline_with`).
+//!
+//! [`FillDrain`]: super::FillDrain
 
-use std::sync::mpsc;
+use std::collections::BTreeMap;
+use std::sync::mpsc::{self, Receiver, Sender};
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -21,6 +29,8 @@ use anyhow::{Context, Result};
 use crate::runtime::{Engine, Executable, HostTensor};
 
 use super::chunkprep::Microbatch;
+use super::schedule::{Schedule, StageEvent};
+use super::spec::{PipelineSpec, StageInput, StageSpec};
 
 /// Per-stage wall-clock accounting for one epoch.
 #[derive(Debug, Clone, Default)]
@@ -48,24 +58,25 @@ pub struct EpochOutput {
     pub wall_s: f64,
 }
 
-struct StageExecs {
-    s0_fwd: Arc<Executable>,
-    s1_fwd: Arc<Executable>,
-    s2_fwd: Arc<Executable>,
-    s3_fwd: Arc<Executable>,
-    s3loss_bwd: Arc<Executable>,
-    s2_bwd: Arc<Executable>,
-    s1_bwd: Arc<Executable>,
-    s0_bwd: Arc<Executable>,
+/// Compiled executables of one stage.
+struct StageExec {
+    fwd: Arc<Executable>,
+    bwd: Arc<Executable>,
 }
 
-/// A compiled pipeline for one (dataset, backend, chunk-count) triple.
+/// A compiled pipeline for one (dataset, backend, chunk-count) triple,
+/// built from a declarative [`PipelineSpec`] and driven by a
+/// [`Schedule`].
 pub struct PipelineEngine {
-    execs: StageExecs,
+    spec: PipelineSpec,
+    schedule: Arc<dyn Schedule>,
+    execs: Vec<StageExec>,
     pub chunks: usize,
     pub backend: String,
     pub artifact_names: Vec<String>,
 }
+
+type Msg = (usize, HostTensor);
 
 impl PipelineEngine {
     pub fn new(
@@ -73,36 +84,45 @@ impl PipelineEngine {
         dataset: &str,
         backend: &str,
         chunks: usize,
+        spec: PipelineSpec,
+        schedule: Arc<dyn Schedule>,
     ) -> Result<PipelineEngine> {
+        spec.validate()?;
         let name = |kind: &str| format!("{dataset}_{backend}_c{chunks}_{kind}");
-        let kinds = [
-            "s0_fwd", "s1_fwd", "s2_fwd", "s3_fwd", "s3loss_bwd", "s2_bwd",
-            "s1_bwd", "s0_bwd",
-        ];
-        let artifact_names: Vec<String> = kinds.iter().map(|k| name(k)).collect();
-        let get = |kind: &str| engine.executable(&name(kind));
+        let mut artifact_names = Vec::with_capacity(2 * spec.stages.len());
+        let mut execs = Vec::with_capacity(spec.stages.len());
+        for st in &spec.stages {
+            let fwd_name = name(&st.fwd_kind);
+            let bwd_name = name(&st.bwd_kind);
+            execs.push(StageExec {
+                fwd: engine.executable(&fwd_name)?,
+                bwd: engine.executable(&bwd_name)?,
+            });
+            artifact_names.push(fwd_name);
+            artifact_names.push(bwd_name);
+        }
         Ok(PipelineEngine {
-            execs: StageExecs {
-                s0_fwd: get("s0_fwd")?,
-                s1_fwd: get("s1_fwd")?,
-                s2_fwd: get("s2_fwd")?,
-                s3_fwd: get("s3_fwd")?,
-                s3loss_bwd: get("s3loss_bwd")?,
-                s2_bwd: get("s2_bwd")?,
-                s1_bwd: get("s1_bwd")?,
-                s0_bwd: get("s0_bwd")?,
-            },
+            spec,
+            schedule,
+            execs,
             chunks,
             backend: backend.to_string(),
             artifact_names,
         })
     }
 
-    /// Run one synchronous fill-drain pipeline step over the prepared
-    /// micro-batches.
+    pub fn spec(&self) -> &PipelineSpec {
+        &self.spec
+    }
+
+    pub fn schedule_name(&self) -> &'static str {
+        self.schedule.name()
+    }
+
+    /// Run one synchronous pipeline step over the prepared micro-batches.
     ///
-    /// `params` is the full flat parameter vector in manifest order
-    /// (stage 0 takes [0..4], stage 2 takes [4..8]). `key` seeds the
+    /// `params` is the full flat parameter vector in manifest order;
+    /// each stage takes the slice its spec owns. `key` seeds the
     /// per-micro-batch dropout keys: micro-batch m uses
     /// (key.0 + m, key.1), so chunks=1 reproduces the monolithic
     /// train_step bit-for-bit (integration_pipeline.rs asserts this).
@@ -112,220 +132,334 @@ impl PipelineEngine {
         microbatches: &[Microbatch],
         key: (u32, u32),
     ) -> Result<EpochOutput> {
-        anyhow::ensure!(params.len() == 8, "expected 8 flat params");
-        let p1: Vec<HostTensor> = params[0..4].to_vec();
-        let p2: Vec<HostTensor> = params[4..8].to_vec();
+        anyhow::ensure!(
+            params.len() == self.spec.param_count,
+            "expected {} flat params, got {}",
+            self.spec.param_count,
+            params.len()
+        );
         let m_count = microbatches.len();
         anyhow::ensure!(m_count >= 1, "no micro-batches");
+        let n_stages = self.spec.stages.len();
         let mbs: Arc<Vec<Microbatch>> = Arc::new(microbatches.to_vec());
-        let keys: Vec<HostTensor> = (0..m_count)
-            .map(|m| HostTensor::key(key.0.wrapping_add(m as u32), key.1))
-            .collect();
+        let keys: Arc<Vec<HostTensor>> = Arc::new(
+            (0..m_count)
+                .map(|m| HostTensor::key(key.0.wrapping_add(m as u32), key.1))
+                .collect(),
+        );
 
         let wall = Instant::now();
 
-        // Channels between adjacent stages (fwd ->, bwd <-).
-        let (f01_tx, f01_rx) = mpsc::channel::<(usize, HostTensor)>();
-        let (f12_tx, f12_rx) = mpsc::channel::<(usize, HostTensor)>();
-        let (f23_tx, f23_rx) = mpsc::channel::<(usize, HostTensor)>();
-        let (b32_tx, b32_rx) = mpsc::channel::<(usize, HostTensor)>();
-        let (b21_tx, b21_rx) = mpsc::channel::<(usize, HostTensor)>();
-        let (b10_tx, b10_rx) = mpsc::channel::<(usize, HostTensor)>();
+        // One (fwd, bwd) channel pair per stage boundary: fwd b -> b+1,
+        // bwd b+1 -> b. Receivers are not Clone, so build Option slots
+        // each worker takes from.
+        let mut fwd_in: Vec<Option<Receiver<Msg>>> = (0..n_stages).map(|_| None).collect();
+        let mut fwd_out: Vec<Option<Sender<Msg>>> = (0..n_stages).map(|_| None).collect();
+        let mut bwd_in: Vec<Option<Receiver<Msg>>> = (0..n_stages).map(|_| None).collect();
+        let mut bwd_out: Vec<Option<Sender<Msg>>> = (0..n_stages).map(|_| None).collect();
+        for b in 0..n_stages - 1 {
+            let (ftx, frx) = mpsc::channel::<Msg>();
+            fwd_out[b] = Some(ftx);
+            fwd_in[b + 1] = Some(frx);
+            let (btx, brx) = mpsc::channel::<Msg>();
+            bwd_out[b + 1] = Some(btx);
+            bwd_in[b] = Some(brx);
+        }
 
-        let e = &self.execs;
-        let keys = Arc::new(keys);
-
-        let result: Result<EpochOutput> = std::thread::scope(|scope| {
-            // ---- worker 0: [Dropout, GAT1] --------------------------------
-            let w0 = {
-                let mbs = mbs.clone();
-                let keys = keys.clone();
-                let p1 = p1.clone();
-                let (s0f, s0b) = (e.s0_fwd.clone(), e.s0_bwd.clone());
-                scope.spawn(move || -> Result<(Vec<HostTensor>, StageTiming)> {
-                    let mut t = StageTiming::default();
-                    let busy = Instant::now();
-                    for (m, mb) in mbs.iter().enumerate() {
-                        let mut inp = p1.clone();
-                        inp.push(mb.x.clone());
-                        inp.extend(mb.graph.iter().cloned());
-                        inp.push(keys[m].clone());
-                        let t0 = Instant::now();
-                        let out = s0f.run(&inp).context("s0_fwd")?;
-                        t.fwd_s.push(t0.elapsed().as_secs_f64());
-                        f01_tx.send((m, out.into_iter().next().unwrap())).ok();
-                    }
-                    // gradient accumulators for stage-0 params
-                    let mut acc: Vec<HostTensor> =
-                        p1.iter().map(|p| HostTensor::zeros_f32(p.shape().to_vec())).collect();
-                    for _ in 0..mbs.len() {
-                        let (m, dh0) = b10_rx.recv().context("b10 closed")?;
-                        let mb = &mbs[m];
-                        let mut inp = p1.clone();
-                        inp.push(mb.x.clone());
-                        inp.extend(mb.graph.iter().cloned());
-                        inp.push(keys[m].clone());
-                        inp.push(dh0);
-                        let t0 = Instant::now();
-                        let dps = s0b.run(&inp).context("s0_bwd")?;
-                        t.bwd_s.push(t0.elapsed().as_secs_f64());
-                        accumulate(&mut acc, &dps)?;
-                    }
-                    t.busy_s = busy.elapsed().as_secs_f64();
-                    Ok((acc, t))
-                })
-            };
-
-            // ---- worker 1: [ELU, Dropout] ---------------------------------
-            let w1 = {
-                let keys = keys.clone();
-                let m_total = m_count;
-                let (s1f, s1b) = (e.s1_fwd.clone(), e.s1_bwd.clone());
-                scope.spawn(move || -> Result<StageTiming> {
-                    let mut t = StageTiming::default();
-                    let busy = Instant::now();
-                    let mut stash: Vec<Option<HostTensor>> = vec![None; m_total];
-                    for _ in 0..m_total {
-                        let (m, h0) = f01_rx.recv().context("f01 closed")?;
-                        let t0 = Instant::now();
-                        let out = s1f.run(&[h0.clone(), keys[m].clone()]).context("s1_fwd")?;
-                        t.fwd_s.push(t0.elapsed().as_secs_f64());
-                        stash[m] = Some(h0);
-                        f12_tx.send((m, out.into_iter().next().unwrap())).ok();
-                    }
-                    for _ in 0..m_total {
-                        let (m, dh1) = b21_rx.recv().context("b21 closed")?;
-                        let h0 = stash[m].take().context("missing stash")?;
-                        let t0 = Instant::now();
-                        let out = s1b.run(&[h0, keys[m].clone(), dh1]).context("s1_bwd")?;
-                        t.bwd_s.push(t0.elapsed().as_secs_f64());
-                        b10_tx.send((m, out.into_iter().next().unwrap())).ok();
-                    }
-                    t.busy_s = busy.elapsed().as_secs_f64();
-                    Ok(t)
-                })
-            };
-
-            // ---- worker 2: [GAT2] -----------------------------------------
-            let w2 = {
-                let mbs = mbs.clone();
-                let keys = keys.clone();
-                let p2 = p2.clone();
-                let (s2f, s2b) = (e.s2_fwd.clone(), e.s2_bwd.clone());
-                scope.spawn(move || -> Result<(Vec<HostTensor>, StageTiming)> {
-                    let mut t = StageTiming::default();
-                    let busy = Instant::now();
-                    let mut stash: Vec<Option<HostTensor>> = vec![None; mbs.len()];
-                    for _ in 0..mbs.len() {
-                        let (m, h1) = f12_rx.recv().context("f12 closed")?;
-                        let mb = &mbs[m];
-                        let mut inp = p2.clone();
-                        inp.push(h1.clone());
-                        inp.extend(mb.graph.iter().cloned());
-                        inp.push(keys[m].clone());
-                        let t0 = Instant::now();
-                        let out = s2f.run(&inp).context("s2_fwd")?;
-                        t.fwd_s.push(t0.elapsed().as_secs_f64());
-                        stash[m] = Some(h1);
-                        f23_tx.send((m, out.into_iter().next().unwrap())).ok();
-                    }
-                    let mut acc: Vec<HostTensor> =
-                        p2.iter().map(|p| HostTensor::zeros_f32(p.shape().to_vec())).collect();
-                    for _ in 0..mbs.len() {
-                        let (m, dlg) = b32_rx.recv().context("b32 closed")?;
-                        let mb = &mbs[m];
-                        let h1 = stash[m].take().context("missing stash")?;
-                        let mut inp = p2.clone();
-                        inp.push(h1);
-                        inp.extend(mb.graph.iter().cloned());
-                        inp.push(keys[m].clone());
-                        inp.push(dlg);
-                        let t0 = Instant::now();
-                        let mut out = s2b.run(&inp).context("s2_bwd")?;
-                        t.bwd_s.push(t0.elapsed().as_secs_f64());
-                        let dh1 = out.pop().context("s2_bwd outputs")?;
-                        accumulate(&mut acc, &out)?;
-                        b21_tx.send((m, dh1)).ok();
-                    }
-                    t.busy_s = busy.elapsed().as_secs_f64();
-                    Ok((acc, t))
-                })
-            };
-
-            // ---- worker 3: [LogSoftmax + loss] ----------------------------
-            let w3 = {
-                let mbs = mbs.clone();
-                let (s3f, s3b) = (e.s3_fwd.clone(), e.s3loss_bwd.clone());
-                scope.spawn(move || -> Result<(f64, f64, Vec<(Vec<u32>, Vec<f32>)>, StageTiming)> {
-                    let mut t = StageTiming::default();
-                    let busy = Instant::now();
-                    let mut loss_sum = 0.0f64;
-                    let mut mask_count = 0.0f64;
-                    let mut logps: Vec<(Vec<u32>, Vec<f32>)> =
-                        vec![Default::default(); mbs.len()];
-                    for _ in 0..mbs.len() {
-                        let (m, lg) = f23_rx.recv().context("f23 closed")?;
-                        let mb = &mbs[m];
-                        let t0 = Instant::now();
-                        let logp = s3f.run(&[lg.clone()]).context("s3_fwd")?;
-                        t.fwd_s.push(t0.elapsed().as_secs_f64());
-                        logps[m] =
-                            (mb.nodes.clone(), logp[0].as_f32()?.to_vec());
-                        // loss + dlogits (fused LogSoftmax+NLL backward)
-                        let t1 = Instant::now();
-                        let out = s3b
-                            .run(&[lg, mb.labels.clone(), mb.mask.clone()])
-                            .context("s3loss_bwd")?;
-                        t.bwd_s.push(t1.elapsed().as_secs_f64());
-                        loss_sum += out[0].scalar_value()? as f64;
-                        mask_count += out[1].scalar_value()? as f64;
-                        b32_tx.send((m, out[2].clone())).ok();
-                    }
-                    t.busy_s = busy.elapsed().as_secs_f64();
-                    Ok((loss_sum, mask_count, logps, t))
-                })
-            };
+        std::thread::scope(|scope| {
+            let mut handles = Vec::with_capacity(n_stages);
+            for (s, (st, ex)) in self.spec.stages.iter().zip(&self.execs).enumerate() {
+                let worker = StageWorker {
+                    stage: s,
+                    spec: st,
+                    fwd: ex.fwd.clone(),
+                    bwd: ex.bwd.clone(),
+                    params: params[st.params.0..st.params.1].to_vec(),
+                    mbs: mbs.clone(),
+                    keys: keys.clone(),
+                    events: self.schedule.events(s, n_stages, m_count),
+                    fwd_in: fwd_in[s].take(),
+                    fwd_out: fwd_out[s].take(),
+                    bwd_in: bwd_in[s].take(),
+                    bwd_out: bwd_out[s].take(),
+                };
+                handles.push(scope.spawn(move || worker.run()));
+            }
 
             // Join everything, then report the most informative error: a
-            // failing stage tears its channels down, so peers see "closed"
-            // — the real failure is the one that does NOT mention a channel.
-            let r0 = w0.join().expect("worker 0 panicked");
-            let r1 = w1.join().expect("worker 1 panicked");
-            let r2 = w2.join().expect("worker 2 panicked");
-            let r3 = w3.join().expect("worker 3 panicked");
-            let errs: Vec<String> = [
-                r0.as_ref().err().map(|e| format!("{e:#}")),
-                r1.as_ref().err().map(|e| format!("{e:#}")),
-                r2.as_ref().err().map(|e| format!("{e:#}")),
-                r3.as_ref().err().map(|e| format!("{e:#}")),
-            ]
-            .into_iter()
-            .flatten()
-            .collect();
+            // failing stage tears its channels down, so peers see their
+            // sends/receives fail with "channel closed" — the root cause
+            // is the one error that does NOT mention a closed channel.
+            let results: Vec<Result<WorkerOutput>> = handles
+                .into_iter()
+                .map(|h| h.join().expect("stage worker panicked"))
+                .collect();
+            let errs: Vec<String> = results
+                .iter()
+                .filter_map(|r| r.as_ref().err().map(|e| format!("{e:#}")))
+                .collect();
             if !errs.is_empty() {
                 let root = errs
                     .iter()
-                    .find(|e| !e.contains("closed"))
+                    .find(|e| !e.contains("channel closed"))
                     .unwrap_or(&errs[0]);
                 anyhow::bail!("pipeline stage failed: {root}");
             }
-            let (acc1, t0s) = r0.unwrap();
-            let t1s = r1.unwrap();
-            let (acc2, t2s) = r2.unwrap();
-            let (loss_sum, mask_count, logp, t3s) = r3.unwrap();
 
-            let mut grads = acc1;
-            grads.extend(acc2);
+            let mut loss_sum = 0.0f64;
+            let mut mask_count = 0.0f64;
+            let mut logp: Vec<(Vec<u32>, Vec<f32>)> = Vec::new();
+            let mut stage_timings = Vec::with_capacity(n_stages);
+            let mut owned_grads: Vec<(usize, Vec<HostTensor>)> = Vec::new();
+            for (st, out) in self.spec.stages.iter().zip(results) {
+                let out = out.unwrap();
+                loss_sum += out.loss_sum;
+                mask_count += out.mask_count;
+                stage_timings.push(out.timing);
+                if !out.logp.is_empty() {
+                    logp = out.logp;
+                }
+                if st.param_count() > 0 {
+                    owned_grads.push((st.params.0, out.grads));
+                }
+            }
+            // Stage-local accumulators concatenate back into the flat
+            // manifest order (validate() guarantees the slices tile it).
+            owned_grads.sort_by_key(|(start, _)| *start);
+            let grads: Vec<HostTensor> =
+                owned_grads.into_iter().flat_map(|(_, g)| g).collect();
+
             Ok(EpochOutput {
                 loss_sum,
                 mask_count,
                 grads,
                 logp,
-                stage_timings: vec![t0s, t1s, t2s, t3s],
+                stage_timings,
                 wall_s: wall.elapsed().as_secs_f64(),
             })
-        });
-        result
+        })
+    }
+}
+
+/// Everything one stage worker produces in an epoch. Loss fields are
+/// zero and `logp` empty on every stage but the final (loss) stage;
+/// `grads` is empty on stages that own no parameters.
+#[derive(Default)]
+struct WorkerOutput {
+    grads: Vec<HostTensor>,
+    timing: StageTiming,
+    loss_sum: f64,
+    mask_count: f64,
+    logp: Vec<(Vec<u32>, Vec<f32>)>,
+}
+
+/// The generic stage worker: executes one schedule-ordered event list
+/// against the stage's compiled executables. Replaces the four bespoke
+/// per-stage closures of the fixed 4-stage engine.
+struct StageWorker<'a> {
+    stage: usize,
+    spec: &'a StageSpec,
+    fwd: Arc<Executable>,
+    bwd: Arc<Executable>,
+    /// This stage's owned parameter slice (cloned per epoch).
+    params: Vec<HostTensor>,
+    mbs: Arc<Vec<Microbatch>>,
+    keys: Arc<Vec<HostTensor>>,
+    events: Vec<StageEvent>,
+    fwd_in: Option<Receiver<Msg>>,
+    fwd_out: Option<Sender<Msg>>,
+    bwd_in: Option<Receiver<Msg>>,
+    bwd_out: Option<Sender<Msg>>,
+}
+
+impl StageWorker<'_> {
+    fn run(mut self) -> Result<WorkerOutput> {
+        let m_count = self.mbs.len();
+        // The final stage derives the loss; the first has no upstream.
+        let is_loss = self.fwd_out.is_none();
+        let is_first = self.bwd_out.is_none();
+        let mut fwd_inbox = self.fwd_in.take().map(OrderedInbox::new);
+        let mut bwd_inbox = self.bwd_in.take().map(OrderedInbox::new);
+        let mut stash: Vec<Option<HostTensor>> = vec![None; m_count];
+        let mut acc: Vec<HostTensor> = self
+            .params
+            .iter()
+            .map(|p| HostTensor::zeros_f32(p.shape().to_vec()))
+            .collect();
+        let mut timing = StageTiming::default();
+        let mut loss_sum = 0.0f64;
+        let mut mask_count = 0.0f64;
+        let mut logp: Vec<(Vec<u32>, Vec<f32>)> =
+            if is_loss { vec![Default::default(); m_count] } else { Vec::new() };
+        let busy = Instant::now();
+
+        for &ev in &self.events {
+            match ev {
+                StageEvent::Fwd(m) => {
+                    let inbound = match &mut fwd_inbox {
+                        Some(inbox) => Some(inbox.recv(m, self.stage, "activation")?),
+                        None => None,
+                    };
+                    let inp =
+                        self.assemble(&self.spec.fwd_inputs, m, inbound.as_ref())?;
+                    let t0 = Instant::now();
+                    let out = self.fwd.run(&inp).with_context(|| {
+                        format!("stage {} fwd (micro-batch {m})", self.stage)
+                    })?;
+                    timing.fwd_s.push(t0.elapsed().as_secs_f64());
+                    // GPipe rematerialisation: stash only the stage input.
+                    if self.spec.stashes_activation() {
+                        stash[m] = inbound;
+                    }
+                    let primary = out
+                        .into_iter()
+                        .next()
+                        .with_context(|| format!("stage {} fwd has no outputs", self.stage))?;
+                    if let Some(tx) = &self.fwd_out {
+                        send_link(tx, m, primary, self.stage, "activation")?;
+                    } else {
+                        // Final stage: the forward emits the log-probs
+                        // the trainer records for training accuracy.
+                        logp[m] =
+                            (self.mbs[m].nodes.clone(), primary.as_f32()?.to_vec());
+                    }
+                }
+                StageEvent::Bwd(m) => {
+                    let cotangent = match &mut bwd_inbox {
+                        Some(inbox) => Some(inbox.recv(m, self.stage, "cotangent")?),
+                        None => None,
+                    };
+                    let stashed = if self.spec.stashes_activation() {
+                        Some(stash[m].take().with_context(|| {
+                            format!(
+                                "stage {}: no stashed activation for micro-batch {m} \
+                                 (schedule ran Bwd before Fwd?)",
+                                self.stage
+                            )
+                        })?)
+                    } else {
+                        None
+                    };
+                    let mut inp =
+                        self.assemble(&self.spec.bwd_inputs, m, stashed.as_ref())?;
+                    if let Some(g) = cotangent {
+                        inp.push(g);
+                    }
+                    let t0 = Instant::now();
+                    let mut out = self.bwd.run(&inp).with_context(|| {
+                        format!("stage {} bwd (micro-batch {m})", self.stage)
+                    })?;
+                    timing.bwd_s.push(t0.elapsed().as_secs_f64());
+                    let upstream = if is_first {
+                        None
+                    } else {
+                        Some(out.pop().with_context(|| {
+                            format!("stage {} bwd emitted no upstream cotangent", self.stage)
+                        })?)
+                    };
+                    if is_loss {
+                        anyhow::ensure!(
+                            out.len() >= 2,
+                            "loss-stage bwd must emit (loss_sum, mask_count, ...)"
+                        );
+                        loss_sum += out[0].scalar_value()? as f64;
+                        mask_count += out[1].scalar_value()? as f64;
+                        out.drain(..2);
+                    }
+                    accumulate(&mut acc, &out)?;
+                    if let (Some(tx), Some(g)) = (&self.bwd_out, upstream) {
+                        send_link(tx, m, g, self.stage, "cotangent")?;
+                    }
+                }
+            }
+        }
+        timing.busy_s = busy.elapsed().as_secs_f64();
+        Ok(WorkerOutput { grads: acc, timing, loss_sum, mask_count, logp })
+    }
+
+    /// Build an executable input list: the stage's parameter slice, then
+    /// each declared [`StageInput`] in order.
+    fn assemble(
+        &self,
+        inputs: &[StageInput],
+        m: usize,
+        activation: Option<&HostTensor>,
+    ) -> Result<Vec<HostTensor>> {
+        let mb = &self.mbs[m];
+        let mut inp = self.params.clone();
+        for i in inputs {
+            match i {
+                StageInput::Activation => inp.push(
+                    activation
+                        .with_context(|| {
+                            format!("stage {}: no activation for micro-batch {m}", self.stage)
+                        })?
+                        .clone(),
+                ),
+                StageInput::Features => inp.push(mb.x.clone()),
+                StageInput::Graph => inp.extend(mb.graph.iter().cloned()),
+                StageInput::Key => inp.push(self.keys[m].clone()),
+                StageInput::LabelsMask => {
+                    inp.push(mb.labels.clone());
+                    inp.push(mb.mask.clone());
+                }
+            }
+        }
+        Ok(inp)
+    }
+}
+
+/// Send over a stage link, surfacing the failure instead of dropping it:
+/// a send only fails when the peer worker exited, so the error is marked
+/// "channel closed" and the epoch-level triage reports the peer's own
+/// error as the root cause.
+fn send_link(
+    tx: &Sender<Msg>,
+    m: usize,
+    t: HostTensor,
+    stage: usize,
+    what: &str,
+) -> Result<()> {
+    tx.send((m, t)).map_err(|_| {
+        anyhow::anyhow!(
+            "stage {stage}: {what} channel closed sending micro-batch {m} \
+             (peer stage failed)"
+        )
+    })
+}
+
+/// Receive a specific micro-batch from a stage link. The two shipped
+/// schedules are per-direction FIFO on both ends (the `Schedule`
+/// contract), so arrivals already match consumption order and the
+/// buffer stays empty — it exists so a custom `Schedule` that consumes
+/// a direction out of order still executes correctly instead of
+/// deadlocking on a strict in-order recv.
+struct OrderedInbox {
+    rx: Receiver<Msg>,
+    pending: BTreeMap<usize, HostTensor>,
+}
+
+impl OrderedInbox {
+    fn new(rx: Receiver<Msg>) -> OrderedInbox {
+        OrderedInbox { rx, pending: BTreeMap::new() }
+    }
+
+    fn recv(&mut self, m: usize, stage: usize, what: &str) -> Result<HostTensor> {
+        if let Some(t) = self.pending.remove(&m) {
+            return Ok(t);
+        }
+        loop {
+            let (i, t) = self.rx.recv().map_err(|_| {
+                anyhow::anyhow!(
+                    "stage {stage}: {what} channel closed waiting for micro-batch {m} \
+                     (peer stage failed)"
+                )
+            })?;
+            if i == m {
+                return Ok(t);
+            }
+            self.pending.insert(i, t);
+        }
     }
 }
 
@@ -361,5 +495,39 @@ mod tests {
         let mut acc = vec![HostTensor::zeros_f32(vec![3])];
         let d = vec![HostTensor::zeros_f32(vec![4])];
         assert!(accumulate(&mut acc, &d).is_err());
+    }
+
+    #[test]
+    fn ordered_inbox_buffers_out_of_order_arrivals() {
+        let (tx, rx) = mpsc::channel::<Msg>();
+        tx.send((1, HostTensor::scalar_f32(1.0))).unwrap();
+        tx.send((0, HostTensor::scalar_f32(0.0))).unwrap();
+        tx.send((2, HostTensor::scalar_f32(2.0))).unwrap();
+        let mut inbox = OrderedInbox::new(rx);
+        for m in 0..3 {
+            let t = inbox.recv(m, 0, "test").unwrap();
+            assert_eq!(t.scalar_value().unwrap(), m as f32);
+        }
+    }
+
+    #[test]
+    fn ordered_inbox_reports_closed_channel() {
+        let (tx, rx) = mpsc::channel::<Msg>();
+        drop(tx);
+        let mut inbox = OrderedInbox::new(rx);
+        let err = inbox.recv(0, 2, "activation").unwrap_err().to_string();
+        assert!(err.contains("channel closed"), "{err}");
+        assert!(err.contains("stage 2"), "{err}");
+    }
+
+    #[test]
+    fn send_link_reports_closed_channel() {
+        let (tx, rx) = mpsc::channel::<Msg>();
+        drop(rx);
+        let err = send_link(&tx, 3, HostTensor::scalar_f32(0.0), 1, "cotangent")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("channel closed"), "{err}");
+        assert!(err.contains("micro-batch 3"), "{err}");
     }
 }

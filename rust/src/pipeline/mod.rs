@@ -1,30 +1,52 @@
-//! The GPipe pipeline engine: the paper's coordination contribution.
+//! The pipeline-parallel training engine: the paper's coordination
+//! contribution, generalised from a fixed 4-stage GAT to any staged
+//! model the artifact manifest describes.
 //!
-//! The six-module GAT sequence is balanced over `devices` stage workers
-//! ([2,1,2,1] — paper Listing 1); each worker is an OS thread owning its
-//! stage's compiled executables. One training step:
+//! Three declarative pieces compose one training step:
+//!
+//! * **[`PipelineSpec`]** — a `Vec<StageSpec>` naming, per stage, the
+//!   fwd/bwd artifact kinds, the extra micro-batch inputs it consumes
+//!   ([`StageInput`]: features, graph tensors, dropout key,
+//!   labels+mask), and the flat-parameter slice it owns. The paper's
+//!   [2,1,2,1] GAT partition is [`PipelineSpec::gat4`].
+//! * **[`Schedule`]** — emits each worker's ordered `{Fwd(m), Bwd(m)}`
+//!   event list. [`FillDrain`] is GPipe (the paper's schedule: fill the
+//!   forward wave, drain the backward wave); [`OneFOneB`] is
+//!   PipeDream-flush (interleave after warm-up; same gradients, lower
+//!   peak activation memory). The device simulator replays the same
+//!   event streams to price bubbles per schedule.
+//! * **[`PipelineEngine`]** — spawns ONE generic worker per stage on an
+//!   OS thread; workers execute their event list, streaming activations
+//!   and cotangents over channels (the paper's NVLink transfers), with
+//!   *rematerialising* backwards (GPipe checkpointing: only stage
+//!   inputs are stashed).
+//!
+//! One training step:
 //!
 //! 1. **Chunk** — split the node tensor into `chunks` micro-batches
 //!    (torchgpipe semantics via a [`Chunker`]), and for each chunk
 //!    **re-build** the induced sub-graph on the host — the paper's §7.2
 //!    overhead, timed separately.
-//! 2. **Fill-drain schedule** — micro-batches flow forward through the
-//!    stage workers over channels (worker s starts micro-batch m as soon
-//!    as (m, s-1) arrived — the pipeline overlap), then the backward
-//!    wave runs in reverse with *rematerialising* stage backwards
-//!    (GPipe checkpointing: only stage inputs are stashed).
+//! 2. **Execute the schedule** — workers run their event lists; a stage
+//!    starts micro-batch `m` as soon as its dependency arrives (the
+//!    pipeline overlap).
 //! 3. **Accumulate** — per-stage parameter gradients sum over
-//!    micro-batches; the coordinator normalises by the total mask count
-//!    and applies one Adam step — bitwise the same update a monolithic
-//!    step would make when chunking loses no edges (the GPipe gradient-
-//!    equivalence invariant; see `rust/tests/integration_pipeline.rs`).
+//!    micro-batches in FIFO order under every schedule; the coordinator
+//!    normalises by the total mask count and applies one Adam step —
+//!    bitwise the same update a monolithic step would make when chunking
+//!    loses no edges (the GPipe gradient-equivalence invariant; see
+//!    `rust/tests/integration_pipeline.rs`).
 //!
 //! [`Chunker`]: crate::batching::Chunker
 
 mod chunkprep;
-mod engine;
 mod driver;
+mod engine;
+mod schedule;
+mod spec;
 
 pub use chunkprep::{lossy_union_graph, prepare_microbatches, Microbatch};
+pub use driver::{PipelineResult, PipelineTrainer};
 pub use engine::{EpochOutput, PipelineEngine, StageTiming};
-pub use driver::{PipelineTrainer, PipelineResult};
+pub use schedule::{parse_schedule, FillDrain, OneFOneB, Schedule, StageEvent};
+pub use spec::{PipelineSpec, StageInput, StageSpec};

@@ -1,0 +1,200 @@
+//! Pipeline schedules: per-worker ordered event streams.
+//!
+//! A [`Schedule`] turns (stage index, stage count, micro-batch count)
+//! into the exact sequence of [`StageEvent`]s one worker executes. The
+//! real engine runs the events through compiled executables; the
+//! simulator replays the same events against projected stage times, so
+//! both price the same bubble structure.
+//!
+//! Two schedules ship:
+//!
+//! * [`FillDrain`] — GPipe: every stage runs all forwards, then all
+//!   backwards. Bubble fraction on uniform stage times is the classic
+//!   `(S-1)/(M+S-1)`.
+//! * [`OneFOneB`] — PipeDream-flush: stage `s` warms up with `S-1-s`
+//!   forwards, then alternates one-forward-one-backward, then drains.
+//!   Same bubble as fill-drain on uniform stages, but peak activation
+//!   stash drops from `M` to `S-s` micro-batches per stage.
+//!
+//! Both schedules keep per-stage micro-batch order FIFO in each
+//! direction, so gradient accumulation order — and therefore the summed
+//! gradients — are bitwise identical between them.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+/// One unit of work on a stage worker.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StageEvent {
+    /// Run the stage forward for micro-batch `m`.
+    Fwd(usize),
+    /// Run the stage backward for micro-batch `m`.
+    Bwd(usize),
+}
+
+/// A pipeline schedule: emits the ordered work list for each worker.
+pub trait Schedule: Send + Sync {
+    /// Stable name, used in CLI flags, bench cache keys and reports.
+    fn name(&self) -> &'static str;
+
+    /// Ordered event list for stage `stage` of `stages`, over
+    /// `microbatches` micro-batches. Every micro-batch must appear
+    /// exactly once as `Fwd` and once as `Bwd`, in increasing
+    /// micro-batch order within each direction (FIFO), with `Fwd(m)`
+    /// preceding `Bwd(m)`.
+    fn events(&self, stage: usize, stages: usize, microbatches: usize) -> Vec<StageEvent>;
+}
+
+/// GPipe's synchronous fill-drain schedule (the paper's schedule).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct FillDrain;
+
+impl Schedule for FillDrain {
+    fn name(&self) -> &'static str {
+        "fill-drain"
+    }
+
+    fn events(&self, _stage: usize, _stages: usize, microbatches: usize) -> Vec<StageEvent> {
+        (0..microbatches)
+            .map(StageEvent::Fwd)
+            .chain((0..microbatches).map(StageEvent::Bwd))
+            .collect()
+    }
+}
+
+/// One-forward-one-backward (PipeDream-flush style) with a synchronous
+/// flush at the end of the step: same gradients as [`FillDrain`], lower
+/// peak activation memory, never a larger bubble.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct OneFOneB;
+
+impl Schedule for OneFOneB {
+    fn name(&self) -> &'static str {
+        "1f1b"
+    }
+
+    fn events(&self, stage: usize, stages: usize, microbatches: usize) -> Vec<StageEvent> {
+        let m = microbatches;
+        let warmup = (stages - 1 - stage).min(m);
+        let mut ev = Vec::with_capacity(2 * m);
+        for i in 0..warmup {
+            ev.push(StageEvent::Fwd(i));
+        }
+        for i in warmup..m {
+            ev.push(StageEvent::Fwd(i));
+            ev.push(StageEvent::Bwd(i - warmup));
+        }
+        for i in (m - warmup)..m {
+            ev.push(StageEvent::Bwd(i));
+        }
+        ev
+    }
+}
+
+/// Parse a `--schedule` CLI value (or the `schedule` key of
+/// `configs/pipeline.json`) into a schedule instance.
+pub fn parse_schedule(name: &str) -> Result<Arc<dyn Schedule>> {
+    match name {
+        "fill-drain" | "filldrain" | "gpipe" => Ok(Arc::new(FillDrain)),
+        "1f1b" | "one-f-one-b" | "pipedream" => Ok(Arc::new(OneFOneB)),
+        other => anyhow::bail!(
+            "unknown schedule {other:?} (expected \"fill-drain\" or \"1f1b\")"
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The contract every schedule must satisfy (see [`Schedule::events`]).
+    fn check_contract(sched: &dyn Schedule, stages: usize, m: usize) {
+        for s in 0..stages {
+            let ev = sched.events(s, stages, m);
+            assert_eq!(ev.len(), 2 * m, "{} stage {s}: wrong length", sched.name());
+            let fwd: Vec<usize> = ev
+                .iter()
+                .filter_map(|e| match e {
+                    StageEvent::Fwd(i) => Some(*i),
+                    StageEvent::Bwd(_) => None,
+                })
+                .collect();
+            let bwd: Vec<usize> = ev
+                .iter()
+                .filter_map(|e| match e {
+                    StageEvent::Bwd(i) => Some(*i),
+                    StageEvent::Fwd(_) => None,
+                })
+                .collect();
+            let expect: Vec<usize> = (0..m).collect();
+            assert_eq!(fwd, expect, "{} stage {s}: fwd not FIFO", sched.name());
+            assert_eq!(bwd, expect, "{} stage {s}: bwd not FIFO", sched.name());
+            // Bwd(i) never precedes Fwd(i) on the same stage.
+            for i in 0..m {
+                let fpos = ev.iter().position(|e| *e == StageEvent::Fwd(i)).unwrap();
+                let bpos = ev.iter().position(|e| *e == StageEvent::Bwd(i)).unwrap();
+                assert!(fpos < bpos, "{} stage {s}: Bwd({i}) before Fwd({i})", sched.name());
+            }
+        }
+    }
+
+    #[test]
+    fn both_schedules_satisfy_the_contract() {
+        for stages in [2usize, 3, 4, 6] {
+            for m in [1usize, 2, 3, 4, 8] {
+                check_contract(&FillDrain, stages, m);
+                check_contract(&OneFOneB, stages, m);
+            }
+        }
+    }
+
+    #[test]
+    fn fill_drain_runs_all_forwards_before_any_backward() {
+        for stages in [2usize, 4] {
+            for m in [1usize, 4, 8] {
+                for s in 0..stages {
+                    let ev = FillDrain.events(s, stages, m);
+                    let first_bwd = ev
+                        .iter()
+                        .position(|e| matches!(e, StageEvent::Bwd(_)))
+                        .unwrap();
+                    assert_eq!(first_bwd, m, "stage {s}: backward before the drain");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn one_f_one_b_interleaves_after_warmup() {
+        use StageEvent::{Bwd, Fwd};
+        // Stage 2 of 4 (warm-up 1): F0 | F1 B0 F2 B1 F3 B2 | B3.
+        let ev = OneFOneB.events(2, 4, 4);
+        assert_eq!(
+            ev,
+            vec![Fwd(0), Fwd(1), Bwd(0), Fwd(2), Bwd(1), Fwd(3), Bwd(2), Bwd(3)]
+        );
+        // Final stage (warm-up 0) strictly alternates.
+        let ev = OneFOneB.events(3, 4, 3);
+        assert_eq!(ev, vec![Fwd(0), Bwd(0), Fwd(1), Bwd(1), Fwd(2), Bwd(2)]);
+        // First stage (warm-up 3) looks like fill-drain at M=4.
+        let ev = OneFOneB.events(0, 4, 4);
+        assert_eq!(ev, FillDrain.events(0, 4, 4));
+    }
+
+    #[test]
+    fn one_f_one_b_degenerates_when_microbatches_fit_in_warmup() {
+        // M=2 at stage 0 of 4: warm-up truncates to M; all F then all B.
+        let ev = OneFOneB.events(0, 4, 2);
+        assert_eq!(ev, FillDrain.events(0, 4, 2));
+    }
+
+    #[test]
+    fn parse_schedule_names() {
+        assert_eq!(parse_schedule("fill-drain").unwrap().name(), "fill-drain");
+        assert_eq!(parse_schedule("gpipe").unwrap().name(), "fill-drain");
+        assert_eq!(parse_schedule("1f1b").unwrap().name(), "1f1b");
+        assert_eq!(parse_schedule("one-f-one-b").unwrap().name(), "1f1b");
+        assert!(parse_schedule("round-robin").is_err());
+    }
+}

@@ -1,0 +1,300 @@
+//! Declarative pipeline description: [`PipelineSpec`] names, per stage,
+//! the compiled artifacts to run, the extra micro-batch inputs each one
+//! consumes, and the flat-parameter slice the stage owns.
+//!
+//! The engine builds one generic worker per [`StageSpec`] and the
+//! simulator prices the same description, so the real executor and the
+//! cost model can never drift apart on pipeline shape. The paper's
+//! 4-stage GAT partition ([2,1,2,1] — Listing 1) is one instance,
+//! [`PipelineSpec::gat4`]; any staged model the artifact manifest
+//! describes can be expressed the same way.
+
+use anyhow::Result;
+
+/// One extra input consumed by a stage executable, appended (in the
+/// declared order) after the stage's parameter slice.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StageInput {
+    /// The activation received from the upstream stage. Forwards that
+    /// declare it receive it over the stage link; backwards that declare
+    /// it replay the stashed copy (GPipe rematerialisation stashes only
+    /// stage inputs).
+    Activation,
+    /// The micro-batch node-feature tensor `x`.
+    Features,
+    /// The micro-batch graph tensors (ELL: idx, mask; COO: src, dst,
+    /// mask), in artifact order.
+    Graph,
+    /// The per-micro-batch dropout key.
+    Key,
+    /// The micro-batch labels and loss mask (loss-stage backward only).
+    LabelsMask,
+}
+
+/// One pipeline stage: artifact kinds, input layout, parameter slice.
+///
+/// Artifact input contract, shared with `python/compile/stages.py`:
+///
+/// * forward inputs are `params ++ fwd_inputs`, and its first output is
+///   the activation handed downstream (on the final stage: the
+///   log-probabilities the trainer records);
+/// * backward inputs are `params ++ bwd_inputs`, with the downstream
+///   cotangent appended last on every stage except the final (loss)
+///   stage, whose backward derives its own cotangent from labels+mask;
+/// * backward outputs are `[loss_sum, mask_count] ++` (final stage only)
+///   `param_grads ++ [upstream_cotangent]` (all but the first stage).
+#[derive(Debug, Clone, PartialEq)]
+pub struct StageSpec {
+    /// Artifact kind of the stage forward (e.g. `"s0_fwd"`); the engine
+    /// expands kinds to `{dataset}_{backend}_c{chunks}_{kind}` names.
+    pub fwd_kind: String,
+    /// Artifact kind of the rematerialising stage backward.
+    pub bwd_kind: String,
+    /// Half-open slice `[start, end)` of the flat parameter vector this
+    /// stage owns (empty slice = stateless stage).
+    pub params: (usize, usize),
+    /// Ordered extra inputs of the forward executable.
+    pub fwd_inputs: Vec<StageInput>,
+    /// Ordered extra inputs of the backward executable (cotangent
+    /// appended separately; see the struct docs).
+    pub bwd_inputs: Vec<StageInput>,
+}
+
+impl StageSpec {
+    pub fn param_count(&self) -> usize {
+        self.params.1 - self.params.0
+    }
+
+    /// Stages that consume graph tensors pay the host re-build round
+    /// trip when micro-batching is on (the paper's §7.2 overhead); the
+    /// simulator charges the stall exactly here.
+    pub fn needs_graph(&self) -> bool {
+        self.fwd_inputs.contains(&StageInput::Graph)
+    }
+
+    fn needs_activation(&self) -> bool {
+        self.fwd_inputs.contains(&StageInput::Activation)
+    }
+
+    /// The backward replays the stashed stage input (rematerialisation).
+    pub fn stashes_activation(&self) -> bool {
+        self.bwd_inputs.contains(&StageInput::Activation)
+    }
+}
+
+/// A full N-stage pipeline: what [`PipelineEngine`] builds workers from
+/// and what `simulator::scenarios` prices.
+///
+/// [`PipelineEngine`]: super::PipelineEngine
+#[derive(Debug, Clone, PartialEq)]
+pub struct PipelineSpec {
+    pub stages: Vec<StageSpec>,
+    /// Total flat parameter count; the stage slices must tile exactly
+    /// `[0, param_count)` (checked by [`PipelineSpec::validate`]).
+    pub param_count: usize,
+}
+
+impl PipelineSpec {
+    /// The paper's 4-stage GAT partition over the [2,1,2,1] balance:
+    /// `[Dropout+GAT1] [ELU+Dropout] [GAT2] [LogSoftmax+loss]`, with the
+    /// two GAT stages owning 4 parameters each.
+    pub fn gat4() -> PipelineSpec {
+        use StageInput::{Activation, Features, Graph, Key, LabelsMask};
+        PipelineSpec {
+            stages: vec![
+                StageSpec {
+                    fwd_kind: "s0_fwd".into(),
+                    bwd_kind: "s0_bwd".into(),
+                    params: (0, 4),
+                    fwd_inputs: vec![Features, Graph, Key],
+                    bwd_inputs: vec![Features, Graph, Key],
+                },
+                StageSpec {
+                    fwd_kind: "s1_fwd".into(),
+                    bwd_kind: "s1_bwd".into(),
+                    params: (4, 4),
+                    fwd_inputs: vec![Activation, Key],
+                    bwd_inputs: vec![Activation, Key],
+                },
+                StageSpec {
+                    fwd_kind: "s2_fwd".into(),
+                    bwd_kind: "s2_bwd".into(),
+                    params: (4, 8),
+                    fwd_inputs: vec![Activation, Graph, Key],
+                    bwd_inputs: vec![Activation, Graph, Key],
+                },
+                StageSpec {
+                    fwd_kind: "s3_fwd".into(),
+                    bwd_kind: "s3loss_bwd".into(),
+                    params: (8, 8),
+                    fwd_inputs: vec![Activation],
+                    bwd_inputs: vec![Activation, LabelsMask],
+                },
+            ],
+            param_count: 8,
+        }
+    }
+
+    pub fn num_stages(&self) -> usize {
+        self.stages.len()
+    }
+
+    /// Every artifact kind the engine will compile, fwd then bwd per
+    /// stage, in stage order.
+    pub fn artifact_kinds(&self) -> Vec<&str> {
+        self.stages
+            .iter()
+            .flat_map(|s| [s.fwd_kind.as_str(), s.bwd_kind.as_str()])
+            .collect()
+    }
+
+    /// Structural checks the generic worker relies on.
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(
+            self.stages.len() >= 2,
+            "a pipeline needs at least 2 stages, got {}",
+            self.stages.len()
+        );
+        for (s, st) in self.stages.iter().enumerate() {
+            anyhow::ensure!(
+                st.params.0 <= st.params.1 && st.params.1 <= self.param_count,
+                "stage {s}: param slice {:?} outside [0, {})",
+                st.params,
+                self.param_count
+            );
+            anyhow::ensure!(
+                (s == 0) != st.needs_activation(),
+                "stage {s}: {}",
+                if s == 0 {
+                    "the first stage cannot consume an upstream activation"
+                } else {
+                    "every stage after the first must consume the upstream activation"
+                }
+            );
+            anyhow::ensure!(
+                s > 0 || !st.stashes_activation(),
+                "stage 0 has no upstream activation to stash for its backward"
+            );
+            // The engine treats the final stage as the loss stage: its
+            // backward must emit (loss_sum, mask_count, ...) — which
+            // requires consuming labels+mask — and no other stage may,
+            // or the generic worker would mis-slice its outputs.
+            anyhow::ensure!(
+                (s == self.stages.len() - 1)
+                    == st.bwd_inputs.contains(&StageInput::LabelsMask),
+                "stage {s}: {}",
+                if s == self.stages.len() - 1 {
+                    "the final (loss) stage backward must consume labels+mask"
+                } else {
+                    "only the final (loss) stage backward may consume labels+mask"
+                }
+            );
+        }
+        // The owned parameter slices must tile [0, param_count) exactly
+        // so stage-local gradient accumulators concatenate back into the
+        // manifest's flat order.
+        let mut owned: Vec<(usize, usize)> = self
+            .stages
+            .iter()
+            .map(|s| s.params)
+            .filter(|(a, b)| a < b)
+            .collect();
+        owned.sort_unstable();
+        let mut next = 0usize;
+        for (a, b) in owned {
+            anyhow::ensure!(
+                a == next,
+                "parameter slices must tile the flat vector: gap or \
+                 overlap at index {a} (expected {next})"
+            );
+            next = b;
+        }
+        anyhow::ensure!(
+            next == self.param_count,
+            "parameter slices cover [0, {next}) but param_count is {}",
+            self.param_count
+        );
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gat4_is_valid() {
+        let spec = PipelineSpec::gat4();
+        spec.validate().unwrap();
+        assert_eq!(spec.num_stages(), 4);
+        assert_eq!(
+            spec.artifact_kinds(),
+            vec![
+                "s0_fwd", "s0_bwd", "s1_fwd", "s1_bwd", "s2_fwd", "s2_bwd",
+                "s3_fwd", "s3loss_bwd",
+            ]
+        );
+        assert!(spec.stages[0].needs_graph());
+        assert!(!spec.stages[1].needs_graph());
+        assert!(spec.stages[2].needs_graph());
+        assert!(!spec.stages[0].stashes_activation());
+        assert!(spec.stages[3].stashes_activation());
+    }
+
+    #[test]
+    fn validate_rejects_param_gap() {
+        let mut spec = PipelineSpec::gat4();
+        spec.stages[2].params = (5, 8);
+        assert!(spec.validate().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_param_overlap() {
+        let mut spec = PipelineSpec::gat4();
+        spec.stages[2].params = (3, 8);
+        assert!(spec.validate().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_uncovered_params() {
+        let mut spec = PipelineSpec::gat4();
+        spec.param_count = 9;
+        assert!(spec.validate().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_activation_on_first_stage() {
+        let mut spec = PipelineSpec::gat4();
+        spec.stages[0].fwd_inputs.insert(0, StageInput::Activation);
+        assert!(spec.validate().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_missing_activation_mid_pipeline() {
+        let mut spec = PipelineSpec::gat4();
+        spec.stages[1].fwd_inputs = vec![StageInput::Key];
+        assert!(spec.validate().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_lossless_final_stage() {
+        let mut spec = PipelineSpec::gat4();
+        spec.stages[3].bwd_inputs = vec![StageInput::Activation];
+        assert!(spec.validate().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_labels_mask_mid_pipeline() {
+        let mut spec = PipelineSpec::gat4();
+        spec.stages[1].bwd_inputs.push(StageInput::LabelsMask);
+        assert!(spec.validate().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_single_stage() {
+        let mut spec = PipelineSpec::gat4();
+        spec.stages.truncate(1);
+        spec.param_count = 4;
+        assert!(spec.validate().is_err());
+    }
+}

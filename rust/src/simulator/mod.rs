@@ -6,9 +6,13 @@
 //! peak throughput XLA reaches on this workload ([`Calibration`]); GPU
 //! projections apply that same achieved-fraction to the GPU's roofline
 //! ([`DeviceModel::exec_time`]), and the pipeline timeline
-//! ([`pipeline_sim`]) replays the exact fill-drain dependency structure
-//! the real engine executes, with NVLink/PCIe transfer costs and the
-//! paper's per-layer host re-build round trips.
+//! ([`pipeline_sim`]) replays the exact per-stage event streams the
+//! real engine's [`Schedule`] emits (fill-drain or 1F1B), with
+//! NVLink/PCIe transfer costs and the paper's per-layer host re-build
+//! round trips priced from the same [`PipelineSpec`] the engine runs.
+//!
+//! [`Schedule`]: crate::pipeline::Schedule
+//! [`PipelineSpec`]: crate::pipeline::PipelineSpec
 //!
 //! Reported numbers from this module are always flagged `sim` by the
 //! bench harness.
@@ -18,5 +22,7 @@ mod pipeline_sim;
 mod scenarios;
 
 pub use device::{Calibration, DeviceModel, LinkModel, CACHE_REUSE_DISCOUNT, DEVICES};
-pub use pipeline_sim::{simulate_pipeline, PipelineSimInput, PipelineSimReport};
+pub use pipeline_sim::{
+    simulate_pipeline, simulate_pipeline_with, PipelineSimInput, PipelineSimReport,
+};
 pub use scenarios::{Scenarios, SimEpoch};

@@ -1,18 +1,25 @@
-//! Discrete-event timeline of the GPipe fill-drain schedule.
+//! Discrete-event timeline of a scheduled pipeline step.
 //!
-//! Replays the exact dependency structure of `pipeline::engine`:
+//! Replays the exact dependency structure of `pipeline::engine` by
+//! executing, per stage, the same [`Schedule`] event stream the real
+//! workers run:
 //!
 //! * forward (m, s) starts after forward (m, s-1) has arrived over the
-//!   stage link AND after this stage finished (m-1, s);
-//! * backward mirrors it in reverse;
-//! * stages with a graph input (s0, s2 — the GAT layers) additionally
-//!   stall for the *host re-build round trip* when micro-batching is on:
-//!   the paper's §7.2 device→host node-tensor copy, host sub-graph
-//!   re-build, host→device sub-graph upload. That term is charged per
-//!   micro-batch per GAT layer, exactly where the paper pays it.
+//!   stage link AND after this stage finished its previous event;
+//! * backward (m, s) starts after the cotangent (m, s+1) arrived (the
+//!   final stage's backward only needs its own forward);
+//! * stages with a graph input (the GAT layers) additionally stall for
+//!   the *host re-build round trip* when micro-batching is on: the
+//!   paper's §7.2 device→host node-tensor copy, host sub-graph re-build,
+//!   host→device sub-graph upload. That term is charged per micro-batch
+//!   per graph-consuming stage, exactly where the paper pays it.
 //!
 //! The simulator returns per-device busy time alongside the makespan so
-//! the bench harness can report pipeline bubble fractions.
+//! the bench harness can report pipeline bubble fractions — per
+//! schedule: [`simulate_pipeline_with`] prices GPipe fill-drain and
+//! 1F1B (or any other [`Schedule`]) on identical stage times.
+
+use crate::pipeline::{FillDrain, Schedule, StageEvent};
 
 /// Per-stage, per-micro-batch inputs to the timeline.
 #[derive(Debug, Clone)]
@@ -40,60 +47,102 @@ pub struct PipelineSimReport {
     pub bubble_fraction: f64,
 }
 
+/// Price the GPipe fill-drain schedule (the paper's configuration).
 pub fn simulate_pipeline(input: &PipelineSimInput) -> PipelineSimReport {
+    simulate_pipeline_with(input, &FillDrain)
+}
+
+/// Price one pipeline step under an arbitrary [`Schedule`].
+///
+/// Each stage executes its event list in order; an event waits for its
+/// cross-stage dependency, then occupies the device. Work-conserving
+/// within the list order — exactly what the real engine's generic
+/// worker does.
+pub fn simulate_pipeline_with(
+    input: &PipelineSimInput,
+    schedule: &dyn Schedule,
+) -> PipelineSimReport {
     let stages = input.fwd_s.len();
     assert!(stages >= 1);
     let m_count = input.fwd_s[0].len();
     assert!(input.bwd_s.len() == stages);
     assert!(input.xfer_fwd_s.len() == stages - 1);
+    assert!(input.xfer_bwd_s.len() == stages - 1);
     assert!(input.rebuild_s.len() == stages);
 
+    let events: Vec<Vec<StageEvent>> = (0..stages)
+        .map(|s| schedule.events(s, stages, m_count))
+        .collect();
+
     let mut fwd_end = vec![vec![0.0f64; m_count]; stages];
-    let mut busy = vec![0.0f64; stages];
-
-    // ---- forward wave ---------------------------------------------------
-    for s in 0..stages {
-        for m in 0..m_count {
-            let ready_input = if s == 0 {
-                0.0
-            } else {
-                fwd_end[s - 1][m] + input.xfer_fwd_s[s - 1][m]
-            };
-            let device_free = if m == 0 { 0.0 } else { fwd_end[s][m - 1] };
-            let start = ready_input.max(device_free);
-            let work = input.rebuild_s[s][m] + input.fwd_s[s][m];
-            fwd_end[s][m] = start + work;
-            busy[s] += input.fwd_s[s][m]; // rebuild stalls are idle time
-        }
-    }
-
-    // ---- backward wave (reverse stage order) ------------------------------
-    // bwd (m, s) needs: bwd (m, s+1) delivered, and device s free.
-    // Device s is free after its last fwd, then after bwd (m-1, s).
     let mut bwd_end = vec![vec![0.0f64; m_count]; stages];
-    for s in (0..stages).rev() {
-        for m in 0..m_count {
-            let ready_input = if s == stages - 1 {
-                // loss backward starts as soon as the last stage's own
-                // forward for m is done
-                fwd_end[s][m]
-            } else {
-                bwd_end[s + 1][m] + input.xfer_bwd_s[s][m]
-            };
-            let device_free = if m == 0 {
-                fwd_end[s][m_count - 1]
-            } else {
-                bwd_end[s][m - 1]
-            };
-            let start = ready_input.max(device_free);
-            bwd_end[s][m] = start + input.bwd_s[s][m];
-            busy[s] += input.bwd_s[s][m];
+    let mut fwd_done = vec![vec![false; m_count]; stages];
+    let mut bwd_done = vec![vec![false; m_count]; stages];
+    let mut clock = vec![0.0f64; stages];
+    let mut busy = vec![0.0f64; stages];
+    let mut next = vec![0usize; stages];
+    let total: usize = events.iter().map(Vec::len).sum();
+    let mut executed = 0usize;
+
+    while executed < total {
+        let mut progressed = false;
+        for s in 0..stages {
+            while next[s] < events[s].len() {
+                // Cross-stage dependency: the time this event's input is
+                // available on device s, or None if not yet produced.
+                let ready = match events[s][next[s]] {
+                    StageEvent::Fwd(m) => {
+                        if s == 0 {
+                            Some(0.0)
+                        } else if fwd_done[s - 1][m] {
+                            Some(fwd_end[s - 1][m] + input.xfer_fwd_s[s - 1][m])
+                        } else {
+                            None
+                        }
+                    }
+                    StageEvent::Bwd(m) => {
+                        if s == stages - 1 {
+                            // The loss backward needs only this stage's
+                            // own forward for m.
+                            fwd_done[s][m].then_some(fwd_end[s][m])
+                        } else if bwd_done[s + 1][m] {
+                            Some(bwd_end[s + 1][m] + input.xfer_bwd_s[s][m])
+                        } else {
+                            None
+                        }
+                    }
+                };
+                let Some(ready) = ready else { break };
+                let start = clock[s].max(ready);
+                match events[s][next[s]] {
+                    StageEvent::Fwd(m) => {
+                        // The re-build round trip stalls the device but
+                        // is idle (host) time, not busy time.
+                        clock[s] = start + input.rebuild_s[s][m] + input.fwd_s[s][m];
+                        busy[s] += input.fwd_s[s][m];
+                        fwd_end[s][m] = clock[s];
+                        fwd_done[s][m] = true;
+                    }
+                    StageEvent::Bwd(m) => {
+                        clock[s] = start + input.bwd_s[s][m];
+                        busy[s] += input.bwd_s[s][m];
+                        bwd_end[s][m] = clock[s];
+                        bwd_done[s][m] = true;
+                    }
+                }
+                next[s] += 1;
+                executed += 1;
+                progressed = true;
+            }
         }
+        assert!(
+            progressed,
+            "schedule {:?} deadlocked: no stage can make progress",
+            schedule.name()
+        );
     }
 
-    let makespan = (0..stages)
-        .map(|s| bwd_end[s][m_count - 1])
-        .fold(0.0f64, f64::max);
+    let makespan = clock.iter().copied().fold(0.0f64, f64::max);
     let mean_busy: f64 = busy.iter().sum::<f64>() / stages as f64;
     PipelineSimReport {
         makespan_s: makespan,
@@ -125,6 +174,7 @@ impl PipelineSimInput {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::pipeline::OneFOneB;
 
     #[test]
     fn single_stage_single_batch() {
@@ -149,6 +199,51 @@ mod tests {
         // Bubble fraction = (S-1)/(M+S-1)
         let expect_bubble = (s as f64 - 1.0) / (m as f64 + s as f64 - 1.0);
         assert!((r.bubble_fraction - expect_bubble).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fill_drain_bubble_matches_closed_form_across_shapes() {
+        // The GPipe bubble (S-1)/(M+S-1) must hold for every uniform
+        // (stages, micro-batches) combination, not just the paper's.
+        for s in [2usize, 3, 4, 6] {
+            for m in [1usize, 2, 4, 8, 16] {
+                let inp = PipelineSimInput::uniform(s, m, 0.7, 1.3, 0.0, 0.0);
+                let r = simulate_pipeline_with(&inp, &FillDrain);
+                let expect = (s as f64 - 1.0) / (m as f64 + s as f64 - 1.0);
+                assert!(
+                    (r.bubble_fraction - expect).abs() < 1e-9,
+                    "S={s} M={m}: bubble {} != {expect}",
+                    r.bubble_fraction
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn one_f_one_b_never_worse_than_fill_drain() {
+        for s in [2usize, 3, 4, 6] {
+            for m in [1usize, 2, 3, 4, 8] {
+                for (f, b, xfer, rebuild) in [
+                    (1.0, 2.0, 0.0, 0.0),
+                    (1.0, 1.0, 0.25, 0.0),
+                    (2.0, 1.0, 0.1, 0.3),
+                ] {
+                    let inp = PipelineSimInput::uniform(s, m, f, b, xfer, rebuild);
+                    let fd = simulate_pipeline_with(&inp, &FillDrain);
+                    let ob = simulate_pipeline_with(&inp, &OneFOneB);
+                    assert!(
+                        ob.makespan_s <= fd.makespan_s + 1e-9,
+                        "S={s} M={m} f={f} b={b}: 1f1b {} > fill-drain {}",
+                        ob.makespan_s,
+                        fd.makespan_s
+                    );
+                    // Busy time is schedule-invariant (same work).
+                    for (a, b) in ob.busy_s.iter().zip(&fd.busy_s) {
+                        assert!((a - b).abs() < 1e-12);
+                    }
+                }
+            }
+        }
     }
 
     #[test]

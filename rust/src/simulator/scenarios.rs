@@ -7,10 +7,13 @@
 
 use anyhow::Result;
 
+use crate::pipeline::{PipelineSpec, Schedule};
 use crate::runtime::Manifest;
 
 use super::device::{Calibration, DeviceModel, DEVICES};
-use super::pipeline_sim::{simulate_pipeline, PipelineSimInput, PipelineSimReport};
+use super::pipeline_sim::{
+    simulate_pipeline_with, PipelineSimInput, PipelineSimReport,
+};
 
 /// A projected epoch on simulated hardware.
 #[derive(Debug, Clone)]
@@ -87,9 +90,10 @@ impl<'m> Scenarios<'m> {
         })
     }
 
-    /// Project one DGX pipeline epoch: 4 V100 stages over NVLink, with
-    /// the paper's host re-build round trip (PCIe + measured host time)
-    /// charged per micro-batch per GAT layer when `rebuild` is on.
+    /// Project one DGX pipeline epoch of the paper's 4-stage GAT: V100
+    /// stages over NVLink under `schedule`, with the paper's host
+    /// re-build round trip (PCIe + measured host time) charged per
+    /// micro-batch per GAT layer when `rebuild` is on.
     ///
     /// `host_rebuild_s`: measured host-side sub-graph re-build time for
     /// ONE micro-batch (from the real Rust run).
@@ -100,64 +104,91 @@ impl<'m> Scenarios<'m> {
         chunks: usize,
         rebuild: bool,
         host_rebuild_s: f64,
+        schedule: &dyn Schedule,
     ) -> Result<SimEpoch> {
+        self.pipeline_epoch(
+            &PipelineSpec::gat4(),
+            dataset,
+            backend,
+            chunks,
+            rebuild,
+            host_rebuild_s,
+            schedule,
+        )
+    }
+
+    /// Project one pipeline epoch for ANY staged model: the same
+    /// [`PipelineSpec`] the real engine executes prices stage compute
+    /// from the manifest's cost analysis, boundary transfers from the
+    /// producing stage's output shape, and the host re-build stall at
+    /// every graph-consuming stage — then replays `schedule`'s event
+    /// streams through the discrete-event timeline.
+    #[allow(clippy::too_many_arguments)]
+    pub fn pipeline_epoch(
+        &self,
+        spec: &PipelineSpec,
+        dataset: &str,
+        backend: &str,
+        chunks: usize,
+        rebuild: bool,
+        host_rebuild_s: f64,
+        schedule: &dyn Schedule,
+    ) -> Result<SimEpoch> {
+        spec.validate()?;
         let dev = &DEVICES.v100;
         let nvlink = &DEVICES.nvlink;
         let pcie = &DEVICES.pcie;
         let name = |kind: &str| format!("{dataset}_{backend}_c{chunks}_{kind}");
+        let n_stages = spec.num_stages();
 
-        // Stage compute times from manifest cost analysis.
-        let fwd_kinds = ["s0_fwd", "s1_fwd", "s2_fwd", "s3_fwd"];
-        // Stage-3 backward is the fused logsoftmax+loss; stages 2..0
-        // rematerialise (their bwd flops already include the recompute).
-        let bwd_kinds = ["s0_bwd", "s1_bwd", "s2_bwd", "s3loss_bwd"];
-        let mut fwd_s = Vec::new();
-        let mut bwd_s = Vec::new();
-        for kind in fwd_kinds {
-            let (f, b) = self.art(&name(kind))?;
+        // Stage compute times from manifest cost analysis. Backwards
+        // rematerialise (their flops already include the recompute); the
+        // final stage's backward is the fused loss backward.
+        let mut fwd_s = Vec::with_capacity(n_stages);
+        let mut bwd_s = Vec::with_capacity(n_stages);
+        for st in &spec.stages {
+            let (f, b) = self.art(&name(&st.fwd_kind))?;
             fwd_s.push(vec![dev.exec_time(f, b, &self.cal); chunks]);
-        }
-        for kind in bwd_kinds {
-            let (f, b) = self.art(&name(kind))?;
+            let (f, b) = self.art(&name(&st.bwd_kind))?;
             bwd_s.push(vec![dev.exec_time(f, b, &self.cal); chunks]);
         }
 
-        // Activation transfers over NVLink (stage boundary sizes from the
-        // producing stage's output shape).
-        let xfer = |bytes: f64| nvlink.transfer_time(bytes);
-        let h_bytes = self.out_bytes(&name("s0_fwd"))?;
-        let lg_bytes = self.out_bytes(&name("s2_fwd"))?;
-        let xfer_fwd = vec![
-            vec![xfer(h_bytes); chunks],  // s0 -> s1 (h)
-            vec![xfer(h_bytes); chunks],  // s1 -> s2 (h')
-            vec![xfer(lg_bytes); chunks], // s2 -> s3 (logits)
-        ];
-        let xfer_bwd = vec![
-            vec![xfer(h_bytes); chunks],
-            vec![xfer(h_bytes); chunks],
-            vec![xfer(lg_bytes); chunks],
-        ];
+        // Activation transfers over NVLink: each boundary carries the
+        // producing stage's first output forward, and a cotangent of the
+        // same shape backward.
+        let mut xfer_fwd = Vec::with_capacity(n_stages - 1);
+        for st in &spec.stages[..n_stages - 1] {
+            let bytes = self.out_bytes(&name(&st.fwd_kind))?;
+            xfer_fwd.push(vec![nvlink.transfer_time(bytes); chunks]);
+        }
+        let xfer_bwd = xfer_fwd.clone();
 
-        // Host re-build round trip, charged before each GAT stage (s0,
-        // s2): node-ids down over PCIe, host re-build, graph tensors up.
-        let mut rebuild_s = vec![vec![0.0; chunks]; 4];
+        // Host re-build round trip, charged before every graph-consuming
+        // stage: node-ids down over PCIe, host re-build, graph tensors up.
+        let mut rebuild_s = vec![vec![0.0; chunks]; n_stages];
         let mut rebuild_total = 0.0;
         if rebuild {
+            let first_fwd = name(&spec.stages[0].fwd_kind);
             let n_c_bytes = {
                 // node-id tensor: one i32 per chunk row
-                let a = self.manifest.artifact(&name("s0_fwd"))?;
+                let a = self.manifest.artifact(&first_fwd)?;
                 let x = a
                     .inputs
                     .iter()
                     .find(|t| t.name == "x")
-                    .expect("s0_fwd has x");
+                    .ok_or_else(|| {
+                        anyhow::anyhow!("artifact {first_fwd} has no input \"x\"")
+                    })?;
                 4.0 * x.shape[0] as f64
             };
-            let up_bytes = self.graph_bytes(&name("s0_fwd"))?;
+            let up_bytes = self.graph_bytes(&first_fwd)?;
             let round_trip = pcie.transfer_time(n_c_bytes)
                 + host_rebuild_s
                 + pcie.transfer_time(up_bytes);
-            for stage in [0usize, 2] {
+            for (stage, st) in spec.stages.iter().enumerate() {
+                if !st.needs_graph() {
+                    continue;
+                }
                 for m in 0..chunks {
                     rebuild_s[stage][m] = round_trip;
                     rebuild_total += round_trip;
@@ -172,7 +203,7 @@ impl<'m> Scenarios<'m> {
             xfer_bwd_s: xfer_bwd,
             rebuild_s,
         };
-        let report = simulate_pipeline(&input);
+        let report = simulate_pipeline_with(&input, schedule);
         let xfer_total: f64 = xfer_fwd.iter().flatten().sum::<f64>() * 2.0;
         Ok(SimEpoch {
             device: "DGX-4xV100",
@@ -188,6 +219,7 @@ impl<'m> Scenarios<'m> {
 mod tests {
     use super::*;
     use crate::config::Config;
+    use crate::pipeline::{FillDrain, OneFOneB};
 
     fn scenarios(m: &Manifest) -> Scenarios<'_> {
         // Calibrate as if pubmed_ell_train_step took 0.4 s on the CPU.
@@ -223,7 +255,7 @@ mod tests {
             .single_device_epoch("pubmed", "ell", &DEVICES.v100)
             .unwrap();
         let c1 = s
-            .dgx_pipeline_epoch("pubmed", "ell", 1, false, 0.0)
+            .dgx_pipeline_epoch("pubmed", "ell", 1, false, 0.0, &FillDrain)
             .unwrap();
         // Paper Fig 1: pipe at chunk=1 shows NO speedup over single GPU
         // (pipeline is sequential at one micro-batch).
@@ -235,7 +267,7 @@ mod tests {
         );
         // Paper Fig 3: host rebuild makes chunked runs dramatically slower.
         let c4 = s
-            .dgx_pipeline_epoch("pubmed", "ell", 4, true, 0.02)
+            .dgx_pipeline_epoch("pubmed", "ell", 4, true, 0.02, &FillDrain)
             .unwrap();
         assert!(
             c4.epoch_s > 2.0 * c1.epoch_s,
@@ -251,9 +283,29 @@ mod tests {
         let Some(m) = manifest() else { return };
         let s = scenarios(&m);
         let c2 = s
-            .dgx_pipeline_epoch("pubmed", "ell", 2, false, 0.0)
+            .dgx_pipeline_epoch("pubmed", "ell", 2, false, 0.0, &FillDrain)
             .unwrap();
         let rep = c2.pipeline.unwrap();
         assert!(rep.bubble_fraction > 0.0 && rep.bubble_fraction < 1.0);
+    }
+
+    #[test]
+    fn one_f_one_b_projection_never_slower() {
+        let Some(m) = manifest() else { return };
+        let s = scenarios(&m);
+        for chunks in [2usize, 4] {
+            let fd = s
+                .dgx_pipeline_epoch("pubmed", "ell", chunks, true, 0.01, &FillDrain)
+                .unwrap();
+            let ob = s
+                .dgx_pipeline_epoch("pubmed", "ell", chunks, true, 0.01, &OneFOneB)
+                .unwrap();
+            assert!(
+                ob.epoch_s <= fd.epoch_s + 1e-9,
+                "c{chunks}: 1f1b {} > fill-drain {}",
+                ob.epoch_s,
+                fd.epoch_s
+            );
+        }
     }
 }
