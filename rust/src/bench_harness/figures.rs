@@ -91,9 +91,11 @@ pub fn bench_fig3(ctx: &BenchCtx) -> Result<String> {
         String::from("chunks,dgx_epoch_s,rebuild_s,total_rest_s,host_rebuild_per_chunk_s\n");
     for chunks in ctx.cfg.pipeline.chunks.clone() {
         let pr = ctx.pipeline_run(backend, chunks, false, false)?;
-        let dgx = scen.dgx_pipeline_epoch(
+        // Same convention as the real rows: the projection prices the
+        // session's prep mode (Paper by default — the paper's Figure 3).
+        let dgx = scen.dgx_pipeline_epoch_prep(
             "pubmed", backend, chunks, true, pr.host_rebuild_per_chunk_s,
-            ctx.schedule.as_ref(),
+            ctx.schedule.as_ref(), ctx.prep,
         )?;
         let total = dgx.epoch_s * (ctx.epochs - 1) as f64;
         table.row(&[

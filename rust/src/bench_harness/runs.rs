@@ -11,7 +11,10 @@ use crate::batching::GraphAwareChunker;
 use crate::config::Config;
 use crate::data::{generate, Dataset};
 use crate::metrics::{Curve, RunTiming};
-use crate::pipeline::{parse_schedule, PipelineResult, PipelineTrainer, Schedule};
+use crate::pipeline::{
+    parse_schedule, MicrobatchCache, PipelineResult, PipelineTrainer, PrepMode,
+    Schedule,
+};
 use crate::runtime::Engine;
 use crate::train::{EvalMetrics, SingleDeviceTrainer};
 
@@ -33,7 +36,11 @@ pub struct PipelineRun {
     pub train_acc: Curve,
     pub val_acc: Curve,
     pub retained_fraction: f64,
-    /// Mean host rebuild seconds per epoch per micro-batch.
+    /// Mean host prep seconds per epoch per micro-batch, wherever that
+    /// work ran: critical-path `rebuild_s` plus the Overlap prefetcher's
+    /// hidden `prep_overlap_s` — so DGX projections can price the stall
+    /// from the measured host cost under any prep mode (zero only for
+    /// Cached, which genuinely does the work once).
     pub host_rebuild_per_chunk_s: f64,
     pub chunks: usize,
 }
@@ -47,7 +54,13 @@ pub struct BenchCtx {
     /// projection in this bench session (the two must agree for the
     /// `(sim)` rows to price what the real rows executed).
     pub schedule: Arc<dyn Schedule>,
+    /// Default host-prep mode for pipeline runs (`bench --prep`;
+    /// `prep-modes` compares all three explicitly regardless).
+    pub prep: PrepMode,
     pub results_dir: PathBuf,
+    /// Shared micro-batch cache: Cached-mode runs across the session
+    /// reuse one prepared set per (plan, backend, train-mask) key.
+    prep_cache: Arc<MicrobatchCache>,
     datasets: Mutex<BTreeMap<String, &'static Dataset>>,
     single_cache: Mutex<BTreeMap<String, SingleRun>>,
     pipeline_cache: Mutex<BTreeMap<String, PipelineRun>>,
@@ -69,12 +82,15 @@ impl BenchCtx {
         let engine = Engine::from_artifacts_dir(&cfg.artifacts_dir())?;
         let results_dir = cfg.root.join("results");
         std::fs::create_dir_all(&results_dir)?;
+        let prep = PrepMode::parse(&cfg.pipeline.prep)?;
         Ok(BenchCtx {
             cfg,
             engine,
             epochs,
             schedule,
+            prep,
             results_dir,
+            prep_cache: Arc::new(MicrobatchCache::new()),
             datasets: Mutex::new(BTreeMap::new()),
             single_cache: Mutex::new(BTreeMap::new()),
             pipeline_cache: Mutex::new(BTreeMap::new()),
@@ -115,7 +131,8 @@ impl BenchCtx {
         Ok(run)
     }
 
-    /// Real pipeline training run, cached per configuration.
+    /// Real pipeline training run, cached per configuration, with the
+    /// context's default prep mode.
     ///
     /// `star` = the paper's "Chunk = 1*" (full graph in model, chunks=1).
     pub fn pipeline_run(
@@ -125,9 +142,23 @@ impl BenchCtx {
         star: bool,
         graph_aware: bool,
     ) -> Result<PipelineRun> {
+        self.pipeline_run_prep(backend, chunks, star, graph_aware, self.prep)
+    }
+
+    /// [`BenchCtx::pipeline_run`] under an explicit [`PrepMode`] (the
+    /// `prep-modes` bench compares all three on one configuration).
+    pub fn pipeline_run_prep(
+        &self,
+        backend: &str,
+        chunks: usize,
+        star: bool,
+        graph_aware: bool,
+        prep: PrepMode,
+    ) -> Result<PipelineRun> {
         let key = format!(
-            "{backend}/c{chunks}/star={star}/aware={graph_aware}/{}/{}",
+            "{backend}/c{chunks}/star={star}/aware={graph_aware}/{}/{}/{}",
             self.schedule.name(),
+            prep.name(),
             self.epochs
         );
         if let Some(r) = self.pipeline_cache.lock().unwrap().get(&key) {
@@ -135,14 +166,17 @@ impl BenchCtx {
         }
         let ds_name = self.cfg.pipeline.pipeline_dataset.clone();
         eprintln!(
-            "[bench] pipeline {ds_name}/{backend} chunks={chunks}{} schedule={} for {} epochs...",
+            "[bench] pipeline {ds_name}/{backend} chunks={chunks}{} schedule={} prep={} for {} epochs...",
             if star { "*" } else { "" },
             self.schedule.name(),
+            prep.name(),
             self.epochs
         );
         let ds = self.dataset(&ds_name)?;
         let mut trainer = PipelineTrainer::new(&self.engine, ds, backend, chunks);
         trainer.schedule = self.schedule.clone();
+        trainer.prep = prep;
+        trainer.prep_cache = self.prep_cache.clone();
         if star {
             trainer = trainer.full_graph_variant();
         }
@@ -155,7 +189,9 @@ impl BenchCtx {
         self.engine.clear_cache();
         let rebuild_events = (self.epochs * chunks).max(1);
         let run = PipelineRun {
-            host_rebuild_per_chunk_s: res.timing.rebuild_s / rebuild_events as f64,
+            host_rebuild_per_chunk_s: (res.timing.rebuild_s
+                + res.timing.prep_overlap_s)
+                / rebuild_events as f64,
             timing: res.timing,
             pipeline_eval: res.pipeline_eval,
             full_eval: res.full_eval,

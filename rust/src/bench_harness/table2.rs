@@ -107,9 +107,12 @@ pub fn bench_table2(ctx: &BenchCtx) -> Result<String> {
     )?;
     for chunks in ctx.cfg.pipeline.chunks.clone() {
         let pr = ctx.pipeline_run(backend, chunks, false, false)?;
-        let dgx = scen.dgx_pipeline_epoch(
+        // Price the prep mode the real run executed: Paper (default)
+        // keeps the paper's Table 2 shape; a `--prep cached|overlap`
+        // session projects the stall the session actually paid.
+        let dgx = scen.dgx_pipeline_epoch_prep(
             "pubmed", backend, chunks, true, pr.host_rebuild_per_chunk_s,
-            ctx.schedule.as_ref(),
+            ctx.schedule.as_ref(), ctx.prep,
         )?;
         push(
             fw,

@@ -102,6 +102,11 @@ pub struct PipelineConfig {
     /// overridable per run with `--schedule`. Parsed by
     /// `pipeline::parse_schedule`.
     pub schedule: String,
+    /// Default host-prep mode ("paper", "cached" or "overlap");
+    /// overridable per run with `--prep`. Parsed by
+    /// `pipeline::PrepMode::parse`. "paper" reproduces the §7.2
+    /// per-epoch rebuild stall.
+    pub prep: String,
 }
 
 #[derive(Debug, Clone)]
@@ -190,11 +195,16 @@ impl Config {
                 .iter()
                 .filter_map(|j| j.as_str().map(String::from))
                 .collect(),
-            // Optional key: older configs predate schedules.
+            // Optional keys: older configs predate schedules/prep modes.
             schedule: p
                 .get("schedule")
                 .and_then(Json::as_str)
                 .unwrap_or("fill-drain")
+                .to_string(),
+            prep: p
+                .get("prep")
+                .and_then(Json::as_str)
+                .unwrap_or("paper")
                 .to_string(),
         };
 
@@ -226,8 +236,10 @@ mod tests {
         assert_eq!(c.model.heads, 8);
         assert_eq!(c.pipeline.devices, 4);
         assert_eq!(c.pipeline.balance, vec![2, 1, 2, 1]);
-        // The schedule key is optional and defaults to the paper's.
+        // The schedule/prep keys are optional and default to the paper's.
         assert!(c.pipeline.schedule == "fill-drain" || c.pipeline.schedule == "1f1b");
+        assert!(["paper", "cached", "overlap"]
+            .contains(&c.pipeline.prep.as_str()));
     }
 
     #[test]

@@ -19,14 +19,33 @@ pub struct CooGraph {
 
 impl CooGraph {
     pub fn from_graph(g: &Graph, e_cap: usize) -> Result<CooGraph> {
+        let mut src = Vec::with_capacity(e_cap);
+        let mut dst = Vec::with_capacity(e_cap);
+        let mut mask = Vec::with_capacity(e_cap);
+        let real = CooGraph::write_padded(g, e_cap, &mut src, &mut dst, &mut mask)?;
+        Ok(CooGraph { n: g.num_nodes(), e_cap, src, dst, mask, real })
+    }
+
+    /// Export into caller buffers, zero-padded to `e_cap` entries —
+    /// the single source of truth for the COO layout (self-loop first,
+    /// then incoming edges per node). Returns the number of real
+    /// entries. The micro-batch prep buffer pool refills its pooled
+    /// `Vec`s through this (clear + resize, reusing the allocation).
+    pub fn write_padded(
+        g: &Graph,
+        e_cap: usize,
+        src: &mut Vec<i32>,
+        dst: &mut Vec<i32>,
+        mask: &mut Vec<f32>,
+    ) -> Result<usize> {
         let n = g.num_nodes();
         let real = n + 2 * g.num_edges();
         anyhow::ensure!(
             real <= e_cap,
             "graph has {real} directed entries (incl self-loops) > capacity {e_cap}"
         );
-        let mut src = Vec::with_capacity(e_cap);
-        let mut dst = Vec::with_capacity(e_cap);
+        src.clear();
+        dst.clear();
         for v in 0..n {
             // self-loop first, then incoming edges (j -> v)
             src.push(v as i32);
@@ -36,11 +55,12 @@ impl CooGraph {
                 dst.push(v as i32);
             }
         }
-        let mut mask = vec![1.0f32; real];
         src.resize(e_cap, 0);
         dst.resize(e_cap, 0);
+        mask.clear();
+        mask.resize(real, 1.0);
         mask.resize(e_cap, 0.0);
-        Ok(CooGraph { n, e_cap, src, dst, mask, real })
+        Ok(real)
     }
 }
 

@@ -22,9 +22,31 @@ pub struct EllGraph {
 impl EllGraph {
     pub fn from_graph(g: &Graph, k: usize) -> Result<EllGraph> {
         let n = g.num_nodes();
+        let mut idx = Vec::new();
+        let mut mask = Vec::new();
+        EllGraph::write_padded(g, k, n, &mut idx, &mut mask)?;
+        Ok(EllGraph { n, k, idx, mask })
+    }
+
+    /// Export into caller buffers, zero-padded to `n_pad` rows — the
+    /// single source of truth for the ELL layout. `from_graph` builds
+    /// through this with `n_pad = n`; the micro-batch prep buffer pool
+    /// refills its pooled `Vec`s through it (clear + resize, reusing the
+    /// allocation).
+    pub fn write_padded(
+        g: &Graph,
+        k: usize,
+        n_pad: usize,
+        idx: &mut Vec<i32>,
+        mask: &mut Vec<f32>,
+    ) -> Result<()> {
+        let n = g.num_nodes();
         anyhow::ensure!(k >= 1, "ELL width must be >= 1");
-        let mut idx = vec![0i32; n * k];
-        let mut mask = vec![0f32; n * k];
+        anyhow::ensure!(n <= n_pad, "{n} nodes > padded capacity {n_pad}");
+        idx.clear();
+        idx.resize(n_pad * k, 0);
+        mask.clear();
+        mask.resize(n_pad * k, 0.0);
         for v in 0..n {
             let nbrs = g.neighbors(v);
             anyhow::ensure!(
@@ -40,7 +62,7 @@ impl EllGraph {
                 mask[row + 1 + s] = 1.0;
             }
         }
-        Ok(EllGraph { n, k, idx, mask })
+        Ok(())
     }
 
     /// Count of valid non-self slots (directed edge endpoints present).

@@ -26,32 +26,63 @@ pub struct InducedSubgraph {
 /// O(|chunk| + sum of chunk degrees): one pass building an old->new map,
 /// one pass over chunk adjacency rows.
 pub fn induce_subgraph(g: &Graph, nodes: &[u32]) -> InducedSubgraph {
-    let mut remap = vec![u32::MAX; g.num_nodes()];
-    for (new, &old) in nodes.iter().enumerate() {
-        debug_assert!(remap[old as usize] == u32::MAX, "duplicate node in chunk");
-        remap[old as usize] = new as u32;
+    InduceScratch::new().induce(g, nodes)
+}
+
+/// Reusable induction scratch: keeps the O(|V|) old→new remap table and
+/// the edge buffer alive across calls, so per-epoch sub-graph rebuilds
+/// (the paper's §7.2 hot path, driven by `pipeline::MicrobatchPool`)
+/// stop re-allocating and re-zeroing them every chunk.
+#[derive(Debug, Default)]
+pub struct InduceScratch {
+    remap: Vec<u32>,
+    edges: Vec<(u32, u32)>,
+}
+
+impl InduceScratch {
+    pub fn new() -> InduceScratch {
+        InduceScratch::default()
     }
-    let mut edges = Vec::new();
-    let mut cut = 0usize;
-    for (new_a, &old_a) in nodes.iter().enumerate() {
-        for &old_b in g.neighbors(old_a as usize) {
-            let new_b = remap[old_b as usize];
-            if new_b == u32::MAX {
-                cut += 1; // counted once per direction from inside
-            } else if (new_a as u32) < new_b {
-                edges.push((new_a as u32, new_b));
+
+    /// Same result as [`induce_subgraph`], reusing this scratch's
+    /// buffers. The remap table is restored to all-`u32::MAX` on exit by
+    /// resetting only the touched entries (O(|chunk|), not O(|V|)).
+    pub fn induce(&mut self, g: &Graph, nodes: &[u32]) -> InducedSubgraph {
+        if self.remap.len() != g.num_nodes() {
+            self.remap.clear();
+            self.remap.resize(g.num_nodes(), u32::MAX);
+        }
+        let remap = &mut self.remap;
+        for (new, &old) in nodes.iter().enumerate() {
+            debug_assert!(remap[old as usize] == u32::MAX, "duplicate node in chunk");
+            remap[old as usize] = new as u32;
+        }
+        self.edges.clear();
+        let mut cut = 0usize;
+        for (new_a, &old_a) in nodes.iter().enumerate() {
+            for &old_b in g.neighbors(old_a as usize) {
+                let new_b = remap[old_b as usize];
+                if new_b == u32::MAX {
+                    cut += 1; // counted once per direction from inside
+                } else if (new_a as u32) < new_b {
+                    self.edges.push((new_a as u32, new_b));
+                }
             }
         }
-    }
-    let graph = Graph::from_undirected_edges(nodes.len(), &edges)
-        .expect("induced edges are valid by construction");
-    InducedSubgraph {
-        nodes: nodes.to_vec(),
-        kept_edges: edges.len(),
-        // Each cut undirected edge was seen once (from its inside endpoint)
-        // unless both endpoints are inside (then it isn't cut at all).
-        cut_edges: cut,
-        graph,
+        // Restore the invariant for the next call.
+        for &old in nodes {
+            remap[old as usize] = u32::MAX;
+        }
+        let graph = Graph::from_undirected_edges(nodes.len(), &self.edges)
+            .expect("induced edges are valid by construction");
+        InducedSubgraph {
+            nodes: nodes.to_vec(),
+            kept_edges: self.edges.len(),
+            // Each cut undirected edge was seen once (from its inside endpoint)
+            // unless both endpoints are inside (then it isn't cut at all).
+            cut_edges: cut,
+            graph,
+        }
     }
 }
 
@@ -104,5 +135,24 @@ mod tests {
         let s = induce_subgraph(&g, &[0, 3]);
         assert_eq!(s.kept_edges, 0);
         assert_eq!(s.cut_edges, 4);
+    }
+
+    #[test]
+    fn scratch_reuse_matches_fresh_induction() {
+        let g = cycle(8);
+        let chunks: &[&[u32]] = &[&[0, 1, 2], &[3, 4, 5], &[6, 7], &[1, 5, 7]];
+        let mut scratch = InduceScratch::new();
+        // Two passes over the same chunks: reuse must not leak remap
+        // state between chunks or between passes.
+        for _ in 0..2 {
+            for chunk in chunks {
+                let fresh = induce_subgraph(&g, chunk);
+                let reused = scratch.induce(&g, chunk);
+                assert_eq!(fresh.nodes, reused.nodes);
+                assert_eq!(fresh.kept_edges, reused.kept_edges);
+                assert_eq!(fresh.cut_edges, reused.cut_edges);
+                assert_eq!(fresh.graph, reused.graph);
+            }
+        }
     }
 }

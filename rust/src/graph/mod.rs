@@ -13,7 +13,7 @@ mod stats;
 
 pub use coo::CooGraph;
 pub use ell::EllGraph;
-pub use induce::{induce_subgraph, InducedSubgraph};
+pub use induce::{induce_subgraph, InduceScratch, InducedSubgraph};
 pub use stats::GraphStats;
 
 use anyhow::Result;

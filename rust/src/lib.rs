@@ -11,10 +11,13 @@
 //!   datasets, micro-batch chunkers, a generic N-stage pipeline engine
 //!   (declarative [`pipeline::PipelineSpec`] + pluggable
 //!   [`pipeline::Schedule`] — GPipe fill-drain or 1F1B — with
-//!   rematerialised backward), Adam, the training loops, the device/DGX
-//!   performance simulator (which replays the same schedules to price
-//!   bubbles), and the bench harness that regenerates every table and
-//!   figure of the paper.
+//!   rematerialised backward), a prep-and-transfer subsystem
+//!   ([`pipeline::PrepMode`]: the paper's per-epoch host rebuild stall,
+//!   a build-once cache, or an epoch-overlap prefetcher, with
+//!   device-resident static inputs), Adam, the training loops, the
+//!   device/DGX performance simulator (which replays the same schedules
+//!   and prep modes to price bubbles and stalls), and the bench harness
+//!   that regenerates every table and figure of the paper.
 //!
 //! Python never runs on the training path: after `make artifacts` the
 //! binary is self-contained, executing the HLO via the PJRT CPU client.

@@ -16,8 +16,20 @@ pub struct RunTiming {
     /// Time spent inside the coordinator but outside executables
     /// (schedule, stash, accumulate, host rebuild) — §Perf accounting.
     pub coordinator_s: f64,
-    /// Time spent in host-side sub-graph rebuilds (the paper's §7.2 term).
+    /// Time spent in host-side sub-graph rebuilds ON the critical path
+    /// (the paper's §7.2 term). Under `--prep overlap` this shrinks to
+    /// the residual stall waiting on the prefetcher; the hidden rebuild
+    /// work moves to `prep_overlap_s`.
     pub rebuild_s: f64,
+    /// Host↔device transfer seconds (upload + download) across all
+    /// stage executable calls — from the upload/execute/download split
+    /// in `runtime::Executable`. Device-resident static inputs
+    /// (`--prep cached|overlap`) shrink the upload share.
+    pub transfer_s: f64,
+    /// Micro-batch prep seconds performed OFF the critical path by the
+    /// Overlap prefetch thread (the work `rebuild_s` would have charged
+    /// in Paper mode). Zero in other modes.
+    pub prep_overlap_s: f64,
 }
 
 impl RunTiming {

@@ -6,20 +6,40 @@
 //! a [`StageInput`] (features, graph tensors, labels+mask); the generic
 //! stage worker picks from it in the artifact's declared input order.
 //!
+//! Three build paths produce **bitwise-identical** tensors (asserted by
+//! `rust/tests/integration_prep.rs`):
+//!
+//! * [`prepare_microbatches`] — serial, fresh allocations: the paper's
+//!   faithful per-epoch rebuild cost ([`PrepMode::Paper`] measures it);
+//! * [`prepare_microbatches_parallel`] — one scoped thread per chunk
+//!   (chunks are independent), used by the prep cache and the Overlap
+//!   prefetcher;
+//! * [`fill_microbatch`] — rebuild *into* existing allocations (the
+//!   buffer pool behind `MicrobatchPool`), so steady-state Paper-mode
+//!   epochs stop malloc-churning.
+//!
 //! [`StageSpec`]: super::StageSpec
 //! [`StageInput`]: super::StageInput
+//! [`PrepMode`]: super::PrepMode
+
+use std::sync::atomic::{AtomicU64, Ordering};
 
 use anyhow::Result;
 
 use crate::batching::ChunkPlan;
 use crate::config::DatasetProfile;
 use crate::data::Dataset;
-use crate::graph::{EllGraph, Graph};
+use crate::graph::{CooGraph, EllGraph, Graph, InducedSubgraph};
 use crate::runtime::HostTensor;
 
 /// One padded micro-batch, ready for the stage executables.
 #[derive(Debug, Clone)]
 pub struct Microbatch {
+    /// Content-version id: freshly assigned whenever the tensors are
+    /// (re)built, so the device-resident input cache re-uploads exactly
+    /// when the host content changed. Clones share the id (content is
+    /// identical); in-place refills get a new one.
+    pub id: u64,
     /// Original node ids (len <= n_pad).
     pub nodes: Vec<u32>,
     /// Padded feature rows (n_pad, d).
@@ -32,7 +52,15 @@ pub struct Microbatch {
     pub cut_edges: usize,
 }
 
-/// Build padded micro-batches from a chunk plan.
+/// Monotonic content-version ids for [`Microbatch::id`].
+static NEXT_MB_ID: AtomicU64 = AtomicU64::new(1);
+
+pub(crate) fn fresh_mb_id() -> u64 {
+    NEXT_MB_ID.fetch_add(1, Ordering::Relaxed)
+}
+
+/// Build padded micro-batches from a chunk plan — serially, with fresh
+/// allocations: exactly the paper's per-epoch host rebuild.
 ///
 /// `n_pad` rows per chunk and (for `edgewise`) `e_cap` edge slots must
 /// match the chunk-count-specific artifact shapes; callers take them
@@ -43,34 +71,183 @@ pub fn prepare_microbatches(
     backend: &str,
     train_mask: &[f32],
 ) -> Result<Vec<Microbatch>> {
-    let p = &ds.profile;
     let k = plan.num_chunks();
-    let n_pad = p.chunk_nodes(k);
-    let e_cap = p.chunk_e_cap(k);
-    let mut out = Vec::with_capacity(k);
-    for chunk in &plan.chunks {
-        anyhow::ensure!(chunk.len() <= n_pad, "chunk larger than padded capacity");
-        let sub = crate::graph::induce_subgraph(&ds.graph, chunk);
-        let graph = graph_tensors(&sub.graph, backend, n_pad, e_cap, p)?;
-        out.push(Microbatch {
-            x: HostTensor::f32(
-                vec![n_pad, p.features],
-                ds.gather_features(chunk, n_pad),
-            ),
-            labels: HostTensor::s32(vec![n_pad], ds.gather_labels(chunk, n_pad)),
-            mask: HostTensor::f32(
-                vec![n_pad],
-                ds.gather_mask(train_mask, chunk, n_pad),
-            ),
-            graph,
-            cut_edges: sub.cut_edges,
-            nodes: chunk.clone(),
-        })
+    let n_pad = ds.profile.chunk_nodes(k);
+    let e_cap = ds.profile.chunk_e_cap(k);
+    plan.chunks
+        .iter()
+        .map(|chunk| build_microbatch(ds, chunk, backend, train_mask, n_pad, e_cap))
+        .collect()
+}
+
+/// [`prepare_microbatches`] with the per-chunk induce + tensor build
+/// fanned out over one scoped thread per chunk. Chunks are independent
+/// and each build is deterministic, so the result — including chunk
+/// order — is bitwise identical to the serial path.
+pub fn prepare_microbatches_parallel(
+    ds: &Dataset,
+    plan: &ChunkPlan,
+    backend: &str,
+    train_mask: &[f32],
+) -> Result<Vec<Microbatch>> {
+    let k = plan.num_chunks();
+    if k <= 1 {
+        return prepare_microbatches(ds, plan, backend, train_mask);
     }
-    Ok(out)
+    let n_pad = ds.profile.chunk_nodes(k);
+    let e_cap = ds.profile.chunk_e_cap(k);
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = plan
+            .chunks
+            .iter()
+            .map(|chunk| {
+                scope.spawn(move || {
+                    build_microbatch(ds, chunk, backend, train_mask, n_pad, e_cap)
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("micro-batch prep worker panicked"))
+            .collect()
+    })
+}
+
+/// Build micro-batches from already-induced sub-graphs (in chunk order),
+/// skipping the induction pass — used when the caller induced the plan
+/// once already (the lossy union graph needs the same sub-graphs).
+pub fn microbatches_from_induced(
+    ds: &Dataset,
+    induced: &[InducedSubgraph],
+    backend: &str,
+    train_mask: &[f32],
+) -> Result<Vec<Microbatch>> {
+    let k = induced.len();
+    anyhow::ensure!(k >= 1, "no induced sub-graphs");
+    let n_pad = ds.profile.chunk_nodes(k);
+    let e_cap = ds.profile.chunk_e_cap(k);
+    induced
+        .iter()
+        .map(|sub| microbatch_of(ds, sub, backend, train_mask, n_pad, e_cap))
+        .collect()
+}
+
+fn build_microbatch(
+    ds: &Dataset,
+    chunk: &[u32],
+    backend: &str,
+    train_mask: &[f32],
+    n_pad: usize,
+    e_cap: usize,
+) -> Result<Microbatch> {
+    let sub = crate::graph::induce_subgraph(&ds.graph, chunk);
+    microbatch_of(ds, &sub, backend, train_mask, n_pad, e_cap)
+}
+
+fn microbatch_of(
+    ds: &Dataset,
+    sub: &InducedSubgraph,
+    backend: &str,
+    train_mask: &[f32],
+    n_pad: usize,
+    e_cap: usize,
+) -> Result<Microbatch> {
+    let p = &ds.profile;
+    let chunk = &sub.nodes;
+    anyhow::ensure!(chunk.len() <= n_pad, "chunk larger than padded capacity");
+    let graph = graph_tensors(&sub.graph, backend, n_pad, e_cap, p)?;
+    Ok(Microbatch {
+        id: fresh_mb_id(),
+        x: HostTensor::f32(
+            vec![n_pad, p.features],
+            ds.gather_features(chunk, n_pad),
+        ),
+        labels: HostTensor::s32(vec![n_pad], ds.gather_labels(chunk, n_pad)),
+        mask: HostTensor::f32(
+            vec![n_pad],
+            ds.gather_mask(train_mask, chunk, n_pad),
+        ),
+        graph,
+        cut_edges: sub.cut_edges,
+        nodes: chunk.clone(),
+    })
+}
+
+/// Rebuild `mb` in place from an induced sub-graph, reusing every
+/// existing allocation (the `Vec`s inside the `HostTensor`s). Produces
+/// bitwise-identical content to [`prepare_microbatches`]; assigns a
+/// fresh [`Microbatch::id`] because the content may have changed.
+///
+/// The caller guarantees `mb` was built for the same (backend, n_pad,
+/// e_cap) layout — `MicrobatchPool` rebuilds from scratch otherwise.
+pub(crate) fn fill_microbatch(
+    mb: &mut Microbatch,
+    ds: &Dataset,
+    sub: &InducedSubgraph,
+    backend: &str,
+    train_mask: &[f32],
+    n_pad: usize,
+    e_cap: usize,
+) -> Result<()> {
+    let p = &ds.profile;
+    let chunk = &sub.nodes;
+    anyhow::ensure!(chunk.len() <= n_pad, "chunk larger than padded capacity");
+    mb.id = fresh_mb_id();
+    mb.cut_edges = sub.cut_edges;
+    mb.nodes.clear();
+    mb.nodes.extend_from_slice(chunk);
+    {
+        let d = p.features;
+        let x = mb.x.as_f32_mut()?;
+        x.clear();
+        x.resize(n_pad * d, 0.0);
+        for (i, &v) in chunk.iter().enumerate() {
+            x[i * d..(i + 1) * d].copy_from_slice(ds.feature_row(v as usize));
+        }
+    }
+    {
+        let labels = mb.labels.as_s32_mut()?;
+        labels.clear();
+        labels.resize(n_pad, 0);
+        for (i, &v) in chunk.iter().enumerate() {
+            labels[i] = ds.labels[v as usize];
+        }
+    }
+    {
+        let mask = mb.mask.as_f32_mut()?;
+        mask.clear();
+        mask.resize(n_pad, 0.0);
+        for (i, &v) in chunk.iter().enumerate() {
+            mask[i] = train_mask[v as usize];
+        }
+    }
+    match (backend, &mut mb.graph[..]) {
+        ("ell", [idx_t, mask_t]) => EllGraph::write_padded(
+            &sub.graph,
+            p.ell_k,
+            n_pad,
+            idx_t.as_s32_mut()?,
+            mask_t.as_f32_mut()?,
+        ),
+        ("edgewise", [src_t, dst_t, mask_t]) => CooGraph::write_padded(
+            &sub.graph,
+            e_cap,
+            src_t.as_s32_mut()?,
+            dst_t.as_s32_mut()?,
+            mask_t.as_f32_mut()?,
+        )
+        .map(|_real| ()),
+        (other, g) => anyhow::bail!(
+            "backend {other:?} with {} pooled graph tensors: layout mismatch",
+            g.len()
+        ),
+    }
 }
 
 /// Device graph tensors for a (possibly smaller-than-padded) sub-graph.
+/// Layout comes from the exporters the compiled HLO was lowered against
+/// (`EllGraph::write_padded` / `CooGraph::write_padded` — one source of
+/// truth shared with the buffer-pool refill path).
 pub fn graph_tensors(
     g: &Graph,
     backend: &str,
@@ -80,22 +257,23 @@ pub fn graph_tensors(
 ) -> Result<Vec<HostTensor>> {
     match backend {
         "ell" => {
-            let ell = EllGraph::from_graph(g, p.ell_k)?;
-            let mut idx = ell.idx;
-            let mut mask = ell.mask;
-            idx.resize(n_pad * p.ell_k, 0);
-            mask.resize(n_pad * p.ell_k, 0.0);
+            let mut idx = Vec::new();
+            let mut mask = Vec::new();
+            EllGraph::write_padded(g, p.ell_k, n_pad, &mut idx, &mut mask)?;
             Ok(vec![
                 HostTensor::s32(vec![n_pad, p.ell_k], idx),
                 HostTensor::f32(vec![n_pad, p.ell_k], mask),
             ])
         }
         "edgewise" => {
-            let coo = g.to_coo(e_cap)?;
+            let mut src = Vec::new();
+            let mut dst = Vec::new();
+            let mut mask = Vec::new();
+            CooGraph::write_padded(g, e_cap, &mut src, &mut dst, &mut mask)?;
             Ok(vec![
-                HostTensor::s32(vec![e_cap], coo.src),
-                HostTensor::s32(vec![e_cap], coo.dst),
-                HostTensor::f32(vec![e_cap], coo.mask),
+                HostTensor::s32(vec![e_cap], src),
+                HostTensor::s32(vec![e_cap], dst),
+                HostTensor::f32(vec![e_cap], mask),
             ])
         }
         other => anyhow::bail!("unknown backend {other:?}"),
@@ -108,13 +286,23 @@ pub fn graph_tensors(
 /// dropout-off forward through the chunked pipeline (message passing
 /// never crosses chunks), which is how Figure 4's accuracy is measured.
 pub fn lossy_union_graph(full: &Graph, plan: &ChunkPlan) -> Graph {
+    lossy_union_from_induced(full.num_nodes(), &plan.induce_all(full))
+}
+
+/// [`lossy_union_graph`] from already-induced sub-graphs, so callers
+/// that just prepared micro-batches from the same plan (the pipeline
+/// driver) don't induce every chunk a second time.
+pub fn lossy_union_from_induced(
+    num_nodes: usize,
+    induced: &[InducedSubgraph],
+) -> Graph {
     let mut edges = Vec::new();
-    for sub in plan.induce_all(full) {
+    for sub in induced {
         for (a, b) in sub.graph.edges() {
             edges.push((sub.nodes[a as usize], sub.nodes[b as usize]));
         }
     }
-    Graph::from_undirected_edges(full.num_nodes(), &edges)
+    Graph::from_undirected_edges(num_nodes, &edges)
         .expect("union of induced sub-graphs is a valid simple graph")
 }
 
@@ -184,6 +372,88 @@ mod tests {
     }
 
     #[test]
+    fn graph_tensors_match_device_exporters() {
+        // write_padded must reproduce from_graph + resize bit for bit
+        // (graph_tensors is the contract the compiled HLO was lowered
+        // against).
+        let p = profile();
+        let ds = generate(&p).unwrap();
+        let plan = SequentialChunker.plan(&ds.graph, 2);
+        let sub = crate::graph::induce_subgraph(&ds.graph, &plan.chunks[0]);
+        let n_pad = p.chunk_nodes(2);
+        let e_cap = p.chunk_e_cap(2);
+
+        let ts = graph_tensors(&sub.graph, "ell", n_pad, e_cap, &p).unwrap();
+        let ell = crate::graph::EllGraph::from_graph(&sub.graph, p.ell_k).unwrap();
+        let mut idx = ell.idx;
+        let mut mask = ell.mask;
+        idx.resize(n_pad * p.ell_k, 0);
+        mask.resize(n_pad * p.ell_k, 0.0);
+        assert_eq!(ts[0].as_s32().unwrap(), &idx[..]);
+        assert_eq!(ts[1].as_f32().unwrap(), &mask[..]);
+
+        let ts = graph_tensors(&sub.graph, "edgewise", n_pad, e_cap, &p).unwrap();
+        let coo = sub.graph.to_coo(e_cap).unwrap();
+        assert_eq!(ts[0].as_s32().unwrap(), &coo.src[..]);
+        assert_eq!(ts[1].as_s32().unwrap(), &coo.dst[..]);
+        assert_eq!(ts[2].as_f32().unwrap(), &coo.mask[..]);
+    }
+
+    #[test]
+    fn parallel_prep_is_bitwise_identical_to_serial() {
+        let p = profile();
+        let ds = generate(&p).unwrap();
+        let tm = ds.splits.train_mask(p.nodes);
+        for backend in ["ell", "edgewise"] {
+            for chunks in 1..=4usize {
+                let plan = SequentialChunker.plan(&ds.graph, chunks);
+                let serial =
+                    prepare_microbatches(&ds, &plan, backend, &tm).unwrap();
+                let parallel =
+                    prepare_microbatches_parallel(&ds, &plan, backend, &tm)
+                        .unwrap();
+                assert_eq!(serial.len(), parallel.len());
+                for (a, b) in serial.iter().zip(&parallel) {
+                    assert_eq!(a.nodes, b.nodes);
+                    assert_eq!(a.cut_edges, b.cut_edges);
+                    assert_eq!(a.x, b.x);
+                    assert_eq!(a.graph, b.graph);
+                    assert_eq!(a.labels, b.labels);
+                    assert_eq!(a.mask, b.mask);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fill_microbatch_matches_fresh_build_and_bumps_id() {
+        let p = profile();
+        let ds = generate(&p).unwrap();
+        let tm = ds.splits.train_mask(p.nodes);
+        for backend in ["ell", "edgewise"] {
+            let plan = SequentialChunker.plan(&ds.graph, 3);
+            let n_pad = p.chunk_nodes(3);
+            let e_cap = p.chunk_e_cap(3);
+            let fresh = prepare_microbatches(&ds, &plan, backend, &tm).unwrap();
+            let mut pooled = fresh.clone();
+            for (mb, chunk) in pooled.iter_mut().zip(&plan.chunks) {
+                let old_id = mb.id;
+                let sub = crate::graph::induce_subgraph(&ds.graph, chunk);
+                fill_microbatch(mb, &ds, &sub, backend, &tm, n_pad, e_cap)
+                    .unwrap();
+                assert_ne!(mb.id, old_id, "refill must bump the content id");
+            }
+            for (a, b) in fresh.iter().zip(&pooled) {
+                assert_eq!(a.nodes, b.nodes);
+                assert_eq!(a.x, b.x);
+                assert_eq!(a.graph, b.graph);
+                assert_eq!(a.labels, b.labels);
+                assert_eq!(a.mask, b.mask);
+            }
+        }
+    }
+
+    #[test]
     fn lossy_union_loses_exactly_cut_edges() {
         let p = profile();
         let ds = generate(&p).unwrap();
@@ -196,6 +466,10 @@ mod tests {
         for (a, b) in union.edges() {
             assert!(ds.graph.has_edge(a as usize, b as usize));
         }
+        // the from-induced path is the same graph (induction done once)
+        let union2 =
+            lossy_union_from_induced(p.nodes, &plan.induce_all(&ds.graph));
+        assert_eq!(union, union2);
     }
 
     #[test]

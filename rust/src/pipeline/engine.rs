@@ -26,7 +26,7 @@ use std::time::Instant;
 
 use anyhow::{Context, Result};
 
-use crate::runtime::{Engine, Executable, HostTensor};
+use crate::runtime::{Engine, ExecInput, Executable, HostTensor};
 
 use super::chunkprep::Microbatch;
 use super::schedule::{Schedule, StageEvent};
@@ -74,6 +74,12 @@ pub struct PipelineEngine {
     pub chunks: usize,
     pub backend: String,
     pub artifact_names: Vec<String>,
+    /// Keep static micro-batch inputs (features, graph tensors,
+    /// labels+mask) resident on the device across stage calls, keyed by
+    /// the micro-batch's content-version id. Off by default — the
+    /// paper's implementation re-uploads per call; `PrepMode::Cached`
+    /// and `::Overlap` turn it on.
+    pub device_resident: bool,
 }
 
 type Msg = (usize, HostTensor);
@@ -108,6 +114,7 @@ impl PipelineEngine {
             chunks,
             backend: backend.to_string(),
             artifact_names,
+            device_resident: false,
         })
     }
 
@@ -117,6 +124,36 @@ impl PipelineEngine {
 
     pub fn schedule_name(&self) -> &'static str {
         self.schedule.name()
+    }
+
+    /// Cumulative host↔device transfer seconds (upload + download)
+    /// across every stage executable — snapshot before/after a run for
+    /// the `transfer_s` metric (executables are process-cached, so the
+    /// raw totals span the engine's lifetime, not one run).
+    pub fn transfer_seconds(&self) -> f64 {
+        self.execs
+            .iter()
+            .flat_map(|e| [&e.fwd, &e.bwd])
+            .map(|e| e.exec_stats().transfer_s())
+            .sum()
+    }
+
+    /// Static-input cache hits across every stage executable.
+    pub fn static_hits(&self) -> u64 {
+        self.execs
+            .iter()
+            .flat_map(|e| [&e.fwd, &e.bwd])
+            .map(|e| e.exec_stats().static_hits)
+            .sum()
+    }
+
+    /// Drop all device-resident static input buffers held by this
+    /// pipeline's stage executables.
+    pub fn clear_static_buffers(&self) {
+        for e in &self.execs {
+            e.fwd.clear_static_buffers();
+            e.bwd.clear_static_buffers();
+        }
     }
 
     /// Run one synchronous pipeline step over the prepared micro-batches.
@@ -141,12 +178,11 @@ impl PipelineEngine {
         let m_count = microbatches.len();
         anyhow::ensure!(m_count >= 1, "no micro-batches");
         let n_stages = self.spec.stages.len();
-        let mbs: Arc<Vec<Microbatch>> = Arc::new(microbatches.to_vec());
-        let keys: Arc<Vec<HostTensor>> = Arc::new(
-            (0..m_count)
-                .map(|m| HostTensor::key(key.0.wrapping_add(m as u32), key.1))
-                .collect(),
-        );
+        // Workers borrow the micro-batches directly (scoped threads): no
+        // per-epoch clone of the full prepared set.
+        let keys: Vec<HostTensor> = (0..m_count)
+            .map(|m| HostTensor::key(key.0.wrapping_add(m as u32), key.1))
+            .collect();
 
         let wall = Instant::now();
 
@@ -175,8 +211,9 @@ impl PipelineEngine {
                     fwd: ex.fwd.clone(),
                     bwd: ex.bwd.clone(),
                     params: params[st.params.0..st.params.1].to_vec(),
-                    mbs: mbs.clone(),
-                    keys: keys.clone(),
+                    mbs: microbatches,
+                    keys: &keys,
+                    device_resident: self.device_resident,
                     events: self.schedule.events(s, n_stages, m_count),
                     fwd_in: fwd_in[s].take(),
                     fwd_out: fwd_out[s].take(),
@@ -263,8 +300,10 @@ struct StageWorker<'a> {
     bwd: Arc<Executable>,
     /// This stage's owned parameter slice (cloned per epoch).
     params: Vec<HostTensor>,
-    mbs: Arc<Vec<Microbatch>>,
-    keys: Arc<Vec<HostTensor>>,
+    mbs: &'a [Microbatch],
+    keys: &'a [HostTensor],
+    /// Mark per-micro-batch static inputs for device residency.
+    device_resident: bool,
     events: Vec<StageEvent>,
     fwd_in: Option<Receiver<Msg>>,
     fwd_out: Option<Sender<Msg>>,
@@ -300,10 +339,13 @@ impl StageWorker<'_> {
                         Some(inbox) => Some(inbox.recv(m, self.stage, "activation")?),
                         None => None,
                     };
-                    let inp =
-                        self.assemble(&self.spec.fwd_inputs, m, inbound.as_ref())?;
                     let t0 = Instant::now();
-                    let out = self.fwd.run(&inp).with_context(|| {
+                    let out = {
+                        let inp = self
+                            .assemble(&self.spec.fwd_inputs, m, inbound.as_ref())?;
+                        self.fwd.run_inputs(&inp)
+                    }
+                    .with_context(|| {
                         format!("stage {} fwd (micro-batch {m})", self.stage)
                     })?;
                     timing.fwd_s.push(t0.elapsed().as_secs_f64());
@@ -342,11 +384,11 @@ impl StageWorker<'_> {
                     };
                     let mut inp =
                         self.assemble(&self.spec.bwd_inputs, m, stashed.as_ref())?;
-                    if let Some(g) = cotangent {
-                        inp.push(g);
+                    if let Some(g) = cotangent.as_ref() {
+                        inp.push(ExecInput::Dyn(g));
                     }
                     let t0 = Instant::now();
-                    let mut out = self.bwd.run(&inp).with_context(|| {
+                    let mut out = self.bwd.run_inputs(&inp).with_context(|| {
                         format!("stage {} bwd (micro-batch {m})", self.stage)
                     })?;
                     timing.bwd_s.push(t0.elapsed().as_secs_f64());
@@ -377,37 +419,60 @@ impl StageWorker<'_> {
         Ok(WorkerOutput { grads: acc, timing, loss_sum, mask_count, logp })
     }
 
-    /// Build an executable input list: the stage's parameter slice, then
-    /// each declared [`StageInput`] in order.
-    fn assemble(
-        &self,
+    /// Build an executable input list (borrowed — no host-side tensor
+    /// clones): the stage's parameter slice, then each declared
+    /// [`StageInput`] in order. Per-micro-batch static inputs (features,
+    /// graph tensors, labels+mask) are marked device-resident when the
+    /// engine's `device_resident` flag is on, keyed by the micro-batch's
+    /// content-version id so a rebuilt batch re-uploads; params,
+    /// activations and dropout keys change per epoch/call and stay
+    /// dynamic.
+    fn assemble<'t>(
+        &'t self,
         inputs: &[StageInput],
         m: usize,
-        activation: Option<&HostTensor>,
-    ) -> Result<Vec<HostTensor>> {
+        activation: Option<&'t HostTensor>,
+    ) -> Result<Vec<ExecInput<'t>>> {
         let mb = &self.mbs[m];
-        let mut inp = self.params.clone();
+        let resident = self.device_resident;
+        // Slot layout inside one micro-batch's static-key space:
+        // 0 = features, 1..=3 = graph tensors, 5 = labels, 6 = mask.
+        let mark = |slot: u64, t: &'t HostTensor| -> ExecInput<'t> {
+            if resident {
+                ExecInput::Static((mb.id << STATIC_SLOT_BITS) | slot, t)
+            } else {
+                ExecInput::Dyn(t)
+            }
+        };
+        let mut inp: Vec<ExecInput<'t>> =
+            self.params.iter().map(ExecInput::Dyn).collect();
         for i in inputs {
             match i {
-                StageInput::Activation => inp.push(
-                    activation
-                        .with_context(|| {
-                            format!("stage {}: no activation for micro-batch {m}", self.stage)
-                        })?
-                        .clone(),
-                ),
-                StageInput::Features => inp.push(mb.x.clone()),
-                StageInput::Graph => inp.extend(mb.graph.iter().cloned()),
-                StageInput::Key => inp.push(self.keys[m].clone()),
+                StageInput::Activation => inp.push(ExecInput::Dyn(
+                    activation.with_context(|| {
+                        format!("stage {}: no activation for micro-batch {m}", self.stage)
+                    })?,
+                )),
+                StageInput::Features => inp.push(mark(0, &mb.x)),
+                StageInput::Graph => {
+                    for (j, g) in mb.graph.iter().enumerate() {
+                        inp.push(mark(1 + j as u64, g));
+                    }
+                }
+                StageInput::Key => inp.push(ExecInput::Dyn(&self.keys[m])),
                 StageInput::LabelsMask => {
-                    inp.push(mb.labels.clone());
-                    inp.push(mb.mask.clone());
+                    inp.push(mark(5, &mb.labels));
+                    inp.push(mark(6, &mb.mask));
                 }
             }
         }
         Ok(inp)
     }
 }
+
+/// Bits reserved for the per-micro-batch static input slot in the
+/// device-resident cache key (slots 0..=6 above).
+const STATIC_SLOT_BITS: u64 = 3;
 
 /// Send over a stage link, surfacing the failure instead of dropping it:
 /// a send only fails when the peer worker exited, so the error is marked

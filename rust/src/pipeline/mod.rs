@@ -21,6 +21,15 @@
 //!   *rematerialising* backwards (GPipe checkpointing: only stage
 //!   inputs are stashed).
 //!
+//! A fourth piece, **[`PrepMode`]** (CLI `--prep`), selects how the
+//! host-side micro-batch prep reaches the engine: `Paper` rebuilds
+//! serially on the critical path every epoch (the faithful §7.2 stall,
+//! into pooled buffers); `Cached` builds once per
+//! (plan, backend, train-mask) key and keeps static inputs resident on
+//! the device; `Overlap` rebuilds epoch *e+1* on a prefetch thread
+//! while the pipeline executes epoch *e*. All three produce
+//! bitwise-identical losses, gradients and parameters.
+//!
 //! One training step:
 //!
 //! 1. **Chunk** — split the node tensor into `chunks` micro-batches
@@ -42,11 +51,18 @@
 mod chunkprep;
 mod driver;
 mod engine;
+mod prep;
 mod schedule;
 mod spec;
 
-pub use chunkprep::{lossy_union_graph, prepare_microbatches, Microbatch};
+pub use chunkprep::{
+    lossy_union_from_induced, lossy_union_graph, microbatches_from_induced,
+    prepare_microbatches, prepare_microbatches_parallel, Microbatch,
+};
 pub use driver::{PipelineResult, PipelineTrainer};
 pub use engine::{EpochOutput, PipelineEngine, StageTiming};
+pub use prep::{
+    spawn_prefetcher, MicrobatchCache, MicrobatchPool, PrefetchMsg, PrepMode,
+};
 pub use schedule::{parse_schedule, FillDrain, OneFOneB, Schedule, StageEvent};
 pub use spec::{PipelineSpec, StageInput, StageSpec};

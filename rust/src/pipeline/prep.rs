@@ -1,0 +1,439 @@
+//! The prep-and-transfer subsystem: how micro-batches reach the pipeline.
+//!
+//! The paper's §7.2 finding is that the per-epoch host-side sub-graph
+//! rebuild dominates pipe-parallel GNN training. Our chunk plan is
+//! static across epochs, so every rebuilt tensor is bit-identical to
+//! the previous epoch's — the stall is *reproducible* but also
+//! *avoidable*. [`PrepMode`] selects how honest to be about it:
+//!
+//! * [`PrepMode::Paper`] (default) — rebuild serially on the critical
+//!   path every epoch, exactly as the paper measured (`rebuild_s`).
+//!   Allocations are pooled ([`MicrobatchPool`]) so the measured cost is
+//!   the *rebuild*, not the allocator.
+//! * [`PrepMode::Cached`] — build once per (dataset, plan, backend,
+//!   train-mask) key ([`MicrobatchCache`], parallel per-chunk build) and
+//!   reuse every epoch; static inputs stay resident on the device.
+//! * [`PrepMode::Overlap`] — a double-buffered prefetch thread
+//!   ([`spawn_prefetcher`]) rebuilds epoch *e+1* while the pipeline
+//!   executes epoch *e*: the rebuild still happens every epoch but
+//!   disappears from the critical path (`prep_overlap_s` records the
+//!   hidden work; `rebuild_s` records only the residual stall).
+//!
+//! All three modes produce bitwise-identical losses, gradients and
+//! final parameters — asserted by `rust/tests/integration_prep.rs`.
+
+use std::collections::HashMap;
+use std::str::FromStr;
+use std::sync::mpsc::{sync_channel, Receiver};
+use std::sync::{Arc, Mutex};
+use std::thread::Scope;
+
+use anyhow::Result;
+
+use crate::batching::ChunkPlan;
+use crate::data::Dataset;
+use crate::graph::{InduceScratch, InducedSubgraph};
+use crate::metrics::Timer;
+use crate::util::hash::Fnv1a;
+
+use super::chunkprep::{
+    fill_microbatch, microbatches_from_induced, prepare_microbatches,
+    prepare_microbatches_parallel, Microbatch,
+};
+
+/// Host-prep strategy for pipeline training (CLI `--prep`, config key
+/// `prep` in `configs/pipeline.json`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PrepMode {
+    /// The paper's faithful per-epoch serial rebuild (§7.2 overhead).
+    #[default]
+    Paper,
+    /// Build once, reuse across epochs; device-resident static inputs.
+    Cached,
+    /// Rebuild per epoch on a prefetch thread, overlapped with compute.
+    Overlap,
+}
+
+impl PrepMode {
+    pub fn name(self) -> &'static str {
+        match self {
+            PrepMode::Paper => "paper",
+            PrepMode::Cached => "cached",
+            PrepMode::Overlap => "overlap",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<PrepMode> {
+        match s {
+            "paper" => Ok(PrepMode::Paper),
+            "cached" => Ok(PrepMode::Cached),
+            "overlap" => Ok(PrepMode::Overlap),
+            other => anyhow::bail!(
+                "unknown prep mode {other:?} (expected \"paper\", \"cached\" or \"overlap\")"
+            ),
+        }
+    }
+
+    /// Cached/Overlap keep static stage inputs (graph tensors, features,
+    /// labels, mask) resident on the device; Paper re-uploads per call,
+    /// as the paper's implementation did.
+    pub fn device_resident(self) -> bool {
+        !matches!(self, PrepMode::Paper)
+    }
+}
+
+impl FromStr for PrepMode {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<PrepMode> {
+        PrepMode::parse(s)
+    }
+}
+
+/// Micro-batch sets keyed on (dataset, plan, backend, train-mask):
+/// everything the prepared tensors depend on. Shareable across trainers
+/// (bench sessions reuse one cache across prep-mode comparisons).
+#[derive(Default)]
+pub struct MicrobatchCache {
+    entries: Mutex<HashMap<u64, Arc<Vec<Microbatch>>>>,
+}
+
+impl MicrobatchCache {
+    pub fn new() -> MicrobatchCache {
+        MicrobatchCache::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    fn key(ds: &Dataset, plan: &ChunkPlan, backend: &str, train_mask: &[f32]) -> u64 {
+        // The profile fully determines the generated dataset (synthetic,
+        // seeded), so hashing every field covers the tensors' content;
+        // plan + backend + mask cover the rest of the build inputs.
+        let p = &ds.profile;
+        let mut h = Fnv1a::new();
+        h.write(p.name.as_bytes());
+        h.write_u64(p.seed);
+        h.write_usize(p.nodes);
+        h.write_usize(p.undirected_edges);
+        h.write_usize(p.features);
+        h.write_usize(p.classes);
+        h.write_usize(p.train_per_class);
+        h.write_usize(p.val_size);
+        h.write_usize(p.test_size);
+        h.write_u64(p.homophily.to_bits());
+        h.write_u64(p.feature_density.to_bits());
+        h.write_usize(p.ell_k);
+        h.write_usize(p.edge_pad_multiple);
+        h.write(backend.as_bytes());
+        h.write_usize(plan.num_chunks());
+        for chunk in &plan.chunks {
+            h.write_usize(chunk.len());
+            for &v in chunk {
+                h.write_u32(v);
+            }
+        }
+        for &m in train_mask {
+            h.write_f32(m);
+        }
+        h.finish()
+    }
+
+    /// Return the cached set for this key, building it (in parallel, or
+    /// from `induced` when the caller already induced the plan) on miss.
+    pub fn get_or_build(
+        &self,
+        ds: &Dataset,
+        plan: &ChunkPlan,
+        backend: &str,
+        train_mask: &[f32],
+        induced: Option<&[InducedSubgraph]>,
+    ) -> Result<Arc<Vec<Microbatch>>> {
+        let key = Self::key(ds, plan, backend, train_mask);
+        if let Some(hit) = self.entries.lock().unwrap().get(&key) {
+            return Ok(hit.clone());
+        }
+        let built = match induced {
+            Some(subs) => microbatches_from_induced(ds, subs, backend, train_mask)?,
+            None => prepare_microbatches_parallel(ds, plan, backend, train_mask)?,
+        };
+        let built = Arc::new(built);
+        self.entries
+            .lock()
+            .unwrap()
+            .insert(key, built.clone());
+        Ok(built)
+    }
+}
+
+/// Buffer pool for Paper-mode per-epoch rebuilds: the rebuild work
+/// (induce + gather + tensor fill, serial — the measured §7.2 cost) runs
+/// every epoch, but into the previous epoch's allocations instead of
+/// fresh `Vec`s.
+#[derive(Default)]
+pub struct MicrobatchPool {
+    mbs: Vec<Microbatch>,
+    scratch: InduceScratch,
+}
+
+impl MicrobatchPool {
+    pub fn new() -> MicrobatchPool {
+        MicrobatchPool::default()
+    }
+
+    pub fn microbatches(&self) -> &[Microbatch] {
+        &self.mbs
+    }
+
+    /// Rebuild the pooled set from the plan. First call (or a layout
+    /// change) builds fresh; steady-state calls refill in place.
+    pub fn rebuild(
+        &mut self,
+        ds: &Dataset,
+        plan: &ChunkPlan,
+        backend: &str,
+        train_mask: &[f32],
+    ) -> Result<()> {
+        let k = plan.num_chunks();
+        let p = &ds.profile;
+        let n_pad = p.chunk_nodes(k);
+        let e_cap = p.chunk_e_cap(k);
+        let graph_tensor_count = if backend == "ell" { 2 } else { 3 };
+        let layout_ok = self.mbs.len() == k
+            && self
+                .mbs
+                .iter()
+                .all(|m| m.graph.len() == graph_tensor_count);
+        if !layout_ok {
+            self.mbs = prepare_microbatches(ds, plan, backend, train_mask)?;
+            return Ok(());
+        }
+        for (mb, chunk) in self.mbs.iter_mut().zip(&plan.chunks) {
+            let sub = self.scratch.induce(&ds.graph, chunk);
+            fill_microbatch(mb, ds, &sub, backend, train_mask, n_pad, e_cap)?;
+        }
+        Ok(())
+    }
+}
+
+/// One prefetched epoch: the micro-batch set plus the seconds the
+/// background thread spent building it (work hidden from the critical
+/// path, reported as `prep_overlap_s`).
+pub type PrefetchMsg = Result<(Vec<Microbatch>, f64)>;
+
+/// Combined content fingerprint of one micro-batch's device tensors.
+fn content_fingerprint(mb: &Microbatch) -> u64 {
+    let mut h = Fnv1a::new();
+    h.write_u64(mb.x.fingerprint());
+    for g in &mb.graph {
+        h.write_u64(g.fingerprint());
+    }
+    h.write_u64(mb.labels.fingerprint());
+    h.write_u64(mb.mask.fingerprint());
+    h.finish()
+}
+
+/// Spawn the Overlap-mode prefetch thread inside `scope`: it rebuilds
+/// one micro-batch set per epoch (parallel per-chunk build) and sends
+/// them through a bounded channel of depth 1 — classic double buffering:
+/// at most one ready set waits while the next is being built and the
+/// pipeline consumes the current one.
+///
+/// Delivery is deterministic: epochs arrive in order, and within each
+/// epoch the micro-batches are in chunk order (bitwise identical to the
+/// serial build — see `rust/tests/integration_prep.rs`).
+///
+/// Rebuilt micro-batches that are bit-identical to the previous epoch's
+/// (the common case — the chunk plan is static) adopt the previous
+/// epoch's content id, so the device-resident input cache serves the
+/// already-uploaded buffers — uploading only what actually changed —
+/// and stays bounded across epochs. The fingerprint comparison runs on
+/// this thread, off the critical path.
+///
+/// The thread exits when all `epochs` sets are delivered, when the
+/// receiver is dropped (training aborted), or after sending a build
+/// error.
+pub fn spawn_prefetcher<'scope, 'env>(
+    scope: &'scope Scope<'scope, 'env>,
+    ds: &'env Dataset,
+    plan: &'env ChunkPlan,
+    backend: &'env str,
+    train_mask: &'env [f32],
+    epochs: usize,
+) -> Receiver<PrefetchMsg> {
+    let (tx, rx) = sync_channel::<PrefetchMsg>(1);
+    scope.spawn(move || {
+        // (content fingerprint, content id) per chunk, previous epoch.
+        let mut prev: Vec<(u64, u64)> = Vec::new();
+        for _ in 0..epochs {
+            let t = Timer::start();
+            let built = prepare_microbatches_parallel(ds, plan, backend, train_mask);
+            let failed = built.is_err();
+            let msg = built.map(|mut mbs| {
+                let mut next = Vec::with_capacity(mbs.len());
+                for (i, mb) in mbs.iter_mut().enumerate() {
+                    let fp = content_fingerprint(mb);
+                    if let Some(&(prev_fp, prev_id)) = prev.get(i) {
+                        if prev_fp == fp {
+                            mb.id = prev_id;
+                        }
+                    }
+                    next.push((fp, mb.id));
+                }
+                prev = next;
+                (mbs, t.secs())
+            });
+            if tx.send(msg).is_err() || failed {
+                return;
+            }
+        }
+    });
+    rx
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::batching::{Chunker, SequentialChunker};
+    use crate::config::DatasetProfile;
+    use crate::data::generate;
+
+    fn dataset() -> Dataset {
+        generate(&DatasetProfile {
+            name: "prep-t".into(),
+            nodes: 120,
+            undirected_edges: 240,
+            features: 8,
+            classes: 3,
+            train_per_class: 5,
+            val_size: 10,
+            test_size: 20,
+            homophily: 0.8,
+            feature_density: 0.2,
+            seed: 11,
+            ell_k: 16,
+            edge_pad_multiple: 32,
+        })
+        .unwrap()
+    }
+
+    #[test]
+    fn parse_and_names_round_trip() {
+        for mode in [PrepMode::Paper, PrepMode::Cached, PrepMode::Overlap] {
+            assert_eq!(PrepMode::parse(mode.name()).unwrap(), mode);
+        }
+        assert!(PrepMode::parse("eager").is_err());
+        assert_eq!(PrepMode::default(), PrepMode::Paper);
+        assert!(!PrepMode::Paper.device_resident());
+        assert!(PrepMode::Cached.device_resident());
+        assert!(PrepMode::Overlap.device_resident());
+    }
+
+    #[test]
+    fn cache_hits_on_same_key_and_misses_on_changes() {
+        let ds = dataset();
+        let plan = SequentialChunker.plan(&ds.graph, 3);
+        let tm = ds.splits.train_mask(ds.profile.nodes);
+        let cache = MicrobatchCache::new();
+        let a = cache.get_or_build(&ds, &plan, "ell", &tm, None).unwrap();
+        let b = cache.get_or_build(&ds, &plan, "ell", &tm, None).unwrap();
+        assert!(Arc::ptr_eq(&a, &b), "same key must hit");
+        assert_eq!(cache.len(), 1);
+
+        // Different backend, plan or mask => different entries.
+        let c = cache.get_or_build(&ds, &plan, "edgewise", &tm, None).unwrap();
+        assert!(!Arc::ptr_eq(&a, &c));
+        let plan2 = SequentialChunker.plan(&ds.graph, 2);
+        let d = cache.get_or_build(&ds, &plan2, "ell", &tm, None).unwrap();
+        assert!(!Arc::ptr_eq(&a, &d));
+        let mut tm2 = tm.clone();
+        tm2[0] = 1.0 - tm2[0];
+        let e = cache.get_or_build(&ds, &plan, "ell", &tm2, None).unwrap();
+        assert!(!Arc::ptr_eq(&a, &e));
+        assert_eq!(cache.len(), 4);
+    }
+
+    #[test]
+    fn cache_build_from_induced_matches_parallel_build() {
+        let ds = dataset();
+        let plan = SequentialChunker.plan(&ds.graph, 4);
+        let tm = ds.splits.train_mask(ds.profile.nodes);
+        let induced = plan.induce_all(&ds.graph);
+        let via_induced = MicrobatchCache::new()
+            .get_or_build(&ds, &plan, "ell", &tm, Some(&induced))
+            .unwrap();
+        let via_plan = MicrobatchCache::new()
+            .get_or_build(&ds, &plan, "ell", &tm, None)
+            .unwrap();
+        for (a, b) in via_induced.iter().zip(via_plan.iter()) {
+            assert_eq!(a.nodes, b.nodes);
+            assert_eq!(a.x, b.x);
+            assert_eq!(a.graph, b.graph);
+            assert_eq!(a.labels, b.labels);
+            assert_eq!(a.mask, b.mask);
+        }
+    }
+
+    #[test]
+    fn pool_rebuild_is_stable_across_epochs() {
+        let ds = dataset();
+        let tm = ds.splits.train_mask(ds.profile.nodes);
+        for backend in ["ell", "edgewise"] {
+            let plan = SequentialChunker.plan(&ds.graph, 3);
+            let reference = prepare_microbatches(&ds, &plan, backend, &tm).unwrap();
+            let mut pool = MicrobatchPool::new();
+            for _epoch in 0..3 {
+                pool.rebuild(&ds, &plan, backend, &tm).unwrap();
+                for (a, b) in reference.iter().zip(pool.microbatches()) {
+                    assert_eq!(a.nodes, b.nodes);
+                    assert_eq!(a.cut_edges, b.cut_edges);
+                    assert_eq!(a.x, b.x);
+                    assert_eq!(a.graph, b.graph);
+                    assert_eq!(a.labels, b.labels);
+                    assert_eq!(a.mask, b.mask);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn prefetcher_delivers_epochs_in_chunk_order() {
+        let ds = dataset();
+        let plan = SequentialChunker.plan(&ds.graph, 4);
+        let tm = ds.splits.train_mask(ds.profile.nodes);
+        let reference = prepare_microbatches(&ds, &plan, "ell", &tm).unwrap();
+        let epochs = 3;
+        std::thread::scope(|scope| {
+            let rx = spawn_prefetcher(scope, &ds, &plan, "ell", &tm, epochs);
+            let mut first_ids: Option<Vec<u64>> = None;
+            for _epoch in 0..epochs {
+                let (mbs, build_s) = rx.recv().unwrap().unwrap();
+                assert!(build_s >= 0.0);
+                assert_eq!(mbs.len(), plan.num_chunks());
+                for (mb, (r, chunk)) in
+                    mbs.iter().zip(reference.iter().zip(&plan.chunks))
+                {
+                    assert_eq!(&mb.nodes, chunk, "delivery must be in chunk order");
+                    assert_eq!(mb.x, r.x);
+                    assert_eq!(mb.graph, r.graph);
+                    assert_eq!(mb.labels, r.labels);
+                    assert_eq!(mb.mask, r.mask);
+                }
+                // Identical rebuilt content adopts the first epoch's
+                // content ids (bounds the device-resident cache).
+                let ids: Vec<u64> = mbs.iter().map(|m| m.id).collect();
+                match &first_ids {
+                    None => first_ids = Some(ids),
+                    Some(first) => assert_eq!(first, &ids, "ids must be stable"),
+                }
+            }
+            // Exactly `epochs` deliveries: the channel closes afterwards.
+            assert!(rx.recv().is_err());
+        });
+    }
+}

@@ -1,6 +1,16 @@
 //! The PJRT engine: compile-once, execute-many, manifest-validated.
+//!
+//! Hot-path accounting: every [`Executable::run_inputs`] call splits its
+//! wall-clock into **upload** (host→device buffer creation), **execute**
+//! (the XLA program itself) and **download** (device→host literal
+//! read-back), recorded in lock-free atomics — the source of the bench
+//! harness' `transfer_s` metric. Inputs the caller declares *static*
+//! ([`ExecInput::Static`]) are uploaded once per content key and kept
+//! resident as `PjRtBuffer`s, so steady-state stage calls re-upload only
+//! what actually changed (params, activations, dropout keys).
 
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
@@ -8,6 +18,56 @@ use anyhow::{Context, Result};
 
 use super::manifest::{ArtifactMeta, Manifest};
 use super::tensor::HostTensor;
+
+/// One positional input of an [`Executable`] call.
+///
+/// `Static(key, t)` asks the executable to keep `t`'s device buffer
+/// resident under `key` and reuse it on later calls with the same key.
+/// The key is a **content identity**: callers must change the key when
+/// the tensor's bytes change (the pipeline derives it from the
+/// micro-batch's content-version id), or the device will keep serving
+/// the stale upload.
+#[derive(Debug, Clone, Copy)]
+pub enum ExecInput<'a> {
+    /// Upload fresh on every call (params, activations, RNG keys).
+    Dyn(&'a HostTensor),
+    /// Upload once per content key, then serve the resident buffer.
+    Static(u64, &'a HostTensor),
+}
+
+impl<'a> ExecInput<'a> {
+    pub fn tensor(&self) -> &'a HostTensor {
+        match *self {
+            ExecInput::Dyn(t) | ExecInput::Static(_, t) => t,
+        }
+    }
+}
+
+/// Cumulative per-executable call statistics (process lifetime).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ExecStats {
+    /// Seconds creating input device buffers (host→device transfers).
+    pub upload_s: f64,
+    /// Seconds inside the compiled XLA program.
+    pub execute_s: f64,
+    /// Seconds reading outputs back (device→host transfers).
+    pub download_s: f64,
+    /// Number of completed calls.
+    pub calls: u64,
+    /// Static inputs served from the resident-buffer cache (no upload).
+    pub static_hits: u64,
+}
+
+impl ExecStats {
+    /// Total host↔device transfer seconds (upload + download).
+    pub fn transfer_s(&self) -> f64 {
+        self.upload_s + self.download_s
+    }
+
+    pub fn total_s(&self) -> f64 {
+        self.upload_s + self.execute_s + self.download_s
+    }
+}
 
 /// A compiled artifact bound to its manifest signature.
 ///
@@ -28,10 +88,18 @@ pub struct Executable {
     /// via `buffer_from_host_buffer` (whose `PjRtBuffer` has a correct
     /// Drop) and call `execute_b`.
     client: xla::PjRtClient,
-    /// Cumulative execute() wall-clock, for the coordinator-overhead
-    /// accounting in EXPERIMENTS.md §Perf.
-    exec_nanos: Mutex<u128>,
-    exec_count: Mutex<u64>,
+    /// Upload/execute/download wall-clock split, lock-free (these are
+    /// bumped on every hot-path stage call by concurrent workers; the
+    /// old pair of `Mutex` counters serialised them needlessly).
+    upload_nanos: AtomicU64,
+    exec_nanos: AtomicU64,
+    download_nanos: AtomicU64,
+    exec_count: AtomicU64,
+    static_hits: AtomicU64,
+    /// Resident device buffers for [`ExecInput::Static`] inputs, by
+    /// content key. Buffers are moved out for the duration of a call and
+    /// reinstated afterwards, so the execute path needs no extra copies.
+    static_buffers: Mutex<HashMap<u64, xla::PjRtBuffer>>,
 }
 
 unsafe impl Send for Executable {}
@@ -39,7 +107,16 @@ unsafe impl Sync for Executable {}
 
 impl Executable {
     /// Execute with positional inputs, validating against the manifest.
+    /// Every input is uploaded fresh; see [`Executable::run_inputs`] for
+    /// the static-input path.
     pub fn run(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        let wrapped: Vec<ExecInput> = inputs.iter().map(ExecInput::Dyn).collect();
+        self.run_inputs(&wrapped)
+    }
+
+    /// Execute with positional inputs, keeping [`ExecInput::Static`]
+    /// inputs resident on the device across calls.
+    pub fn run_inputs(&self, inputs: &[ExecInput]) -> Result<Vec<HostTensor>> {
         anyhow::ensure!(
             inputs.len() == self.meta.inputs.len(),
             "{}: got {} inputs, manifest wants {}",
@@ -48,19 +125,63 @@ impl Executable {
             self.meta.inputs.len()
         );
         for (t, m) in inputs.iter().zip(&self.meta.inputs) {
-            t.check(m)
+            t.tensor()
+                .check(m)
                 .with_context(|| format!("artifact {}", self.meta.name))?;
         }
-        let t0 = Instant::now();
-        let buffers: Vec<xla::PjRtBuffer> = inputs
-            .iter()
-            .map(|t| t.to_device_buffer(&self.client))
-            .collect::<Result<_>>()?;
+
+        // Upload: fresh buffers for Dyn inputs, cache-or-upload for
+        // Static ones. Cached buffers are *moved out* of the map into
+        // the positional buffer list (execute_b wants owned buffers) and
+        // reinstated after the call; on an error path they are simply
+        // re-uploaded by the next call. The lock is held only for the
+        // map operations, never across uploads or the device call, so
+        // concurrent callers of a shared executable don't serialize.
+        let t_up = Instant::now();
+        let mut resident: Vec<Option<xla::PjRtBuffer>> = {
+            let mut cache = self.static_buffers.lock().unwrap();
+            inputs
+                .iter()
+                .map(|inp| match inp {
+                    ExecInput::Static(key, _) => cache.remove(key),
+                    ExecInput::Dyn(_) => None,
+                })
+                .collect()
+        };
+        let mut buffers: Vec<xla::PjRtBuffer> = Vec::with_capacity(inputs.len());
+        for (inp, slot) in inputs.iter().zip(&mut resident) {
+            let buf = match slot.take() {
+                Some(b) => {
+                    self.static_hits.fetch_add(1, Ordering::Relaxed);
+                    b
+                }
+                None => inp.tensor().to_device_buffer(&self.client)?,
+            };
+            buffers.push(buf);
+        }
+        self.upload_nanos
+            .fetch_add(t_up.elapsed().as_nanos() as u64, Ordering::Relaxed);
+
+        let t_ex = Instant::now();
         let bufs = self.exe.execute_b::<xla::PjRtBuffer>(&buffers)?;
+        self.exec_nanos
+            .fetch_add(t_ex.elapsed().as_nanos() as u64, Ordering::Relaxed);
+
+        let t_down = Instant::now();
         let result = bufs[0][0].to_literal_sync()?;
-        let dt = t0.elapsed().as_nanos();
-        *self.exec_nanos.lock().unwrap() += dt;
-        *self.exec_count.lock().unwrap() += 1;
+        self.download_nanos
+            .fetch_add(t_down.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        self.exec_count.fetch_add(1, Ordering::Relaxed);
+
+        // Reinstate the resident buffers for the next call.
+        {
+            let mut cache = self.static_buffers.lock().unwrap();
+            for (inp, buf) in inputs.iter().zip(buffers) {
+                if let ExecInput::Static(key, _) = inp {
+                    cache.insert(*key, buf);
+                }
+            }
+        }
 
         // aot.py lowers with return_tuple=True: always a tuple literal.
         let parts = result.to_tuple()?;
@@ -78,12 +199,26 @@ impl Executable {
             .collect()
     }
 
-    /// (total seconds spent in execute, number of calls).
-    pub fn exec_stats(&self) -> (f64, u64) {
-        (
-            *self.exec_nanos.lock().unwrap() as f64 / 1e9,
-            *self.exec_count.lock().unwrap(),
-        )
+    /// Cumulative call statistics with the upload/execute/download split.
+    pub fn exec_stats(&self) -> ExecStats {
+        ExecStats {
+            upload_s: self.upload_nanos.load(Ordering::Relaxed) as f64 / 1e9,
+            execute_s: self.exec_nanos.load(Ordering::Relaxed) as f64 / 1e9,
+            download_s: self.download_nanos.load(Ordering::Relaxed) as f64 / 1e9,
+            calls: self.exec_count.load(Ordering::Relaxed),
+            static_hits: self.static_hits.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Number of device-resident static input buffers currently held.
+    pub fn static_buffer_count(&self) -> usize {
+        self.static_buffers.lock().unwrap().len()
+    }
+
+    /// Drop all device-resident static input buffers (e.g. at the end of
+    /// a training run, so long bench sessions don't pin device memory).
+    pub fn clear_static_buffers(&self) {
+        self.static_buffers.lock().unwrap().clear();
     }
 }
 
@@ -132,8 +267,12 @@ impl Engine {
             meta,
             exe,
             client: self.client.clone(),
-            exec_nanos: Mutex::new(0),
-            exec_count: Mutex::new(0),
+            upload_nanos: AtomicU64::new(0),
+            exec_nanos: AtomicU64::new(0),
+            download_nanos: AtomicU64::new(0),
+            exec_count: AtomicU64::new(0),
+            static_hits: AtomicU64::new(0),
+            static_buffers: Mutex::new(HashMap::new()),
         });
         self.cache.lock().unwrap().insert(name.to_string(), exec.clone());
         Ok(exec)

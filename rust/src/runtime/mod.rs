@@ -12,6 +12,6 @@ mod engine;
 mod manifest;
 mod tensor;
 
-pub use engine::{Engine, Executable};
+pub use engine::{Engine, ExecInput, ExecStats, Executable};
 pub use manifest::{ArtifactMeta, Dtype, Manifest, TensorMeta};
 pub use tensor::HostTensor;

@@ -91,6 +91,47 @@ impl HostTensor {
         }
     }
 
+    pub fn as_s32_mut(&mut self) -> Result<&mut Vec<i32>> {
+        match self {
+            HostTensor::S32 { data, .. } => Ok(data),
+            other => anyhow::bail!("expected s32 tensor, got {:?}", other.dtype().name()),
+        }
+    }
+
+    /// FNV-1a content fingerprint over dtype, shape and raw element bits
+    /// — the content identity used by the micro-batch prep cache and the
+    /// prep-mode parity tests (bitwise: distinguishes -0.0 from 0.0).
+    pub fn fingerprint(&self) -> u64 {
+        let mut h = crate::util::hash::Fnv1a::new();
+        h.write_u32(match self.dtype() {
+            Dtype::F32 => 0,
+            Dtype::S32 => 1,
+            Dtype::U32 => 2,
+        });
+        h.write_usize(self.shape().len());
+        for &d in self.shape() {
+            h.write_usize(d);
+        }
+        match self {
+            HostTensor::F32 { data, .. } => {
+                for &v in data {
+                    h.write_u32(v.to_bits());
+                }
+            }
+            HostTensor::S32 { data, .. } => {
+                for &v in data {
+                    h.write_u32(v as u32);
+                }
+            }
+            HostTensor::U32 { data, .. } => {
+                for &v in data {
+                    h.write_u32(v);
+                }
+            }
+        }
+        h.finish()
+    }
+
     pub fn scalar_value(&self) -> Result<f32> {
         let d = self.as_f32()?;
         anyhow::ensure!(d.len() == 1, "not a scalar: shape {:?}", self.shape());
@@ -210,5 +251,18 @@ mod tests {
         let k = HostTensor::key(7, 9);
         assert_eq!(k.shape(), &[2]);
         assert_eq!(k.dtype(), Dtype::U32);
+    }
+
+    #[test]
+    fn fingerprint_tracks_content_shape_and_dtype() {
+        let a = HostTensor::f32(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let same = HostTensor::f32(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(a.fingerprint(), same.fingerprint());
+        let other_data = HostTensor::f32(vec![2, 2], vec![1.0, 2.0, 3.0, 5.0]);
+        assert_ne!(a.fingerprint(), other_data.fingerprint());
+        let other_shape = HostTensor::f32(vec![4], vec![1.0, 2.0, 3.0, 4.0]);
+        assert_ne!(a.fingerprint(), other_shape.fingerprint());
+        let other_dtype = HostTensor::s32(vec![2, 2], vec![1, 2, 3, 4]);
+        assert_ne!(a.fingerprint(), other_dtype.fingerprint());
     }
 }

@@ -7,7 +7,7 @@
 
 use anyhow::Result;
 
-use crate::pipeline::{PipelineSpec, Schedule};
+use crate::pipeline::{PipelineSpec, PrepMode, Schedule};
 use crate::runtime::Manifest;
 
 use super::device::{Calibration, DeviceModel, DEVICES};
@@ -22,10 +22,14 @@ pub struct SimEpoch {
     pub epoch_s: f64,
     /// Pipeline-only details (None for single-device projections).
     pub pipeline: Option<PipelineSimReport>,
-    /// Seconds of the epoch spent in host re-build round trips.
+    /// Seconds of the epoch spent in host re-build round trips ON the
+    /// critical path (zero under `PrepMode::Cached`).
     pub rebuild_s: f64,
     /// Seconds of the epoch spent in inter-device transfers.
     pub xfer_s: f64,
+    /// Host re-build seconds hidden off the critical path by the
+    /// Overlap prefetcher (mirrors the real engine's `prep_overlap_s`).
+    pub prep_hidden_s: f64,
 }
 
 pub struct Scenarios<'m> {
@@ -87,6 +91,7 @@ impl<'m> Scenarios<'m> {
             pipeline: None,
             rebuild_s: 0.0,
             xfer_s: 0.0,
+            prep_hidden_s: 0.0,
         })
     }
 
@@ -117,6 +122,31 @@ impl<'m> Scenarios<'m> {
         )
     }
 
+    /// [`Scenarios::dgx_pipeline_epoch`] under a specific [`PrepMode`]
+    /// (the what-if model must price what the real engine executes).
+    #[allow(clippy::too_many_arguments)]
+    pub fn dgx_pipeline_epoch_prep(
+        &self,
+        dataset: &str,
+        backend: &str,
+        chunks: usize,
+        rebuild: bool,
+        host_rebuild_s: f64,
+        schedule: &dyn Schedule,
+        prep: PrepMode,
+    ) -> Result<SimEpoch> {
+        self.pipeline_epoch_prep(
+            &PipelineSpec::gat4(),
+            dataset,
+            backend,
+            chunks,
+            rebuild,
+            host_rebuild_s,
+            schedule,
+            prep,
+        )
+    }
+
     /// Project one pipeline epoch for ANY staged model: the same
     /// [`PipelineSpec`] the real engine executes prices stage compute
     /// from the manifest's cost analysis, boundary transfers from the
@@ -133,6 +163,42 @@ impl<'m> Scenarios<'m> {
         rebuild: bool,
         host_rebuild_s: f64,
         schedule: &dyn Schedule,
+    ) -> Result<SimEpoch> {
+        self.pipeline_epoch_prep(
+            spec,
+            dataset,
+            backend,
+            chunks,
+            rebuild,
+            host_rebuild_s,
+            schedule,
+            PrepMode::Paper,
+        )
+    }
+
+    /// [`Scenarios::pipeline_epoch`] under a specific [`PrepMode`],
+    /// pricing the steady-state epoch the real engine executes:
+    ///
+    /// * `Paper` — full round trip per graph-consuming stage per
+    ///   micro-batch: node ids down over PCIe, host re-build, graph
+    ///   tensors up (the §7.2 stall);
+    /// * `Cached` — no rebuild and no re-upload: the graph tensors are
+    ///   device-resident after the first epoch;
+    /// * `Overlap` — the host re-build (and the node-id downlink) are
+    ///   hidden by the prefetch thread; only the per-call graph-tensor
+    ///   upload stays on the critical path, and the hidden host seconds
+    ///   are reported as `prep_hidden_s`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn pipeline_epoch_prep(
+        &self,
+        spec: &PipelineSpec,
+        dataset: &str,
+        backend: &str,
+        chunks: usize,
+        rebuild: bool,
+        host_rebuild_s: f64,
+        schedule: &dyn Schedule,
+        prep: PrepMode,
     ) -> Result<SimEpoch> {
         spec.validate()?;
         let dev = &DEVICES.v100;
@@ -164,10 +230,12 @@ impl<'m> Scenarios<'m> {
         let xfer_bwd = xfer_fwd.clone();
 
         // Host re-build round trip, charged before every graph-consuming
-        // stage: node-ids down over PCIe, host re-build, graph tensors up.
+        // stage: node-ids down over PCIe, host re-build, graph tensors up
+        // — except where the prep mode takes it off the critical path.
         let mut rebuild_s = vec![vec![0.0; chunks]; n_stages];
         let mut rebuild_total = 0.0;
-        if rebuild {
+        let mut prep_hidden = 0.0;
+        if rebuild && prep != PrepMode::Cached {
             let first_fwd = name(&spec.stages[0].fwd_kind);
             let n_c_bytes = {
                 // node-id tensor: one i32 per chunk row
@@ -182,9 +250,18 @@ impl<'m> Scenarios<'m> {
                 4.0 * x.shape[0] as f64
             };
             let up_bytes = self.graph_bytes(&first_fwd)?;
-            let round_trip = pcie.transfer_time(n_c_bytes)
-                + host_rebuild_s
-                + pcie.transfer_time(up_bytes);
+            let round_trip = match prep {
+                PrepMode::Paper => {
+                    pcie.transfer_time(n_c_bytes)
+                        + host_rebuild_s
+                        + pcie.transfer_time(up_bytes)
+                }
+                // Overlap: downlink + host rebuild run on the prefetch
+                // thread during the previous micro-batch/epoch; only the
+                // upload serialises before the stage call.
+                PrepMode::Overlap => pcie.transfer_time(up_bytes),
+                PrepMode::Cached => unreachable!(),
+            };
             for (stage, st) in spec.stages.iter().enumerate() {
                 if !st.needs_graph() {
                     continue;
@@ -192,6 +269,10 @@ impl<'m> Scenarios<'m> {
                 for m in 0..chunks {
                     rebuild_s[stage][m] = round_trip;
                     rebuild_total += round_trip;
+                    if prep == PrepMode::Overlap {
+                        prep_hidden +=
+                            pcie.transfer_time(n_c_bytes) + host_rebuild_s;
+                    }
                 }
             }
         }
@@ -211,6 +292,7 @@ impl<'m> Scenarios<'m> {
             pipeline: Some(report),
             rebuild_s: rebuild_total,
             xfer_s: xfer_total,
+            prep_hidden_s: prep_hidden,
         })
     }
 }
@@ -287,6 +369,34 @@ mod tests {
             .unwrap();
         let rep = c2.pipeline.unwrap();
         assert!(rep.bubble_fraction > 0.0 && rep.bubble_fraction < 1.0);
+    }
+
+    #[test]
+    fn prep_modes_price_the_overlap() {
+        let Some(m) = manifest() else { return };
+        let s = scenarios(&m);
+        let run = |prep| {
+            s.dgx_pipeline_epoch_prep("pubmed", "ell", 4, true, 0.02, &FillDrain, prep)
+                .unwrap()
+        };
+        let paper = run(PrepMode::Paper);
+        let cached = run(PrepMode::Cached);
+        let overlap = run(PrepMode::Overlap);
+        // Cached removes the stall entirely; Overlap keeps only the
+        // upload on the critical path. Paper pays the full round trip.
+        assert!(cached.epoch_s <= overlap.epoch_s + 1e-12);
+        assert!(overlap.epoch_s < paper.epoch_s);
+        assert_eq!(cached.rebuild_s, 0.0);
+        assert!(overlap.rebuild_s > 0.0 && overlap.rebuild_s < paper.rebuild_s);
+        // The hidden host work is reported, and only for Overlap.
+        assert!(overlap.prep_hidden_s > 0.0);
+        assert_eq!(paper.prep_hidden_s, 0.0);
+        assert_eq!(cached.prep_hidden_s, 0.0);
+        // Legacy entry point still prices Paper mode.
+        let legacy = s
+            .dgx_pipeline_epoch("pubmed", "ell", 4, true, 0.02, &FillDrain)
+            .unwrap();
+        assert_eq!(legacy.epoch_s, paper.epoch_s);
     }
 
     #[test]

@@ -79,6 +79,22 @@ impl Args {
     pub fn opt_str<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
         self.opt(name).unwrap_or(default)
     }
+
+    /// Parse `--name` through `FromStr` (enum-valued options such as
+    /// `--prep`); the parser's own error is surfaced with the flag name.
+    pub fn opt_parse<T>(&self, name: &str, default: T) -> anyhow::Result<T>
+    where
+        T: std::str::FromStr,
+        T::Err: Into<anyhow::Error>,
+    {
+        match self.options.get(name) {
+            None => Ok(default),
+            Some(v) => T::from_str(v).map_err(|e| {
+                let err: anyhow::Error = e.into();
+                err.context(format!("parsing --{name} {v:?}"))
+            }),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -117,5 +133,14 @@ mod tests {
     fn trailing_flag() {
         let a = args("--fast");
         assert!(a.flag("fast"));
+    }
+
+    #[test]
+    fn opt_parse_via_fromstr() {
+        let a = args("--epochs 42 --lr nope");
+        assert_eq!(a.opt_parse::<usize>("epochs", 7).unwrap(), 42);
+        assert_eq!(a.opt_parse::<usize>("missing", 7).unwrap(), 7);
+        let err = format!("{:#}", a.opt_parse::<f64>("lr", 0.1).unwrap_err());
+        assert!(err.contains("--lr"), "{err}");
     }
 }

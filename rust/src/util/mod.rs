@@ -1,5 +1,7 @@
-//! Dependency-free utilities (offline environment): JSON, RNG, CLI.
+//! Dependency-free utilities (offline environment): JSON, RNG, CLI,
+//! content hashing.
 
 pub mod cli;
+pub mod hash;
 pub mod json;
 pub mod rng;

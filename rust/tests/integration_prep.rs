@@ -1,0 +1,231 @@
+//! Prep-mode invariants: `--prep paper|cached|overlap` may move time
+//! between accounting buckets (`rebuild_s` / `prep_overlap_s` /
+//! `transfer_s`) but must never change the training computation.
+//!
+//! Host-side tests (always run, no artifacts needed) assert the three
+//! build paths produce bitwise-identical micro-batch tensors across
+//! chunks=1..4 and both backends, and that the Overlap prefetcher is
+//! deterministic. End-to-end tests (skipped gracefully when `make
+//! artifacts` has not run) train the real pipeline under every mode and
+//! assert bitwise-identical loss curves, final parameters (hence
+//! gradients — Adam is deterministic) and evaluations.
+
+use std::sync::Arc;
+
+use gnn_pipe::batching::{Chunker, SequentialChunker};
+use gnn_pipe::config::{Config, DatasetProfile};
+use gnn_pipe::data::{generate, Dataset};
+use gnn_pipe::pipeline::{
+    lossy_union_from_induced, lossy_union_graph, microbatches_from_induced,
+    prepare_microbatches, prepare_microbatches_parallel, spawn_prefetcher,
+    Microbatch, MicrobatchCache, MicrobatchPool, PipelineTrainer, PrepMode,
+};
+use gnn_pipe::runtime::Engine;
+
+fn small_profile() -> DatasetProfile {
+    DatasetProfile {
+        name: "prep-parity".into(),
+        nodes: 160,
+        undirected_edges: 320,
+        features: 12,
+        classes: 3,
+        train_per_class: 6,
+        val_size: 15,
+        test_size: 30,
+        homophily: 0.8,
+        feature_density: 0.2,
+        seed: 21,
+        ell_k: 16,
+        edge_pad_multiple: 32,
+    }
+}
+
+fn assert_mbs_bitwise_eq(a: &[Microbatch], b: &[Microbatch], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: set size");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.nodes, y.nodes, "{what}: mb {i} nodes");
+        assert_eq!(x.cut_edges, y.cut_edges, "{what}: mb {i} cut_edges");
+        assert_eq!(x.x, y.x, "{what}: mb {i} features");
+        assert_eq!(x.graph, y.graph, "{what}: mb {i} graph tensors");
+        assert_eq!(x.labels, y.labels, "{what}: mb {i} labels");
+        assert_eq!(x.mask, y.mask, "{what}: mb {i} mask");
+    }
+}
+
+#[test]
+fn all_prep_paths_build_bitwise_identical_microbatches() {
+    let ds: Dataset = generate(&small_profile()).unwrap();
+    let tm = ds.splits.train_mask(ds.profile.nodes);
+    for backend in ["ell", "edgewise"] {
+        for chunks in 1..=4usize {
+            let plan = SequentialChunker.plan(&ds.graph, chunks);
+            let what = format!("{backend}/c{chunks}");
+            let reference = prepare_microbatches(&ds, &plan, backend, &tm).unwrap();
+
+            let parallel =
+                prepare_microbatches_parallel(&ds, &plan, backend, &tm).unwrap();
+            assert_mbs_bitwise_eq(&reference, &parallel, &format!("{what} parallel"));
+
+            let induced = plan.induce_all(&ds.graph);
+            let from_induced =
+                microbatches_from_induced(&ds, &induced, backend, &tm).unwrap();
+            assert_mbs_bitwise_eq(
+                &reference,
+                &from_induced,
+                &format!("{what} from-induced"),
+            );
+
+            let cache = MicrobatchCache::new();
+            let cached = cache
+                .get_or_build(&ds, &plan, backend, &tm, Some(&induced))
+                .unwrap();
+            assert_mbs_bitwise_eq(&reference, &cached, &format!("{what} cached"));
+
+            let mut pool = MicrobatchPool::new();
+            for epoch in 0..3 {
+                pool.rebuild(&ds, &plan, backend, &tm).unwrap();
+                assert_mbs_bitwise_eq(
+                    &reference,
+                    pool.microbatches(),
+                    &format!("{what} pool epoch {epoch}"),
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prefetcher_is_deterministic_and_in_chunk_order() {
+    let ds: Dataset = generate(&small_profile()).unwrap();
+    let tm = ds.splits.train_mask(ds.profile.nodes);
+    let plan = SequentialChunker.plan(&ds.graph, 4);
+    let reference = prepare_microbatches(&ds, &plan, "ell", &tm).unwrap();
+    let epochs = 4;
+    std::thread::scope(|scope| {
+        let rx = spawn_prefetcher(scope, &ds, &plan, "ell", &tm, epochs);
+        let mut first_ids: Option<Vec<u64>> = None;
+        for epoch in 0..epochs {
+            let (mbs, build_s) = rx.recv().unwrap().unwrap();
+            assert!(build_s >= 0.0);
+            // Chunk order within the epoch, every epoch.
+            for (mb, chunk) in mbs.iter().zip(&plan.chunks) {
+                assert_eq!(&mb.nodes, chunk, "epoch {epoch}: chunk order");
+            }
+            assert_mbs_bitwise_eq(&reference, &mbs, &format!("prefetch epoch {epoch}"));
+            // Bit-identical rebuilds adopt the previous epoch's content
+            // ids, so the device-resident cache re-serves its buffers
+            // instead of growing every epoch.
+            let ids: Vec<u64> = mbs.iter().map(|m| m.id).collect();
+            match &first_ids {
+                None => first_ids = Some(ids),
+                Some(first) => {
+                    assert_eq!(first, &ids, "epoch {epoch}: content ids must be stable")
+                }
+            }
+        }
+        assert!(rx.recv().is_err(), "prefetcher must stop after {epochs} epochs");
+    });
+}
+
+#[test]
+fn union_from_induced_matches_direct_union() {
+    let ds: Dataset = generate(&small_profile()).unwrap();
+    for chunks in 1..=4usize {
+        let plan = SequentialChunker.plan(&ds.graph, chunks);
+        let direct = lossy_union_graph(&ds.graph, &plan);
+        let threaded =
+            lossy_union_from_induced(ds.profile.nodes, &plan.induce_all(&ds.graph));
+        assert_eq!(direct, threaded, "chunks={chunks}");
+    }
+}
+
+// --- end-to-end parity through compiled artifacts ----------------------
+
+/// Engine over real artifacts, or None when `make artifacts` hasn't run
+/// (host-side tests above still cover the prep subsystem).
+fn engine() -> Option<(Config, Engine)> {
+    let cfg = Config::load().ok()?;
+    if !cfg.artifacts_dir().join("manifest.json").exists() {
+        eprintln!("skipping: artifacts missing (run `make artifacts`)");
+        return None;
+    }
+    let eng = Engine::from_artifacts_dir(&cfg.artifacts_dir()).ok()?;
+    Some((cfg, eng))
+}
+
+#[test]
+fn prep_modes_train_bitwise_identically() {
+    let Some((cfg, eng)) = engine() else { return };
+    let ds = generate(cfg.dataset("pubmed").unwrap()).unwrap();
+    let epochs = 3;
+    for chunks in [2usize, 4] {
+        let run = |prep: PrepMode| {
+            let mut trainer = PipelineTrainer::new(&eng, &ds, "ell", chunks);
+            trainer.prep = prep;
+            trainer.seed = 5;
+            trainer.train(&cfg.model, epochs).unwrap()
+        };
+        let paper = run(PrepMode::Paper);
+        let cached = run(PrepMode::Cached);
+        let overlap = run(PrepMode::Overlap);
+
+        for (name, other) in [("cached", &cached), ("overlap", &overlap)] {
+            // Bitwise: same per-epoch losses, same final parameters
+            // (hence same gradients every epoch), same evaluations.
+            assert_eq!(
+                paper.train_loss.values, other.train_loss.values,
+                "c{chunks} {name}: loss curve"
+            );
+            assert_eq!(paper.params, other.params, "c{chunks} {name}: final params");
+            assert_eq!(
+                paper.pipeline_eval.val_acc, other.pipeline_eval.val_acc,
+                "c{chunks} {name}: pipeline eval"
+            );
+            assert_eq!(
+                paper.full_eval.test_acc, other.full_eval.test_acc,
+                "c{chunks} {name}: full eval"
+            );
+        }
+
+        // Accounting moves the right way: Paper pays the stall on the
+        // critical path, Cached doesn't rebuild, Overlap hides it.
+        assert!(paper.timing.rebuild_s > 0.0, "c{chunks}: paper pays rebuild");
+        assert_eq!(paper.timing.prep_overlap_s, 0.0);
+        assert_eq!(cached.timing.rebuild_s, 0.0, "c{chunks}: cached must not rebuild");
+        assert!(
+            overlap.timing.prep_overlap_s > 0.0,
+            "c{chunks}: overlap must report hidden prep"
+        );
+    }
+}
+
+#[test]
+fn prep_modes_parity_on_edgewise_backend() {
+    let Some((cfg, eng)) = engine() else { return };
+    let ds = generate(cfg.dataset("pubmed").unwrap()).unwrap();
+    let run = |prep: PrepMode| {
+        let mut trainer = PipelineTrainer::new(&eng, &ds, "edgewise", 2);
+        trainer.prep = prep;
+        trainer.seed = 9;
+        trainer.train(&cfg.model, 2).unwrap()
+    };
+    let paper = run(PrepMode::Paper);
+    let cached = run(PrepMode::Cached);
+    assert_eq!(paper.train_loss.values, cached.train_loss.values);
+    assert_eq!(paper.params, cached.params);
+}
+
+#[test]
+fn cached_runs_share_prepared_sets_across_trainers() {
+    let Some((cfg, eng)) = engine() else { return };
+    let ds = generate(cfg.dataset("pubmed").unwrap()).unwrap();
+    let cache = Arc::new(MicrobatchCache::new());
+    for _ in 0..2 {
+        let mut trainer = PipelineTrainer::new(&eng, &ds, "ell", 2);
+        trainer.prep = PrepMode::Cached;
+        trainer.prep_cache = cache.clone();
+        trainer.train(&cfg.model, 2).unwrap();
+    }
+    // One plan/backend/mask key: the second run reused the first's set.
+    assert_eq!(cache.len(), 1);
+}

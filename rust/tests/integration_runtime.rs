@@ -92,9 +92,12 @@ fn eval_fwd_executes_and_returns_log_probs() {
         assert!(lse.abs() < 1e-3, "row lse {lse}");
         assert!(row.iter().all(|v| v.is_finite()));
     }
-    let (secs, count) = exe.exec_stats();
-    assert_eq!(count, 1);
-    assert!(secs > 0.0);
+    let stats = exe.exec_stats();
+    assert_eq!(stats.calls, 1);
+    assert!(stats.execute_s > 0.0);
+    // The upload/execute/download split must cover the whole call.
+    assert!(stats.total_s() >= stats.execute_s);
+    assert!(stats.transfer_s() >= 0.0);
 }
 
 #[test]
