@@ -1,0 +1,87 @@
+//! Deterministic all-reduce micro-benchmarks: the host-side cost of the
+//! cross-replica gradient tree (`optim::allreduce::tree_allreduce`) on
+//! pubmed-GAT-shaped gradient vectors, for R ∈ {2, 4, 8}, plus the
+//! clone-only baseline the reduce samples include (parts are rebuilt per
+//! iteration because the reduction consumes them).
+//!
+//! Mean ± stddev per iteration, dumped to `BENCH_allreduce.json` at the
+//! repo root so the perf trajectory covers the hybrid axis too.
+//!
+//! Run: `cargo bench --bench allreduce` (CI's `bench-trajectory` job
+//! runs `cargo bench --bench allreduce -- --quick` per PR).
+
+mod bench_util;
+
+use bench_util::{bench, quick_mode, scaled, write_snapshot};
+
+use gnn_pipe::config::Config;
+use gnn_pipe::optim::allreduce::tree_allreduce;
+use gnn_pipe::runtime::HostTensor;
+
+/// The pubmed GAT's flat gradient layout (shapes from the manifest's
+/// param order: two GAT layers × [W, attn_src, attn_dst, bias]; layer
+/// 1 is 500 features → 8 heads × 8 hidden, layer 2 is 64 → 8 × 3
+/// classes — 33800 f32 elements, ~135 KB, the payload `hybrid_epoch`
+/// prices on the inter-node link).
+fn gat_shapes() -> Vec<Vec<usize>> {
+    vec![
+        vec![500, 64],
+        vec![1, 64],
+        vec![1, 64],
+        vec![64],
+        vec![64, 24],
+        vec![1, 24],
+        vec![1, 24],
+        vec![24],
+    ]
+}
+
+fn grad_parts(replicas: usize) -> Vec<Vec<HostTensor>> {
+    (0..replicas)
+        .map(|i| {
+            gat_shapes()
+                .into_iter()
+                .map(|shape| {
+                    let n: usize = shape.iter().product();
+                    let vals: Vec<f32> = (0..n)
+                        .map(|j| ((i * 7919 + j * 104_729) % 1999) as f32 * 1e-4 - 0.1)
+                        .collect();
+                    HostTensor::f32(shape, vals)
+                })
+                .collect()
+        })
+        .collect()
+}
+
+fn main() {
+    let quick = quick_mode();
+    let iters = |n: usize| scaled(quick, n);
+    let elements: usize = gat_shapes()
+        .iter()
+        .map(|s| s.iter().product::<usize>())
+        .sum();
+    println!(
+        "== allreduce microbench (pubmed-GAT gradient layout: {elements} f32 elements{}) ==",
+        if quick { ", quick" } else { "" }
+    );
+
+    let mut samples = Vec::new();
+    for r in [2usize, 4, 8] {
+        let template = grad_parts(r);
+        samples.push(bench(&format!("clone parts only (R={r})"), iters(200), || {
+            let _ = template.clone();
+        }));
+        samples.push(bench(&format!("clone + tree_allreduce (R={r})"), iters(200), || {
+            let _ = tree_allreduce(template.clone()).unwrap();
+        }));
+    }
+
+    // Snapshot for the perf trajectory: BENCH_allreduce.json at the root.
+    let cfg = Config::load().expect("configs");
+    let extras = [
+        ("layout", "\"pubmed-gat\"".to_string()),
+        ("quick", quick.to_string()),
+        ("elements", elements.to_string()),
+    ];
+    write_snapshot(&cfg.root.join("BENCH_allreduce.json"), "allreduce", &extras, &samples);
+}

@@ -6,10 +6,13 @@
 //! root so future PRs have a perf trajectory to compare against.
 //!
 //! Run: `cargo bench --bench prep` (compile-checked in CI with
-//! `cargo bench --no-run`).
+//! `cargo bench --no-run`). `cargo bench --bench prep -- --quick` cuts
+//! iteration counts ~10x — the fast path CI's `bench-trajectory` job
+//! runs per PR to keep the perf trajectory accumulating.
 
-use std::fmt::Write as _;
-use std::time::Instant;
+mod bench_util;
+
+use bench_util::{bench, quick_mode, scaled, write_snapshot};
 
 use gnn_pipe::batching::{Chunker, SequentialChunker};
 use gnn_pipe::config::Config;
@@ -20,52 +23,9 @@ use gnn_pipe::pipeline::{
     MicrobatchPool,
 };
 
-struct Sample {
-    name: String,
-    iters: usize,
-    mean_s: f64,
-    std_s: f64,
-    min_s: f64,
-}
-
-fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) -> Sample {
-    f(); // warm-up
-    let mut times = Vec::with_capacity(iters);
-    for _ in 0..iters {
-        let t0 = Instant::now();
-        f();
-        times.push(t0.elapsed().as_secs_f64());
-    }
-    let mean = times.iter().sum::<f64>() / iters as f64;
-    let var = times.iter().map(|t| (t - mean) * (t - mean)).sum::<f64>()
-        / iters as f64;
-    let min = times.iter().cloned().fold(f64::INFINITY, f64::min);
-    let s = Sample {
-        name: name.to_string(),
-        iters,
-        mean_s: mean,
-        std_s: var.sqrt(),
-        min_s: min,
-    };
-    let unit = |v: f64| {
-        if v >= 1.0 {
-            format!("{v:.3} s")
-        } else if v >= 1e-3 {
-            format!("{:.3} ms", v * 1e3)
-        } else {
-            format!("{:.3} us", v * 1e6)
-        }
-    };
-    println!(
-        "{name:<44} {:>12} ± {:>10}  (min {:>10}, {iters} iters)",
-        unit(s.mean_s),
-        unit(s.std_s),
-        unit(s.min_s),
-    );
-    s
-}
-
 fn main() {
+    let quick = quick_mode();
+    let iters = |n: usize| scaled(quick, n);
     let cfg = Config::load().expect("configs");
     let profile = cfg.dataset("pubmed").unwrap().clone();
     let ds = generate(&profile).unwrap();
@@ -76,32 +36,33 @@ fn main() {
     let sub = induce_subgraph(g, &plan.chunks[0]);
     let e_cap = profile.chunk_e_cap(chunks);
     println!(
-        "== prep microbench (pubmed-profile graph: {} nodes, {} edges, {chunks} chunks) ==",
+        "== prep microbench (pubmed-profile graph: {} nodes, {} edges, {chunks} chunks{}) ==",
         g.num_nodes(),
-        g.num_edges()
+        g.num_edges(),
+        if quick { ", quick" } else { "" }
     );
 
     let mut samples = Vec::new();
-    samples.push(bench("induce_subgraph (1 chunk of 4)", 100, || {
+    samples.push(bench("induce_subgraph (1 chunk of 4)", iters(100), || {
         let _ = induce_subgraph(g, &plan.chunks[0]);
     }));
-    samples.push(bench("EllGraph::from_graph (chunk sub-graph)", 100, || {
+    samples.push(bench("EllGraph::from_graph (chunk sub-graph)", iters(100), || {
         let _ = EllGraph::from_graph(&sub.graph, profile.ell_k).unwrap();
     }));
-    samples.push(bench("CooGraph::from_graph (chunk sub-graph)", 100, || {
+    samples.push(bench("CooGraph::from_graph (chunk sub-graph)", iters(100), || {
         let _ = CooGraph::from_graph(&sub.graph, e_cap).unwrap();
     }));
-    samples.push(bench("prepare_microbatches serial (paper)", 30, || {
+    samples.push(bench("prepare_microbatches serial (paper)", iters(30), || {
         let _ = prepare_microbatches(&ds, &plan, "ell", &train_mask).unwrap();
     }));
-    samples.push(bench("prepare_microbatches_parallel", 30, || {
+    samples.push(bench("prepare_microbatches_parallel", iters(30), || {
         let _ =
             prepare_microbatches_parallel(&ds, &plan, "ell", &train_mask).unwrap();
     }));
 
     let mut pool = MicrobatchPool::new();
     pool.rebuild(&ds, &plan, "ell", &train_mask).unwrap();
-    samples.push(bench("MicrobatchPool::rebuild (steady state)", 30, || {
+    samples.push(bench("MicrobatchPool::rebuild (steady state)", iters(30), || {
         pool.rebuild(&ds, &plan, "ell", &train_mask).unwrap();
     }));
 
@@ -109,26 +70,17 @@ fn main() {
     cache
         .get_or_build(&ds, &plan, "ell", &train_mask, None)
         .unwrap();
-    samples.push(bench("MicrobatchCache hit", 1000, || {
+    samples.push(bench("MicrobatchCache hit", iters(1000), || {
         let _ = cache
             .get_or_build(&ds, &plan, "ell", &train_mask, None)
             .unwrap();
     }));
 
     // Snapshot for the perf trajectory: BENCH_prep.json at the repo root.
-    let mut json = String::from("{\n  \"bench\": \"prep\",\n  \"dataset\": \"pubmed\",\n");
-    let _ = writeln!(json, "  \"chunks\": {chunks},");
-    json.push_str("  \"samples\": [\n");
-    for (i, s) in samples.iter().enumerate() {
-        let _ = write!(
-            json,
-            "    {{\"name\": \"{}\", \"iters\": {}, \"mean_s\": {:.9}, \"std_s\": {:.9}, \"min_s\": {:.9}}}",
-            s.name, s.iters, s.mean_s, s.std_s, s.min_s
-        );
-        json.push_str(if i + 1 < samples.len() { ",\n" } else { "\n" });
-    }
-    json.push_str("  ]\n}\n");
-    let path = cfg.root.join("BENCH_prep.json");
-    std::fs::write(&path, json).expect("write BENCH_prep.json");
-    println!("wrote {}", path.display());
+    let extras = [
+        ("dataset", "\"pubmed\"".to_string()),
+        ("quick", quick.to_string()),
+        ("chunks", chunks.to_string()),
+    ];
+    write_snapshot(&cfg.root.join("BENCH_prep.json"), "prep", &extras, &samples);
 }

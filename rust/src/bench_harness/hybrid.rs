@@ -1,0 +1,133 @@
+//! E10 — hybrid data×pipe parallelism: replicated pipelines over graph
+//! partitions (`--replicas R`) against the pipe-only baseline on the
+//! *same total data*.
+//!
+//! All rows share one fixed total partition (R × chunks/replica =
+//! `total`), so every configuration trains the identical micro-batch
+//! set and the identical per-micro-batch forwards — the rows differ
+//! only in how gradients are summed (the deterministic tree all-reduce
+//! association) and in how the work maps onto devices. The `dLoss vs
+//! R=1` column is therefore expected to sit at float-rounding scale.
+//!
+//! Each row prints the real CPU run next to two DGX projections: the
+//! pipe-only baseline (`Scenarios::hybrid_epoch` at R=1 on the same
+//! total partition) and the row's own hybrid layout (R nodes × S V100s
+//! with the gradient tree on the modeled inter-node link).
+
+use anyhow::Result;
+
+use crate::metrics::Table;
+use crate::pipeline::PipelineSpec;
+use crate::simulator::Scenarios;
+
+use super::{framework_label, schedule_label, BenchCtx};
+
+pub fn bench_hybrid(ctx: &BenchCtx) -> Result<String> {
+    let backend = "ell";
+    let total = ctx
+        .cfg
+        .pipeline
+        .chunks
+        .iter()
+        .copied()
+        .max()
+        .unwrap_or(4)
+        .max(2);
+    // Every (R, chunks/replica) factorisation of the same total
+    // partition: for total = 4 that is (1,4), (2,2), (4,1).
+    let configs: Vec<(usize, usize)> = (1..=total)
+        .filter(|r| total % r == 0)
+        .map(|r| (r, total / r))
+        .collect();
+
+    let spec = PipelineSpec::gat4();
+    let baseline = ctx.pipeline_run_replicas(backend, total, false, false, ctx.prep, 1)?;
+    let single = ctx.single_run("pubmed", backend)?;
+    let scen = Scenarios::calibrate_from_cpu(
+        &ctx.engine.manifest,
+        &format!("pubmed_{backend}_train_step"),
+        single.timing.avg_epoch_s(),
+    )?;
+    let pipe_only = scen.hybrid_epoch(
+        &spec,
+        "pubmed",
+        backend,
+        1,
+        total,
+        true,
+        baseline.host_rebuild_per_chunk_s,
+        ctx.schedule.as_ref(),
+        ctx.prep,
+    )?;
+
+    let mut table = Table::new(&[
+        "Replicas",
+        "Chunks/rep",
+        "Ave. epoch (s)",
+        "allreduce_s (host)",
+        "Final loss",
+        "dLoss vs R=1",
+        "Test acc (full)",
+        "DGX pipe-only (s, sim)",
+        "DGX hybrid (s, sim)",
+        "sim allreduce_s",
+    ]);
+    let mut csv = String::from(
+        "replicas,chunks_per_replica,avg_epoch_s,allreduce_s,final_loss,dloss_vs_r1,\
+         test_acc_full,dgx_pipe_only_s,dgx_hybrid_s,dgx_allreduce_s\n",
+    );
+
+    for &(r, chunks) in &configs {
+        let run = ctx.pipeline_run_replicas(backend, chunks, false, false, ctx.prep, r)?;
+        let dloss = run.pipeline_eval.train_loss - baseline.pipeline_eval.train_loss;
+        let hybrid = scen.hybrid_epoch(
+            &spec,
+            "pubmed",
+            backend,
+            r,
+            chunks,
+            true,
+            run.host_rebuild_per_chunk_s,
+            ctx.schedule.as_ref(),
+            ctx.prep,
+        )?;
+        table.row(&[
+            format!("{r}"),
+            format!("{chunks}"),
+            format!("{:.4}", run.timing.avg_epoch_s()),
+            format!("{:.5}", run.timing.allreduce_s),
+            format!("{:.4}", run.pipeline_eval.train_loss),
+            format!("{dloss:+.2e}"),
+            format!("{:.4}", run.full_eval.test_acc),
+            format!("{:.5}", pipe_only.epoch_s),
+            format!("{:.5}", hybrid.epoch_s),
+            format!("{:.2e}", hybrid.allreduce_s),
+        ]);
+        csv.push_str(&format!(
+            "{r},{chunks},{:.5},{:.6},{:.6},{dloss:.6e},{:.4},{:.6},{:.6},{:.6e}\n",
+            run.timing.avg_epoch_s(),
+            run.timing.allreduce_s,
+            run.pipeline_eval.train_loss,
+            run.full_eval.test_acc,
+            pipe_only.epoch_s,
+            hybrid.epoch_s,
+            hybrid.allreduce_s,
+        ));
+    }
+
+    ctx.write_csv("hybrid.csv", &csv)?;
+    Ok(format!(
+        "Hybrid data×pipe — {} {} total-partition={total} {} prep={} ({} epochs)\n{}\n\
+         shape check: every row trains the same {total}-way partition, so dLoss \
+         stays at float-rounding scale (the deterministic tree all-reduce only \
+         changes summation association); the hybrid DGX column trades a shorter \
+         per-replica drain against ceil(log2 R) gradient-reduction rounds on \
+         the inter-node link\n",
+        framework_label(backend),
+        ctx.cfg.pipeline.pipeline_dataset,
+        schedule_label(ctx.schedule.name()),
+        ctx.prep.name(),
+        ctx.epochs,
+        table.render()
+    ))
+}

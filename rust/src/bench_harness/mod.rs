@@ -23,9 +23,15 @@
 //! (static inputs stay device-resident); `--prep overlap` keeps paying
 //! the rebuild but off the critical path. The `prep-modes` bench
 //! prints all three side by side with a bitwise parity check.
+//!
+//! The `hybrid` bench (E10) goes beyond the paper's single axis: it
+//! sweeps `--replicas` factorisations of one fixed total partition and
+//! prints pipe-only vs hybrid DGX projections side by side (see
+//! `simulator::Scenarios::hybrid_epoch`).
 
 mod ablation;
 mod figures;
+mod hybrid;
 mod prep;
 mod runs;
 mod table1;
@@ -33,6 +39,7 @@ mod table2;
 
 pub use ablation::{bench_ablation_chunker, bench_edge_retention};
 pub use figures::{bench_fig1, bench_fig2, bench_fig3, bench_fig4};
+pub use hybrid::bench_hybrid;
 pub use prep::bench_prep_modes;
 pub use runs::{BenchCtx, PipelineRun, SingleRun};
 pub use table1::bench_table1;

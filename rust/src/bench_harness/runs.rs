@@ -57,6 +57,10 @@ pub struct BenchCtx {
     /// Default host-prep mode for pipeline runs (`bench --prep`;
     /// `prep-modes` compares all three explicitly regardless).
     pub prep: PrepMode,
+    /// Default pipeline replica count (`bench --replicas`; the `hybrid`
+    /// bench sweeps R explicitly regardless). 1 = the paper's single
+    /// pipeline, which every paper table/figure reproduces.
+    pub replicas: usize,
     pub results_dir: PathBuf,
     /// Shared micro-batch cache: Cached-mode runs across the session
     /// reuse one prepared set per (plan, backend, train-mask) key.
@@ -83,12 +87,14 @@ impl BenchCtx {
         let results_dir = cfg.root.join("results");
         std::fs::create_dir_all(&results_dir)?;
         let prep = PrepMode::parse(&cfg.pipeline.prep)?;
+        let replicas = cfg.pipeline.replicas;
         Ok(BenchCtx {
             cfg,
             engine,
             epochs,
             schedule,
             prep,
+            replicas,
             results_dir,
             prep_cache: Arc::new(MicrobatchCache::new()),
             datasets: Mutex::new(BTreeMap::new()),
@@ -155,8 +161,28 @@ impl BenchCtx {
         graph_aware: bool,
         prep: PrepMode,
     ) -> Result<PipelineRun> {
+        // Star (1*) rows are definitionally single-pipeline — the full
+        // graph is baked into the model, so a session-wide `--replicas R`
+        // must not propagate into them (the trainer would reject it).
+        let replicas = if star { 1 } else { self.replicas };
+        self.pipeline_run_replicas(backend, chunks, star, graph_aware, prep, replicas)
+    }
+
+    /// [`BenchCtx::pipeline_run_prep`] with an explicit replica count
+    /// (the `hybrid` bench sweeps R over one fixed total partition).
+    /// `chunks` is per replica; the trainer partitions the node set
+    /// `replicas * chunks` ways.
+    pub fn pipeline_run_replicas(
+        &self,
+        backend: &str,
+        chunks: usize,
+        star: bool,
+        graph_aware: bool,
+        prep: PrepMode,
+        replicas: usize,
+    ) -> Result<PipelineRun> {
         let key = format!(
-            "{backend}/c{chunks}/star={star}/aware={graph_aware}/{}/{}/{}",
+            "{backend}/c{chunks}/r{replicas}/star={star}/aware={graph_aware}/{}/{}/{}",
             self.schedule.name(),
             prep.name(),
             self.epochs
@@ -166,7 +192,7 @@ impl BenchCtx {
         }
         let ds_name = self.cfg.pipeline.pipeline_dataset.clone();
         eprintln!(
-            "[bench] pipeline {ds_name}/{backend} chunks={chunks}{} schedule={} prep={} for {} epochs...",
+            "[bench] pipeline {ds_name}/{backend} chunks={chunks}{} replicas={replicas} schedule={} prep={} for {} epochs...",
             if star { "*" } else { "" },
             self.schedule.name(),
             prep.name(),
@@ -177,6 +203,7 @@ impl BenchCtx {
         trainer.schedule = self.schedule.clone();
         trainer.prep = prep;
         trainer.prep_cache = self.prep_cache.clone();
+        trainer.replicas = replicas;
         if star {
             trainer = trainer.full_graph_variant();
         }
@@ -187,7 +214,7 @@ impl BenchCtx {
         // Each pipeline config compiles 8 sizeable CPU programs; purge the
         // executable cache so long `bench all` sessions stay inside RAM.
         self.engine.clear_cache();
-        let rebuild_events = (self.epochs * chunks).max(1);
+        let rebuild_events = (self.epochs * chunks * replicas).max(1);
         let run = PipelineRun {
             host_rebuild_per_chunk_s: (res.timing.rebuild_s
                 + res.timing.prep_overlap_s)

@@ -107,6 +107,11 @@ pub struct PipelineConfig {
     /// `pipeline::PrepMode::parse`. "paper" reproduces the §7.2
     /// per-epoch rebuild stall.
     pub prep: String,
+    /// Default pipeline replica count for hybrid data×pipe parallelism
+    /// (`pipeline::ReplicaGroup`); overridable per run with
+    /// `--replicas`. 1 = the paper's single pipeline (faithful
+    /// reproduction).
+    pub replicas: usize,
 }
 
 #[derive(Debug, Clone)]
@@ -206,6 +211,7 @@ impl Config {
                 .and_then(Json::as_str)
                 .unwrap_or("paper")
                 .to_string(),
+            replicas: p.get("replicas").and_then(Json::as_usize).unwrap_or(1),
         };
 
         Ok(Config { root: root.to_path_buf(), datasets, model, pipeline })
@@ -236,10 +242,12 @@ mod tests {
         assert_eq!(c.model.heads, 8);
         assert_eq!(c.pipeline.devices, 4);
         assert_eq!(c.pipeline.balance, vec![2, 1, 2, 1]);
-        // The schedule/prep keys are optional and default to the paper's.
+        // The schedule/prep/replicas keys are optional and default to
+        // the paper's configuration.
         assert!(c.pipeline.schedule == "fill-drain" || c.pipeline.schedule == "1f1b");
         assert!(["paper", "cached", "overlap"]
             .contains(&c.pipeline.prep.as_str()));
+        assert!(c.pipeline.replicas >= 1);
     }
 
     #[test]

@@ -4,13 +4,14 @@
 //!   data      [--dataset cora|citeseer|pubmed]       synth stats vs profile
 //!   train     --dataset D --backend B [--epochs N]   single-device training
 //!   pipeline  --backend B --chunks K [--epochs N]
+//!             [--replicas R]
 //!             [--schedule fill-drain|1f1b]
 //!             [--prep paper|cached|overlap]
 //!             [--star] [--graph-aware]               pipeline training
 //!   bench     table1|table2|fig1|fig2|fig3|fig4|
 //!             ablation-chunker|edge-retention|
-//!             prep-modes|all
-//!             [--epochs N] [--schedule S] [--prep P]
+//!             prep-modes|hybrid|all
+//!             [--epochs N] [--schedule S] [--prep P] [--replicas R]
 //!   inspect                                          artifact manifest summary
 //!
 //! Run `make artifacts` before anything that executes HLO.
@@ -33,11 +34,12 @@ gnn-pipe — pipe-parallel GAT training (paper reproduction)
 USAGE:
   gnn-pipe data      [--dataset <name>]
   gnn-pipe train     --dataset <name> --backend <ell|edgewise> [--epochs N] [--seed S]
-  gnn-pipe pipeline  [--backend <ell|edgewise>] [--chunks K] [--epochs N]
+  gnn-pipe pipeline  [--backend <ell|edgewise>] [--chunks K] [--replicas R] [--epochs N]
                      [--schedule fill-drain|1f1b] [--prep paper|cached|overlap]
                      [--star] [--graph-aware]
-  gnn-pipe bench     <table1|table2|fig1|fig2|fig3|fig4|ablation-chunker|edge-retention|prep-modes|all>
+  gnn-pipe bench     <table1|table2|fig1|fig2|fig3|fig4|ablation-chunker|edge-retention|prep-modes|hybrid|all>
                      [--epochs N] [--schedule fill-drain|1f1b] [--prep paper|cached|overlap]
+                     [--replicas R]
   gnn-pipe inspect
 
 SCHEDULES (--schedule, default from configs/pipeline.json):
@@ -54,6 +56,16 @@ are bitwise identical across all three — only where the time goes moves):
   overlap      rebuild epoch e+1 on a prefetch thread while the pipeline
                executes epoch e (rebuild_s keeps only the residual stall;
                the hidden work is reported as prep_overlap_s)
+
+REPLICAS (--replicas, default from configs/pipeline.json; 1 = the paper's
+single pipeline on the exact single-pipeline code path):
+  R >= 2       hybrid data x pipe parallelism: the chunk planner splits the
+               node set R*chunks ways, R replicated pipelines each train
+               chunks micro-batches (one graph partition per replica), and
+               parameters are synchronized every epoch by a deterministic
+               tree all-reduce with a FIXED summation order — so runs at
+               any fixed R are bit-reproducible. The `bench hybrid` table
+               prints pipe-only vs hybrid DGX projections side by side.
 ";
 
 fn main() {
@@ -167,6 +179,7 @@ fn cmd_pipeline(args: &Args) -> Result<()> {
     let chunks = args.opt_usize("chunks", 1)?;
     let epochs = args.opt_usize("epochs", cfg.model.epochs)?;
     let star = args.flag("star");
+    let replicas = args.opt_usize("replicas", cfg.pipeline.replicas)?;
     let schedule = parse_schedule(args.opt_str("schedule", &cfg.pipeline.schedule))?;
     let prep = args.opt_parse("prep", PrepMode::parse(&cfg.pipeline.prep)?)?;
     let dataset = cfg.pipeline.pipeline_dataset.clone();
@@ -176,6 +189,7 @@ fn cmd_pipeline(args: &Args) -> Result<()> {
     let mut trainer = PipelineTrainer::new(&engine, &ds, &backend, chunks);
     trainer.schedule = schedule;
     trainer.prep = prep;
+    trainer.replicas = replicas;
     if star {
         trainer = trainer.full_graph_variant();
     }
@@ -183,7 +197,7 @@ fn cmd_pipeline(args: &Args) -> Result<()> {
         trainer.chunker = Box::new(GraphAwareChunker);
     }
     println!(
-        "pipeline training {dataset}/{backend} chunks={chunks}{} schedule={} prep={} ({} devices, balance {:?}) for {epochs} epochs...",
+        "pipeline training {dataset}/{backend} chunks={chunks}{} replicas={replicas} schedule={} prep={} ({} devices/replica, balance {:?}) for {epochs} epochs...",
         if star { "*" } else { "" },
         trainer.schedule.name(),
         prep.name(),
@@ -196,6 +210,7 @@ fn cmd_pipeline(args: &Args) -> Result<()> {
     println!("avg epoch          {:.4} s", res.timing.avg_epoch_s());
     println!("host rebuild       {:.4} s total (critical path)", res.timing.rebuild_s);
     println!("prep overlapped    {:.4} s total (hidden)", res.timing.prep_overlap_s);
+    println!("allreduce (host)   {:.4} s total (deterministic tree)", res.timing.allreduce_s);
     println!("device transfer    {:.4} s total (upload+download)", res.timing.transfer_s);
     println!(
         "final (pipeline-eval): train loss {:.4}  train acc {:.4}  val acc {:.4}",
@@ -225,8 +240,10 @@ fn cmd_bench(args: &Args) -> Result<()> {
     let epochs = args.opt_usize("epochs", cfg.model.epochs)?;
     let schedule = parse_schedule(args.opt_str("schedule", &cfg.pipeline.schedule))?;
     let prep = args.opt_parse("prep", PrepMode::parse(&cfg.pipeline.prep)?)?;
+    let replicas = args.opt_usize("replicas", cfg.pipeline.replicas)?;
     let mut ctx = bench::BenchCtx::with_schedule(epochs, schedule)?;
     ctx.prep = prep;
+    ctx.replicas = replicas;
     let mut outputs = Vec::new();
     let run = |name: &str, ctx: &bench::BenchCtx| -> Result<String> {
         match name {
@@ -239,13 +256,14 @@ fn cmd_bench(args: &Args) -> Result<()> {
             "ablation-chunker" => bench::bench_ablation_chunker(ctx),
             "edge-retention" => bench::bench_edge_retention(ctx),
             "prep-modes" => bench::bench_prep_modes(ctx),
+            "hybrid" => bench::bench_hybrid(ctx),
             other => anyhow::bail!("unknown bench {other:?}"),
         }
     };
     if which == "all" {
         for name in [
             "table1", "table2", "fig1", "fig2", "fig3", "fig4",
-            "ablation-chunker", "edge-retention", "prep-modes",
+            "ablation-chunker", "edge-retention", "prep-modes", "hybrid",
         ] {
             outputs.push(run(name, &ctx)?);
         }

@@ -30,6 +30,10 @@ pub struct RunTiming {
     /// Overlap prefetch thread (the work `rebuild_s` would have charged
     /// in Paper mode). Zero in other modes.
     pub prep_overlap_s: f64,
+    /// Host seconds spent in the deterministic cross-replica gradient
+    /// all-reduce (`--replicas R`, R >= 2). Zero for single-replica
+    /// runs — the R=1 path performs no reduction at all.
+    pub allreduce_s: f64,
 }
 
 impl RunTiming {

@@ -1,0 +1,183 @@
+//! Deterministic gradient all-reduce for replicated pipelines.
+//!
+//! When `--replicas R` runs R pipeline instances over graph partitions,
+//! each replica produces a full flat gradient vector (the FIFO sum over
+//! its own micro-batches). [`tree_allreduce`] folds those R vectors into
+//! one with a **fixed binary-tree association**: round `k` (stride
+//! `2^k`) adds `parts[i + 2^k]` into `parts[i]` for every
+//! `i ≡ 0 (mod 2^(k+1))`. The association — and therefore every f32
+//! rounding decision — depends only on R, never on thread timing or
+//! arrival order, so hybrid runs are bit-reproducible at any fixed
+//! replica count:
+//!
+//! * R = 2: `g0 + g1`
+//! * R = 3: `(g0 + g1) + g2`
+//! * R = 4: `(g0 + g1) + (g2 + g3)`
+//!
+//! R = 1 returns the single part unchanged — no reduction, no clone —
+//! which is what keeps `--replicas 1` on the exact single-pipeline code
+//! path.
+//!
+//! The same tree shape is what `simulator::Scenarios::hybrid_epoch`
+//! prices on the modeled inter-node link: [`tree_rounds`] pairwise
+//! exchange rounds up the tree, and the same count down for the
+//! broadcast.
+
+use anyhow::Result;
+
+use crate::runtime::HostTensor;
+
+/// Sum `parts` (one parallel tensor list per replica, replica-index
+/// order) into a single list using the fixed binary-tree association
+/// described in the module docs. Consumes the parts; the reduction
+/// happens in place in `parts[0]`'s buffers, so no gradient tensor is
+/// cloned.
+pub fn tree_allreduce(mut parts: Vec<Vec<HostTensor>>) -> Result<Vec<HostTensor>> {
+    anyhow::ensure!(!parts.is_empty(), "allreduce needs at least one replica");
+    let n = parts.len();
+    let mut stride = 1usize;
+    while stride < n {
+        let mut i = 0usize;
+        while i + stride < n {
+            // Disjoint borrows: parts[i] lives left of the split point,
+            // parts[i + stride] is the first element right of it.
+            let (left, right) = parts.split_at_mut(i + stride);
+            add_into(&mut left[i], &right[0])?;
+            i += 2 * stride;
+        }
+        stride *= 2;
+    }
+    Ok(parts.swap_remove(0))
+}
+
+/// Number of sequential pairwise-exchange rounds the reduction tree
+/// needs for `replicas` participants: `ceil(log2(replicas))` (0 for a
+/// single replica).
+pub fn tree_rounds(replicas: usize) -> usize {
+    if replicas <= 1 {
+        0
+    } else {
+        (usize::BITS - (replicas - 1).leading_zeros()) as usize
+    }
+}
+
+/// acc += delta, elementwise, over parallel gradient lists.
+fn add_into(acc: &mut [HostTensor], delta: &[HostTensor]) -> Result<()> {
+    anyhow::ensure!(
+        acc.len() == delta.len(),
+        "gradient arity mismatch between replicas: {} vs {}",
+        acc.len(),
+        delta.len()
+    );
+    for (a, d) in acc.iter_mut().zip(delta) {
+        let d = d.as_f32()?;
+        let a = a.as_f32_mut()?;
+        anyhow::ensure!(
+            a.len() == d.len(),
+            "gradient shape mismatch between replicas: {} vs {} elements",
+            a.len(),
+            d.len()
+        );
+        for (x, y) in a.iter_mut().zip(d) {
+            *x += y;
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn part(vals: &[f32]) -> Vec<HostTensor> {
+        vec![HostTensor::f32(vec![vals.len()], vals.to_vec())]
+    }
+
+    #[test]
+    fn single_replica_is_identity() {
+        let g = part(&[1.5, -2.25, 0.0]);
+        let out = tree_allreduce(vec![g.clone()]).unwrap();
+        assert_eq!(out, g);
+    }
+
+    /// The 1e8 fixture: at f32, 1e8 + 1.0 rounds back to 1e8 (ULP is 8
+    /// at that magnitude), so the result of summing {1e8, -1e8, 1.0}
+    /// depends entirely on association — which pins the tree shape.
+    #[test]
+    fn association_order_is_the_documented_tree_r3() {
+        // Tree for R=3: ((a + b) + c) = (0.0 + 1.0) = 1.0.
+        // Right association a + (b + c) would give 1e8 + (-1e8) = 0.0.
+        let parts = vec![part(&[1e8]), part(&[-1e8]), part(&[1.0])];
+        let out = tree_allreduce(parts).unwrap();
+        assert_eq!(out[0].as_f32().unwrap(), &[1.0]);
+    }
+
+    #[test]
+    fn association_order_is_the_documented_tree_r4() {
+        // Tree for R=4: (a + b) + (c + d) = (1e8) + (-1e8) = 0.0.
+        // A left fold ((a + b) + c) + d would give 0.0 + 1.0 = 1.0.
+        let parts = vec![part(&[1e8]), part(&[1.0]), part(&[-1e8]), part(&[1.0])];
+        let out = tree_allreduce(parts).unwrap();
+        assert_eq!(out[0].as_f32().unwrap(), &[0.0]);
+    }
+
+    #[test]
+    fn repeated_reductions_are_bitwise_identical() {
+        for r in [2usize, 3, 4] {
+            let parts = || -> Vec<Vec<HostTensor>> {
+                (0..r)
+                    .map(|i| {
+                        let vals: Vec<f32> = (0..64)
+                            .map(|j| (((i * 977 + j * 131) % 401) as f32 - 200.0) * 1.5e-3)
+                            .collect();
+                        part(&vals)
+                    })
+                    .collect()
+            };
+            let a = tree_allreduce(parts()).unwrap();
+            let b = tree_allreduce(parts()).unwrap();
+            assert_eq!(a, b, "R={r}: reduction must be bit-reproducible");
+        }
+    }
+
+    #[test]
+    fn sums_match_serial_within_tolerance() {
+        let r = 4usize;
+        let parts: Vec<Vec<HostTensor>> = (0..r)
+            .map(|i| part(&[(i as f32 + 1.0) * 0.25, -(i as f32)]))
+            .collect();
+        let out = tree_allreduce(parts).unwrap();
+        let got = out[0].as_f32().unwrap();
+        assert!((got[0] - 2.5).abs() < 1e-6);
+        assert!((got[1] - (-6.0)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn rejects_mismatched_parts() {
+        // Arity mismatch.
+        let err = tree_allreduce(vec![
+            vec![HostTensor::zeros_f32(vec![2])],
+            vec![HostTensor::zeros_f32(vec![2]), HostTensor::zeros_f32(vec![2])],
+        ]);
+        assert!(err.is_err());
+        // Shape mismatch.
+        let err = tree_allreduce(vec![
+            vec![HostTensor::zeros_f32(vec![2])],
+            vec![HostTensor::zeros_f32(vec![3])],
+        ]);
+        assert!(err.is_err());
+        // Empty input.
+        assert!(tree_allreduce(Vec::new()).is_err());
+    }
+
+    #[test]
+    fn tree_rounds_is_ceil_log2() {
+        assert_eq!(tree_rounds(1), 0);
+        assert_eq!(tree_rounds(2), 1);
+        assert_eq!(tree_rounds(3), 2);
+        assert_eq!(tree_rounds(4), 2);
+        assert_eq!(tree_rounds(5), 3);
+        assert_eq!(tree_rounds(8), 3);
+        assert_eq!(tree_rounds(9), 4);
+    }
+}

@@ -4,11 +4,20 @@
 //! optimiser state (exactly the split the pipeline path needs, since
 //! gradients from micro-batches must be accumulated before one update).
 //! Adam matches the GAT reference setup (lr 5e-3, weight decay 5e-4).
+//!
+//! [`allreduce`] is the cross-replica half of that split: when
+//! `--replicas R` runs R pipelines over graph partitions, its
+//! deterministic tree reduction folds the per-replica gradient sums
+//! into one vector *before* the single optimiser step, with a fixed
+//! summation order so training is bit-reproducible at any R.
+
+pub mod allreduce;
 
 mod adam;
 mod sgd;
 
 pub use adam::Adam;
+pub use allreduce::{tree_allreduce, tree_rounds};
 pub use sgd::Sgd;
 
 use crate::runtime::HostTensor;

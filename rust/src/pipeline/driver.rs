@@ -17,6 +17,14 @@
 //! thread overlapped with pipeline execution. Losses, gradients and
 //! final parameters are bitwise identical across modes — only the
 //! timing split (`rebuild_s` / `prep_overlap_s` / `transfer_s`) moves.
+//!
+//! `replicas` (CLI `--replicas`, default 1) adds the second parallelism
+//! axis: the chunk planner partitions the node set `replicas * chunks`
+//! ways, a [`ReplicaGroup`] trains `chunks` micro-batches per replica,
+//! and the per-replica gradient sums are folded by the deterministic
+//! tree all-reduce (`optim::allreduce`) before the single Adam step.
+//! At `replicas == 1` the trainer takes the exact single-pipeline code
+//! path — no reduction, no extra clone.
 
 use std::collections::BTreeMap;
 use std::sync::mpsc::Receiver;
@@ -43,6 +51,7 @@ use super::engine::PipelineEngine;
 use super::prep::{
     spawn_prefetcher, MicrobatchCache, MicrobatchPool, PrefetchMsg, PrepMode,
 };
+use super::replica::ReplicaGroup;
 use super::schedule::{FillDrain, Schedule};
 use super::spec::PipelineSpec;
 
@@ -50,7 +59,14 @@ pub struct PipelineTrainer<'e> {
     engine: &'e Engine,
     dataset: &'e Dataset,
     backend: String,
+    /// Micro-batches per pipeline instance (the paper's `chunks`).
     pub chunks: usize,
+    /// Pipeline replica count (hybrid data×pipe parallelism). The node
+    /// set is partitioned `replicas * chunks` ways; replica `r` trains
+    /// micro-batches `[r*chunks, (r+1)*chunks)` and gradients are merged
+    /// by the deterministic tree all-reduce each epoch. 1 (default) =
+    /// the paper's single pipeline, on the exact pre-replica code path.
+    pub replicas: usize,
     /// false = the paper's "Chunk = 1*" configuration (graph baked into
     /// the model, no host re-build). Only valid with chunks == 1.
     pub rebuild: bool,
@@ -110,7 +126,7 @@ enum MbFeed<'a> {
 
 /// Borrowed setup shared by every epoch of one run.
 struct EpochCtx<'a> {
-    pipe: &'a PipelineEngine,
+    group: &'a ReplicaGroup<'a>,
     evaluator: &'a Evaluator,
     order: &'a [String],
     train_mask: &'a [f32],
@@ -142,6 +158,7 @@ impl<'e> PipelineTrainer<'e> {
             dataset,
             backend: backend.to_string(),
             chunks,
+            replicas: 1,
             rebuild: true,
             chunker: Box::new(SequentialChunker),
             spec: PipelineSpec::gat4(),
@@ -165,9 +182,19 @@ impl<'e> PipelineTrainer<'e> {
         let p = &ds.profile;
         let n = p.nodes;
         let train_mask = ds.splits.train_mask(n);
+        anyhow::ensure!(self.replicas >= 1, "replicas must be >= 1");
+        anyhow::ensure!(
+            self.rebuild || self.replicas == 1,
+            "the 1* variant bakes the full graph into the model and \
+             cannot be replicated over partitions"
+        );
 
-        // Chunk plan is static across epochs (torchgpipe chunks by index).
-        let plan = self.chunker.plan(&ds.graph, self.chunks);
+        // Chunk plan is static across epochs (torchgpipe chunks by
+        // index). Replication partitions the node set `replicas` times
+        // finer: every replica owns `chunks` of the total chunks, and
+        // the compiled artifact shapes follow the total count.
+        let total_chunks = self.replicas * self.chunks;
+        let plan = self.chunker.plan(&ds.graph, total_chunks);
         plan.check(n)?;
         let retention = retention_stats(&ds.graph, &plan);
 
@@ -178,7 +205,7 @@ impl<'e> PipelineTrainer<'e> {
             self.engine,
             &p.name,
             &self.backend,
-            self.chunks,
+            total_chunks,
             self.spec.clone(),
             self.schedule.clone(),
         )?;
@@ -223,8 +250,9 @@ impl<'e> PipelineTrainer<'e> {
         let flat = flatten_params(&init_params(p, mc, self.seed), &order)?;
         let n_stages = self.spec.num_stages();
 
+        let group = ReplicaGroup::new(&pipe, self.replicas)?;
         let cx = EpochCtx {
-            pipe: &pipe,
+            group: &group,
             evaluator: &pipeline_evaluator,
             order: &order,
             train_mask: &train_mask,
@@ -342,7 +370,8 @@ impl<'e> PipelineTrainer<'e> {
             };
 
             let key = (self.seed as u32, epoch as u32);
-            let out = cx.pipe.run_epoch(&st.flat, mbs, key)?;
+            let out = cx.group.run_epoch(&st.flat, mbs, key)?;
+            st.timing.allreduce_s += out.allreduce_s;
             let loss = out.loss_sum / out.mask_count.max(1.0);
             anyhow::ensure!(loss.is_finite(), "loss diverged at epoch {epoch}");
 

@@ -56,6 +56,10 @@ pub struct EpochOutput {
     pub logp: Vec<(Vec<u32>, Vec<f32>)>,
     pub stage_timings: Vec<StageTiming>,
     pub wall_s: f64,
+    /// Host seconds spent in the cross-replica gradient all-reduce.
+    /// Zero for a plain single-pipeline epoch; `ReplicaGroup` fills it
+    /// when merging R > 1 replica outputs.
+    pub allreduce_s: f64,
 }
 
 /// Compiled executables of one stage.
@@ -273,6 +277,7 @@ impl PipelineEngine {
                 logp,
                 stage_timings,
                 wall_s: wall.elapsed().as_secs_f64(),
+                allreduce_s: 0.0,
             })
         })
     }

@@ -30,6 +30,18 @@
 //! while the pipeline executes epoch *e*. All three produce
 //! bitwise-identical losses, gradients and parameters.
 //!
+//! A fifth piece, **[`ReplicaGroup`]** (CLI `--replicas`), opens the
+//! second parallelism axis: hybrid data×pipe parallelism. R pipeline
+//! instances train R graph partitions (the chunk planner splits the
+//! node set `R * chunks` ways; each replica owns `chunks` of those
+//! micro-batches) and synchronize parameters once per epoch through
+//! `optim::allreduce` — a deterministic tree reduction with a fixed
+//! summation order, so training at any fixed R is bit-reproducible.
+//! `--replicas 1` (the default) is the paper's single pipeline on the
+//! exact pre-replica code path; the simulator's
+//! `Scenarios::hybrid_epoch` prices the parallel R-node DGX layout the
+//! host executes sequentially.
+//!
 //! One training step:
 //!
 //! 1. **Chunk** — split the node tensor into `chunks` micro-batches
@@ -52,6 +64,7 @@ mod chunkprep;
 mod driver;
 mod engine;
 mod prep;
+mod replica;
 mod schedule;
 mod spec;
 
@@ -64,5 +77,6 @@ pub use engine::{EpochOutput, PipelineEngine, StageTiming};
 pub use prep::{
     spawn_prefetcher, MicrobatchCache, MicrobatchPool, PrefetchMsg, PrepMode,
 };
+pub use replica::ReplicaGroup;
 pub use schedule::{parse_schedule, FillDrain, OneFOneB, Schedule, StageEvent};
 pub use spec::{PipelineSpec, StageInput, StageSpec};

@@ -1,0 +1,129 @@
+//! The replica layer above the pipeline engine: hybrid data×pipe
+//! parallelism.
+//!
+//! [`ReplicaGroup`] runs R pipeline instances over one partitioned
+//! micro-batch set. The trainer plans `R * chunks` chunks with the
+//! existing [`Chunker`] (so the prepared set — and every [`PrepMode`]
+//! feed: pooled rebuild, cache, prefetcher — is built once for the
+//! whole group); replica `r` trains the contiguous slice of `chunks`
+//! micro-batches starting at `r * chunks`, through the *same* compiled
+//! stage executables (shapes are per total-chunk-count, so every
+//! replica's micro-batches share one padded layout).
+//!
+//! After the R epochs, per-replica gradient sums are folded by
+//! [`tree_allreduce`] — a fixed binary-tree association over replica
+//! indices — so the merged gradients, and therefore the whole training
+//! trajectory, are **bit-reproducible for any fixed R** regardless of
+//! how the replicas were executed.
+//!
+//! On this host the replicas execute sequentially (one CPU executes
+//! all "devices" anyway, exactly as the stage workers of one pipeline
+//! already share it); the DGX hybrid projection
+//! (`simulator::Scenarios::hybrid_epoch`) prices the truly parallel
+//! layout — R nodes × S V100s, NVLink intra-node, the gradient tree on
+//! the modeled inter-node link.
+//!
+//! Dropout keys are assigned by *global* micro-batch index (replica
+//! `r`, local batch `m` uses key `base + r*chunks + m`), so an R-way
+//! replicated run consumes exactly the per-micro-batch randomness of
+//! the equivalent single pipeline over the same `R * chunks` plan —
+//! the two differ only in gradient summation association.
+//!
+//! [`Chunker`]: crate::batching::Chunker
+//! [`PrepMode`]: super::PrepMode
+//! [`tree_allreduce`]: crate::optim::allreduce::tree_allreduce
+
+use anyhow::Result;
+
+use crate::metrics::Timer;
+use crate::optim::allreduce::tree_allreduce;
+use crate::runtime::HostTensor;
+
+use super::chunkprep::Microbatch;
+use super::engine::{EpochOutput, PipelineEngine, StageTiming};
+
+/// R replicated pipeline instances sharing one engine's compiled
+/// stages. `replicas == 1` is byte-for-byte the plain single-pipeline
+/// path: no slicing, no reduction, no clone.
+pub struct ReplicaGroup<'p> {
+    pipe: &'p PipelineEngine,
+    pub replicas: usize,
+}
+
+impl<'p> ReplicaGroup<'p> {
+    pub fn new(pipe: &'p PipelineEngine, replicas: usize) -> Result<ReplicaGroup<'p>> {
+        anyhow::ensure!(replicas >= 1, "replicas must be >= 1, got {replicas}");
+        Ok(ReplicaGroup { pipe, replicas })
+    }
+
+    /// Run one optimiser step's worth of work: every replica's pipeline
+    /// epoch over its micro-batch slice, then the deterministic gradient
+    /// all-reduce. The returned [`EpochOutput`] has the same shape a
+    /// single pipeline over all `microbatches` would produce (grads are
+    /// the total sum, `loss_sum`/`mask_count` the totals, `logp` and
+    /// per-stage timings concatenated in replica order), so the trainer
+    /// loop is replica-agnostic.
+    pub fn run_epoch(
+        &self,
+        params: &[HostTensor],
+        microbatches: &[Microbatch],
+        key: (u32, u32),
+    ) -> Result<EpochOutput> {
+        if self.replicas == 1 {
+            // The exact pre-replica single-pipeline code path.
+            return self.pipe.run_epoch(params, microbatches, key);
+        }
+        let r = self.replicas;
+        anyhow::ensure!(
+            microbatches.len() % r == 0 && microbatches.len() >= r,
+            "{} micro-batches cannot be split over {r} replicas",
+            microbatches.len()
+        );
+        let per = microbatches.len() / r;
+
+        // Sequential execution in replica-index order; determinism does
+        // not depend on it (the reduction order below is fixed), but it
+        // keeps one CPU honestly executing one pipeline at a time.
+        let mut outs = Vec::with_capacity(r);
+        for i in 0..r {
+            let slice = &microbatches[i * per..(i + 1) * per];
+            // Global micro-batch index keys: replica i, local batch m
+            // draws key.0 + i*per + m (the engine adds the local m).
+            let rkey = (key.0.wrapping_add((i * per) as u32), key.1);
+            outs.push(self.pipe.run_epoch(params, slice, rkey)?);
+        }
+
+        // Merge in fixed replica order (f64 scalar sums), then the
+        // fixed-association tree reduction over the f32 gradients.
+        let n_stages = outs[0].stage_timings.len();
+        let mut loss_sum = 0.0f64;
+        let mut mask_count = 0.0f64;
+        let mut logp: Vec<(Vec<u32>, Vec<f32>)> = Vec::new();
+        let mut stage_timings = vec![StageTiming::default(); n_stages];
+        let mut wall_s = 0.0f64;
+        let mut grad_parts = Vec::with_capacity(r);
+        for out in outs {
+            loss_sum += out.loss_sum;
+            mask_count += out.mask_count;
+            logp.extend(out.logp);
+            wall_s += out.wall_s;
+            for (s, st) in out.stage_timings.into_iter().enumerate() {
+                stage_timings[s].fwd_s.extend(st.fwd_s);
+                stage_timings[s].bwd_s.extend(st.bwd_s);
+                stage_timings[s].busy_s += st.busy_s;
+            }
+            grad_parts.push(out.grads);
+        }
+        let reduce = Timer::start();
+        let grads = tree_allreduce(grad_parts)?;
+        Ok(EpochOutput {
+            loss_sum,
+            mask_count,
+            grads,
+            logp,
+            stage_timings,
+            wall_s,
+            allreduce_s: reduce.secs(),
+        })
+    }
+}

@@ -27,13 +27,17 @@ impl LinkModel {
 }
 
 /// The paper's hardware (§6): Intel Xeon @ 2.20 GHz (Colab-class, ~16
-/// effective vector lanes), NVIDIA T4, and the DGX's V100-SXM2 pods.
+/// effective vector lanes), NVIDIA T4, and the DGX's V100-SXM2 pods —
+/// plus the modeled inter-node fabric hybrid replication reduces over
+/// (`internode`; the paper's testbed is a single node, so this link
+/// only appears in `Scenarios::hybrid_epoch` projections).
 pub struct Devices {
     pub xeon: DeviceModel,
     pub t4: DeviceModel,
     pub v100: DeviceModel,
     pub pcie: LinkModel,
     pub nvlink: LinkModel,
+    pub internode: LinkModel,
 }
 
 pub const DEVICES: Devices = Devices {
@@ -59,6 +63,9 @@ pub const DEVICES: Devices = Devices {
     },
     pcie: LinkModel { name: "PCIe3 x16", latency_s: 15e-6, bw_gbs: 12.0 },
     nvlink: LinkModel { name: "NVLink2", latency_s: 8e-6, bw_gbs: 50.0 },
+    // InfiniBand EDR (the DGX generation's cluster fabric): 100 Gb/s
+    // per port ≈ 12.5 GB/s, with RDMA-class latency.
+    internode: LinkModel { name: "IB-EDR", latency_s: 5e-6, bw_gbs: 12.5 },
 };
 
 /// Achieved-fraction calibration from a real measured run.

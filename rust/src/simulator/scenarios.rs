@@ -20,16 +20,26 @@ use super::pipeline_sim::{
 pub struct SimEpoch {
     pub device: &'static str,
     pub epoch_s: f64,
-    /// Pipeline-only details (None for single-device projections).
+    /// Pipeline-only details (None for single-device projections). For
+    /// hybrid projections: one replica's timeline (replicas are
+    /// identical and run in parallel).
     pub pipeline: Option<PipelineSimReport>,
     /// Seconds of the epoch spent in host re-build round trips ON the
-    /// critical path (zero under `PrepMode::Cached`).
+    /// critical path (zero under `PrepMode::Cached`). Per replica for
+    /// hybrid projections — each modeled node has its own host.
     pub rebuild_s: f64,
     /// Seconds of the epoch spent in inter-device transfers.
     pub xfer_s: f64,
     /// Host re-build seconds hidden off the critical path by the
     /// Overlap prefetcher (mirrors the real engine's `prep_overlap_s`).
     pub prep_hidden_s: f64,
+    /// Pipeline replica count priced into this projection (1 =
+    /// pipe-only, the paper's configuration).
+    pub replicas: usize,
+    /// Seconds of the epoch spent in the deterministic cross-replica
+    /// gradient all-reduce over the modeled inter-node link. Zero when
+    /// `replicas == 1`.
+    pub allreduce_s: f64,
 }
 
 pub struct Scenarios<'m> {
@@ -92,6 +102,8 @@ impl<'m> Scenarios<'m> {
             rebuild_s: 0.0,
             xfer_s: 0.0,
             prep_hidden_s: 0.0,
+            replicas: 1,
+            allreduce_s: 0.0,
         })
     }
 
@@ -200,11 +212,119 @@ impl<'m> Scenarios<'m> {
         schedule: &dyn Schedule,
         prep: PrepMode,
     ) -> Result<SimEpoch> {
+        self.staged_epoch(
+            spec,
+            dataset,
+            backend,
+            chunks,
+            chunks,
+            rebuild,
+            host_rebuild_s,
+            schedule,
+            prep,
+        )
+    }
+
+    /// Price one hybrid data×pipe epoch: `replicas` pipeline instances
+    /// run in parallel (one DGX node of S V100s per replica, NVLink
+    /// intra-node) over a `replicas * chunks`-way graph partition —
+    /// `chunks` micro-batches per replica, on the `c{R*chunks}`
+    /// artifacts, matching what the real `ReplicaGroup` executes — plus
+    /// the deterministic tree all-reduce of the stage-owned gradients
+    /// over the modeled inter-node link ([`DEVICES`]`.internode`):
+    /// `ceil(log2 R)` pairwise-exchange rounds up the tree and the same
+    /// count back down for the broadcast, each carrying the full flat
+    /// gradient vector.
+    ///
+    /// `hybrid_epoch(R = 1, ...)` is exactly
+    /// [`Scenarios::pipeline_epoch_prep`] — the pipe-only projection —
+    /// so bench tables can print both sides from one entry point.
+    #[allow(clippy::too_many_arguments)]
+    pub fn hybrid_epoch(
+        &self,
+        spec: &PipelineSpec,
+        dataset: &str,
+        backend: &str,
+        replicas: usize,
+        chunks: usize,
+        rebuild: bool,
+        host_rebuild_s: f64,
+        schedule: &dyn Schedule,
+        prep: PrepMode,
+    ) -> Result<SimEpoch> {
+        anyhow::ensure!(replicas >= 1, "replicas must be >= 1");
+        if replicas == 1 {
+            return self.pipeline_epoch_prep(
+                spec,
+                dataset,
+                backend,
+                chunks,
+                rebuild,
+                host_rebuild_s,
+                schedule,
+                prep,
+            );
+        }
+        let total = replicas * chunks;
+        // All replicas are identical (same artifact shapes, same
+        // micro-batch count), so the parallel makespan is one replica's.
+        let mut e = self.staged_epoch(
+            spec,
+            dataset,
+            backend,
+            total,
+            chunks,
+            rebuild,
+            host_rebuild_s,
+            schedule,
+            prep,
+        )?;
+        let name = |kind: &str| format!("{dataset}_{backend}_c{total}_{kind}");
+        let mut grad_bytes = 0.0f64;
+        for st in &spec.stages {
+            // A stage forward's leading inputs are its owned parameter
+            // slice (the artifact contract) — their elements are the
+            // gradient payload this stage contributes to the reduction.
+            let a = self.manifest.artifact(&name(&st.fwd_kind))?;
+            anyhow::ensure!(
+                a.inputs.len() >= st.param_count(),
+                "artifact {} declares fewer inputs than its stage's params",
+                name(&st.fwd_kind)
+            );
+            for t in a.inputs.iter().take(st.param_count()) {
+                grad_bytes += 4.0 * t.elements() as f64;
+            }
+        }
+        let rounds = crate::optim::allreduce::tree_rounds(replicas) as f64;
+        let allreduce_s = 2.0 * rounds * DEVICES.internode.transfer_time(grad_bytes);
+        e.epoch_s += allreduce_s;
+        e.allreduce_s = allreduce_s;
+        e.replicas = replicas;
+        Ok(e)
+    }
+
+    /// Shared core of the pipeline/hybrid projections: price `m_count`
+    /// micro-batches through the `c{artifact_chunks}` stage artifacts
+    /// (pipe-only: the two counts coincide; hybrid: each replica runs
+    /// `m_count = chunks` of the `artifact_chunks = R * chunks` total).
+    #[allow(clippy::too_many_arguments)]
+    fn staged_epoch(
+        &self,
+        spec: &PipelineSpec,
+        dataset: &str,
+        backend: &str,
+        artifact_chunks: usize,
+        m_count: usize,
+        rebuild: bool,
+        host_rebuild_s: f64,
+        schedule: &dyn Schedule,
+        prep: PrepMode,
+    ) -> Result<SimEpoch> {
         spec.validate()?;
         let dev = &DEVICES.v100;
         let nvlink = &DEVICES.nvlink;
         let pcie = &DEVICES.pcie;
-        let name = |kind: &str| format!("{dataset}_{backend}_c{chunks}_{kind}");
+        let name = |kind: &str| format!("{dataset}_{backend}_c{artifact_chunks}_{kind}");
         let n_stages = spec.num_stages();
 
         // Stage compute times from manifest cost analysis. Backwards
@@ -214,9 +334,9 @@ impl<'m> Scenarios<'m> {
         let mut bwd_s = Vec::with_capacity(n_stages);
         for st in &spec.stages {
             let (f, b) = self.art(&name(&st.fwd_kind))?;
-            fwd_s.push(vec![dev.exec_time(f, b, &self.cal); chunks]);
+            fwd_s.push(vec![dev.exec_time(f, b, &self.cal); m_count]);
             let (f, b) = self.art(&name(&st.bwd_kind))?;
-            bwd_s.push(vec![dev.exec_time(f, b, &self.cal); chunks]);
+            bwd_s.push(vec![dev.exec_time(f, b, &self.cal); m_count]);
         }
 
         // Activation transfers over NVLink: each boundary carries the
@@ -225,14 +345,14 @@ impl<'m> Scenarios<'m> {
         let mut xfer_fwd = Vec::with_capacity(n_stages - 1);
         for st in &spec.stages[..n_stages - 1] {
             let bytes = self.out_bytes(&name(&st.fwd_kind))?;
-            xfer_fwd.push(vec![nvlink.transfer_time(bytes); chunks]);
+            xfer_fwd.push(vec![nvlink.transfer_time(bytes); m_count]);
         }
         let xfer_bwd = xfer_fwd.clone();
 
         // Host re-build round trip, charged before every graph-consuming
         // stage: node-ids down over PCIe, host re-build, graph tensors up
         // — except where the prep mode takes it off the critical path.
-        let mut rebuild_s = vec![vec![0.0; chunks]; n_stages];
+        let mut rebuild_s = vec![vec![0.0; m_count]; n_stages];
         let mut rebuild_total = 0.0;
         let mut prep_hidden = 0.0;
         if rebuild && prep != PrepMode::Cached {
@@ -266,7 +386,7 @@ impl<'m> Scenarios<'m> {
                 if !st.needs_graph() {
                     continue;
                 }
-                for m in 0..chunks {
+                for m in 0..m_count {
                     rebuild_s[stage][m] = round_trip;
                     rebuild_total += round_trip;
                     if prep == PrepMode::Overlap {
@@ -293,6 +413,8 @@ impl<'m> Scenarios<'m> {
             rebuild_s: rebuild_total,
             xfer_s: xfer_total,
             prep_hidden_s: prep_hidden,
+            replicas: 1,
+            allreduce_s: 0.0,
         })
     }
 }
@@ -397,6 +519,59 @@ mod tests {
             .dgx_pipeline_epoch("pubmed", "ell", 4, true, 0.02, &FillDrain)
             .unwrap();
         assert_eq!(legacy.epoch_s, paper.epoch_s);
+    }
+
+    /// `pipeline_epoch_prep` on the paper's GAT at fixed test inputs.
+    fn gat4_pipe(s: &Scenarios, chunks: usize, prep: PrepMode) -> SimEpoch {
+        let spec = PipelineSpec::gat4();
+        s.pipeline_epoch_prep(&spec, "pubmed", "ell", chunks, true, 0.02, &FillDrain, prep)
+            .unwrap()
+    }
+
+    /// `hybrid_epoch` on the paper's GAT at the same fixed test inputs.
+    fn gat4_hybrid(s: &Scenarios, r: usize, chunks: usize, prep: PrepMode) -> SimEpoch {
+        let spec = PipelineSpec::gat4();
+        s.hybrid_epoch(&spec, "pubmed", "ell", r, chunks, true, 0.02, &FillDrain, prep)
+            .unwrap()
+    }
+
+    #[test]
+    fn hybrid_r1_is_exactly_the_pipeline_projection() {
+        let Some(m) = manifest() else { return };
+        let s = scenarios(&m);
+        for chunks in [2usize, 4] {
+            for prep in [PrepMode::Paper, PrepMode::Cached, PrepMode::Overlap] {
+                let pipe = gat4_pipe(&s, chunks, prep);
+                let hybrid = gat4_hybrid(&s, 1, chunks, prep);
+                assert_eq!(hybrid.epoch_s, pipe.epoch_s, "c{chunks}");
+                assert_eq!(hybrid.rebuild_s, pipe.rebuild_s, "c{chunks}");
+                assert_eq!(hybrid.replicas, 1);
+                assert_eq!(hybrid.allreduce_s, 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn hybrid_prices_parallel_replicas_plus_allreduce() {
+        let Some(m) = manifest() else { return };
+        let s = scenarios(&m);
+        // R=2 × c2 covers the same 4-way partition as pipe-only c4, but
+        // each replica drains only 2 micro-batches (in parallel with the
+        // other), so the hybrid epoch beats pipe-only despite paying the
+        // gradient reduction.
+        let pipe4 = gat4_pipe(&s, 4, PrepMode::Paper);
+        let hybrid = gat4_hybrid(&s, 2, 2, PrepMode::Paper);
+        assert_eq!(hybrid.replicas, 2);
+        assert!(hybrid.allreduce_s > 0.0, "reduction must be priced");
+        assert!(
+            hybrid.epoch_s < pipe4.epoch_s,
+            "hybrid {} vs pipe-only {}",
+            hybrid.epoch_s,
+            pipe4.epoch_s
+        );
+        // Deeper trees pay more reduction rounds: R=4 has 2 rounds.
+        let hybrid4 = gat4_hybrid(&s, 4, 1, PrepMode::Paper);
+        assert!(hybrid4.allreduce_s > hybrid.allreduce_s);
     }
 
     #[test]

@@ -1,0 +1,189 @@
+//! Hybrid data×pipe parallelism invariants (`--replicas R`).
+//!
+//! Host-side tests (always run, no artifacts needed) pin the
+//! deterministic tree all-reduce: fixed association, bit-reproducible
+//! across repeats, sums matching a serial fold within float tolerance.
+//!
+//! End-to-end tests (skipped gracefully when `make artifacts` has not
+//! run) assert the three load-bearing properties of the replica layer:
+//!
+//! 1. `replicas = 1` takes the exact single-pipeline code path — its
+//!    training trajectory is bitwise identical to a trainer that never
+//!    touches the replicas field, and it performs no reduction at all;
+//! 2. `replicas = 2` on the same total data (one fixed R×chunks
+//!    partition) converges to a loss within tolerance of `replicas = 1`
+//!    — the forwards are identical micro-batch for micro-batch, only
+//!    the gradient summation association differs;
+//! 3. repeated runs at any fixed R are bit-identical (the deterministic
+//!    all-reduce guarantee).
+
+use gnn_pipe::config::Config;
+use gnn_pipe::data::generate;
+use gnn_pipe::optim::allreduce::{tree_allreduce, tree_rounds};
+use gnn_pipe::pipeline::{PipelineResult, PipelineTrainer};
+use gnn_pipe::runtime::{Engine, HostTensor};
+
+// --- host-side: the deterministic reduction ----------------------------
+
+/// Deterministic pseudo-random gradient parts: replica `i` of `r`, a
+/// few GAT-shaped tensors, values derived from (salt, i, j) only.
+fn synth_parts(r: usize, salt: u32) -> Vec<Vec<HostTensor>> {
+    let shapes: &[&[usize]] = &[&[12, 8], &[8], &[1, 8], &[8, 3]];
+    (0..r)
+        .map(|i| {
+            shapes
+                .iter()
+                .map(|shape| {
+                    let n: usize = shape.iter().product();
+                    let vals: Vec<f32> = (0..n)
+                        .map(|j| {
+                            let mut x = (salt as u64)
+                                .wrapping_mul(0x9E3779B97F4A7C15)
+                                .wrapping_add((i * 1_000_003 + j) as u64);
+                            x ^= x >> 33;
+                            x = x.wrapping_mul(0xFF51AFD7ED558CCD);
+                            ((x % 20011) as f32 - 10005.0) * 1e-4
+                        })
+                        .collect();
+                    HostTensor::f32(shape.to_vec(), vals)
+                })
+                .collect()
+        })
+        .collect()
+}
+
+#[test]
+fn allreduce_is_bit_reproducible_and_matches_serial_sum() {
+    for r in [2usize, 3, 4] {
+        let a = tree_allreduce(synth_parts(r, 7)).unwrap();
+        let b = tree_allreduce(synth_parts(r, 7)).unwrap();
+        assert_eq!(a, b, "R={r}: repeated reductions must be bitwise equal");
+
+        // Against a serial f64 fold (a different association): equal
+        // within float tolerance, which is all associativity allows.
+        let parts = synth_parts(r, 7);
+        for (t, reduced) in a.iter().enumerate() {
+            let got = reduced.as_f32().unwrap();
+            for (j, &g) in got.iter().enumerate() {
+                let want: f64 = parts.iter().map(|p| p[t].as_f32().unwrap()[j] as f64).sum();
+                assert!(
+                    (g as f64 - want).abs() < 1e-4,
+                    "R={r} tensor {t} elem {j}: {g} vs {want}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn allreduce_round_count_is_logarithmic() {
+    assert_eq!(tree_rounds(1), 0);
+    assert_eq!(tree_rounds(2), 1);
+    assert_eq!(tree_rounds(4), 2);
+    assert_eq!(tree_rounds(6), 3);
+}
+
+// --- end-to-end through compiled artifacts -----------------------------
+
+/// Engine over real artifacts, or None when `make artifacts` hasn't run
+/// (the host-side tests above still cover the reduction itself).
+fn engine() -> Option<(Config, Engine)> {
+    let cfg = Config::load().ok()?;
+    if !cfg.artifacts_dir().join("manifest.json").exists() {
+        eprintln!("skipping: artifacts missing (run `make artifacts`)");
+        return None;
+    }
+    let eng = Engine::from_artifacts_dir(&cfg.artifacts_dir()).ok()?;
+    Some((cfg, eng))
+}
+
+fn assert_bitwise_equal(a: &PipelineResult, b: &PipelineResult, what: &str) {
+    assert_eq!(
+        a.train_loss.values, b.train_loss.values,
+        "{what}: loss curves must be bitwise equal"
+    );
+    assert_eq!(a.params, b.params, "{what}: final params must be bitwise equal");
+    assert_eq!(a.pipeline_eval.val_acc, b.pipeline_eval.val_acc, "{what}: pipeline eval");
+    assert_eq!(a.full_eval.test_acc, b.full_eval.test_acc, "{what}: full eval");
+}
+
+#[test]
+fn replicas_1_takes_the_single_pipeline_path_bitwise() {
+    let Some((cfg, eng)) = engine() else { return };
+    let ds = generate(cfg.dataset("pubmed").unwrap()).unwrap();
+    let epochs = 3;
+
+    // The pre-replica construction: the replicas field is never touched.
+    let mut baseline = PipelineTrainer::new(&eng, &ds, "ell", 2);
+    baseline.seed = 5;
+    let baseline = baseline.train(&cfg.model, epochs).unwrap();
+
+    // Explicit --replicas 1 must be the same code path: identical
+    // trajectory, and no reduction ever runs.
+    let mut explicit = PipelineTrainer::new(&eng, &ds, "ell", 2);
+    explicit.seed = 5;
+    explicit.replicas = 1;
+    let explicit = explicit.train(&cfg.model, epochs).unwrap();
+
+    assert_bitwise_equal(&baseline, &explicit, "replicas=1");
+    assert_eq!(explicit.timing.allreduce_s, 0.0, "replicas=1 must not reduce");
+    assert_eq!(baseline.timing.allreduce_s, 0.0);
+}
+
+#[test]
+fn replicas_2_converges_within_tolerance_of_replicas_1_on_same_total_data() {
+    let Some((cfg, eng)) = engine() else { return };
+    let ds = generate(cfg.dataset("pubmed").unwrap()).unwrap();
+    let epochs = 6;
+
+    // Same total data: both configurations train the identical 4-way
+    // sequential partition (R*chunks = 4), with identical per-micro-
+    // batch dropout keys — only the gradient summation association
+    // differs (FIFO fold vs two FIFO folds + one tree round).
+    let run = |replicas: usize, chunks: usize| {
+        let mut t = PipelineTrainer::new(&eng, &ds, "ell", chunks);
+        t.replicas = replicas;
+        t.seed = 11;
+        t.train(&cfg.model, epochs).unwrap()
+    };
+    let r1 = run(1, 4);
+    let r2 = run(2, 2);
+
+    assert_eq!(
+        r1.retention.retained_fraction, r2.retention.retained_fraction,
+        "same plan, same retention"
+    );
+    let a = r1.train_loss.values.last().copied().unwrap();
+    let b = r2.train_loss.values.last().copied().unwrap();
+    assert!(
+        (a - b).abs() <= 0.05 * a.abs().max(0.1),
+        "final losses must agree within tolerance: R=1 {a} vs R=2 {b}"
+    );
+    // Both must actually optimise.
+    for r in [&r1, &r2] {
+        let first = r.train_loss.values.first().copied().unwrap();
+        let last = r.train_loss.values.last().copied().unwrap();
+        assert!(last < first, "loss {first} -> {last}");
+    }
+    // The hybrid run pays (and reports) the reduction; R=1 does not.
+    assert!(r2.timing.allreduce_s > 0.0, "R=2 must time the all-reduce");
+    assert_eq!(r1.timing.allreduce_s, 0.0);
+}
+
+#[test]
+fn fixed_replica_runs_are_bit_identical() {
+    let Some((cfg, eng)) = engine() else { return };
+    let ds = generate(cfg.dataset("pubmed").unwrap()).unwrap();
+    // (R, chunks/replica) → c{R*chunks} artifacts: c4, c2, c3.
+    for (replicas, chunks) in [(2usize, 2usize), (2, 1), (3, 1)] {
+        let run = || {
+            let mut t = PipelineTrainer::new(&eng, &ds, "ell", chunks);
+            t.replicas = replicas;
+            t.seed = 3;
+            t.train(&cfg.model, 2).unwrap()
+        };
+        let a = run();
+        let b = run();
+        assert_bitwise_equal(&a, &b, &format!("R={replicas} c={chunks}"));
+    }
+}
