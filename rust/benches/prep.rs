@@ -17,11 +17,32 @@ use bench_util::{bench, quick_mode, scaled, write_snapshot};
 use gnn_pipe::batching::{Chunker, SequentialChunker};
 use gnn_pipe::config::Config;
 use gnn_pipe::data::generate;
-use gnn_pipe::graph::{induce_subgraph, CooGraph, EllGraph};
+use gnn_pipe::graph::{induce_subgraph, CooGraph, EllGraph, Graph};
 use gnn_pipe::pipeline::{
-    prepare_microbatches, prepare_microbatches_parallel, MicrobatchCache,
-    MicrobatchPool,
+    lossy_union_from_induced, prepare_microbatches,
+    prepare_microbatches_parallel, MicrobatchCache, MicrobatchPool,
 };
+
+/// The pre-PR-4 induction: materialise a `(u32, u32)` edge list, then
+/// pay `Graph::from_undirected_edges`'s per-row sort + duplicate
+/// re-validation. Kept here as the baseline the CSR-native fast path
+/// (`induce_subgraph` emitting rows directly) is measured against.
+fn induce_via_edge_list(g: &Graph, nodes: &[u32]) -> Graph {
+    let mut remap = vec![u32::MAX; g.num_nodes()];
+    for (new, &old) in nodes.iter().enumerate() {
+        remap[old as usize] = new as u32;
+    }
+    let mut edges = Vec::new();
+    for (new_a, &old_a) in nodes.iter().enumerate() {
+        for &old_b in g.neighbors(old_a as usize) {
+            let new_b = remap[old_b as usize];
+            if new_b != u32::MAX && (new_a as u32) < new_b {
+                edges.push((new_a as u32, new_b));
+            }
+        }
+    }
+    Graph::from_undirected_edges(nodes.len(), &edges).unwrap()
+}
 
 fn main() {
     let quick = quick_mode();
@@ -43,8 +64,24 @@ fn main() {
     );
 
     let mut samples = Vec::new();
-    samples.push(bench("induce_subgraph (1 chunk of 4)", iters(100), || {
+    samples.push(bench("induce_subgraph CSR-native (1 chunk of 4)", iters(100), || {
         let _ = induce_subgraph(g, &plan.chunks[0]);
+    }));
+    samples.push(bench("induce via edge list + revalidate (old)", iters(100), || {
+        let _ = induce_via_edge_list(g, &plan.chunks[0]);
+    }));
+    let induced = plan.induce_all(g);
+    samples.push(bench("lossy_union CSR merge (4 chunks)", iters(100), || {
+        let _ = lossy_union_from_induced(g.num_nodes(), &induced);
+    }));
+    samples.push(bench("lossy_union via edge list (old)", iters(100), || {
+        let mut edges = Vec::new();
+        for sub in &induced {
+            for (a, b) in sub.graph.edges() {
+                edges.push((sub.nodes[a as usize], sub.nodes[b as usize]));
+            }
+        }
+        let _ = Graph::from_undirected_edges(g.num_nodes(), &edges).unwrap();
     }));
     samples.push(bench("EllGraph::from_graph (chunk sub-graph)", iters(100), || {
         let _ = EllGraph::from_graph(&sub.graph, profile.ell_k).unwrap();

@@ -1,0 +1,193 @@
+//! Replica-concurrency micro-benchmarks: the host-side cost/benefit of
+//! PR-4's thread-per-replica execution and sharded gradient tree.
+//!
+//! Three sections, degrading gracefully by environment:
+//!
+//! 1. **allreduce**: serial `tree_allreduce` vs `tree_allreduce_sharded`
+//!    at R ∈ {2, 4, 8} × P ∈ {2, 4} on pubmed-GAT-shaped gradients
+//!    (host-side, always runs);
+//! 2. **synthetic replicas**: four identical CPU-bound replica
+//!    stand-ins through `util::par::run_indexed` at T=1 vs T=cores —
+//!    the pure concurrency primitive, isolated from XLA (host-side,
+//!    always runs; its seq/conc ratio is the `synthetic_speedup_x`
+//!    snapshot field);
+//! 3. **real pipeline epochs**: `ReplicaGroup::run_epoch` at R=4 over a
+//!    4-way pubmed partition, sequential (`threads=1`) vs concurrent
+//!    (`threads=auto`) — the PR's headline wall-clock number (skipped
+//!    when `make artifacts` has not run, e.g. in CI).
+//!
+//! Mean ± stddev per iteration, dumped to `BENCH_replica.json` at the
+//! repo root. Run: `cargo bench --bench replica` (CI's
+//! `bench-trajectory` job runs `-- --quick`).
+
+mod bench_util;
+
+use std::sync::Arc;
+
+use bench_util::{bench, quick_mode, scaled, write_snapshot};
+
+use gnn_pipe::batching::{Chunker, SequentialChunker};
+use gnn_pipe::config::Config;
+use gnn_pipe::data::generate;
+use gnn_pipe::optim::allreduce::{tree_allreduce, tree_allreduce_sharded};
+use gnn_pipe::pipeline::{
+    prepare_microbatches, FillDrain, PipelineEngine, PipelineSpec, ReplicaGroup,
+};
+use gnn_pipe::runtime::{Engine, HostTensor};
+use gnn_pipe::train::{flatten_params, init_params};
+use gnn_pipe::util::par::{available_threads, run_indexed};
+
+/// The pubmed GAT's flat gradient layout (see benches/allreduce.rs).
+fn gat_shapes() -> Vec<Vec<usize>> {
+    vec![
+        vec![500, 64],
+        vec![1, 64],
+        vec![1, 64],
+        vec![64],
+        vec![64, 24],
+        vec![1, 24],
+        vec![1, 24],
+        vec![24],
+    ]
+}
+
+fn grad_parts(replicas: usize) -> Vec<Vec<HostTensor>> {
+    (0..replicas)
+        .map(|i| {
+            gat_shapes()
+                .into_iter()
+                .map(|shape| {
+                    let n: usize = shape.iter().product();
+                    let vals: Vec<f32> = (0..n)
+                        .map(|j| ((i * 7919 + j * 104_729) % 1999) as f32 * 1e-4 - 0.1)
+                        .collect();
+                    HostTensor::f32(shape, vals)
+                })
+                .collect()
+        })
+        .collect()
+}
+
+/// CPU-bound replica epoch stand-in (~a few MFLOP of dependent math),
+/// independent of XLA so the concurrency primitive is measured alone.
+fn synthetic_replica_work(replica: usize) -> f32 {
+    let mut acc = replica as f32 + 1.0;
+    for i in 0..2_000_000u32 {
+        acc = acc.mul_add(1.000_000_1, (i & 1023) as f32 * 1e-9);
+    }
+    acc
+}
+
+fn main() {
+    let quick = quick_mode();
+    let iters = |n: usize| scaled(quick, n);
+    let cores = available_threads();
+    let cfg = Config::load().expect("configs");
+    println!(
+        "== replica microbench (thread-per-replica + sharded allreduce, {cores} cores{}) ==",
+        if quick { ", quick" } else { "" }
+    );
+
+    let mut samples = Vec::new();
+
+    // 1. Serial vs sharded gradient tree.
+    for r in [2usize, 4, 8] {
+        let template = grad_parts(r);
+        samples.push(bench(&format!("tree_allreduce serial (R={r})"), iters(200), || {
+            let _ = tree_allreduce(template.clone()).unwrap();
+        }));
+        for shards in [2usize, 4] {
+            samples.push(bench(
+                &format!("tree_allreduce sharded (R={r}, P={shards})"),
+                iters(200),
+                || {
+                    let _ = tree_allreduce_sharded(template.clone(), shards).unwrap();
+                },
+            ));
+        }
+    }
+
+    // 2. The concurrency primitive on synthetic replica work.
+    let conc_t = cores.min(4);
+    let seq = bench("synthetic replicas (R=4) sequential T=1", iters(30), || {
+        std::hint::black_box(run_indexed(4, 1, |i| {
+            std::hint::black_box(synthetic_replica_work(i))
+        }));
+    });
+    let conc = bench(
+        &format!("synthetic replicas (R=4) concurrent T={conc_t}"),
+        iters(30),
+        || {
+            std::hint::black_box(run_indexed(4, conc_t, |i| {
+                std::hint::black_box(synthetic_replica_work(i))
+            }));
+        },
+    );
+    let synthetic_speedup = seq.mean_s / conc.mean_s.max(1e-12);
+    println!("synthetic host-concurrency speedup: {synthetic_speedup:.2}x (T={conc_t})");
+    samples.push(seq);
+    samples.push(conc);
+
+    // 3. Real pipeline epochs, when compiled artifacts exist.
+    let mut pipeline_speedup = None;
+    if cfg.artifacts_dir().join("manifest.json").exists() {
+        let engine = Engine::from_artifacts_dir(&cfg.artifacts_dir()).expect("engine");
+        let profile = cfg.dataset("pubmed").unwrap().clone();
+        let ds = generate(&profile).unwrap();
+        let replicas = 4usize;
+        let plan = SequentialChunker.plan(&ds.graph, replicas);
+        let train_mask = ds.splits.train_mask(profile.nodes);
+        let mbs = prepare_microbatches(&ds, &plan, "ell", &train_mask).unwrap();
+        let pipe = PipelineEngine::new(
+            &engine,
+            "pubmed",
+            "ell",
+            replicas,
+            PipelineSpec::gat4(),
+            Arc::new(FillDrain),
+        )
+        .expect("pipeline engine");
+        engine.warm_up(&pipe.artifact_names).expect("warm-up");
+        let params_map = init_params(&profile, &cfg.model, 0);
+        let params =
+            flatten_params(&params_map, &engine.manifest.param_order).unwrap();
+
+        let seq_group = ReplicaGroup::new(&pipe, replicas, 1).unwrap();
+        let conc_group = ReplicaGroup::new(&pipe, replicas, 0).unwrap();
+        let seq = bench("pipeline epoch (R=4, threads=1)", iters(20), || {
+            let _ = seq_group.run_epoch(&params, &mbs, (0, 1)).unwrap();
+        });
+        let conc = bench(
+            &format!("pipeline epoch (R=4, threads={})", conc_group.threads),
+            iters(20),
+            || {
+                let _ = conc_group.run_epoch(&params, &mbs, (0, 1)).unwrap();
+            },
+        );
+        let speedup = seq.mean_s / conc.mean_s.max(1e-12);
+        println!(
+            "pipeline host-concurrency speedup: {speedup:.2}x (T={})",
+            conc_group.threads
+        );
+        pipeline_speedup = Some(speedup);
+        samples.push(seq);
+        samples.push(conc);
+    } else {
+        println!("skipping real pipeline epochs: artifacts missing (run `make artifacts`)");
+    }
+
+    // Snapshot for the perf trajectory: BENCH_replica.json at the root.
+    let extras = [
+        ("quick", quick.to_string()),
+        ("cores", cores.to_string()),
+        ("synthetic_threads", conc_t.to_string()),
+        ("synthetic_speedup_x", format!("{synthetic_speedup:.4}")),
+        (
+            "pipeline_speedup_x",
+            pipeline_speedup
+                .map(|s| format!("{s:.4}"))
+                .unwrap_or_else(|| "null".to_string()),
+        ),
+    ];
+    write_snapshot(&cfg.root.join("BENCH_replica.json"), "replica", &extras, &samples);
+}

@@ -61,6 +61,11 @@ pub struct BenchCtx {
     /// bench sweeps R explicitly regardless). 1 = the paper's single
     /// pipeline, which every paper table/figure reproduces.
     pub replicas: usize,
+    /// Default host worker-thread count for replica execution
+    /// (`bench --replica-threads`; 0 = auto, 1 = sequential). The
+    /// `hybrid` bench compares sequential vs concurrent explicitly
+    /// regardless.
+    pub replica_threads: usize,
     pub results_dir: PathBuf,
     /// Shared micro-batch cache: Cached-mode runs across the session
     /// reuse one prepared set per (plan, backend, train-mask) key.
@@ -88,6 +93,7 @@ impl BenchCtx {
         std::fs::create_dir_all(&results_dir)?;
         let prep = PrepMode::parse(&cfg.pipeline.prep)?;
         let replicas = cfg.pipeline.replicas;
+        let replica_threads = cfg.pipeline.replica_threads;
         Ok(BenchCtx {
             cfg,
             engine,
@@ -95,6 +101,7 @@ impl BenchCtx {
             schedule,
             prep,
             replicas,
+            replica_threads,
             results_dir,
             prep_cache: Arc::new(MicrobatchCache::new()),
             datasets: Mutex::new(BTreeMap::new()),
@@ -165,13 +172,24 @@ impl BenchCtx {
         // graph is baked into the model, so a session-wide `--replicas R`
         // must not propagate into them (the trainer would reject it).
         let replicas = if star { 1 } else { self.replicas };
-        self.pipeline_run_replicas(backend, chunks, star, graph_aware, prep, replicas)
+        self.pipeline_run_replicas(
+            backend,
+            chunks,
+            star,
+            graph_aware,
+            prep,
+            replicas,
+            self.replica_threads,
+        )
     }
 
     /// [`BenchCtx::pipeline_run_prep`] with an explicit replica count
-    /// (the `hybrid` bench sweeps R over one fixed total partition).
-    /// `chunks` is per replica; the trainer partitions the node set
-    /// `replicas * chunks` ways.
+    /// and host worker-thread count (the `hybrid` bench sweeps R over
+    /// one fixed total partition and prints sequential vs concurrent
+    /// columns). `chunks` is per replica; the trainer partitions the
+    /// node set `replicas * chunks` ways. `replica_threads`: 0 = auto,
+    /// 1 = sequential.
+    #[allow(clippy::too_many_arguments)]
     pub fn pipeline_run_replicas(
         &self,
         backend: &str,
@@ -180,9 +198,10 @@ impl BenchCtx {
         graph_aware: bool,
         prep: PrepMode,
         replicas: usize,
+        replica_threads: usize,
     ) -> Result<PipelineRun> {
         let key = format!(
-            "{backend}/c{chunks}/r{replicas}/star={star}/aware={graph_aware}/{}/{}/{}",
+            "{backend}/c{chunks}/r{replicas}/t{replica_threads}/star={star}/aware={graph_aware}/{}/{}/{}",
             self.schedule.name(),
             prep.name(),
             self.epochs
@@ -192,7 +211,7 @@ impl BenchCtx {
         }
         let ds_name = self.cfg.pipeline.pipeline_dataset.clone();
         eprintln!(
-            "[bench] pipeline {ds_name}/{backend} chunks={chunks}{} replicas={replicas} schedule={} prep={} for {} epochs...",
+            "[bench] pipeline {ds_name}/{backend} chunks={chunks}{} replicas={replicas} threads={replica_threads} schedule={} prep={} for {} epochs...",
             if star { "*" } else { "" },
             self.schedule.name(),
             prep.name(),
@@ -204,6 +223,7 @@ impl BenchCtx {
         trainer.prep = prep;
         trainer.prep_cache = self.prep_cache.clone();
         trainer.replicas = replicas;
+        trainer.replica_threads = replica_threads;
         if star {
             trainer = trainer.full_graph_variant();
         }

@@ -112,6 +112,11 @@ pub struct PipelineConfig {
     /// `--replicas`. 1 = the paper's single pipeline (faithful
     /// reproduction).
     pub replicas: usize,
+    /// Default host worker-thread count for concurrent replica
+    /// execution; overridable per run with `--replica-threads`.
+    /// 0 = auto (`min(replicas, cores)`); 1 = the sequential replica
+    /// loop. Results are bit-identical at any value.
+    pub replica_threads: usize,
 }
 
 #[derive(Debug, Clone)]
@@ -212,6 +217,10 @@ impl Config {
                 .unwrap_or("paper")
                 .to_string(),
             replicas: p.get("replicas").and_then(Json::as_usize).unwrap_or(1),
+            replica_threads: p
+                .get("replica_threads")
+                .and_then(Json::as_usize)
+                .unwrap_or(0),
         };
 
         Ok(Config { root: root.to_path_buf(), datasets, model, pipeline })
@@ -248,6 +257,8 @@ mod tests {
         assert!(["paper", "cached", "overlap"]
             .contains(&c.pipeline.prep.as_str()));
         assert!(c.pipeline.replicas >= 1);
+        // 0 = auto-resolve to min(replicas, cores) at group creation.
+        assert_eq!(c.pipeline.replica_threads, 0);
     }
 
     #[test]

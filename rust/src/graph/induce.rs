@@ -23,20 +23,23 @@ pub struct InducedSubgraph {
 
 /// Induce the sub-graph over `nodes` (original ids, unique).
 ///
-/// O(|chunk| + sum of chunk degrees): one pass building an old->new map,
-/// one pass over chunk adjacency rows.
+/// O(|chunk| + sum of chunk degrees): one pass building an old->new
+/// map, two passes over chunk adjacency rows emitting the induced CSR
+/// directly (see [`InduceScratch::induce`]) — no intermediate edge
+/// list, no per-row sort.
 pub fn induce_subgraph(g: &Graph, nodes: &[u32]) -> InducedSubgraph {
     InduceScratch::new().induce(g, nodes)
 }
 
 /// Reusable induction scratch: keeps the O(|V|) old→new remap table and
-/// the edge buffer alive across calls, so per-epoch sub-graph rebuilds
-/// (the paper's §7.2 hot path, driven by `pipeline::MicrobatchPool`)
-/// stop re-allocating and re-zeroing them every chunk.
+/// the CSR cursor buffer alive across calls, so per-epoch sub-graph
+/// rebuilds (the paper's §7.2 hot path, driven by
+/// `pipeline::MicrobatchPool`) stop re-allocating and re-zeroing them
+/// every chunk.
 #[derive(Debug, Default)]
 pub struct InduceScratch {
     remap: Vec<u32>,
-    edges: Vec<(u32, u32)>,
+    cursor: Vec<usize>,
 }
 
 impl InduceScratch {
@@ -47,7 +50,24 @@ impl InduceScratch {
     /// Same result as [`induce_subgraph`], reusing this scratch's
     /// buffers. The remap table is restored to all-`u32::MAX` on exit by
     /// resetting only the touched entries (O(|chunk|), not O(|V|)).
+    ///
+    /// Emits the induced CSR directly — no intermediate edge list, no
+    /// per-row sort, no duplicate re-validation (the old path paid all
+    /// three through `Graph::from_undirected_edges` on every chunk,
+    /// every epoch). Two passes over the chunk's adjacency rows:
+    ///
+    /// 1. **counting** — per new node, how many neighbours survive the
+    ///    chunk boundary (plus the cut-edge tally), prefix-summed into
+    ///    `indptr`;
+    /// 2. **placement** — destination-major: for each new id `b` in
+    ///    ascending order, append `b` to the row of every kept
+    ///    neighbour. The outer loop ascends, so every row comes out
+    ///    sorted without a sort — exactly the invariant
+    ///    [`Graph::from_sorted_csr`] trusts. (Source-major emission
+    ///    would not: the remap follows chunk order, which preserves no
+    ///    global order.)
     pub fn induce(&mut self, g: &Graph, nodes: &[u32]) -> InducedSubgraph {
+        let k = nodes.len();
         if self.remap.len() != g.num_nodes() {
             self.remap.clear();
             self.remap.resize(g.num_nodes(), u32::MAX);
@@ -57,31 +77,50 @@ impl InduceScratch {
             debug_assert!(remap[old as usize] == u32::MAX, "duplicate node in chunk");
             remap[old as usize] = new as u32;
         }
-        self.edges.clear();
+
+        // Pass 1: kept-degree per new node -> indptr, plus cut count.
+        let mut indptr = vec![0usize; k + 1];
         let mut cut = 0usize;
         for (new_a, &old_a) in nodes.iter().enumerate() {
             for &old_b in g.neighbors(old_a as usize) {
-                let new_b = remap[old_b as usize];
-                if new_b == u32::MAX {
+                if remap[old_b as usize] == u32::MAX {
                     cut += 1; // counted once per direction from inside
-                } else if (new_a as u32) < new_b {
-                    self.edges.push((new_a as u32, new_b));
+                } else {
+                    indptr[new_a + 1] += 1;
                 }
             }
         }
+        for i in 0..k {
+            indptr[i + 1] += indptr[i];
+        }
+
+        // Pass 2: destination-major placement into sorted rows.
+        self.cursor.clear();
+        self.cursor.extend_from_slice(&indptr[..k]);
+        let cursor = &mut self.cursor;
+        let mut indices = vec![0u32; indptr[k]];
+        for (new_b, &old_b) in nodes.iter().enumerate() {
+            for &old_a in g.neighbors(old_b as usize) {
+                let new_a = remap[old_a as usize];
+                if new_a != u32::MAX {
+                    indices[cursor[new_a as usize]] = new_b as u32;
+                    cursor[new_a as usize] += 1;
+                }
+            }
+        }
+
         // Restore the invariant for the next call.
         for &old in nodes {
             remap[old as usize] = u32::MAX;
         }
-        let graph = Graph::from_undirected_edges(nodes.len(), &self.edges)
-            .expect("induced edges are valid by construction");
+        let kept_edges = indices.len() / 2;
         InducedSubgraph {
             nodes: nodes.to_vec(),
-            kept_edges: self.edges.len(),
+            kept_edges,
             // Each cut undirected edge was seen once (from its inside endpoint)
             // unless both endpoints are inside (then it isn't cut at all).
             cut_edges: cut,
-            graph,
+            graph: Graph::from_sorted_csr(k, indptr, indices),
         }
     }
 }
@@ -135,6 +174,41 @@ mod tests {
         let s = induce_subgraph(&g, &[0, 3]);
         assert_eq!(s.kept_edges, 0);
         assert_eq!(s.cut_edges, 4);
+    }
+
+    /// The CSR-native fast path must be bitwise-equal to inducing via
+    /// an explicit edge list through the validating constructor (the
+    /// pre-fast-path implementation), including row order.
+    #[test]
+    fn csr_native_matches_validating_edge_list_path() {
+        let g = cycle(9);
+        let chunks: &[&[u32]] = &[
+            &[0, 1, 2, 3],
+            &[8, 4, 6],     // remap order != id order: rows must still sort
+            &[5, 7],
+            &[3, 1, 8, 0, 6],
+            &[2],
+        ];
+        for chunk in chunks {
+            let fast = induce_subgraph(&g, chunk);
+            // Old path: collect (a < b) edges, validate + sort per row.
+            let mut remap = vec![u32::MAX; g.num_nodes()];
+            for (new, &old) in chunk.iter().enumerate() {
+                remap[old as usize] = new as u32;
+            }
+            let mut edges = Vec::new();
+            for (new_a, &old_a) in chunk.iter().enumerate() {
+                for &old_b in g.neighbors(old_a as usize) {
+                    let new_b = remap[old_b as usize];
+                    if new_b != u32::MAX && (new_a as u32) < new_b {
+                        edges.push((new_a as u32, new_b));
+                    }
+                }
+            }
+            let slow = Graph::from_undirected_edges(chunk.len(), &edges).unwrap();
+            assert_eq!(fast.graph, slow, "chunk {chunk:?}");
+            assert_eq!(fast.kept_edges, edges.len());
+        }
     }
 
     #[test]

@@ -60,6 +60,36 @@ impl Graph {
         Ok(Graph { n, indptr, indices })
     }
 
+    /// Build directly from CSR arrays the caller guarantees are valid:
+    /// `indptr` of length `n + 1` starting at 0 and ending at
+    /// `indices.len()`, rows sorted ascending, no self-loops, no
+    /// duplicates, every undirected edge present in both rows. This is
+    /// the trusted fast path for producers that emit rows in sorted
+    /// order by construction (the CSR-native sub-graph induction and the
+    /// lossy-union merge); everything else goes through the validating
+    /// [`Graph::from_undirected_edges`]. Invariants are checked in debug
+    /// builds only.
+    pub fn from_sorted_csr(n: usize, indptr: Vec<usize>, indices: Vec<u32>) -> Graph {
+        debug_assert_eq!(indptr.len(), n + 1);
+        debug_assert_eq!(indptr.first().copied(), Some(0));
+        debug_assert_eq!(indptr.last().copied(), Some(indices.len()));
+        debug_assert_eq!(indices.len() % 2, 0, "directed halves must pair up");
+        #[cfg(debug_assertions)]
+        for v in 0..n {
+            debug_assert!(indptr[v] <= indptr[v + 1], "indptr must be monotone");
+            let row = &indices[indptr[v]..indptr[v + 1]];
+            for (s, &w) in row.iter().enumerate() {
+                debug_assert!((w as usize) < n, "neighbour {w} out of range");
+                debug_assert!(w as usize != v, "self-loop {v}");
+                debug_assert!(
+                    s == 0 || row[s - 1] < w,
+                    "row {v} not sorted-unique at slot {s}"
+                );
+            }
+        }
+        Graph { n, indptr, indices }
+    }
+
     pub fn num_nodes(&self) -> usize {
         self.n
     }
@@ -154,5 +184,18 @@ mod tests {
         let g = Graph::from_undirected_edges(4, &[]).unwrap();
         assert_eq!(g.num_edges(), 0);
         assert_eq!(g.max_degree(), 0);
+    }
+
+    #[test]
+    fn from_sorted_csr_equals_validating_constructor() {
+        let edges = vec![(0u32, 3u32), (1, 2), (2, 3), (0, 1)];
+        let via_edges = Graph::from_undirected_edges(4, &edges).unwrap();
+        // Same graph, CSR arrays written by hand in sorted row order.
+        let indptr = vec![0usize, 2, 4, 6, 8];
+        let indices = vec![1u32, 3, 0, 2, 1, 3, 0, 2];
+        let via_csr = Graph::from_sorted_csr(4, indptr, indices);
+        assert_eq!(via_edges, via_csr);
+        assert_eq!(via_csr.num_edges(), 4);
+        assert!(via_csr.has_edge(0, 3) && !via_csr.has_edge(1, 3));
     }
 }

@@ -4,7 +4,7 @@
 //!   data      [--dataset cora|citeseer|pubmed]       synth stats vs profile
 //!   train     --dataset D --backend B [--epochs N]   single-device training
 //!   pipeline  --backend B --chunks K [--epochs N]
-//!             [--replicas R]
+//!             [--replicas R] [--replica-threads T]
 //!             [--schedule fill-drain|1f1b]
 //!             [--prep paper|cached|overlap]
 //!             [--star] [--graph-aware]               pipeline training
@@ -12,6 +12,7 @@
 //!             ablation-chunker|edge-retention|
 //!             prep-modes|hybrid|all
 //!             [--epochs N] [--schedule S] [--prep P] [--replicas R]
+//!             [--replica-threads T]
 //!   inspect                                          artifact manifest summary
 //!
 //! Run `make artifacts` before anything that executes HLO.
@@ -35,11 +36,12 @@ USAGE:
   gnn-pipe data      [--dataset <name>]
   gnn-pipe train     --dataset <name> --backend <ell|edgewise> [--epochs N] [--seed S]
   gnn-pipe pipeline  [--backend <ell|edgewise>] [--chunks K] [--replicas R] [--epochs N]
+                     [--replica-threads T]
                      [--schedule fill-drain|1f1b] [--prep paper|cached|overlap]
                      [--star] [--graph-aware]
   gnn-pipe bench     <table1|table2|fig1|fig2|fig3|fig4|ablation-chunker|edge-retention|prep-modes|hybrid|all>
                      [--epochs N] [--schedule fill-drain|1f1b] [--prep paper|cached|overlap]
-                     [--replicas R]
+                     [--replicas R] [--replica-threads T]
   gnn-pipe inspect
 
 SCHEDULES (--schedule, default from configs/pipeline.json):
@@ -66,6 +68,19 @@ single pipeline on the exact single-pipeline code path):
                tree all-reduce with a FIXED summation order — so runs at
                any fixed R are bit-reproducible. The `bench hybrid` table
                prints pipe-only vs hybrid DGX projections side by side.
+
+REPLICA THREADS (--replica-threads, default from configs/pipeline.json;
+0 = auto: min(replicas, cores)):
+  T >= 2       thread-per-replica host execution: the R replica epochs run
+               concurrently on up to T OS threads, and the gradient tree is
+               sharded over T threads at fixed offsets. Grads, losses and
+               log-probs are BIT-IDENTICAL to the sequential loop at any T
+               (the all-reduce association is fixed per element) — only
+               wall-clock moves. Epoch timers report true wall-clock (the
+               slowest replica); the old sum-over-replicas aggregate is
+               reported as replica_cpu_s, so wall/cpu is the realised
+               host-concurrency speedup.
+  T = 1        the sequential replica loop (the pre-concurrency code path)
 ";
 
 fn main() {
@@ -180,6 +195,8 @@ fn cmd_pipeline(args: &Args) -> Result<()> {
     let epochs = args.opt_usize("epochs", cfg.model.epochs)?;
     let star = args.flag("star");
     let replicas = args.opt_usize("replicas", cfg.pipeline.replicas)?;
+    let replica_threads =
+        args.opt_usize("replica-threads", cfg.pipeline.replica_threads)?;
     let schedule = parse_schedule(args.opt_str("schedule", &cfg.pipeline.schedule))?;
     let prep = args.opt_parse("prep", PrepMode::parse(&cfg.pipeline.prep)?)?;
     let dataset = cfg.pipeline.pipeline_dataset.clone();
@@ -190,6 +207,7 @@ fn cmd_pipeline(args: &Args) -> Result<()> {
     trainer.schedule = schedule;
     trainer.prep = prep;
     trainer.replicas = replicas;
+    trainer.replica_threads = replica_threads;
     if star {
         trainer = trainer.full_graph_variant();
     }
@@ -197,8 +215,9 @@ fn cmd_pipeline(args: &Args) -> Result<()> {
         trainer.chunker = Box::new(GraphAwareChunker);
     }
     println!(
-        "pipeline training {dataset}/{backend} chunks={chunks}{} replicas={replicas} schedule={} prep={} ({} devices/replica, balance {:?}) for {epochs} epochs...",
+        "pipeline training {dataset}/{backend} chunks={chunks}{} replicas={replicas} replica-threads={} schedule={} prep={} ({} devices/replica, balance {:?}) for {epochs} epochs...",
         if star { "*" } else { "" },
+        if replica_threads == 0 { "auto".to_string() } else { replica_threads.to_string() },
         trainer.schedule.name(),
         prep.name(),
         cfg.pipeline.devices,
@@ -211,6 +230,12 @@ fn cmd_pipeline(args: &Args) -> Result<()> {
     println!("host rebuild       {:.4} s total (critical path)", res.timing.rebuild_s);
     println!("prep overlapped    {:.4} s total (hidden)", res.timing.prep_overlap_s);
     println!("allreduce (host)   {:.4} s total (deterministic tree)", res.timing.allreduce_s);
+    if replicas > 1 {
+        println!(
+            "replica cpu        {:.4} s total (sum over replicas; epoch timers are true wall-clock)",
+            res.timing.replica_cpu_s
+        );
+    }
     println!("device transfer    {:.4} s total (upload+download)", res.timing.transfer_s);
     println!(
         "final (pipeline-eval): train loss {:.4}  train acc {:.4}  val acc {:.4}",
@@ -241,9 +266,12 @@ fn cmd_bench(args: &Args) -> Result<()> {
     let schedule = parse_schedule(args.opt_str("schedule", &cfg.pipeline.schedule))?;
     let prep = args.opt_parse("prep", PrepMode::parse(&cfg.pipeline.prep)?)?;
     let replicas = args.opt_usize("replicas", cfg.pipeline.replicas)?;
+    let replica_threads =
+        args.opt_usize("replica-threads", cfg.pipeline.replica_threads)?;
     let mut ctx = bench::BenchCtx::with_schedule(epochs, schedule)?;
     ctx.prep = prep;
     ctx.replicas = replicas;
+    ctx.replica_threads = replica_threads;
     let mut outputs = Vec::new();
     let run = |name: &str, ctx: &bench::BenchCtx| -> Result<String> {
         match name {

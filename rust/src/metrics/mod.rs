@@ -34,6 +34,15 @@ pub struct RunTiming {
     /// all-reduce (`--replicas R`, R >= 2). Zero for single-replica
     /// runs — the R=1 path performs no reduction at all.
     pub allreduce_s: f64,
+    /// Aggregate per-replica pipeline-execution seconds: the SUM over
+    /// replicas of each replica's epoch wall-clock, across all epochs.
+    /// With concurrent replica execution (`--replica-threads > 1`) the
+    /// epoch timers (`per_epoch_s`, `epoch1_s`, ...) report true
+    /// wall-clock — the slowest replica per epoch — so this field keeps
+    /// the old sequential-sum aggregate: wall vs cpu is the realised
+    /// host-concurrency speedup. Equal to the summed epoch walls for
+    /// sequential runs; zero for single-device (non-pipeline) runs.
+    pub replica_cpu_s: f64,
 }
 
 impl RunTiming {

@@ -22,6 +22,16 @@
 //! prices on the modeled inter-node link: [`tree_rounds`] pairwise
 //! exchange rounds up the tree, and the same count down for the
 //! broadcast.
+//!
+//! [`tree_allreduce_sharded`] parallelises the reduction itself without
+//! touching its numerics: every gradient tensor is split at **fixed
+//! offsets** into P contiguous shards ([`shard_end`] depends only on
+//! (len, P)) and each shard runs the *same* per-element tree on its own
+//! thread. The tree association is elementwise, so the sharded result
+//! is not merely bit-reproducible for fixed (R, P) — it is bitwise
+//! identical to the unsharded reduction for every P (asserted by the
+//! association fixtures below), which is what lets the concurrent
+//! replica path share one invariant with the sequential one.
 
 use anyhow::Result;
 
@@ -48,6 +58,109 @@ pub fn tree_allreduce(mut parts: Vec<Vec<HostTensor>>) -> Result<Vec<HostTensor>
         stride *= 2;
     }
     Ok(parts.swap_remove(0))
+}
+
+/// [`tree_allreduce`] with every tensor split at fixed offsets into
+/// `shards` contiguous pieces, each piece reduced on its own OS thread
+/// through the identical per-element tree. Bitwise identical to the
+/// unsharded reduction at any `shards` (the association of each element
+/// depends only on the replica tree, never on the shard split);
+/// `shards <= 1` or a single replica takes the serial path unchanged.
+pub fn tree_allreduce_sharded(
+    mut parts: Vec<Vec<HostTensor>>,
+    shards: usize,
+) -> Result<Vec<HostTensor>> {
+    anyhow::ensure!(!parts.is_empty(), "allreduce needs at least one replica");
+    let n = parts.len();
+    if n == 1 {
+        return Ok(parts.swap_remove(0));
+    }
+    if shards <= 1 {
+        return tree_allreduce(parts);
+    }
+    // Validate arity/dtype/shape up front; the sharded loops assume them.
+    let arity = parts[0].len();
+    for p in &parts[1..] {
+        anyhow::ensure!(
+            p.len() == arity,
+            "gradient arity mismatch between replicas: {arity} vs {}",
+            p.len()
+        );
+        for (a, d) in parts[0].iter().zip(p.iter()) {
+            let (a, d) = (a.as_f32()?, d.as_f32()?);
+            anyhow::ensure!(
+                a.len() == d.len(),
+                "gradient shape mismatch between replicas: {} vs {} elements",
+                a.len(),
+                d.len()
+            );
+        }
+    }
+
+    // Views: one &mut [f32] per (replica, tensor), then carved into
+    // per-shard column strips at the fixed offsets.
+    let mut views: Vec<Vec<&mut [f32]>> = Vec::with_capacity(n);
+    for part in parts.iter_mut() {
+        let mut tensors = Vec::with_capacity(arity);
+        for t in part.iter_mut() {
+            tensors.push(t.as_f32_mut()?.as_mut_slice());
+        }
+        views.push(tensors);
+    }
+    // shard_cols[s][r][t] = shard s of replica r's tensor t.
+    let mut shard_cols: Vec<Vec<Vec<&mut [f32]>>> = (0..shards)
+        .map(|_| (0..n).map(|_| Vec::with_capacity(arity)).collect())
+        .collect();
+    for (r, tensors) in views.into_iter().enumerate() {
+        for slice in tensors {
+            let len = slice.len();
+            let mut rest = slice;
+            let mut offset = 0usize;
+            for (s, cols) in shard_cols.iter_mut().enumerate() {
+                let end = shard_end(len, shards, s);
+                let (head, tail) =
+                    std::mem::take(&mut rest).split_at_mut(end - offset);
+                cols[r].push(head);
+                rest = tail;
+                offset = end;
+            }
+        }
+    }
+
+    std::thread::scope(|scope| {
+        for cols in shard_cols {
+            scope.spawn(move || reduce_shard(cols));
+        }
+    });
+    Ok(parts.swap_remove(0))
+}
+
+/// Fixed shard boundary: end offset (exclusive) of shard `s` of
+/// `shards` over a `len`-element tensor. Depends only on (len, shards),
+/// never on data or thread timing.
+fn shard_end(len: usize, shards: usize, s: usize) -> usize {
+    (s + 1) * len / shards
+}
+
+/// The fixed binary-tree reduction of [`tree_allreduce`], restricted to
+/// one shard's column strips (`cols[replica][tensor]`). Same stride
+/// loop, same association, elementwise in place in `cols[0]`.
+fn reduce_shard(mut cols: Vec<Vec<&mut [f32]>>) {
+    let n = cols.len();
+    let mut stride = 1usize;
+    while stride < n {
+        let mut i = 0usize;
+        while i + stride < n {
+            let (left, right) = cols.split_at_mut(i + stride);
+            for (a, d) in left[i].iter_mut().zip(right[0].iter()) {
+                for (x, y) in a.iter_mut().zip(d.iter()) {
+                    *x += *y;
+                }
+            }
+            i += 2 * stride;
+        }
+        stride *= 2;
+    }
 }
 
 /// Number of sequential pairwise-exchange rounds the reduction tree
@@ -168,6 +281,119 @@ mod tests {
         assert!(err.is_err());
         // Empty input.
         assert!(tree_allreduce(Vec::new()).is_err());
+    }
+
+    /// The 1e8 association fixture, per shard: with P=2 over a
+    /// 2-element tensor, element 0 lands in shard 0 and element 1 in
+    /// shard 1; both must still reduce through the SAME documented tree
+    /// — (g0 + g1) + g2 for R=3 — on their own threads.
+    #[test]
+    fn sharded_association_is_the_documented_tree_per_shard() {
+        // Element 0: (1e8 + -1e8) + 1.0 = 1.0 (right assoc would be 0).
+        // Element 1: (1.0 + 1e8) + -1e8 = 0.0 (1e8 absorbs the 1.0).
+        let parts = || {
+            vec![
+                part(&[1e8, 1.0]),
+                part(&[-1e8, 1e8]),
+                part(&[1.0, -1e8]),
+            ]
+        };
+        for shards in [1usize, 2, 4] {
+            let out = tree_allreduce_sharded(parts(), shards).unwrap();
+            assert_eq!(
+                out[0].as_f32().unwrap(),
+                &[1.0, 0.0],
+                "P={shards}: per-shard association must pin the same tree"
+            );
+        }
+    }
+
+    #[test]
+    fn sharded_matches_unsharded_bitwise() {
+        for r in [2usize, 3, 4, 5] {
+            for shards in [2usize, 3, 4, 8] {
+                let parts = || -> Vec<Vec<HostTensor>> {
+                    (0..r)
+                        .map(|i| {
+                            // Two tensors, one with length not divisible
+                            // by any shard count (exercises the fixed
+                            // uneven offsets and empty tail shards).
+                            let a: Vec<f32> = (0..13)
+                                .map(|j| {
+                                    (((i * 131 + j * 977) % 509) as f32 - 250.0)
+                                        * 3.7e-3
+                                })
+                                .collect();
+                            let b: Vec<f32> = (0..64)
+                                .map(|j| {
+                                    (((i * 37 + j * 61) % 211) as f32 - 100.0) * 1.1e8
+                                })
+                                .collect();
+                            vec![
+                                HostTensor::f32(vec![13], a),
+                                HostTensor::f32(vec![8, 8], b),
+                            ]
+                        })
+                        .collect()
+                };
+                let serial = tree_allreduce(parts()).unwrap();
+                let sharded = tree_allreduce_sharded(parts(), shards).unwrap();
+                assert_eq!(
+                    serial, sharded,
+                    "R={r} P={shards}: sharded must be bitwise-equal"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_repeated_reductions_are_bitwise_identical() {
+        for (r, shards) in [(2usize, 2usize), (3, 4), (4, 2), (4, 4)] {
+            let parts = || -> Vec<Vec<HostTensor>> {
+                (0..r)
+                    .map(|i| {
+                        let vals: Vec<f32> = (0..97)
+                            .map(|j| (((i * 577 + j * 89) % 401) as f32 - 200.0) * 2.3e-4)
+                            .collect();
+                        part(&vals)
+                    })
+                    .collect()
+            };
+            let a = tree_allreduce_sharded(parts(), shards).unwrap();
+            let b = tree_allreduce_sharded(parts(), shards).unwrap();
+            assert_eq!(a, b, "R={r} P={shards}");
+        }
+    }
+
+    #[test]
+    fn sharded_rejects_mismatched_parts() {
+        let err = tree_allreduce_sharded(
+            vec![
+                vec![HostTensor::zeros_f32(vec![2])],
+                vec![HostTensor::zeros_f32(vec![3])],
+            ],
+            2,
+        );
+        assert!(err.is_err());
+        assert!(tree_allreduce_sharded(Vec::new(), 2).is_err());
+        // Single replica: identity, no reduction.
+        let g = part(&[2.5, -1.0]);
+        assert_eq!(tree_allreduce_sharded(vec![g.clone()], 4).unwrap(), g);
+    }
+
+    #[test]
+    fn shard_offsets_are_fixed_and_tile_the_tensor() {
+        for len in [0usize, 1, 5, 13, 64] {
+            for shards in [1usize, 2, 3, 4, 7] {
+                let mut prev = 0usize;
+                for s in 0..shards {
+                    let end = shard_end(len, shards, s);
+                    assert!(end >= prev && end <= len);
+                    prev = end;
+                }
+                assert_eq!(shard_end(len, shards, shards - 1), len);
+            }
+        }
     }
 
     #[test]

@@ -17,7 +17,7 @@ mod adam;
 mod sgd;
 
 pub use adam::Adam;
-pub use allreduce::{tree_allreduce, tree_rounds};
+pub use allreduce::{tree_allreduce, tree_allreduce_sharded, tree_rounds};
 pub use sgd::Sgd;
 
 use crate::runtime::HostTensor;

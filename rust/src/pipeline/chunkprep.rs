@@ -11,9 +11,10 @@
 //!
 //! * [`prepare_microbatches`] — serial, fresh allocations: the paper's
 //!   faithful per-epoch rebuild cost ([`PrepMode::Paper`] measures it);
-//! * [`prepare_microbatches_parallel`] — one scoped thread per chunk
-//!   (chunks are independent), used by the prep cache and the Overlap
-//!   prefetcher;
+//! * [`prepare_microbatches_parallel`] — chunks fanned out over a
+//!   bounded worker pool (chunks are independent; at most
+//!   `available_parallelism` threads), used by the prep cache and the
+//!   Overlap prefetcher;
 //! * [`fill_microbatch`] — rebuild *into* existing allocations (the
 //!   buffer pool behind `MicrobatchPool`), so steady-state Paper-mode
 //!   epochs stop malloc-churning.
@@ -31,6 +32,7 @@ use crate::config::DatasetProfile;
 use crate::data::Dataset;
 use crate::graph::{CooGraph, EllGraph, Graph, InducedSubgraph};
 use crate::runtime::HostTensor;
+use crate::util::par::{available_threads, run_indexed};
 
 /// One padded micro-batch, ready for the stage executables.
 #[derive(Debug, Clone)]
@@ -81,9 +83,12 @@ pub fn prepare_microbatches(
 }
 
 /// [`prepare_microbatches`] with the per-chunk induce + tensor build
-/// fanned out over one scoped thread per chunk. Chunks are independent
-/// and each build is deterministic, so the result — including chunk
-/// order — is bitwise identical to the serial path.
+/// fanned out over a bounded worker pool ([`run_indexed`]: at most
+/// `available_parallelism` threads stealing chunk indices — an R×c
+/// hybrid plan no longer spawns R·c threads on a small host). Chunks
+/// are independent and each build is deterministic, so the result —
+/// including chunk order — is bitwise identical to the serial path at
+/// any worker count.
 pub fn prepare_microbatches_parallel(
     ds: &Dataset,
     plan: &ChunkPlan,
@@ -96,21 +101,11 @@ pub fn prepare_microbatches_parallel(
     }
     let n_pad = ds.profile.chunk_nodes(k);
     let e_cap = ds.profile.chunk_e_cap(k);
-    std::thread::scope(|scope| {
-        let handles: Vec<_> = plan
-            .chunks
-            .iter()
-            .map(|chunk| {
-                scope.spawn(move || {
-                    build_microbatch(ds, chunk, backend, train_mask, n_pad, e_cap)
-                })
-            })
-            .collect();
-        handles
-            .into_iter()
-            .map(|h| h.join().expect("micro-batch prep worker panicked"))
-            .collect()
+    run_indexed(k, available_threads(), |i| {
+        build_microbatch(ds, &plan.chunks[i], backend, train_mask, n_pad, e_cap)
     })
+    .into_iter()
+    .collect()
 }
 
 /// Build micro-batches from already-induced sub-graphs (in chunk order),
@@ -292,18 +287,63 @@ pub fn lossy_union_graph(full: &Graph, plan: &ChunkPlan) -> Graph {
 /// [`lossy_union_graph`] from already-induced sub-graphs, so callers
 /// that just prepared micro-batches from the same plan (the pipeline
 /// driver) don't induce every chunk a second time.
+///
+/// Merges the already-sorted induced CSR rows straight into the union's
+/// CSR — no edge-list re-materialisation, no re-sort, no re-validation
+/// (the old path paid all three through `Graph::from_undirected_edges`).
+/// Chunks are disjoint, so each original node's union row is exactly its
+/// row in the one sub-graph containing it, mapped back to original ids;
+/// the placement pass walks destinations in ascending *original* id
+/// order, so every row is emitted sorted — the invariant
+/// [`Graph::from_sorted_csr`] trusts. Bitwise-equal to the old path
+/// (asserted in tests).
 pub fn lossy_union_from_induced(
     num_nodes: usize,
     induced: &[InducedSubgraph],
 ) -> Graph {
-    let mut edges = Vec::new();
-    for sub in induced {
-        for (a, b) in sub.graph.edges() {
-            edges.push((sub.nodes[a as usize], sub.nodes[b as usize]));
+    // Locate each original node: which sub-graph, which local index.
+    // u32::MAX = not in any chunk (possible for partial plans in tests;
+    // such nodes get an empty row, as the old path gave them).
+    let mut sub_of = vec![u32::MAX; num_nodes];
+    let mut local_of = vec![u32::MAX; num_nodes];
+    for (s, sub) in induced.iter().enumerate() {
+        for (a, &old) in sub.nodes.iter().enumerate() {
+            debug_assert!(
+                sub_of[old as usize] == u32::MAX,
+                "node {old} in two chunks"
+            );
+            sub_of[old as usize] = s as u32;
+            local_of[old as usize] = a as u32;
         }
     }
-    Graph::from_undirected_edges(num_nodes, &edges)
-        .expect("union of induced sub-graphs is a valid simple graph")
+
+    // Counting pass: the union degree of a node is its induced degree.
+    let mut indptr = vec![0usize; num_nodes + 1];
+    for sub in induced {
+        for (a, &old) in sub.nodes.iter().enumerate() {
+            indptr[old as usize + 1] = sub.graph.degree(a);
+        }
+    }
+    for i in 0..num_nodes {
+        indptr[i + 1] += indptr[i];
+    }
+
+    // Placement pass, destination-major over ascending original ids.
+    let mut cursor = indptr[..num_nodes].to_vec();
+    let mut indices = vec![0u32; indptr[num_nodes]];
+    for dest in 0..num_nodes {
+        let s = sub_of[dest];
+        if s == u32::MAX {
+            continue;
+        }
+        let sub = &induced[s as usize];
+        for &b in sub.graph.neighbors(local_of[dest] as usize) {
+            let src = sub.nodes[b as usize] as usize;
+            indices[cursor[src]] = dest as u32;
+            cursor[src] += 1;
+        }
+    }
+    Graph::from_sorted_csr(num_nodes, indptr, indices)
 }
 
 #[cfg(test)]
@@ -470,6 +510,32 @@ mod tests {
         let union2 =
             lossy_union_from_induced(p.nodes, &plan.induce_all(&ds.graph));
         assert_eq!(union, union2);
+    }
+
+    /// The CSR merge must be bitwise-equal to re-materialising the full
+    /// edge list and revalidating it through `from_undirected_edges`
+    /// (the pre-merge implementation), for both chunkers.
+    #[test]
+    fn union_csr_merge_matches_edge_list_path() {
+        let p = profile();
+        let ds = generate(&p).unwrap();
+        for chunks in [1usize, 2, 3, 4] {
+            for plan in [
+                SequentialChunker.plan(&ds.graph, chunks),
+                crate::batching::GraphAwareChunker.plan(&ds.graph, chunks),
+            ] {
+                let induced = plan.induce_all(&ds.graph);
+                let merged = lossy_union_from_induced(p.nodes, &induced);
+                let mut edges = Vec::new();
+                for sub in &induced {
+                    for (a, b) in sub.graph.edges() {
+                        edges.push((sub.nodes[a as usize], sub.nodes[b as usize]));
+                    }
+                }
+                let old = Graph::from_undirected_edges(p.nodes, &edges).unwrap();
+                assert_eq!(merged, old, "chunks={chunks}");
+            }
+        }
     }
 
     #[test]

@@ -23,6 +23,10 @@
 //! ways, a [`ReplicaGroup`] trains `chunks` micro-batches per replica,
 //! and the per-replica gradient sums are folded by the deterministic
 //! tree all-reduce (`optim::allreduce`) before the single Adam step.
+//! The R replica epochs execute concurrently on up to
+//! `--replica-threads` host threads (default `min(R, cores)`; see
+//! `pipeline::replica` for the determinism argument — results are
+//! bit-identical to `--replica-threads 1`, the sequential loop).
 //! At `replicas == 1` the trainer takes the exact single-pipeline code
 //! path — no reduction, no extra clone.
 
@@ -67,6 +71,13 @@ pub struct PipelineTrainer<'e> {
     /// by the deterministic tree all-reduce each epoch. 1 (default) =
     /// the paper's single pipeline, on the exact pre-replica code path.
     pub replicas: usize,
+    /// Host worker threads for replica execution (CLI
+    /// `--replica-threads`, config key `replica_threads`). 0 (default)
+    /// resolves to `min(replicas, cores)`; 1 forces the sequential
+    /// replica loop — today's exact code path. Grads/loss/logp are
+    /// bit-identical at any value (see `pipeline::replica`); only
+    /// wall-clock moves.
+    pub replica_threads: usize,
     /// false = the paper's "Chunk = 1*" configuration (graph baked into
     /// the model, no host re-build). Only valid with chunks == 1.
     pub rebuild: bool,
@@ -159,6 +170,7 @@ impl<'e> PipelineTrainer<'e> {
             backend: backend.to_string(),
             chunks,
             replicas: 1,
+            replica_threads: 0,
             rebuild: true,
             chunker: Box::new(SequentialChunker),
             spec: PipelineSpec::gat4(),
@@ -250,7 +262,7 @@ impl<'e> PipelineTrainer<'e> {
         let flat = flatten_params(&init_params(p, mc, self.seed), &order)?;
         let n_stages = self.spec.num_stages();
 
-        let group = ReplicaGroup::new(&pipe, self.replicas)?;
+        let group = ReplicaGroup::new(&pipe, self.replicas, self.replica_threads)?;
         let cx = EpochCtx {
             group: &group,
             evaluator: &pipeline_evaluator,
@@ -372,6 +384,7 @@ impl<'e> PipelineTrainer<'e> {
             let key = (self.seed as u32, epoch as u32);
             let out = cx.group.run_epoch(&st.flat, mbs, key)?;
             st.timing.allreduce_s += out.allreduce_s;
+            st.timing.replica_cpu_s += out.replica_cpu_s;
             let loss = out.loss_sum / out.mask_count.max(1.0);
             anyhow::ensure!(loss.is_finite(), "loss diverged at epoch {epoch}");
 

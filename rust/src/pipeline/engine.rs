@@ -17,6 +17,34 @@
 //! device simulator prices them from the same shapes — and replays the
 //! same [`Schedule`] event streams (`simulator::simulate_pipeline_with`).
 //!
+//! ## Shared state under concurrent `run_epoch` calls
+//!
+//! `ReplicaGroup` runs several `run_epoch` calls on one engine at once
+//! (thread-per-replica; see `pipeline::replica`). The audit of what
+//! those calls share, and why none of it needs serialising:
+//!
+//! * **`spec` / `schedule` / `chunks`** — immutable after construction;
+//!   `Schedule::events` is a pure function of `(stage, stages,
+//!   m_count)`.
+//! * **`execs` (`Arc<Executable>`)** — the compiled stage programs.
+//!   The PJRT CPU executable supports concurrent `Execute` calls (see
+//!   `runtime::Executable`'s thread-safety note); its call statistics
+//!   are lock-free atomics, and its device-resident static-input cache
+//!   is a `Mutex`ed map whose buffers are *moved out* per call — two
+//!   replicas racing on one key means the loser re-uploads that input
+//!   (keys are content identities, so both uploads carry identical
+//!   bytes; correctness is unaffected, and the winner's buffer is
+//!   reinstated after the call).
+//! * **Everything per-call** — channels, stage workers, stashes,
+//!   gradient accumulators and the per-stage `params` clones are created
+//!   inside `run_epoch`; nothing leaks across calls.
+//!
+//! Consequently each call's output is a pure function of
+//! `(params, microbatches, key)` — concurrent replica execution cannot
+//! perturb results, which is what the bit-identical
+//! concurrent-vs-sequential invariant in
+//! `rust/tests/integration_hybrid.rs` pins.
+//!
 //! [`FillDrain`]: super::FillDrain
 
 use std::collections::BTreeMap;
@@ -55,7 +83,17 @@ pub struct EpochOutput {
     /// Per micro-batch: (original node ids, row-major log-probs).
     pub logp: Vec<(Vec<u32>, Vec<f32>)>,
     pub stage_timings: Vec<StageTiming>,
+    /// True wall-clock of the epoch. For a single pipeline this is the
+    /// engine run; for an R-replica group it is the span of the replica
+    /// phase — measured across the concurrent execution (waves included
+    /// when threads < R), or the sum of replica spans when they ran
+    /// sequentially (`--replica-threads 1`).
     pub wall_s: f64,
+    /// Aggregate per-replica execution seconds (the sum over replicas —
+    /// what `wall_s` used to report before concurrent execution). Equal
+    /// to `wall_s` for a single pipeline; their ratio is the realised
+    /// host-concurrency speedup.
+    pub replica_cpu_s: f64,
     /// Host seconds spent in the cross-replica gradient all-reduce.
     /// Zero for a plain single-pipeline epoch; `ReplicaGroup` fills it
     /// when merging R > 1 replica outputs.
@@ -270,13 +308,15 @@ impl PipelineEngine {
             let grads: Vec<HostTensor> =
                 owned_grads.into_iter().flat_map(|(_, g)| g).collect();
 
+            let wall_s = wall.elapsed().as_secs_f64();
             Ok(EpochOutput {
                 loss_sum,
                 mask_count,
                 grads,
                 logp,
                 stage_timings,
-                wall_s: wall.elapsed().as_secs_f64(),
+                wall_s,
+                replica_cpu_s: wall_s,
                 allreduce_s: 0.0,
             })
         })

@@ -37,10 +37,16 @@
 //! micro-batches) and synchronize parameters once per epoch through
 //! `optim::allreduce` — a deterministic tree reduction with a fixed
 //! summation order, so training at any fixed R is bit-reproducible.
-//! `--replicas 1` (the default) is the paper's single pipeline on the
-//! exact pre-replica code path; the simulator's
-//! `Scenarios::hybrid_epoch` prices the parallel R-node DGX layout the
-//! host executes sequentially.
+//! On the host the R replica epochs execute **concurrently**,
+//! thread-per-replica on up to `--replica-threads` OS threads (default
+//! `min(R, cores)`), with the gradient tree sharded over the same
+//! threads at fixed offsets — bit-identical to the sequential loop
+//! (`--replica-threads 1`) at any thread count; see `replica` module
+//! docs for the determinism argument. `--replicas 1` (the default) is
+//! the paper's single pipeline on the exact pre-replica code path; the
+//! simulator's `Scenarios::hybrid_epoch` prices the parallel R-node
+//! DGX layout, and `simulator::host_concurrency_speedup` models the
+//! host-side speedup `bench hybrid` measures.
 //!
 //! One training step:
 //!

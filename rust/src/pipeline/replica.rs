@@ -1,5 +1,5 @@
 //! The replica layer above the pipeline engine: hybrid data×pipe
-//! parallelism.
+//! parallelism, executed **concurrently** on the host.
 //!
 //! [`ReplicaGroup`] runs R pipeline instances over one partitioned
 //! micro-batch set. The trainer plans `R * chunks` chunks with the
@@ -10,18 +10,44 @@
 //! stage executables (shapes are per total-chunk-count, so every
 //! replica's micro-batches share one padded layout).
 //!
-//! After the R epochs, per-replica gradient sums are folded by
-//! [`tree_allreduce`] — a fixed binary-tree association over replica
-//! indices — so the merged gradients, and therefore the whole training
-//! trajectory, are **bit-reproducible for any fixed R** regardless of
-//! how the replicas were executed.
+//! ## Concurrent execution
 //!
-//! On this host the replicas execute sequentially (one CPU executes
-//! all "devices" anyway, exactly as the stage workers of one pipeline
-//! already share it); the DGX hybrid projection
-//! (`simulator::Scenarios::hybrid_epoch`) prices the truly parallel
-//! layout — R nodes × S V100s, NVLink intra-node, the gradient tree on
-//! the modeled inter-node link.
+//! The R replica epochs run on up to `threads` OS threads
+//! (`--replica-threads`, default `min(R, cores)`), each replica
+//! spawning its own stage-worker set inside its own
+//! `PipelineEngine::run_epoch` call — the engine documents why its
+//! shared state (immutable spec/schedule, atomics-only executable
+//! stats, content-keyed static-buffer cache) tolerates this without
+//! serialising (`pipeline::engine` module docs). `--replica-threads 1`
+//! is the plain sequential replica loop — today's exact code path.
+//!
+//! ## Determinism
+//!
+//! Each replica's [`EpochOutput`] is a pure function of
+//! `(params, slice, key)`; outputs are reassembled in replica-index
+//! order regardless of which thread ran which replica
+//! (`util::par::run_indexed`); scalar sums fold in fixed replica order;
+//! and gradients merge through [`tree_allreduce_sharded`] — the fixed
+//! binary-tree association over replica indices, split at fixed offsets
+//! into per-thread shards whose per-element association is identical to
+//! the serial tree at any shard count. The merged gradients, and
+//! therefore the whole training trajectory, are **bit-identical to the
+//! sequential path at any fixed R** — for any thread count, any shard
+//! count, any interleaving. `rust/tests/integration_hybrid.rs` pins
+//! this end to end.
+//!
+//! ## Timing split
+//!
+//! `wall_s` is the true wall-clock of the replica phase: the measured
+//! span of the concurrent execution (waves included when
+//! `threads < R`), or the sum of replica spans when sequential. The
+//! old sum-over-replicas aggregate lives on as `replica_cpu_s`
+//! (`metrics::RunTiming::replica_cpu_s`); wall / cpu is the realised
+//! host-concurrency speedup. The DGX hybrid projection
+//! (`simulator::Scenarios::hybrid_epoch`) still prices the R-node
+//! layout, and `simulator::host_concurrency_speedup` models the host
+//! side so `bench hybrid`'s measured and modeled columns are
+//! comparable.
 //!
 //! Dropout keys are assigned by *global* micro-batch index (replica
 //! `r`, local batch `m` uses key `base + r*chunks + m`), so an R-way
@@ -31,29 +57,46 @@
 //!
 //! [`Chunker`]: crate::batching::Chunker
 //! [`PrepMode`]: super::PrepMode
-//! [`tree_allreduce`]: crate::optim::allreduce::tree_allreduce
+//! [`tree_allreduce_sharded`]: crate::optim::allreduce::tree_allreduce_sharded
 
 use anyhow::Result;
 
 use crate::metrics::Timer;
-use crate::optim::allreduce::tree_allreduce;
+use crate::optim::allreduce::{tree_allreduce, tree_allreduce_sharded};
 use crate::runtime::HostTensor;
+use crate::util::par::{available_threads, run_indexed};
 
 use super::chunkprep::Microbatch;
 use super::engine::{EpochOutput, PipelineEngine, StageTiming};
 
 /// R replicated pipeline instances sharing one engine's compiled
-/// stages. `replicas == 1` is byte-for-byte the plain single-pipeline
-/// path: no slicing, no reduction, no clone.
+/// stages, executed on up to `threads` host threads. `replicas == 1`
+/// is byte-for-byte the plain single-pipeline path: no slicing, no
+/// reduction, no clone. `threads == 1` is the plain sequential replica
+/// loop.
 pub struct ReplicaGroup<'p> {
     pipe: &'p PipelineEngine,
     pub replicas: usize,
+    /// Resolved host worker-thread count for replica execution
+    /// (clamped to `[1, replicas]`).
+    pub threads: usize,
 }
 
 impl<'p> ReplicaGroup<'p> {
-    pub fn new(pipe: &'p PipelineEngine, replicas: usize) -> Result<ReplicaGroup<'p>> {
+    /// `threads == 0` resolves to the default `min(replicas, cores)`;
+    /// any other value is clamped to the replica count.
+    pub fn new(
+        pipe: &'p PipelineEngine,
+        replicas: usize,
+        threads: usize,
+    ) -> Result<ReplicaGroup<'p>> {
         anyhow::ensure!(replicas >= 1, "replicas must be >= 1, got {replicas}");
-        Ok(ReplicaGroup { pipe, replicas })
+        let threads = if threads == 0 {
+            replicas.min(available_threads())
+        } else {
+            threads.min(replicas)
+        };
+        Ok(ReplicaGroup { pipe, replicas, threads })
     }
 
     /// Run one optimiser step's worth of work: every replica's pipeline
@@ -62,7 +105,8 @@ impl<'p> ReplicaGroup<'p> {
     /// single pipeline over all `microbatches` would produce (grads are
     /// the total sum, `loss_sum`/`mask_count` the totals, `logp` and
     /// per-stage timings concatenated in replica order), so the trainer
-    /// loop is replica-agnostic.
+    /// loop is replica-agnostic — and is bit-identical on
+    /// grads/loss/logp whether the replicas ran on 1 thread or many.
     pub fn run_epoch(
         &self,
         params: &[HostTensor],
@@ -81,16 +125,33 @@ impl<'p> ReplicaGroup<'p> {
         );
         let per = microbatches.len() / r;
 
-        // Sequential execution in replica-index order; determinism does
-        // not depend on it (the reduction order below is fixed), but it
-        // keeps one CPU honestly executing one pipeline at a time.
-        let mut outs = Vec::with_capacity(r);
-        for i in 0..r {
+        // One replica epoch; pure in (params, slice, key), so safe to
+        // run from any thread. Global micro-batch index keys: replica i,
+        // local batch m draws key.0 + i*per + m (the engine adds the
+        // local m).
+        let run_one = |i: usize| -> Result<EpochOutput> {
             let slice = &microbatches[i * per..(i + 1) * per];
-            // Global micro-batch index keys: replica i, local batch m
-            // draws key.0 + i*per + m (the engine adds the local m).
             let rkey = (key.0.wrapping_add((i * per) as u32), key.1);
-            outs.push(self.pipe.run_epoch(params, slice, rkey)?);
+            self.pipe.run_epoch(params, slice, rkey)
+        };
+        let concurrent = self.threads > 1;
+        let phase = Timer::start();
+        let results: Vec<Result<EpochOutput>> = if concurrent {
+            // Thread-per-replica (capped at `threads`): each replica
+            // spawns its own stage-worker set; outputs come back in
+            // replica-index order whatever the interleaving.
+            run_indexed(r, self.threads, run_one)
+        } else {
+            // The sequential replica loop, today's exact path.
+            (0..r).map(run_one).collect()
+        };
+        // Wall-clock of the whole replica phase: with threads < R the
+        // replicas run in waves, so the max over per-replica spans would
+        // under-report — the phase timer is the honest number.
+        let phase_wall_s = phase.secs();
+        let mut outs = Vec::with_capacity(r);
+        for out in results {
+            outs.push(out?);
         }
 
         // Merge in fixed replica order (f64 scalar sums), then the
@@ -100,13 +161,15 @@ impl<'p> ReplicaGroup<'p> {
         let mut mask_count = 0.0f64;
         let mut logp: Vec<(Vec<u32>, Vec<f32>)> = Vec::new();
         let mut stage_timings = vec![StageTiming::default(); n_stages];
-        let mut wall_s = 0.0f64;
+        let mut seq_wall_s = 0.0f64;
+        let mut replica_cpu_s = 0.0f64;
         let mut grad_parts = Vec::with_capacity(r);
         for out in outs {
             loss_sum += out.loss_sum;
             mask_count += out.mask_count;
             logp.extend(out.logp);
-            wall_s += out.wall_s;
+            seq_wall_s += out.wall_s;
+            replica_cpu_s += out.wall_s;
             for (s, st) in out.stage_timings.into_iter().enumerate() {
                 stage_timings[s].fwd_s.extend(st.fwd_s);
                 stage_timings[s].bwd_s.extend(st.bwd_s);
@@ -115,14 +178,25 @@ impl<'p> ReplicaGroup<'p> {
             grad_parts.push(out.grads);
         }
         let reduce = Timer::start();
-        let grads = tree_allreduce(grad_parts)?;
+        // Sharded reduction (one shard per worker thread) when the group
+        // is concurrent; the serial tree otherwise. Bitwise-identical
+        // results either way — the per-element association is the same.
+        let grads = if concurrent {
+            tree_allreduce_sharded(grad_parts, self.threads)?
+        } else {
+            tree_allreduce(grad_parts)?
+        };
         Ok(EpochOutput {
             loss_sum,
             mask_count,
             grads,
             logp,
             stage_timings,
-            wall_s,
+            // Sequential: the sum of replica spans (the pre-concurrency
+            // report, minus loop overhead). Concurrent: the measured
+            // span of the whole phase, waves included.
+            wall_s: if concurrent { phase_wall_s } else { seq_wall_s },
+            replica_cpu_s,
             allreduce_s: reduce.secs(),
         })
     }

@@ -99,6 +99,10 @@ pub struct Executable {
     /// Resident device buffers for [`ExecInput::Static`] inputs, by
     /// content key. Buffers are moved out for the duration of a call and
     /// reinstated afterwards, so the execute path needs no extra copies.
+    /// Concurrent callers racing on one key are benign: the loser
+    /// uploads a fresh buffer with the identical bytes (keys are content
+    /// identities) and the last call's buffer is the one kept resident —
+    /// results never depend on who won.
     static_buffers: Mutex<HashMap<u64, xla::PjRtBuffer>>,
 }
 

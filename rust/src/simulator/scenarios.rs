@@ -42,6 +42,37 @@ pub struct SimEpoch {
     pub allreduce_s: f64,
 }
 
+/// Modeled host-side speedup of thread-per-replica execution over the
+/// sequential replica loop, for `bench hybrid`'s host-concurrency
+/// column (so the measured sequential/concurrent epoch columns have a
+/// model to compare against).
+///
+/// Replicas are identical work units of `replica_epoch_s` seconds; a
+/// pool of `threads` workers executes them in `ceil(R / min(T, R))`
+/// waves, then the (serial-on-the-critical-path) all-reduce runs —
+/// Amdahl's law with the reduction as the serial fraction:
+///
+/// ```text
+/// speedup = (R·e + a) / (ceil(R / min(T, R))·e + a)
+/// ```
+pub fn host_concurrency_speedup(
+    replicas: usize,
+    threads: usize,
+    replica_epoch_s: f64,
+    allreduce_s: f64,
+) -> f64 {
+    let r = replicas.max(1);
+    let t = threads.max(1).min(r);
+    let waves = r.div_ceil(t) as f64;
+    let sequential = r as f64 * replica_epoch_s + allreduce_s;
+    let concurrent = waves * replica_epoch_s + allreduce_s;
+    if concurrent <= 0.0 {
+        1.0
+    } else {
+        sequential / concurrent
+    }
+}
+
 pub struct Scenarios<'m> {
     pub manifest: &'m Manifest,
     pub cal: Calibration,
@@ -572,6 +603,28 @@ mod tests {
         // Deeper trees pay more reduction rounds: R=4 has 2 rounds.
         let hybrid4 = gat4_hybrid(&s, 4, 1, PrepMode::Paper);
         assert!(hybrid4.allreduce_s > hybrid.allreduce_s);
+    }
+
+    #[test]
+    fn host_concurrency_speedup_models_waves_and_amdahl() {
+        // No manifest needed: a pure closed-form model.
+        // 4 replicas on 4 threads, free reduction: ideal 4x.
+        assert!((host_concurrency_speedup(4, 4, 1.0, 0.0) - 4.0).abs() < 1e-12);
+        // 4 replicas on 2 threads: 2 waves -> 2x.
+        assert!((host_concurrency_speedup(4, 2, 1.0, 0.0) - 2.0).abs() < 1e-12);
+        // 3 replicas on 2 threads: 2 waves -> 1.5x.
+        assert!((host_concurrency_speedup(3, 2, 1.0, 0.0) - 1.5).abs() < 1e-12);
+        // Serial all-reduce caps the speedup (Amdahl): (4+1)/(1+1).
+        assert!((host_concurrency_speedup(4, 4, 1.0, 1.0) - 2.5).abs() < 1e-12);
+        // Degenerate inputs collapse to 1x, never panic.
+        assert_eq!(host_concurrency_speedup(1, 8, 1.0, 0.0), 1.0);
+        assert_eq!(host_concurrency_speedup(4, 0, 1.0, 0.0), 1.0);
+        assert_eq!(host_concurrency_speedup(4, 4, 0.0, 0.0), 1.0);
+        // Threads beyond R buy nothing.
+        assert_eq!(
+            host_concurrency_speedup(4, 16, 1.0, 0.5),
+            host_concurrency_speedup(4, 4, 1.0, 0.5)
+        );
     }
 
     #[test]

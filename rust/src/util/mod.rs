@@ -1,7 +1,8 @@
 //! Dependency-free utilities (offline environment): JSON, RNG, CLI,
-//! content hashing.
+//! content hashing, bounded host parallelism.
 
 pub mod cli;
 pub mod hash;
 pub mod json;
+pub mod par;
 pub mod rng;

@@ -1,0 +1,111 @@
+//! Bounded host parallelism: an index-stealing fork-join over N
+//! independent tasks, capped at a fixed worker count.
+//!
+//! `std::thread::scope` + one spawn per task is fine when the task count
+//! is small and known (the pipeline engine's one-worker-per-stage), but
+//! the prep and replica layers fan out over *data* — chunks and
+//! replicas — whose counts multiply (an R×c hybrid plan has R·c chunks),
+//! so they go through [`run_indexed`] instead: at most `threads` OS
+//! threads pull task indices from one atomic counter and results are
+//! reassembled in task-index order, so the output is deterministic (and
+//! bitwise identical to the serial loop whenever the tasks themselves
+//! are) regardless of which worker ran which index.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Host threads available to fan work out over
+/// (`std::thread::available_parallelism`, 1 when unknown).
+pub fn available_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// Run `tasks` independent jobs `f(0..tasks)` on at most `threads` OS
+/// threads (an index-stealing loop over one shared counter) and return
+/// the results in task-index order.
+///
+/// `threads <= 1` (or a single task) degenerates to the plain serial
+/// loop on the calling thread — no spawn, no counter.
+pub fn run_indexed<T, F>(tasks: usize, threads: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let workers = threads.min(tasks);
+    if workers <= 1 {
+        return (0..tasks).map(f).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let collected: Vec<Vec<(usize, T)>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..workers)
+            .map(|_| {
+                let next = &next;
+                let f = &f;
+                scope.spawn(move || {
+                    let mut local = Vec::new();
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= tasks {
+                            break;
+                        }
+                        local.push((i, f(i)));
+                    }
+                    local
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("run_indexed worker panicked"))
+            .collect()
+    });
+    let mut slots: Vec<Option<T>> = Vec::with_capacity(tasks);
+    slots.resize_with(tasks, || None);
+    for (i, v) in collected.into_iter().flatten() {
+        debug_assert!(slots[i].is_none(), "task {i} ran twice");
+        slots[i] = Some(v);
+    }
+    slots
+        .into_iter()
+        .map(|s| s.expect("task index never claimed"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn preserves_task_order_at_any_thread_count() {
+        for threads in [1usize, 2, 3, 8, 64] {
+            let out = run_indexed(17, threads, |i| i * i);
+            let want: Vec<usize> = (0..17).map(|i| i * i).collect();
+            assert_eq!(out, want, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn runs_every_task_exactly_once() {
+        let calls = AtomicUsize::new(0);
+        let out = run_indexed(100, 4, |i| {
+            calls.fetch_add(1, Ordering::Relaxed);
+            i
+        });
+        assert_eq!(calls.load(Ordering::Relaxed), 100);
+        assert_eq!(out.len(), 100);
+    }
+
+    #[test]
+    fn degenerate_counts() {
+        assert!(run_indexed(0, 4, |i| i).is_empty());
+        assert_eq!(run_indexed(1, 4, |i| i + 7), vec![7]);
+        assert_eq!(run_indexed(3, 0, |i| i), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn available_threads_is_positive() {
+        assert!(available_threads() >= 1);
+    }
+}

@@ -1,11 +1,14 @@
-//! Hybrid data×pipe parallelism invariants (`--replicas R`).
+//! Hybrid data×pipe parallelism invariants (`--replicas R`,
+//! `--replica-threads T`).
 //!
 //! Host-side tests (always run, no artifacts needed) pin the
 //! deterministic tree all-reduce: fixed association, bit-reproducible
-//! across repeats, sums matching a serial fold within float tolerance.
+//! across repeats, sums matching a serial fold within float tolerance —
+//! and the sharded reduction (`tree_allreduce_sharded`, the concurrent
+//! path's merge) bitwise-matching the serial tree at every (R, P).
 //!
 //! End-to-end tests (skipped gracefully when `make artifacts` has not
-//! run) assert the three load-bearing properties of the replica layer:
+//! run) assert the load-bearing properties of the replica layer:
 //!
 //! 1. `replicas = 1` takes the exact single-pipeline code path — its
 //!    training trajectory is bitwise identical to a trainer that never
@@ -15,11 +18,17 @@
 //!    — the forwards are identical micro-batch for micro-batch, only
 //!    the gradient summation association differs;
 //! 3. repeated runs at any fixed R are bit-identical (the deterministic
-//!    all-reduce guarantee).
+//!    all-reduce guarantee);
+//! 4. concurrent execution (`--replica-threads > 1`) is bit-identical
+//!    to the sequential loop (`--replica-threads 1`) at R ∈ {2, 3, 4},
+//!    and repeated concurrent runs are bit-identical to each other —
+//!    the PR-4 invariant: thread count moves wall-clock, never bits.
 
 use gnn_pipe::config::Config;
 use gnn_pipe::data::generate;
-use gnn_pipe::optim::allreduce::{tree_allreduce, tree_rounds};
+use gnn_pipe::optim::allreduce::{
+    tree_allreduce, tree_allreduce_sharded, tree_rounds,
+};
 use gnn_pipe::pipeline::{PipelineResult, PipelineTrainer};
 use gnn_pipe::runtime::{Engine, HostTensor};
 
@@ -71,6 +80,24 @@ fn allreduce_is_bit_reproducible_and_matches_serial_sum() {
                     "R={r} tensor {t} elem {j}: {g} vs {want}"
                 );
             }
+        }
+    }
+}
+
+/// The concurrent replica path merges gradients through the sharded
+/// tree; it must be bitwise-equal to the serial tree for every
+/// (replica count, shard count) — that equality is what lets the
+/// concurrent and sequential training paths share one invariant.
+#[test]
+fn sharded_allreduce_matches_serial_tree_bitwise() {
+    for r in [2usize, 3, 4] {
+        let serial = tree_allreduce(synth_parts(r, 23)).unwrap();
+        for shards in [2usize, 4] {
+            let sharded = tree_allreduce_sharded(synth_parts(r, 23), shards).unwrap();
+            assert_eq!(serial, sharded, "R={r} P={shards}");
+            // And repeats of the sharded reduction are bit-identical.
+            let again = tree_allreduce_sharded(synth_parts(r, 23), shards).unwrap();
+            assert_eq!(sharded, again, "R={r} P={shards} repeat");
         }
     }
 }
@@ -185,5 +212,62 @@ fn fixed_replica_runs_are_bit_identical() {
         let a = run();
         let b = run();
         assert_bitwise_equal(&a, &b, &format!("R={replicas} c={chunks}"));
+    }
+}
+
+/// The PR-4 tentpole invariant: thread-per-replica execution (with the
+/// sharded all-reduce) produces bit-identical grads/loss/params to the
+/// sequential replica loop at the same R, for R ∈ {2, 3, 4} — and at
+/// more threads than replicas (over-subscription changes nothing).
+#[test]
+fn concurrent_replicas_match_sequential_bitwise() {
+    let Some((cfg, eng)) = engine() else { return };
+    let ds = generate(cfg.dataset("pubmed").unwrap()).unwrap();
+    // (R, chunks/replica) → c{R*chunks} artifacts: c4, c3, c4.
+    for (replicas, chunks) in [(2usize, 2usize), (3, 1), (4, 1)] {
+        let run = |threads: usize| {
+            let mut t = PipelineTrainer::new(&eng, &ds, "ell", chunks);
+            t.replicas = replicas;
+            t.replica_threads = threads;
+            t.seed = 17;
+            t.train(&cfg.model, 3).unwrap()
+        };
+        let sequential = run(1);
+        let concurrent = run(replicas);
+        assert_bitwise_equal(
+            &sequential,
+            &concurrent,
+            &format!("R={replicas} c={chunks} threads={replicas}"),
+        );
+        let oversubscribed = run(2 * replicas);
+        assert_bitwise_equal(
+            &sequential,
+            &oversubscribed,
+            &format!("R={replicas} c={chunks} threads={}", 2 * replicas),
+        );
+        // Both execution modes report the aggregate replica CPU time.
+        assert!(sequential.timing.replica_cpu_s > 0.0);
+        assert!(concurrent.timing.replica_cpu_s > 0.0);
+    }
+}
+
+/// Repeated concurrent runs must be bit-identical to each other: the
+/// thread interleaving (which worker ran which replica, which shard
+/// finished first) can never leak into results.
+#[test]
+fn repeated_concurrent_runs_are_bit_identical() {
+    let Some((cfg, eng)) = engine() else { return };
+    let ds = generate(cfg.dataset("pubmed").unwrap()).unwrap();
+    for (replicas, chunks) in [(2usize, 2usize), (3, 1), (4, 1)] {
+        let run = || {
+            let mut t = PipelineTrainer::new(&eng, &ds, "ell", chunks);
+            t.replicas = replicas;
+            t.replica_threads = replicas;
+            t.seed = 29;
+            t.train(&cfg.model, 2).unwrap()
+        };
+        let a = run();
+        let b = run();
+        assert_bitwise_equal(&a, &b, &format!("concurrent R={replicas} c={chunks}"));
     }
 }

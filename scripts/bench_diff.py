@@ -1,0 +1,117 @@
+#!/usr/bin/env python3
+"""Compare BENCH_*.json perf-trajectory snapshots against a previous run.
+
+Usage: bench_diff.py PREV_DIR [NEW_DIR] [--threshold PCT] [--strict]
+
+Matches snapshots by filename and samples by name, prints a per-sample
+delta table, and emits GitHub Actions `::warning::` annotations for any
+sample whose mean regressed by more than --threshold percent (default
+20). Samples present on only one side (added/renamed/removed benches)
+are listed but never flagged. Exit code is 0 unless --strict is given
+and at least one regression was found.
+
+This is the first consumer of the bench-trajectory artifacts CI has
+been uploading per commit: the previous run's BENCH_*.json land in
+PREV_DIR (downloaded from the last successful run on the default
+branch) and the current run's in NEW_DIR (the repo root).
+"""
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+
+def load_snapshots(directory: Path, exclude: Path | None = None):
+    """{filename: {sample_name: mean_s}} for every BENCH_*.json below
+    `directory` (artifact downloads sometimes nest one level). Paths
+    under `exclude` are skipped — in CI the new dir is the repo root,
+    which CONTAINS the downloaded previous artifact; without the
+    exclusion the previous snapshots shadow the fresh ones and the
+    comparison degenerates to prev-vs-prev."""
+    out = {}
+    exclude = exclude.resolve() if exclude else None
+    for path in sorted(directory.rglob("BENCH_*.json")):
+        if exclude and exclude in path.resolve().parents:
+            continue
+        try:
+            data = json.loads(path.read_text())
+        except (OSError, json.JSONDecodeError) as e:
+            print(f"::warning::unreadable snapshot {path}: {e}")
+            continue
+        samples = {
+            s["name"]: float(s["mean_s"])
+            for s in data.get("samples", [])
+            if "name" in s and "mean_s" in s
+        }
+        out[path.name] = {"samples": samples, "quick": data.get("quick")}
+    return out
+
+
+def fmt_secs(v: float) -> str:
+    if v >= 1.0:
+        return f"{v:.3f} s"
+    if v >= 1e-3:
+        return f"{v * 1e3:.3f} ms"
+    return f"{v * 1e6:.3f} us"
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("prev_dir", type=Path)
+    ap.add_argument("new_dir", type=Path, nargs="?", default=Path("."))
+    ap.add_argument("--threshold", type=float, default=20.0,
+                    help="regression threshold in percent (default 20)")
+    ap.add_argument("--strict", action="store_true",
+                    help="exit 1 when a regression exceeds the threshold")
+    args = ap.parse_args()
+
+    if not args.prev_dir.is_dir():
+        print(f"no previous bench artifact at {args.prev_dir}; nothing to compare")
+        return 0
+    prev = load_snapshots(args.prev_dir)
+    new = load_snapshots(args.new_dir, exclude=args.prev_dir)
+    if not prev:
+        print(f"no BENCH_*.json under {args.prev_dir}; nothing to compare")
+        return 0
+    if not new:
+        print(f"::warning::no BENCH_*.json under {args.new_dir} to compare")
+        return 0
+
+    regressions = 0
+    for fname, new_snap in sorted(new.items()):
+        prev_snap = prev.get(fname)
+        if prev_snap is None:
+            print(f"{fname}: new snapshot (no previous artifact) — skipped")
+            continue
+        if prev_snap.get("quick") != new_snap.get("quick"):
+            print(f"{fname}: quick-mode mismatch vs previous — skipped")
+            continue
+        print(f"\n== {fname} (threshold {args.threshold:.0f}%) ==")
+        for name, new_mean in new_snap["samples"].items():
+            old_mean = prev_snap["samples"].get(name)
+            if old_mean is None:
+                print(f"  {name:<48} {fmt_secs(new_mean):>12}  (new sample)")
+                continue
+            delta = (new_mean - old_mean) / old_mean * 100.0 if old_mean > 0 else 0.0
+            marker = ""
+            if delta > args.threshold:
+                marker = "  <-- REGRESSION"
+                regressions += 1
+                print(f"::warning::perf regression in {fname} / {name}: "
+                      f"{fmt_secs(old_mean)} -> {fmt_secs(new_mean)} ({delta:+.1f}%)")
+            print(f"  {name:<48} {fmt_secs(old_mean):>12} -> {fmt_secs(new_mean):>12}"
+                  f"  ({delta:+6.1f}%){marker}")
+        for name in prev_snap["samples"]:
+            if name not in new_snap["samples"]:
+                print(f"  {name:<48} (removed)")
+
+    if regressions:
+        print(f"\n{regressions} sample(s) regressed beyond {args.threshold:.0f}%")
+        return 1 if args.strict else 0
+    print("\nno regressions beyond threshold")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
