@@ -145,6 +145,11 @@ def build_all(out_dir: str, only: str | None, skip_pipeline: bool) -> None:
             for k in pc.chunks:
                 all_specs = S.stage_specs(ds, mc, backend, k)
                 for kind, fn in fns.items():
+                    # Serving forwards only exist at full-graph shape:
+                    # the serve path runs chunks=1 (lossless), so the
+                    # other chunk counts would be dead artifacts.
+                    if kind.endswith("_eval_fwd") and k != 1:
+                        continue
                     name = f"{ds.name}_{backend}_c{k}_{kind}"
                     if not want(name):
                         continue

@@ -23,6 +23,16 @@ cut at the paper's balance [2,1,2,1]:
   * ``s3loss_bwd``  fused LogSoftmax + masked-NLL backward: from the raw
                     stage-2 logits produce (loss_sum, count, dlogits).
 
+Serving (per backend, chunks=1 only) — the forward-only inference
+pipeline behind ``rust/src/serve``:
+  * ``s{i}_eval_fwd``  (i in 0..2) deterministic stage forward: dropout
+                       off, no key input, same [2,1,2,1] cut. Stage 3
+                       reuses ``s3_fwd`` (LogSoftmax is deterministic).
+                       Composed at full-graph shape these compute
+                       exactly ``eval_fwd``'s math, which is what makes
+                       serve-path logits comparable to ``full_eval``
+                       (test_eval_stage_chain_matches_full_forward).
+
 Gradient normalisation: pipeline losses are accumulated as (sum, count)
 across micro-batches; the coordinator divides accumulated grads by the
 total count, which reproduces the full-batch mean gradient exactly when
@@ -144,6 +154,51 @@ def make_s3_fwd():
         return (M.stage3(logits),)
 
     return s3_fwd
+
+
+# ---------------------------------------------------------------------------
+# Serving stage entry points: deterministic forwards (dropout off, no
+# key argument). Lowered at chunks=1 only — the serving subsystem runs
+# at full-graph shape, where the single chunk is lossless.
+# ---------------------------------------------------------------------------
+
+def make_s0_eval_fwd(mc: ModelConfig, backend: str):
+    ng = n_graph_args(backend)
+    zero_key = jnp.zeros((2,), jnp.uint32)
+
+    def s0_eval_fwd(*args):
+        # (w1, a1_src, a1_dst, b1, x, graph...)
+        p = dict(zip(("w1", "a1_src", "a1_dst", "b1"), args[:4]))
+        x = args[4]
+        graph = _graph_from_flat(args[5 : 5 + ng], backend)
+        return (M.stage0(p, x, graph, backend, mc, zero_key, deterministic=True),)
+
+    return s0_eval_fwd
+
+
+def make_s1_eval_fwd(mc: ModelConfig):
+    zero_key = jnp.zeros((2,), jnp.uint32)
+
+    def s1_eval_fwd(h):
+        return (M.stage1(h, mc, zero_key, deterministic=True),)
+
+    return s1_eval_fwd
+
+
+def make_s2_eval_fwd(mc: ModelConfig, backend: str, classes: int):
+    ng = n_graph_args(backend)
+    zero_key = jnp.zeros((2,), jnp.uint32)
+
+    def s2_eval_fwd(*args):
+        p = dict(zip(("w2", "a2_src", "a2_dst", "b2"), args[:4]))
+        h = args[4]
+        graph = _graph_from_flat(args[5 : 5 + ng], backend)
+        return (
+            M.stage2(p, h, graph, backend, mc, classes, zero_key,
+                     deterministic=True),
+        )
+
+    return s2_eval_fwd
 
 
 def make_s3loss_bwd():
@@ -280,6 +335,10 @@ def stage_specs(
         "s1_fwd": [("h", f32((n_c, hd)))] + key,
         "s2_fwd": p2 + [("h", f32((n_c, hd)))] + g + key,
         "s3_fwd": [("logits", f32((n_c, c)))],
+        # Serving forwards: same layouts minus the dropout key.
+        "s0_eval_fwd": p1 + [("x", f32((n_c, ds.features)))] + g,
+        "s1_eval_fwd": [("h", f32((n_c, hd)))],
+        "s2_eval_fwd": p2 + [("h", f32((n_c, hd)))] + g,
         "s3loss_bwd": [
             ("logits", f32((n_c, c))),
             ("labels", s32((n_c,))),
@@ -299,6 +358,9 @@ def stage_fns(ds: DatasetProfile, mc: ModelConfig, backend: str):
         "s1_fwd": make_s1_fwd(mc),
         "s2_fwd": make_s2_fwd(mc, backend, ds.classes),
         "s3_fwd": make_s3_fwd(),
+        "s0_eval_fwd": make_s0_eval_fwd(mc, backend),
+        "s1_eval_fwd": make_s1_eval_fwd(mc),
+        "s2_eval_fwd": make_s2_eval_fwd(mc, backend, ds.classes),
         "s3loss_bwd": make_s3loss_bwd(),
         "s2_bwd": make_s2_bwd(mc, backend, ds.classes),
         "s1_bwd": make_s1_bwd(mc),

@@ -147,6 +147,57 @@ def test_chunked_accumulation_matches_monolith_when_lossless(model_config):
         )
 
 
+@pytest.mark.parametrize("backend", ["ell", "edgewise"])
+def test_eval_stage_chain_matches_full_forward(tiny, model_config, backend):
+    """The serving artifacts' exact contract: composing the staged
+    deterministic forwards (s0_eval -> s1_eval -> s2_eval -> s3)
+    reproduces the fused deterministic evaluation — the same functions
+    eval_fwd lowers — so the Rust serve path computes full_eval's math."""
+    ds, x, labels, gell, gcoo = tiny
+    mc = model_config
+    graph = gell if backend == "ell" else gcoo
+    gflat = tuple(graph.values())
+    p = M.init_params(ds, mc, seed=0)
+    p1 = [p[n] for n in ("w1", "a1_src", "a1_dst", "b1")]
+    p2 = [p[n] for n in ("w2", "a2_src", "a2_dst", "b2")]
+
+    fns = S.stage_fns(ds, mc, backend)
+    (h0,) = fns["s0_eval_fwd"](*p1, x, *gflat)
+    (h1,) = fns["s1_eval_fwd"](h0)
+    (lg,) = fns["s2_eval_fwd"](*p2, h1, *gflat)
+    (logp,) = fns["s3_fwd"](lg)
+
+    zero_key = jnp.zeros((2,), jnp.uint32)
+    want = M.full_forward(
+        p, x, graph, backend, mc, ds.classes, zero_key, deterministic=True
+    )
+    np.testing.assert_array_equal(np.asarray(logp), np.asarray(want))
+
+    # And the fused eval entry point agrees too (same composition).
+    flat = [p[n] for n in M.PARAM_NAMES]
+    (via_eval,) = S.make_eval_fwd(ds, mc, backend)(*flat, x, *gflat)
+    np.testing.assert_array_equal(np.asarray(via_eval), np.asarray(want))
+
+
+def test_eval_stage_specs_drop_the_key(model_config):
+    """Serving forwards take the training layouts minus the dropout key."""
+    from compile.configs import load_datasets
+
+    ds = load_datasets()["pubmed"]
+    mc = model_config
+    for backend in M.BACKENDS:
+        sp = S.stage_specs(ds, mc, backend, 1)
+        for kind in ("s0", "s1", "s2"):
+            train = sp[f"{kind}_fwd"]
+            evalv = sp[f"{kind}_eval_fwd"]
+            assert [n for n, _ in train if n != "key"] == [n for n, _ in evalv]
+            assert all(n != "key" for n, _ in evalv)
+            for (_, a), (_, b) in zip(
+                [t for t in train if t[0] != "key"], evalv
+            ):
+                assert a.shape == b.shape and a.dtype == b.dtype
+
+
 def test_s3loss_bwd_gradient_is_softmax_minus_onehot(model_config):
     """Analytic check: d(sum NLL)/d logits = softmax(logits) - onehot."""
     rng = np.random.default_rng(0)

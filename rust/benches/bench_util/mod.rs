@@ -1,23 +1,22 @@
 //! Shared harness for the perf-trajectory micro-benches (`prep`,
-//! `allreduce`): Criterion-style statistics without an external
-//! dependency, the `--quick` fast path CI's `bench-trajectory` job
-//! runs per PR, and the `BENCH_*.json` snapshot writer — one schema,
-//! one timing methodology, however many bench binaries.
+//! `allreduce`, `replica`, `serve`): Criterion-style statistics without
+//! an external dependency, the `--quick` fast path CI's
+//! `bench-trajectory` job runs per PR, and the `BENCH_*.json` snapshot
+//! writer (serialised by `gnn_pipe::metrics::write_bench_snapshot` —
+//! one schema, one timing methodology, however many bench binaries).
 //!
 //! Lives in a subdirectory so cargo's bench auto-discovery ignores it;
 //! each bench pulls it in with `mod bench_util;`.
 
-use std::fmt::Write as _;
 use std::path::Path;
 use std::time::Instant;
 
-pub struct Sample {
-    pub name: String,
-    pub iters: usize,
-    pub mean_s: f64,
-    pub std_s: f64,
-    pub min_s: f64,
-}
+use gnn_pipe::metrics::write_bench_snapshot;
+
+/// The snapshot sample type lives in the library
+/// (`metrics::BenchSample`) so `bench serve`'s writer and this one
+/// share a single schema implementation.
+pub use gnn_pipe::metrics::BenchSample as Sample;
 
 /// `--quick` after `--`: the per-PR CI fast path.
 pub fn quick_mode() -> bool {
@@ -53,15 +52,7 @@ pub fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) -> Sample {
         std_s: var.sqrt(),
         min_s: min,
     };
-    let unit = |v: f64| {
-        if v >= 1.0 {
-            format!("{v:.3} s")
-        } else if v >= 1e-3 {
-            format!("{:.3} ms", v * 1e3)
-        } else {
-            format!("{:.3} us", v * 1e6)
-        }
-    };
+    let unit = gnn_pipe::metrics::fmt_seconds;
     println!(
         "{name:<44} {:>12} ± {:>10}  (min {:>10}, {iters} iters)",
         unit(s.mean_s),
@@ -71,25 +62,11 @@ pub fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) -> Sample {
     s
 }
 
-/// Write the perf-trajectory snapshot: `{"bench": ..., <extras>,
-/// "samples": [...]}`. `extras` values are raw JSON (pre-quote
-/// strings; numbers/bools as-is), emitted in order after the bench
-/// name so existing snapshot readers keep their field order.
+/// Write the perf-trajectory snapshot through the shared library
+/// writer (`metrics::write_bench_snapshot` — one schema, one
+/// serializer, however many bench binaries).
 pub fn write_snapshot(path: &Path, bench_name: &str, extras: &[(&str, String)], samples: &[Sample]) {
-    let mut json = format!("{{\n  \"bench\": \"{bench_name}\",\n");
-    for (k, v) in extras {
-        let _ = writeln!(json, "  \"{k}\": {v},");
-    }
-    json.push_str("  \"samples\": [\n");
-    for (i, s) in samples.iter().enumerate() {
-        let _ = write!(
-            json,
-            "    {{\"name\": \"{}\", \"iters\": {}, \"mean_s\": {:.9}, \"std_s\": {:.9}, \"min_s\": {:.9}}}",
-            s.name, s.iters, s.mean_s, s.std_s, s.min_s
-        );
-        json.push_str(if i + 1 < samples.len() { ",\n" } else { "\n" });
-    }
-    json.push_str("  ]\n}\n");
-    std::fs::write(path, json).expect("write bench snapshot");
+    write_bench_snapshot(path, bench_name, extras, samples)
+        .expect("write bench snapshot");
     println!("wrote {}", path.display());
 }

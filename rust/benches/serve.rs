@@ -1,0 +1,137 @@
+//! Serving micro-benchmarks: the host-side cost of the request path
+//! and (where artifacts exist) the streaming pipeline's real serving
+//! capacity.
+//!
+//! Three sections, degrading gracefully by environment:
+//!
+//! 1. **request path**: deterministic trace generation, dynamic batch
+//!    planning, and the nearest-rank percentile summary at trace sizes
+//!    that dwarf any single replay (host-side, always runs);
+//! 2. **closed-form model**: `Scenarios::serve_latency` across a sweep
+//!    of operating points (host-side, always runs — it prices every
+//!    `bench serve` row, so its cost matters at sweep sizes);
+//! 3. **real streaming replay**: a full serve session over the compiled
+//!    forward-only pipeline, reporting throughput (skipped when `make
+//!    artifacts` has not run, or when the artifact dir predates the
+//!    `s*_eval_fwd` serving artifacts).
+//!
+//! Mean ± stddev per iteration, dumped to `BENCH_serve.json` at the
+//! repo root (CI's `bench-trajectory` job runs `-- --quick` and tracks
+//! the snapshots per commit).
+
+mod bench_util;
+
+use bench_util::{bench, quick_mode, scaled, write_snapshot};
+
+use gnn_pipe::config::Config;
+use gnn_pipe::data::generate;
+use gnn_pipe::metrics::percentiles;
+use gnn_pipe::runtime::Engine;
+use gnn_pipe::serve::{
+    plan_batches, poisson_trace, BatchPolicy, ServeSession, TraceSpec,
+};
+use gnn_pipe::simulator::Scenarios;
+use gnn_pipe::train::{flatten_params, init_params};
+
+fn main() {
+    let quick = quick_mode();
+    let iters = |n: usize| scaled(quick, n);
+    let cfg = Config::load().expect("configs");
+    println!(
+        "== serve microbench (request path + streaming replay{}) ==",
+        if quick { ", quick" } else { "" }
+    );
+
+    let mut samples = Vec::new();
+
+    // 1. The request path at 100k requests.
+    let spec = TraceSpec { rate_hz: 1000.0, requests: 100_000, seed: 17 };
+    let mut trace = Vec::new();
+    samples.push(bench("poisson_trace (100k requests)", iters(50), || {
+        trace = poisson_trace(&spec, 19_717);
+    }));
+    let policy = BatchPolicy { max_batch: 16, max_wait_s: 0.01 };
+    let mut n_batches = 0usize;
+    samples.push(bench("plan_batches (100k requests)", iters(50), || {
+        n_batches = plan_batches(&trace, &policy).len();
+    }));
+    println!("  ({n_batches} batches at B=16, 10ms)");
+    let latencies: Vec<f64> = trace.iter().map(|r| r.arrival_s).collect();
+    samples.push(bench("percentiles p50/p95/p99 (100k)", iters(50), || {
+        std::hint::black_box(percentiles(&latencies, &[50.0, 95.0, 99.0]));
+    }));
+
+    // 2. The closed-form model across a 1k-point sweep.
+    let stage_s = [0.004f64, 0.016, 0.008, 0.001];
+    samples.push(bench("serve_latency model (1k points)", iters(200), || {
+        let mut acc = 0.0f64;
+        for i in 0..1000 {
+            let rate = 1.0 + i as f64;
+            let m = Scenarios::serve_latency(&stage_s, rate, 8, 0.05);
+            acc += m.batch_size;
+        }
+        std::hint::black_box(acc);
+    }));
+
+    // 3. Real streaming replay, when the serving artifacts exist.
+    let mut throughput = None;
+    let have_artifacts = cfg.artifacts_dir().join("manifest.json").exists();
+    if have_artifacts {
+        let engine =
+            Engine::from_artifacts_dir(&cfg.artifacts_dir()).expect("engine");
+        let ds_name = cfg.pipeline.pipeline_dataset.clone();
+        if ServeSession::artifacts_available(&engine, &ds_name, "ell") {
+            let profile = cfg.dataset(&ds_name).unwrap().clone();
+            let ds = generate(&profile).unwrap();
+            let params = flatten_params(
+                &init_params(&profile, &cfg.model, cfg.serve.seed),
+                &engine.manifest.param_order,
+            )
+            .unwrap();
+            let requests = if quick { 16 } else { 64 };
+            let trace = poisson_trace(
+                &TraceSpec {
+                    rate_hz: cfg.serve.rate_hz,
+                    requests,
+                    seed: cfg.serve.seed,
+                },
+                profile.nodes,
+            );
+            let policy = BatchPolicy {
+                max_batch: cfg.serve.max_batch,
+                max_wait_s: cfg.serve.max_wait_ms / 1e3,
+            };
+            let session = ServeSession::new(&engine, &ds, "ell");
+            let mut last_thpt = 0.0;
+            let s = bench(
+                &format!("serve replay ({requests} requests, ell)"),
+                iters(10),
+                || {
+                    let out = session.run(&params, &trace, &policy).unwrap();
+                    last_thpt = out.report.throughput_rps;
+                },
+            );
+            println!("serving throughput: {last_thpt:.1} req/s");
+            throughput = Some(last_thpt);
+            samples.push(s);
+        } else {
+            println!(
+                "skipping real replay: {ds_name} serving artifacts not in \
+                 manifest (re-run `make artifacts`)"
+            );
+        }
+    } else {
+        println!("skipping real replay: artifacts missing (run `make artifacts`)");
+    }
+
+    let extras = [
+        ("quick", quick.to_string()),
+        (
+            "throughput_rps",
+            throughput
+                .map(|t| format!("{t:.3}"))
+                .unwrap_or_else(|| "null".to_string()),
+        ),
+    ];
+    write_snapshot(&cfg.root.join("BENCH_serve.json"), "serve", &extras, &samples);
+}

@@ -67,3 +67,73 @@ pub trait Chunker {
     fn plan(&self, g: &Graph, chunks: usize) -> ChunkPlan;
     fn name(&self) -> &'static str;
 }
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn plan(chunks: Vec<Vec<u32>>) -> ChunkPlan {
+        ChunkPlan { chunks }
+    }
+
+    #[test]
+    fn check_accepts_partitions_including_singletons() {
+        // Ordinary partition.
+        plan(vec![vec![0, 1], vec![2, 3]]).check(4).unwrap();
+        // All-singleton chunks are a valid (if extreme) plan — the
+        // serve-side induction leans on per-chunk correctness at any
+        // chunk size.
+        plan(vec![vec![0], vec![1], vec![2]]).check(3).unwrap();
+        // Chunk order need not be node order.
+        plan(vec![vec![2], vec![0, 1]]).check(3).unwrap();
+    }
+
+    #[test]
+    fn check_rejects_empty_plan_for_nonempty_node_set() {
+        let err = plan(vec![]).check(3).unwrap_err().to_string();
+        assert!(err.contains("misses nodes"), "{err}");
+        // ...but an empty plan over zero nodes is a valid partition.
+        plan(vec![]).check(0).unwrap();
+    }
+
+    #[test]
+    fn check_rejects_out_of_range_nodes() {
+        let err = plan(vec![vec![0, 3]]).check(3).unwrap_err().to_string();
+        assert!(err.contains("out of range"), "{err}");
+        // u32::MAX must not wrap into range.
+        assert!(plan(vec![vec![u32::MAX]]).check(3).is_err());
+    }
+
+    #[test]
+    fn check_rejects_duplicates_and_gaps() {
+        let err = plan(vec![vec![0, 1], vec![1, 2]])
+            .check(3)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("two chunks"), "{err}");
+        let err = plan(vec![vec![0, 2]]).check(3).unwrap_err().to_string();
+        assert!(err.contains("misses nodes"), "{err}");
+    }
+
+    #[test]
+    fn plan_accessors_cover_degenerate_shapes() {
+        let p = plan(vec![]);
+        assert_eq!(p.num_chunks(), 0);
+        assert_eq!(p.max_chunk_len(), 0);
+        let p = plan(vec![vec![0], vec![1, 2]]);
+        assert_eq!(p.num_chunks(), 2);
+        assert_eq!(p.max_chunk_len(), 2);
+    }
+
+    #[test]
+    fn induce_all_on_singleton_chunks_keeps_no_edges() {
+        let g = Graph::from_undirected_edges(3, &[(0, 1), (1, 2)]).unwrap();
+        let p = plan(vec![vec![0], vec![1], vec![2]]);
+        let subs = p.induce_all(&g);
+        assert_eq!(subs.len(), 3);
+        for s in &subs {
+            assert_eq!(s.graph.num_nodes(), 1);
+            assert_eq!(s.kept_edges, 0);
+        }
+    }
+}

@@ -68,6 +68,49 @@ mod tests {
     }
 
     #[test]
+    fn empty_plan_retains_nothing_but_never_divides_by_zero() {
+        let g = Graph::from_undirected_edges(4, &[(0, 1), (2, 3)]).unwrap();
+        let s = retention_stats(&g, &ChunkPlan { chunks: vec![] });
+        assert_eq!(s.chunks, 0);
+        assert_eq!(s.retained_edges, 0);
+        assert_eq!(s.retained_fraction, 0.0);
+        assert_eq!(s.stranded_nodes, 0);
+        // An edgeless graph reports full retention by convention
+        // (nothing to lose), whatever the plan.
+        let empty = Graph::from_undirected_edges(3, &[]).unwrap();
+        let s = retention_stats(&empty, &SequentialChunker.plan(&empty, 2));
+        assert_eq!(s.retained_fraction, 1.0);
+        assert_eq!(s.stranded_nodes, 0);
+    }
+
+    #[test]
+    fn singleton_chunks_strand_every_connected_node() {
+        // One-node chunks cut every edge: nodes 0..3 are all stranded,
+        // node 4 was isolated to begin with and is NOT counted.
+        let g = Graph::from_undirected_edges(5, &[(0, 1), (2, 3)]).unwrap();
+        let plan = ChunkPlan {
+            chunks: (0..5u32).map(|v| vec![v]).collect(),
+        };
+        let s = retention_stats(&g, &plan);
+        assert_eq!(s.retained_edges, 0);
+        assert_eq!(s.retained_fraction, 0.0);
+        assert_eq!(s.stranded_nodes, 4);
+    }
+
+    #[test]
+    fn partial_plans_report_only_covered_chunks() {
+        // retention_stats is defined over whatever chunks the plan has;
+        // a partial plan (used by serve-side induction tests) counts
+        // retention within its chunks only.
+        let g = Graph::from_undirected_edges(4, &[(0, 1), (2, 3)]).unwrap();
+        let plan = ChunkPlan { chunks: vec![vec![0, 1]] };
+        let s = retention_stats(&g, &plan);
+        assert_eq!(s.retained_edges, 1);
+        assert_eq!(s.total_edges, 2);
+        assert_eq!(s.retained_fraction, 0.5);
+    }
+
+    #[test]
     fn retention_decreases_with_chunks_on_random_graph() {
         use crate::util::rng::Rng;
         let mut rng = Rng::new(3);

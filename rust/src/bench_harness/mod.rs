@@ -28,12 +28,18 @@
 //! sweeps `--replicas` factorisations of one fixed total partition and
 //! prints pipe-only vs hybrid DGX projections side by side (see
 //! `simulator::Scenarios::hybrid_epoch`).
+//!
+//! The `serve` bench (E11) measures the request-driven path: the
+//! forward-only streaming pipeline replaying deterministic traffic
+//! traces at several (arrival-rate, max_batch) points, against the
+//! `Scenarios::serve_latency` closed-form model (see `crate::serve`).
 
 mod ablation;
 mod figures;
 mod hybrid;
 mod prep;
 mod runs;
+mod serve;
 mod table1;
 mod table2;
 
@@ -42,6 +48,7 @@ pub use figures::{bench_fig1, bench_fig2, bench_fig3, bench_fig4};
 pub use hybrid::bench_hybrid;
 pub use prep::bench_prep_modes;
 pub use runs::{BenchCtx, PipelineRun, SingleRun};
+pub use serve::bench_serve;
 pub use table1::bench_table1;
 pub use table2::bench_table2;
 

@@ -1,0 +1,207 @@
+//! E11 — serving: measured streaming-pipeline latency/throughput vs the
+//! closed-form model, across (arrival rate, max_batch) operating points.
+//!
+//! Each row replays one deterministic Poisson trace through the
+//! forward-only serve pipeline and prints the measured batch shape,
+//! throughput and total-latency tail next to
+//! `Scenarios::serve_latency`'s projection *fed with the row's own
+//! measured per-stage forward times* — so the model column prices the
+//! hardware the measured column ran on, and the comparison isolates the
+//! queueing/batching math.
+//!
+//! Two caveats the table states explicitly:
+//!
+//! * the replay is as-fast-as-possible, so the measured throughput is
+//!   the pipeline's *capacity* at that batch shape — compare it against
+//!   the model's capacity (`E[batch] / bottleneck`), not the offered
+//!   rate;
+//! * measured queueing is the batch-formation delay on the trace's
+//!   virtual timeline; the model's M/D/1 pipeline wait has no measured
+//!   twin (an offline replay never queues behind itself) and is
+//!   reported as model-only.
+//!
+//! Emits `serve.csv` and a `BENCH_serve.json` snapshot (same schema as
+//! the cargo-bench trajectory files; CI's trajectory job uses the
+//! `benches/serve.rs` writer instead — last writer wins locally).
+
+use std::fmt::Write as _;
+
+use anyhow::Result;
+
+use crate::metrics::{write_bench_snapshot, BenchSample, Table};
+use crate::serve::{poisson_trace, BatchPolicy, ServeSession, TraceSpec};
+use crate::simulator::Scenarios;
+use crate::train::{flatten_params, init_params};
+
+use super::{framework_label, BenchCtx};
+
+pub fn bench_serve(ctx: &BenchCtx) -> Result<String> {
+    let sc = &ctx.cfg.serve;
+    let backend = sc.backend.clone();
+    let ds_name = ctx.cfg.pipeline.pipeline_dataset.clone();
+    // Degrade gracefully on artifact dirs that predate the serving
+    // subsystem, so `bench all` still completes there.
+    if !ServeSession::artifacts_available(&ctx.engine, &ds_name, &backend) {
+        return Ok(format!(
+            "Serving — skipped: {ds_name}/{backend} serving artifacts not in \
+             the manifest (artifact dir predates the serving subsystem; \
+             re-run `make artifacts`)\n"
+        ));
+    }
+    let ds = ctx.dataset(&ds_name)?;
+    let profile = ctx.cfg.dataset(&ds_name)?;
+    let params_map = init_params(profile, &ctx.cfg.model, sc.seed);
+    let params = flatten_params(&params_map, &ctx.engine.manifest.param_order)?;
+    let session = ServeSession::new(&ctx.engine, ds, &backend);
+
+    // Three operating points around the configured defaults: a
+    // latency-bound trickle, the configured point, and a
+    // throughput-bound flood.
+    let wait_s = sc.max_wait_ms / 1e3;
+    let points: Vec<(f64, usize)> = vec![
+        (sc.rate_hz * 0.25, 1.max(sc.max_batch / 8)),
+        (sc.rate_hz, sc.max_batch),
+        (sc.rate_hz * 4.0, sc.max_batch * 4),
+    ];
+    let base_requests = sc.requests.max(8);
+
+    let mut table = Table::new(&[
+        "Rate req/s",
+        "B",
+        "Batches",
+        "Batch meas|model",
+        "Thpt meas req/s",
+        "Cap model req/s",
+        "p50|p95|p99 meas (ms)",
+        "Total model (ms)",
+        "Util model",
+    ]);
+    let mut csv = String::from(
+        "rate_hz,max_batch,max_wait_ms,requests,batches,mean_batch,model_batch,\
+         throughput_rps,model_capacity_rps,p50_s,p95_s,p99_s,mean_total_s,\
+         model_total_s,queue_p50_s,model_batch_wait_s,execute_mean_s,\
+         model_residence_s,model_utilization\n",
+    );
+    let mut snapshot: Vec<BenchSample> = Vec::new();
+
+    for &(rate, max_batch) in &points {
+        // Every batch is one full staged forward; cap the trace length
+        // so a small-batch row doesn't run 10x the forwards of a
+        // large-batch one (~<= 32 dispatches per row).
+        let requests = base_requests.min(32 * max_batch);
+        let trace = poisson_trace(
+            &TraceSpec { rate_hz: rate, requests, seed: sc.seed },
+            profile.nodes,
+        );
+        let policy = BatchPolicy { max_batch, max_wait_s: wait_s };
+        eprintln!(
+            "[bench] serve {ds_name}/{backend} rate={rate:.1} B={max_batch} \
+             wait={:.0}ms requests={requests}...",
+            sc.max_wait_ms
+        );
+        let out = session.run(&params, &trace, &policy)?;
+        let r = &out.report;
+        let model = Scenarios::serve_latency(
+            &r.stage_fwd_means_s,
+            rate,
+            max_batch,
+            wait_s,
+        );
+        let capacity = model.capacity_rps;
+
+        table.row(&[
+            format!("{rate:.1}"),
+            format!("{max_batch}"),
+            format!("{}", r.batches),
+            format!("{:.2}|{:.2}", r.mean_batch, model.batch_size),
+            format!("{:.1}", r.throughput_rps),
+            format!("{capacity:.1}"),
+            format!(
+                "{:.1}|{:.1}|{:.1}",
+                r.total.p50_s * 1e3,
+                r.total.p95_s * 1e3,
+                r.total.p99_s * 1e3
+            ),
+            if model.total_s.is_finite() {
+                format!("{:.1}", model.total_s * 1e3)
+            } else {
+                "inf (overload)".to_string()
+            },
+            format!("{:.2}", model.utilization),
+        ]);
+        let _ = writeln!(
+            csv,
+            "{rate},{max_batch},{},{requests},{},{:.4},{:.4},{:.3},{:.3},\
+             {:.6},{:.6},{:.6},{:.6},{:.6},{:.6},{:.6},{:.6},{:.6},{:.4}",
+            sc.max_wait_ms,
+            r.batches,
+            r.mean_batch,
+            model.batch_size,
+            r.throughput_rps,
+            capacity,
+            r.total.p50_s,
+            r.total.p95_s,
+            r.total.p99_s,
+            r.total.mean_s,
+            model.total_s,
+            r.queue.p50_s,
+            model.batch_wait_s,
+            r.execute.mean_s,
+            model.residence_s,
+            model.utilization,
+        );
+        let tag = format!("rate={rate:.0},B={max_batch}");
+        let mut point = |name: String, mean_s: f64| {
+            snapshot.push(BenchSample {
+                name,
+                iters: requests,
+                mean_s,
+                std_s: 0.0,
+                min_s: mean_s,
+            });
+        };
+        point(format!("cli serve total p50 ({tag})"), r.total.p50_s);
+        point(format!("cli serve total p99 ({tag})"), r.total.p99_s);
+        point(
+            format!("cli serve per-request service ({tag})"),
+            r.wall_s / requests as f64,
+        );
+    }
+    ctx.engine.clear_cache();
+
+    ctx.write_csv("serve.csv", &csv)?;
+    write_serve_snapshot(ctx, &snapshot)?;
+    Ok(format!(
+        "Serving — {} {ds_name} forward-only streaming pipeline, <={base_requests} requests/point, wait {:.0} ms (seed {})\n{}\n\
+         measured thpt is the replay capacity (offline replay: compare against \
+         Cap model, not the offered rate); p50/95/99 total = virtual batching \
+         delay + measured pipeline residence + row gather; the model column \
+         adds an M/D/1 pipeline wait the offline replay cannot exhibit\n",
+        framework_label(&backend),
+        sc.max_wait_ms,
+        sc.seed,
+        table.render()
+    ))
+}
+
+/// Write the `BENCH_serve.json` perf-trajectory snapshot through the
+/// shared serializer (`metrics::write_bench_snapshot` — the same one
+/// `benches/bench_util` uses, so the schema cannot drift).
+///
+/// Two writers share this filename by design (the serve perf point is
+/// one trajectory file): CI's is `cargo bench --bench serve -- --quick`
+/// (microbench samples, `quick: true`); this one is the full
+/// measured-vs-model operating-point sweep (`quick: false`, samples
+/// prefixed `cli`). `bench_diff.py` never cross-compares them — the
+/// quick flags differ, so a mixed prev/new pair prints an explicit
+/// "quick-mode mismatch — skipped" instead of bogus deltas.
+fn write_serve_snapshot(ctx: &BenchCtx, samples: &[BenchSample]) -> Result<()> {
+    let extras = [
+        ("quick", "false".to_string()),
+        ("source", "\"gnn-pipe bench serve\"".to_string()),
+    ];
+    let path = ctx.cfg.root.join("BENCH_serve.json");
+    write_bench_snapshot(&path, "serve", &extras, samples)?;
+    eprintln!("[bench] wrote {}", path.display());
+    Ok(())
+}

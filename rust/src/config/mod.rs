@@ -119,12 +119,46 @@ pub struct PipelineConfig {
     pub replica_threads: usize,
 }
 
+/// Serving defaults: the Rust view of `configs/serve.json` (all keys
+/// optional; the file itself is optional — older checkouts predate the
+/// serving subsystem). CLI flags on `gnn-pipe serve` override per run.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Aggregation backend to serve with ("ell" or "edgewise").
+    pub backend: String,
+    /// Offered load of the generated trace, requests/second.
+    pub rate_hz: f64,
+    /// Trace length in requests.
+    pub requests: usize,
+    /// Dynamic batcher: close a batch at this many requests...
+    pub max_batch: usize,
+    /// ...or this many milliseconds after it opened, whichever first.
+    pub max_wait_ms: f64,
+    /// Seed for the trace (arrivals + query nodes) and the served
+    /// parameter init — one number names the whole experiment.
+    pub seed: u64,
+}
+
+impl Default for ServeConfig {
+    fn default() -> ServeConfig {
+        ServeConfig {
+            backend: "ell".into(),
+            rate_hz: 32.0,
+            requests: 128,
+            max_batch: 8,
+            max_wait_ms: 250.0,
+            seed: 0,
+        }
+    }
+}
+
 #[derive(Debug, Clone)]
 pub struct Config {
     pub root: PathBuf,
     pub datasets: BTreeMap<String, DatasetProfile>,
     pub model: ModelConfig,
     pub pipeline: PipelineConfig,
+    pub serve: ServeConfig,
 }
 
 fn read_json(path: &Path) -> Result<Json> {
@@ -223,7 +257,32 @@ impl Config {
                 .unwrap_or(0),
         };
 
-        Ok(Config { root: root.to_path_buf(), datasets, model, pipeline })
+        // Optional file with optional keys: serving defaults.
+        let serve_path = root.join("configs/serve.json");
+        let mut serve = ServeConfig::default();
+        if serve_path.exists() {
+            let s = read_json(&serve_path)?;
+            if let Some(v) = s.get("backend").and_then(Json::as_str) {
+                serve.backend = v.to_string();
+            }
+            if let Some(v) = s.get("rate_hz").and_then(Json::as_f64) {
+                serve.rate_hz = v;
+            }
+            if let Some(v) = s.get("requests").and_then(Json::as_usize) {
+                serve.requests = v;
+            }
+            if let Some(v) = s.get("max_batch").and_then(Json::as_usize) {
+                serve.max_batch = v;
+            }
+            if let Some(v) = s.get("max_wait_ms").and_then(Json::as_f64) {
+                serve.max_wait_ms = v;
+            }
+            if let Some(v) = s.get("seed").and_then(Json::as_usize) {
+                serve.seed = v as u64;
+            }
+        }
+
+        Ok(Config { root: root.to_path_buf(), datasets, model, pipeline, serve })
     }
 
     pub fn dataset(&self, name: &str) -> Result<&DatasetProfile> {
@@ -259,6 +318,22 @@ mod tests {
         assert!(c.pipeline.replicas >= 1);
         // 0 = auto-resolve to min(replicas, cores) at group creation.
         assert_eq!(c.pipeline.replica_threads, 0);
+    }
+
+    #[test]
+    fn loads_serve_config() {
+        let c = Config::load().unwrap();
+        // configs/serve.json ships with the repo; its values must be
+        // sane whatever they are tuned to.
+        assert!(["ell", "edgewise"].contains(&c.serve.backend.as_str()));
+        assert!(c.serve.rate_hz > 0.0);
+        assert!(c.serve.requests > 0);
+        assert!(c.serve.max_batch >= 1);
+        assert!(c.serve.max_wait_ms >= 0.0);
+        // Defaults cover a missing file (older checkouts).
+        let d = ServeConfig::default();
+        assert_eq!(d.backend, "ell");
+        assert!(d.max_batch >= 1);
     }
 
     #[test]

@@ -16,8 +16,11 @@
 //!   a build-once cache, or an epoch-overlap prefetcher, with
 //!   device-resident static inputs), Adam, the training loops, the
 //!   device/DGX performance simulator (which replays the same schedules
-//!   and prep modes to price bubbles and stalls), and the bench harness
-//!   that regenerates every table and figure of the paper.
+//!   and prep modes to price bubbles and stalls), an inference serving
+//!   subsystem ([`serve`]: deterministic traffic traces, dynamic
+//!   request batching, a forward-only streaming schedule and
+//!   tail-latency accounting), and the bench harness that regenerates
+//!   every table and figure of the paper.
 //!
 //! Python never runs on the training path: after `make artifacts` the
 //! binary is self-contained, executing the HLO via the PJRT CPU client.
@@ -33,6 +36,7 @@ pub mod metrics;
 pub mod optim;
 pub mod pipeline;
 pub mod runtime;
+pub mod serve;
 pub mod simulator;
 pub mod testutil;
 pub mod train;

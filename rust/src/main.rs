@@ -8,9 +8,14 @@
 //!             [--schedule fill-drain|1f1b]
 //!             [--prep paper|cached|overlap]
 //!             [--star] [--graph-aware]               pipeline training
+//!   serve     [--backend B] [--rate R] [--requests N]
+//!             [--max-batch B] [--max-wait-ms W] [--seed S]
+//!                                                   replay a seeded request
+//!                                                   trace through the
+//!                                                   forward-only pipeline
 //!   bench     table1|table2|fig1|fig2|fig3|fig4|
 //!             ablation-chunker|edge-retention|
-//!             prep-modes|hybrid|all
+//!             prep-modes|hybrid|serve|all
 //!             [--epochs N] [--schedule S] [--prep P] [--replicas R]
 //!             [--replica-threads T]
 //!   inspect                                          artifact manifest summary
@@ -26,7 +31,9 @@ use gnn_pipe::data::generate;
 use gnn_pipe::graph::GraphStats;
 use gnn_pipe::pipeline::{parse_schedule, PipelineTrainer, PrepMode};
 use gnn_pipe::runtime::{Engine, Manifest};
-use gnn_pipe::train::SingleDeviceTrainer;
+use gnn_pipe::serve::{poisson_trace, BatchPolicy, ServeSession, TraceSpec};
+use gnn_pipe::simulator::Scenarios;
+use gnn_pipe::train::{flatten_params, init_params, SingleDeviceTrainer};
 use gnn_pipe::util::cli::Args;
 
 const USAGE: &str = "\
@@ -39,7 +46,9 @@ USAGE:
                      [--replica-threads T]
                      [--schedule fill-drain|1f1b] [--prep paper|cached|overlap]
                      [--star] [--graph-aware]
-  gnn-pipe bench     <table1|table2|fig1|fig2|fig3|fig4|ablation-chunker|edge-retention|prep-modes|hybrid|all>
+  gnn-pipe serve     [--backend <ell|edgewise>] [--rate R] [--requests N]
+                     [--max-batch B] [--max-wait-ms W] [--seed S]
+  gnn-pipe bench     <table1|table2|fig1|fig2|fig3|fig4|ablation-chunker|edge-retention|prep-modes|hybrid|serve|all>
                      [--epochs N] [--schedule fill-drain|1f1b] [--prep paper|cached|overlap]
                      [--replicas R] [--replica-threads T]
   gnn-pipe inspect
@@ -81,6 +90,24 @@ REPLICA THREADS (--replica-threads, default from configs/pipeline.json;
                reported as replica_cpu_s, so wall/cpu is the realised
                host-concurrency speedup.
   T = 1        the sequential replica loop (the pre-concurrency code path)
+
+SERVE (defaults from configs/serve.json; every number below is derived
+from the seed, so a run is replayable bit for bit):
+  A deterministic open-loop Poisson trace of node-classification
+  requests (--rate req/s, --requests N, --seed S) is grouped by the
+  dynamic batcher: a batch dispatches when it holds --max-batch
+  requests or --max-wait-ms after it opened, whichever comes first —
+  batching decisions are made on the trace's virtual timestamps, never
+  the wall clock. Dispatched batches stream through a forward-only
+  staged pipeline (the training engine's worker loop under the serve
+  schedule; no fill/drain between batches) over the device-resident
+  full-graph inputs; chunks=1 is lossless, so served logits are
+  bit-identical to `full_eval` on the same nodes. The report prints
+  throughput plus nearest-rank p50/p95/p99 of the per-request
+  queue/prep/execute/download spans; `bench serve` compares measured
+  numbers against the Scenarios::serve_latency closed-form model
+  (batch formation + M/D/1 queueing + pipeline residence) and writes
+  serve.csv + BENCH_serve.json.
 ";
 
 fn main() {
@@ -97,6 +124,7 @@ fn run() -> Result<()> {
         "data" => cmd_data(&args),
         "train" => cmd_train(&args),
         "pipeline" => cmd_pipeline(&args),
+        "serve" => cmd_serve(&args),
         "bench" => cmd_bench(&args),
         "inspect" => cmd_inspect(),
         _ => {
@@ -173,6 +201,8 @@ fn cmd_train(args: &Args) -> Result<()> {
     println!("epoch 1 (setup)    {:.4} s", res.timing.epoch1_s);
     println!("epochs 2-{epochs}      {:.3} s total", res.timing.epochs_rest_s);
     println!("avg epoch          {:.4} s", res.timing.avg_epoch_s());
+    let (p50, p95, p99) = res.timing.epoch_p50_p95_p99();
+    println!("epoch p50/p95/p99  {p50:.4} / {p95:.4} / {p99:.4} s (steady state)");
     println!("coordinator (opt)  {:.4} s total", res.timing.coordinator_s);
     println!(
         "final: train loss {:.4}  train acc {:.4}  val acc {:.4}  test acc {:.4}",
@@ -227,6 +257,8 @@ fn cmd_pipeline(args: &Args) -> Result<()> {
     println!("edge retention     {:.4}", res.retention.retained_fraction);
     println!("epoch 1 (setup)    {:.4} s", res.timing.epoch1_s);
     println!("avg epoch          {:.4} s", res.timing.avg_epoch_s());
+    let (p50, p95, p99) = res.timing.epoch_p50_p95_p99();
+    println!("epoch p50/p95/p99  {p50:.4} / {p95:.4} / {p99:.4} s (steady state)");
     println!("host rebuild       {:.4} s total (critical path)", res.timing.rebuild_s);
     println!("prep overlapped    {:.4} s total (hidden)", res.timing.prep_overlap_s);
     println!("allreduce (host)   {:.4} s total (deterministic tree)", res.timing.allreduce_s);
@@ -251,6 +283,66 @@ fn cmd_pipeline(args: &Args) -> Result<()> {
     for (s, (f, b)) in res.stage_means.iter().enumerate() {
         println!("stage {s}: mean fwd {:.2} ms, mean bwd {:.2} ms", f * 1e3, b * 1e3);
     }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let cfg = Config::load()?;
+    let sc = &cfg.serve;
+    let backend = args.opt_str("backend", &sc.backend).to_string();
+    let rate_hz = args.opt_f64("rate", sc.rate_hz)?;
+    let requests = args.opt_usize("requests", sc.requests)?;
+    let max_batch = args.opt_usize("max-batch", sc.max_batch)?;
+    let max_wait_ms = args.opt_f64("max-wait-ms", sc.max_wait_ms)?;
+    let seed = args.opt_usize("seed", sc.seed as usize)? as u64;
+    anyhow::ensure!(rate_hz > 0.0, "--rate must be positive");
+    anyhow::ensure!(requests > 0, "--requests must be positive");
+
+    // Serving artifacts exist for the pipeline dataset (chunks=1).
+    let dataset = cfg.pipeline.pipeline_dataset.clone();
+    let engine = Engine::from_artifacts_dir(&cfg.artifacts_dir())?;
+    let profile = cfg.dataset(&dataset)?;
+    let ds = generate(profile)?;
+    let trace = poisson_trace(
+        &TraceSpec { rate_hz, requests, seed },
+        profile.nodes,
+    );
+    let policy = BatchPolicy { max_batch, max_wait_s: max_wait_ms / 1e3 };
+
+    // Served parameters: the seeded init (training a model first is a
+    // separate concern; logits parity with full_eval holds for ANY
+    // parameter vector because both paths run the same math).
+    let params_map = init_params(profile, &cfg.model, seed);
+    let params = flatten_params(&params_map, &engine.manifest.param_order)?;
+
+    println!(
+        "serving {dataset}/{backend}: {requests} requests at {rate_hz:.1} req/s \
+         (max_batch {max_batch}, max_wait {max_wait_ms:.0} ms, seed {seed})..."
+    );
+    let session = ServeSession::new(&engine, &ds, &backend);
+    let out = session.run(&params, &trace, &policy)?;
+    print!("{}", out.report.render());
+
+    // The closed-form model at this operating point, priced with the
+    // run's own measured stage times.
+    let model = Scenarios::serve_latency(
+        &out.report.stage_fwd_means_s,
+        rate_hz,
+        max_batch,
+        max_wait_ms / 1e3,
+    );
+    println!(
+        "model (closed form): batch {:.2}  wait {:.1} ms + queue {} + residence {:.1} ms  util {:.2}",
+        model.batch_size,
+        model.batch_wait_s * 1e3,
+        if model.pipe_wait_s.is_finite() {
+            format!("{:.1} ms", model.pipe_wait_s * 1e3)
+        } else {
+            "inf (overload)".to_string()
+        },
+        model.residence_s * 1e3,
+        model.utilization,
+    );
     Ok(())
 }
 
@@ -285,6 +377,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
             "edge-retention" => bench::bench_edge_retention(ctx),
             "prep-modes" => bench::bench_prep_modes(ctx),
             "hybrid" => bench::bench_hybrid(ctx),
+            "serve" => bench::bench_serve(ctx),
             other => anyhow::bail!("unknown bench {other:?}"),
         }
     };
@@ -292,6 +385,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
         for name in [
             "table1", "table2", "fig1", "fig2", "fig3", "fig4",
             "ablation-chunker", "edge-retention", "prep-modes", "hybrid",
+            "serve",
         ] {
             outputs.push(run(name, &ctx)?);
         }

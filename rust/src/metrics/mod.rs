@@ -1,6 +1,9 @@
-//! Training/benchmark metrics: epoch timers, curves, and report emitters.
+//! Training/benchmark metrics: epoch timers, curves, nearest-rank
+//! percentiles (shared by the serving subsystem's tail-latency
+//! summaries and the epoch-timing reports), and report emitters.
 
 use std::fmt::Write as _;
+use std::path::Path;
 use std::time::Instant;
 
 /// Wall-clock timing of one training run, separated the way the paper's
@@ -58,6 +61,47 @@ impl RunTiming {
     pub fn total_s(&self) -> f64 {
         self.epoch1_s + self.epochs_rest_s
     }
+
+    /// Tail view of the per-epoch wall-clocks: (p50, p95, p99) over
+    /// `per_epoch_s` excluding epoch 1 (the compile/setup epoch, which
+    /// the paper also reports separately). Falls back to all epochs
+    /// when only one was run. Zeros when no epochs were recorded.
+    pub fn epoch_p50_p95_p99(&self) -> (f64, f64, f64) {
+        let steady = if self.per_epoch_s.len() > 1 {
+            &self.per_epoch_s[1..]
+        } else {
+            &self.per_epoch_s[..]
+        };
+        p50_p95_p99(steady)
+    }
+}
+
+/// Nearest-rank percentiles over an unsorted sample: for each `q` in
+/// percent (0 < q <= 100), the smallest element such that at least
+/// `q`% of the sample is <= it (`sorted[ceil(q/100 * n) - 1]`). The
+/// canonical latency-reporting convention: p99 is an actually-observed
+/// value, never an interpolation. Returns 0.0 per quantile on an empty
+/// sample; `q <= 0` clamps to the minimum, `q >= 100` to the maximum.
+pub fn percentiles(xs: &[f64], qs: &[f64]) -> Vec<f64> {
+    if xs.is_empty() {
+        return vec![0.0; qs.len()];
+    }
+    let mut sorted = xs.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).expect("NaN in percentile input"));
+    let n = sorted.len();
+    qs.iter()
+        .map(|&q| {
+            let rank = ((q / 100.0) * n as f64).ceil() as isize;
+            let idx = rank.clamp(1, n as isize) - 1;
+            sorted[idx as usize]
+        })
+        .collect()
+}
+
+/// The serving subsystem's standard latency summary points.
+pub fn p50_p95_p99(xs: &[f64]) -> (f64, f64, f64) {
+    let p = percentiles(xs, &[50.0, 95.0, 99.0]);
+    (p[0], p[1], p[2])
 }
 
 /// Accuracy/loss curve over epochs.
@@ -107,6 +151,58 @@ impl Curve {
         }
         out
     }
+}
+
+/// Human-readable seconds with an adaptive unit — the one formatter
+/// shared by the serving latency report and the bench harness.
+pub fn fmt_seconds(v: f64) -> String {
+    if v >= 1.0 {
+        format!("{v:.3} s")
+    } else if v >= 1e-3 {
+        format!("{:.3} ms", v * 1e3)
+    } else {
+        format!("{:.3} us", v * 1e6)
+    }
+}
+
+/// One sample of a perf-trajectory snapshot (`BENCH_*.json`) — the
+/// schema `scripts/bench_diff.py` consumes. Shared by the cargo-bench
+/// harness (`rust/benches/bench_util`) and `bench serve`, so the
+/// snapshot writers cannot drift apart.
+#[derive(Debug, Clone)]
+pub struct BenchSample {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub std_s: f64,
+    pub min_s: f64,
+}
+
+/// Write a perf-trajectory snapshot: `{"bench": ..., <extras>,
+/// "samples": [...]}`. `extras` values are raw JSON (pre-quote strings;
+/// numbers/bools as-is), emitted in order after the bench name so
+/// existing snapshot readers keep their field order.
+pub fn write_bench_snapshot(
+    path: &Path,
+    bench_name: &str,
+    extras: &[(&str, String)],
+    samples: &[BenchSample],
+) -> std::io::Result<()> {
+    let mut json = format!("{{\n  \"bench\": \"{bench_name}\",\n");
+    for (k, v) in extras {
+        let _ = writeln!(json, "  \"{k}\": {v},");
+    }
+    json.push_str("  \"samples\": [\n");
+    for (i, s) in samples.iter().enumerate() {
+        let _ = write!(
+            json,
+            "    {{\"name\": \"{}\", \"iters\": {}, \"mean_s\": {:.9}, \"std_s\": {:.9}, \"min_s\": {:.9}}}",
+            s.name, s.iters, s.mean_s, s.std_s, s.min_s
+        );
+        json.push_str(if i + 1 < samples.len() { ",\n" } else { "\n" });
+    }
+    json.push_str("  ]\n}\n");
+    std::fs::write(path, json)
 }
 
 /// Simple scoped timer.
@@ -181,6 +277,52 @@ mod tests {
         };
         assert!((t.avg_epoch_s() - 1.0).abs() < 1e-12);
         assert!((t.total_s() - 19.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fmt_seconds_picks_units() {
+        assert_eq!(fmt_seconds(2.5), "2.500 s");
+        assert_eq!(fmt_seconds(0.0025), "2.500 ms");
+        assert_eq!(fmt_seconds(0.0000025), "2.500 us");
+    }
+
+    #[test]
+    fn percentiles_nearest_rank() {
+        // Classic nearest-rank worked example: n = 5.
+        let xs = [15.0, 20.0, 35.0, 40.0, 50.0];
+        assert_eq!(percentiles(&xs, &[30.0]), vec![20.0]);
+        assert_eq!(percentiles(&xs, &[40.0]), vec![20.0]);
+        assert_eq!(percentiles(&xs, &[50.0]), vec![35.0]);
+        assert_eq!(percentiles(&xs, &[100.0]), vec![50.0]);
+        // Unsorted input is handled; p99 of a small sample is the max.
+        let xs = [3.0, 1.0, 2.0];
+        assert_eq!(percentiles(&xs, &[50.0, 99.0]), vec![2.0, 3.0]);
+        // Out-of-range quantiles clamp instead of panicking.
+        assert_eq!(percentiles(&xs, &[0.0]), vec![1.0]);
+        assert_eq!(percentiles(&xs, &[150.0]), vec![3.0]);
+    }
+
+    #[test]
+    fn percentiles_edge_cases() {
+        assert_eq!(percentiles(&[], &[50.0, 99.0]), vec![0.0, 0.0]);
+        assert_eq!(percentiles(&[7.0], &[50.0, 95.0, 99.0]), vec![7.0; 3]);
+        let (p50, p95, p99) = p50_p95_p99(&[1.0, 2.0]);
+        assert_eq!((p50, p95, p99), (1.0, 2.0, 2.0));
+    }
+
+    #[test]
+    fn epoch_percentiles_exclude_the_setup_epoch() {
+        let t = RunTiming {
+            per_epoch_s: vec![10.0, 1.0, 2.0, 3.0, 4.0],
+            ..Default::default()
+        };
+        let (p50, _, p99) = t.epoch_p50_p95_p99();
+        assert_eq!(p50, 2.0);
+        assert_eq!(p99, 4.0);
+        // Single-epoch runs fall back to that epoch; empty runs to zero.
+        let t1 = RunTiming { per_epoch_s: vec![10.0], ..Default::default() };
+        assert_eq!(t1.epoch_p50_p95_p99(), (10.0, 10.0, 10.0));
+        assert_eq!(RunTiming::default().epoch_p50_p95_p99(), (0.0, 0.0, 0.0));
     }
 
     #[test]

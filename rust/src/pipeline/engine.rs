@@ -12,6 +12,15 @@
 //! own them, in FIFO micro-batch order under every schedule, so the
 //! summed gradients are schedule-invariant bit for bit.
 //!
+//! The same worker loop also drives the serving subsystem's
+//! forward-only path ([`PipelineEngine::run_forward`]): a forward-only
+//! spec + the `ServeStream` schedule stream inference batches through
+//! the stages with no backward, no stash and no gradient state, and the
+//! final stage hands each batch's output to a caller-supplied
+//! [`BatchSink`] the moment it completes (the serving subsystem gathers
+//! the requested logit rows there and stamps per-batch completion
+//! times).
+//!
 //! Everything crossing a stage boundary is a `HostTensor` copy; on the
 //! paper's DGX those copies are the NVLink/PCIe transfers, and the
 //! device simulator prices them from the same shapes — and replays the
@@ -48,7 +57,7 @@
 //! [`FillDrain`]: super::FillDrain
 
 use std::collections::BTreeMap;
-use std::sync::mpsc::{self, Receiver, Sender};
+use std::sync::mpsc::{self, Receiver, Sender, SyncSender};
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -126,6 +135,64 @@ pub struct PipelineEngine {
 
 type Msg = (usize, HostTensor);
 
+/// A stage-link sender. Training runs use unbounded channels (a
+/// schedule's event structure already caps in-flight work at the
+/// micro-batch count, which is small). Forward-only serving runs use
+/// *bounded* forward links instead: a trace can carry thousands of
+/// batches, and without backpressure a fast stage 0 would pile one
+/// full-graph activation per in-flight batch into the channel to the
+/// bottleneck stage. A bounded send blocks the producer — safe here
+/// because the link graph is an acyclic chain — so in-flight
+/// activations are capped at `SERVE_LINK_DEPTH + 1` per boundary.
+enum LinkTx {
+    Unbounded(Sender<Msg>),
+    Bounded(SyncSender<Msg>),
+}
+
+impl LinkTx {
+    fn send(&self, v: Msg) -> Result<(), mpsc::SendError<Msg>> {
+        match self {
+            LinkTx::Unbounded(t) => t.send(v),
+            LinkTx::Bounded(t) => t.send(v),
+        }
+    }
+}
+
+/// Queued batches per forward link in a forward-only (serving) run.
+const SERVE_LINK_DEPTH: usize = 2;
+
+/// Consumer of final-stage forward outputs in a forward-only run: called
+/// with `(batch index, primary output)` from the final stage's worker
+/// thread, strictly in batch order (the serve schedule is FIFO). An
+/// error tears the run down like any stage failure.
+pub type BatchSink<'s> = &'s (dyn Fn(usize, HostTensor) -> Result<()> + Sync);
+
+/// Where a worker's micro-batches come from: one entry per batch (the
+/// training path), or one shared entry every batch re-reads (the serve
+/// path, where every inference batch runs over the same device-resident
+/// full-graph tensors and only the requested output rows differ).
+#[derive(Clone, Copy)]
+enum MbSource<'a> {
+    PerBatch(&'a [Microbatch]),
+    Shared(&'a Microbatch, usize),
+}
+
+impl<'a> MbSource<'a> {
+    fn len(&self) -> usize {
+        match self {
+            MbSource::PerBatch(s) => s.len(),
+            MbSource::Shared(_, n) => *n,
+        }
+    }
+
+    fn get(&self, m: usize) -> &'a Microbatch {
+        match self {
+            MbSource::PerBatch(s) => &s[m],
+            MbSource::Shared(mb, _) => mb,
+        }
+    }
+}
+
 impl PipelineEngine {
     pub fn new(
         engine: &Engine,
@@ -136,6 +203,11 @@ impl PipelineEngine {
         schedule: Arc<dyn Schedule>,
     ) -> Result<PipelineEngine> {
         spec.validate()?;
+        anyhow::ensure!(
+            !spec.forward_only,
+            "forward-only specs have no backward artifacts; build them \
+             with PipelineEngine::new_forward_only"
+        );
         let name = |kind: &str| format!("{dataset}_{backend}_c{chunks}_{kind}");
         let mut artifact_names = Vec::with_capacity(2 * spec.stages.len());
         let mut execs = Vec::with_capacity(spec.stages.len());
@@ -160,6 +232,45 @@ impl PipelineEngine {
         })
     }
 
+    /// Build an inference-only pipeline from a forward-only spec: only
+    /// the forward executables are loaded (the spec's `bwd_kind`s are
+    /// placeholders — each stage's `bwd` slot aliases its `fwd` and is
+    /// never invoked, because the only entry point,
+    /// [`PipelineEngine::run_forward`], rejects schedules that emit
+    /// backward events).
+    pub fn new_forward_only(
+        engine: &Engine,
+        dataset: &str,
+        backend: &str,
+        chunks: usize,
+        spec: PipelineSpec,
+        schedule: Arc<dyn Schedule>,
+    ) -> Result<PipelineEngine> {
+        spec.validate()?;
+        anyhow::ensure!(
+            spec.forward_only,
+            "PipelineEngine::new_forward_only requires a forward-only spec"
+        );
+        let name = |kind: &str| format!("{dataset}_{backend}_c{chunks}_{kind}");
+        let mut artifact_names = Vec::with_capacity(spec.stages.len());
+        let mut execs = Vec::with_capacity(spec.stages.len());
+        for st in &spec.stages {
+            let fwd_name = name(&st.fwd_kind);
+            let fwd = engine.executable(&fwd_name)?;
+            execs.push(StageExec { bwd: fwd.clone(), fwd });
+            artifact_names.push(fwd_name);
+        }
+        Ok(PipelineEngine {
+            spec,
+            schedule,
+            execs,
+            chunks,
+            backend: backend.to_string(),
+            artifact_names,
+            device_resident: false,
+        })
+    }
+
     pub fn spec(&self) -> &PipelineSpec {
         &self.spec
     }
@@ -168,23 +279,35 @@ impl PipelineEngine {
         self.schedule.name()
     }
 
+    /// Each stage executable exactly once: forward-only engines alias
+    /// `bwd` to `fwd`, and counting the aliased slot would double every
+    /// stat a serving run reports.
+    fn unique_execs(&self) -> impl Iterator<Item = &Executable> + '_ {
+        self.execs
+            .iter()
+            .flat_map(|e| {
+                let aliased = Arc::ptr_eq(&e.fwd, &e.bwd);
+                [
+                    Some(e.fwd.as_ref()),
+                    if aliased { None } else { Some(e.bwd.as_ref()) },
+                ]
+            })
+            .flatten()
+    }
+
     /// Cumulative host↔device transfer seconds (upload + download)
     /// across every stage executable — snapshot before/after a run for
     /// the `transfer_s` metric (executables are process-cached, so the
     /// raw totals span the engine's lifetime, not one run).
     pub fn transfer_seconds(&self) -> f64 {
-        self.execs
-            .iter()
-            .flat_map(|e| [&e.fwd, &e.bwd])
+        self.unique_execs()
             .map(|e| e.exec_stats().transfer_s())
             .sum()
     }
 
     /// Static-input cache hits across every stage executable.
     pub fn static_hits(&self) -> u64 {
-        self.execs
-            .iter()
-            .flat_map(|e| [&e.fwd, &e.bwd])
+        self.unique_execs()
             .map(|e| e.exec_stats().static_hits)
             .sum()
     }
@@ -192,9 +315,8 @@ impl PipelineEngine {
     /// Drop all device-resident static input buffers held by this
     /// pipeline's stage executables.
     pub fn clear_static_buffers(&self) {
-        for e in &self.execs {
-            e.fwd.clear_static_buffers();
-            e.bwd.clear_static_buffers();
+        for e in self.unique_execs() {
+            e.clear_static_buffers();
         }
     }
 
@@ -212,6 +334,54 @@ impl PipelineEngine {
         key: (u32, u32),
     ) -> Result<EpochOutput> {
         anyhow::ensure!(
+            !self.spec.forward_only,
+            "run_epoch trains; forward-only pipelines serve through run_forward"
+        );
+        self.execute(params, MbSource::PerBatch(microbatches), key, None)
+    }
+
+    /// Run a forward-only streaming pass: `batches` inference batches
+    /// through the stage workers under this engine's (forward-only)
+    /// schedule, every batch reading the same shared micro-batch `mb`
+    /// (the device-resident full-graph inputs; with `device_resident`
+    /// on, uploads happen once and every subsequent batch is a
+    /// static-cache hit). The final stage delivers each batch's primary
+    /// output to `sink` the moment it completes, in batch order, from
+    /// the final worker's thread. The returned [`EpochOutput`] carries
+    /// the per-stage timings and wall-clock; its training fields
+    /// (loss/grads/logp) are zero/empty.
+    pub fn run_forward(
+        &self,
+        params: &[HostTensor],
+        mb: &Microbatch,
+        batches: usize,
+        sink: BatchSink<'_>,
+    ) -> Result<EpochOutput> {
+        anyhow::ensure!(
+            self.spec.forward_only,
+            "run_forward serves; training pipelines step through run_epoch"
+        );
+        // A backward event under a forward-only spec is rejected inside
+        // the worker (the event lists are only materialised once, in
+        // execute()). The key is irrelevant: validate() guarantees
+        // forward-only specs declare no dropout-key input.
+        self.execute(params, MbSource::Shared(mb, batches), (0, 0), Some(sink))
+    }
+
+    /// Shared core of [`run_epoch`] and [`run_forward`]: spawn one
+    /// worker per stage over the schedule's event lists and merge the
+    /// worker outputs.
+    ///
+    /// [`run_epoch`]: PipelineEngine::run_epoch
+    /// [`run_forward`]: PipelineEngine::run_forward
+    fn execute(
+        &self,
+        params: &[HostTensor],
+        microbatches: MbSource<'_>,
+        key: (u32, u32),
+        sink: Option<BatchSink<'_>>,
+    ) -> Result<EpochOutput> {
+        anyhow::ensure!(
             params.len() == self.spec.param_count,
             "expected {} flat params, got {}",
             self.spec.param_count,
@@ -221,27 +391,46 @@ impl PipelineEngine {
         anyhow::ensure!(m_count >= 1, "no micro-batches");
         let n_stages = self.spec.stages.len();
         // Workers borrow the micro-batches directly (scoped threads): no
-        // per-epoch clone of the full prepared set.
-        let keys: Vec<HostTensor> = (0..m_count)
-            .map(|m| HostTensor::key(key.0.wrapping_add(m as u32), key.1))
-            .collect();
+        // per-epoch clone of the full prepared set. Forward-only specs
+        // are deterministic (validate() bans the Key input), so a long
+        // serve trace doesn't allocate one unread key tensor per batch.
+        let keys: Vec<HostTensor> = if self.spec.forward_only {
+            Vec::new()
+        } else {
+            (0..m_count)
+                .map(|m| HostTensor::key(key.0.wrapping_add(m as u32), key.1))
+                .collect()
+        };
 
         let wall = Instant::now();
 
         // One (fwd, bwd) channel pair per stage boundary: fwd b -> b+1,
         // bwd b+1 -> b. Receivers are not Clone, so build Option slots
-        // each worker takes from.
+        // each worker takes from. Forward links are bounded in
+        // forward-only (serving) runs — see [`LinkTx`] — so a long
+        // trace cannot pile activations into the channels.
+        let bounded = sink.is_some();
         let mut fwd_in: Vec<Option<Receiver<Msg>>> = (0..n_stages).map(|_| None).collect();
-        let mut fwd_out: Vec<Option<Sender<Msg>>> = (0..n_stages).map(|_| None).collect();
+        let mut fwd_out: Vec<Option<LinkTx>> = (0..n_stages).map(|_| None).collect();
         let mut bwd_in: Vec<Option<Receiver<Msg>>> = (0..n_stages).map(|_| None).collect();
-        let mut bwd_out: Vec<Option<Sender<Msg>>> = (0..n_stages).map(|_| None).collect();
+        let mut bwd_out: Vec<Option<LinkTx>> = (0..n_stages).map(|_| None).collect();
         for b in 0..n_stages - 1 {
-            let (ftx, frx) = mpsc::channel::<Msg>();
+            let (ftx, frx) = if bounded {
+                let (tx, rx) = mpsc::sync_channel::<Msg>(SERVE_LINK_DEPTH);
+                (LinkTx::Bounded(tx), rx)
+            } else {
+                let (tx, rx) = mpsc::channel::<Msg>();
+                (LinkTx::Unbounded(tx), rx)
+            };
             fwd_out[b] = Some(ftx);
             fwd_in[b + 1] = Some(frx);
-            let (btx, brx) = mpsc::channel::<Msg>();
-            bwd_out[b + 1] = Some(btx);
-            bwd_in[b] = Some(brx);
+            // Forward-only runs never carry a cotangent; skip the
+            // backward links entirely.
+            if !bounded {
+                let (btx, brx) = mpsc::channel::<Msg>();
+                bwd_out[b + 1] = Some(LinkTx::Unbounded(btx));
+                bwd_in[b] = Some(brx);
+            }
         }
 
         std::thread::scope(|scope| {
@@ -257,6 +446,7 @@ impl PipelineEngine {
                     keys: &keys,
                     device_resident: self.device_resident,
                     events: self.schedule.events(s, n_stages, m_count),
+                    sink,
                     fwd_in: fwd_in[s].take(),
                     fwd_out: fwd_out[s].take(),
                     bwd_in: bwd_in[s].take(),
@@ -345,15 +535,18 @@ struct StageWorker<'a> {
     bwd: Arc<Executable>,
     /// This stage's owned parameter slice (cloned per epoch).
     params: Vec<HostTensor>,
-    mbs: &'a [Microbatch],
+    mbs: MbSource<'a>,
     keys: &'a [HostTensor],
     /// Mark per-micro-batch static inputs for device residency.
     device_resident: bool,
     events: Vec<StageEvent>,
+    /// Forward-only runs: the final stage streams each batch's primary
+    /// output here instead of accumulating `logp`.
+    sink: Option<BatchSink<'a>>,
     fwd_in: Option<Receiver<Msg>>,
-    fwd_out: Option<Sender<Msg>>,
+    fwd_out: Option<LinkTx>,
     bwd_in: Option<Receiver<Msg>>,
-    bwd_out: Option<Sender<Msg>>,
+    bwd_out: Option<LinkTx>,
 }
 
 impl StageWorker<'_> {
@@ -364,17 +557,31 @@ impl StageWorker<'_> {
         let is_first = self.bwd_out.is_none();
         let mut fwd_inbox = self.fwd_in.take().map(OrderedInbox::new);
         let mut bwd_inbox = self.bwd_in.take().map(OrderedInbox::new);
-        let mut stash: Vec<Option<HostTensor>> = vec![None; m_count];
-        let mut acc: Vec<HostTensor> = self
-            .params
-            .iter()
-            .map(|p| HostTensor::zeros_f32(p.shape().to_vec()))
-            .collect();
+        // Only allocated where used: the stash only when this stage's
+        // backward replays its input, the gradient accumulators only in
+        // training runs (a forward-only run returns no gradients, and
+        // the Bwd guard below keeps `accumulate` unreachable).
+        let mut stash: Vec<Option<HostTensor>> = if self.spec.stashes_activation() {
+            vec![None; m_count]
+        } else {
+            Vec::new()
+        };
+        let mut acc: Vec<HostTensor> = if self.sink.is_some() {
+            Vec::new()
+        } else {
+            self.params
+                .iter()
+                .map(|p| HostTensor::zeros_f32(p.shape().to_vec()))
+                .collect()
+        };
         let mut timing = StageTiming::default();
         let mut loss_sum = 0.0f64;
         let mut mask_count = 0.0f64;
-        let mut logp: Vec<(Vec<u32>, Vec<f32>)> =
-            if is_loss { vec![Default::default(); m_count] } else { Vec::new() };
+        let mut logp: Vec<(Vec<u32>, Vec<f32>)> = if is_loss && self.sink.is_none() {
+            vec![Default::default(); m_count]
+        } else {
+            Vec::new()
+        };
         let busy = Instant::now();
 
         for &ev in &self.events {
@@ -404,14 +611,32 @@ impl StageWorker<'_> {
                         .with_context(|| format!("stage {} fwd has no outputs", self.stage))?;
                     if let Some(tx) = &self.fwd_out {
                         send_link(tx, m, primary, self.stage, "activation")?;
+                    } else if let Some(sink) = self.sink {
+                        // Forward-only run: stream the batch output out
+                        // the moment it exists (the serving subsystem
+                        // gathers requested rows and stamps completion).
+                        sink(m, primary).with_context(|| {
+                            format!("batch sink failed on batch {m}")
+                        })?;
                     } else {
                         // Final stage: the forward emits the log-probs
                         // the trainer records for training accuracy.
-                        logp[m] =
-                            (self.mbs[m].nodes.clone(), primary.as_f32()?.to_vec());
+                        logp[m] = (
+                            self.mbs.get(m).nodes.clone(),
+                            primary.as_f32()?.to_vec(),
+                        );
                     }
                 }
                 StageEvent::Bwd(m) => {
+                    // A sink marks a forward-only run: its (placeholder)
+                    // backward executable must never fire.
+                    anyhow::ensure!(
+                        self.sink.is_none(),
+                        "stage {}: schedule emitted Bwd({m}) in a \
+                         forward-only run (use a forward-only schedule \
+                         such as ServeStream)",
+                        self.stage
+                    );
                     let cotangent = match &mut bwd_inbox {
                         Some(inbox) => Some(inbox.recv(m, self.stage, "cotangent")?),
                         None => None,
@@ -478,7 +703,7 @@ impl StageWorker<'_> {
         m: usize,
         activation: Option<&'t HostTensor>,
     ) -> Result<Vec<ExecInput<'t>>> {
-        let mb = &self.mbs[m];
+        let mb = self.mbs.get(m);
         let resident = self.device_resident;
         // Slot layout inside one micro-batch's static-key space:
         // 0 = features, 1..=3 = graph tensors, 5 = labels, 6 = mask.
@@ -520,11 +745,11 @@ impl StageWorker<'_> {
 const STATIC_SLOT_BITS: u64 = 3;
 
 /// Send over a stage link, surfacing the failure instead of dropping it:
-/// a send only fails when the peer worker exited, so the error is marked
-/// "channel closed" and the epoch-level triage reports the peer's own
-/// error as the root cause.
+/// a send only fails when the peer worker exited (bounded sends block,
+/// they don't fail), so the error is marked "channel closed" and the
+/// epoch-level triage reports the peer's own error as the root cause.
 fn send_link(
-    tx: &Sender<Msg>,
+    tx: &LinkTx,
     m: usize,
     t: HostTensor,
     stage: usize,
@@ -608,6 +833,28 @@ mod tests {
     }
 
     #[test]
+    fn mb_source_shared_repeats_one_microbatch() {
+        let mb = Microbatch {
+            id: 7,
+            nodes: vec![0, 1],
+            x: HostTensor::zeros_f32(vec![2, 1]),
+            graph: vec![],
+            labels: HostTensor::s32(vec![2], vec![0, 0]),
+            mask: HostTensor::f32(vec![2], vec![1.0, 1.0]),
+            cut_edges: 0,
+        };
+        let src = MbSource::Shared(&mb, 5);
+        assert_eq!(src.len(), 5);
+        for m in 0..5 {
+            assert_eq!(src.get(m).id, 7);
+        }
+        let slice = [mb.clone()];
+        let src = MbSource::PerBatch(&slice);
+        assert_eq!(src.len(), 1);
+        assert_eq!(src.get(0).id, 7);
+    }
+
+    #[test]
     fn ordered_inbox_buffers_out_of_order_arrivals() {
         let (tx, rx) = mpsc::channel::<Msg>();
         tx.send((1, HostTensor::scalar_f32(1.0))).unwrap();
@@ -634,10 +881,39 @@ mod tests {
     fn send_link_reports_closed_channel() {
         let (tx, rx) = mpsc::channel::<Msg>();
         drop(rx);
+        let tx = LinkTx::Unbounded(tx);
         let err = send_link(&tx, 3, HostTensor::scalar_f32(0.0), 1, "cotangent")
             .unwrap_err()
             .to_string();
         assert!(err.contains("channel closed"), "{err}");
         assert!(err.contains("micro-batch 3"), "{err}");
+        let (tx, rx) = mpsc::sync_channel::<Msg>(SERVE_LINK_DEPTH);
+        drop(rx);
+        let tx = LinkTx::Bounded(tx);
+        let err = send_link(&tx, 0, HostTensor::scalar_f32(0.0), 2, "activation")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("channel closed"), "{err}");
+    }
+
+    #[test]
+    fn bounded_link_applies_backpressure_but_delivers_fifo() {
+        // A bounded serve link holds at most SERVE_LINK_DEPTH queued
+        // messages; a consumer draining them unblocks the producer and
+        // sees strict FIFO.
+        let (tx, rx) = mpsc::sync_channel::<Msg>(SERVE_LINK_DEPTH);
+        let tx = LinkTx::Bounded(tx);
+        let producer = std::thread::spawn(move || {
+            for m in 0..8usize {
+                send_link(&tx, m, HostTensor::scalar_f32(m as f32), 0, "activation")
+                    .unwrap();
+            }
+        });
+        let mut inbox = OrderedInbox::new(rx);
+        for m in 0..8usize {
+            let t = inbox.recv(m, 1, "activation").unwrap();
+            assert_eq!(t.scalar_value().unwrap(), m as f32);
+        }
+        producer.join().unwrap();
     }
 }

@@ -48,6 +48,15 @@
 //! DGX layout, and `simulator::host_concurrency_speedup` models the
 //! host-side speedup `bench hybrid` measures.
 //!
+//! The same engine also has a **forward-only serving mode**: a
+//! forward-only [`PipelineSpec`] (deterministic per-stage eval
+//! artifacts, no backward, no stash) plus the [`ServeStream`] schedule
+//! stream inference batches through the stage workers continuously —
+//! batch `m+1` occupies stage 0 while batch `m` is in stage 1 — with
+//! each completed batch delivered to a [`BatchSink`] as it leaves the
+//! final stage. The request-facing layer above it (dynamic batcher,
+//! traffic generator, latency accounting) lives in `crate::serve`.
+//!
 //! One training step:
 //!
 //! 1. **Chunk** — split the node tensor into `chunks` micro-batches
@@ -79,10 +88,12 @@ pub use chunkprep::{
     prepare_microbatches, prepare_microbatches_parallel, Microbatch,
 };
 pub use driver::{PipelineResult, PipelineTrainer};
-pub use engine::{EpochOutput, PipelineEngine, StageTiming};
+pub use engine::{BatchSink, EpochOutput, PipelineEngine, StageTiming};
 pub use prep::{
     spawn_prefetcher, MicrobatchCache, MicrobatchPool, PrefetchMsg, PrepMode,
 };
 pub use replica::ReplicaGroup;
-pub use schedule::{parse_schedule, FillDrain, OneFOneB, Schedule, StageEvent};
+pub use schedule::{
+    parse_schedule, FillDrain, OneFOneB, Schedule, ServeStream, StageEvent,
+};
 pub use spec::{PipelineSpec, StageInput, StageSpec};

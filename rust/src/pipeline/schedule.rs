@@ -6,7 +6,7 @@
 //! simulator replays the same events against projected stage times, so
 //! both price the same bubble structure.
 //!
-//! Two schedules ship:
+//! Three schedules ship:
 //!
 //! * [`FillDrain`] — GPipe: every stage runs all forwards, then all
 //!   backwards. Bubble fraction on uniform stage times is the classic
@@ -15,10 +15,18 @@
 //!   forwards, then alternates one-forward-one-backward, then drains.
 //!   Same bubble as fill-drain on uniform stages, but peak activation
 //!   stash drops from `M` to `S-s` micro-batches per stage.
+//! * [`ServeStream`] — the forward-only serving schedule: every stage
+//!   runs `Fwd(0..M)` back to back and no backward ever happens. With a
+//!   sustained stream of inference batches, every stage is busy from
+//!   its first batch to its last — the fill/drain bubble amortises to
+//!   the one-off pipeline fill, which is the serving regime the paper's
+//!   GPipe analysis predicts is bubble-free. Only valid on forward-only
+//!   specs (`PipelineSpec::forward_only`), driven through
+//!   `PipelineEngine::run_forward`.
 //!
-//! Both schedules keep per-stage micro-batch order FIFO in each
-//! direction, so gradient accumulation order — and therefore the summed
-//! gradients — are bitwise identical between them.
+//! The two training schedules keep per-stage micro-batch order FIFO in
+//! each direction, so gradient accumulation order — and therefore the
+//! summed gradients — are bitwise identical between them.
 
 use std::sync::Arc;
 
@@ -39,10 +47,13 @@ pub trait Schedule: Send + Sync {
     fn name(&self) -> &'static str;
 
     /// Ordered event list for stage `stage` of `stages`, over
-    /// `microbatches` micro-batches. Every micro-batch must appear
-    /// exactly once as `Fwd` and once as `Bwd`, in increasing
-    /// micro-batch order within each direction (FIFO), with `Fwd(m)`
-    /// preceding `Bwd(m)`.
+    /// `microbatches` micro-batches. Training schedules must emit every
+    /// micro-batch exactly once as `Fwd` and once as `Bwd`, in
+    /// increasing micro-batch order within each direction (FIFO), with
+    /// `Fwd(m)` preceding `Bwd(m)`. Forward-only schedules
+    /// ([`ServeStream`]) emit each micro-batch exactly once as `Fwd`,
+    /// FIFO, and no `Bwd` at all — the engine rejects them anywhere but
+    /// the forward-only entry point.
     fn events(&self, stage: usize, stages: usize, microbatches: usize) -> Vec<StageEvent>;
 }
 
@@ -89,6 +100,29 @@ impl Schedule for OneFOneB {
             ev.push(StageEvent::Bwd(i));
         }
         ev
+    }
+}
+
+/// Forward-only streaming schedule for the serving subsystem: each
+/// stage simply runs every batch's forward in arrival order. No
+/// warm-up, no drain, no backward — batch `m+1` enters stage 0 while
+/// batch `m` occupies stage 1, so under sustained load all stages stay
+/// busy across batch boundaries (the continuous-stream regime where
+/// GPipe's bubble is a one-off fill, not a per-batch cost).
+///
+/// Not a training schedule: `parse_schedule` (the `--schedule` flag)
+/// deliberately does not accept it, and `PipelineEngine::run_epoch`
+/// rejects forward-only specs. Use `PipelineEngine::run_forward`.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ServeStream;
+
+impl Schedule for ServeStream {
+    fn name(&self) -> &'static str {
+        "serve"
+    }
+
+    fn events(&self, _stage: usize, _stages: usize, microbatches: usize) -> Vec<StageEvent> {
+        (0..microbatches).map(StageEvent::Fwd).collect()
     }
 }
 
@@ -196,5 +230,21 @@ mod tests {
         assert_eq!(parse_schedule("1f1b").unwrap().name(), "1f1b");
         assert_eq!(parse_schedule("one-f-one-b").unwrap().name(), "1f1b");
         assert!(parse_schedule("round-robin").is_err());
+        // ServeStream is not a training schedule and must not parse.
+        assert!(parse_schedule("serve").is_err());
+    }
+
+    #[test]
+    fn serve_stream_is_forward_only_fifo() {
+        for stages in [2usize, 4] {
+            for m in [1usize, 3, 8] {
+                for s in 0..stages {
+                    let ev = ServeStream.events(s, stages, m);
+                    let expect: Vec<StageEvent> =
+                        (0..m).map(StageEvent::Fwd).collect();
+                    assert_eq!(ev, expect, "stage {s} of {stages}, m={m}");
+                }
+            }
+        }
     }
 }

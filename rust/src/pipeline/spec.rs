@@ -92,6 +92,14 @@ pub struct PipelineSpec {
     /// Total flat parameter count; the stage slices must tile exactly
     /// `[0, param_count)` (checked by [`PipelineSpec::validate`]).
     pub param_count: usize,
+    /// Inference-only pipeline: stages have no backward executables and
+    /// `bwd_kind`/`bwd_inputs` are ignored (conventionally `bwd_kind`
+    /// mirrors `fwd_kind` and `bwd_inputs` is empty). Forward-only
+    /// specs are executed exclusively through
+    /// `PipelineEngine::new_forward_only` + `run_forward` with a
+    /// forward-only schedule; the training constructor and `run_epoch`
+    /// reject them.
+    pub forward_only: bool,
 }
 
 impl PipelineSpec {
@@ -132,6 +140,41 @@ impl PipelineSpec {
                 },
             ],
             param_count: 8,
+            forward_only: false,
+        }
+    }
+
+    /// The serving counterpart of [`PipelineSpec::gat4`]: the same
+    /// [2,1,2,1] stage cut, but deterministic (dropout off, no key
+    /// input) and forward-only. Stages 0-2 run the `s{i}_eval_fwd`
+    /// artifacts (see `python/compile/stages.py`); stage 3 reuses the
+    /// training `s3_fwd` (LogSoftmax is already deterministic). At
+    /// chunks = 1 the micro-batch is the intact full graph, so the
+    /// staged forward computes exactly the fused `eval_fwd` evaluation
+    /// — the serve-vs-`full_eval` logit parity pinned by
+    /// `rust/tests/integration_serve.rs`.
+    pub fn gat4_serve() -> PipelineSpec {
+        use StageInput::{Activation, Features, Graph};
+        let fwd_stage = |kind: &str,
+                         params: (usize, usize),
+                         fwd_inputs: Vec<StageInput>| StageSpec {
+            fwd_kind: kind.into(),
+            // Placeholder only: forward-only engines never load or run
+            // a backward executable.
+            bwd_kind: kind.into(),
+            params,
+            fwd_inputs,
+            bwd_inputs: vec![],
+        };
+        PipelineSpec {
+            stages: vec![
+                fwd_stage("s0_eval_fwd", (0, 4), vec![Features, Graph]),
+                fwd_stage("s1_eval_fwd", (4, 4), vec![Activation]),
+                fwd_stage("s2_eval_fwd", (4, 8), vec![Activation, Graph]),
+                fwd_stage("s3_fwd", (8, 8), vec![Activation]),
+            ],
+            param_count: 8,
+            forward_only: true,
         }
     }
 
@@ -140,8 +183,12 @@ impl PipelineSpec {
     }
 
     /// Every artifact kind the engine will compile, fwd then bwd per
-    /// stage, in stage order.
+    /// stage, in stage order. Forward-only specs list only the forward
+    /// kinds (their `bwd_kind` is a placeholder, never compiled).
     pub fn artifact_kinds(&self) -> Vec<&str> {
+        if self.forward_only {
+            return self.stages.iter().map(|s| s.fwd_kind.as_str()).collect();
+        }
         self.stages
             .iter()
             .flat_map(|s| [s.fwd_kind.as_str(), s.bwd_kind.as_str()])
@@ -171,6 +218,26 @@ impl PipelineSpec {
                     "every stage after the first must consume the upstream activation"
                 }
             );
+            if self.forward_only {
+                // No backward ever runs: the bwd fields are placeholders
+                // and must stay empty so nothing is stashed per batch
+                // (a streaming serve run would otherwise accumulate one
+                // activation per batch, unbounded).
+                anyhow::ensure!(
+                    st.bwd_inputs.is_empty(),
+                    "stage {s}: forward-only specs must not declare \
+                     backward inputs"
+                );
+                // Serving forwards are deterministic: no dropout keys.
+                // (The engine relies on this to skip building the
+                // per-batch key tensors on long serve traces.)
+                anyhow::ensure!(
+                    !st.fwd_inputs.contains(&StageInput::Key),
+                    "stage {s}: forward-only specs must be deterministic \
+                     (no dropout-key input)"
+                );
+                continue;
+            }
             anyhow::ensure!(
                 s > 0 || !st.stashes_activation(),
                 "stage 0 has no upstream activation to stash for its backward"
@@ -239,6 +306,46 @@ mod tests {
         assert!(spec.stages[2].needs_graph());
         assert!(!spec.stages[0].stashes_activation());
         assert!(spec.stages[3].stashes_activation());
+    }
+
+    #[test]
+    fn gat4_serve_is_valid_and_forward_only() {
+        let spec = PipelineSpec::gat4_serve();
+        spec.validate().unwrap();
+        assert!(spec.forward_only);
+        assert_eq!(spec.num_stages(), 4);
+        // Forward kinds only: the placeholder bwd kinds never compile.
+        assert_eq!(
+            spec.artifact_kinds(),
+            vec!["s0_eval_fwd", "s1_eval_fwd", "s2_eval_fwd", "s3_fwd"]
+        );
+        // Same parameter tiling as the training spec (the serve path
+        // takes the identical flat parameter vector).
+        let train = PipelineSpec::gat4();
+        for (a, b) in spec.stages.iter().zip(&train.stages) {
+            assert_eq!(a.params, b.params);
+        }
+        // Nothing may be stashed per batch in a streaming serve run.
+        assert!(spec.stages.iter().all(|s| !s.stashes_activation()));
+        // No stage consumes a dropout key: the forward is deterministic.
+        assert!(spec
+            .stages
+            .iter()
+            .all(|s| !s.fwd_inputs.contains(&StageInput::Key)));
+    }
+
+    #[test]
+    fn validate_rejects_forward_only_with_bwd_inputs() {
+        let mut spec = PipelineSpec::gat4_serve();
+        spec.stages[1].bwd_inputs = vec![StageInput::Activation];
+        assert!(spec.validate().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_forward_only_with_dropout_key() {
+        let mut spec = PipelineSpec::gat4_serve();
+        spec.stages[1].fwd_inputs.push(StageInput::Key);
+        assert!(spec.validate().is_err());
     }
 
     #[test]

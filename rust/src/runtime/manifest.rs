@@ -178,6 +178,12 @@ impl Manifest {
             .ok_or_else(|| anyhow::anyhow!("artifact {name:?} not in manifest"))
     }
 
+    /// Whether an artifact exists — capability probing (e.g. "were the
+    /// serving artifacts generated?") without manufacturing an error.
+    pub fn has(&self, name: &str) -> bool {
+        self.artifacts.contains_key(name)
+    }
+
     pub fn hlo_path(&self, meta: &ArtifactMeta) -> PathBuf {
         self.dir.join(&meta.file)
     }

@@ -1,0 +1,211 @@
+//! Dynamic request batching: the `max_batch`/`max_wait` policy.
+//!
+//! Requests are grouped in arrival order. A batch opens at its first
+//! member's arrival and closes at the earlier of two triggers:
+//!
+//! * **fill** — the batch reaches `max_batch` members (closes at the
+//!   filling request's arrival time);
+//! * **deadline** — `max_wait_s` elapses after the batch opened with no
+//!   fill (closes at `open + max_wait_s`; the next arrival opens a
+//!   fresh batch). The trailing batch closes at its deadline too — an
+//!   open-loop server cannot know the stream ended.
+//!
+//! Closing decisions are a pure function of the trace's *virtual*
+//! timestamps, never of the wall clock, so batch composition — and with
+//! it every downstream latency event ordering — is exactly reproducible
+//! from `(seed, rate, policy)`. The per-request queueing delay
+//! (`close_s - arrival_s`) is bounded by `max_wait_s` by construction,
+//! which the tests pin as an invariant.
+
+use super::trace::Request;
+
+/// The dynamic-batching knobs (`configs/serve.json`: `max_batch`,
+/// `max_wait_ms`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BatchPolicy {
+    /// Close a batch as soon as it holds this many requests (>= 1;
+    /// 0 is treated as 1).
+    pub max_batch: usize,
+    /// Close a batch this many (virtual) seconds after it opened even
+    /// if it is not full.
+    pub max_wait_s: f64,
+}
+
+/// One closed batch: member request indices (into the trace, in arrival
+/// order) plus its open/close timestamps on the virtual timeline.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServeBatch {
+    /// Indices into the trace slice passed to [`plan_batches`].
+    pub requests: Vec<usize>,
+    /// Arrival of the first member.
+    pub open_s: f64,
+    /// When the batch was dispatched (fill or deadline trigger).
+    pub close_s: f64,
+}
+
+impl ServeBatch {
+    pub fn len(&self) -> usize {
+        self.requests.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.requests.is_empty()
+    }
+}
+
+/// Deterministically group a trace into dispatch batches under
+/// `policy`. Every request lands in exactly one batch; batches and
+/// their members are in arrival order.
+pub fn plan_batches(trace: &[Request], policy: &BatchPolicy) -> Vec<ServeBatch> {
+    let cap = policy.max_batch.max(1);
+    let wait = policy.max_wait_s.max(0.0);
+    let mut out = Vec::new();
+    let mut members: Vec<usize> = Vec::new();
+    let mut open = 0.0f64;
+    for (i, r) in trace.iter().enumerate() {
+        if !members.is_empty() && r.arrival_s > open + wait {
+            // Deadline fired before this arrival.
+            out.push(ServeBatch {
+                requests: std::mem::take(&mut members),
+                open_s: open,
+                close_s: open + wait,
+            });
+        }
+        if members.is_empty() {
+            open = r.arrival_s;
+        }
+        members.push(i);
+        if members.len() == cap {
+            out.push(ServeBatch {
+                requests: std::mem::take(&mut members),
+                open_s: open,
+                close_s: r.arrival_s,
+            });
+        }
+    }
+    if !members.is_empty() {
+        out.push(ServeBatch {
+            requests: members,
+            open_s: open,
+            close_s: open + wait,
+        });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(arrival_s: f64) -> Request {
+        Request { node: 0, arrival_s }
+    }
+
+    /// The batcher's contract, checked wholesale.
+    fn check_invariants(trace: &[Request], policy: &BatchPolicy) -> Vec<ServeBatch> {
+        let batches = plan_batches(trace, policy);
+        let cap = policy.max_batch.max(1);
+        let mut next = 0usize;
+        for b in &batches {
+            assert!(!b.is_empty(), "empty batch");
+            assert!(b.len() <= cap, "batch over capacity");
+            for &i in &b.requests {
+                assert_eq!(i, next, "requests must partition the trace in order");
+                next += 1;
+                let wait = b.close_s - trace[i].arrival_s;
+                assert!(
+                    (-1e-12..=policy.max_wait_s + 1e-12).contains(&wait),
+                    "request {i}: queue wait {wait} outside [0, max_wait]"
+                );
+            }
+            assert_eq!(b.open_s, trace[b.requests[0]].arrival_s);
+        }
+        assert_eq!(next, trace.len(), "every request must be batched");
+        batches
+    }
+
+    #[test]
+    fn empty_trace_yields_no_batches() {
+        let policy = BatchPolicy { max_batch: 8, max_wait_s: 0.1 };
+        assert!(plan_batches(&[], &policy).is_empty());
+    }
+
+    #[test]
+    fn fill_trigger_closes_at_the_filling_arrival() {
+        let trace: Vec<Request> = (0..6).map(|i| req(i as f64 * 0.01)).collect();
+        let policy = BatchPolicy { max_batch: 3, max_wait_s: 10.0 };
+        let batches = check_invariants(&trace, &policy);
+        assert_eq!(batches.len(), 2);
+        assert_eq!(batches[0].requests, vec![0, 1, 2]);
+        assert_eq!(batches[0].close_s, trace[2].arrival_s);
+        assert_eq!(batches[1].requests, vec![3, 4, 5]);
+    }
+
+    #[test]
+    fn deadline_trigger_closes_at_open_plus_wait() {
+        // Arrivals 1s apart, wait 0.5s: every request rides alone and
+        // closes exactly 0.5s after it arrived.
+        let trace: Vec<Request> = (0..4).map(|i| req(i as f64)).collect();
+        let policy = BatchPolicy { max_batch: 8, max_wait_s: 0.5 };
+        let batches = check_invariants(&trace, &policy);
+        assert_eq!(batches.len(), 4);
+        for (b, r) in batches.iter().zip(&trace) {
+            assert_eq!(b.len(), 1);
+            assert_eq!(b.close_s, r.arrival_s + 0.5);
+        }
+    }
+
+    #[test]
+    fn arrival_exactly_at_the_deadline_is_included() {
+        let trace = vec![req(0.0), req(0.5), req(0.500001)];
+        let policy = BatchPolicy { max_batch: 8, max_wait_s: 0.5 };
+        let batches = check_invariants(&trace, &policy);
+        assert_eq!(batches.len(), 2);
+        assert_eq!(batches[0].requests, vec![0, 1]);
+        assert_eq!(batches[1].requests, vec![2]);
+    }
+
+    #[test]
+    fn max_batch_one_dispatches_immediately() {
+        let trace: Vec<Request> = (0..5).map(|i| req(i as f64 * 0.1)).collect();
+        let policy = BatchPolicy { max_batch: 1, max_wait_s: 9.0 };
+        let batches = check_invariants(&trace, &policy);
+        assert_eq!(batches.len(), 5);
+        for (b, r) in batches.iter().zip(&trace) {
+            assert_eq!(b.close_s, r.arrival_s, "no queueing at max_batch=1");
+        }
+    }
+
+    #[test]
+    fn zero_wait_groups_only_simultaneous_arrivals() {
+        let trace = vec![req(0.0), req(0.0), req(1.0)];
+        let policy = BatchPolicy { max_batch: 8, max_wait_s: 0.0 };
+        let batches = check_invariants(&trace, &policy);
+        assert_eq!(batches.len(), 2);
+        assert_eq!(batches[0].requests, vec![0, 1]);
+    }
+
+    #[test]
+    fn invariants_hold_on_random_traces() {
+        use crate::serve::trace::{poisson_trace, TraceSpec};
+        use crate::testutil::prop;
+        prop::check(40, |rng| {
+            let spec = TraceSpec {
+                rate_hz: rng.range_f64(1.0, 500.0),
+                requests: 1 + rng.below(300),
+                seed: rng.next_u64(),
+            };
+            let policy = BatchPolicy {
+                max_batch: 1 + rng.below(16),
+                max_wait_s: rng.range_f64(0.0, 0.2),
+            };
+            let trace = poisson_trace(&spec, 50);
+            check_invariants(&trace, &policy);
+            // Determinism: identical inputs, identical plan.
+            assert_eq!(
+                plan_batches(&trace, &policy),
+                plan_batches(&trace, &policy)
+            );
+        });
+    }
+}

@@ -1,0 +1,184 @@
+//! Per-request latency spans and their tail summaries.
+//!
+//! Each served request's latency decomposes into four spans, mirroring
+//! its path through the subsystem:
+//!
+//! * `queue_s` — dynamic-batching delay (batch close - arrival), on the
+//!   trace's **virtual** timeline, so it is exactly reproducible;
+//! * `prep_s` — host-side batch assembly (amortised per request);
+//! * `execute_s` — **measured** pipeline residence of the request's
+//!   batch: from the batch's injection into stage 0 until the final
+//!   stage finished its forward;
+//! * `download_s` — gathering the request's logit rows out of the final
+//!   stage's output.
+//!
+//! Summaries use the crate-wide nearest-rank percentiles
+//! ([`crate::metrics::percentiles`]): p50/p95/p99 are observed values,
+//! the convention for tail-latency reporting.
+
+use std::fmt::Write as _;
+
+use crate::metrics::{fmt_seconds, p50_p95_p99};
+
+/// One request's span decomposition.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct RequestLatency {
+    pub queue_s: f64,
+    pub prep_s: f64,
+    pub execute_s: f64,
+    pub download_s: f64,
+}
+
+impl RequestLatency {
+    pub fn total_s(&self) -> f64 {
+        self.queue_s + self.prep_s + self.execute_s + self.download_s
+    }
+}
+
+/// Nearest-rank tail summary of one span across all requests.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct LatencySummary {
+    pub mean_s: f64,
+    pub p50_s: f64,
+    pub p95_s: f64,
+    pub p99_s: f64,
+    pub max_s: f64,
+}
+
+impl LatencySummary {
+    pub fn from_samples(xs: &[f64]) -> LatencySummary {
+        if xs.is_empty() {
+            return LatencySummary::default();
+        }
+        let (p50_s, p95_s, p99_s) = p50_p95_p99(xs);
+        LatencySummary {
+            mean_s: xs.iter().sum::<f64>() / xs.len() as f64,
+            p50_s,
+            p95_s,
+            p99_s,
+            max_s: xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max),
+        }
+    }
+
+    fn row(&self, label: &str) -> String {
+        format!(
+            "  {label:<9} mean {:>9}  p50 {:>9}  p95 {:>9}  p99 {:>9}  max {:>9}",
+            fmt_seconds(self.mean_s),
+            fmt_seconds(self.p50_s),
+            fmt_seconds(self.p95_s),
+            fmt_seconds(self.p99_s),
+            fmt_seconds(self.max_s),
+        )
+    }
+}
+
+/// The serving run's aggregate report: what the `serve` CLI prints and
+/// the `bench serve` table compares against `Scenarios::serve_latency`.
+#[derive(Debug, Clone, Default)]
+pub struct ServeReport {
+    pub backend: String,
+    pub requests: usize,
+    pub batches: usize,
+    /// Mean requests per dispatched batch.
+    pub mean_batch: f64,
+    pub max_batch_observed: usize,
+    /// Offered load implied by the trace (requests / trace span).
+    pub offered_rps: f64,
+    /// Service throughput: requests / pipeline wall-clock.
+    pub throughput_rps: f64,
+    /// Wall-clock of the streaming pipeline pass.
+    pub wall_s: f64,
+    /// One-off setup: micro-batch build + executable compile/warm-up.
+    pub setup_s: f64,
+    /// Total host-side batch-assembly seconds (amortised into `prep_s`).
+    pub prep_total_s: f64,
+    /// Device-resident static-input cache hits during the run — the
+    /// evidence the full-graph tensors uploaded once, not per batch.
+    pub static_hits: u64,
+    pub queue: LatencySummary,
+    pub prep: LatencySummary,
+    pub execute: LatencySummary,
+    pub download: LatencySummary,
+    pub total: LatencySummary,
+    /// Mean per-batch forward seconds per stage (feeds the closed-form
+    /// latency model's `stage_s`).
+    pub stage_fwd_means_s: Vec<f64>,
+}
+
+impl ServeReport {
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(
+            s,
+            "served {} requests in {} batches (mean {:.2}, max {} per batch)",
+            self.requests, self.batches, self.mean_batch, self.max_batch_observed
+        );
+        let _ = writeln!(
+            s,
+            "offered {:.1} req/s -> throughput {:.1} req/s  (pipeline wall {}, setup {}, static hits {})",
+            self.offered_rps,
+            self.throughput_rps,
+            fmt_seconds(self.wall_s),
+            fmt_seconds(self.setup_s),
+            self.static_hits,
+        );
+        let _ = writeln!(s, "{}", self.queue.row("queue"));
+        let _ = writeln!(s, "{}", self.prep.row("prep"));
+        let _ = writeln!(s, "{}", self.execute.row("execute"));
+        let _ = writeln!(s, "{}", self.download.row("download"));
+        let _ = writeln!(s, "{}", self.total.row("TOTAL"));
+        for (i, f) in self.stage_fwd_means_s.iter().enumerate() {
+            let _ = writeln!(s, "  stage {i}: mean fwd {}", fmt_seconds(*f));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_from_samples() {
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        let sum = LatencySummary::from_samples(&xs);
+        assert_eq!(sum.p50_s, 50.0);
+        assert_eq!(sum.p95_s, 95.0);
+        assert_eq!(sum.p99_s, 99.0);
+        assert_eq!(sum.max_s, 100.0);
+        assert!((sum.mean_s - 50.5).abs() < 1e-12);
+        assert_eq!(LatencySummary::from_samples(&[]), LatencySummary::default());
+    }
+
+    #[test]
+    fn total_adds_all_spans() {
+        let l = RequestLatency {
+            queue_s: 1.0,
+            prep_s: 0.25,
+            execute_s: 2.0,
+            download_s: 0.75,
+        };
+        assert_eq!(l.total_s(), 4.0);
+    }
+
+    #[test]
+    fn report_renders_the_headline_numbers() {
+        let r = ServeReport {
+            backend: "ell".into(),
+            requests: 10,
+            batches: 2,
+            mean_batch: 5.0,
+            max_batch_observed: 6,
+            offered_rps: 100.0,
+            throughput_rps: 50.0,
+            wall_s: 0.2,
+            setup_s: 1.0,
+            stage_fwd_means_s: vec![0.01, 0.02],
+            ..Default::default()
+        };
+        let out = r.render();
+        assert!(out.contains("10 requests in 2 batches"));
+        assert!(out.contains("throughput 50.0 req/s"));
+        assert!(out.contains("stage 1"));
+    }
+}

@@ -1,0 +1,45 @@
+//! Inference serving: the request-driven path the ROADMAP's north star
+//! asks for, layered on the training pipeline's engine.
+//!
+//! Training (PRs 1-4) drives the pipeline with epochs; serving drives
+//! it with *traffic*. This subsystem adds the three missing pieces and
+//! wires them to the existing `PipelineSpec`/`Schedule` machinery:
+//!
+//! * [`trace`] — a deterministic open-loop traffic generator:
+//!   Poisson-like arrivals + uniform query nodes from the crate's
+//!   seeded RNG, so every latency experiment is replayable from
+//!   `(seed, rate, requests)` alone.
+//! * [`batch`] — the dynamic batcher: requests group under a
+//!   `max_batch`/`max_wait` policy on the trace's virtual timeline,
+//!   trading per-request queueing delay for per-batch amortisation of
+//!   the full staged forward.
+//! * [`server`] — the session: dispatched batches stream through a
+//!   forward-only pipeline (`PipelineSpec::gat4_serve` under the
+//!   `ServeStream` schedule, executed by the same generic worker loop
+//!   training uses) over the device-resident full-graph micro-batch;
+//!   per-request queue/prep/execute/download spans aggregate into
+//!   p50/p95/p99 + throughput ([`latency`]).
+//!
+//! The measured numbers have a closed-form counterpart,
+//! `crate::simulator::Scenarios::serve_latency` (batch-formation delay
+//! + M/D/1 queueing at the bottleneck stage + pipeline residence);
+//! `bench serve` prints both side by side, and `benches/serve.rs`
+//! tracks the host-side pieces in CI's perf trajectory
+//! (`BENCH_serve.json`).
+//!
+//! Correctness contract (pinned by `rust/tests/integration_serve.rs`):
+//! served logits are bit-identical to `full_eval` on the same nodes —
+//! the chunks=1 serve micro-batch is lossless and the per-stage eval
+//! artifacts compute the fused evaluation's math — and replaying one
+//! trace twice yields bit-identical logits and the same completion
+//! ordering.
+
+pub mod batch;
+pub mod latency;
+pub mod server;
+pub mod trace;
+
+pub use batch::{plan_batches, BatchPolicy, ServeBatch};
+pub use latency::{LatencySummary, RequestLatency, ServeReport};
+pub use server::{ServeOutput, ServeSession};
+pub use trace::{poisson_trace, Request, TraceSpec};

@@ -1,0 +1,306 @@
+//! The serving session: trace in, latency-annotated logits out.
+//!
+//! ## Execution model
+//!
+//! Node classification on a *static* graph is served at full-graph
+//! shape: the one `chunks = 1` micro-batch (built through the shared
+//! [`MicrobatchCache`], induced once per plan like the training path —
+//! and lossless, because a single sequential chunk cuts no edges) stays
+//! resident on the device, and every dispatched batch drives one
+//! deterministic staged forward over it through the forward-only
+//! pipeline ([`PipelineSpec::gat4_serve`] + `ServeStream`). Batches
+//! stream: while batch `b` runs its GAT2 stage, batch `b+1` is already
+//! in GAT1 — under sustained load all stages stay busy and the
+//! fill/drain bubble is a one-off, which is exactly the serving claim
+//! of the paper's GPipe analysis. Memory stays bounded however long
+//! the trace is: the forward stage links are bounded channels (a fast
+//! stage 0 blocks instead of piling activations ahead of the
+//! bottleneck stage — see `pipeline::engine`'s `LinkTx`), and the
+//! final stage hands each batch's log-probs to a sink that keeps only
+//! the requested rows.
+//!
+//! Because the chunk is lossless and the stage cut is the trained
+//! model's, a served logit row is the *same* computation `full_eval`
+//! performs — serve-vs-`full_eval` parity and replay bit-identity are
+//! pinned by `rust/tests/integration_serve.rs`.
+//!
+//! ## What is measured vs modeled
+//!
+//! Queueing (batch-formation) delay lives on the trace's **virtual**
+//! timeline — a pure function of `(seed, rate, policy)`, reproducible
+//! bit for bit. Execution spans (pipeline residence, row gather) are
+//! **measured** on the replay. The two are reported as separate spans
+//! and summed into the per-request total, and the closed-form
+//! counterpart (`Scenarios::serve_latency`) prices the same
+//! decomposition so `bench serve` can put them side by side.
+//!
+//! [`MicrobatchCache`]: crate::pipeline::MicrobatchCache
+//! [`PipelineSpec::gat4_serve`]: crate::pipeline::PipelineSpec::gat4_serve
+
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::batching::{Chunker, SequentialChunker};
+use crate::data::Dataset;
+use crate::metrics::Timer;
+use crate::pipeline::{
+    MicrobatchCache, PipelineEngine, PipelineSpec, ServeStream,
+};
+use crate::runtime::{Engine, HostTensor};
+
+use super::batch::{plan_batches, BatchPolicy};
+use super::latency::{LatencySummary, RequestLatency, ServeReport};
+use super::trace::Request;
+
+/// One completed batch, as recorded by the final-stage sink.
+struct BatchRecord {
+    batch: usize,
+    /// Seconds from just before the pipeline pass started until the
+    /// final stage finished this batch's forward (stamped in the sink,
+    /// before the gather).
+    done_s: f64,
+    /// Seconds spent gathering the requested rows out of the output.
+    gather_s: f64,
+    /// Gathered log-prob rows, one per member request, in member order.
+    rows: Vec<Vec<f32>>,
+}
+
+/// Everything a serve run produces: the aggregate report plus the
+/// per-request payloads the parity/determinism tests inspect.
+#[derive(Debug)]
+pub struct ServeOutput {
+    pub report: ServeReport,
+    /// Served log-prob row per request, indexed like the trace.
+    pub request_logits: Vec<Vec<f32>>,
+    /// Request indices in completion order (batch dispatch order, then
+    /// member order) — the latency event ordering. Structurally this is
+    /// the flattened batch plan (the session's FIFO ensure pins it);
+    /// it is exposed so consumers need not recompute the plan, and the
+    /// determinism test checks it against an independently recomputed
+    /// plan.
+    pub completion_order: Vec<usize>,
+}
+
+/// A bound serving session: dataset + backend + the shared prep cache.
+pub struct ServeSession<'e> {
+    engine: &'e Engine,
+    ds: &'e Dataset,
+    backend: String,
+    /// Shared with training so a bench session builds the full-graph
+    /// micro-batch once across serve and train runs on one plan.
+    pub prep_cache: Arc<MicrobatchCache>,
+}
+
+impl<'e> ServeSession<'e> {
+    pub fn new(engine: &'e Engine, ds: &'e Dataset, backend: &str) -> ServeSession<'e> {
+        ServeSession {
+            engine,
+            ds,
+            backend: backend.to_string(),
+            prep_cache: Arc::new(MicrobatchCache::new()),
+        }
+    }
+
+    /// Whether the serving artifacts exist in `engine`'s manifest —
+    /// artifact dirs built before the serving subsystem lack the
+    /// `s*_eval_fwd` programs. The one probe the serve tests/benches
+    /// share, derived from the serve spec's own artifact kinds and the
+    /// `{dataset}_{backend}_c{chunks}_{kind}` convention
+    /// `PipelineEngine` resolves.
+    pub fn artifacts_available(engine: &Engine, dataset: &str, backend: &str) -> bool {
+        PipelineSpec::gat4_serve()
+            .artifact_kinds()
+            .iter()
+            .all(|kind| engine.manifest.has(&format!("{dataset}_{backend}_c1_{kind}")))
+    }
+
+    /// Replay `trace` under `policy` with the given flat parameters
+    /// (manifest order — the same vector training produces).
+    pub fn run(
+        &self,
+        params: &[HostTensor],
+        trace: &[Request],
+        policy: &BatchPolicy,
+    ) -> Result<ServeOutput> {
+        anyhow::ensure!(!trace.is_empty(), "cannot serve an empty trace");
+        let n = self.ds.profile.nodes;
+        for (i, r) in trace.iter().enumerate() {
+            anyhow::ensure!(
+                (r.node as usize) < n,
+                "request {i} queries node {} outside 0..{n}",
+                r.node
+            );
+        }
+
+        // One-off setup: the lossless full-graph micro-batch (cached
+        // across runs) and the forward-only stage executables.
+        let setup = Timer::start();
+        let plan = SequentialChunker.plan(&self.ds.graph, 1);
+        plan.check(n)?;
+        let train_mask = self.ds.splits.train_mask(n);
+        let mbs = self.prep_cache.get_or_build(
+            self.ds,
+            &plan,
+            &self.backend,
+            &train_mask,
+            None,
+        )?;
+        let mb = &mbs[0];
+        // A single sequential chunk maps node id == row id; the row
+        // gather below relies on it.
+        anyhow::ensure!(
+            mb.nodes.iter().enumerate().all(|(i, &v)| i as u32 == v),
+            "single-chunk plan must be the identity node order"
+        );
+        let mut pipe = PipelineEngine::new_forward_only(
+            self.engine,
+            &self.ds.profile.name,
+            &self.backend,
+            1,
+            PipelineSpec::gat4_serve(),
+            Arc::new(ServeStream),
+        )
+        .context("building the forward-only serve pipeline (older \
+                  artifact dirs lack the s*_eval_fwd artifacts; re-run \
+                  `make artifacts`)")?;
+        pipe.device_resident = true;
+        self.engine.warm_up(&pipe.artifact_names)?;
+        let setup_s = setup.secs();
+
+        // Deterministic batch plan from the virtual timeline, and the
+        // per-batch query-node lists (the measured host "prep" work).
+        let batches = plan_batches(trace, policy);
+        let prep_t = Timer::start();
+        let batch_nodes: Vec<Vec<u32>> = batches
+            .iter()
+            .map(|b| b.requests.iter().map(|&i| trace[i].node).collect())
+            .collect();
+        let prep_total_s = prep_t.secs();
+
+        // The streaming pass: the sink runs on the final stage's worker
+        // thread, gathering each batch's requested rows the moment its
+        // forward completes.
+        let classes = self.ds.profile.classes;
+        let records: Mutex<Vec<BatchRecord>> =
+            Mutex::new(Vec::with_capacity(batches.len()));
+        let static_hits_before = pipe.static_hits();
+        let t0 = Instant::now();
+        let sink = |m: usize, out: HostTensor| -> Result<()> {
+            let done_s = t0.elapsed().as_secs_f64();
+            let g = Instant::now();
+            let logp = out.as_f32()?;
+            let rows: Vec<Vec<f32>> = batch_nodes[m]
+                .iter()
+                .map(|&v| {
+                    let r = v as usize * classes;
+                    logp[r..r + classes].to_vec()
+                })
+                .collect();
+            let gather_s = g.elapsed().as_secs_f64();
+            records
+                .lock()
+                .unwrap()
+                .push(BatchRecord { batch: m, done_s, gather_s, rows });
+            Ok(())
+        };
+        let out = pipe.run_forward(params, mb, batches.len(), &sink)?;
+        let static_hits = pipe.static_hits() - static_hits_before;
+        // Host-cached tensors rebuild the device copies cheaply on the
+        // next run; don't pin device memory between runs.
+        pipe.clear_static_buffers();
+
+        let records = records.into_inner().unwrap();
+        anyhow::ensure!(
+            records.len() == batches.len(),
+            "sink saw {} of {} batches",
+            records.len(),
+            batches.len()
+        );
+        // The BatchSink contract (single final-stage producer, FIFO
+        // serve schedule) delivers records strictly in batch order —
+        // pin that instead of maintaining machinery for an ordering
+        // that cannot occur.
+        for (i, r) in records.iter().enumerate() {
+            anyhow::ensure!(
+                r.batch == i,
+                "sink delivered batch {} at position {i} (FIFO contract broken)",
+                r.batch
+            );
+        }
+
+        // Batch injection offsets: stage 0's executable seconds are
+        // back-to-back, so Σ fwd0[0..b] is when batch b *could* enter
+        // the pipeline if nothing downstream pushed back. Residence(b)
+        // = completion(b) - that offset, which therefore folds in any
+        // time stage 0 spent blocked on the bounded forward links —
+        // i.e. measured `execute` includes queueing behind the
+        // bottleneck stage, the quantity the model's M/D/1 term prices.
+        // Batch 0's span additionally absorbs the worker spawn overhead
+        // (the pipeline fill the serving regime amortises).
+        let fwd0 = &out.stage_timings[0].fwd_s;
+        anyhow::ensure!(fwd0.len() == batches.len(), "stage-0 timing arity");
+        let mut inject_s = vec![0.0f64; batches.len()];
+        for b in 1..batches.len() {
+            inject_s[b] = inject_s[b - 1] + fwd0[b - 1];
+        }
+
+        let prep_each_s = prep_total_s / trace.len() as f64;
+        let mut latencies = vec![RequestLatency::default(); trace.len()];
+        let mut request_logits: Vec<Vec<f32>> = vec![Vec::new(); trace.len()];
+        let mut completion_order = Vec::with_capacity(trace.len());
+        for (b, rec) in records.into_iter().enumerate() {
+            let execute_s = (rec.done_s - inject_s[b]).max(0.0);
+            let download_s = rec.gather_s;
+            // Move the gathered rows into place — they were allocated
+            // once in the sink and are dead here otherwise.
+            for (&req, row) in batches[b].requests.iter().zip(rec.rows) {
+                completion_order.push(req);
+                request_logits[req] = row;
+                latencies[req] = RequestLatency {
+                    queue_s: batches[b].close_s - trace[req].arrival_s,
+                    prep_s: prep_each_s,
+                    execute_s,
+                    download_s,
+                };
+            }
+        }
+
+        let collect = |f: fn(&RequestLatency) -> f64| -> Vec<f64> {
+            latencies.iter().map(f).collect()
+        };
+        let totals: Vec<f64> = latencies.iter().map(|l| l.total_s()).collect();
+        let trace_span_s = trace.last().unwrap().arrival_s.max(1e-12);
+        let report = ServeReport {
+            backend: self.backend.clone(),
+            requests: trace.len(),
+            batches: batches.len(),
+            mean_batch: trace.len() as f64 / batches.len() as f64,
+            max_batch_observed: batches.iter().map(|b| b.len()).max().unwrap_or(0),
+            offered_rps: trace.len() as f64 / trace_span_s,
+            throughput_rps: trace.len() as f64 / out.wall_s.max(1e-12),
+            wall_s: out.wall_s,
+            setup_s,
+            prep_total_s,
+            static_hits,
+            queue: LatencySummary::from_samples(&collect(|l| l.queue_s)),
+            prep: LatencySummary::from_samples(&collect(|l| l.prep_s)),
+            execute: LatencySummary::from_samples(&collect(|l| l.execute_s)),
+            download: LatencySummary::from_samples(&collect(|l| l.download_s)),
+            total: LatencySummary::from_samples(&totals),
+            stage_fwd_means_s: out
+                .stage_timings
+                .iter()
+                .map(|st| {
+                    if st.fwd_s.is_empty() {
+                        0.0
+                    } else {
+                        st.fwd_s.iter().sum::<f64>() / st.fwd_s.len() as f64
+                    }
+                })
+                .collect(),
+        };
+        Ok(ServeOutput { report, request_logits, completion_order })
+    }
+}

@@ -1,0 +1,112 @@
+//! Deterministic open-loop traffic generation.
+//!
+//! An inference workload is replayed from a *trace*: a list of
+//! node-classification requests with virtual arrival timestamps. Traces
+//! are synthesized by [`poisson_trace`] — exponential inter-arrival
+//! times (a Poisson process, the standard open-loop load model) and
+//! uniformly sampled query nodes, both drawn from the crate's seeded
+//! splitmix64 [`Rng`] — so a `(seed, rate, requests)` triple names one
+//! exact request sequence forever. Every latency number the serving
+//! subsystem reports is therefore replayable: run the same trace twice
+//! and the batch compositions, served logits and completion ordering
+//! are identical (`rust/tests/integration_serve.rs` pins this).
+//!
+//! Open-loop means arrivals never wait on the server: the timestamp
+//! stream is fixed up front, which is what makes tail-latency numbers
+//! meaningful under overload (closed-loop generators self-throttle and
+//! hide queueing collapse).
+//!
+//! [`Rng`]: crate::util::rng::Rng
+
+use crate::util::rng::Rng;
+
+/// Trace shape: offered load, length and the seed that fixes both.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TraceSpec {
+    /// Mean request arrival rate in requests/second (> 0).
+    pub rate_hz: f64,
+    /// Number of requests to generate.
+    pub requests: usize,
+    /// Seed for arrivals AND node choices (independent forked streams).
+    pub seed: u64,
+}
+
+/// One node-classification query.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Request {
+    /// Queried node id (a row of the dataset's node set).
+    pub node: u32,
+    /// Virtual arrival time in seconds since trace start.
+    pub arrival_s: f64,
+}
+
+/// Generate the deterministic Poisson-like arrival trace: request `i`
+/// arrives `Exp(rate)` after request `i-1` (inverse-CDF sampling,
+/// `-ln(1-u)/rate`) and queries a uniformly drawn node of `0..num_nodes`.
+/// Arrival times are non-decreasing. Panics if `rate_hz <= 0`,
+/// `num_nodes == 0`, or the spec asks for zero requests.
+pub fn poisson_trace(spec: &TraceSpec, num_nodes: usize) -> Vec<Request> {
+    assert!(spec.rate_hz > 0.0, "trace rate must be positive");
+    assert!(num_nodes > 0, "trace needs a non-empty node set");
+    assert!(spec.requests > 0, "trace needs at least one request");
+    let mut root = Rng::new(spec.seed);
+    let mut arrivals = root.fork(1);
+    let mut nodes = root.fork(2);
+    let mut t = 0.0f64;
+    (0..spec.requests)
+        .map(|_| {
+            // u in [0, 1) => 1-u in (0, 1] => dt in [0, inf).
+            let u = arrivals.next_f64();
+            t += -(1.0 - u).ln() / spec.rate_hz;
+            Request { node: nodes.below(num_nodes) as u32, arrival_s: t }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trace_is_deterministic_for_a_seed() {
+        let spec = TraceSpec { rate_hz: 100.0, requests: 500, seed: 42 };
+        let a = poisson_trace(&spec, 1000);
+        let b = poisson_trace(&spec, 1000);
+        assert_eq!(a, b);
+        let c = poisson_trace(&TraceSpec { seed: 43, ..spec }, 1000);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn arrivals_are_monotone_and_nodes_in_range() {
+        let spec = TraceSpec { rate_hz: 50.0, requests: 2000, seed: 7 };
+        let trace = poisson_trace(&spec, 37);
+        let mut prev = 0.0;
+        for r in &trace {
+            assert!(r.arrival_s >= prev);
+            assert!((r.node as usize) < 37);
+            prev = r.arrival_s;
+        }
+    }
+
+    #[test]
+    fn mean_interarrival_matches_the_rate() {
+        let spec = TraceSpec { rate_hz: 200.0, requests: 20_000, seed: 3 };
+        let trace = poisson_trace(&spec, 10);
+        let span = trace.last().unwrap().arrival_s;
+        let measured = (spec.requests - 1) as f64 / span;
+        let err = (measured - spec.rate_hz).abs() / spec.rate_hz;
+        assert!(err < 0.05, "measured rate {measured} vs {}", spec.rate_hz);
+    }
+
+    #[test]
+    fn nodes_cover_the_range() {
+        let spec = TraceSpec { rate_hz: 10.0, requests: 2000, seed: 11 };
+        let trace = poisson_trace(&spec, 7);
+        let mut seen = [false; 7];
+        for r in &trace {
+            seen[r.node as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+}

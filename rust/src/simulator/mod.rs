@@ -25,4 +25,6 @@ pub use device::{Calibration, DeviceModel, LinkModel, CACHE_REUSE_DISCOUNT, DEVI
 pub use pipeline_sim::{
     simulate_pipeline, simulate_pipeline_with, PipelineSimInput, PipelineSimReport,
 };
-pub use scenarios::{host_concurrency_speedup, Scenarios, SimEpoch};
+pub use scenarios::{
+    host_concurrency_speedup, Scenarios, ServeLatencyModel, SimEpoch,
+};

@@ -73,6 +73,41 @@ pub fn host_concurrency_speedup(
     }
 }
 
+/// Closed-form serving latency/throughput projection — what
+/// [`Scenarios::serve_latency`] returns and `bench serve` prints next
+/// to the measured columns.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ServeLatencyModel {
+    /// Expected requests per dispatched batch.
+    pub batch_size: f64,
+    /// Batch-formation window: `min(max_wait, (B-1)/rate)`.
+    pub fill_s: f64,
+    /// Mean per-request batching delay (`fill_s / 2`: arrivals are
+    /// uniform within the window).
+    pub batch_wait_s: f64,
+    /// Mean wait for the pipeline itself (M/D/1 at the bottleneck
+    /// stage); infinite when the offered load exceeds capacity.
+    pub pipe_wait_s: f64,
+    /// Pipeline residence of one batch: the sum of stage service times
+    /// (each batch visits every stage once; streaming overlaps batches,
+    /// not a batch's own stages).
+    pub residence_s: f64,
+    /// `batch_wait_s + pipe_wait_s + residence_s`.
+    pub total_s: f64,
+    /// Sustained requests/second: the offered rate when stable,
+    /// [`capacity_rps`] when not.
+    ///
+    /// [`capacity_rps`]: ServeLatencyModel::capacity_rps
+    pub throughput_rps: f64,
+    /// The pipeline's request capacity at this batch shape:
+    /// `batch_size / bottleneck` (what an as-fast-as-possible replay
+    /// measures as its throughput).
+    pub capacity_rps: f64,
+    /// Offered batch load over the bottleneck stage's service rate;
+    /// >= 1 means the queue grows without bound.
+    pub utilization: f64,
+}
+
 pub struct Scenarios<'m> {
     pub manifest: &'m Manifest,
     pub cal: Calibration,
@@ -332,6 +367,73 @@ impl<'m> Scenarios<'m> {
         e.allreduce_s = allreduce_s;
         e.replicas = replicas;
         Ok(e)
+    }
+
+    /// Closed-form serving model: expected per-request latency and
+    /// sustained throughput of the forward-only streaming pipeline
+    /// under an open-loop Poisson arrival stream.
+    ///
+    /// Inputs are the per-stage batch service times `stage_s` (from the
+    /// manifest cost model, or — as `bench serve` does — the measured
+    /// per-stage forward means of a real run, so model and measurement
+    /// price the same hardware), the offered `rate_hz`, and the
+    /// batching policy. The decomposition mirrors the measured spans:
+    ///
+    /// 1. **Batch formation** — a batch closes after
+    ///    `fill = min(max_wait, (B-1)/λ)`; it gathers `1 + λ·fill`
+    ///    requests (capped at `B`) and a member waits `fill/2` on
+    ///    average.
+    /// 2. **Pipeline queueing** — batches arrive every `E/λ` seconds at
+    ///    a server whose bottleneck stage takes `b = max(stage_s)` per
+    ///    batch (the streaming pipeline's steady-state inter-departure
+    ///    time): utilization `ρ = λ·b/E`, and the M/D/1 mean wait
+    ///    `ρ·b / 2(1-ρ)` — infinite at `ρ >= 1`, the queue-collapse
+    ///    regime an open-loop trace exposes.
+    /// 3. **Residence** — `Σ stage_s`: a batch still pays every stage
+    ///    once; streaming hides this *across* batches, not within one.
+    ///
+    /// An associated function (no manifest needed): the model is a pure
+    /// formula over its inputs.
+    pub fn serve_latency(
+        stage_s: &[f64],
+        rate_hz: f64,
+        max_batch: usize,
+        max_wait_s: f64,
+    ) -> ServeLatencyModel {
+        let rate = rate_hz.max(1e-12);
+        let cap = max_batch.max(1) as f64;
+        let bottleneck = stage_s.iter().cloned().fold(0.0f64, f64::max);
+        let residence_s: f64 = stage_s.iter().sum();
+        let fill_s = ((cap - 1.0) / rate).min(max_wait_s.max(0.0));
+        let batch_size = (1.0 + rate * fill_s).min(cap).max(1.0);
+        let utilization = rate * bottleneck / batch_size;
+        let pipe_wait_s = if utilization < 1.0 {
+            utilization * bottleneck / (2.0 * (1.0 - utilization))
+        } else {
+            f64::INFINITY
+        };
+        let batch_wait_s = fill_s / 2.0;
+        let capacity_rps = if bottleneck <= 0.0 {
+            f64::INFINITY
+        } else {
+            batch_size / bottleneck
+        };
+        let throughput_rps = if utilization < 1.0 {
+            rate_hz
+        } else {
+            capacity_rps
+        };
+        ServeLatencyModel {
+            batch_size,
+            fill_s,
+            batch_wait_s,
+            pipe_wait_s,
+            residence_s,
+            total_s: batch_wait_s + pipe_wait_s + residence_s,
+            throughput_rps,
+            capacity_rps,
+            utilization,
+        }
     }
 
     /// Shared core of the pipeline/hybrid projections: price `m_count`
@@ -625,6 +727,71 @@ mod tests {
             host_concurrency_speedup(4, 16, 1.0, 0.5),
             host_concurrency_speedup(4, 4, 1.0, 0.5)
         );
+    }
+
+    #[test]
+    fn serve_latency_models_the_three_spans() {
+        // Pure closed form: no manifest needed.
+        let stages = [0.01, 0.04, 0.02, 0.005];
+        // Light load, max_batch=1: no batching delay, no fill window,
+        // total ~= residence (plus a small M/D/1 wait).
+        let light = Scenarios::serve_latency(&stages, 1.0, 1, 0.5);
+        assert_eq!(light.batch_size, 1.0);
+        assert_eq!(light.fill_s, 0.0);
+        assert_eq!(light.batch_wait_s, 0.0);
+        assert!((light.residence_s - 0.075).abs() < 1e-12);
+        assert!(light.utilization < 0.1);
+        assert!(light.total_s >= light.residence_s);
+        assert!(light.total_s < light.residence_s + stages[1]);
+        assert_eq!(light.throughput_rps, 1.0);
+    }
+
+    #[test]
+    fn serve_latency_batches_grow_with_load_until_the_cap() {
+        let stages = [0.01, 0.04];
+        let lo = Scenarios::serve_latency(&stages, 10.0, 8, 0.1);
+        let mid = Scenarios::serve_latency(&stages, 40.0, 8, 0.1);
+        let hi = Scenarios::serve_latency(&stages, 10_000.0, 8, 0.1);
+        assert!(lo.batch_size < mid.batch_size);
+        assert!(mid.batch_size < hi.batch_size + 1e-12);
+        assert_eq!(hi.batch_size, 8.0, "cap reached");
+        // Once the cap binds, the fill window shrinks with the rate.
+        assert!(hi.fill_s < mid.fill_s);
+    }
+
+    #[test]
+    fn serve_latency_saturates_at_the_bottleneck() {
+        let stages = [0.01, 0.05];
+        // Capacity at B=4 is 4 / 0.05 = 80 req/s.
+        let stable = Scenarios::serve_latency(&stages, 40.0, 4, 10.0);
+        assert!(stable.utilization < 1.0);
+        assert!(stable.pipe_wait_s.is_finite());
+        assert_eq!(stable.throughput_rps, 40.0);
+        let saturated = Scenarios::serve_latency(&stages, 200.0, 4, 10.0);
+        assert!(saturated.utilization >= 1.0);
+        assert!(saturated.pipe_wait_s.is_infinite());
+        assert!((saturated.throughput_rps - 80.0).abs() < 1e-9);
+        // Saturated throughput IS the capacity; the stable point shares
+        // the same capacity because both fill their batches to the cap.
+        assert_eq!(saturated.throughput_rps, saturated.capacity_rps);
+        assert!((stable.capacity_rps - 80.0).abs() < 1e-9);
+        // Bigger batches buy capacity back.
+        let bigger = Scenarios::serve_latency(&stages, 200.0, 16, 10.0);
+        assert!(bigger.utilization < 1.0);
+    }
+
+    #[test]
+    fn serve_latency_queueing_grows_toward_saturation() {
+        let stages = [0.02];
+        let mut last = 0.0;
+        for rate in [10.0, 25.0, 40.0, 48.0] {
+            let m = Scenarios::serve_latency(&stages, rate, 1, 0.0);
+            assert!(
+                m.pipe_wait_s > last,
+                "wait must grow with load ({rate} req/s)"
+            );
+            last = m.pipe_wait_s;
+        }
     }
 
     #[test]

@@ -1,7 +1,8 @@
 #!/usr/bin/env python3
 """Compare BENCH_*.json perf-trajectory snapshots against a previous run.
 
-Usage: bench_diff.py PREV_DIR [NEW_DIR] [--threshold PCT] [--strict]
+Usage: bench_diff.py [PREV_DIR] [NEW_DIR] [--threshold PCT] [--strict]
+       bench_diff.py --selfcheck
 
 Matches snapshots by filename and samples by name, prints a per-sample
 delta table, and emits GitHub Actions `::warning::` annotations for any
@@ -13,7 +14,11 @@ and at least one regression was found.
 This is the first consumer of the bench-trajectory artifacts CI has
 been uploading per commit: the previous run's BENCH_*.json land in
 PREV_DIR (downloaded from the last successful run on the default
-branch) and the current run's in NEW_DIR (the repo root).
+branch) and the current run's in NEW_DIR (the repo root). A missing or
+empty PREV_DIR — the first run ever, or the first run after a new
+snapshot such as BENCH_serve.json appears — compares nothing and exits
+0. `--selfcheck` exercises exactly those paths (pytest-free; CI runs it
+before the real comparison).
 """
 
 import argparse
@@ -56,26 +61,25 @@ def fmt_secs(v: float) -> str:
     return f"{v * 1e6:.3f} us"
 
 
-def main() -> int:
-    ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("prev_dir", type=Path)
-    ap.add_argument("new_dir", type=Path, nargs="?", default=Path("."))
-    ap.add_argument("--threshold", type=float, default=20.0,
-                    help="regression threshold in percent (default 20)")
-    ap.add_argument("--strict", action="store_true",
-                    help="exit 1 when a regression exceeds the threshold")
-    args = ap.parse_args()
-
-    if not args.prev_dir.is_dir():
-        print(f"no previous bench artifact at {args.prev_dir}; nothing to compare")
+def compare(prev_dir: Path, new_dir: Path, threshold: float, strict: bool) -> int:
+    """The whole diff as a callable (main() is argv plumbing; the
+    self-check drives this directly). Absent baselines are a feature,
+    not an error: the first run of a new repo — or of a new snapshot
+    like BENCH_serve.json — has nothing to compare against and must
+    exit 0 quietly so CI's trajectory job never fails on day one."""
+    if not prev_dir.is_dir():
+        print(f"no previous bench artifact at {prev_dir}; nothing to compare")
         return 0
-    prev = load_snapshots(args.prev_dir)
-    new = load_snapshots(args.new_dir, exclude=args.prev_dir)
+    if not new_dir.is_dir():
+        print(f"::warning::new-run directory {new_dir} does not exist")
+        return 0
+    prev = load_snapshots(prev_dir)
+    new = load_snapshots(new_dir, exclude=prev_dir)
     if not prev:
-        print(f"no BENCH_*.json under {args.prev_dir}; nothing to compare")
+        print(f"no BENCH_*.json under {prev_dir}; nothing to compare")
         return 0
     if not new:
-        print(f"::warning::no BENCH_*.json under {args.new_dir} to compare")
+        print(f"::warning::no BENCH_*.json under {new_dir} to compare")
         return 0
 
     regressions = 0
@@ -87,7 +91,7 @@ def main() -> int:
         if prev_snap.get("quick") != new_snap.get("quick"):
             print(f"{fname}: quick-mode mismatch vs previous — skipped")
             continue
-        print(f"\n== {fname} (threshold {args.threshold:.0f}%) ==")
+        print(f"\n== {fname} (threshold {threshold:.0f}%) ==")
         for name, new_mean in new_snap["samples"].items():
             old_mean = prev_snap["samples"].get(name)
             if old_mean is None:
@@ -95,7 +99,7 @@ def main() -> int:
                 continue
             delta = (new_mean - old_mean) / old_mean * 100.0 if old_mean > 0 else 0.0
             marker = ""
-            if delta > args.threshold:
+            if delta > threshold:
                 marker = "  <-- REGRESSION"
                 regressions += 1
                 print(f"::warning::perf regression in {fname} / {name}: "
@@ -107,10 +111,112 @@ def main() -> int:
                 print(f"  {name:<48} (removed)")
 
     if regressions:
-        print(f"\n{regressions} sample(s) regressed beyond {args.threshold:.0f}%")
-        return 1 if args.strict else 0
+        print(f"\n{regressions} sample(s) regressed beyond {threshold:.0f}%")
+        return 1 if strict else 0
     print("\nno regressions beyond threshold")
     return 0
+
+
+def _snapshot(samples: dict, quick: bool = True) -> str:
+    return json.dumps({
+        "bench": "x",
+        "quick": quick,
+        "samples": [{"name": n, "iters": 1, "mean_s": m, "std_s": 0.0,
+                     "min_s": m} for n, m in samples.items()],
+    })
+
+
+def selfcheck() -> int:
+    """Exercise the absent-baseline and mismatch paths end to end in a
+    temp dir (no pytest dependency — CI calls `bench_diff.py
+    --selfcheck` directly). Asserts on exit codes; prints PASS/FAIL."""
+    import contextlib
+    import io
+    import tempfile
+
+    failures = []
+
+    def case(name, expect_code, prev_setup, new_setup,
+             threshold=20.0, strict=False, expect_text=None):
+        with tempfile.TemporaryDirectory() as td:
+            root = Path(td)
+            prev, new = root / "prev", root / "new"
+            prev_setup(prev)
+            new_setup(new)
+            buf = io.StringIO()
+            with contextlib.redirect_stdout(buf):
+                code = compare(prev, new, threshold, strict)
+            ok = code == expect_code and (
+                expect_text is None or expect_text in buf.getvalue())
+            print(f"  [{'PASS' if ok else 'FAIL'}] {name} (exit {code})")
+            if not ok:
+                failures.append(name)
+                print(buf.getvalue())
+
+    def absent(path: Path):
+        pass
+
+    def empty(path: Path):
+        path.mkdir()
+
+    def snaps(**files):
+        def setup(path: Path):
+            path.mkdir()
+            for fname, text in files.items():
+                (path / fname).write_text(text)
+        return setup
+
+    base = _snapshot({"a": 1.0, "b": 2.0})
+    print("bench_diff self-check:")
+    case("missing previous dir exits 0", 0, absent,
+         snaps(**{"BENCH_x.json": base}), expect_text="no previous bench")
+    case("empty previous dir exits 0", 0, empty,
+         snaps(**{"BENCH_x.json": base}), expect_text="nothing to compare")
+    case("missing new dir exits 0", 0, snaps(**{"BENCH_x.json": base}),
+         absent)
+    case("new snapshot file (first BENCH_serve.json) is skipped", 0,
+         snaps(**{"BENCH_x.json": base}),
+         snaps(**{"BENCH_x.json": base, "BENCH_serve.json": base}),
+         expect_text="BENCH_serve.json: new snapshot")
+    case("clean diff exits 0", 0, snaps(**{"BENCH_x.json": base}),
+         snaps(**{"BENCH_x.json": base}), expect_text="no regressions")
+    case("regression without --strict exits 0", 0,
+         snaps(**{"BENCH_x.json": base}),
+         snaps(**{"BENCH_x.json": _snapshot({"a": 10.0, "b": 2.0})}),
+         expect_text="REGRESSION")
+    case("regression with --strict exits 1", 1,
+         snaps(**{"BENCH_x.json": base}),
+         snaps(**{"BENCH_x.json": _snapshot({"a": 10.0, "b": 2.0})}),
+         strict=True)
+    case("quick-mode mismatch is skipped", 0,
+         snaps(**{"BENCH_x.json": _snapshot({"a": 1.0}, quick=False)}),
+         snaps(**{"BENCH_x.json": base}), strict=True,
+         expect_text="quick-mode mismatch")
+    case("unreadable snapshot warns instead of crashing", 0,
+         snaps(**{"BENCH_x.json": "{not json"}),
+         snaps(**{"BENCH_x.json": base}), expect_text="unreadable snapshot")
+
+    if failures:
+        print(f"self-check FAILED: {failures}")
+        return 1
+    print("self-check OK")
+    return 0
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("prev_dir", type=Path, nargs="?", default=Path("prev-bench"))
+    ap.add_argument("new_dir", type=Path, nargs="?", default=Path("."))
+    ap.add_argument("--threshold", type=float, default=20.0,
+                    help="regression threshold in percent (default 20)")
+    ap.add_argument("--strict", action="store_true",
+                    help="exit 1 when a regression exceeds the threshold")
+    ap.add_argument("--selfcheck", action="store_true",
+                    help="run the built-in behavioural checks and exit")
+    args = ap.parse_args()
+    if args.selfcheck:
+        return selfcheck()
+    return compare(args.prev_dir, args.new_dir, args.threshold, args.strict)
 
 
 if __name__ == "__main__":
