@@ -15,9 +15,14 @@
 //!    artifacts` has not run, or when the artifact dir predates the
 //!    `s*_eval_fwd` serving artifacts).
 //!
-//! Mean ± stddev per iteration, dumped to `BENCH_serve.json` at the
-//! repo root (CI's `bench-trajectory` job runs `-- --quick` and tracks
-//! the snapshots per commit).
+//! A fourth section covers the fleet layer (traffic-shape generation,
+//! the deterministic routing/admission planner at scale, the
+//! `fleet_latency` model sweep, and — artifacts permitting — a real
+//! R=2 fleet replay); its samples go to a separate `BENCH_fleet.json`.
+//!
+//! Mean ± stddev per iteration, dumped to `BENCH_serve.json` +
+//! `BENCH_fleet.json` at the repo root (CI's `bench-trajectory` job
+//! runs `-- --quick` and tracks the snapshots per commit).
 
 mod bench_util;
 
@@ -28,7 +33,9 @@ use gnn_pipe::data::generate;
 use gnn_pipe::metrics::percentiles;
 use gnn_pipe::runtime::Engine;
 use gnn_pipe::serve::{
-    plan_batches, poisson_trace, BatchPolicy, ServeSession, TraceSpec,
+    generate_trace, plan_batches, plan_fleet, poisson_trace, BatchPolicy,
+    FleetPolicy, FleetSession, RouterKind, ServeSession, SloPolicy, TraceSpec,
+    TrafficShape,
 };
 use gnn_pipe::simulator::Scenarios;
 use gnn_pipe::train::{flatten_params, init_params};
@@ -134,4 +141,127 @@ fn main() {
         ),
     ];
     write_snapshot(&cfg.root.join("BENCH_serve.json"), "serve", &extras, &samples);
+
+    // 4. The fleet layer: host-side planning costs plus (artifacts
+    // permitting) a real R=2 replay, snapshotted separately.
+    println!("== serve-fleet microbench ==");
+    let mut fleet_samples = Vec::new();
+
+    let spec = TraceSpec { rate_hz: 1000.0, requests: 100_000, seed: 17 };
+    let mut mmpp = Vec::new();
+    fleet_samples.push(bench("mmpp_trace (100k requests)", iters(50), || {
+        mmpp = generate_trace(&spec, TrafficShape::Mmpp, 19_717);
+    }));
+    fleet_samples.push(bench("flash_trace (100k requests)", iters(50), || {
+        std::hint::black_box(generate_trace(
+            &spec,
+            TrafficShape::Flash,
+            19_717,
+        ));
+    }));
+
+    // The routing/admission planner over the bursty trace: JSQ + a
+    // tight SLO is its worst case (every request consults the gate).
+    let policy = BatchPolicy { max_batch: 16, max_wait_s: 0.01 };
+    let fleet_policy = FleetPolicy {
+        replicas: 4,
+        router: RouterKind::Jsq,
+        slo: Some(SloPolicy { p99_target_s: 0.05, max_defer_s: 0.02 }),
+        service_model_s: 0.016,
+    };
+    let mut shed_rate = 0.0f64;
+    fleet_samples.push(bench(
+        "plan_fleet (100k requests, R=4, SLO gate)",
+        iters(50),
+        || {
+            let plan = plan_fleet(&mmpp, &policy, &fleet_policy);
+            shed_rate = plan.shed as f64 / mmpp.len() as f64;
+        },
+    ));
+    println!("  (shed rate {:.1}% on the MMPP trace)", shed_rate * 100.0);
+
+    let stage_s = [0.004f64, 0.016, 0.008, 0.001];
+    fleet_samples.push(bench("fleet_latency model (1k points)", iters(200), || {
+        let mut acc = 0.0f64;
+        for i in 0..1000 {
+            let rate = 1.0 + i as f64;
+            let m = Scenarios::fleet_latency(&stage_s, rate, 4, 8, 0.05);
+            acc += m.total_s.min(1e6);
+        }
+        std::hint::black_box(acc);
+    }));
+
+    let mut fleet_throughput = None;
+    if have_artifacts {
+        let engine =
+            Engine::from_artifacts_dir(&cfg.artifacts_dir()).expect("engine");
+        let ds_name = cfg.pipeline.pipeline_dataset.clone();
+        if FleetSession::artifacts_available(&engine, &ds_name, "ell") {
+            let profile = cfg.dataset(&ds_name).unwrap().clone();
+            let ds = generate(&profile).unwrap();
+            let params = flatten_params(
+                &init_params(&profile, &cfg.model, cfg.serve.seed),
+                &engine.manifest.param_order,
+            )
+            .unwrap();
+            let requests = if quick { 16 } else { 64 };
+            let trace = generate_trace(
+                &TraceSpec {
+                    rate_hz: cfg.serve.rate_hz,
+                    requests,
+                    seed: cfg.serve.seed,
+                },
+                TrafficShape::Poisson,
+                profile.nodes,
+            );
+            let policy = BatchPolicy {
+                max_batch: cfg.serve.max_batch,
+                max_wait_s: cfg.serve.max_wait_ms / 1e3,
+            };
+            let fleet = FleetPolicy {
+                replicas: 2,
+                router: RouterKind::Jsq,
+                slo: None,
+                service_model_s: cfg.serve.service_model_ms.max(0.0) / 1e3,
+            };
+            let session = FleetSession::new(&engine, &ds, "ell");
+            let mut last_thpt = 0.0;
+            let s = bench(
+                &format!("fleet replay ({requests} requests, R=2, ell)"),
+                iters(10),
+                || {
+                    let out =
+                        session.run(&params, &trace, &policy, &fleet).unwrap();
+                    last_thpt = out.report.throughput_rps;
+                },
+            );
+            println!("fleet throughput: {last_thpt:.1} req/s");
+            fleet_throughput = Some(last_thpt);
+            fleet_samples.push(s);
+        } else {
+            println!(
+                "skipping fleet replay: {ds_name} serving artifacts not in \
+                 manifest (re-run `make artifacts`)"
+            );
+        }
+    } else {
+        println!("skipping fleet replay: artifacts missing (run `make artifacts`)");
+    }
+
+    let fleet_extras = [
+        ("quick", quick.to_string()),
+        ("shed_rate", format!("{shed_rate:.4}")),
+        (
+            "throughput_rps",
+            fleet_throughput
+                .map(|t| format!("{t:.3}"))
+                .unwrap_or_else(|| "null".to_string()),
+        ),
+    ];
+    write_snapshot(
+        &cfg.root.join("BENCH_fleet.json"),
+        "fleet",
+        &fleet_extras,
+        &fleet_samples,
+    );
 }

@@ -1,0 +1,228 @@
+//! E12 — serving fleet: measured multi-replica throughput/latency and
+//! shed rates vs the `Scenarios::fleet_latency` closed-form model,
+//! across (replicas, rate, traffic shape, SLO) operating points.
+//!
+//! Each row plans and replays one deterministic trace through the
+//! fleet. The model column is priced with the row's own measured
+//! per-stage forward means, at the **admitted** (post-shed) rate — under
+//! overload the gate is what keeps the served stream finite, so the
+//! offered rate would put the model past collapse while the measured
+//! column only ever sees admitted traffic.
+//!
+//! The headline comparisons the sweep is built to show:
+//!
+//! * R=4 vs R=1 at the same offered rate: measured throughput scales
+//!   with the fleet (>= 1.5x is the acceptance bar; the replay is
+//!   offline, so measured throughput is fleet capacity at that batch
+//!   shape — compare against the model capacity column);
+//! * 2x overload with the SLO gate on: the measured p99 of *admitted*
+//!   requests stays near the model's p99 while the shed-rate column
+//!   reports what the gate paid to hold it there;
+//! * bursty (MMPP) and flash-crowd traffic vs Poisson at the same mean
+//!   rate: same offered load, fatter measured tails.
+//!
+//! Emits `serve_fleet.csv` and a `BENCH_fleet.json` snapshot (CLI
+//! writer: `quick: false`; CI's trajectory job uses the
+//! `benches/serve.rs` fleet section instead — same dual-writer
+//! convention as `BENCH_serve.json`).
+
+use std::fmt::Write as _;
+
+use anyhow::Result;
+
+use crate::metrics::{write_bench_snapshot, BenchSample, Table};
+use crate::serve::{
+    generate_trace, BatchPolicy, FleetPolicy, FleetSession, RouterKind,
+    SloPolicy, TraceSpec, TrafficShape,
+};
+use crate::simulator::Scenarios;
+use crate::train::{flatten_params, init_params};
+
+use super::{framework_label, BenchCtx};
+
+pub fn bench_serve_fleet(ctx: &BenchCtx) -> Result<String> {
+    let sc = &ctx.cfg.serve;
+    let backend = sc.backend.clone();
+    let ds_name = ctx.cfg.pipeline.pipeline_dataset.clone();
+    if !FleetSession::artifacts_available(&ctx.engine, &ds_name, &backend) {
+        return Ok(format!(
+            "Serving fleet — skipped: {ds_name}/{backend} serving artifacts \
+             not in the manifest (artifact dir predates the serving \
+             subsystem; re-run `make artifacts`)\n"
+        ));
+    }
+    let ds = ctx.dataset(&ds_name)?;
+    let profile = ctx.cfg.dataset(&ds_name)?;
+    let params_map = init_params(profile, &ctx.cfg.model, sc.seed);
+    let params = flatten_params(&params_map, &ctx.engine.manifest.param_order)?;
+    let session = FleetSession::new(&ctx.engine, ds, &backend);
+
+    let wait_s = sc.max_wait_ms / 1e3;
+    let policy = BatchPolicy { max_batch: sc.max_batch, max_wait_s: wait_s };
+    let slo_on = SloPolicy {
+        p99_target_s: if sc.slo_p99_ms > 0.0 {
+            sc.slo_p99_ms / 1e3
+        } else {
+            // Gate rows need a live SLO even when the config leaves it
+            // off: a feasible-but-tight target just above the idle
+            // floor (max_wait + service model).
+            2.0 * (wait_s + sc.service_model_ms / 1e3)
+        },
+        max_defer_s: sc.max_defer_ms.max(0.0) / 1e3,
+    };
+
+    // The sweep: replica scaling at the configured rate, 2x overload
+    // under the gate, and the bursty shapes at the same mean rate.
+    let points: Vec<(usize, f64, TrafficShape, Option<SloPolicy>)> = vec![
+        (1, 1.0, TrafficShape::Poisson, None),
+        (2, 1.0, TrafficShape::Poisson, None),
+        (4, 1.0, TrafficShape::Poisson, None),
+        (4, 2.0, TrafficShape::Poisson, Some(slo_on)),
+        (2, 1.0, TrafficShape::Mmpp, None),
+        (2, 1.0, TrafficShape::Flash, Some(slo_on)),
+    ];
+    let requests = sc.requests.max(8).min(32 * sc.max_batch);
+
+    let mut table = Table::new(&[
+        "R",
+        "Traffic",
+        "Rate req/s",
+        "SLO p99 (ms)",
+        "Served/Defer/Shed",
+        "Shed rate",
+        "Thpt meas req/s",
+        "Cap model req/s",
+        "p99 meas|model (ms)",
+        "Util model",
+    ]);
+    let mut csv = String::from(
+        "replicas,router,traffic,rate_hz,slo_p99_ms,requests,served,deferred,\
+         shed,shed_rate,admitted_rps,throughput_rps,model_capacity_rps,\
+         total_p50_s,total_p99_s,model_total_s,model_p99_s,model_imbalance_s,\
+         model_utilization\n",
+    );
+    let mut snapshot: Vec<BenchSample> = Vec::new();
+
+    for &(replicas, rate_mult, shape, slo) in &points {
+        let rate = sc.rate_hz * rate_mult;
+        let fleet = FleetPolicy {
+            replicas,
+            router: RouterKind::Jsq,
+            slo,
+            service_model_s: sc.service_model_ms.max(0.0) / 1e3,
+        };
+        let slo_ms = match slo {
+            Some(s) => s.p99_target_s * 1e3,
+            None => 0.0,
+        };
+        let trace = generate_trace(
+            &TraceSpec { rate_hz: rate, requests, seed: sc.seed },
+            shape,
+            profile.nodes,
+        );
+        eprintln!(
+            "[bench] serve-fleet {ds_name}/{backend} R={replicas} \
+             traffic={} rate={rate:.1} slo={slo_ms:.0}ms requests={requests}...",
+            shape.name()
+        );
+        let out = session.run(&params, &trace, &policy, &fleet)?;
+        let r = &out.report;
+        let model = Scenarios::fleet_latency(
+            &r.stage_fwd_means_s,
+            r.admitted_rps,
+            replicas,
+            sc.max_batch,
+            wait_s,
+        );
+
+        table.row(&[
+            format!("{replicas}"),
+            shape.name().to_string(),
+            format!("{rate:.1}"),
+            if slo_ms > 0.0 { format!("{slo_ms:.0}") } else { "off".into() },
+            format!("{}/{}/{}", r.served, r.deferred, r.shed),
+            format!("{:.1}%", r.shed_rate * 100.0),
+            format!("{:.1}", r.throughput_rps),
+            format!("{:.1}", model.capacity_rps),
+            format!(
+                "{:.1}|{}",
+                r.total.p99_s * 1e3,
+                if model.p99_s.is_finite() {
+                    format!("{:.1}", model.p99_s * 1e3)
+                } else {
+                    "inf".to_string()
+                }
+            ),
+            format!("{:.2}", model.per_replica.utilization),
+        ]);
+        let _ = writeln!(
+            csv,
+            "{replicas},{},{},{rate},{slo_ms},{requests},{},{},{},{:.4},\
+             {:.3},{:.3},{:.3},{:.6},{:.6},{:.6},{:.6},{:.6},{:.4}",
+            fleet.router.name(),
+            shape.name(),
+            r.served,
+            r.deferred,
+            r.shed,
+            r.shed_rate,
+            r.admitted_rps,
+            r.throughput_rps,
+            model.capacity_rps,
+            r.total.p50_s,
+            r.total.p99_s,
+            model.total_s,
+            model.p99_s,
+            model.imbalance_s,
+            model.per_replica.utilization,
+        );
+        let tag = format!("R={replicas},{},rate={rate:.0}", shape.name());
+        let mut point = |name: String, mean_s: f64| {
+            snapshot.push(BenchSample {
+                name,
+                iters: requests,
+                mean_s,
+                std_s: 0.0,
+                min_s: mean_s,
+            });
+        };
+        point(format!("cli fleet total p50 ({tag})"), r.total.p50_s);
+        point(format!("cli fleet total p99 ({tag})"), r.total.p99_s);
+        point(
+            format!("cli fleet per-request service ({tag})"),
+            r.wall_s / r.served.max(1) as f64,
+        );
+        point(format!("cli fleet shed rate ({tag})"), r.shed_rate);
+    }
+    ctx.engine.clear_cache();
+
+    ctx.write_csv("serve_fleet.csv", &csv)?;
+    write_fleet_snapshot(ctx, &snapshot)?;
+    Ok(format!(
+        "Serving fleet — {} {ds_name}, JSQ router, {requests} requests/point, \
+         B={} wait {:.0} ms (seed {})\n{}\n\
+         model priced at the ADMITTED rate with each row's measured stage \
+         means; measured thpt is the offline-replay fleet capacity (compare \
+         against Cap model); p99 meas covers admitted requests only — the \
+         shed-rate column is what the gate paid to keep it there\n",
+        framework_label(&backend),
+        sc.max_batch,
+        sc.max_wait_ms,
+        sc.seed,
+        table.render()
+    ))
+}
+
+/// Write the `BENCH_fleet.json` perf-trajectory snapshot. Same
+/// dual-writer convention as `BENCH_serve.json`: this CLI sweep writes
+/// `quick: false`, CI's `cargo bench --bench serve -- --quick` fleet
+/// section writes `quick: true`, and `bench_diff.py` skips mixed pairs.
+fn write_fleet_snapshot(ctx: &BenchCtx, samples: &[BenchSample]) -> Result<()> {
+    let extras = [
+        ("quick", "false".to_string()),
+        ("source", "\"gnn-pipe bench serve-fleet\"".to_string()),
+    ];
+    let path = ctx.cfg.root.join("BENCH_fleet.json");
+    write_bench_snapshot(&path, "fleet", &extras, samples)?;
+    eprintln!("[bench] wrote {}", path.display());
+    Ok(())
+}

@@ -33,9 +33,15 @@
 //! forward-only streaming pipeline replaying deterministic traffic
 //! traces at several (arrival-rate, max_batch) points, against the
 //! `Scenarios::serve_latency` closed-form model (see `crate::serve`).
+//!
+//! The `serve-fleet` bench (E12) scales that to the multi-replica
+//! fleet: replicas x rate x traffic shape with JSQ routing and the SLO
+//! admission gate, against `Scenarios::fleet_latency` (per-replica
+//! M/D/1 + routing imbalance), with shed rates reported per row.
 
 mod ablation;
 mod figures;
+mod fleet;
 mod hybrid;
 mod prep;
 mod runs;
@@ -45,6 +51,7 @@ mod table2;
 
 pub use ablation::{bench_ablation_chunker, bench_edge_retention};
 pub use figures::{bench_fig1, bench_fig2, bench_fig3, bench_fig4};
+pub use fleet::bench_serve_fleet;
 pub use hybrid::bench_hybrid;
 pub use prep::bench_prep_modes;
 pub use runs::{BenchCtx, PipelineRun, SingleRun};

@@ -121,7 +121,9 @@ pub struct PipelineConfig {
 
 /// Serving defaults: the Rust view of `configs/serve.json` (all keys
 /// optional; the file itself is optional — older checkouts predate the
-/// serving subsystem). CLI flags on `gnn-pipe serve` override per run.
+/// serving subsystem — but a key that *is* present must be a known one:
+/// [`ServeConfig::from_json`] rejects typos by name instead of silently
+/// ignoring them). CLI flags on `gnn-pipe serve` override per run.
 #[derive(Debug, Clone)]
 pub struct ServeConfig {
     /// Aggregation backend to serve with ("ell" or "edgewise").
@@ -137,6 +139,24 @@ pub struct ServeConfig {
     /// Seed for the trace (arrivals + query nodes) and the served
     /// parameter init — one number names the whole experiment.
     pub seed: u64,
+    /// Fleet width: concurrent forward-only serving pipelines.
+    pub replicas: usize,
+    /// Traffic shape of the generated trace ("poisson", "mmpp",
+    /// "diurnal" or "flash"). Parsed by `serve::TrafficShape::parse`.
+    pub traffic: String,
+    /// Fleet router ("jsq" or "rr"). Parsed by
+    /// `serve::RouterKind::parse`.
+    pub router: String,
+    /// p99 SLO for the admission gate, milliseconds; 0 (or negative)
+    /// disables the gate and admits everything.
+    pub slo_p99_ms: f64,
+    /// How long the gate may defer a request before shedding it,
+    /// milliseconds.
+    pub max_defer_ms: f64,
+    /// Modeled per-batch bottleneck service time feeding routing and
+    /// admission, milliseconds. A config knob (not a measurement) so
+    /// planning stays bit-reproducible.
+    pub service_model_ms: f64,
 }
 
 impl Default for ServeConfig {
@@ -148,8 +168,111 @@ impl Default for ServeConfig {
             max_batch: 8,
             max_wait_ms: 250.0,
             seed: 0,
+            replicas: 1,
+            traffic: "poisson".into(),
+            router: "jsq".into(),
+            slo_p99_ms: 0.0,
+            max_defer_ms: 500.0,
+            service_model_ms: 25.0,
         }
     }
+}
+
+impl ServeConfig {
+    const KNOWN_KEYS: [&'static str; 12] = [
+        "backend",
+        "rate_hz",
+        "requests",
+        "max_batch",
+        "max_wait_ms",
+        "seed",
+        "replicas",
+        "traffic",
+        "router",
+        "slo_p99_ms",
+        "max_defer_ms",
+        "service_model_ms",
+    ];
+
+    /// Overlay `configs/serve.json` onto the defaults. Every present
+    /// key must be known — a typo like `max_wait` silently falling back
+    /// to a default is exactly the failure mode this config exists to
+    /// avoid, so unknown keys error by name (with the nearest known key
+    /// suggested).
+    pub fn from_json(s: &Json) -> Result<ServeConfig> {
+        let obj = s.as_obj().context("configs/serve.json must be an object")?;
+        for key in obj.keys() {
+            if !Self::KNOWN_KEYS.contains(&key.as_str()) {
+                let near = Self::KNOWN_KEYS
+                    .iter()
+                    .min_by_key(|k| edit_distance(key, k))
+                    .filter(|k| edit_distance(key, k) <= 3);
+                let hint = match near {
+                    Some(k) => format!(" (did you mean {k:?}?)"),
+                    None => String::new(),
+                };
+                anyhow::bail!(
+                    "configs/serve.json: unknown key {key:?}{hint}; \
+                     known keys: {}",
+                    Self::KNOWN_KEYS.join(", ")
+                );
+            }
+        }
+        let mut serve = ServeConfig::default();
+        if let Some(v) = s.get("backend").and_then(Json::as_str) {
+            serve.backend = v.to_string();
+        }
+        if let Some(v) = s.get("rate_hz").and_then(Json::as_f64) {
+            serve.rate_hz = v;
+        }
+        if let Some(v) = s.get("requests").and_then(Json::as_usize) {
+            serve.requests = v;
+        }
+        if let Some(v) = s.get("max_batch").and_then(Json::as_usize) {
+            serve.max_batch = v;
+        }
+        if let Some(v) = s.get("max_wait_ms").and_then(Json::as_f64) {
+            serve.max_wait_ms = v;
+        }
+        if let Some(v) = s.get("seed").and_then(Json::as_usize) {
+            serve.seed = v as u64;
+        }
+        if let Some(v) = s.get("replicas").and_then(Json::as_usize) {
+            serve.replicas = v;
+        }
+        if let Some(v) = s.get("traffic").and_then(Json::as_str) {
+            serve.traffic = v.to_string();
+        }
+        if let Some(v) = s.get("router").and_then(Json::as_str) {
+            serve.router = v.to_string();
+        }
+        if let Some(v) = s.get("slo_p99_ms").and_then(Json::as_f64) {
+            serve.slo_p99_ms = v;
+        }
+        if let Some(v) = s.get("max_defer_ms").and_then(Json::as_f64) {
+            serve.max_defer_ms = v;
+        }
+        if let Some(v) = s.get("service_model_ms").and_then(Json::as_f64) {
+            serve.service_model_ms = v;
+        }
+        Ok(serve)
+    }
+}
+
+/// Plain Levenshtein distance, for did-you-mean hints on config keys.
+fn edit_distance(a: &str, b: &str) -> usize {
+    let a: Vec<char> = a.chars().collect();
+    let b: Vec<char> = b.chars().collect();
+    let mut prev: Vec<usize> = (0..=b.len()).collect();
+    for (i, &ca) in a.iter().enumerate() {
+        let mut row = vec![i + 1];
+        for (j, &cb) in b.iter().enumerate() {
+            let sub = prev[j] + usize::from(ca != cb);
+            row.push(sub.min(prev[j + 1] + 1).min(row[j] + 1));
+        }
+        prev = row;
+    }
+    prev[b.len()]
 }
 
 #[derive(Debug, Clone)]
@@ -257,30 +380,15 @@ impl Config {
                 .unwrap_or(0),
         };
 
-        // Optional file with optional keys: serving defaults.
+        // Optional file with optional (but strictly known) keys:
+        // serving defaults.
         let serve_path = root.join("configs/serve.json");
-        let mut serve = ServeConfig::default();
-        if serve_path.exists() {
-            let s = read_json(&serve_path)?;
-            if let Some(v) = s.get("backend").and_then(Json::as_str) {
-                serve.backend = v.to_string();
-            }
-            if let Some(v) = s.get("rate_hz").and_then(Json::as_f64) {
-                serve.rate_hz = v;
-            }
-            if let Some(v) = s.get("requests").and_then(Json::as_usize) {
-                serve.requests = v;
-            }
-            if let Some(v) = s.get("max_batch").and_then(Json::as_usize) {
-                serve.max_batch = v;
-            }
-            if let Some(v) = s.get("max_wait_ms").and_then(Json::as_f64) {
-                serve.max_wait_ms = v;
-            }
-            if let Some(v) = s.get("seed").and_then(Json::as_usize) {
-                serve.seed = v as u64;
-            }
-        }
+        let serve = if serve_path.exists() {
+            ServeConfig::from_json(&read_json(&serve_path)?)
+                .with_context(|| format!("loading {}", serve_path.display()))?
+        } else {
+            ServeConfig::default()
+        };
 
         Ok(Config { root: root.to_path_buf(), datasets, model, pipeline, serve })
     }
@@ -330,10 +438,46 @@ mod tests {
         assert!(c.serve.requests > 0);
         assert!(c.serve.max_batch >= 1);
         assert!(c.serve.max_wait_ms >= 0.0);
+        assert!(c.serve.replicas >= 1);
+        assert!(["poisson", "mmpp", "diurnal", "flash"]
+            .contains(&c.serve.traffic.as_str()));
+        assert!(["jsq", "rr"].contains(&c.serve.router.as_str()));
         // Defaults cover a missing file (older checkouts).
         let d = ServeConfig::default();
         assert_eq!(d.backend, "ell");
         assert!(d.max_batch >= 1);
+        assert_eq!(d.replicas, 1, "default fleet is the paper's single pipe");
+        assert_eq!(d.slo_p99_ms, 0.0, "gate defaults to off");
+    }
+
+    #[test]
+    fn serve_config_rejects_unknown_keys_by_name() {
+        let j = Json::parse(r#"{"max_wait": 100.0}"#).unwrap();
+        let err = ServeConfig::from_json(&j).unwrap_err().to_string();
+        assert!(err.contains("max_wait"), "error must name the bad key: {err}");
+        assert!(
+            err.contains("did you mean \"max_wait_ms\""),
+            "error must suggest the near miss: {err}"
+        );
+        // A key nothing resembles still errors, just without a hint.
+        let j = Json::parse(r#"{"zzzzzzzzzzzz": 1}"#).unwrap();
+        let err = ServeConfig::from_json(&j).unwrap_err().to_string();
+        assert!(err.contains("zzzzzzzzzzzz") && !err.contains("did you mean"));
+        // Known keys overlay the defaults; absent ones keep them.
+        let j = Json::parse(r#"{"replicas": 4, "slo_p99_ms": 150.0}"#).unwrap();
+        let s = ServeConfig::from_json(&j).unwrap();
+        assert_eq!(s.replicas, 4);
+        assert_eq!(s.slo_p99_ms, 150.0);
+        assert_eq!(s.max_batch, ServeConfig::default().max_batch);
+    }
+
+    #[test]
+    fn edit_distance_is_levenshtein() {
+        assert_eq!(edit_distance("", ""), 0);
+        assert_eq!(edit_distance("abc", "abc"), 0);
+        assert_eq!(edit_distance("kitten", "sitting"), 3);
+        assert_eq!(edit_distance("max_wait", "max_wait_ms"), 3);
+        assert_eq!(edit_distance("", "abc"), 3);
     }
 
     #[test]

@@ -10,12 +10,15 @@
 //!             [--star] [--graph-aware]               pipeline training
 //!   serve     [--backend B] [--rate R] [--requests N]
 //!             [--max-batch B] [--max-wait-ms W] [--seed S]
+//!             [--replicas R] [--traffic poisson|mmpp|diurnal|flash]
+//!             [--router jsq|rr] [--slo-p99-ms X]
+//!             [--max-defer-ms D] [--service-model-ms M]
 //!                                                   replay a seeded request
-//!                                                   trace through the
-//!                                                   forward-only pipeline
+//!                                                   trace through a fleet of
+//!                                                   forward-only pipelines
 //!   bench     table1|table2|fig1|fig2|fig3|fig4|
 //!             ablation-chunker|edge-retention|
-//!             prep-modes|hybrid|serve|all
+//!             prep-modes|hybrid|serve|serve-fleet|all
 //!             [--epochs N] [--schedule S] [--prep P] [--replicas R]
 //!             [--replica-threads T]
 //!   inspect                                          artifact manifest summary
@@ -31,7 +34,10 @@ use gnn_pipe::data::generate;
 use gnn_pipe::graph::GraphStats;
 use gnn_pipe::pipeline::{parse_schedule, PipelineTrainer, PrepMode};
 use gnn_pipe::runtime::{Engine, Manifest};
-use gnn_pipe::serve::{poisson_trace, BatchPolicy, ServeSession, TraceSpec};
+use gnn_pipe::serve::{
+    generate_trace, BatchPolicy, FleetPolicy, FleetSession, RouterKind,
+    SloPolicy, TraceSpec, TrafficShape,
+};
 use gnn_pipe::simulator::Scenarios;
 use gnn_pipe::train::{flatten_params, init_params, SingleDeviceTrainer};
 use gnn_pipe::util::cli::Args;
@@ -48,7 +54,10 @@ USAGE:
                      [--star] [--graph-aware]
   gnn-pipe serve     [--backend <ell|edgewise>] [--rate R] [--requests N]
                      [--max-batch B] [--max-wait-ms W] [--seed S]
-  gnn-pipe bench     <table1|table2|fig1|fig2|fig3|fig4|ablation-chunker|edge-retention|prep-modes|hybrid|serve|all>
+                     [--replicas R] [--traffic poisson|mmpp|diurnal|flash]
+                     [--router jsq|rr] [--slo-p99-ms X] [--max-defer-ms D]
+                     [--service-model-ms M]
+  gnn-pipe bench     <table1|table2|fig1|fig2|fig3|fig4|ablation-chunker|edge-retention|prep-modes|hybrid|serve|serve-fleet|all>
                      [--epochs N] [--schedule fill-drain|1f1b] [--prep paper|cached|overlap]
                      [--replicas R] [--replica-threads T]
   gnn-pipe inspect
@@ -108,6 +117,38 @@ from the seed, so a run is replayable bit for bit):
   numbers against the Scenarios::serve_latency closed-form model
   (batch formation + M/D/1 queueing + pipeline residence) and writes
   serve.csv + BENCH_serve.json.
+
+SERVE FLEET (defaults from configs/serve.json; serve always runs through
+the fleet session — --replicas 1 with the gate off IS the single
+pipeline, bit for bit):
+  --replicas R          R concurrent forward-only pipelines, one OS
+                        thread each, sharing one engine and one prepped
+                        full-graph micro-batch.
+  --traffic <shape>     arrival process of the seeded trace:
+                          poisson   the memoryless baseline
+                          mmpp      2-state Markov-modulated bursts
+                                    (5x rate in bursts; CV^2 ~ 2)
+                          diurnal   sinusoidal ramp (+-75% around the
+                                    mean rate)
+                          flash     4x flash crowd over 5% of the trace
+  --router jsq|rr       jsq (default) routes each request to the replica
+                        with the shortest virtual queue, rotating on
+                        ties; rr rotates blindly.
+  --slo-p99-ms X        admission gate: predicted p99 (virtual backlog +
+                        max_wait + service model) above X defers a
+                        request up to --max-defer-ms, then sheds it.
+                        0 disables the gate. --service-model-ms is the
+                        modeled per-batch service time the predictor and
+                        router use — a config knob, not a measurement.
+  DETERMINISM CONTRACT: routing, admission and batch composition are
+  decided on the trace's virtual timestamps only, so the full plan —
+  which replica serves which request, what defers, what sheds — is a
+  pure function of (seed, traffic, rate, requests, policy). Served
+  logits are bit-identical across replays at any R and match full_eval
+  per request; only measured wall-clock spans vary run to run.
+  `bench serve-fleet` sweeps replicas x rate x traffic against the
+  Scenarios::fleet_latency model (per-replica M/D/1 + routing imbalance)
+  and writes serve_fleet.csv + BENCH_fleet.json.
 ";
 
 fn main() {
@@ -295,19 +336,37 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let max_batch = args.opt_usize("max-batch", sc.max_batch)?;
     let max_wait_ms = args.opt_f64("max-wait-ms", sc.max_wait_ms)?;
     let seed = args.opt_usize("seed", sc.seed as usize)? as u64;
+    let replicas = args.opt_usize("replicas", sc.replicas)?;
+    let traffic = TrafficShape::parse(args.opt_str("traffic", &sc.traffic))?;
+    let router = RouterKind::parse(args.opt_str("router", &sc.router))?;
+    let slo_p99_ms = args.opt_f64("slo-p99-ms", sc.slo_p99_ms)?;
+    let max_defer_ms = args.opt_f64("max-defer-ms", sc.max_defer_ms)?;
+    let service_model_ms =
+        args.opt_f64("service-model-ms", sc.service_model_ms)?;
     anyhow::ensure!(rate_hz > 0.0, "--rate must be positive");
     anyhow::ensure!(requests > 0, "--requests must be positive");
+    anyhow::ensure!(replicas >= 1, "--replicas must be >= 1");
 
     // Serving artifacts exist for the pipeline dataset (chunks=1).
     let dataset = cfg.pipeline.pipeline_dataset.clone();
     let engine = Engine::from_artifacts_dir(&cfg.artifacts_dir())?;
     let profile = cfg.dataset(&dataset)?;
     let ds = generate(profile)?;
-    let trace = poisson_trace(
+    let trace = generate_trace(
         &TraceSpec { rate_hz, requests, seed },
+        traffic,
         profile.nodes,
     );
     let policy = BatchPolicy { max_batch, max_wait_s: max_wait_ms / 1e3 };
+    let fleet = FleetPolicy {
+        replicas,
+        router,
+        slo: (slo_p99_ms > 0.0).then(|| SloPolicy {
+            p99_target_s: slo_p99_ms / 1e3,
+            max_defer_s: max_defer_ms.max(0.0) / 1e3,
+        }),
+        service_model_s: service_model_ms.max(0.0) / 1e3,
+    };
 
     // Served parameters: the seeded init (training a model first is a
     // separate concern; logits parity with full_eval holds for ANY
@@ -316,32 +375,50 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let params = flatten_params(&params_map, &engine.manifest.param_order)?;
 
     println!(
-        "serving {dataset}/{backend}: {requests} requests at {rate_hz:.1} req/s \
-         (max_batch {max_batch}, max_wait {max_wait_ms:.0} ms, seed {seed})..."
+        "serving {dataset}/{backend}: {requests} {} requests at {rate_hz:.1} req/s \
+         over {replicas} replica(s) ({} router, SLO {}; max_batch {max_batch}, \
+         max_wait {max_wait_ms:.0} ms, seed {seed})...",
+        traffic.name(),
+        router.name(),
+        if slo_p99_ms > 0.0 {
+            format!("p99 <= {slo_p99_ms:.0} ms")
+        } else {
+            "off".to_string()
+        },
     );
-    let session = ServeSession::new(&engine, &ds, &backend);
-    let out = session.run(&params, &trace, &policy)?;
+    let session = FleetSession::new(&engine, &ds, &backend);
+    let out = session.run(&params, &trace, &policy, &fleet)?;
     print!("{}", out.report.render());
 
-    // The closed-form model at this operating point, priced with the
-    // run's own measured stage times.
-    let model = Scenarios::serve_latency(
+    // The closed-form fleet model at this operating point, priced with
+    // the run's own measured stage times at the ADMITTED rate (under
+    // overload the gate is what keeps the served stream finite).
+    let model = Scenarios::fleet_latency(
         &out.report.stage_fwd_means_s,
-        rate_hz,
+        out.report.admitted_rps,
+        replicas,
         max_batch,
         max_wait_ms / 1e3,
     );
+    let per = model.per_replica;
     println!(
-        "model (closed form): batch {:.2}  wait {:.1} ms + queue {} + residence {:.1} ms  util {:.2}",
-        model.batch_size,
-        model.batch_wait_s * 1e3,
-        if model.pipe_wait_s.is_finite() {
-            format!("{:.1} ms", model.pipe_wait_s * 1e3)
+        "model (closed form): batch {:.2}  wait {:.1} ms + queue {} + \
+         imbalance {:.1} ms + residence {:.1} ms  p99 {}  util {:.2}",
+        per.batch_size,
+        per.batch_wait_s * 1e3,
+        if per.pipe_wait_s.is_finite() {
+            format!("{:.1} ms", per.pipe_wait_s * 1e3)
         } else {
             "inf (overload)".to_string()
         },
-        model.residence_s * 1e3,
-        model.utilization,
+        model.imbalance_s * 1e3,
+        per.residence_s * 1e3,
+        if model.p99_s.is_finite() {
+            format!("{:.1} ms", model.p99_s * 1e3)
+        } else {
+            "inf".to_string()
+        },
+        per.utilization,
     );
     Ok(())
 }
@@ -378,6 +455,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
             "prep-modes" => bench::bench_prep_modes(ctx),
             "hybrid" => bench::bench_hybrid(ctx),
             "serve" => bench::bench_serve(ctx),
+            "serve-fleet" => bench::bench_serve_fleet(ctx),
             other => anyhow::bail!("unknown bench {other:?}"),
         }
     };
@@ -385,7 +463,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
         for name in [
             "table1", "table2", "fig1", "fig2", "fig3", "fig4",
             "ablation-chunker", "edge-retention", "prep-modes", "hybrid",
-            "serve",
+            "serve", "serve-fleet",
         ] {
             outputs.push(run(name, &ctx)?);
         }

@@ -104,6 +104,35 @@ pub fn p50_p95_p99(xs: &[f64]) -> (f64, f64, f64) {
     (p[0], p[1], p[2])
 }
 
+/// The full summary shape the serving reports print: central tendency
+/// plus the standard tail points plus the extreme.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct Summary {
+    pub mean: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+    pub max: f64,
+}
+
+/// Summarize a sample, or `None` when there is nothing to summarize —
+/// the explicit empty-input contract ([`percentiles`] itself returns
+/// zeros on empty, which a caller cannot tell apart from a genuinely
+/// all-zero sample).
+pub fn summary(xs: &[f64]) -> Option<Summary> {
+    if xs.is_empty() {
+        return None;
+    }
+    let p = percentiles(xs, &[50.0, 95.0, 99.0, 100.0]);
+    Some(Summary {
+        mean: xs.iter().sum::<f64>() / xs.len() as f64,
+        p50: p[0],
+        p95: p[1],
+        p99: p[2],
+        max: p[3],
+    })
+}
+
 /// Accuracy/loss curve over epochs.
 #[derive(Debug, Clone, Default)]
 pub struct Curve {
@@ -308,6 +337,30 @@ mod tests {
         assert_eq!(percentiles(&[7.0], &[50.0, 95.0, 99.0]), vec![7.0; 3]);
         let (p50, p95, p99) = p50_p95_p99(&[1.0, 2.0]);
         assert_eq!((p50, p95, p99), (1.0, 2.0, 2.0));
+    }
+
+    #[test]
+    fn summary_is_none_on_empty_and_exact_on_one_sample() {
+        assert_eq!(summary(&[]), None);
+        let s = summary(&[7.0]).unwrap();
+        // Every point of a single-sample summary IS that sample.
+        assert_eq!(
+            s,
+            Summary { mean: 7.0, p50: 7.0, p95: 7.0, p99: 7.0, max: 7.0 }
+        );
+    }
+
+    #[test]
+    fn summary_handles_tie_heavy_samples() {
+        // 99 copies of 1.0 and a single outlier: the tie block owns
+        // every percentile up to p99 under nearest-rank; only max sees
+        // the outlier.
+        let mut xs = vec![1.0; 99];
+        xs.push(100.0);
+        let s = summary(&xs).unwrap();
+        assert_eq!((s.p50, s.p95, s.p99), (1.0, 1.0, 1.0));
+        assert_eq!(s.max, 100.0);
+        assert!((s.mean - 1.99).abs() < 1e-12);
     }
 
     #[test]

@@ -1,0 +1,182 @@
+//! SLO-aware admission control: shed or defer before queueing collapse.
+//!
+//! An open-loop trace keeps arriving however far behind the fleet
+//! falls, so under sustained overload the only way to keep the p99 of
+//! *served* requests near a target is to not serve some of them. The
+//! [`AdmissionGate`] decides per request, on the trace's **virtual**
+//! timeline (never the wall clock, so decisions are bit-reproducible
+//! from the trace seed), using a closed-form p99 predictor:
+//!
+//! ```text
+//! predicted_p99(backlog) = backlog + max_wait + service_model
+//! ```
+//!
+//! * `backlog` — the routed replica's live virtual queue depth in
+//!   seconds (`free_at − now` from the router's completion estimates;
+//!   see [`super::fleet`]);
+//! * `max_wait` — the batching policy's deadline: the worst-case batch
+//!   formation delay, i.e. the p99-ish of the batching span (waits are
+//!   within `[0, max_wait]` by the batcher's invariant);
+//! * `service_model` — the configured per-batch bottleneck service
+//!   estimate (`service_model_ms`), the same term
+//!   `Scenarios::serve_latency` calls the bottleneck stage time. A
+//!   *config* knob rather than a measurement, deliberately: measured
+//!   times vary run to run, and admission decisions must not.
+//!
+//! The decision ladder, given `slack = slo_p99 − max_wait − service_model`:
+//!
+//! * `backlog ≤ slack` → **admit** now;
+//! * `backlog − slack ≤ max_defer` → **defer** by exactly
+//!   `backlog − slack` seconds: the backlog is a fixed point on the
+//!   virtual timeline, so at the deferred arrival the predictor meets
+//!   the SLO with equality;
+//! * otherwise → **shed**. When `slack < 0` the SLO is infeasible even
+//!   on an idle fleet (one batch wait + one service exceed it) and
+//!   every request sheds — surfacing a misconfiguration instead of
+//!   silently blowing the target.
+//!
+//! Deferred requests (and requests FIFO-queued behind them on the same
+//! replica) may therefore wait up to `max_defer + max_wait`; the fleet
+//! report counts served / deferred / shed separately so the trade is
+//! visible.
+
+/// The serving SLO: a p99 latency target plus how long the gate may
+/// hold a request back before giving up on it.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SloPolicy {
+    /// Target p99 of served-request total latency, seconds.
+    pub p99_target_s: f64,
+    /// Maximum per-request deferral before shedding, seconds.
+    pub max_defer_s: f64,
+}
+
+/// One request's fate at the gate.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum AdmissionDecision {
+    /// Serve at the original arrival time.
+    Admit,
+    /// Serve, but shift the effective arrival `delay_s` later so the
+    /// predicted p99 meets the target.
+    Defer { delay_s: f64 },
+    /// Reject: even a maximal deferral would miss the SLO.
+    Shed,
+}
+
+/// The deterministic admission gate. Pure over (SLO, batching policy,
+/// service model): same inputs, same decisions, always.
+#[derive(Debug, Clone, Copy)]
+pub struct AdmissionGate {
+    slo: SloPolicy,
+    /// Latency floor of an admitted request on an idle replica:
+    /// worst-case batch wait + one modeled batch service.
+    floor_s: f64,
+}
+
+impl AdmissionGate {
+    pub fn new(slo: SloPolicy, max_wait_s: f64, service_model_s: f64) -> AdmissionGate {
+        AdmissionGate {
+            slo,
+            floor_s: max_wait_s.max(0.0) + service_model_s.max(0.0),
+        }
+    }
+
+    /// The closed-form p99 predictor for a request facing `backlog_s`
+    /// of queued virtual work on its routed replica.
+    pub fn predicted_p99_s(&self, backlog_s: f64) -> f64 {
+        backlog_s.max(0.0) + self.floor_s
+    }
+
+    /// Largest backlog the gate admits without deferral (negative when
+    /// the SLO is infeasible even on an idle replica).
+    pub fn slack_s(&self) -> f64 {
+        self.slo.p99_target_s - self.floor_s
+    }
+
+    pub fn decide(&self, backlog_s: f64) -> AdmissionDecision {
+        let backlog = backlog_s.max(0.0);
+        let slack = self.slack_s();
+        if backlog <= slack {
+            AdmissionDecision::Admit
+        } else if slack >= 0.0 && backlog - slack <= self.slo.max_defer_s {
+            AdmissionDecision::Defer { delay_s: backlog - slack }
+        } else {
+            AdmissionDecision::Shed
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gate(p99_ms: f64, defer_ms: f64) -> AdmissionGate {
+        AdmissionGate::new(
+            SloPolicy {
+                p99_target_s: p99_ms / 1e3,
+                max_defer_s: defer_ms / 1e3,
+            },
+            0.050, // max_wait
+            0.030, // service model
+        )
+    }
+
+    #[test]
+    fn idle_replica_admits_when_the_slo_is_feasible() {
+        let g = gate(200.0, 100.0);
+        assert_eq!(g.decide(0.0), AdmissionDecision::Admit);
+        assert!((g.slack_s() - 0.120).abs() < 1e-12);
+        assert!((g.predicted_p99_s(0.0) - 0.080).abs() < 1e-12);
+    }
+
+    #[test]
+    fn backlog_escalates_admit_to_defer_to_shed() {
+        let g = gate(200.0, 100.0);
+        // slack = 120 ms, defer window = 100 ms on top.
+        assert_eq!(g.decide(0.120), AdmissionDecision::Admit);
+        match g.decide(0.150) {
+            AdmissionDecision::Defer { delay_s } => {
+                assert!((delay_s - 0.030).abs() < 1e-12);
+                // Deferring by the delay meets the target exactly.
+                assert!(
+                    (g.predicted_p99_s(0.150 - delay_s) - 0.200).abs() < 1e-12
+                );
+            }
+            other => panic!("expected Defer, got {other:?}"),
+        }
+        assert_eq!(g.decide(0.221), AdmissionDecision::Shed);
+    }
+
+    #[test]
+    fn infeasible_slo_sheds_everything() {
+        // Target 50 ms < floor 80 ms: even an idle replica misses it,
+        // and no deferral can help (the floor never drains).
+        let g = gate(50.0, 1000.0);
+        assert!(g.slack_s() < 0.0);
+        assert_eq!(g.decide(0.0), AdmissionDecision::Shed);
+        assert_eq!(g.decide(1.0), AdmissionDecision::Shed);
+    }
+
+    #[test]
+    fn decisions_are_monotone_in_backlog() {
+        let g = gate(200.0, 100.0);
+        let severity = |b: f64| match g.decide(b) {
+            AdmissionDecision::Admit => 0,
+            AdmissionDecision::Defer { .. } => 1,
+            AdmissionDecision::Shed => 2,
+        };
+        let mut last = 0;
+        for i in 0..1000 {
+            let s = severity(i as f64 * 0.001);
+            assert!(s >= last, "severity regressed at backlog {i} ms");
+            last = s;
+        }
+        assert_eq!(last, 2, "sweep must reach Shed");
+    }
+
+    #[test]
+    fn negative_backlog_clamps_to_idle() {
+        let g = gate(200.0, 100.0);
+        assert_eq!(g.decide(-5.0), g.decide(0.0));
+        assert_eq!(g.predicted_p99_s(-5.0), g.predicted_p99_s(0.0));
+    }
+}

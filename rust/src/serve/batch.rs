@@ -177,6 +177,38 @@ mod tests {
     }
 
     #[test]
+    fn single_request_closes_at_its_deadline() {
+        let trace = vec![req(2.5)];
+        let policy = BatchPolicy { max_batch: 8, max_wait_s: 0.25 };
+        let batches = check_invariants(&trace, &policy);
+        assert_eq!(batches.len(), 1);
+        assert_eq!(batches[0].requests, vec![0]);
+        assert_eq!(batches[0].open_s, 2.5);
+        // The trailing (here: only) batch waits out its full deadline —
+        // an open-loop server cannot know the stream ended.
+        assert_eq!(batches[0].close_s, 2.75);
+    }
+
+    #[test]
+    fn all_simultaneous_arrivals_chunk_by_capacity() {
+        // A worst-case burst: 10 requests at the same instant, cap 4.
+        // They chunk into ceil(10/4) batches in order; the full chunks
+        // close instantly (fill trigger at the same timestamp) and only
+        // the ragged tail waits, so queue-wait <= max_wait holds with
+        // room to spare (check_invariants asserts it).
+        let trace: Vec<Request> = (0..10).map(|_| req(1.0)).collect();
+        let policy = BatchPolicy { max_batch: 4, max_wait_s: 0.2 };
+        let batches = check_invariants(&trace, &policy);
+        assert_eq!(batches.len(), 3);
+        assert_eq!(batches[0].requests, vec![0, 1, 2, 3]);
+        assert_eq!(batches[1].requests, vec![4, 5, 6, 7]);
+        assert_eq!(batches[2].requests, vec![8, 9]);
+        assert_eq!(batches[0].close_s, 1.0, "full burst batch closes at once");
+        assert_eq!(batches[1].close_s, 1.0);
+        assert_eq!(batches[2].close_s, 1.2, "ragged tail waits out the deadline");
+    }
+
+    #[test]
     fn zero_wait_groups_only_simultaneous_arrivals() {
         let trace = vec![req(0.0), req(0.0), req(1.0)];
         let policy = BatchPolicy { max_batch: 8, max_wait_s: 0.0 };

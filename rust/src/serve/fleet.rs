@@ -1,0 +1,663 @@
+//! The serving fleet: R concurrent forward-only pipelines behind one
+//! deterministic router and SLO gate.
+//!
+//! ## Plan, then execute
+//!
+//! A fleet run has two phases with a sharp boundary:
+//!
+//! 1. **Plan** ([`plan_fleet`], pure): walk the trace in arrival order
+//!    on its **virtual** timeline. Each request is routed
+//!    (join-shortest-queue over per-replica virtual completion
+//!    estimates, round-robin on ties — or pure round-robin with
+//!    `--router rr`) and then gated ([`AdmissionGate`]): admit, defer
+//!    (shift the effective arrival to where the predicted p99 meets the
+//!    SLO), or shed. Nothing in this phase reads a clock or a
+//!    measurement, so the full disposition vector — and with it every
+//!    replica's batch composition — is a pure function of
+//!    `(trace, policy, fleet policy)`, bit-reproducible from the trace
+//!    seed.
+//! 2. **Execute** (measured): the admitted sub-traces replay
+//!    concurrently, one [`ServeSession::run`] per replica on its own OS
+//!    thread ([`run_indexed`], the same index-stealing fork-join the
+//!    hybrid replica layer uses). Each replica builds its own
+//!    forward-only [`PipelineEngine`](crate::pipeline::PipelineEngine)
+//!    over the shared engine; the engine's shared-state audit
+//!    (immutable spec/schedule, atomics-only stats, content-keyed
+//!    static buffers with move-out call semantics) covers concurrent
+//!    `run_forward` calls, and the full-graph micro-batch is built once
+//!    through the shared [`MicrobatchCache`]
+//!    (`ServeSession::prep_cache`).
+//!
+//! Because per-request logits depend only on (params, node) — every
+//! batch is a full staged forward over the same device-resident graph —
+//! routing moves *where* a request is served, never *what* it computes:
+//! R=1 is bitwise identical to the single-pipeline `ServeSession`, and
+//! at any R the served logits match `full_eval` row for row
+//! (`rust/tests/integration_serve.rs` pins both).
+//!
+//! ## The router's virtual queue
+//!
+//! Each replica carries `free_at[r]`: the virtual time its queued work
+//! completes, advanced by `service_model_s / max_batch` per routed
+//! request (the amortised per-request share of one modeled batch).
+//! JSQ picks the replica with the earliest `max(now, free_at)`; exact
+//! ties — every request on an idle fleet — fall back to round-robin so
+//! low load spreads instead of piling on replica 0. The same
+//! `free_at − now` backlog feeds the admission gate's p99 predictor,
+//! which is what the ISSUE means by "live per-replica queue depth".
+//!
+//! Deferral keeps per-replica FIFO: an effective arrival is clamped to
+//! be no earlier than the previous effective arrival routed to the same
+//! replica, so each replica's sub-trace stays sorted and
+//! [`plan_batches`] applies unchanged.
+//!
+//! [`run_indexed`]: crate::util::par::run_indexed
+//! [`plan_batches`]: super::batch::plan_batches
+//! [`MicrobatchCache`]: crate::pipeline::MicrobatchCache
+
+use std::fmt::Write as _;
+
+use anyhow::{Context, Result};
+
+use crate::data::Dataset;
+use crate::metrics::{fmt_seconds, Timer};
+use crate::runtime::{Engine, HostTensor};
+use crate::util::par::run_indexed;
+
+use super::admission::{AdmissionDecision, AdmissionGate, SloPolicy};
+use super::batch::BatchPolicy;
+use super::latency::{LatencySummary, RequestLatency};
+use super::server::{ServeOutput, ServeSession};
+use super::trace::Request;
+
+/// How the fleet spreads requests over replicas.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RouterKind {
+    /// Join-shortest-queue over virtual completion estimates,
+    /// round-robin on exact ties.
+    Jsq,
+    /// Blind rotation — the baseline JSQ is measured against.
+    RoundRobin,
+}
+
+impl RouterKind {
+    pub fn parse(s: &str) -> Result<RouterKind> {
+        match s {
+            "jsq" => Ok(RouterKind::Jsq),
+            "rr" | "round-robin" => Ok(RouterKind::RoundRobin),
+            other => anyhow::bail!(
+                "unknown router {other:?} (expected jsq or rr)"
+            ),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            RouterKind::Jsq => "jsq",
+            RouterKind::RoundRobin => "rr",
+        }
+    }
+}
+
+/// The fleet-level knobs (`configs/serve.json`: `replicas`, `router`,
+/// `slo_p99_ms`/`max_defer_ms`, `service_model_ms`).
+#[derive(Debug, Clone, Copy)]
+pub struct FleetPolicy {
+    /// Concurrent forward-only pipelines (>= 1).
+    pub replicas: usize,
+    pub router: RouterKind,
+    /// `None` = admit everything (no gate).
+    pub slo: Option<SloPolicy>,
+    /// Modeled per-batch bottleneck service time feeding the router's
+    /// completion estimates and the gate's p99 predictor. A config
+    /// value, not a measurement — planning must be bit-reproducible.
+    pub service_model_s: f64,
+}
+
+impl FleetPolicy {
+    /// The single-pipeline degenerate case: everything routes to
+    /// replica 0 unmodified.
+    pub fn single() -> FleetPolicy {
+        FleetPolicy {
+            replicas: 1,
+            router: RouterKind::Jsq,
+            slo: None,
+            service_model_s: 0.025,
+        }
+    }
+}
+
+/// One request's planned fate.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Disposition {
+    Served {
+        replica: usize,
+        /// Effective − original arrival: explicit SLO deferral plus any
+        /// per-replica FIFO clamp behind a deferred request. 0 when the
+        /// gate is off.
+        deferred_s: f64,
+    },
+    Shed,
+}
+
+/// The deterministic routing/admission plan for one trace.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FleetPlan {
+    /// Indexed like the trace.
+    pub dispositions: Vec<Disposition>,
+    pub served: usize,
+    /// Served requests whose effective arrival was shifted (> 0).
+    pub deferred: usize,
+    pub shed: usize,
+}
+
+impl FleetPlan {
+    /// Per-replica (original trace index, effective-arrival request)
+    /// sub-traces, each sorted by effective arrival.
+    pub fn sub_traces(
+        &self,
+        trace: &[Request],
+        replicas: usize,
+    ) -> Vec<Vec<(usize, Request)>> {
+        let mut subs: Vec<Vec<(usize, Request)>> = vec![Vec::new(); replicas];
+        for (i, d) in self.dispositions.iter().enumerate() {
+            if let Disposition::Served { replica, deferred_s } = *d {
+                subs[replica].push((
+                    i,
+                    Request {
+                        node: trace[i].node,
+                        arrival_s: trace[i].arrival_s + deferred_s,
+                    },
+                ));
+            }
+        }
+        subs
+    }
+}
+
+/// Walk the trace once on the virtual timeline: route, gate, and stamp
+/// effective arrivals. Pure — see the module docs for the state
+/// machine. Panics if `fleet.replicas == 0`.
+pub fn plan_fleet(
+    trace: &[Request],
+    policy: &BatchPolicy,
+    fleet: &FleetPolicy,
+) -> FleetPlan {
+    let r_count = fleet.replicas;
+    assert!(r_count >= 1, "a fleet needs at least one replica");
+    let gate = fleet
+        .slo
+        .map(|slo| AdmissionGate::new(slo, policy.max_wait_s, fleet.service_model_s));
+    // Amortised per-request share of one modeled batch service.
+    let svc_req = fleet.service_model_s.max(0.0) / policy.max_batch.max(1) as f64;
+    let mut free_at = vec![0.0f64; r_count];
+    let mut last_eff = vec![0.0f64; r_count];
+    let mut rr_next = 0usize;
+    let mut dispositions = Vec::with_capacity(trace.len());
+    let (mut served, mut deferred, mut shed) = (0usize, 0usize, 0usize);
+    for req in trace {
+        let t = req.arrival_s;
+        let r = match fleet.router {
+            RouterKind::RoundRobin => {
+                let r = rr_next % r_count;
+                rr_next = (rr_next + 1) % r_count;
+                r
+            }
+            RouterKind::Jsq => {
+                // Earliest virtual start; scan cyclically from rr_next
+                // so exact ties rotate instead of favouring replica 0.
+                let key = |r: usize| free_at[r].max(t);
+                let mut best = rr_next % r_count;
+                for step in 1..r_count {
+                    let cand = (rr_next + step) % r_count;
+                    if key(cand) < key(best) {
+                        best = cand;
+                    }
+                }
+                rr_next = (best + 1) % r_count;
+                best
+            }
+        };
+        let backlog = (free_at[r] - t).max(0.0);
+        let decision = match &gate {
+            None => AdmissionDecision::Admit,
+            Some(g) => g.decide(backlog),
+        };
+        let eff = match decision {
+            AdmissionDecision::Admit => t,
+            AdmissionDecision::Defer { delay_s } => t + delay_s,
+            AdmissionDecision::Shed => {
+                shed += 1;
+                dispositions.push(Disposition::Shed);
+                continue;
+            }
+        };
+        // FIFO per replica: never earlier than the previous effective
+        // arrival routed here (only deferrals can create inversions).
+        let eff = eff.max(last_eff[r]);
+        last_eff[r] = eff;
+        free_at[r] = free_at[r].max(eff) + svc_req;
+        let deferred_s = eff - t;
+        served += 1;
+        if deferred_s > 0.0 {
+            deferred += 1;
+        }
+        dispositions.push(Disposition::Served { replica: r, deferred_s });
+    }
+    FleetPlan { dispositions, served, deferred, shed }
+}
+
+/// The fleet run's aggregate report: what `gnn-pipe serve --replicas R`
+/// prints and `bench serve-fleet` compares against
+/// `Scenarios::fleet_latency`.
+#[derive(Debug, Clone, Default)]
+pub struct FleetReport {
+    pub backend: String,
+    pub replicas: usize,
+    pub router: String,
+    /// Trace length (served + shed).
+    pub offered: usize,
+    pub served: usize,
+    pub deferred: usize,
+    pub shed: usize,
+    /// `shed / offered`.
+    pub shed_rate: f64,
+    /// Offered load implied by the trace (requests / trace span).
+    pub offered_rps: f64,
+    /// Admitted load actually replayed (served / trace span) — the rate
+    /// the post-gate cost model should be evaluated at.
+    pub admitted_rps: f64,
+    /// Served requests / slowest replica's pipeline wall-clock (the
+    /// replicas run concurrently, so the slowest one bounds the fleet).
+    pub throughput_rps: f64,
+    /// Slowest replica's streaming-pass wall-clock.
+    pub wall_s: f64,
+    /// Wall-clock of the whole concurrent execute phase, per-replica
+    /// setup included.
+    pub phase_wall_s: f64,
+    pub per_replica_served: Vec<usize>,
+    pub per_replica_wall_s: Vec<f64>,
+    /// Summed over replicas.
+    pub static_hits: u64,
+    /// Queue span vs the ORIGINAL arrival (batching delay + deferral).
+    pub queue: LatencySummary,
+    pub execute: LatencySummary,
+    pub total: LatencySummary,
+    /// Mean per-batch forward seconds per stage, averaged over the
+    /// replicas that served traffic (feeds `Scenarios::fleet_latency`).
+    pub stage_fwd_means_s: Vec<f64>,
+}
+
+impl FleetReport {
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(
+            s,
+            "fleet: {} replicas ({} router), offered {} -> served {} \
+             (deferred {}) / shed {} ({:.1}% shed)",
+            self.replicas,
+            self.router,
+            self.offered,
+            self.served,
+            self.deferred,
+            self.shed,
+            self.shed_rate * 100.0,
+        );
+        let _ = writeln!(
+            s,
+            "offered {:.1} req/s (admitted {:.1}) -> throughput {:.1} req/s  \
+             (slowest replica wall {}, phase {}, static hits {})",
+            self.offered_rps,
+            self.admitted_rps,
+            self.throughput_rps,
+            fmt_seconds(self.wall_s),
+            fmt_seconds(self.phase_wall_s),
+            self.static_hits,
+        );
+        let _ = writeln!(
+            s,
+            "per-replica served: {:?}  walls: [{}]",
+            self.per_replica_served,
+            self.per_replica_wall_s
+                .iter()
+                .map(|w| fmt_seconds(*w))
+                .collect::<Vec<_>>()
+                .join(", "),
+        );
+        let _ = writeln!(s, "{}", self.queue.row("queue"));
+        let _ = writeln!(s, "{}", self.execute.row("execute"));
+        let _ = writeln!(s, "{}", self.total.row("TOTAL"));
+        for (i, f) in self.stage_fwd_means_s.iter().enumerate() {
+            let _ = writeln!(s, "  stage {i}: mean fwd {}", fmt_seconds(*f));
+        }
+        s
+    }
+}
+
+/// Everything a fleet run produces. Shed requests keep an empty logits
+/// row and a default latency.
+#[derive(Debug)]
+pub struct FleetOutput {
+    pub report: FleetReport,
+    pub plan: FleetPlan,
+    /// Served log-prob row per request, indexed like the trace; empty
+    /// for shed requests.
+    pub request_logits: Vec<Vec<f32>>,
+    /// Indexed like the trace; default (all-zero) for shed requests.
+    pub latencies: Vec<RequestLatency>,
+    /// Per replica, the global request indices in that replica's
+    /// completion (batch-plan) order.
+    pub replica_orders: Vec<Vec<usize>>,
+}
+
+/// A bound serving fleet: one shared [`ServeSession`] driven
+/// concurrently, one thread per replica.
+pub struct FleetSession<'e> {
+    session: ServeSession<'e>,
+    backend: String,
+}
+
+impl<'e> FleetSession<'e> {
+    pub fn new(engine: &'e Engine, ds: &'e Dataset, backend: &str) -> FleetSession<'e> {
+        FleetSession {
+            session: ServeSession::new(engine, ds, backend),
+            backend: backend.to_string(),
+        }
+    }
+
+    /// Same probe as the single-pipeline session: all replicas run the
+    /// chunks=1 forward-only artifacts.
+    pub fn artifacts_available(engine: &Engine, dataset: &str, backend: &str) -> bool {
+        ServeSession::artifacts_available(engine, dataset, backend)
+    }
+
+    /// Plan on the virtual timeline, then replay the admitted
+    /// sub-traces concurrently (thread per replica) and merge.
+    pub fn run(
+        &self,
+        params: &[HostTensor],
+        trace: &[Request],
+        policy: &BatchPolicy,
+        fleet: &FleetPolicy,
+    ) -> Result<FleetOutput> {
+        anyhow::ensure!(!trace.is_empty(), "cannot serve an empty trace");
+        let plan = plan_fleet(trace, policy, fleet);
+        let subs = plan.sub_traces(trace, fleet.replicas);
+
+        let phase = Timer::start();
+        let results: Vec<Result<Option<ServeOutput>>> =
+            run_indexed(fleet.replicas, fleet.replicas, |r| {
+                if subs[r].is_empty() {
+                    return Ok(None);
+                }
+                let sub: Vec<Request> =
+                    subs[r].iter().map(|&(_, req)| req).collect();
+                self.session
+                    .run(params, &sub, policy)
+                    .with_context(|| format!("replica {r}"))
+                    .map(Some)
+            });
+        let phase_wall_s = phase.secs();
+
+        let mut outs: Vec<Option<ServeOutput>> = Vec::with_capacity(fleet.replicas);
+        for res in results {
+            outs.push(res?);
+        }
+
+        // Merge back into trace order, correcting queue spans to the
+        // ORIGINAL arrivals (a replica measured waits against effective
+        // arrivals; deferral is queueing too and must be charged).
+        let mut request_logits: Vec<Vec<f32>> = vec![Vec::new(); trace.len()];
+        let mut latencies = vec![RequestLatency::default(); trace.len()];
+        let mut replica_orders: Vec<Vec<usize>> = vec![Vec::new(); fleet.replicas];
+        let mut per_replica_served = vec![0usize; fleet.replicas];
+        let mut per_replica_wall_s = vec![0.0f64; fleet.replicas];
+        let mut static_hits = 0u64;
+        let mut stage_means: Vec<Vec<f64>> = Vec::new();
+        for (r, out) in outs.into_iter().enumerate() {
+            let Some(out) = out else { continue };
+            per_replica_served[r] = subs[r].len();
+            per_replica_wall_s[r] = out.report.wall_s;
+            static_hits += out.report.static_hits;
+            stage_means.push(out.report.stage_fwd_means_s.clone());
+            replica_orders[r] = out
+                .completion_order
+                .iter()
+                .map(|&local| subs[r][local].0)
+                .collect();
+            for (local, &(global, _)) in subs[r].iter().enumerate() {
+                let mut lat = out.latencies[local];
+                if let Disposition::Served { deferred_s, .. } =
+                    plan.dispositions[global]
+                {
+                    lat.queue_s += deferred_s;
+                }
+                latencies[global] = lat;
+                request_logits[global] = out.request_logits[local].clone();
+            }
+        }
+
+        let served_lat: Vec<&RequestLatency> = plan
+            .dispositions
+            .iter()
+            .enumerate()
+            .filter(|(_, d)| matches!(d, Disposition::Served { .. }))
+            .map(|(i, _)| &latencies[i])
+            .collect();
+        let summarize = |f: fn(&RequestLatency) -> f64| {
+            LatencySummary::from_samples(
+                &served_lat.iter().map(|&l| f(l)).collect::<Vec<f64>>(),
+            )
+        };
+        let stage_fwd_means_s: Vec<f64> = if stage_means.is_empty() {
+            Vec::new()
+        } else {
+            (0..stage_means[0].len())
+                .map(|s| {
+                    stage_means.iter().map(|m| m[s]).sum::<f64>()
+                        / stage_means.len() as f64
+                })
+                .collect()
+        };
+        let trace_span_s = trace.last().unwrap().arrival_s.max(1e-12);
+        let wall_s = per_replica_wall_s.iter().cloned().fold(0.0, f64::max);
+        let report = FleetReport {
+            backend: self.backend.clone(),
+            replicas: fleet.replicas,
+            router: fleet.router.name().to_string(),
+            offered: trace.len(),
+            served: plan.served,
+            deferred: plan.deferred,
+            shed: plan.shed,
+            shed_rate: plan.shed as f64 / trace.len() as f64,
+            offered_rps: trace.len() as f64 / trace_span_s,
+            admitted_rps: plan.served as f64 / trace_span_s,
+            throughput_rps: plan.served as f64 / wall_s.max(1e-12),
+            wall_s,
+            phase_wall_s,
+            per_replica_served,
+            per_replica_wall_s,
+            static_hits,
+            queue: summarize(|l| l.queue_s),
+            execute: summarize(|l| l.execute_s),
+            total: summarize(|l| l.total_s()),
+            stage_fwd_means_s,
+        };
+        Ok(FleetOutput {
+            report,
+            plan,
+            request_logits,
+            latencies,
+            replica_orders,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::trace::{generate_trace, TraceSpec, TrafficShape};
+
+    fn policy() -> BatchPolicy {
+        BatchPolicy { max_batch: 8, max_wait_s: 0.05 }
+    }
+
+    fn trace(rate_hz: f64, requests: usize, seed: u64) -> Vec<Request> {
+        generate_trace(
+            &TraceSpec { rate_hz, requests, seed },
+            TrafficShape::Poisson,
+            500,
+        )
+    }
+
+    #[test]
+    fn single_replica_plan_is_the_identity() {
+        let trace = trace(100.0, 300, 7);
+        let plan = plan_fleet(&trace, &policy(), &FleetPolicy::single());
+        assert_eq!(plan.served, 300);
+        assert_eq!(plan.shed, 0);
+        assert_eq!(plan.deferred, 0);
+        for d in &plan.dispositions {
+            assert_eq!(*d, Disposition::Served { replica: 0, deferred_s: 0.0 });
+        }
+        let subs = plan.sub_traces(&trace, 1);
+        let sub: Vec<Request> = subs[0].iter().map(|&(_, r)| r).collect();
+        assert_eq!(sub, trace, "R=1 sub-trace must be the trace itself");
+    }
+
+    #[test]
+    fn plans_replay_identically_and_balance_across_replicas() {
+        let trace = trace(200.0, 4000, 11);
+        for router in [RouterKind::Jsq, RouterKind::RoundRobin] {
+            let fleet = FleetPolicy {
+                replicas: 4,
+                router,
+                slo: None,
+                service_model_s: 0.03,
+            };
+            let a = plan_fleet(&trace, &policy(), &fleet);
+            let b = plan_fleet(&trace, &policy(), &fleet);
+            assert_eq!(a, b, "{router:?} plan must be deterministic");
+            let subs = a.sub_traces(&trace, 4);
+            for (r, sub) in subs.iter().enumerate() {
+                let share = sub.len() as f64 / trace.len() as f64;
+                assert!(
+                    (0.15..=0.35).contains(&share),
+                    "{router:?}: replica {r} got share {share:.2}"
+                );
+                // Per-replica sub-traces stay sorted (FIFO clamp).
+                for w in sub.windows(2) {
+                    assert!(w[0].1.arrival_s <= w[1].1.arrival_s);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn round_robin_rotates_exactly() {
+        let trace = trace(100.0, 12, 3);
+        let fleet = FleetPolicy {
+            replicas: 3,
+            router: RouterKind::RoundRobin,
+            slo: None,
+            service_model_s: 0.03,
+        };
+        let plan = plan_fleet(&trace, &policy(), &fleet);
+        for (i, d) in plan.dispositions.iter().enumerate() {
+            assert_eq!(
+                *d,
+                Disposition::Served { replica: i % 3, deferred_s: 0.0 }
+            );
+        }
+    }
+
+    #[test]
+    fn jsq_idle_ties_fall_back_to_round_robin() {
+        // Arrivals far apart relative to the service model: every
+        // request sees an idle fleet, and JSQ must rotate, not pile on
+        // replica 0.
+        let trace: Vec<Request> = (0..9)
+            .map(|i| Request { node: 0, arrival_s: i as f64 })
+            .collect();
+        let fleet = FleetPolicy {
+            replicas: 3,
+            router: RouterKind::Jsq,
+            slo: None,
+            service_model_s: 0.01,
+        };
+        let plan = plan_fleet(&trace, &policy(), &fleet);
+        for (i, d) in plan.dispositions.iter().enumerate() {
+            assert_eq!(
+                *d,
+                Disposition::Served { replica: i % 3, deferred_s: 0.0 }
+            );
+        }
+    }
+
+    #[test]
+    fn shedding_is_monotone_in_offered_load() {
+        let fleet = FleetPolicy {
+            replicas: 2,
+            router: RouterKind::Jsq,
+            slo: Some(SloPolicy { p99_target_s: 0.25, max_defer_s: 0.1 }),
+            service_model_s: 0.03,
+        };
+        let mut last_shed = 0usize;
+        for rate in [20.0, 80.0, 320.0, 1280.0] {
+            let trace = trace(rate, 3000, 17);
+            let plan = plan_fleet(&trace, &policy(), &fleet);
+            assert_eq!(plan.served + plan.shed, trace.len());
+            assert!(
+                plan.shed >= last_shed,
+                "shed count fell from {last_shed} to {} at rate {rate}",
+                plan.shed
+            );
+            last_shed = plan.shed;
+        }
+        assert!(last_shed > 0, "the overload point must shed");
+    }
+
+    #[test]
+    fn infeasible_slo_sheds_everything_feasible_slo_nothing() {
+        let trace = trace(50.0, 500, 23);
+        let tight = FleetPolicy {
+            replicas: 2,
+            router: RouterKind::Jsq,
+            // Target below max_wait + service: infeasible on idle.
+            slo: Some(SloPolicy { p99_target_s: 0.01, max_defer_s: 1.0 }),
+            service_model_s: 0.05,
+        };
+        assert_eq!(plan_fleet(&trace, &policy(), &tight).shed, trace.len());
+        let loose = FleetPolicy {
+            slo: Some(SloPolicy { p99_target_s: 60.0, max_defer_s: 1.0 }),
+            ..tight
+        };
+        assert_eq!(plan_fleet(&trace, &policy(), &loose).shed, 0);
+    }
+
+    #[test]
+    fn deferral_meets_the_slo_and_is_counted() {
+        // One replica, service model slow enough that backlog builds:
+        // mid-trace requests defer before any shed.
+        let trace: Vec<Request> = (0..40)
+            .map(|i| Request { node: 0, arrival_s: i as f64 * 0.001 })
+            .collect();
+        let fleet = FleetPolicy {
+            replicas: 1,
+            router: RouterKind::Jsq,
+            slo: Some(SloPolicy { p99_target_s: 0.1, max_defer_s: 0.05 }),
+            service_model_s: 0.04,
+        };
+        let plan = plan_fleet(&trace, &policy(), &fleet);
+        assert!(plan.deferred > 0, "backlog must force deferrals");
+        assert!(plan.shed > 0, "past the defer window, requests shed");
+        for (i, d) in plan.dispositions.iter().enumerate() {
+            if let Disposition::Served { deferred_s, .. } = *d {
+                assert!(
+                    deferred_s <= fleet.slo.unwrap().max_defer_s + 1e-9,
+                    "request {i} deferred {deferred_s}s past the window"
+                );
+            }
+        }
+    }
+}

@@ -18,7 +18,7 @@
 
 use std::fmt::Write as _;
 
-use crate::metrics::{fmt_seconds, p50_p95_p99};
+use crate::metrics::{fmt_seconds, summary};
 
 /// One request's span decomposition.
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
@@ -46,21 +46,23 @@ pub struct LatencySummary {
 }
 
 impl LatencySummary {
+    /// `metrics::summary` in serving units; a summary-of-nothing stays
+    /// the all-zero default rather than propagating the `None` (report
+    /// structs print unconditionally).
     pub fn from_samples(xs: &[f64]) -> LatencySummary {
-        if xs.is_empty() {
-            return LatencySummary::default();
-        }
-        let (p50_s, p95_s, p99_s) = p50_p95_p99(xs);
-        LatencySummary {
-            mean_s: xs.iter().sum::<f64>() / xs.len() as f64,
-            p50_s,
-            p95_s,
-            p99_s,
-            max_s: xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max),
+        match summary(xs) {
+            None => LatencySummary::default(),
+            Some(s) => LatencySummary {
+                mean_s: s.mean,
+                p50_s: s.p50,
+                p95_s: s.p95,
+                p99_s: s.p99,
+                max_s: s.max,
+            },
         }
     }
 
-    fn row(&self, label: &str) -> String {
+    pub(crate) fn row(&self, label: &str) -> String {
         format!(
             "  {label:<9} mean {:>9}  p50 {:>9}  p95 {:>9}  p99 {:>9}  max {:>9}",
             fmt_seconds(self.mean_s),

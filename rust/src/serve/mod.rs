@@ -33,13 +33,34 @@
 //! artifacts compute the fused evaluation's math — and replaying one
 //! trace twice yields bit-identical logits and the same completion
 //! ordering.
+//!
+//! The **fleet** layer scales this out: [`fleet`] runs R concurrent
+//! forward-only pipelines (thread per replica) behind a deterministic
+//! join-shortest-queue router, and [`admission`] gates each request
+//! against a p99 SLO — shed or defer before queueing collapse, with
+//! served/deferred/shed counted. Routing and admission happen on the
+//! trace's virtual timeline, so batch composition per replica stays a
+//! pure function of the trace seed, and an R=1 fleet run is bitwise
+//! identical to the single-pipeline session. The richer [`trace`]
+//! generators (MMPP bursts, diurnal ramp, flash crowd behind
+//! [`TrafficShape`]) provide the overload shapes the gate exists for,
+//! and `Scenarios::fleet_latency` prices the fleet (per-replica M/D/1
+//! plus a routing-imbalance term) for `bench serve-fleet`'s
+//! measured-vs-model columns.
 
+pub mod admission;
 pub mod batch;
+pub mod fleet;
 pub mod latency;
 pub mod server;
 pub mod trace;
 
+pub use admission::{AdmissionDecision, AdmissionGate, SloPolicy};
 pub use batch::{plan_batches, BatchPolicy, ServeBatch};
+pub use fleet::{
+    plan_fleet, Disposition, FleetOutput, FleetPlan, FleetPolicy,
+    FleetReport, FleetSession, RouterKind,
+};
 pub use latency::{LatencySummary, RequestLatency, ServeReport};
 pub use server::{ServeOutput, ServeSession};
-pub use trace::{poisson_trace, Request, TraceSpec};
+pub use trace::{generate_trace, poisson_trace, Request, TraceSpec, TrafficShape};

@@ -74,6 +74,9 @@ pub struct ServeOutput {
     pub report: ServeReport,
     /// Served log-prob row per request, indexed like the trace.
     pub request_logits: Vec<Vec<f32>>,
+    /// Per-request span decomposition, indexed like the trace (the
+    /// fleet session re-aggregates these across replicas).
+    pub latencies: Vec<RequestLatency>,
     /// Request indices in completion order (batch dispatch order, then
     /// member order) — the latency event ordering. Structurally this is
     /// the flattened batch plan (the session's FIFO ensure pins it);
@@ -301,6 +304,6 @@ impl<'e> ServeSession<'e> {
                 })
                 .collect(),
         };
-        Ok(ServeOutput { report, request_logits, completion_order })
+        Ok(ServeOutput { report, request_logits, latencies, completion_order })
     }
 }

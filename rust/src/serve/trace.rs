@@ -2,14 +2,40 @@
 //!
 //! An inference workload is replayed from a *trace*: a list of
 //! node-classification requests with virtual arrival timestamps. Traces
-//! are synthesized by [`poisson_trace`] — exponential inter-arrival
-//! times (a Poisson process, the standard open-loop load model) and
-//! uniformly sampled query nodes, both drawn from the crate's seeded
-//! splitmix64 [`Rng`] — so a `(seed, rate, requests)` triple names one
-//! exact request sequence forever. Every latency number the serving
-//! subsystem reports is therefore replayable: run the same trace twice
-//! and the batch compositions, served logits and completion ordering
-//! are identical (`rust/tests/integration_serve.rs` pins this).
+//! are synthesized by [`generate_trace`] under one of four
+//! [`TrafficShape`]s, all drawn from the crate's seeded splitmix64
+//! [`Rng`] — so a `(seed, shape, rate, requests)` tuple names one exact
+//! request sequence forever. Every latency number the serving subsystem
+//! reports is therefore replayable: run the same trace twice and the
+//! batch compositions, routing decisions, served logits and completion
+//! ordering are identical (`rust/tests/integration_serve.rs` pins this).
+//!
+//! ## Shapes and their closed-form expectations
+//!
+//! * [`TrafficShape::Poisson`] — exponential inter-arrivals at the
+//!   nominal rate ([`poisson_trace`], the PR-5 generator, bit-for-bit).
+//!   Long-run mean rate = `rate_hz`; inter-arrival `CV² = 1`.
+//! * [`TrafficShape::Mmpp`] — a two-state Markov-modulated Poisson
+//!   process: exponential sojourns alternate between a *quiet* state at
+//!   `r_q` and a *burst* state at [`MMPP_BURST_MULT`]`·r_q`, with mean
+//!   sojourns of [`MMPP_QUIET_SOJOURN`] and [`MMPP_BURST_SOJOURN`]
+//!   nominal inter-arrival times. `r_q` is chosen so the time-averaged
+//!   rate is exactly `rate_hz`; the burstiness shows up as inter-arrival
+//!   `CV² ≈ 2` (a mixture of two exponentials), which is what stresses
+//!   a dynamic batcher and an admission gate.
+//! * [`TrafficShape::Diurnal`] — a non-homogeneous Poisson process with
+//!   `λ(t) = rate·(1 + DEPTH·sin(2πt/period))`, sampled by
+//!   Lewis–Shedler thinning at `λ_max = rate·(1+DEPTH)`. The period is
+//!   [`DIURNAL_PERIOD_ARRIVALS`] nominal inter-arrival times, so any
+//!   trace long enough to matter spans many cycles and the long-run
+//!   mean rate is `rate_hz` (the sine integrates to zero per cycle).
+//! * [`TrafficShape::Flash`] — baseline `rate_hz` with one flash-crowd
+//!   window at [`FLASH_MULT`]`×` the rate, positioned at
+//!   [`FLASH_START_FRAC`]..[`FLASH_START_FRAC`]`+`[`FLASH_DUR_FRAC`] of
+//!   the nominal span `requests/rate_hz`. Because a trace is truncated
+//!   at `requests` arrivals, the realised mean rate is
+//!   `rate_hz / (1 - (FLASH_MULT-1)·FLASH_DUR_FRAC)` — the closed form
+//!   [`TrafficShape::mean_rate_factor`] exposes for the cost models.
 //!
 //! Open-loop means arrivals never wait on the server: the timestamp
 //! stream is fixed up front, which is what makes tail-latency numbers
@@ -19,6 +45,85 @@
 //! [`Rng`]: crate::util::rng::Rng
 
 use crate::util::rng::Rng;
+
+/// Burst-state rate multiplier of the MMPP generator (vs the quiet
+/// state's rate).
+pub const MMPP_BURST_MULT: f64 = 5.0;
+/// Mean quiet-state sojourn, in nominal inter-arrival times (`1/rate`).
+pub const MMPP_QUIET_SOJOURN: f64 = 48.0;
+/// Mean burst-state sojourn, in nominal inter-arrival times.
+pub const MMPP_BURST_SOJOURN: f64 = 12.0;
+/// Diurnal modulation depth: `λ(t)` swings `±DEPTH·rate`.
+pub const DIURNAL_DEPTH: f64 = 0.75;
+/// Diurnal period, in nominal inter-arrival times.
+pub const DIURNAL_PERIOD_ARRIVALS: f64 = 256.0;
+/// Flash-crowd rate multiplier inside the window.
+pub const FLASH_MULT: f64 = 4.0;
+/// Flash window start, as a fraction of the nominal span `requests/rate`.
+pub const FLASH_START_FRAC: f64 = 0.25;
+/// Flash window duration, as a fraction of the nominal span.
+pub const FLASH_DUR_FRAC: f64 = 0.05;
+
+/// The traffic generator family. One seeded spec plus a shape names an
+/// exact arrival sequence; see the module docs for each shape's
+/// closed-form rate expectation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TrafficShape {
+    /// Memoryless baseline (the PR-5 generator, bit-compatible).
+    Poisson,
+    /// Two-state Markov-modulated Poisson: bursty, `CV² ≈ 2`.
+    Mmpp,
+    /// Sinusoidal rate ramp (a compressed diurnal cycle).
+    Diurnal,
+    /// One flash-crowd window at `FLASH_MULT×` the baseline rate.
+    Flash,
+}
+
+impl TrafficShape {
+    pub fn parse(s: &str) -> anyhow::Result<TrafficShape> {
+        match s {
+            "poisson" => Ok(TrafficShape::Poisson),
+            "mmpp" => Ok(TrafficShape::Mmpp),
+            "diurnal" => Ok(TrafficShape::Diurnal),
+            "flash" | "flash-crowd" => Ok(TrafficShape::Flash),
+            other => anyhow::bail!(
+                "unknown traffic shape {other:?} (expected poisson, mmpp, \
+                 diurnal or flash)"
+            ),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            TrafficShape::Poisson => "poisson",
+            TrafficShape::Mmpp => "mmpp",
+            TrafficShape::Diurnal => "diurnal",
+            TrafficShape::Flash => "flash",
+        }
+    }
+
+    /// Expected realised mean rate over a count-truncated trace,
+    /// as a multiple of the nominal `rate_hz` — what the cost models
+    /// should price as the effective offered load. 1.0 for every shape
+    /// whose time-average equals the nominal rate; `> 1` for the flash
+    /// crowd, whose fixed-position burst compresses the span of a
+    /// fixed-count trace.
+    pub fn mean_rate_factor(&self) -> f64 {
+        match self {
+            TrafficShape::Flash => 1.0 / (1.0 - (FLASH_MULT - 1.0) * FLASH_DUR_FRAC),
+            _ => 1.0,
+        }
+    }
+
+    pub fn all() -> [TrafficShape; 4] {
+        [
+            TrafficShape::Poisson,
+            TrafficShape::Mmpp,
+            TrafficShape::Diurnal,
+            TrafficShape::Flash,
+        ]
+    }
+}
 
 /// Trace shape: offered load, length and the seed that fixes both.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -61,6 +166,125 @@ pub fn poisson_trace(spec: &TraceSpec, num_nodes: usize) -> Vec<Request> {
             Request { node: nodes.below(num_nodes) as u32, arrival_s: t }
         })
         .collect()
+}
+
+/// Generate a deterministic trace under `shape`. Poisson dispatches to
+/// [`poisson_trace`] unchanged (bit-compatible with the PR-5 traces);
+/// the other shapes use the same `fork(1)` arrivals / `fork(2)` nodes
+/// stream split plus a `fork(3)` modulation stream (state switches,
+/// thinning acceptances), so a `(seed, shape, rate, requests)` tuple is
+/// the trace's complete name. Panics on the same degenerate inputs as
+/// [`poisson_trace`].
+pub fn generate_trace(
+    spec: &TraceSpec,
+    shape: TrafficShape,
+    num_nodes: usize,
+) -> Vec<Request> {
+    match shape {
+        TrafficShape::Poisson => poisson_trace(spec, num_nodes),
+        TrafficShape::Mmpp => mmpp_trace(spec, num_nodes),
+        TrafficShape::Diurnal => {
+            let period = DIURNAL_PERIOD_ARRIVALS / spec.rate_hz.max(1e-12);
+            thinned_trace(spec, num_nodes, 1.0 + DIURNAL_DEPTH, |t| {
+                1.0 + DIURNAL_DEPTH
+                    * (2.0 * std::f64::consts::PI * t / period).sin()
+            })
+        }
+        TrafficShape::Flash => {
+            let span = spec.requests as f64 / spec.rate_hz.max(1e-12);
+            let (w0, w1) = (
+                FLASH_START_FRAC * span,
+                (FLASH_START_FRAC + FLASH_DUR_FRAC) * span,
+            );
+            thinned_trace(spec, num_nodes, FLASH_MULT, move |t| {
+                if (w0..w1).contains(&t) {
+                    FLASH_MULT
+                } else {
+                    1.0
+                }
+            })
+        }
+    }
+}
+
+/// Two-state MMPP: exponential sojourns alternate quiet/burst; within a
+/// state, arrivals are Poisson at the state's rate. The competing-clock
+/// race (next arrival vs state switch) is resolved by redrawing the
+/// arrival after a switch — valid by memorylessness, and deterministic
+/// because the redraw consumes the same seeded stream.
+fn mmpp_trace(spec: &TraceSpec, num_nodes: usize) -> Vec<Request> {
+    check_spec(spec, num_nodes);
+    let rate = spec.rate_hz;
+    let sq = MMPP_QUIET_SOJOURN / rate;
+    let sb = MMPP_BURST_SOJOURN / rate;
+    // Quiet rate chosen so the long-run time average is exactly `rate`.
+    let r_quiet = rate * (sq + sb) / (sq + MMPP_BURST_MULT * sb);
+    let r_burst = MMPP_BURST_MULT * r_quiet;
+    let mut root = Rng::new(spec.seed);
+    let mut arrivals = root.fork(1);
+    let mut nodes = root.fork(2);
+    let mut modulation = root.fork(3);
+    let mut t = 0.0f64;
+    let mut burst = false;
+    let mut state_end = sq * exp_draw(&mut modulation);
+    let mut out = Vec::with_capacity(spec.requests);
+    while out.len() < spec.requests {
+        let r = if burst { r_burst } else { r_quiet };
+        let candidate = t + exp_draw(&mut arrivals) / r;
+        if candidate < state_end {
+            t = candidate;
+            out.push(Request {
+                node: nodes.below(num_nodes) as u32,
+                arrival_s: t,
+            });
+        } else {
+            t = state_end;
+            burst = !burst;
+            let sojourn = if burst { sb } else { sq };
+            state_end = t + sojourn * exp_draw(&mut modulation);
+        }
+    }
+    out
+}
+
+/// Non-homogeneous Poisson via Lewis–Shedler thinning: candidates at
+/// `rate·max_factor`, accepted with probability `factor(t)/max_factor`.
+fn thinned_trace(
+    spec: &TraceSpec,
+    num_nodes: usize,
+    max_factor: f64,
+    factor: impl Fn(f64) -> f64,
+) -> Vec<Request> {
+    check_spec(spec, num_nodes);
+    let lambda_max = spec.rate_hz * max_factor;
+    let mut root = Rng::new(spec.seed);
+    let mut arrivals = root.fork(1);
+    let mut nodes = root.fork(2);
+    let mut thinning = root.fork(3);
+    let mut t = 0.0f64;
+    let mut out = Vec::with_capacity(spec.requests);
+    while out.len() < spec.requests {
+        t += exp_draw(&mut arrivals) / lambda_max;
+        if thinning.next_f64() * max_factor < factor(t) {
+            out.push(Request {
+                node: nodes.below(num_nodes) as u32,
+                arrival_s: t,
+            });
+        }
+    }
+    out
+}
+
+/// Unit-mean exponential draw (inverse CDF; `u in [0,1)` keeps the log
+/// argument in `(0,1]`).
+fn exp_draw(rng: &mut Rng) -> f64 {
+    -(1.0 - rng.next_f64()).ln()
+}
+
+fn check_spec(spec: &TraceSpec, num_nodes: usize) {
+    assert!(spec.rate_hz > 0.0, "trace rate must be positive");
+    assert!(num_nodes > 0, "trace needs a non-empty node set");
+    assert!(spec.requests > 0, "trace needs at least one request");
 }
 
 #[cfg(test)]
@@ -108,5 +332,108 @@ mod tests {
             seen[r.node as usize] = true;
         }
         assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn generate_trace_poisson_is_bit_compatible() {
+        let spec = TraceSpec { rate_hz: 64.0, requests: 300, seed: 5 };
+        assert_eq!(
+            generate_trace(&spec, TrafficShape::Poisson, 99),
+            poisson_trace(&spec, 99)
+        );
+    }
+
+    #[test]
+    fn every_shape_is_deterministic_monotone_and_in_range() {
+        let spec = TraceSpec { rate_hz: 100.0, requests: 1500, seed: 21 };
+        for shape in TrafficShape::all() {
+            let a = generate_trace(&spec, shape, 53);
+            let b = generate_trace(&spec, shape, 53);
+            assert_eq!(a, b, "{shape:?} must replay identically");
+            assert_eq!(a.len(), spec.requests);
+            let mut prev = 0.0;
+            for r in &a {
+                assert!(r.arrival_s >= prev, "{shape:?} arrivals not monotone");
+                assert!((r.node as usize) < 53);
+                prev = r.arrival_s;
+            }
+            let other = generate_trace(&TraceSpec { seed: 22, ..spec }, shape, 53);
+            assert_ne!(a, other, "{shape:?} must depend on the seed");
+        }
+    }
+
+    #[test]
+    fn every_shape_hits_its_closed_form_mean_rate() {
+        let spec = TraceSpec { rate_hz: 200.0, requests: 20_000, seed: 3 };
+        for shape in TrafficShape::all() {
+            let trace = generate_trace(&spec, shape, 10);
+            let span = trace.last().unwrap().arrival_s;
+            let measured = spec.requests as f64 / span;
+            let expected = spec.rate_hz * shape.mean_rate_factor();
+            let err = (measured - expected).abs() / expected;
+            assert!(
+                err < 0.10,
+                "{shape:?}: measured {measured:.1} req/s vs closed form \
+                 {expected:.1}"
+            );
+        }
+    }
+
+    #[test]
+    fn mmpp_is_burstier_than_poisson() {
+        // Squared coefficient of variation of inter-arrivals: 1 for a
+        // Poisson process, ~2 for this MMPP's two-exponential mixture.
+        let cv2 = |trace: &[Request]| {
+            let gaps: Vec<f64> = trace
+                .windows(2)
+                .map(|w| w[1].arrival_s - w[0].arrival_s)
+                .collect();
+            let mean = gaps.iter().sum::<f64>() / gaps.len() as f64;
+            let var = gaps.iter().map(|g| (g - mean).powi(2)).sum::<f64>()
+                / gaps.len() as f64;
+            var / (mean * mean)
+        };
+        let spec = TraceSpec { rate_hz: 100.0, requests: 20_000, seed: 9 };
+        let poisson = cv2(&generate_trace(&spec, TrafficShape::Poisson, 10));
+        let mmpp = cv2(&generate_trace(&spec, TrafficShape::Mmpp, 10));
+        assert!(poisson < 1.3, "poisson CV^2 should be ~1, got {poisson}");
+        assert!(mmpp > 1.5, "mmpp CV^2 should be ~2, got {mmpp}");
+    }
+
+    #[test]
+    fn flash_window_is_denser_than_the_baseline() {
+        let spec = TraceSpec { rate_hz: 100.0, requests: 10_000, seed: 13 };
+        let trace = generate_trace(&spec, TrafficShape::Flash, 10);
+        let span = spec.requests as f64 / spec.rate_hz;
+        let (w0, w1) = (
+            FLASH_START_FRAC * span,
+            (FLASH_START_FRAC + FLASH_DUR_FRAC) * span,
+        );
+        let inside = trace
+            .iter()
+            .filter(|r| (w0..w1).contains(&r.arrival_s))
+            .count() as f64;
+        let before =
+            trace.iter().filter(|r| r.arrival_s < w0).count() as f64;
+        let inside_rate = inside / (w1 - w0);
+        let before_rate = before / w0;
+        assert!(
+            inside_rate > 2.0 * before_rate,
+            "flash window rate {inside_rate:.1} vs baseline {before_rate:.1}"
+        );
+    }
+
+    #[test]
+    fn shape_parse_round_trips() {
+        for shape in TrafficShape::all() {
+            assert_eq!(TrafficShape::parse(shape.name()).unwrap(), shape);
+        }
+        assert_eq!(
+            TrafficShape::parse("flash-crowd").unwrap(),
+            TrafficShape::Flash
+        );
+        assert!(TrafficShape::parse("bursty").is_err());
+        assert!(TrafficShape::Flash.mean_rate_factor() > 1.0);
+        assert_eq!(TrafficShape::Mmpp.mean_rate_factor(), 1.0);
     }
 }

@@ -108,6 +108,33 @@ pub struct ServeLatencyModel {
     pub utilization: f64,
 }
 
+/// Closed-form fleet projection — per-replica M/D/1 plus a routing
+/// imbalance term, what [`Scenarios::fleet_latency`] returns and
+/// `bench serve-fleet` prints next to the measured columns.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FleetLatencyModel {
+    pub replicas: usize,
+    /// The single-replica model at the per-replica rate `λ/R` (ideal
+    /// routing splits the stream evenly).
+    pub per_replica: ServeLatencyModel,
+    /// Extra mean wait from imperfect routing: a virtual-timestamp JSQ
+    /// router spreads by *estimated* queue depth, so real queues
+    /// diverge a little. Priced as `pipe_wait · ρ · (R-1)/R` — zero at
+    /// R=1 (nothing to misroute), growing with both utilization (less
+    /// slack to absorb mistakes) and fleet width.
+    pub imbalance_s: f64,
+    /// Mean per-request latency: `per_replica.total_s + imbalance_s`.
+    pub total_s: f64,
+    /// Modeled p99: the batching span's worst case plus an
+    /// exponential-tail estimate of the queueing wait
+    /// (`fill + (pipe_wait + imbalance)·ln 100 + residence`).
+    pub p99_s: f64,
+    /// `R ×` the per-replica capacity.
+    pub capacity_rps: f64,
+    /// Offered rate when stable, capacity when saturated.
+    pub throughput_rps: f64,
+}
+
 pub struct Scenarios<'m> {
     pub manifest: &'m Manifest,
     pub cal: Calibration,
@@ -433,6 +460,58 @@ impl<'m> Scenarios<'m> {
             throughput_rps,
             capacity_rps,
             utilization,
+        }
+    }
+
+    /// Closed-form fleet model: R replicas behind an even router.
+    ///
+    /// Ideal routing turns the fleet into R independent single-replica
+    /// queues each offered `rate / R` — that is [`Self::serve_latency`]
+    /// at the split rate. Two fleet-specific corrections:
+    ///
+    /// * **Imbalance** — the deterministic router balances *estimated*
+    ///   completion times, not real ones, so instantaneous queue depths
+    ///   diverge. Modeled as `pipe_wait · ρ · (R-1)/R`: proportional to
+    ///   the queueing wait itself (the quantity misrouting inflates),
+    ///   vanishing at R=1 and at low utilization, saturating toward one
+    ///   extra `pipe_wait` as R grows under load.
+    /// * **Tail** — M/G/1-style waits are approximately exponential, so
+    ///   the p99 of the wait is `mean · ln 100`; the batching span is
+    ///   bounded (worst case `fill`), and residence is deterministic.
+    ///   Hence `p99 = fill + (pipe_wait + imbalance)·ln 100 +
+    ///   residence` — the number the SLO gate's admitted-traffic p99 is
+    ///   benched against.
+    ///
+    /// Like [`Self::serve_latency`], a pure associated function: feed it
+    /// measured per-stage forward means to price the hardware you ran
+    /// on, at the **admitted** (post-shed) rate when the gate is on.
+    pub fn fleet_latency(
+        stage_s: &[f64],
+        rate_hz: f64,
+        replicas: usize,
+        max_batch: usize,
+        max_wait_s: f64,
+    ) -> FleetLatencyModel {
+        let r = replicas.max(1);
+        let per =
+            Self::serve_latency(stage_s, rate_hz / r as f64, max_batch, max_wait_s);
+        let imbalance_s = if r == 1 || !per.pipe_wait_s.is_finite() {
+            0.0
+        } else {
+            per.pipe_wait_s * per.utilization * (r as f64 - 1.0) / r as f64
+        };
+        let capacity_rps = r as f64 * per.capacity_rps;
+        let stable = per.utilization < 1.0;
+        FleetLatencyModel {
+            replicas: r,
+            per_replica: per,
+            imbalance_s,
+            total_s: per.total_s + imbalance_s,
+            p99_s: per.fill_s
+                + (per.pipe_wait_s + imbalance_s) * 100f64.ln()
+                + per.residence_s,
+            capacity_rps,
+            throughput_rps: if stable { rate_hz } else { capacity_rps },
         }
     }
 
@@ -792,6 +871,75 @@ mod tests {
             );
             last = m.pipe_wait_s;
         }
+    }
+
+    #[test]
+    fn fleet_latency_at_one_replica_is_the_serve_model() {
+        let stages = [0.01, 0.03, 0.02];
+        let single = Scenarios::serve_latency(&stages, 40.0, 8, 0.1);
+        let fleet = Scenarios::fleet_latency(&stages, 40.0, 1, 8, 0.1);
+        assert_eq!(fleet.per_replica, single);
+        assert_eq!(fleet.imbalance_s, 0.0, "nothing to misroute at R=1");
+        assert_eq!(fleet.total_s, single.total_s);
+        assert_eq!(fleet.capacity_rps, single.capacity_rps);
+    }
+
+    #[test]
+    fn fleet_latency_scales_capacity_and_splits_load() {
+        let stages = [0.02, 0.05];
+        let single = Scenarios::serve_latency(&stages, 10.0, 4, 10.0);
+        let fleet = Scenarios::fleet_latency(&stages, 40.0, 4, 4, 10.0);
+        // Each replica sees 40/4 = 10 req/s: the same operating point.
+        assert_eq!(fleet.per_replica, single);
+        assert!((fleet.capacity_rps - 4.0 * single.capacity_rps).abs() < 1e-9);
+        // Imbalance is a strictly positive add-on at R>1 under load,
+        // bounded by one extra pipe wait.
+        assert!(fleet.imbalance_s > 0.0);
+        assert!(fleet.imbalance_s < fleet.per_replica.pipe_wait_s);
+        assert!(fleet.total_s > single.total_s);
+    }
+
+    #[test]
+    fn fleet_latency_p99_decomposes_and_dominates_the_mean() {
+        let stages = [0.02, 0.05];
+        let m = Scenarios::fleet_latency(&stages, 40.0, 2, 4, 10.0);
+        let per = m.per_replica;
+        let expect = per.fill_s
+            + (per.pipe_wait_s + m.imbalance_s) * 100f64.ln()
+            + per.residence_s;
+        assert!((m.p99_s - expect).abs() < 1e-12);
+        assert!(m.p99_s > m.total_s, "p99 must sit above the mean");
+    }
+
+    #[test]
+    fn fleet_latency_more_replicas_never_hurt_at_fixed_rate() {
+        // max_wait caps the fill window: with an unbounded window the
+        // per-replica fill `(cap-1)/(rate/R)` grows linearly in R and
+        // the added batching delay can outweigh the queueing relief.
+        let stages = [0.02, 0.05];
+        let mut last_total = f64::INFINITY;
+        let mut last_cap = 0.0;
+        for r in [1usize, 2, 4, 8] {
+            let m = Scenarios::fleet_latency(&stages, 50.0, r, 4, 0.05);
+            assert!(
+                m.total_s <= last_total + 1e-12,
+                "R={r} total {} regressed from {last_total}",
+                m.total_s
+            );
+            assert!(m.capacity_rps > last_cap, "capacity must grow with R");
+            last_total = m.total_s;
+            last_cap = m.capacity_rps;
+        }
+    }
+
+    #[test]
+    fn fleet_latency_saturates_like_the_single_model() {
+        let stages = [0.05];
+        let m = Scenarios::fleet_latency(&stages, 1000.0, 2, 4, 10.0);
+        assert!(m.per_replica.utilization >= 1.0);
+        assert_eq!(m.imbalance_s, 0.0, "imbalance is moot past collapse");
+        assert!(m.p99_s.is_infinite());
+        assert!((m.throughput_rps - m.capacity_rps).abs() < 1e-9);
     }
 
     #[test]

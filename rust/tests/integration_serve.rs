@@ -14,13 +14,21 @@
 //! * **full_eval parity** — served logit rows are bit-identical to the
 //!   fused `eval_fwd` evaluation of the same nodes (the serve path is
 //!   a lossless chunks=1 staged forward of the same math).
+//!
+//! The fleet tests extend both contracts across replicas: an R=1 fleet
+//! is bitwise the single pipeline; at R∈{2,4} the routing/admission
+//! plan, replica orderings, and served logits are bit-identical across
+//! replays, served rows still match `full_eval` per request, and
+//! shedding is monotone in offered load.
 
 use gnn_pipe::config::Config;
 use gnn_pipe::data::generate;
 use gnn_pipe::metrics::percentiles;
 use gnn_pipe::runtime::Engine;
 use gnn_pipe::serve::{
-    plan_batches, poisson_trace, BatchPolicy, ServeSession, TraceSpec,
+    generate_trace, plan_batches, plan_fleet, poisson_trace, BatchPolicy,
+    Disposition, FleetPolicy, FleetSession, RouterKind, ServeSession,
+    SloPolicy, TraceSpec, TrafficShape,
 };
 use gnn_pipe::simulator::Scenarios;
 use gnn_pipe::train::{flatten_params, init_params, Evaluator};
@@ -87,6 +95,69 @@ fn latency_model_total_decomposes() {
             < 1e-12
     );
     assert!(m.batch_size >= 1.0 && m.batch_size <= 8.0);
+}
+
+#[test]
+fn every_traffic_shape_replays_identically() {
+    let spec = TraceSpec { rate_hz: 120.0, requests: 600, seed: 31 };
+    for shape in TrafficShape::all() {
+        let a = generate_trace(&spec, shape, 500);
+        let b = generate_trace(&spec, shape, 500);
+        assert_eq!(a, b, "{shape:?} trace must be a pure function of the spec");
+        // And the downstream fleet plan with it.
+        let policy = BatchPolicy { max_batch: 8, max_wait_s: 0.02 };
+        let fleet = FleetPolicy {
+            replicas: 4,
+            router: RouterKind::Jsq,
+            slo: Some(SloPolicy { p99_target_s: 0.1, max_defer_s: 0.05 }),
+            service_model_s: 0.02,
+        };
+        assert_eq!(
+            plan_fleet(&a, &policy, &fleet),
+            plan_fleet(&b, &policy, &fleet)
+        );
+    }
+}
+
+#[test]
+fn fleet_shedding_is_monotone_in_offered_load() {
+    let policy = BatchPolicy { max_batch: 8, max_wait_s: 0.02 };
+    let fleet = FleetPolicy {
+        replicas: 2,
+        router: RouterKind::Jsq,
+        slo: Some(SloPolicy { p99_target_s: 0.15, max_defer_s: 0.05 }),
+        service_model_s: 0.03,
+    };
+    let mut last_shed = 0usize;
+    for mult in [1.0, 2.0, 4.0, 8.0] {
+        let trace = generate_trace(
+            &TraceSpec { rate_hz: 100.0 * mult, requests: 4000, seed: 13 },
+            TrafficShape::Poisson,
+            500,
+        );
+        let plan = plan_fleet(&trace, &policy, &fleet);
+        assert_eq!(plan.served + plan.shed, trace.len());
+        assert!(
+            plan.shed >= last_shed,
+            "shedding must be monotone in offered load \
+             ({last_shed} -> {} at x{mult})",
+            plan.shed
+        );
+        last_shed = plan.shed;
+    }
+    assert!(last_shed > 0, "8x overload must shed");
+}
+
+#[test]
+fn fleet_latency_model_reduces_and_decomposes() {
+    let stages = [0.004, 0.016, 0.008, 0.001];
+    let single = Scenarios::serve_latency(&stages, 100.0, 8, 0.05);
+    let r1 = Scenarios::fleet_latency(&stages, 100.0, 1, 8, 0.05);
+    assert_eq!(r1.per_replica, single, "R=1 fleet model IS the serve model");
+    assert_eq!(r1.imbalance_s, 0.0);
+    let r4 = Scenarios::fleet_latency(&stages, 100.0, 4, 8, 0.05);
+    assert!((r4.total_s - (r4.per_replica.total_s + r4.imbalance_s)).abs() < 1e-12);
+    assert!(r4.capacity_rps > r1.capacity_rps);
 }
 
 // ---------------------------------------------------------------------
@@ -190,6 +261,119 @@ fn serve_logits_match_full_eval_bitwise() {
                 "{backend}: request {i} (node {}) logits diverge from full_eval",
                 r.node
             );
+        }
+    }
+}
+
+#[test]
+fn fleet_r1_is_bitwise_identical_to_the_single_pipeline() {
+    let Some((cfg, eng)) = engine() else { return };
+    let profile = cfg.dataset(&cfg.pipeline.pipeline_dataset).unwrap();
+    let ds = generate(profile).unwrap();
+    let params = flatten_params(
+        &init_params(profile, &cfg.model, 7),
+        &eng.manifest.param_order,
+    )
+    .unwrap();
+    let trace = poisson_trace(
+        &TraceSpec { rate_hz: 64.0, requests: 32, seed: 5 },
+        profile.nodes,
+    );
+    let policy = BatchPolicy { max_batch: 8, max_wait_s: 0.1 };
+    let single = ServeSession::new(&eng, &ds, "ell")
+        .run(&params, &trace, &policy)
+        .unwrap();
+    let fleet = FleetSession::new(&eng, &ds, "ell")
+        .run(&params, &trace, &policy, &FleetPolicy::single())
+        .unwrap();
+    assert_eq!(fleet.report.served, trace.len());
+    assert_eq!(fleet.report.shed, 0);
+    assert_eq!(fleet.report.deferred, 0);
+    assert_eq!(
+        fleet.request_logits, single.request_logits,
+        "an R=1 fleet must be the single pipeline, bit for bit"
+    );
+    assert_eq!(fleet.replica_orders[0], single.completion_order);
+    // Virtual queue spans agree exactly (same plan, zero deferral);
+    // measured spans are separate runs and may differ.
+    for (f, s) in fleet.latencies.iter().zip(&single.latencies) {
+        assert_eq!(f.queue_s, s.queue_s);
+    }
+}
+
+#[test]
+fn fleet_replays_bit_identically_and_matches_full_eval() {
+    let Some((cfg, eng)) = engine() else { return };
+    let profile = cfg.dataset(&cfg.pipeline.pipeline_dataset).unwrap();
+    let ds = generate(profile).unwrap();
+    let params_map = init_params(profile, &cfg.model, 3);
+    let params =
+        flatten_params(&params_map, &eng.manifest.param_order).unwrap();
+    let evaluator = Evaluator::new(&eng, &ds, "ell").unwrap();
+    let logp = evaluator.log_probs(&params_map).unwrap();
+    let c = profile.classes;
+    let session = FleetSession::new(&eng, &ds, "ell");
+    let policy = BatchPolicy { max_batch: 6, max_wait_s: 0.05 };
+
+    // R=2 ungated (every request served, full parity) and R=4 under a
+    // tight SLO on a hot trace (the shed path must not disturb the
+    // served rows).
+    let cases = [
+        (2usize, 64.0, None),
+        (
+            4usize,
+            400.0,
+            Some(SloPolicy { p99_target_s: 0.12, max_defer_s: 0.05 }),
+        ),
+    ];
+    for (replicas, rate_hz, slo) in cases {
+        let fleet = FleetPolicy {
+            replicas,
+            router: RouterKind::Jsq,
+            slo,
+            service_model_s: 0.025,
+        };
+        let trace = generate_trace(
+            &TraceSpec { rate_hz, requests: 36, seed: 11 },
+            TrafficShape::Poisson,
+            profile.nodes,
+        );
+        let a = session.run(&params, &trace, &policy, &fleet).unwrap();
+        let b = session.run(&params, &trace, &policy, &fleet).unwrap();
+        assert_eq!(a.plan, b.plan, "R={replicas}: plan must be deterministic");
+        assert_eq!(
+            a.request_logits, b.request_logits,
+            "R={replicas}: served logits must be bit-identical across replays"
+        );
+        assert_eq!(a.replica_orders, b.replica_orders);
+        assert_eq!(
+            a.report.served + a.report.shed,
+            trace.len(),
+            "every request is served or shed, never lost"
+        );
+        if slo.is_none() {
+            assert_eq!(a.report.shed, 0);
+        }
+        for (i, r) in trace.iter().enumerate() {
+            match a.plan.dispositions[i] {
+                Disposition::Served { .. } => {
+                    let want =
+                        &logp[r.node as usize * c..(r.node as usize + 1) * c];
+                    assert_eq!(
+                        a.request_logits[i].as_slice(),
+                        want,
+                        "R={replicas}: served request {i} (node {}) diverges \
+                         from full_eval",
+                        r.node
+                    );
+                }
+                Disposition::Shed => {
+                    assert!(
+                        a.request_logits[i].is_empty(),
+                        "R={replicas}: shed request {i} must have no logits"
+                    );
+                }
+            }
         }
     }
 }

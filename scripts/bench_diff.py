@@ -117,10 +117,11 @@ def compare(prev_dir: Path, new_dir: Path, threshold: float, strict: bool) -> in
     return 0
 
 
-def _snapshot(samples: dict, quick: bool = True) -> str:
+def _snapshot(samples: dict, quick: bool = True, **extras) -> str:
     return json.dumps({
         "bench": "x",
         "quick": quick,
+        **extras,
         "samples": [{"name": n, "iters": 1, "mean_s": m, "std_s": 0.0,
                      "min_s": m} for n, m in samples.items()],
     })
@@ -195,6 +196,27 @@ def selfcheck() -> int:
     case("unreadable snapshot warns instead of crashing", 0,
          snaps(**{"BENCH_x.json": "{not json"}),
          snaps(**{"BENCH_x.json": base}), expect_text="unreadable snapshot")
+    # The fleet snapshot's first appearance: no previous BENCH_fleet.json
+    # artifact exists, so it must be skipped, never flagged — even strict.
+    fleet = _snapshot({"plan_fleet (100k requests, R=4, SLO gate)": 0.01,
+                       "cli fleet shed rate (R=4,poisson,rate=64)": 0.12},
+                      shed_rate=0.12)
+    case("first-run BENCH_fleet.json is skipped", 0,
+         snaps(**{"BENCH_x.json": base}),
+         snaps(**{"BENCH_x.json": base, "BENCH_fleet.json": fleet}),
+         strict=True, expect_text="BENCH_fleet.json: new snapshot")
+    # New fleet metrics (e.g. a shed-rate column joining an existing
+    # snapshot) are informational on first appearance: a '(new sample)'
+    # line, no regression flag, exit 0 even strict with an absurd mean.
+    fleet_plus_shed = _snapshot(
+        {"plan_fleet (100k requests, R=4, SLO gate)": 0.01,
+         "cli fleet shed rate (R=4,poisson,rate=64)": 1e9},
+        shed_rate=0.99)
+    case("new shed-rate sample is informational, not a regression", 0,
+         snaps(**{"BENCH_fleet.json": _snapshot(
+             {"plan_fleet (100k requests, R=4, SLO gate)": 0.01})}),
+         snaps(**{"BENCH_fleet.json": fleet_plus_shed}),
+         strict=True, expect_text="(new sample)")
 
     if failures:
         print(f"self-check FAILED: {failures}")
