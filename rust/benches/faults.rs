@@ -1,0 +1,179 @@
+//! Fault-injection micro-benchmarks: the host-side cost of chaos
+//! planning and failover routing, plus (artifacts permitting) a real
+//! fleet replay surviving a crash.
+//!
+//! Three sections, degrading gracefully by environment:
+//!
+//! 1. **chaos planning**: `FaultPlan::generate` across every scenario
+//!    and the failover planner `plan_fleet_faults` rerouting a crashed
+//!    replica's orphans out of a 100k-request trace (host-side, always
+//!    runs);
+//! 2. **availability model**: `Scenarios::fleet_availability` across a
+//!    1k-point sweep (host-side, always runs);
+//! 3. **real failover replay**: an R=2 fleet surviving a seeded crash
+//!    over the compiled forward-only pipeline, reporting the completion
+//!    rate (skipped when `make artifacts` has not run).
+//!
+//! Mean ± stddev per iteration, dumped to `BENCH_faults.json` at the
+//! repo root (CI's `bench-trajectory` job runs `-- --quick` and tracks
+//! the snapshot per commit; the CLI `gnn-pipe bench serve-faults`
+//! writes the same file with `quick: false`).
+
+mod bench_util;
+
+use bench_util::{bench, quick_mode, scaled, write_snapshot};
+
+use gnn_pipe::config::Config;
+use gnn_pipe::data::generate;
+use gnn_pipe::faults::{FaultPlan, FaultScenario};
+use gnn_pipe::runtime::Engine;
+use gnn_pipe::serve::{
+    generate_trace, plan_fleet_faults, BatchPolicy, FleetPolicy, FleetSession,
+    RouterKind, SloPolicy, TraceSpec, TrafficShape,
+};
+use gnn_pipe::simulator::Scenarios;
+use gnn_pipe::train::{flatten_params, init_params};
+
+fn main() {
+    let quick = quick_mode();
+    let iters = |n: usize| scaled(quick, n);
+    let cfg = Config::load().expect("configs");
+    println!(
+        "== faults microbench (chaos planning + failover replay{}) ==",
+        if quick { ", quick" } else { "" }
+    );
+
+    let mut samples = Vec::new();
+
+    // 1a. Chaos-plan generation across every scenario, 1k seeds each.
+    samples.push(bench("fault_plan generate (6 scenarios x 1k seeds)", iters(50), || {
+        let mut events = 0usize;
+        for sc in FaultScenario::all() {
+            for seed in 0..1000u64 {
+                events += FaultPlan::generate(*sc, seed, 4, 4, 1024).events.len();
+            }
+        }
+        std::hint::black_box(events);
+    }));
+
+    // 1b. The failover planner on a 100k-request trace with a crashed
+    // replica and the brown-out gate live — its worst case (base walk,
+    // state replay, orphan re-walk, full recount).
+    let spec = TraceSpec { rate_hz: 1000.0, requests: 100_000, seed: 17 };
+    let trace = generate_trace(&spec, TrafficShape::Poisson, 19_717);
+    let policy = BatchPolicy { max_batch: 16, max_wait_s: 0.01 };
+    let fleet_policy = FleetPolicy {
+        replicas: 4,
+        router: RouterKind::Jsq,
+        slo: Some(SloPolicy { p99_target_s: 0.08, max_defer_s: 0.02 }),
+        service_model_s: 0.016,
+    };
+    let chaos = FaultPlan::generate(FaultScenario::Crash, 7, 4, 4, 100_000);
+    let mut failover = 0usize;
+    samples.push(bench(
+        "plan_fleet_faults (100k requests, R=4, crash)",
+        iters(50),
+        || {
+            let fp = plan_fleet_faults(&trace, &policy, &fleet_policy, Some(&chaos), 10.0);
+            failover = fp.failover;
+        },
+    ));
+    println!("  ({failover} requests failed over out of 100k)");
+
+    // 2. The availability model across a 1k-point sweep.
+    let stage_s = [0.004f64, 0.016, 0.008, 0.001];
+    let mut completion = 0.0f64;
+    samples.push(bench("fleet_availability model (1k points)", iters(200), || {
+        let mut acc = 0.0f64;
+        for i in 0..1000 {
+            let rate = 1.0 + i as f64;
+            let m = Scenarios::fleet_availability(
+                &stage_s, rate, 4, 8, 0.05, 1, 0.5,
+            );
+            acc += m.expected_completion;
+        }
+        completion = acc / 1000.0;
+        std::hint::black_box(acc);
+    }));
+
+    // 3. Real failover replay, when the serving artifacts exist.
+    let mut replay_completion = None;
+    let have_artifacts = cfg.artifacts_dir().join("manifest.json").exists();
+    if have_artifacts {
+        let engine =
+            Engine::from_artifacts_dir(&cfg.artifacts_dir()).expect("engine");
+        let ds_name = cfg.pipeline.pipeline_dataset.clone();
+        if FleetSession::artifacts_available(&engine, &ds_name, "ell") {
+            let profile = cfg.dataset(&ds_name).unwrap().clone();
+            let ds = generate(&profile).unwrap();
+            let params = flatten_params(
+                &init_params(&profile, &cfg.model, cfg.serve.seed),
+                &engine.manifest.param_order,
+            )
+            .unwrap();
+            let requests = if quick { 16 } else { 64 };
+            let trace = generate_trace(
+                &TraceSpec {
+                    rate_hz: cfg.serve.rate_hz,
+                    requests,
+                    seed: cfg.serve.seed,
+                },
+                TrafficShape::Poisson,
+                profile.nodes,
+            );
+            let policy = BatchPolicy {
+                max_batch: cfg.serve.max_batch,
+                max_wait_s: cfg.serve.max_wait_ms / 1e3,
+            };
+            let fleet = FleetPolicy {
+                replicas: 2,
+                router: RouterKind::Jsq,
+                slo: None,
+                service_model_s: cfg.serve.service_model_ms.max(0.0) / 1e3,
+            };
+            let crash = FaultPlan::generate(
+                FaultScenario::Crash,
+                cfg.serve.fault_seed,
+                2,
+                4,
+                requests,
+            );
+            let session = FleetSession::new(&engine, &ds, "ell");
+            let mut last_completion = 0.0;
+            let s = bench(
+                &format!("fleet crash replay ({requests} requests, R=2, ell)"),
+                iters(10),
+                || {
+                    let out = session
+                        .run_with_faults(&params, &trace, &policy, &fleet, Some(&crash))
+                        .unwrap();
+                    let r = &out.report;
+                    last_completion = r.served.saturating_sub(r.failed) as f64
+                        / r.offered as f64;
+                },
+            );
+            println!("crash-replay completion: {:.1}%", last_completion * 100.0);
+            replay_completion = Some(last_completion);
+            samples.push(s);
+        } else {
+            println!(
+                "skipping failover replay: {ds_name} serving artifacts not in \
+                 manifest (re-run `make artifacts`)"
+            );
+        }
+    } else {
+        println!("skipping failover replay: artifacts missing (run `make artifacts`)");
+    }
+
+    let extras = [
+        ("quick", quick.to_string()),
+        ("model_completion", format!("{completion:.4}")),
+        (
+            "replay_completion",
+            replay_completion
+                .map(|c| format!("{c:.4}"))
+                .unwrap_or_else(|| "null".to_string()),
+        ),
+    ];
+    write_snapshot(&cfg.root.join("BENCH_faults.json"), "faults", &extras, &samples);
+}

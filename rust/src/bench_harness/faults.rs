@@ -1,0 +1,216 @@
+//! E13 — fault injection / failover: measured completion, failover and
+//! degradation under seeded chaos plans vs the
+//! `Scenarios::fleet_availability` closed-form model, across
+//! (scenario, replicas) operating points.
+//!
+//! Each row replays one deterministic trace through the fleet under
+//! one [`FaultPlan`]: a crash reroutes the victim's unserved suffix to
+//! the survivors, a stall dooms its replica via the stage-link
+//! watchdog (shortened here so the bench doesn't sit out the default
+//! 10 s), slow/flaky rows exercise the execution-fault path (injected
+//! per-batch delay, bounded transient retries). The completion column
+//! (served / offered) is compared against the availability model
+//! priced from the row's own chaos plan (`capacity_summary`).
+//!
+//! Emits `serve_faults.csv` and a `BENCH_faults.json` snapshot (CLI
+//! writer: `quick: false`; CI's trajectory job uses
+//! `benches/faults.rs` instead — same dual-writer convention as
+//! `BENCH_fleet.json`).
+
+use std::fmt::Write as _;
+
+use anyhow::Result;
+
+use crate::faults::{FaultPlan, FaultScenario};
+use crate::metrics::{write_bench_snapshot, BenchSample, Table};
+use crate::pipeline::PipelineSpec;
+use crate::serve::{
+    generate_trace, BatchPolicy, FleetPolicy, FleetSession, RouterKind,
+    TraceSpec, TrafficShape,
+};
+use crate::simulator::Scenarios;
+use crate::train::{flatten_params, init_params};
+
+use super::{framework_label, BenchCtx};
+
+/// Watchdog for the stall rows: far below the generated 30-60 s stall
+/// durations (so the doom fires) but long enough to never trip on real
+/// stage work.
+const BENCH_STALL_WATCHDOG_S: f64 = 1.0;
+
+pub fn bench_serve_faults(ctx: &BenchCtx) -> Result<String> {
+    let sc = &ctx.cfg.serve;
+    let backend = sc.backend.clone();
+    let ds_name = ctx.cfg.pipeline.pipeline_dataset.clone();
+    if !FleetSession::artifacts_available(&ctx.engine, &ds_name, &backend) {
+        return Ok(format!(
+            "Fault injection — skipped: {ds_name}/{backend} serving artifacts \
+             not in the manifest (artifact dir predates the serving \
+             subsystem; re-run `make artifacts`)\n"
+        ));
+    }
+    let ds = ctx.dataset(&ds_name)?;
+    let profile = ctx.cfg.dataset(&ds_name)?;
+    let params_map = init_params(profile, &ctx.cfg.model, sc.seed);
+    let params = flatten_params(&params_map, &ctx.engine.manifest.param_order)?;
+    let mut session = FleetSession::new(&ctx.engine, ds, &backend);
+
+    let wait_s = sc.max_wait_ms / 1e3;
+    let policy = BatchPolicy { max_batch: sc.max_batch, max_wait_s: wait_s };
+    let stages = PipelineSpec::gat4_serve().num_stages();
+    let requests = sc.requests.max(8).min(32 * sc.max_batch);
+    let fault_seed = sc.fault_seed;
+
+    // The sweep: each scenario at a fleet wide enough to survive it,
+    // plus the healthy baseline the failover rows are judged against.
+    let points: Vec<(FaultScenario, usize)> = vec![
+        (FaultScenario::None, 3),
+        (FaultScenario::Crash, 3),
+        (FaultScenario::Stall, 2),
+        (FaultScenario::Slow, 2),
+        (FaultScenario::Flaky, 2),
+        (FaultScenario::Chaos, 3),
+    ];
+
+    let mut table = Table::new(&[
+        "Scenario",
+        "R",
+        "Served/Failover/Degraded",
+        "Retries",
+        "Failed",
+        "Completion",
+        "Expected (model)",
+        "Thpt req/s",
+    ]);
+    let mut csv = String::from(
+        "scenario,replicas,fault_seed,requests,served,shed,failover,degraded,\
+         retries,failed,completion,model_completion,throughput_rps,wall_s\n",
+    );
+    let mut snapshot: Vec<BenchSample> = Vec::new();
+
+    for &(scenario, replicas) in &points {
+        let fleet = FleetPolicy {
+            replicas,
+            router: RouterKind::Jsq,
+            slo: None,
+            service_model_s: sc.service_model_ms.max(0.0) / 1e3,
+        };
+        // Stall rows shorten the watchdog so the doom resolves fast;
+        // everything else keeps the serving default.
+        let watchdog_s = if scenario == FaultScenario::Stall {
+            BENCH_STALL_WATCHDOG_S
+        } else {
+            crate::serve::DEFAULT_WATCHDOG_S
+        };
+        session.set_watchdog_s(watchdog_s);
+        let plan =
+            FaultPlan::generate(scenario, fault_seed, replicas, stages, requests);
+        let faults = (scenario != FaultScenario::None).then_some(&plan);
+        let trace = generate_trace(
+            &TraceSpec { rate_hz: sc.rate_hz, requests, seed: sc.seed },
+            TrafficShape::Poisson,
+            profile.nodes,
+        );
+        eprintln!(
+            "[bench] serve-faults {ds_name}/{backend} scenario={} R={replicas} \
+             fault_seed={fault_seed} requests={requests}...",
+            scenario.name()
+        );
+        let out = session.run_with_faults(&params, &trace, &policy, &fleet, faults)?;
+        let r = &out.report;
+        let completion = r.served.saturating_sub(r.failed) as f64 / r.offered as f64;
+        let (crashed, crash_frac) =
+            plan.capacity_summary(replicas, requests, watchdog_s);
+        let avail = Scenarios::fleet_availability(
+            &r.stage_fwd_means_s,
+            r.admitted_rps,
+            replicas,
+            sc.max_batch,
+            wait_s,
+            crashed,
+            crash_frac,
+        );
+
+        table.row(&[
+            scenario.name().to_string(),
+            format!("{replicas}"),
+            format!("{}/{}/{}", r.served, r.failover, r.degraded),
+            format!("{}", r.retries),
+            format!("{}", r.failed),
+            format!("{:.1}%", completion * 100.0),
+            format!("{:.1}%", avail.expected_completion * 100.0),
+            format!("{:.1}", r.throughput_rps),
+        ]);
+        let _ = writeln!(
+            csv,
+            "{},{replicas},{fault_seed},{requests},{},{},{},{},{},{},\
+             {:.4},{:.4},{:.3},{:.6}",
+            scenario.name(),
+            r.served,
+            r.shed,
+            r.failover,
+            r.degraded,
+            r.retries,
+            r.failed,
+            completion,
+            avail.expected_completion,
+            r.throughput_rps,
+            r.wall_s,
+        );
+        let tag = format!("{},R={replicas}", scenario.name());
+        let mut point = |name: String, mean_s: f64| {
+            snapshot.push(BenchSample {
+                name,
+                iters: requests,
+                mean_s,
+                std_s: 0.0,
+                min_s: mean_s,
+            });
+        };
+        point(format!("cli faults total p99 ({tag})"), r.total.p99_s);
+        point(
+            format!("cli faults per-request service ({tag})"),
+            r.wall_s / r.served.max(1) as f64,
+        );
+        point(format!("cli faults completion ({tag})"), completion);
+        point(
+            format!("cli faults model completion ({tag})"),
+            avail.expected_completion,
+        );
+    }
+    ctx.engine.clear_cache();
+
+    ctx.write_csv("serve_faults.csv", &csv)?;
+    write_faults_snapshot(ctx, &snapshot)?;
+    Ok(format!(
+        "Fault injection / failover — {} {ds_name}, JSQ router, \
+         {requests} requests/point, B={} wait {:.0} ms (trace seed {}, \
+         fault seed {fault_seed})\n{}\n\
+         completion = (served - failed) / offered; the model column is \
+         Scenarios::fleet_availability priced from each row's chaos plan \
+         (capacity_summary). Stall rows run a {BENCH_STALL_WATCHDOG_S:.0} s \
+         watchdog so the doomed replica's StageTimeout resolves quickly; \
+         logits of every completed request are bit-identical to the \
+         fault-free run (integration_faults pins this)\n",
+        framework_label(&backend),
+        sc.max_batch,
+        sc.max_wait_ms,
+        sc.seed,
+        table.render()
+    ))
+}
+
+/// Write the `BENCH_faults.json` perf-trajectory snapshot. Same
+/// dual-writer convention as `BENCH_fleet.json`: this CLI sweep writes
+/// `quick: false`, CI's `cargo bench --bench faults -- --quick` writes
+/// `quick: true`, and `bench_diff.py` skips mixed pairs.
+fn write_faults_snapshot(ctx: &BenchCtx, samples: &[BenchSample]) -> Result<()> {
+    let extras = [
+        ("quick", "false".to_string()),
+        ("source", "\"gnn-pipe bench serve-faults\"".to_string()),
+    ];
+    let path = ctx.cfg.root.join("BENCH_faults.json");
+    write_bench_snapshot(&path, "faults", &extras, samples)?;
+    eprintln!("[bench] wrote {}", path.display());
+    Ok(())
+}

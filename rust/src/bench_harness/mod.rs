@@ -38,8 +38,14 @@
 //! fleet: replicas x rate x traffic shape with JSQ routing and the SLO
 //! admission gate, against `Scenarios::fleet_latency` (per-replica
 //! M/D/1 + routing imbalance), with shed rates reported per row.
+//!
+//! The `serve-faults` bench (E13) injects seeded chaos plans
+//! (crash/stall/slow/flaky/chaos from `crate::faults`) into the fleet
+//! and reports measured completion, failover, degradation and retries
+//! against `Scenarios::fleet_availability`.
 
 mod ablation;
+mod faults;
 mod figures;
 mod fleet;
 mod hybrid;
@@ -50,6 +56,7 @@ mod table1;
 mod table2;
 
 pub use ablation::{bench_ablation_chunker, bench_edge_retention};
+pub use faults::bench_serve_faults;
 pub use figures::{bench_fig1, bench_fig2, bench_fig3, bench_fig4};
 pub use fleet::bench_serve_fleet;
 pub use hybrid::bench_hybrid;

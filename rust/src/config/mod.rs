@@ -157,6 +157,13 @@ pub struct ServeConfig {
     /// admission, milliseconds. A config knob (not a measurement) so
     /// planning stays bit-reproducible.
     pub service_model_ms: f64,
+    /// Fault-injection scenario ("none", "crash", "stall", "slow",
+    /// "flaky" or "chaos"). Parsed by `faults::FaultScenario::parse`.
+    pub faults: String,
+    /// Seed for the chaos plan (`faults::FaultPlan::generate`) —
+    /// independent of the trace seed so the same traffic can replay
+    /// under different fault draws.
+    pub fault_seed: u64,
 }
 
 impl Default for ServeConfig {
@@ -174,12 +181,14 @@ impl Default for ServeConfig {
             slo_p99_ms: 0.0,
             max_defer_ms: 500.0,
             service_model_ms: 25.0,
+            faults: "none".into(),
+            fault_seed: 0,
         }
     }
 }
 
 impl ServeConfig {
-    const KNOWN_KEYS: [&'static str; 12] = [
+    const KNOWN_KEYS: [&'static str; 14] = [
         "backend",
         "rate_hz",
         "requests",
@@ -192,6 +201,8 @@ impl ServeConfig {
         "slo_p99_ms",
         "max_defer_ms",
         "service_model_ms",
+        "faults",
+        "fault_seed",
     ];
 
     /// Overlay `configs/serve.json` onto the defaults. Every present
@@ -254,6 +265,12 @@ impl ServeConfig {
         }
         if let Some(v) = s.get("service_model_ms").and_then(Json::as_f64) {
             serve.service_model_ms = v;
+        }
+        if let Some(v) = s.get("faults").and_then(Json::as_str) {
+            serve.faults = v.to_string();
+        }
+        if let Some(v) = s.get("fault_seed").and_then(Json::as_usize) {
+            serve.fault_seed = v as u64;
         }
         Ok(serve)
     }
@@ -469,6 +486,27 @@ mod tests {
         assert_eq!(s.replicas, 4);
         assert_eq!(s.slo_p99_ms, 150.0);
         assert_eq!(s.max_batch, ServeConfig::default().max_batch);
+    }
+
+    #[test]
+    fn serve_config_fault_keys_parse_and_typos_name_the_offender() {
+        // The fault knobs overlay like any other serve key.
+        let j = Json::parse(r#"{"faults": "crash", "fault_seed": 7}"#).unwrap();
+        let s = ServeConfig::from_json(&j).unwrap();
+        assert_eq!(s.faults, "crash");
+        assert_eq!(s.fault_seed, 7);
+        // Defaults: chaos off, seed 0.
+        let d = ServeConfig::default();
+        assert_eq!(d.faults, "none");
+        assert_eq!(d.fault_seed, 0);
+        // A typo'd fault key is rejected by name with the near miss.
+        let j = Json::parse(r#"{"falt_seed": 7}"#).unwrap();
+        let err = ServeConfig::from_json(&j).unwrap_err().to_string();
+        assert!(err.contains("falt_seed"), "error must name the bad key: {err}");
+        assert!(
+            err.contains("did you mean \"fault_seed\""),
+            "error must suggest the near miss: {err}"
+        );
     }
 
     #[test]

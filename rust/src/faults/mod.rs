@@ -1,0 +1,525 @@
+//! Deterministic fault injection: seeded chaos plans for the serving
+//! fleet.
+//!
+//! A [`FaultPlan`] is a pure function of `(scenario, seed, fleet
+//! shape)` — generated from forked [`crate::util::rng::Rng`] streams
+//! exactly like `serve::trace::poisson_trace`, so the same seed
+//! replays bit-identically. The plan emits [`FaultEvent`]s; the two
+//! halves of the system consume them differently:
+//!
+//! - **Routing-visible faults** (`ReplicaCrash`, and `StageStall`s
+//!   long enough to trip the watchdog) are consumed by
+//!   `serve::fleet::plan_fleet_faults`, which reroutes the victim's
+//!   unserved requests to survivors on the virtual timeline *before*
+//!   execution. Because the reroute happens at plan time, the logits
+//!   of every request that completes are bit-identical to the
+//!   fault-free path — a served request's output depends only on
+//!   `(params, node)`, never on which replica ran it.
+//! - **Execution faults** (`StageStall`, `SlowReplica`,
+//!   `TransientExecError`) are lowered to a per-replica
+//!   [`StageFaults`] table that `pipeline::PipelineEngine` stage
+//!   workers consult before each forward micro-batch: stalls and
+//!   slowdowns sleep on the worker thread (waking early once a peer
+//!   trips the shared abort flag), transients return a typed
+//!   [`crate::pipeline::EngineError::InjectedFault`] that the fleet
+//!   retry loop recognises as retryable.
+//!
+//! Stage-scoped events (`StageStall`, `TransientExecError`) always
+//! target replica [`STAGE_FAULT_REPLICA`] so a fleet run has exactly
+//! one deterministic victim; `ReplicaCrash` and `SlowReplica` carry
+//! their own replica index drawn from the seed.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Result};
+
+use crate::pipeline::EngineError;
+use crate::util::rng::Rng;
+
+/// Replica that stage-scoped faults (stall, transient) pin to.
+pub const STAGE_FAULT_REPLICA: usize = 0;
+
+/// Bounded retry budget for transient execution faults: a replica run
+/// failing with a transient `EngineError` is re-executed at most this
+/// many times before the failure is surfaced in the `FleetReport`.
+pub const MAX_REPLICA_RETRIES: usize = 2;
+
+/// Named fault scenarios selectable via `gnn-pipe serve --faults`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultScenario {
+    /// No injected faults (the default; `run` == `run_with_faults`).
+    None,
+    /// One replica crashes partway through its routed sub-trace; its
+    /// unserved suffix fails over to the survivors.
+    Crash,
+    /// One stage stalls a micro-batch far past the watchdog: the
+    /// downstream stage reports `StageTimeout`, the replica is doomed,
+    /// and its whole sub-trace fails over.
+    Stall,
+    /// One replica executes slowly (per-batch delay); routing and
+    /// logits are unchanged — only measured latency degrades.
+    Slow,
+    /// A stage fails a micro-batch with a transient execution error a
+    /// bounded number of times (≤ the retry budget); the fleet retry
+    /// loop absorbs it and the run completes.
+    Flaky,
+    /// Crash + slow + flaky together (no stall, so completion holds).
+    Chaos,
+}
+
+impl FaultScenario {
+    pub fn parse(s: &str) -> Result<FaultScenario> {
+        Ok(match s {
+            "none" => FaultScenario::None,
+            "crash" => FaultScenario::Crash,
+            "stall" => FaultScenario::Stall,
+            "slow" => FaultScenario::Slow,
+            "flaky" => FaultScenario::Flaky,
+            "chaos" => FaultScenario::Chaos,
+            _ => bail!(
+                "unknown fault scenario '{s}' (expected none|crash|stall|slow|flaky|chaos)"
+            ),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            FaultScenario::None => "none",
+            FaultScenario::Crash => "crash",
+            FaultScenario::Stall => "stall",
+            FaultScenario::Slow => "slow",
+            FaultScenario::Flaky => "flaky",
+            FaultScenario::Chaos => "chaos",
+        }
+    }
+
+    pub fn all() -> &'static [FaultScenario] {
+        &[
+            FaultScenario::None,
+            FaultScenario::Crash,
+            FaultScenario::Stall,
+            FaultScenario::Slow,
+            FaultScenario::Flaky,
+            FaultScenario::Chaos,
+        ]
+    }
+}
+
+/// A single injected fault. `at_request` / `micro_batch` index the
+/// victim replica's *local* sub-trace / batch plan.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultEvent {
+    /// Replica stops serving after its first `at_request` requests.
+    ReplicaCrash { replica: usize, at_request: usize },
+    /// Stage sleeps `duration_s` before handling `micro_batch` (on
+    /// replica [`STAGE_FAULT_REPLICA`]). Durations are generated far
+    /// above any sane watchdog, so a stall dooms its replica; the
+    /// sleep itself wakes early once a peer stage times out.
+    StageStall {
+        stage: usize,
+        micro_batch: usize,
+        duration_s: f64,
+    },
+    /// Replica runs slow: every batch pays `(factor - 1) ×
+    /// service_model_s` extra on stage 0.
+    SlowReplica { replica: usize, factor: f64 },
+    /// Stage fails `micro_batch` with a retryable error `count` times
+    /// (on replica [`STAGE_FAULT_REPLICA`]); `count` never exceeds
+    /// [`MAX_REPLICA_RETRIES`], so retries always recover.
+    TransientExecError {
+        stage: usize,
+        micro_batch: usize,
+        count: usize,
+    },
+}
+
+/// A replayable chaos plan: pure in `(scenario, seed, replicas,
+/// stages, requests)`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultPlan {
+    pub scenario: FaultScenario,
+    pub seed: u64,
+    pub events: Vec<FaultEvent>,
+}
+
+impl FaultPlan {
+    /// Generate the plan. Forked streams (crash=1, stall=2, slow=3,
+    /// flaky=4) keep each event family stable across scenarios that
+    /// share a seed.
+    pub fn generate(
+        scenario: FaultScenario,
+        seed: u64,
+        replicas: usize,
+        stages: usize,
+        requests: usize,
+    ) -> FaultPlan {
+        let replicas = replicas.max(1);
+        let stages = stages.max(1);
+        let mut root = Rng::new(seed ^ 0x6661756c74u64); // "fault"
+        let mut crash = root.fork(1);
+        let mut stall = root.fork(2);
+        let mut slow = root.fork(3);
+        let mut flaky = root.fork(4);
+        // Crash point lands in [25%, 75%) of the victim's fair share
+        // so there is always both a served prefix and an orphaned
+        // suffix to fail over.
+        let share = (requests / replicas).max(2);
+        let mut crash_event = |rng: &mut Rng| FaultEvent::ReplicaCrash {
+            replica: rng.below(replicas),
+            at_request: share / 4 + rng.below((share / 2).max(1)),
+        };
+        // Stall a non-final stage: the watchdog fires in the stage
+        // *downstream* of the sleeper, so the last stage has no
+        // observer.
+        let stall_event = |rng: &mut Rng| FaultEvent::StageStall {
+            stage: rng.below(stages.saturating_sub(1).max(1)),
+            micro_batch: rng.below(2),
+            duration_s: rng.range_f64(30.0, 60.0),
+        };
+        let slow_event = |rng: &mut Rng| FaultEvent::SlowReplica {
+            replica: rng.below(replicas),
+            factor: rng.range_f64(1.5, 3.0),
+        };
+        let flaky_event = |rng: &mut Rng| FaultEvent::TransientExecError {
+            stage: rng.below(stages),
+            micro_batch: rng.below(2),
+            count: 1 + rng.below(MAX_REPLICA_RETRIES),
+        };
+        let events = match scenario {
+            FaultScenario::None => vec![],
+            FaultScenario::Crash => vec![crash_event(&mut crash)],
+            FaultScenario::Stall => vec![stall_event(&mut stall)],
+            FaultScenario::Slow => vec![slow_event(&mut slow)],
+            FaultScenario::Flaky => vec![flaky_event(&mut flaky)],
+            FaultScenario::Chaos => vec![
+                crash_event(&mut crash),
+                slow_event(&mut slow),
+                flaky_event(&mut flaky),
+            ],
+        };
+        FaultPlan {
+            scenario,
+            seed,
+            events,
+        }
+    }
+
+    /// If `replica` crashes, the local index after which it stops
+    /// serving (it serves its first `k` routed requests).
+    pub fn crash_point(&self, replica: usize) -> Option<usize> {
+        self.events.iter().find_map(|e| match *e {
+            FaultEvent::ReplicaCrash {
+                replica: r,
+                at_request,
+            } if r == replica => Some(at_request),
+            _ => None,
+        })
+    }
+
+    /// The replica doomed by a stall longer than the watchdog, if any.
+    /// A doomed replica never completes its run — the downstream stage
+    /// reports `StageTimeout` — so its entire sub-trace fails over.
+    pub fn stall_doom(&self, watchdog_s: f64) -> Option<usize> {
+        self.events.iter().find_map(|e| match *e {
+            FaultEvent::StageStall { duration_s, .. } if duration_s > watchdog_s => {
+                Some(STAGE_FAULT_REPLICA)
+            }
+            _ => None,
+        })
+    }
+
+    /// Lower the plan to the execution-fault table for one replica
+    /// (`None` when nothing targets it). `service_model_s` scales the
+    /// slow-replica per-batch delay.
+    pub fn stage_faults(&self, replica: usize, service_model_s: f64) -> Option<StageFaults> {
+        let mut f = StageFaults::new();
+        for e in &self.events {
+            match *e {
+                FaultEvent::StageStall {
+                    stage,
+                    micro_batch,
+                    duration_s,
+                } if replica == STAGE_FAULT_REPLICA => {
+                    f = f.with_stall(stage, micro_batch, duration_s);
+                }
+                FaultEvent::TransientExecError {
+                    stage,
+                    micro_batch,
+                    count,
+                } if replica == STAGE_FAULT_REPLICA => {
+                    f = f.with_transient(stage, micro_batch, count);
+                }
+                FaultEvent::SlowReplica {
+                    replica: r, factor, ..
+                } if r == replica => {
+                    f = f.with_slow((factor - 1.0).max(0.0) * service_model_s.max(0.0));
+                }
+                _ => {}
+            }
+        }
+        if f.is_empty() {
+            None
+        } else {
+            Some(f)
+        }
+    }
+
+    /// Capacity summary for `Scenarios::fleet_availability`: the
+    /// number of replicas lost for good and the mean fraction of their
+    /// share they served before dying (0 for a stall doom).
+    pub fn capacity_summary(
+        &self,
+        replicas: usize,
+        requests: usize,
+        watchdog_s: f64,
+    ) -> (usize, f64) {
+        let replicas = replicas.max(1);
+        let share = (requests / replicas).max(1) as f64;
+        let mut lost = Vec::new();
+        for r in 0..replicas {
+            if let Some(k) = self.crash_point(r) {
+                lost.push((k as f64 / share).clamp(0.0, 1.0));
+            } else if self.stall_doom(watchdog_s) == Some(r) {
+                lost.push(0.0);
+            }
+        }
+        if lost.is_empty() {
+            (0, 1.0)
+        } else {
+            let mean = lost.iter().sum::<f64>() / lost.len() as f64;
+            (lost.len(), mean)
+        }
+    }
+}
+
+/// Execution-fault table for one replica's pipeline, consulted by
+/// every stage worker before each forward micro-batch. Shared across
+/// retry attempts so transient counters burn down and the retry
+/// succeeds.
+#[derive(Debug, Default)]
+pub struct StageFaults {
+    /// (stage, micro_batch, duration_s) sleeps.
+    stalls: Vec<(usize, usize, f64)>,
+    /// Extra per-batch delay injected at stage 0 (slow replica).
+    slow_batch_s: f64,
+    /// (stage, micro_batch, remaining) transient failures.
+    transients: Mutex<Vec<(usize, usize, usize)>>,
+    /// Set by the engine when any worker errors; stall/slow sleeps
+    /// poll it so a doomed pipeline unwinds at watchdog speed instead
+    /// of sleeping out a 60 s stall.
+    abort: AtomicBool,
+}
+
+impl StageFaults {
+    pub fn new() -> StageFaults {
+        StageFaults::default()
+    }
+
+    pub fn with_stall(mut self, stage: usize, micro_batch: usize, duration_s: f64) -> StageFaults {
+        self.stalls.push((stage, micro_batch, duration_s));
+        self
+    }
+
+    pub fn with_slow(mut self, per_batch_s: f64) -> StageFaults {
+        self.slow_batch_s += per_batch_s.max(0.0);
+        self
+    }
+
+    pub fn with_transient(mut self, stage: usize, micro_batch: usize, count: usize) -> StageFaults {
+        self.transients.lock().unwrap().push((stage, micro_batch, count));
+        self
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.stalls.is_empty()
+            && self.slow_batch_s <= 0.0
+            && self.transients.lock().unwrap().is_empty()
+    }
+
+    /// Trip the shared abort flag (a peer worker failed).
+    pub fn trip_abort(&self) {
+        self.abort.store(true, Ordering::SeqCst);
+    }
+
+    /// Clear the abort flag at the start of a fresh pipeline run.
+    pub fn reset_abort(&self) {
+        self.abort.store(false, Ordering::SeqCst);
+    }
+
+    pub fn aborted(&self) -> bool {
+        self.abort.load(Ordering::SeqCst)
+    }
+
+    /// Injection hook: called by a stage worker before it receives /
+    /// executes forward micro-batch `m`. Sleeps for stalls and
+    /// slowdowns; returns a typed transient error when one is armed.
+    pub fn before_fwd(&self, stage: usize, m: usize) -> Result<(), EngineError> {
+        if stage == 0 && self.slow_batch_s > 0.0 {
+            self.interruptible_sleep(self.slow_batch_s);
+        }
+        for &(s, mb, duration_s) in &self.stalls {
+            if s == stage && mb == m {
+                self.interruptible_sleep(duration_s);
+            }
+        }
+        let mut transients = self.transients.lock().unwrap();
+        for t in transients.iter_mut() {
+            if t.0 == stage && t.1 == m && t.2 > 0 {
+                t.2 -= 1;
+                return Err(EngineError::InjectedFault {
+                    stage,
+                    micro_batch: m,
+                });
+            }
+        }
+        Ok(())
+    }
+
+    /// Sleep `duration_s`, polling the abort flag so a stalled worker
+    /// unwinds promptly once a peer has already failed the run.
+    fn interruptible_sleep(&self, duration_s: f64) {
+        let deadline = Instant::now() + Duration::from_secs_f64(duration_s.max(0.0));
+        let slice = Duration::from_millis(5);
+        while Instant::now() < deadline && !self.aborted() {
+            let left = deadline.saturating_duration_since(Instant::now());
+            std::thread::sleep(left.min(slice));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scenario_names_round_trip() {
+        for sc in FaultScenario::all() {
+            assert_eq!(FaultScenario::parse(sc.name()).unwrap(), *sc);
+        }
+        assert!(FaultScenario::parse("explode").is_err());
+    }
+
+    #[test]
+    fn fault_plans_replay_bit_identically() {
+        for sc in FaultScenario::all() {
+            let a = FaultPlan::generate(*sc, 42, 3, 4, 48);
+            let b = FaultPlan::generate(*sc, 42, 3, 4, 48);
+            assert_eq!(a, b, "{}", sc.name());
+            let c = FaultPlan::generate(*sc, 43, 3, 4, 48);
+            if *sc != FaultScenario::None {
+                assert_ne!(a, c, "seed must matter for {}", sc.name());
+            }
+        }
+    }
+
+    #[test]
+    fn generated_events_respect_fleet_shape() {
+        for seed in 0..32 {
+            let p = FaultPlan::generate(FaultScenario::Chaos, seed, 3, 4, 48);
+            for e in &p.events {
+                match *e {
+                    FaultEvent::ReplicaCrash {
+                        replica,
+                        at_request,
+                    } => {
+                        assert!(replica < 3);
+                        // share = 16; crash point in [4, 12)
+                        assert!((4..12).contains(&at_request), "at={at_request}");
+                    }
+                    FaultEvent::SlowReplica { replica, factor } => {
+                        assert!(replica < 3);
+                        assert!((1.5..3.0).contains(&factor));
+                    }
+                    FaultEvent::TransientExecError { stage, count, .. } => {
+                        assert!(stage < 4);
+                        assert!(count >= 1 && count <= MAX_REPLICA_RETRIES);
+                    }
+                    FaultEvent::StageStall { .. } => panic!("chaos must not stall"),
+                }
+            }
+        }
+        let p = FaultPlan::generate(FaultScenario::Stall, 7, 2, 4, 32);
+        match p.events[0] {
+            FaultEvent::StageStall {
+                stage, duration_s, ..
+            } => {
+                assert!(stage < 3, "stall must not hit the final stage");
+                assert!(duration_s >= 30.0);
+            }
+            _ => panic!("stall scenario must emit StageStall"),
+        }
+    }
+
+    #[test]
+    fn stage_faults_target_the_right_replica() {
+        let p = FaultPlan::generate(FaultScenario::Flaky, 5, 3, 4, 48);
+        assert!(p.stage_faults(STAGE_FAULT_REPLICA, 0.03).is_some());
+        assert!(p.stage_faults(1, 0.03).is_none());
+        assert!(p.stage_faults(2, 0.03).is_none());
+
+        let p = FaultPlan::generate(FaultScenario::Slow, 5, 3, 4, 48);
+        let victim = match p.events[0] {
+            FaultEvent::SlowReplica { replica, .. } => replica,
+            _ => unreachable!(),
+        };
+        for r in 0..3 {
+            assert_eq!(p.stage_faults(r, 0.03).is_some(), r == victim);
+        }
+        // Crash is routing-visible only: no execution faults at all.
+        let p = FaultPlan::generate(FaultScenario::Crash, 5, 3, 4, 48);
+        for r in 0..3 {
+            assert!(p.stage_faults(r, 0.03).is_none());
+        }
+    }
+
+    #[test]
+    fn transient_burns_down_then_passes() {
+        let f = StageFaults::new().with_transient(1, 0, 2);
+        assert!(matches!(
+            f.before_fwd(1, 0),
+            Err(EngineError::InjectedFault { stage: 1, micro_batch: 0 })
+        ));
+        assert!(f.before_fwd(1, 1).is_ok(), "other micro-batch unaffected");
+        assert!(f.before_fwd(0, 0).is_ok(), "other stage unaffected");
+        assert!(f.before_fwd(1, 0).is_err());
+        assert!(f.before_fwd(1, 0).is_ok(), "count exhausted");
+    }
+
+    #[test]
+    fn stall_sleep_wakes_early_on_abort() {
+        let f = std::sync::Arc::new(StageFaults::new().with_stall(0, 0, 30.0));
+        let f2 = f.clone();
+        let aborter = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(30));
+            f2.trip_abort();
+        });
+        let t0 = Instant::now();
+        f.before_fwd(0, 0).unwrap();
+        let waited = t0.elapsed();
+        aborter.join().unwrap();
+        assert!(
+            waited < Duration::from_secs(5),
+            "stall must wake on abort, waited {waited:?}"
+        );
+        f.reset_abort();
+        assert!(!f.aborted());
+    }
+
+    #[test]
+    fn capacity_summary_prices_crash_and_stall() {
+        let p = FaultPlan::generate(FaultScenario::Crash, 11, 4, 4, 64);
+        let (lost, frac) = p.capacity_summary(4, 64, 10.0);
+        assert_eq!(lost, 1);
+        assert!((0.25..0.75).contains(&frac), "frac={frac}");
+
+        let p = FaultPlan::generate(FaultScenario::Stall, 11, 4, 4, 64);
+        assert_eq!(p.capacity_summary(4, 64, 10.0), (1, 0.0));
+        // Watchdog longer than the stall: nobody is doomed.
+        assert_eq!(p.capacity_summary(4, 64, 1e9), (0, 1.0));
+
+        let p = FaultPlan::generate(FaultScenario::None, 11, 4, 4, 64);
+        assert_eq!(p.capacity_summary(4, 64, 10.0), (0, 1.0));
+    }
+}

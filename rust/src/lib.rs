@@ -31,6 +31,7 @@ pub mod batching;
 pub mod bench_harness;
 pub mod config;
 pub mod data;
+pub mod faults;
 pub mod graph;
 pub mod metrics;
 pub mod optim;

@@ -13,12 +13,15 @@
 //!             [--replicas R] [--traffic poisson|mmpp|diurnal|flash]
 //!             [--router jsq|rr] [--slo-p99-ms X]
 //!             [--max-defer-ms D] [--service-model-ms M]
+//!             [--faults none|crash|stall|slow|flaky|chaos]
+//!             [--fault-seed S] [--watchdog-s W]
 //!                                                   replay a seeded request
 //!                                                   trace through a fleet of
 //!                                                   forward-only pipelines
 //!   bench     table1|table2|fig1|fig2|fig3|fig4|
 //!             ablation-chunker|edge-retention|
-//!             prep-modes|hybrid|serve|serve-fleet|all
+//!             prep-modes|hybrid|serve|serve-fleet|
+//!             serve-faults|all
 //!             [--epochs N] [--schedule S] [--prep P] [--replicas R]
 //!             [--replica-threads T]
 //!   inspect                                          artifact manifest summary
@@ -31,8 +34,9 @@ use gnn_pipe::batching::GraphAwareChunker;
 use gnn_pipe::bench_harness as bench;
 use gnn_pipe::config::Config;
 use gnn_pipe::data::generate;
+use gnn_pipe::faults::{FaultPlan, FaultScenario};
 use gnn_pipe::graph::GraphStats;
-use gnn_pipe::pipeline::{parse_schedule, PipelineTrainer, PrepMode};
+use gnn_pipe::pipeline::{parse_schedule, PipelineSpec, PipelineTrainer, PrepMode};
 use gnn_pipe::runtime::{Engine, Manifest};
 use gnn_pipe::serve::{
     generate_trace, BatchPolicy, FleetPolicy, FleetSession, RouterKind,
@@ -57,7 +61,9 @@ USAGE:
                      [--replicas R] [--traffic poisson|mmpp|diurnal|flash]
                      [--router jsq|rr] [--slo-p99-ms X] [--max-defer-ms D]
                      [--service-model-ms M]
-  gnn-pipe bench     <table1|table2|fig1|fig2|fig3|fig4|ablation-chunker|edge-retention|prep-modes|hybrid|serve|serve-fleet|all>
+                     [--faults none|crash|stall|slow|flaky|chaos]
+                     [--fault-seed S] [--watchdog-s W]
+  gnn-pipe bench     <table1|table2|fig1|fig2|fig3|fig4|ablation-chunker|edge-retention|prep-modes|hybrid|serve|serve-fleet|serve-faults|all>
                      [--epochs N] [--schedule fill-drain|1f1b] [--prep paper|cached|overlap]
                      [--replicas R] [--replica-threads T]
   gnn-pipe inspect
@@ -149,6 +155,40 @@ pipeline, bit for bit):
   `bench serve-fleet` sweeps replicas x rate x traffic against the
   Scenarios::fleet_latency model (per-replica M/D/1 + routing imbalance)
   and writes serve_fleet.csv + BENCH_fleet.json.
+
+FAULTS (--faults, default from configs/serve.json: none; chaos plans are
+a pure function of --fault-seed, independent of the trace seed):
+  crash        one replica stops serving partway through its routed
+               sub-trace; the unserved suffix FAILS OVER — rerouted to
+               the survivors on the virtual timeline (retried one
+               modeled batch after the original effective arrival) and
+               re-gated by the degraded admission gate
+  stall        one stage sleeps 30-60 s on a micro-batch; the stage
+               downstream times out at --watchdog-s (default 10, a
+               stage-link watchdog on every inter-stage channel), the
+               replica is doomed and its WHOLE sub-trace fails over;
+               the run completes with the timeout surfaced per replica
+  slow         one replica pays a per-batch delay (1.5-3x the service
+               model); routing and logits unchanged, latency degrades
+  flaky        one stage fails a micro-batch with a retryable typed
+               error 1-2 times; a bounded per-replica retry loop (<= 2
+               retries) absorbs it and the run completes
+  chaos        crash + slow + flaky at once
+  GRACEFUL BROWN-OUT: with the SLO gate on, failover re-gates orphans
+  with the p99 floor recomputed for the surviving capacity
+  (AdmissionGate::for_capacity) — a degraded fleet defers and sheds
+  more instead of silently blowing the target; shed-due-to-degradation
+  is counted separately (degraded) from healthy shedding.
+  FAULT-INVARIANCE CONTRACT: a served request's logits depend only on
+  (params, node), so failover and retries move where/when a request is
+  served, never what it computes — every request that completes returns
+  logits bit-identical to the fault-free run, and the same --fault-seed
+  replays the same chaos plan bit for bit. One replica's failure never
+  aborts the fleet: survivors aggregate, errors are reported per
+  replica. The report prints failover/degraded/retry counts and the
+  Scenarios::fleet_availability model prices the expected completion
+  rate of the degraded fleet. `bench serve-faults` sweeps scenarios x
+  replicas and writes serve_faults.csv + BENCH_faults.json.
 ";
 
 fn main() {
@@ -343,9 +383,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let max_defer_ms = args.opt_f64("max-defer-ms", sc.max_defer_ms)?;
     let service_model_ms =
         args.opt_f64("service-model-ms", sc.service_model_ms)?;
+    let scenario = FaultScenario::parse(args.opt_str("faults", &sc.faults))?;
+    let fault_seed = args.opt_usize("fault-seed", sc.fault_seed as usize)? as u64;
+    let watchdog_s =
+        args.opt_f64("watchdog-s", gnn_pipe::serve::DEFAULT_WATCHDOG_S)?;
     anyhow::ensure!(rate_hz > 0.0, "--rate must be positive");
     anyhow::ensure!(requests > 0, "--requests must be positive");
     anyhow::ensure!(replicas >= 1, "--replicas must be >= 1");
+    anyhow::ensure!(watchdog_s > 0.0, "--watchdog-s must be positive");
 
     // Serving artifacts exist for the pipeline dataset (chunks=1).
     let dataset = cfg.pipeline.pipeline_dataset.clone();
@@ -374,10 +419,17 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let params_map = init_params(profile, &cfg.model, seed);
     let params = flatten_params(&params_map, &engine.manifest.param_order)?;
 
+    let fault_plan = FaultPlan::generate(
+        scenario,
+        fault_seed,
+        replicas,
+        PipelineSpec::gat4_serve().num_stages(),
+        requests,
+    );
     println!(
         "serving {dataset}/{backend}: {requests} {} requests at {rate_hz:.1} req/s \
-         over {replicas} replica(s) ({} router, SLO {}; max_batch {max_batch}, \
-         max_wait {max_wait_ms:.0} ms, seed {seed})...",
+         over {replicas} replica(s) ({} router, SLO {}, faults {}; \
+         max_batch {max_batch}, max_wait {max_wait_ms:.0} ms, seed {seed})...",
         traffic.name(),
         router.name(),
         if slo_p99_ms > 0.0 {
@@ -385,10 +437,44 @@ fn cmd_serve(args: &Args) -> Result<()> {
         } else {
             "off".to_string()
         },
+        if scenario == FaultScenario::None {
+            "off".to_string()
+        } else {
+            format!("{} (seed {fault_seed}, watchdog {watchdog_s:.1} s)", scenario.name())
+        },
     );
-    let session = FleetSession::new(&engine, &ds, &backend);
-    let out = session.run(&params, &trace, &policy, &fleet)?;
+    let mut session = FleetSession::new(&engine, &ds, &backend);
+    session.set_watchdog_s(watchdog_s);
+    let faults = (scenario != FaultScenario::None).then_some(&fault_plan);
+    let out = session.run_with_faults(&params, &trace, &policy, &fleet, faults)?;
     print!("{}", out.report.render());
+
+    if scenario != FaultScenario::None {
+        // Price the degraded fleet: expected completion rate given the
+        // replicas the chaos plan kills and when it kills them.
+        let (crashed, crash_frac) =
+            fault_plan.capacity_summary(replicas, requests, watchdog_s);
+        let avail = Scenarios::fleet_availability(
+            &out.report.stage_fwd_means_s,
+            out.report.admitted_rps,
+            replicas,
+            max_batch,
+            max_wait_ms / 1e3,
+            crashed,
+            crash_frac,
+        );
+        println!(
+            "availability (closed form): {} of {} replicas lost \
+             (degraded {:.0}% of the run), capacity {:.1} -> {:.1} req/s, \
+             expected completion {:.1}%",
+            avail.crashed,
+            avail.replicas,
+            avail.degraded_frac * 100.0,
+            avail.full_capacity_rps,
+            avail.capacity_rps,
+            avail.expected_completion * 100.0,
+        );
+    }
 
     // The closed-form fleet model at this operating point, priced with
     // the run's own measured stage times at the ADMITTED rate (under
@@ -456,6 +542,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
             "hybrid" => bench::bench_hybrid(ctx),
             "serve" => bench::bench_serve(ctx),
             "serve-fleet" => bench::bench_serve_fleet(ctx),
+            "serve-faults" => bench::bench_serve_faults(ctx),
             other => anyhow::bail!("unknown bench {other:?}"),
         }
     };
@@ -463,7 +550,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
         for name in [
             "table1", "table2", "fig1", "fig2", "fig3", "fig4",
             "ablation-chunker", "edge-retention", "prep-modes", "hybrid",
-            "serve", "serve-fleet",
+            "serve", "serve-fleet", "serve-faults",
         ] {
             outputs.push(run(name, &ctx)?);
         }

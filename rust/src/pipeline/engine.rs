@@ -54,20 +54,125 @@
 //! concurrent-vs-sequential invariant in
 //! `rust/tests/integration_hybrid.rs` pins.
 //!
+//! ## Failure semantics
+//!
+//! A stage failure is data, not an abort: worker panics are caught via
+//! `catch_unwind` and surfaced as [`EngineError::StagePanic`], a
+//! stalled peer trips the optional link watchdog
+//! ([`EngineError::StageTimeout`] instead of a hung `recv`), and the
+//! epoch-level triage returns the root-cause error with its typed
+//! [`EngineError`] chain intact so callers (the serving fleet's retry
+//! loop) can classify it. Injected chaos — see [`crate::faults`] —
+//! enters through the same `StageFaults` hook every worker consults
+//! before a forward micro-batch.
+//!
 //! [`FillDrain`]: super::FillDrain
 
 use std::collections::BTreeMap;
-use std::sync::mpsc::{self, Receiver, Sender, SyncSender};
+use std::panic::AssertUnwindSafe;
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender, SyncSender};
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
+use crate::faults::StageFaults;
 use crate::runtime::{Engine, ExecInput, Executable, HostTensor};
 
 use super::chunkprep::Microbatch;
 use super::schedule::{Schedule, StageEvent};
 use super::spec::{PipelineSpec, StageInput, StageSpec};
+
+/// Typed stage-failure taxonomy. Every pipeline failure mode that used
+/// to be a bare string (or a process-aborting panic) is one of these,
+/// kept at the root of the `anyhow` chain `execute()` returns so
+/// callers can downcast and classify — the serving fleet retries
+/// [`EngineError::is_transient`] errors and treats the rest as replica
+/// death.
+#[derive(Debug, Clone, PartialEq)]
+pub enum EngineError {
+    /// A stage worker panicked; caught at the spawn boundary
+    /// (`catch_unwind`), never a process abort.
+    StagePanic { stage: usize, message: String },
+    /// A stage-link `recv` exceeded the watchdog: the upstream stage
+    /// stalled or died without closing the channel.
+    StageTimeout {
+        stage: usize,
+        micro_batch: usize,
+        what: &'static str,
+        waited_s: f64,
+    },
+    /// A stage link closed mid-run — the peer worker already failed;
+    /// its own error is the root cause.
+    LinkClosed {
+        stage: usize,
+        micro_batch: usize,
+        what: &'static str,
+    },
+    /// A fault-injection plan failed this micro-batch on purpose
+    /// (`TransientExecError`); retryable by construction.
+    InjectedFault { stage: usize, micro_batch: usize },
+}
+
+impl EngineError {
+    /// Link-teardown collateral: the peer's own error is the root cause.
+    pub fn is_disconnect(&self) -> bool {
+        matches!(self, EngineError::LinkClosed { .. })
+    }
+
+    /// Retry-worthy: re-running the replica may succeed.
+    pub fn is_transient(&self) -> bool {
+        matches!(self, EngineError::InjectedFault { .. })
+    }
+}
+
+impl std::fmt::Display for EngineError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            EngineError::StagePanic { stage, message } => {
+                write!(f, "stage {stage} worker panicked: {message}")
+            }
+            EngineError::StageTimeout {
+                stage,
+                micro_batch,
+                what,
+                waited_s,
+            } => write!(
+                f,
+                "stage {stage}: timed out after {waited_s:.3}s waiting for {what} \
+                 micro-batch {micro_batch} (watchdog; upstream stage stalled or died)"
+            ),
+            EngineError::LinkClosed {
+                stage,
+                micro_batch,
+                what,
+            } => write!(
+                f,
+                "stage {stage}: {what} channel closed at micro-batch {micro_batch} \
+                 (peer stage failed)"
+            ),
+            EngineError::InjectedFault { stage, micro_batch } => write!(
+                f,
+                "stage {stage}: injected transient execution fault on \
+                 micro-batch {micro_batch}"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for EngineError {}
+
+/// Render a caught panic payload (the `Box<dyn Any>` from
+/// `catch_unwind`/`join`) as best we can.
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
 
 /// Per-stage wall-clock accounting for one epoch.
 #[derive(Debug, Clone, Default)]
@@ -131,6 +236,15 @@ pub struct PipelineEngine {
     /// paper's implementation re-uploads per call; `PrepMode::Cached`
     /// and `::Overlap` turn it on.
     pub device_resident: bool,
+    /// Stage-link watchdog: a worker's `recv` waiting longer than this
+    /// fails with [`EngineError::StageTimeout`] instead of hanging
+    /// forever on a stalled peer. `None` (the default, and the training
+    /// path) keeps the blocking recv.
+    pub watchdog_s: Option<f64>,
+    /// Injected execution faults (see [`crate::faults`]): every stage
+    /// worker consults the table before each forward micro-batch.
+    /// `None` (the default) is a no-op.
+    pub faults: Option<Arc<StageFaults>>,
 }
 
 type Msg = (usize, HostTensor);
@@ -229,6 +343,8 @@ impl PipelineEngine {
             backend: backend.to_string(),
             artifact_names,
             device_resident: false,
+            watchdog_s: None,
+            faults: None,
         })
     }
 
@@ -268,6 +384,8 @@ impl PipelineEngine {
             backend: backend.to_string(),
             artifact_names,
             device_resident: false,
+            watchdog_s: None,
+            faults: None,
         })
     }
 
@@ -390,6 +508,13 @@ impl PipelineEngine {
         let m_count = microbatches.len();
         anyhow::ensure!(m_count >= 1, "no micro-batches");
         let n_stages = self.spec.stages.len();
+        let watchdog = self.watchdog_s.map(Duration::from_secs_f64);
+        // A fresh run must not inherit a previous attempt's abort flag
+        // (the fleet retry loop reuses one StageFaults table so
+        // transient counters burn down across attempts).
+        if let Some(f) = &self.faults {
+            f.reset_abort();
+        }
         // Workers borrow the micro-batches directly (scoped threads): no
         // per-epoch clone of the full prepared set. Forward-only specs
         // are deterministic (validate() bans the Key input), so a long
@@ -451,28 +576,80 @@ impl PipelineEngine {
                     fwd_out: fwd_out[s].take(),
                     bwd_in: bwd_in[s].take(),
                     bwd_out: bwd_out[s].take(),
+                    watchdog,
+                    faults: self.faults.clone(),
                 };
-                handles.push(scope.spawn(move || worker.run()));
+                // Catch panics at the spawn boundary: a panicking stage
+                // becomes a structured StagePanic error, never a process
+                // abort. Any failure trips the shared fault-abort flag so
+                // an injected stall sleeping on a sibling worker unwinds
+                // at watchdog speed instead of sleeping out its full
+                // duration.
+                let faults = self.faults.clone();
+                handles.push(scope.spawn(move || {
+                    let out = std::panic::catch_unwind(AssertUnwindSafe(|| worker.run()))
+                        .unwrap_or_else(|payload| {
+                            Err(anyhow::Error::new(EngineError::StagePanic {
+                                stage: s,
+                                message: panic_message(payload.as_ref()),
+                            }))
+                        });
+                    if out.is_err() {
+                        if let Some(f) = &faults {
+                            f.trip_abort();
+                        }
+                    }
+                    out
+                }));
             }
 
             // Join everything, then report the most informative error: a
             // failing stage tears its channels down, so peers see their
-            // sends/receives fail with "channel closed" — the root cause
-            // is the one error that does NOT mention a closed channel.
+            // sends/receives fail with LinkClosed — the root cause is
+            // the one error that is NOT link-teardown collateral. The
+            // root is returned with its typed EngineError chain intact
+            // (not stringified) so callers can downcast and classify.
             let results: Vec<Result<WorkerOutput>> = handles
                 .into_iter()
-                .map(|h| h.join().expect("stage worker panicked"))
+                .enumerate()
+                .map(|(s, h)| {
+                    h.join().unwrap_or_else(|payload| {
+                        Err(anyhow::Error::new(EngineError::StagePanic {
+                            stage: s,
+                            message: panic_message(payload.as_ref()),
+                        }))
+                    })
+                })
                 .collect();
-            let errs: Vec<String> = results
-                .iter()
-                .filter_map(|r| r.as_ref().err().map(|e| format!("{e:#}")))
-                .collect();
-            if !errs.is_empty() {
-                let root = errs
+            let mut outputs: Vec<WorkerOutput> = Vec::with_capacity(n_stages);
+            let mut errors: Vec<anyhow::Error> = Vec::new();
+            for res in results {
+                match res {
+                    Ok(out) => outputs.push(out),
+                    Err(e) => errors.push(e),
+                }
+            }
+            if !errors.is_empty() {
+                let is_teardown = |e: &anyhow::Error| {
+                    e.chain().any(|c| {
+                        c.downcast_ref::<EngineError>()
+                            .is_some_and(EngineError::is_disconnect)
+                    }) || format!("{e:#}").contains("channel closed")
+                };
+                let idx = errors
                     .iter()
-                    .find(|e| !e.contains("channel closed"))
-                    .unwrap_or(&errs[0]);
-                anyhow::bail!("pipeline stage failed: {root}");
+                    .position(|e| !is_teardown(e))
+                    .unwrap_or(0);
+                let peers = errors.len() - 1;
+                let root = errors.swap_remove(idx);
+                return Err(root.context(if peers > 0 {
+                    format!(
+                        "pipeline stage failed ({peers} peer link-teardown \
+                         error(s) suppressed)"
+                    )
+                } else {
+                    "pipeline stage failed".to_string()
+                }));
             }
 
             let mut loss_sum = 0.0f64;
@@ -480,8 +657,7 @@ impl PipelineEngine {
             let mut logp: Vec<(Vec<u32>, Vec<f32>)> = Vec::new();
             let mut stage_timings = Vec::with_capacity(n_stages);
             let mut owned_grads: Vec<(usize, Vec<HostTensor>)> = Vec::new();
-            for (st, out) in self.spec.stages.iter().zip(results) {
-                let out = out.unwrap();
+            for (st, out) in self.spec.stages.iter().zip(outputs) {
                 loss_sum += out.loss_sum;
                 mask_count += out.mask_count;
                 stage_timings.push(out.timing);
@@ -547,6 +723,10 @@ struct StageWorker<'a> {
     fwd_out: Option<LinkTx>,
     bwd_in: Option<Receiver<Msg>>,
     bwd_out: Option<LinkTx>,
+    /// Stage-link recv timeout (see [`PipelineEngine::watchdog_s`]).
+    watchdog: Option<Duration>,
+    /// Injected execution faults, consulted before each forward batch.
+    faults: Option<Arc<StageFaults>>,
 }
 
 impl StageWorker<'_> {
@@ -587,8 +767,16 @@ impl StageWorker<'_> {
         for &ev in &self.events {
             match ev {
                 StageEvent::Fwd(m) => {
+                    // Fault-injection hook (no-op without a plan): may
+                    // sleep (stall / slow replica) or fail the batch
+                    // with a typed transient error.
+                    if let Some(f) = &self.faults {
+                        f.before_fwd(self.stage, m)?;
+                    }
                     let inbound = match &mut fwd_inbox {
-                        Some(inbox) => Some(inbox.recv(m, self.stage, "activation")?),
+                        Some(inbox) => {
+                            Some(inbox.recv(m, self.stage, "activation", self.watchdog)?)
+                        }
                         None => None,
                     };
                     let t0 = Instant::now();
@@ -638,7 +826,9 @@ impl StageWorker<'_> {
                         self.stage
                     );
                     let cotangent = match &mut bwd_inbox {
-                        Some(inbox) => Some(inbox.recv(m, self.stage, "cotangent")?),
+                        Some(inbox) => {
+                            Some(inbox.recv(m, self.stage, "cotangent", self.watchdog)?)
+                        }
                         None => None,
                     };
                     let stashed = if self.spec.stashes_activation() {
@@ -746,20 +936,22 @@ const STATIC_SLOT_BITS: u64 = 3;
 
 /// Send over a stage link, surfacing the failure instead of dropping it:
 /// a send only fails when the peer worker exited (bounded sends block,
-/// they don't fail), so the error is marked "channel closed" and the
-/// epoch-level triage reports the peer's own error as the root cause.
+/// they don't fail), so the error is a typed [`EngineError::LinkClosed`]
+/// and the epoch-level triage reports the peer's own error as the root
+/// cause.
 fn send_link(
     tx: &LinkTx,
     m: usize,
     t: HostTensor,
     stage: usize,
-    what: &str,
+    what: &'static str,
 ) -> Result<()> {
     tx.send((m, t)).map_err(|_| {
-        anyhow::anyhow!(
-            "stage {stage}: {what} channel closed sending micro-batch {m} \
-             (peer stage failed)"
-        )
+        anyhow::Error::new(EngineError::LinkClosed {
+            stage,
+            micro_batch: m,
+            what,
+        })
     })
 }
 
@@ -779,17 +971,45 @@ impl OrderedInbox {
         OrderedInbox { rx, pending: BTreeMap::new() }
     }
 
-    fn recv(&mut self, m: usize, stage: usize, what: &str) -> Result<HostTensor> {
+    /// Receive micro-batch `m`. With a watchdog, a wait longer than the
+    /// timeout fails with [`EngineError::StageTimeout`] — the upstream
+    /// peer stalled without closing the channel — instead of blocking
+    /// forever; the timeout window restarts on every arrival (progress
+    /// resets the watchdog).
+    fn recv(
+        &mut self,
+        m: usize,
+        stage: usize,
+        what: &'static str,
+        watchdog: Option<Duration>,
+    ) -> Result<HostTensor> {
         if let Some(t) = self.pending.remove(&m) {
             return Ok(t);
         }
+        let start = Instant::now();
         loop {
-            let (i, t) = self.rx.recv().map_err(|_| {
-                anyhow::anyhow!(
-                    "stage {stage}: {what} channel closed waiting for micro-batch {m} \
-                     (peer stage failed)"
-                )
-            })?;
+            let msg = match watchdog {
+                None => self.rx.recv().map_err(|_| EngineError::LinkClosed {
+                    stage,
+                    micro_batch: m,
+                    what,
+                }),
+                Some(d) => match self.rx.recv_timeout(d) {
+                    Ok(v) => Ok(v),
+                    Err(RecvTimeoutError::Timeout) => Err(EngineError::StageTimeout {
+                        stage,
+                        micro_batch: m,
+                        what,
+                        waited_s: start.elapsed().as_secs_f64(),
+                    }),
+                    Err(RecvTimeoutError::Disconnected) => Err(EngineError::LinkClosed {
+                        stage,
+                        micro_batch: m,
+                        what,
+                    }),
+                },
+            };
+            let (i, t) = msg?;
             if i == m {
                 return Ok(t);
             }
@@ -862,7 +1082,7 @@ mod tests {
         tx.send((2, HostTensor::scalar_f32(2.0))).unwrap();
         let mut inbox = OrderedInbox::new(rx);
         for m in 0..3 {
-            let t = inbox.recv(m, 0, "test").unwrap();
+            let t = inbox.recv(m, 0, "activation", None).unwrap();
             assert_eq!(t.scalar_value().unwrap(), m as f32);
         }
     }
@@ -872,9 +1092,83 @@ mod tests {
         let (tx, rx) = mpsc::channel::<Msg>();
         drop(tx);
         let mut inbox = OrderedInbox::new(rx);
-        let err = inbox.recv(0, 2, "activation").unwrap_err().to_string();
+        let err = inbox.recv(0, 2, "activation", None).unwrap_err().to_string();
         assert!(err.contains("channel closed"), "{err}");
         assert!(err.contains("stage 2"), "{err}");
+    }
+
+    #[test]
+    fn ordered_inbox_times_out_with_watchdog() {
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let mut inbox = OrderedInbox::new(rx);
+        let err = inbox
+            .recv(4, 1, "activation", Some(Duration::from_millis(40)))
+            .unwrap_err();
+        let ee = err.downcast_ref::<EngineError>().expect("typed EngineError");
+        assert!(
+            matches!(
+                ee,
+                EngineError::StageTimeout { stage: 1, micro_batch: 4, .. }
+            ),
+            "{ee:?}"
+        );
+        assert!(err.to_string().contains("timed out"), "{err}");
+        drop(tx);
+    }
+
+    #[test]
+    fn ordered_inbox_watchdog_resets_on_progress() {
+        // Arrivals of other micro-batches count as progress: each one
+        // restarts the timeout window, so a steady out-of-order stream
+        // never trips the watchdog.
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let feeder = std::thread::spawn(move || {
+            for i in 1..4usize {
+                std::thread::sleep(Duration::from_millis(20));
+                tx.send((i, HostTensor::scalar_f32(i as f32))).unwrap();
+            }
+            std::thread::sleep(Duration::from_millis(20));
+            tx.send((0, HostTensor::scalar_f32(0.0))).unwrap();
+        });
+        let mut inbox = OrderedInbox::new(rx);
+        let t = inbox
+            .recv(0, 0, "activation", Some(Duration::from_millis(250)))
+            .unwrap();
+        assert_eq!(t.scalar_value().unwrap(), 0.0);
+        feeder.join().unwrap();
+    }
+
+    #[test]
+    fn engine_error_classification() {
+        let timeout = EngineError::StageTimeout {
+            stage: 1,
+            micro_batch: 0,
+            what: "activation",
+            waited_s: 0.5,
+        };
+        let closed = EngineError::LinkClosed {
+            stage: 1,
+            micro_batch: 0,
+            what: "activation",
+        };
+        let injected = EngineError::InjectedFault { stage: 2, micro_batch: 1 };
+        assert!(!timeout.is_disconnect() && !timeout.is_transient());
+        assert!(closed.is_disconnect() && !closed.is_transient());
+        assert!(!injected.is_disconnect() && injected.is_transient());
+        // The triage in execute() keys on the typed chain surviving a
+        // context wrap.
+        let wrapped = anyhow::Error::new(injected.clone()).context("pipeline stage failed");
+        assert!(wrapped
+            .chain()
+            .any(|c| c.downcast_ref::<EngineError>().is_some_and(EngineError::is_transient)));
+    }
+
+    #[test]
+    fn panic_message_renders_common_payloads() {
+        let p = std::panic::catch_unwind(|| panic!("boom")).unwrap_err();
+        assert_eq!(panic_message(p.as_ref()), "boom");
+        let p = std::panic::catch_unwind(|| panic!("boom {}", 7)).unwrap_err();
+        assert_eq!(panic_message(p.as_ref()), "boom 7");
     }
 
     #[test]
@@ -911,7 +1205,7 @@ mod tests {
         });
         let mut inbox = OrderedInbox::new(rx);
         for m in 0..8usize {
-            let t = inbox.recv(m, 1, "activation").unwrap();
+            let t = inbox.recv(m, 1, "activation", None).unwrap();
             assert_eq!(t.scalar_value().unwrap(), m as f32);
         }
         producer.join().unwrap();

@@ -88,7 +88,7 @@ pub use chunkprep::{
     prepare_microbatches, prepare_microbatches_parallel, Microbatch,
 };
 pub use driver::{PipelineResult, PipelineTrainer};
-pub use engine::{BatchSink, EpochOutput, PipelineEngine, StageTiming};
+pub use engine::{BatchSink, EngineError, EpochOutput, PipelineEngine, StageTiming};
 pub use prep::{
     spawn_prefetcher, MicrobatchCache, MicrobatchPool, PrefetchMsg, PrepMode,
 };

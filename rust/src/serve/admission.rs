@@ -39,6 +39,15 @@
 //! replica) may therefore wait up to `max_defer + max_wait`; the fleet
 //! report counts served / deferred / shed separately so the trade is
 //! visible.
+//!
+//! Under capacity loss (a crashed or doomed replica — see
+//! [`super::fleet`]'s failover planner), [`AdmissionGate::for_capacity`]
+//! recomputes the floor for the surviving fleet: each survivor now
+//! absorbs `R / survivors` times its share, the effective service term
+//! scales accordingly, and the gate degrades *gracefully* — more
+//! deferrals, then more shedding, monotonically as capacity drops —
+//! instead of admitting a load the remaining replicas cannot serve
+//! within the SLO.
 
 /// The serving SLO: a p99 latency target plus how long the gate may
 /// hold a request back before giving up on it.
@@ -77,6 +86,33 @@ impl AdmissionGate {
         AdmissionGate {
             slo,
             floor_s: max_wait_s.max(0.0) + service_model_s.max(0.0),
+        }
+    }
+
+    /// The gate for a *degraded* fleet (graceful brown-out): with
+    /// `survivors` of `replicas` still serving, each survivor absorbs
+    /// `replicas / survivors` times its share of the offered load, so
+    /// the effective per-batch service estimate scales by that factor
+    /// and the p99 floor rises — the gate defers and sheds more instead
+    /// of silently blowing the SLO. Zero survivors ⇒ infinite floor ⇒
+    /// everything sheds.
+    pub fn for_capacity(
+        slo: SloPolicy,
+        max_wait_s: f64,
+        service_model_s: f64,
+        survivors: usize,
+        replicas: usize,
+    ) -> AdmissionGate {
+        if survivors == 0 {
+            return AdmissionGate {
+                slo,
+                floor_s: f64::INFINITY,
+            };
+        }
+        let scale = replicas.max(survivors) as f64 / survivors as f64;
+        AdmissionGate {
+            slo,
+            floor_s: max_wait_s.max(0.0) + service_model_s.max(0.0) * scale,
         }
     }
 
@@ -178,5 +214,76 @@ mod tests {
         let g = gate(200.0, 100.0);
         assert_eq!(g.decide(-5.0), g.decide(0.0));
         assert_eq!(g.predicted_p99_s(-5.0), g.predicted_p99_s(0.0));
+    }
+
+    #[test]
+    fn defer_exactly_at_the_max_defer_boundary() {
+        // slack = 120 ms; the defer window tops out at backlog =
+        // slack + max_defer = 220 ms. AT the boundary the gate still
+        // defers (by exactly max_defer); one microsecond past it sheds.
+        let g = gate(200.0, 100.0);
+        match g.decide(0.220) {
+            AdmissionDecision::Defer { delay_s } => {
+                assert!((delay_s - 0.100).abs() < 1e-12, "delay {delay_s}");
+            }
+            other => panic!("expected Defer at the boundary, got {other:?}"),
+        }
+        assert_eq!(g.decide(0.220 + 1e-6), AdmissionDecision::Shed);
+    }
+
+    #[test]
+    fn zero_surviving_capacity_sheds_everything() {
+        let slo = SloPolicy {
+            p99_target_s: 10.0, // generous: shedding must come from the
+            max_defer_s: 10.0,  // infinite floor, not a tight target
+        };
+        let g = AdmissionGate::for_capacity(slo, 0.050, 0.030, 0, 4);
+        assert!(g.slack_s().is_infinite() && g.slack_s() < 0.0);
+        assert_eq!(g.decide(0.0), AdmissionDecision::Shed);
+        assert_eq!(g.decide(100.0), AdmissionDecision::Shed);
+        // Full capacity under the same (generous) SLO admits fine.
+        let g = AdmissionGate::for_capacity(slo, 0.050, 0.030, 4, 4);
+        assert_eq!(g.decide(0.0), AdmissionDecision::Admit);
+    }
+
+    #[test]
+    fn severity_is_monotone_as_capacity_drops() {
+        // R = 4 fleet losing replicas one by one: for every fixed
+        // backlog the decision can only get more severe (admit → defer
+        // → shed), and the shed count over a backlog sweep never drops.
+        let slo = SloPolicy {
+            p99_target_s: 0.200,
+            max_defer_s: 0.100,
+        };
+        let severity = |g: &AdmissionGate, b: f64| match g.decide(b) {
+            AdmissionDecision::Admit => 0,
+            AdmissionDecision::Defer { .. } => 1,
+            AdmissionDecision::Shed => 2,
+        };
+        let backlogs: Vec<f64> = (0..400).map(|i| i as f64 * 0.001).collect();
+        let mut last_shed = 0usize;
+        for survivors in (0..=4usize).rev() {
+            let g = AdmissionGate::for_capacity(slo, 0.050, 0.030, survivors, 4);
+            if survivors < 4 {
+                let prev =
+                    AdmissionGate::for_capacity(slo, 0.050, 0.030, survivors + 1, 4);
+                for &b in &backlogs {
+                    assert!(
+                        severity(&g, b) >= severity(&prev, b),
+                        "severity regressed at backlog {b} with {survivors} survivors"
+                    );
+                }
+            }
+            let shed = backlogs
+                .iter()
+                .filter(|&&b| severity(&g, b) == 2)
+                .count();
+            assert!(
+                shed >= last_shed,
+                "shed count dropped: {shed} < {last_shed} at {survivors} survivors"
+            );
+            last_shed = shed;
+        }
+        assert_eq!(last_shed, backlogs.len(), "zero capacity sheds the sweep");
     }
 }

@@ -51,16 +51,46 @@
 //! replica, so each replica's sub-trace stays sorted and
 //! [`plan_batches`] applies unchanged.
 //!
+//! ## Failover and brown-out
+//!
+//! [`plan_fleet_faults`] extends the planning phase for a seeded
+//! [`FaultPlan`](crate::faults::FaultPlan): replicas that will crash
+//! mid-trace or be doomed by a watchdog-tripping stall are identified
+//! *at plan time*, and their unserved requests re-enter the virtual
+//! walk — retried one modeled batch after their original effective
+//! arrival ([`FAILOVER_BACKOFF_BATCHES`]) and routed over the healthy
+//! survivors by the same JSQ/round-robin machinery, gated by
+//! [`AdmissionGate::for_capacity`] so a degraded fleet defers and
+//! sheds more instead of silently blowing the SLO (graceful
+//! brown-out). Execution then simply runs the final plan; a doomed
+//! replica still executes its *base* sub-trace — so the injected stall
+//! really trips the downstream watchdog and the resulting
+//! `StageTimeout` is surfaced in [`FleetReport::replica_errors`] — but
+//! its output is discarded. Transient injected faults are absorbed by
+//! a bounded per-replica retry loop
+//! ([`MAX_REPLICA_RETRIES`](crate::faults::MAX_REPLICA_RETRIES)), and
+//! one replica's failure never poisons the fleet join: survivors'
+//! results aggregate, the failure is reported per replica.
+//!
+//! **Fault invariance:** a served request's logits depend only on
+//! (params, node), so rerouting and retrying move *where and when* a
+//! request is served, never what it computes — every request that
+//! completes returns logits bit-identical to the fault-free path
+//! (`rust/tests/integration_faults.rs` pins this).
+//!
 //! [`run_indexed`]: crate::util::par::run_indexed
 //! [`plan_batches`]: super::batch::plan_batches
 //! [`MicrobatchCache`]: crate::pipeline::MicrobatchCache
 
 use std::fmt::Write as _;
+use std::sync::Arc;
 
-use anyhow::{Context, Result};
+use anyhow::Result;
 
 use crate::data::Dataset;
+use crate::faults::{FaultPlan, StageFaults, MAX_REPLICA_RETRIES};
 use crate::metrics::{fmt_seconds, Timer};
+use crate::pipeline::EngineError;
 use crate::runtime::{Engine, HostTensor};
 use crate::util::par::run_indexed;
 
@@ -153,7 +183,10 @@ pub struct FleetPlan {
 
 impl FleetPlan {
     /// Per-replica (original trace index, effective-arrival request)
-    /// sub-traces, each sorted by effective arrival.
+    /// sub-traces, each sorted by effective arrival. The sort is
+    /// stable, so on a fault-free plan (already FIFO per replica) it
+    /// is the identity; a failover plan needs it because a rerouted
+    /// request keeps its small trace index but lands late.
     pub fn sub_traces(
         &self,
         trace: &[Request],
@@ -170,6 +203,9 @@ impl FleetPlan {
                     },
                 ));
             }
+        }
+        for sub in &mut subs {
+            sub.sort_by(|a, b| a.1.arrival_s.total_cmp(&b.1.arrival_s));
         }
         subs
     }
@@ -247,6 +283,189 @@ pub fn plan_fleet(
     FleetPlan { dispositions, served, deferred, shed }
 }
 
+/// Retry backoff for a failed-over request, in modeled batches: its
+/// retry arrival is its original effective arrival plus this many
+/// `service_model_s` (the virtual cost of detecting the failure and
+/// re-submitting).
+pub const FAILOVER_BACKOFF_BATCHES: f64 = 1.0;
+
+/// A [`plan_fleet`] extended with deterministic failover: which
+/// replicas die, and where their orphaned requests went.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FleetFaultPlan {
+    /// The final executable plan, failover applied. Equals `base` when
+    /// no routing-visible fault fires.
+    pub plan: FleetPlan,
+    /// The fault-free plan the failover pass started from.
+    pub base: FleetPlan,
+    /// Per replica: the local crash point, if it crashes (it serves
+    /// only its first `k` routed requests).
+    pub crashed: Vec<Option<usize>>,
+    /// Per replica: true when a watchdog-tripping stall means it never
+    /// completes its run; its whole sub-trace fails over.
+    pub doomed: Vec<bool>,
+    /// Orphaned requests successfully rerouted to a survivor.
+    pub failover: usize,
+    /// Orphaned requests the degraded (brown-out) gate shed.
+    pub degraded: usize,
+}
+
+/// Plan routing/admission under a chaos plan: run the fault-free
+/// [`plan_fleet`] walk, then reroute every request orphaned by a crash
+/// or a stall-doomed replica over the healthy survivors, continuing
+/// the survivors' virtual-queue state and gating with the degraded
+/// [`AdmissionGate::for_capacity`]. Pure — bit-reproducible from
+/// `(trace, policy, fleet, fault plan, watchdog)`.
+pub fn plan_fleet_faults(
+    trace: &[Request],
+    policy: &BatchPolicy,
+    fleet: &FleetPolicy,
+    faults: Option<&FaultPlan>,
+    watchdog_s: f64,
+) -> FleetFaultPlan {
+    let r_count = fleet.replicas;
+    let base = plan_fleet(trace, policy, fleet);
+    let mut crashed: Vec<Option<usize>> = vec![None; r_count];
+    let mut doomed = vec![false; r_count];
+    if let Some(fp) = faults {
+        for r in 0..r_count {
+            crashed[r] = fp.crash_point(r);
+            if fp.stall_doom(watchdog_s) == Some(r) {
+                doomed[r] = true;
+            }
+        }
+    }
+    if crashed.iter().all(Option::is_none) && !doomed.contains(&true) {
+        return FleetFaultPlan {
+            plan: base.clone(),
+            base,
+            crashed,
+            doomed,
+            failover: 0,
+            degraded: 0,
+        };
+    }
+    let healthy: Vec<usize> = (0..r_count)
+        .filter(|&r| crashed[r].is_none() && !doomed[r])
+        .collect();
+    let svc_req = fleet.service_model_s.max(0.0) / policy.max_batch.max(1) as f64;
+    // Recover the virtual-queue state plan_fleet left each replica in
+    // by replaying the base dispositions.
+    let mut free_at = vec![0.0f64; r_count];
+    let mut last_eff = vec![0.0f64; r_count];
+    for (i, d) in base.dispositions.iter().enumerate() {
+        if let Disposition::Served { replica, deferred_s } = *d {
+            let eff = trace[i].arrival_s + deferred_s;
+            last_eff[replica] = eff;
+            free_at[replica] = free_at[replica].max(eff) + svc_req;
+        }
+    }
+    // Orphans: the crash victim's unserved suffix plus every doomed
+    // replica's full sub-trace, retried in trace order.
+    let base_subs = base.sub_traces(trace, r_count);
+    let mut orphans: Vec<(usize, f64)> = Vec::new();
+    for r in 0..r_count {
+        let cut = if doomed[r] {
+            0
+        } else if let Some(k) = crashed[r] {
+            k
+        } else {
+            continue;
+        };
+        for &(global, req) in base_subs[r].iter().skip(cut.min(base_subs[r].len())) {
+            orphans.push((global, req.arrival_s));
+        }
+    }
+    orphans.sort_by_key(|&(global, _)| global);
+    // The brown-out gate: the p99 floor recomputed for the surviving
+    // capacity, so orphans shed rather than overload the survivors.
+    let gate = fleet.slo.map(|slo| {
+        AdmissionGate::for_capacity(
+            slo,
+            policy.max_wait_s,
+            fleet.service_model_s,
+            healthy.len(),
+            r_count,
+        )
+    });
+    let backoff_s = fleet.service_model_s.max(0.0) * FAILOVER_BACKOFF_BATCHES;
+    let mut plan = base.clone();
+    let (mut failover, mut degraded) = (0usize, 0usize);
+    let mut rr_next = 0usize;
+    for (global, base_eff) in orphans {
+        let t = base_eff + backoff_s;
+        if healthy.is_empty() {
+            plan.dispositions[global] = Disposition::Shed;
+            degraded += 1;
+            continue;
+        }
+        let r = match fleet.router {
+            RouterKind::RoundRobin => {
+                let r = healthy[rr_next % healthy.len()];
+                rr_next = (rr_next + 1) % healthy.len();
+                r
+            }
+            RouterKind::Jsq => {
+                let key = |r: usize| free_at[r].max(t);
+                let mut best = rr_next % healthy.len();
+                for step in 1..healthy.len() {
+                    let cand = (rr_next + step) % healthy.len();
+                    if key(healthy[cand]) < key(healthy[best]) {
+                        best = cand;
+                    }
+                }
+                rr_next = (best + 1) % healthy.len();
+                healthy[best]
+            }
+        };
+        let backlog = (free_at[r] - t).max(0.0);
+        let decision = match &gate {
+            None => AdmissionDecision::Admit,
+            Some(g) => g.decide(backlog),
+        };
+        let eff = match decision {
+            AdmissionDecision::Admit => t,
+            AdmissionDecision::Defer { delay_s } => t + delay_s,
+            AdmissionDecision::Shed => {
+                plan.dispositions[global] = Disposition::Shed;
+                degraded += 1;
+                continue;
+            }
+        };
+        let eff = eff.max(last_eff[r]);
+        last_eff[r] = eff;
+        free_at[r] = free_at[r].max(eff) + svc_req;
+        plan.dispositions[global] = Disposition::Served {
+            replica: r,
+            deferred_s: eff - trace[global].arrival_s,
+        };
+        failover += 1;
+    }
+    // Recount from the final dispositions.
+    plan.served = 0;
+    plan.deferred = 0;
+    plan.shed = 0;
+    for d in &plan.dispositions {
+        match d {
+            Disposition::Served { deferred_s, .. } => {
+                plan.served += 1;
+                if *deferred_s > 0.0 {
+                    plan.deferred += 1;
+                }
+            }
+            Disposition::Shed => plan.shed += 1,
+        }
+    }
+    FleetFaultPlan {
+        plan,
+        base,
+        crashed,
+        doomed,
+        failover,
+        degraded,
+    }
+}
+
 /// The fleet run's aggregate report: what `gnn-pipe serve --replicas R`
 /// prints and `bench serve-fleet` compares against
 /// `Scenarios::fleet_latency`.
@@ -286,6 +505,18 @@ pub struct FleetReport {
     /// Mean per-batch forward seconds per stage, averaged over the
     /// replicas that served traffic (feeds `Scenarios::fleet_latency`).
     pub stage_fwd_means_s: Vec<f64>,
+    /// Orphaned requests rerouted to a survivor (0 without faults).
+    pub failover: usize,
+    /// Orphaned requests the degraded brown-out gate shed.
+    pub degraded: usize,
+    /// Transient-fault retries absorbed across all replicas.
+    pub retries: usize,
+    /// Requests planned onto a replica that then failed *unexpectedly*
+    /// (not a planned crash/doom) — their logits rows stay empty.
+    pub failed: usize,
+    /// Per replica: the rendered error chain, if its run failed. A
+    /// doomed replica's expected `StageTimeout` shows up here too.
+    pub replica_errors: Vec<Option<String>>,
 }
 
 impl FleetReport {
@@ -324,6 +555,19 @@ impl FleetReport {
                 .collect::<Vec<_>>()
                 .join(", "),
         );
+        if self.failover + self.degraded + self.retries + self.failed > 0 {
+            let _ = writeln!(
+                s,
+                "faults: {} failed over, {} shed (brown-out), {} transient \
+                 retries, {} failed unexpectedly",
+                self.failover, self.degraded, self.retries, self.failed,
+            );
+        }
+        for (r, e) in self.replica_errors.iter().enumerate() {
+            if let Some(e) = e {
+                let _ = writeln!(s, "  replica {r} error: {e}");
+            }
+        }
         let _ = writeln!(s, "{}", self.queue.row("queue"));
         let _ = writeln!(s, "{}", self.execute.row("execute"));
         let _ = writeln!(s, "{}", self.total.row("TOTAL"));
@@ -339,7 +583,10 @@ impl FleetReport {
 #[derive(Debug)]
 pub struct FleetOutput {
     pub report: FleetReport,
+    /// The final executed plan (`fault_plan.plan`).
     pub plan: FleetPlan,
+    /// The failover picture: base plan, dead replicas, orphan fates.
+    pub fault_plan: FleetFaultPlan,
     /// Served log-prob row per request, indexed like the trace; empty
     /// for shed requests.
     pub request_logits: Vec<Vec<f32>>,
@@ -371,8 +618,19 @@ impl<'e> FleetSession<'e> {
         ServeSession::artifacts_available(engine, dataset, backend)
     }
 
+    /// Stage-link watchdog applied to every replica pipeline, seconds.
+    pub fn set_watchdog_s(&mut self, watchdog_s: f64) {
+        self.session.watchdog_s = watchdog_s;
+    }
+
+    pub fn watchdog_s(&self) -> f64 {
+        self.session.watchdog_s
+    }
+
     /// Plan on the virtual timeline, then replay the admitted
     /// sub-traces concurrently (thread per replica) and merge.
+    /// Equivalent to [`FleetSession::run_with_faults`] with no chaos
+    /// plan.
     pub fn run(
         &self,
         params: &[HostTensor],
@@ -380,28 +638,99 @@ impl<'e> FleetSession<'e> {
         policy: &BatchPolicy,
         fleet: &FleetPolicy,
     ) -> Result<FleetOutput> {
+        self.run_with_faults(params, trace, policy, fleet, None)
+    }
+
+    /// [`FleetSession::run`] under a chaos plan: plan with failover
+    /// ([`plan_fleet_faults`]), execute with per-replica injected
+    /// execution faults and a bounded transient-retry loop, and
+    /// aggregate the survivors — one replica's failure is surfaced in
+    /// [`FleetReport::replica_errors`], never a fleet-wide error.
+    /// Every request that completes returns logits bit-identical to
+    /// the fault-free path (see the module docs).
+    pub fn run_with_faults(
+        &self,
+        params: &[HostTensor],
+        trace: &[Request],
+        policy: &BatchPolicy,
+        fleet: &FleetPolicy,
+        faults: Option<&FaultPlan>,
+    ) -> Result<FleetOutput> {
         anyhow::ensure!(!trace.is_empty(), "cannot serve an empty trace");
-        let plan = plan_fleet(trace, policy, fleet);
+        let fault_plan =
+            plan_fleet_faults(trace, policy, fleet, faults, self.session.watchdog_s);
+        let plan = fault_plan.plan.clone();
         let subs = plan.sub_traces(trace, fleet.replicas);
+        // A doomed replica executes its BASE sub-trace — the stall must
+        // really run and trip the downstream watchdog — but its output
+        // is discarded (its requests were failed over at plan time).
+        let base_subs = fault_plan.base.sub_traces(trace, fleet.replicas);
+        let tables: Vec<Option<Arc<StageFaults>>> = (0..fleet.replicas)
+            .map(|r| {
+                faults
+                    .and_then(|f| f.stage_faults(r, fleet.service_model_s))
+                    .map(Arc::new)
+            })
+            .collect();
 
         let phase = Timer::start();
-        let results: Vec<Result<Option<ServeOutput>>> =
+        let results: Vec<(Option<ServeOutput>, Option<String>, usize)> =
             run_indexed(fleet.replicas, fleet.replicas, |r| {
-                if subs[r].is_empty() {
-                    return Ok(None);
+                let doomed = fault_plan.doomed[r];
+                let list = if doomed { &base_subs[r] } else { &subs[r] };
+                if list.is_empty() {
+                    return (None, None, 0);
                 }
-                let sub: Vec<Request> =
-                    subs[r].iter().map(|&(_, req)| req).collect();
-                self.session
-                    .run(params, &sub, policy)
-                    .with_context(|| format!("replica {r}"))
-                    .map(Some)
+                let sub: Vec<Request> = list.iter().map(|&(_, req)| req).collect();
+                let mut retries = 0usize;
+                loop {
+                    match self.session.run_faulted(
+                        params,
+                        &sub,
+                        policy,
+                        tables[r].clone(),
+                    ) {
+                        Ok(_) if doomed => {
+                            // Defensive: planning doomed it, so the
+                            // watchdog should have fired. Discard.
+                            return (
+                                None,
+                                Some("doomed replica completed unexpectedly".into()),
+                                retries,
+                            );
+                        }
+                        Ok(out) => return (Some(out), None, retries),
+                        Err(e) => {
+                            let transient = e.chain().any(|c| {
+                                c.downcast_ref::<EngineError>()
+                                    .is_some_and(EngineError::is_transient)
+                            });
+                            if transient && !doomed && retries < MAX_REPLICA_RETRIES {
+                                retries += 1;
+                                continue;
+                            }
+                            let e = e.context(format!("replica {r}"));
+                            return (None, Some(format!("{e:#}")), retries);
+                        }
+                    }
+                }
             });
         let phase_wall_s = phase.secs();
 
         let mut outs: Vec<Option<ServeOutput>> = Vec::with_capacity(fleet.replicas);
-        for res in results {
-            outs.push(res?);
+        let mut replica_errors: Vec<Option<String>> = Vec::with_capacity(fleet.replicas);
+        let mut retries_total = 0usize;
+        let mut failed = 0usize;
+        for (r, (out, err, retries)) in results.into_iter().enumerate() {
+            retries_total += retries;
+            if out.is_none() && err.is_some() {
+                // Requests the final plan placed here went unserved.
+                // Planned dooms have empty final sub-traces, so this
+                // only counts unexpected failures.
+                failed += subs[r].len();
+            }
+            outs.push(out);
+            replica_errors.push(err);
         }
 
         // Merge back into trace order, correcting queue spans to the
@@ -482,10 +811,16 @@ impl<'e> FleetSession<'e> {
             execute: summarize(|l| l.execute_s),
             total: summarize(|l| l.total_s()),
             stage_fwd_means_s,
+            failover: fault_plan.failover,
+            degraded: fault_plan.degraded,
+            retries: retries_total,
+            failed,
+            replica_errors,
         };
         Ok(FleetOutput {
             report,
             plan,
+            fault_plan,
             request_logits,
             latencies,
             replica_orders,
@@ -633,6 +968,115 @@ mod tests {
             ..tight
         };
         assert_eq!(plan_fleet(&trace, &policy(), &loose).shed, 0);
+    }
+
+    use crate::faults::FaultScenario;
+
+    fn fleet(replicas: usize, slo: Option<SloPolicy>) -> FleetPolicy {
+        FleetPolicy {
+            replicas,
+            router: RouterKind::Jsq,
+            slo,
+            service_model_s: 0.03,
+        }
+    }
+
+    #[test]
+    fn fault_free_fault_plan_is_the_base_plan() {
+        let trace = trace(150.0, 600, 9);
+        let f3 = fleet(3, None);
+        let none = FaultPlan::generate(FaultScenario::None, 42, 3, 4, 600);
+        for faults in [None, Some(&none)] {
+            let fp = plan_fleet_faults(&trace, &policy(), &f3, faults, 10.0);
+            assert_eq!(fp.plan, fp.base);
+            assert_eq!(fp.plan, plan_fleet(&trace, &policy(), &f3));
+            assert_eq!((fp.failover, fp.degraded), (0, 0));
+            assert!(fp.crashed.iter().all(Option::is_none));
+            assert!(!fp.doomed.contains(&true));
+        }
+        // Slow/flaky scenarios are execution-only: routing unchanged.
+        let slow = FaultPlan::generate(FaultScenario::Slow, 42, 3, 4, 600);
+        let fp = plan_fleet_faults(&trace, &policy(), &f3, Some(&slow), 10.0);
+        assert_eq!(fp.plan, fp.base);
+    }
+
+    #[test]
+    fn crash_reroutes_the_orphaned_suffix_deterministically() {
+        let trace = trace(150.0, 600, 9);
+        let f3 = fleet(3, None);
+        let chaos = FaultPlan::generate(FaultScenario::Crash, 7, 3, 4, 600);
+        let victim = (0..3).find(|&r| chaos.crash_point(r).is_some()).unwrap();
+        let k = chaos.crash_point(victim).unwrap();
+        let a = plan_fleet_faults(&trace, &policy(), &f3, Some(&chaos), 10.0);
+        let b = plan_fleet_faults(&trace, &policy(), &f3, Some(&chaos), 10.0);
+        assert_eq!(a, b, "failover planning must be deterministic");
+        assert_eq!(a.crashed[victim], Some(k));
+        // Conservation: every request is either served or shed.
+        assert_eq!(a.plan.served + a.plan.shed, trace.len());
+        // No gate: every orphan fails over, none shed.
+        let base_subs = a.base.sub_traces(&trace, 3);
+        assert_eq!(a.failover, base_subs[victim].len() - k);
+        assert_eq!(a.degraded, 0);
+        assert_eq!(a.plan.served, trace.len());
+        // The victim's final sub-trace is exactly its base prefix.
+        let final_subs = a.plan.sub_traces(&trace, 3);
+        assert_eq!(final_subs[victim].len(), k);
+        assert_eq!(final_subs[victim][..], base_subs[victim][..k]);
+        // Every sub-trace stays sorted by effective arrival.
+        for sub in &final_subs {
+            for w in sub.windows(2) {
+                assert!(w[0].1.arrival_s <= w[1].1.arrival_s);
+            }
+        }
+    }
+
+    #[test]
+    fn stall_doom_fails_over_the_whole_sub_trace() {
+        let trace = trace(150.0, 400, 13);
+        let f2 = fleet(2, None);
+        let stall = FaultPlan::generate(FaultScenario::Stall, 5, 2, 4, 400);
+        // Stall durations are 30-60 s: a 10 s watchdog dooms replica 0.
+        let fp = plan_fleet_faults(&trace, &policy(), &f2, Some(&stall), 10.0);
+        assert!(fp.doomed[0]);
+        let base_subs = fp.base.sub_traces(&trace, 2);
+        let final_subs = fp.plan.sub_traces(&trace, 2);
+        assert!(final_subs[0].is_empty(), "doomed replica keeps nothing");
+        assert_eq!(fp.failover, base_subs[0].len());
+        assert_eq!(fp.plan.served, trace.len());
+        // A watchdog longer than the stall dooms nobody.
+        let fp = plan_fleet_faults(&trace, &policy(), &f2, Some(&stall), 1e9);
+        assert!(!fp.doomed[0]);
+        assert_eq!(fp.plan, fp.base);
+    }
+
+    #[test]
+    fn brown_out_sheds_at_least_as_much_as_the_healthy_gate() {
+        let slo = SloPolicy { p99_target_s: 0.25, max_defer_s: 0.1 };
+        let trace = trace(400.0, 2000, 17);
+        let f3 = fleet(3, Some(slo));
+        let chaos = FaultPlan::generate(FaultScenario::Crash, 7, 3, 4, 2000);
+        let fp = plan_fleet_faults(&trace, &policy(), &f3, Some(&chaos), 10.0);
+        assert!(
+            fp.plan.shed >= fp.base.shed,
+            "losing a replica cannot shed less: {} < {}",
+            fp.plan.shed,
+            fp.base.shed
+        );
+        assert_eq!(fp.plan.served + fp.plan.shed, trace.len());
+        assert!(fp.failover + fp.degraded > 0, "orphans must exist");
+    }
+
+    #[test]
+    fn no_survivors_sheds_every_orphan() {
+        let trace = trace(100.0, 200, 21);
+        let f1 = fleet(1, None);
+        let crash = FaultPlan::generate(FaultScenario::Crash, 3, 1, 4, 200);
+        let k = crash.crash_point(0).unwrap();
+        let fp = plan_fleet_faults(&trace, &policy(), &f1, Some(&crash), 10.0);
+        assert_eq!(fp.failover, 0, "nobody left to fail over to");
+        assert_eq!(fp.degraded, trace.len() - k);
+        assert_eq!(fp.plan.served, k);
+        assert_eq!(fp.plan.served + fp.plan.shed, trace.len());
     }
 
     #[test]

@@ -47,6 +47,16 @@
 //! and `Scenarios::fleet_latency` prices the fleet (per-replica M/D/1
 //! plus a routing-imbalance term) for `bench serve-fleet`'s
 //! measured-vs-model columns.
+//!
+//! The fleet also survives **injected faults** (`--faults`, seeded
+//! chaos plans from [`crate::faults`]): crashed or stall-doomed
+//! replicas have their orphaned requests failed over to survivors at
+//! plan time ([`fleet::plan_fleet_faults`]), transient execution
+//! errors are absorbed by a bounded retry loop, stage links carry a
+//! watchdog so a stalled peer yields a typed timeout instead of a
+//! hang, and [`AdmissionGate::for_capacity`] brown-outs the degraded
+//! fleet gracefully. The logits of every request that completes are
+//! bit-identical to the fault-free path.
 
 pub mod admission;
 pub mod batch;
@@ -58,9 +68,10 @@ pub mod trace;
 pub use admission::{AdmissionDecision, AdmissionGate, SloPolicy};
 pub use batch::{plan_batches, BatchPolicy, ServeBatch};
 pub use fleet::{
-    plan_fleet, Disposition, FleetOutput, FleetPlan, FleetPolicy,
-    FleetReport, FleetSession, RouterKind,
+    plan_fleet, plan_fleet_faults, Disposition, FleetFaultPlan, FleetOutput,
+    FleetPlan, FleetPolicy, FleetReport, FleetSession, RouterKind,
+    FAILOVER_BACKOFF_BATCHES,
 };
 pub use latency::{LatencySummary, RequestLatency, ServeReport};
-pub use server::{ServeOutput, ServeSession};
+pub use server::{ServeOutput, ServeSession, DEFAULT_WATCHDOG_S};
 pub use trace::{generate_trace, poisson_trace, Request, TraceSpec, TrafficShape};

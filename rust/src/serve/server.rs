@@ -44,6 +44,7 @@ use anyhow::{Context, Result};
 
 use crate::batching::{Chunker, SequentialChunker};
 use crate::data::Dataset;
+use crate::faults::StageFaults;
 use crate::metrics::Timer;
 use crate::pipeline::{
     MicrobatchCache, PipelineEngine, PipelineSpec, ServeStream,
@@ -86,6 +87,12 @@ pub struct ServeOutput {
     pub completion_order: Vec<usize>,
 }
 
+/// Default stage-link watchdog for serving pipelines: per-stage work is
+/// milliseconds, so a multi-second silent link means the upstream stage
+/// stalled — fail with a diagnosable `StageTimeout` instead of hanging
+/// the replica forever. Generous enough for slow CI machines.
+pub const DEFAULT_WATCHDOG_S: f64 = 10.0;
+
 /// A bound serving session: dataset + backend + the shared prep cache.
 pub struct ServeSession<'e> {
     engine: &'e Engine,
@@ -94,6 +101,12 @@ pub struct ServeSession<'e> {
     /// Shared with training so a bench session builds the full-graph
     /// micro-batch once across serve and train runs on one plan.
     pub prep_cache: Arc<MicrobatchCache>,
+    /// Stage-link watchdog threaded into every pipeline this session
+    /// builds ([`DEFAULT_WATCHDOG_S`]; tests shrink it to keep stall
+    /// scenarios fast). Also the threshold deciding whether an injected
+    /// `StageStall` dooms its replica at plan time — see
+    /// `serve::fleet::plan_fleet_faults`.
+    pub watchdog_s: f64,
 }
 
 impl<'e> ServeSession<'e> {
@@ -103,6 +116,7 @@ impl<'e> ServeSession<'e> {
             ds,
             backend: backend.to_string(),
             prep_cache: Arc::new(MicrobatchCache::new()),
+            watchdog_s: DEFAULT_WATCHDOG_S,
         }
     }
 
@@ -126,6 +140,24 @@ impl<'e> ServeSession<'e> {
         params: &[HostTensor],
         trace: &[Request],
         policy: &BatchPolicy,
+    ) -> Result<ServeOutput> {
+        self.run_faulted(params, trace, policy, None)
+    }
+
+    /// [`run`] with an injected execution-fault table (see
+    /// [`crate::faults`]): stage workers consult `faults` before every
+    /// forward batch. Faults perturb *timing and errors only* — when a
+    /// faulted run completes, its logits are bit-identical to the
+    /// fault-free run, because a served row depends only on
+    /// `(params, node)`.
+    ///
+    /// [`run`]: ServeSession::run
+    pub fn run_faulted(
+        &self,
+        params: &[HostTensor],
+        trace: &[Request],
+        policy: &BatchPolicy,
+        faults: Option<Arc<StageFaults>>,
     ) -> Result<ServeOutput> {
         anyhow::ensure!(!trace.is_empty(), "cannot serve an empty trace");
         let n = self.ds.profile.nodes;
@@ -169,6 +201,8 @@ impl<'e> ServeSession<'e> {
                   artifact dirs lack the s*_eval_fwd artifacts; re-run \
                   `make artifacts`)")?;
         pipe.device_resident = true;
+        pipe.watchdog_s = Some(self.watchdog_s.max(1e-3));
+        pipe.faults = faults;
         self.engine.warm_up(&pipe.artifact_names)?;
         let setup_s = setup.secs();
 

@@ -26,6 +26,6 @@ pub use pipeline_sim::{
     simulate_pipeline, simulate_pipeline_with, PipelineSimInput, PipelineSimReport,
 };
 pub use scenarios::{
-    host_concurrency_speedup, FleetLatencyModel, Scenarios, ServeLatencyModel,
-    SimEpoch,
+    host_concurrency_speedup, FleetAvailabilityModel, FleetLatencyModel,
+    Scenarios, ServeLatencyModel, SimEpoch,
 };

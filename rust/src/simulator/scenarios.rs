@@ -135,6 +135,31 @@ pub struct FleetLatencyModel {
     pub throughput_rps: f64,
 }
 
+/// Closed-form availability projection for a fleet losing replicas —
+/// what [`Scenarios::fleet_availability`] returns and
+/// `gnn-pipe serve --faults` / `bench serve-faults` print next to the
+/// measured completion rate.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FleetAvailabilityModel {
+    pub replicas: usize,
+    /// Replicas lost for good during the run (crash or stall doom).
+    pub crashed: usize,
+    /// Fraction of the run spent at degraded capacity: a crash at
+    /// `crash_frac` of the victim's share leaves `1 − crash_frac` of
+    /// the trace to the survivors (1.0 for a stall doom, 0 when
+    /// nothing dies).
+    pub degraded_frac: f64,
+    /// `R ×` per-replica capacity: the healthy fleet's request rate.
+    pub full_capacity_rps: f64,
+    /// Time-weighted capacity over the run: full before the failure,
+    /// `(R − crashed) ×` per-replica after.
+    pub capacity_rps: f64,
+    /// Expected fraction of offered requests the degraded fleet can
+    /// serve: `min(1, capacity / rate)` — the model `FleetReport`'s
+    /// served rate is compared against under faults.
+    pub expected_completion: f64,
+}
+
 pub struct Scenarios<'m> {
     pub manifest: &'m Manifest,
     pub cal: Calibration,
@@ -512,6 +537,55 @@ impl<'m> Scenarios<'m> {
                 + per.residence_s,
             capacity_rps,
             throughput_rps: if stable { rate_hz } else { capacity_rps },
+        }
+    }
+
+    /// Closed-form availability of a fleet under replica loss: price
+    /// the run as two regimes — full capacity until the failure point,
+    /// `R − crashed` replicas after — and report the expected
+    /// completion rate `min(1, capacity / rate)`.
+    ///
+    /// `crashed` is how many replicas die during the run;
+    /// `crash_frac` is the mean fraction of its share a dying replica
+    /// served first (`FaultPlan::capacity_summary` produces both: a
+    /// mid-trace crash gives ~0.25–0.75, a stall doom gives 0 — the
+    /// victim never completes anything). Like
+    /// [`Self::fleet_latency`], a pure associated function.
+    ///
+    /// [`FaultPlan::capacity_summary`]: crate::faults::FaultPlan::capacity_summary
+    pub fn fleet_availability(
+        stage_s: &[f64],
+        rate_hz: f64,
+        replicas: usize,
+        max_batch: usize,
+        max_wait_s: f64,
+        crashed: usize,
+        crash_frac: f64,
+    ) -> FleetAvailabilityModel {
+        let r = replicas.max(1);
+        let crashed = crashed.min(r);
+        let per =
+            Self::serve_latency(stage_s, rate_hz / r as f64, max_batch, max_wait_s);
+        let full_capacity_rps = r as f64 * per.capacity_rps;
+        let degraded_frac = if crashed == 0 {
+            0.0
+        } else {
+            (1.0 - crash_frac).clamp(0.0, 1.0)
+        };
+        let capacity_rps = full_capacity_rps * (1.0 - degraded_frac)
+            + (r - crashed) as f64 * per.capacity_rps * degraded_frac;
+        let expected_completion = if rate_hz <= 0.0 {
+            1.0
+        } else {
+            (capacity_rps / rate_hz).min(1.0)
+        };
+        FleetAvailabilityModel {
+            replicas: r,
+            crashed,
+            degraded_frac,
+            full_capacity_rps,
+            capacity_rps,
+            expected_completion,
         }
     }
 
@@ -940,6 +1014,46 @@ mod tests {
         assert_eq!(m.imbalance_s, 0.0, "imbalance is moot past collapse");
         assert!(m.p99_s.is_infinite());
         assert!((m.throughput_rps - m.capacity_rps).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fleet_availability_no_loss_is_full_capacity() {
+        let stages = [0.01, 0.05, 0.02];
+        let m = Scenarios::fleet_availability(&stages, 50.0, 4, 8, 0.1, 0, 1.0);
+        assert_eq!(m.crashed, 0);
+        assert_eq!(m.degraded_frac, 0.0);
+        assert!((m.capacity_rps - m.full_capacity_rps).abs() < 1e-9);
+        assert!((m.expected_completion - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fleet_availability_degrades_monotonically() {
+        let stages = [0.05];
+        // Offer exactly the healthy fleet's capacity: any loss bites.
+        let full = Scenarios::fleet_availability(&stages, 1.0, 4, 4, 10.0, 0, 1.0)
+            .full_capacity_rps;
+        let mut last = f64::INFINITY;
+        for crashed in 0..=4usize {
+            let m = Scenarios::fleet_availability(
+                &stages, full, 4, 4, 10.0, crashed, 0.0,
+            );
+            assert!(
+                m.expected_completion <= last + 1e-12,
+                "completion rose at {crashed} crashed"
+            );
+            assert!(m.expected_completion >= 0.0 && m.expected_completion <= 1.0);
+            last = m.expected_completion;
+        }
+        assert!(last < 1.0, "losing the whole fleet must hurt");
+        // An earlier crash (smaller served fraction) degrades more.
+        let early = Scenarios::fleet_availability(&stages, full, 4, 4, 10.0, 1, 0.1);
+        let late = Scenarios::fleet_availability(&stages, full, 4, 4, 10.0, 1, 0.9);
+        assert!(early.capacity_rps < late.capacity_rps);
+        assert!(early.expected_completion <= late.expected_completion + 1e-12);
+        // A stall doom (frac 0) is the worst single-replica case.
+        let doom = Scenarios::fleet_availability(&stages, full, 4, 4, 10.0, 1, 0.0);
+        assert!((doom.degraded_frac - 1.0).abs() < 1e-12);
+        assert!(doom.capacity_rps <= early.capacity_rps + 1e-12);
     }
 
     #[test]

@@ -1,0 +1,334 @@
+//! Chaos / failover invariants.
+//!
+//! Host-side tests (always run, no artifacts needed) pin the seeded
+//! fault plans and the failover planner: plans are pure functions of
+//! `(scenario, seed)`, and `plan_fleet_faults` conserves every request
+//! (served or shed, never lost) across every scenario.
+//!
+//! End-to-end tests (skipped gracefully when `make artifacts` has not
+//! run) pin the three acceptance contracts from the robustness issue:
+//!
+//! * **chaos determinism** — the same fault seed replays to a
+//!   bit-identical fleet report: same failover plan, same served
+//!   logits, same per-replica completion orders, same counters;
+//! * **fault invariance** — a crash with survivors loses nothing: every
+//!   request is still served, its logits bit-identical to the fused
+//!   `full_eval` of the same nodes (and hence to the fault-free run) —
+//!   rerouting changes *where* a request runs, never *what* it
+//!   computes;
+//! * **stall liveness** — a stage stall trips the link watchdog and
+//!   surfaces as a replica error while the fleet fails the victim's
+//!   requests over; it must never deadlock the run.
+
+use std::time::{Duration, Instant};
+
+use gnn_pipe::config::Config;
+use gnn_pipe::data::generate;
+use gnn_pipe::faults::{FaultPlan, FaultScenario};
+use gnn_pipe::runtime::Engine;
+use gnn_pipe::serve::{
+    generate_trace, plan_fleet_faults, BatchPolicy, FleetPolicy, FleetSession,
+    RouterKind, ServeSession, SloPolicy, TraceSpec, TrafficShape,
+    DEFAULT_WATCHDOG_S,
+};
+use gnn_pipe::train::{flatten_params, init_params, Evaluator};
+
+// ---------------------------------------------------------------------
+// Host-side: plans and the failover planner.
+// ---------------------------------------------------------------------
+
+#[test]
+fn chaos_plans_are_pure_functions_of_scenario_and_seed() {
+    for &scenario in FaultScenario::all() {
+        for seed in 0..32u64 {
+            let a = FaultPlan::generate(scenario, seed, 4, 4, 512);
+            let b = FaultPlan::generate(scenario, seed, 4, 4, 512);
+            assert_eq!(a, b, "{scenario:?}/{seed} must replay bit-identically");
+        }
+    }
+    // And the seed actually matters: crash points move across seeds.
+    let distinct: std::collections::HashSet<String> = (0..32u64)
+        .map(|s| {
+            format!("{:?}", FaultPlan::generate(FaultScenario::Crash, s, 4, 4, 512).events)
+        })
+        .collect();
+    assert!(distinct.len() > 1, "crash plans must vary with the seed");
+}
+
+#[test]
+fn failover_planner_conserves_every_request_across_scenarios() {
+    let policy = BatchPolicy { max_batch: 8, max_wait_s: 0.02 };
+    for &scenario in FaultScenario::all() {
+        for replicas in [2usize, 3, 4] {
+            let fleet = FleetPolicy {
+                replicas,
+                router: RouterKind::Jsq,
+                slo: Some(SloPolicy { p99_target_s: 0.2, max_defer_s: 0.08 }),
+                service_model_s: 0.02,
+            };
+            let trace = generate_trace(
+                &TraceSpec { rate_hz: 150.0, requests: 900, seed: 13 },
+                TrafficShape::Poisson,
+                500,
+            );
+            let plan = FaultPlan::generate(scenario, 7, replicas, 4, trace.len());
+            let a = plan_fleet_faults(&trace, &policy, &fleet, Some(&plan), 10.0);
+            let b = plan_fleet_faults(&trace, &policy, &fleet, Some(&plan), 10.0);
+            assert_eq!(a, b, "{scenario:?}/R={replicas}: planner must be pure");
+            assert_eq!(
+                a.plan.served + a.plan.shed,
+                trace.len(),
+                "{scenario:?}/R={replicas}: every request served or shed"
+            );
+            // Orphans split exactly into failover + brown-out sheds.
+            let base_subs = a.base.sub_traces(&trace, replicas);
+            let orphans: usize = (0..replicas)
+                .map(|r| match (a.doomed[r], a.crashed[r]) {
+                    (true, _) => base_subs[r].len(),
+                    (false, Some(k)) => base_subs[r].len().saturating_sub(k),
+                    (false, None) => 0,
+                })
+                .sum();
+            assert_eq!(
+                a.failover + a.degraded,
+                orphans,
+                "{scenario:?}/R={replicas}: orphans must be rerouted or shed"
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// End-to-end (artifact-gated).
+// ---------------------------------------------------------------------
+
+fn engine() -> Option<(Config, Engine)> {
+    let cfg = Config::load().ok()?;
+    if !cfg.artifacts_dir().join("manifest.json").exists() {
+        eprintln!("skipping: artifacts missing (run `make artifacts`)");
+        return None;
+    }
+    let eng = Engine::from_artifacts_dir(&cfg.artifacts_dir()).ok()?;
+    if !ServeSession::artifacts_available(&eng, &cfg.pipeline.pipeline_dataset, "ell") {
+        eprintln!("skipping: serving artifacts missing; re-run `make artifacts`");
+        return None;
+    }
+    Some((cfg, eng))
+}
+
+#[test]
+fn chaos_replay_is_bit_identical() {
+    let Some((cfg, eng)) = engine() else { return };
+    let profile = cfg.dataset(&cfg.pipeline.pipeline_dataset).unwrap();
+    let ds = generate(profile).unwrap();
+    let params = flatten_params(
+        &init_params(profile, &cfg.model, 7),
+        &eng.manifest.param_order,
+    )
+    .unwrap();
+    let trace = generate_trace(
+        &TraceSpec { rate_hz: 64.0, requests: 36, seed: 5 },
+        TrafficShape::Poisson,
+        profile.nodes,
+    );
+    let policy = BatchPolicy { max_batch: 6, max_wait_s: 0.05 };
+    let fleet = FleetPolicy {
+        replicas: 3,
+        router: RouterKind::Jsq,
+        slo: None,
+        service_model_s: 0.02,
+    };
+    // Chaos = crash + slow + flaky: exercises failover, the injected
+    // per-batch delay, and the bounded transient-retry path at once.
+    let chaos = FaultPlan::generate(FaultScenario::Chaos, 11, 3, 4, trace.len());
+    let session = FleetSession::new(&eng, &ds, "ell");
+    let a = session
+        .run_with_faults(&params, &trace, &policy, &fleet, Some(&chaos))
+        .unwrap();
+    let b = session
+        .run_with_faults(&params, &trace, &policy, &fleet, Some(&chaos))
+        .unwrap();
+    assert_eq!(a.fault_plan, b.fault_plan, "failover plan must be pure");
+    assert_eq!(
+        a.request_logits, b.request_logits,
+        "served logits must be bit-identical across chaos replays"
+    );
+    assert_eq!(a.replica_orders, b.replica_orders);
+    assert_eq!(a.report.served, b.report.served);
+    assert_eq!(a.report.failover, b.report.failover);
+    assert_eq!(a.report.degraded, b.report.degraded);
+    assert_eq!(a.report.retries, b.report.retries);
+    assert_eq!(a.report.failed, b.report.failed);
+    assert_eq!(a.report.replica_errors, b.report.replica_errors);
+    assert_eq!(a.report.failed, 0, "bounded retries must absorb transients");
+}
+
+#[test]
+fn flaky_transients_are_retried_not_fatal() {
+    let Some((cfg, eng)) = engine() else { return };
+    let profile = cfg.dataset(&cfg.pipeline.pipeline_dataset).unwrap();
+    let ds = generate(profile).unwrap();
+    let params = flatten_params(
+        &init_params(profile, &cfg.model, 7),
+        &eng.manifest.param_order,
+    )
+    .unwrap();
+    // R=2, 36 requests: replica 0 (the stage-fault target) owns ~3
+    // batches, so an injected transient at micro-batch 0 or 1 is
+    // guaranteed to fire.
+    let trace = generate_trace(
+        &TraceSpec { rate_hz: 64.0, requests: 36, seed: 5 },
+        TrafficShape::Poisson,
+        profile.nodes,
+    );
+    let policy = BatchPolicy { max_batch: 6, max_wait_s: 0.05 };
+    let fleet = FleetPolicy {
+        replicas: 2,
+        router: RouterKind::Jsq,
+        slo: None,
+        service_model_s: 0.02,
+    };
+    let flaky = FaultPlan::generate(FaultScenario::Flaky, 7, 2, 4, trace.len());
+    let session = FleetSession::new(&eng, &ds, "ell");
+    let out = session
+        .run_with_faults(&params, &trace, &policy, &fleet, Some(&flaky))
+        .unwrap();
+    assert!(out.report.retries > 0, "injected transients must force retries");
+    assert_eq!(out.report.failed, 0, "bounded retries must absorb transients");
+    assert_eq!(out.report.served, trace.len());
+    assert!(
+        out.report.replica_errors.iter().all(Option::is_none),
+        "absorbed transients must not surface as replica errors: {:?}",
+        out.report.replica_errors
+    );
+}
+
+#[test]
+fn crash_with_survivors_loses_nothing_and_matches_full_eval() {
+    let Some((cfg, eng)) = engine() else { return };
+    let profile = cfg.dataset(&cfg.pipeline.pipeline_dataset).unwrap();
+    let ds = generate(profile).unwrap();
+    let params_map = init_params(profile, &cfg.model, 3);
+    let params =
+        flatten_params(&params_map, &eng.manifest.param_order).unwrap();
+    let trace = generate_trace(
+        &TraceSpec { rate_hz: 64.0, requests: 36, seed: 11 },
+        TrafficShape::Poisson,
+        profile.nodes,
+    );
+    let policy = BatchPolicy { max_batch: 6, max_wait_s: 0.05 };
+    let fleet = FleetPolicy {
+        replicas: 3,
+        router: RouterKind::Jsq,
+        slo: None,
+        service_model_s: 0.025,
+    };
+    let crash = FaultPlan::generate(FaultScenario::Crash, 7, 3, 4, trace.len());
+    let session = FleetSession::new(&eng, &ds, "ell");
+    let faulted = session
+        .run_with_faults(&params, &trace, &policy, &fleet, Some(&crash))
+        .unwrap();
+    // Ungated (no SLO) with two survivors: the whole orphaned suffix
+    // fails over and every request is still served.
+    assert!(faulted.report.failover > 0, "the crash must orphan a suffix");
+    assert_eq!(faulted.report.served, trace.len());
+    assert_eq!(faulted.report.shed, 0);
+    assert_eq!(faulted.report.failed, 0);
+    assert!(
+        faulted.report.replica_errors.iter().all(Option::is_none),
+        "a planned crash is not an execution error: {:?}",
+        faulted.report.replica_errors
+    );
+    // Fault invariance, both ways: bit-equal to the fault-free fleet
+    // run and to the fused full-graph evaluation.
+    let clean = session.run(&params, &trace, &policy, &fleet).unwrap();
+    assert_eq!(
+        faulted.request_logits, clean.request_logits,
+        "failover must not change any served logit"
+    );
+    let evaluator = Evaluator::new(&eng, &ds, "ell").unwrap();
+    let logp = evaluator.log_probs(&params_map).unwrap();
+    let c = profile.classes;
+    for (i, r) in trace.iter().enumerate() {
+        let want = &logp[r.node as usize * c..(r.node as usize + 1) * c];
+        assert_eq!(
+            faulted.request_logits[i].as_slice(),
+            want,
+            "request {i} (node {}) diverges from full_eval after failover",
+            r.node
+        );
+    }
+}
+
+#[test]
+fn stall_trips_the_watchdog_instead_of_deadlocking() {
+    // Gate on artifacts first (cheap), then run the whole session on a
+    // detached worker that owns its own engine: the stalled stage
+    // sleeps 30-60s in interruptible slices, so the main thread holds
+    // the run to a hard deadline via `recv_timeout` — a deadlock fails
+    // the test instead of hanging it.
+    if engine().is_none() {
+        return;
+    }
+    let stall = FaultPlan::generate(FaultScenario::Stall, 3, 2, 4, 24);
+    assert!(
+        stall.stall_doom(0.25).is_some(),
+        "generated stalls (30-60s) must doom a 0.25s watchdog"
+    );
+    let (tx, rx) = std::sync::mpsc::channel();
+    std::thread::spawn(move || {
+        let (cfg, eng) = engine().expect("artifacts vanished mid-test");
+        let profile = cfg.dataset(&cfg.pipeline.pipeline_dataset).unwrap();
+        let ds = generate(profile).unwrap();
+        let params = flatten_params(
+            &init_params(profile, &cfg.model, 7),
+            &eng.manifest.param_order,
+        )
+        .unwrap();
+        let trace = generate_trace(
+            &TraceSpec { rate_hz: 64.0, requests: 24, seed: 5 },
+            TrafficShape::Poisson,
+            profile.nodes,
+        );
+        let policy = BatchPolicy { max_batch: 6, max_wait_s: 0.05 };
+        let fleet = FleetPolicy {
+            replicas: 2,
+            router: RouterKind::Jsq,
+            slo: None,
+            service_model_s: 0.02,
+        };
+        let mut session = FleetSession::new(&eng, &ds, "ell");
+        session.set_watchdog_s(0.25);
+        assert!(session.watchdog_s() < DEFAULT_WATCHDOG_S);
+        let out = session
+            .run_with_faults(&params, &trace, &policy, &fleet, Some(&stall))
+            .unwrap();
+        let _ = tx.send((out.report, trace.len()));
+    });
+    // Far below the 30s stall floor: the watchdog (0.25s) must resolve
+    // the doomed replica long before the sleeper would wake on its own.
+    let started = Instant::now();
+    let (report, requests) = match rx.recv_timeout(Duration::from_secs(120)) {
+        Ok(v) => v,
+        Err(e) => panic!(
+            "stalled fleet run did not resolve within {:?} ({e}): the \
+             watchdog failed to break the deadlock",
+            started.elapsed()
+        ),
+    };
+    // The doomed replica's timeout is recorded, not fatal: its whole
+    // sub-trace failed over to the survivor and everything was served.
+    let timeout_err = report
+        .replica_errors
+        .iter()
+        .flatten()
+        .find(|e| e.contains("timed out"));
+    assert!(
+        timeout_err.is_some(),
+        "the stalled replica must surface a StageTimeout: {:?}",
+        report.replica_errors
+    );
+    assert_eq!(report.served, requests);
+    assert_eq!(report.failed, 0, "a doomed replica is planned, not failed");
+    assert!(report.failover > 0, "the doomed sub-trace must fail over");
+}

@@ -217,6 +217,30 @@ def selfcheck() -> int:
              {"plan_fleet (100k requests, R=4, SLO gate)": 0.01})}),
          snaps(**{"BENCH_fleet.json": fleet_plus_shed}),
          strict=True, expect_text="(new sample)")
+    # The faults snapshot's first appearance (PR adding the chaos bench):
+    # no previous BENCH_faults.json artifact exists, so it is skipped,
+    # never flagged — even strict.
+    faults = _snapshot(
+        {"plan_fleet_faults (100k requests, R=4, crash)": 0.02,
+         "fleet_availability model (1k points)": 0.001},
+        model_completion=0.76)
+    case("first-run BENCH_faults.json is skipped", 0,
+         snaps(**{"BENCH_x.json": base}),
+         snaps(**{"BENCH_x.json": base, "BENCH_faults.json": faults}),
+         strict=True, expect_text="BENCH_faults.json: new snapshot")
+    # Availability metrics (completion fractions recorded as mean_s
+    # pseudo-samples by `bench serve-faults`) joining an existing faults
+    # snapshot are informational on first appearance, not regressions —
+    # a completion of 0.97 must not diff against a planner timing.
+    faults_plus_avail = _snapshot(
+        {"plan_fleet_faults (100k requests, R=4, crash)": 0.02,
+         "cli faults completion (crash,R=3)": 0.97,
+         "cli faults model completion (crash,R=3)": 0.94},
+        model_completion=0.94)
+    case("new availability-metric sample is informational", 0,
+         snaps(**{"BENCH_faults.json": faults}),
+         snaps(**{"BENCH_faults.json": faults_plus_avail}),
+         strict=True, expect_text="(new sample)")
 
     if failures:
         print(f"self-check FAILED: {failures}")
