@@ -1,4 +1,4 @@
-//! Memory-regression probe for the PJRT runtime (EXPERIMENTS.md §Perf):
+//! Memory-regression probe for the PJRT runtime:
 //! runs the PubMed eval executable 30x and prints RSS. With the
 //! `execute(&[Literal])` path of the vendored xla crate this grew
 //! +45 MB/call (input device buffers leaked inside the C wrapper);

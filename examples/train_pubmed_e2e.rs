@@ -1,9 +1,10 @@
-//! End-to-end validation driver (DESIGN.md): train the full GAT on the
+//! End-to-end validation driver (ARCHITECTURE.md): train the full GAT on the
 //! synthetic PubMed citation graph for several hundred epochs through
 //! BOTH execution paths — the single-device fused step and the 4-stage
 //! GPipe pipeline (chunk=1*, the paper's no-batching configuration) —
-//! logging the loss curve and final accuracies. The recorded run lives
-//! in EXPERIMENTS.md §End-to-end.
+//! logging the loss curve and final accuracies (rerun it to record a
+//! reference curve; `gnn-pipe bench table2` covers the same path with
+//! CSV output under results/).
 //!
 //!     cargo run --release --example train_pubmed_e2e [epochs]
 

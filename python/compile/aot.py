@@ -16,6 +16,13 @@ device simulator (rust/src/simulator).
 
 Usage:  cd python && python -m compile.aot [--out-dir ../artifacts]
                      [--only pubmed_ell_train_step] [--skip-pipeline]
+                     [--partition FILE]
+
+``--partition FILE`` additionally lowers the span artifacts
+(``l{a}_{b}_fwd`` etc.) for a non-canonical balance written by
+``gnn-pipe partition --out FILE``, per backend x chunk count.  The
+canonical executable balance [2, 2, 1, 1] is skipped with a note — it
+maps to the existing ``s{i}_*`` artifacts bit for bit.
 """
 
 from __future__ import annotations
@@ -106,7 +113,12 @@ def lower_one(name: str, fn, specs, out_dir: str, meta: dict) -> dict:
     return rec
 
 
-def build_all(out_dir: str, only: str | None, skip_pipeline: bool) -> None:
+def build_all(
+    out_dir: str,
+    only: str | None,
+    skip_pipeline: bool,
+    partition: str | None = None,
+) -> None:
     os.makedirs(out_dir, exist_ok=True)
     datasets = load_datasets()
     mc = load_model()
@@ -159,6 +171,32 @@ def build_all(out_dir: str, only: str | None, skip_pipeline: bool) -> None:
                          "chunks": k, "kind": kind},
                     ))
 
+    # --- Auto-partitioned spans: --partition FILE x backend x chunks ----
+    part = None
+    if partition is not None:
+        part = S.load_partition(partition)
+        if tuple(part["balance"]) == S.CANONICAL_BALANCE:
+            print(
+                f"--partition {partition}: balance {part['balance']} is the "
+                "canonical executable grouping — it maps to the existing "
+                "s{i}_* artifacts bit for bit; nothing to lower"
+            )
+        else:
+            ds = datasets[pc.pipeline_dataset]
+            for backend in pc.pipeline_backends:
+                fns = S.span_fns(ds, mc, backend, part["balance"])
+                for k in pc.chunks:
+                    all_specs = S.span_specs(ds, mc, backend, k, part["balance"])
+                    for kind, fn in fns.items():
+                        name = f"{ds.name}_{backend}_c{k}_{kind}"
+                        if not want(name):
+                            continue
+                        records.append(lower_one(
+                            name, fn, all_specs[kind], out_dir,
+                            {"dataset": ds.name, "backend": backend,
+                             "chunks": k, "kind": kind},
+                        ))
+
     # --- SIGN extension (E9): precomputed-representation MLP ------------
     if not skip_pipeline:
         from . import model_sign as MS
@@ -199,6 +237,11 @@ def build_all(out_dir: str, only: str | None, skip_pipeline: bool) -> None:
         "stage_params": {str(k): list(v) for k, v in M.STAGE_PARAMS.items()},
         "artifacts": records,
     }
+    if part is not None:
+        manifest["partition"] = {
+            "balance": list(part["balance"]),
+            "source": part.get("source"),
+        }
     path = os.path.join(out_dir, "manifest.json")
     with open(path, "w") as f:
         json.dump(manifest, f, indent=1)
@@ -211,8 +254,11 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="substring filter on artifact names")
     ap.add_argument("--skip-pipeline", action="store_true")
+    ap.add_argument("--partition", default=None,
+                    help="partition file (gnn-pipe partition --out) whose "
+                         "span artifacts to lower in addition")
     args = ap.parse_args()
-    build_all(args.out_dir, args.only, args.skip_pipeline)
+    build_all(args.out_dir, args.only, args.skip_pipeline, args.partition)
 
 
 if __name__ == "__main__":

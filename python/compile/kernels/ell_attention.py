@@ -5,7 +5,7 @@ The message-passing hot-spot of the paper's GAT (eqs. 3-4): per edge
 softmax over i's neighbourhood, attention dropout, then the weighted
 feature sum  out_i = sum_j alpha_ij * z_j  — all heads at once.
 
-Hardware adaptation (DESIGN.md): the paper's CUDA substrate does this with
+Hardware adaptation (ARCHITECTURE.md): the paper's CUDA substrate does this with
 edge-parallel scatter/atomics.  On a TPU-shaped machine we use a
 node-parallel ELL layout instead — every row padded to K neighbour slots —
 so the kernel sees rectangular, maskable tiles: for each block of ``bn``

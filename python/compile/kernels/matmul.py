@@ -9,7 +9,7 @@ the minor grid axis, accumulating into the resident output tile in VMEM.
 
 Run with ``interpret=True`` everywhere (the CPU PJRT plugin cannot execute
 Mosaic custom-calls); structure, not interpret-mode wall-clock, is what is
-tuned — see DESIGN.md section "Perf" for the VMEM/MXU accounting.
+tuned — see ARCHITECTURE.md section "Perf accounting" for the VMEM/MXU math.
 """
 
 from __future__ import annotations
@@ -35,9 +35,9 @@ BM, BK, BN = 128, 128, 128
 #   128^3 grid (616 steps)       5.34 s/call
 #   2048x512x128 grid (10 steps) 0.25 s/call   (21x)
 #   single step                  0.045 s/call  (119x; raw dot is 0.013 s)
-# EXPERIMENTS.md §Perf has the full log.  The MXU/VMEM analysis and the
-# hardware-adaptation story apply to the 128^3 profile, which remains the
-# default and is swept by the tests.
+# The MXU/VMEM analysis and the hardware-adaptation story
+# (ARCHITECTURE.md §Perf accounting) apply to the 128^3 profile, which
+# remains the default and is swept by the tests.
 INTERPRET_BM, INTERPRET_BK, INTERPRET_BN = 0, 0, 0
 
 # Padding quantum for the single-step profile.
@@ -127,8 +127,8 @@ tiled_matmul.defvjp(_fwd, _bwd)
 def vmem_bytes(bm: int = BM, bk: int = BK, bn: int = BN) -> int:
     """Resident VMEM bytes per grid step (x-tile + w-tile + out-tile, f32).
 
-    Used by the perf accounting in DESIGN.md / EXPERIMENTS.md and asserted
-    against the VMEM budget in python/tests/test_perf_model.py.
+    Used by the perf accounting in ARCHITECTURE.md and asserted against
+    the VMEM budget in python/tests/test_matmul.py.
     """
     return 4 * (bm * bk + bk * bn + bm * bn)
 

@@ -23,6 +23,12 @@ cut at the paper's balance [2,1,2,1]:
   * ``s3loss_bwd``  fused LogSoftmax + masked-NLL backward: from the raw
                     stage-2 logits produce (loss_sum, count, dlogits).
 
+Auto-partitioned spans (``aot.py --partition FILE``) — non-canonical
+balances from ``gnn-pipe partition`` compile layer spans [a, b) as
+  * ``l{a}_{b}_fwd`` / ``l{a}_{b}_bwd`` / ``l{a}_{b}loss_bwd``
+with the same conventions (flat signatures, rematerialising backwards,
+sum-normalised grads); see the span section below.
+
 Serving (per backend, chunks=1 only) — the forward-only inference
 pipeline behind ``rust/src/serve``:
   * ``s{i}_eval_fwd``  (i in 0..2) deterministic stage forward: dropout
@@ -271,6 +277,214 @@ def make_s0_bwd(mc: ModelConfig, backend: str):
         return tuple(dp)
 
     return s0_bwd
+
+
+# ---------------------------------------------------------------------------
+# Auto-partitioned span entry points (rust/src/pipeline/partition.rs).
+#
+# A non-canonical balance groups the six modules into contiguous layer
+# spans [a, b); each span becomes one pipeline stage with artifact kinds
+# ``l{a}_{b}_fwd`` / ``l{a}_{b}_bwd`` (``l{a}_{b}loss_bwd`` fused with
+# the masked NLL on the final stage).  Same conventions as the canonical
+# stages: flat signatures, rematerialising backwards (only the span
+# INPUT is stashed), grads w.r.t. the loss SUM.  The canonical
+# executable grouping [2, 2, 1, 1] keeps using the ``s{i}_*`` artifacts
+# above — aot.py skips span lowering for it — so the paper path's
+# bit-exact replay contract is untouched.
+# ---------------------------------------------------------------------------
+
+# The executable module counts of the paper's [2,1,2,1]-labelled split
+# (the second dropout executes inside stage 1 with ELU; see model.py).
+CANONICAL_BALANCE = (2, 2, 1, 1)
+
+
+def load_partition(path: str) -> dict:
+    """Read a partition file written by ``gnn-pipe partition --out``.
+
+    Returns the parsed dict after validating the balance: positive
+    module counts over the six-layer sequence.
+    """
+    import json as _json
+
+    with open(path) as f:
+        part = _json.load(f)
+    balance = part.get("balance")
+    if (
+        not isinstance(balance, list)
+        or not balance
+        or any((not isinstance(b, int)) or b <= 0 for b in balance)
+        or sum(balance) != len(M.LAYER_NAMES)
+    ):
+        raise ValueError(
+            f"{path}: balance {balance!r} must be positive module counts "
+            f"summing to {len(M.LAYER_NAMES)}"
+        )
+    return part
+
+
+def span_bounds(balance) -> List[Tuple[int, int]]:
+    """[(a, b), ...] layer bounds of each stage of `balance`."""
+    out, at = [], 0
+    for cnt in balance:
+        out.append((at, at + cnt))
+        at += cnt
+    return out
+
+
+def span_param_names(a: int, b: int) -> Tuple[str, ...]:
+    names: Tuple[str, ...] = ()
+    for i in range(a, b):
+        names += M.LAYER_PARAMS.get(i, ())
+    return names
+
+
+def _span_io_widths(ds: DatasetProfile, mc: ModelConfig):
+    """(input_width, output_width) per layer index."""
+    hd = mc.heads * mc.hidden
+    out_w = [ds.features, hd, hd, hd, ds.classes, ds.classes]
+    in_w = [ds.features] + out_w[:-1]
+    return in_w, out_w
+
+
+def make_span_fwd(mc: ModelConfig, backend: str, classes: int, a: int, b: int):
+    names = span_param_names(a, b)
+    n_p = len(names)
+    ng = n_graph_args(backend) if any(
+        i in M.LAYER_NEEDS_GRAPH for i in range(a, b)
+    ) else 0
+    has_key = any(i in M.LAYER_STOCHASTIC for i in range(a, b))
+    zero_key = jnp.zeros((2,), jnp.uint32)
+
+    def span_fwd(*args):
+        p = _params_from_flat(args[:n_p], names)
+        h = args[n_p]
+        graph = _graph_from_flat(args[n_p + 1 : n_p + 1 + ng], backend) if ng else {}
+        key = args[n_p + 1 + ng] if has_key else zero_key
+        return (
+            M.span_forward(
+                a, b, p, h, graph, backend, mc, classes, key,
+                deterministic=False,
+            ),
+        )
+
+    return span_fwd
+
+
+def make_span_bwd(mc: ModelConfig, backend: str, classes: int, a: int, b: int):
+    """Rematerialising span backward: (param grads..., dh if a > 0)."""
+    names = span_param_names(a, b)
+    n_p = len(names)
+    ng = n_graph_args(backend) if any(
+        i in M.LAYER_NEEDS_GRAPH for i in range(a, b)
+    ) else 0
+    has_key = any(i in M.LAYER_STOCHASTIC for i in range(a, b))
+    zero_key = jnp.zeros((2,), jnp.uint32)
+
+    def span_bwd(*args):
+        p_flat = args[:n_p]
+        h = args[n_p]
+        graph = _graph_from_flat(args[n_p + 1 : n_p + 1 + ng], backend) if ng else {}
+        key = args[n_p + 1 + ng] if has_key else zero_key
+        g = args[n_p + 1 + ng + (1 if has_key else 0)]
+
+        def f(pf, hh):
+            p = _params_from_flat(pf, names)
+            return M.span_forward(
+                a, b, p, hh, graph, backend, mc, classes, key,
+                deterministic=False,
+            )
+
+        _, vjp = jax.vjp(f, p_flat, h)   # rematerialise inside
+        dp, dh = vjp(g)
+        if a == 0:
+            return tuple(dp)             # input stage: dx never needed
+        return tuple(dp) + (dh,)
+
+    return span_bwd
+
+
+def make_span_loss_bwd(mc: ModelConfig, backend: str, classes: int, a: int, b: int):
+    """Final-span backward fused with the masked NLL: from the span
+    input produce (loss_sum, count, param grads..., dh if a > 0)."""
+    names = span_param_names(a, b)
+    n_p = len(names)
+    ng = n_graph_args(backend) if any(
+        i in M.LAYER_NEEDS_GRAPH for i in range(a, b)
+    ) else 0
+    has_key = any(i in M.LAYER_STOCHASTIC for i in range(a, b))
+    zero_key = jnp.zeros((2,), jnp.uint32)
+
+    def span_loss_bwd(*args):
+        p_flat = args[:n_p]
+        h = args[n_p]
+        graph = _graph_from_flat(args[n_p + 1 : n_p + 1 + ng], backend) if ng else {}
+        at = n_p + 1 + ng
+        key = args[at] if has_key else zero_key
+        at += 1 if has_key else 0
+        labels, mask = args[at], args[at + 1]
+
+        def f(pf, hh):
+            p = _params_from_flat(pf, names)
+            logp = M.span_forward(
+                a, b, p, hh, graph, backend, mc, classes, key,
+                deterministic=False,
+            )
+            return M.nll_loss(logp, labels, mask)
+
+        (s, cnt), vjp = jax.vjp(f, p_flat, h)
+        # d(loss_sum)=1, d(count)=0 — grads w.r.t. the SUM (the
+        # coordinator divides by the accumulated count once per step).
+        dp, dh = vjp((jnp.float32(1.0), jnp.float32(0.0)))
+        out = (s, cnt) + tuple(dp)
+        if a > 0:
+            out += (dh,)
+        return out
+
+    return span_loss_bwd
+
+
+def span_specs(
+    ds: DatasetProfile, mc: ModelConfig, backend: str, chunks: int, balance
+) -> Dict[str, List[Tuple[str, jax.ShapeDtypeStruct]]]:
+    """Input specs for every span artifact of `balance` at one chunk count."""
+    n_c = ds.chunk_nodes(chunks)
+    e_c = ds.chunk_e_cap(chunks)
+    in_w, out_w = _span_io_widths(ds, mc)
+    shapes = dict(M.param_specs(ds, mc))
+    g = graph_input_specs(backend, n_c, e_c, ds.ell_k)
+    out: Dict[str, List[Tuple[str, jax.ShapeDtypeStruct]]] = {}
+    bounds = span_bounds(balance)
+    for s, (a, b) in enumerate(bounds):
+        specs = [(n, f32(shapes[n])) for n in span_param_names(a, b)]
+        specs.append(("x" if a == 0 else "h", f32((n_c, in_w[a]))))
+        if any(i in M.LAYER_NEEDS_GRAPH for i in range(a, b)):
+            specs += g
+        if any(i in M.LAYER_STOCHASTIC for i in range(a, b)):
+            specs.append(("key", u32((2,))))
+        out[f"l{a}_{b}_fwd"] = specs
+        if s + 1 == len(bounds):
+            out[f"l{a}_{b}loss_bwd"] = specs + [
+                ("labels", s32((n_c,))),
+                ("mask", f32((n_c,))),
+            ]
+        else:
+            out[f"l{a}_{b}_bwd"] = specs + [("g", f32((n_c, out_w[b - 1])))]
+    return out
+
+
+def span_fns(ds: DatasetProfile, mc: ModelConfig, backend: str, balance):
+    """kind -> flat function for every span artifact of `balance`."""
+    out = {}
+    bounds = span_bounds(balance)
+    for s, (a, b) in enumerate(bounds):
+        out[f"l{a}_{b}_fwd"] = make_span_fwd(mc, backend, ds.classes, a, b)
+        if s + 1 == len(bounds):
+            out[f"l{a}_{b}loss_bwd"] = make_span_loss_bwd(
+                mc, backend, ds.classes, a, b
+            )
+        else:
+            out[f"l{a}_{b}_bwd"] = make_span_bwd(mc, backend, ds.classes, a, b)
+    return out
 
 
 # ---------------------------------------------------------------------------

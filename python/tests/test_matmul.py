@@ -101,7 +101,8 @@ def test_identity_and_zeros():
 
 
 def test_vmem_budget():
-    """Default tiles must fit a 16 MiB VMEM with 4x headroom (DESIGN.md Perf)."""
+    """Default tiles must fit a 16 MiB VMEM with 4x headroom
+    (ARCHITECTURE.md §Perf accounting)."""
     assert vmem_bytes() <= 4 * 1024 * 1024
 
 

@@ -1,0 +1,174 @@
+"""Auto-partitioned span entry points (stages.py span_* + model.py
+apply_layer/span_forward): the generic per-layer path behind
+``aot.py --partition FILE``.
+
+The load-bearing contract is grouping invariance: because generic spans
+fold ``16 + layer_index`` into the RNG key per LAYER (never per stage),
+any contiguous grouping of the six modules composes to the *same*
+function — dropout masks and all — so the Rust partitioner is free to
+move cuts without changing the math.  The canonical [2, 2, 1, 1]
+balance keeps its own s{i}_* artifacts (bit-exact replay contract);
+these tests pin the generic path it falls back from.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile import stages as S
+
+BALANCES = ([1, 2, 2, 1], [3, 3], [2, 2, 1, 1], [1, 1, 1, 1, 1, 1], [6])
+KEY = jnp.asarray([1, 2], jnp.uint32)
+
+
+def _env(ds, x, labels, graph, params):
+    """name -> value for every flat argument a span spec can ask for."""
+    rng = np.random.default_rng(ds.seed + 1)
+    mask = jnp.asarray((rng.random(ds.nodes) < 0.3).astype(np.float32))
+    env = dict(params)
+    env.update(graph)
+    env.update(x=x, labels=labels, mask=mask, key=KEY)
+    return env
+
+
+def _run_chain(ds, mc, backend, balance, env):
+    """Drive the span forward chain through the flat fns, asserting every
+    argument matches its published spec shape along the way."""
+    fns = S.span_fns(ds, mc, backend, balance)
+    specs = S.span_specs(ds, mc, backend, 1, balance)
+    h = env["x"]
+    for a, b in S.span_bounds(balance):
+        kind = f"l{a}_{b}_fwd"
+        args = []
+        for name, spec in specs[kind]:
+            args.append(h if name in ("x", "h") else env[name])
+            assert tuple(args[-1].shape) == tuple(spec.shape), (kind, name)
+        (h,) = fns[kind](*args)
+    return h
+
+
+def _staged_grads(ds, mc, backend, balance, env):
+    """Forward chain stashing span inputs, then loss_bwd + bwd chain —
+    exactly the coordinator's remat calling convention."""
+    fns = S.span_fns(ds, mc, backend, balance)
+    specs = S.span_specs(ds, mc, backend, 1, balance)
+    bounds = S.span_bounds(balance)
+    h, inputs = env["x"], []
+    for a, b in bounds:
+        inputs.append(h)
+        args = [h if n in ("x", "h") else env[n]
+                for n, _ in specs[f"l{a}_{b}_fwd"]]
+        (h,) = fns[f"l{a}_{b}_fwd"](*args)
+    grads, g, loss_sum = {}, None, None
+    for s in reversed(range(len(bounds))):
+        a, b = bounds[s]
+        final = s + 1 == len(bounds)
+        kind = f"l{a}_{b}loss_bwd" if final else f"l{a}_{b}_bwd"
+        args = []
+        for name, _ in specs[kind]:
+            if name in ("x", "h"):
+                args.append(inputs[s])
+            elif name == "g":
+                args.append(g)
+            else:
+                args.append(env[name])
+        out = fns[kind](*args)
+        if final:
+            loss_sum, out = out[0], out[2:]
+        names = S.span_param_names(a, b)
+        grads.update(zip(names, out))
+        g = out[len(names)] if a > 0 else None
+    return loss_sum, grads
+
+
+@pytest.mark.parametrize("backend", M.BACKENDS)
+def test_span_chain_invariant_to_grouping(tiny, model_config, backend):
+    """Every balance composes to the same bits as the uncut span — with
+    dropout ON, so the per-layer RNG folds are what's being pinned."""
+    ds, x, labels, gell, gcoo = tiny
+    graph = gell if backend == "ell" else gcoo
+    params = M.init_params(ds, model_config, seed=0)
+    env = _env(ds, x, labels, graph, params)
+    mono = M.span_forward(0, 6, params, x, graph, backend, model_config,
+                          ds.classes, KEY, deterministic=False)
+    for balance in BALANCES:
+        got = _run_chain(ds, model_config, backend, balance, env)
+        assert jnp.array_equal(got, mono), balance
+
+
+@pytest.mark.parametrize("backend", M.BACKENDS)
+def test_dropout_free_span_chain_matches_full_forward(tiny, model_config,
+                                                      backend):
+    """With dropout rates at zero the span chain is the plain model."""
+    ds, x, labels, gell, gcoo = tiny
+    graph = gell if backend == "ell" else gcoo
+    mc0 = dataclasses.replace(model_config, feat_dropout=0.0,
+                              attn_dropout=0.0)
+    params = M.init_params(ds, mc0, seed=0)
+    env = _env(ds, x, labels, graph, params)
+    full = M.full_forward(params, x, graph, backend, mc0, ds.classes, KEY,
+                          deterministic=True)
+    got = _run_chain(ds, mc0, backend, [1, 2, 2, 1], env)
+    assert jnp.array_equal(got, full)
+
+
+@pytest.mark.parametrize("backend", M.BACKENDS)
+def test_staged_span_grads_match_monolith(tiny, model_config, backend):
+    """loss_bwd + bwd chain == jax.grad of the composed span loss, for
+    several cut placements (remat + cotangent plumbing)."""
+    ds, x, labels, gell, gcoo = tiny
+    graph = gell if backend == "ell" else gcoo
+    params = M.init_params(ds, model_config, seed=0)
+    env = _env(ds, x, labels, graph, params)
+
+    def loss_fn(p):
+        logp = M.span_forward(0, 6, p, x, graph, backend, model_config,
+                              ds.classes, KEY, deterministic=False)
+        return M.nll_loss(logp, labels, env["mask"])[0]
+
+    ref_loss = loss_fn(params)
+    ref_grads = jax.grad(loss_fn)(params)
+    for balance in ([1, 2, 2, 1], [3, 3], [1, 1, 2, 2]):
+        loss_sum, grads = _staged_grads(ds, model_config, backend, balance,
+                                        env)
+        assert jnp.allclose(loss_sum, ref_loss, rtol=1e-6), balance
+        for n in M.PARAM_NAMES:
+            assert jnp.array_equal(grads[n], ref_grads[n]), (balance, n)
+
+
+def test_span_param_and_shape_bookkeeping(tiny, model_config):
+    ds = tiny[0]
+    assert S.span_bounds([2, 2, 1, 1]) == [(0, 2), (2, 4), (4, 5), (5, 6)]
+    assert S.span_param_names(0, 3) == ("w1", "a1_src", "a1_dst", "b1")
+    assert S.span_param_names(2, 4) == ()
+    assert S.span_param_names(0, 6) == M.PARAM_NAMES
+    in_w, out_w = S._span_io_widths(ds, model_config)
+    hd = model_config.heads * model_config.hidden
+    assert out_w == [ds.features, hd, hd, hd, ds.classes, ds.classes]
+    assert in_w[1:] == out_w[:-1]
+    # A graph-free span gets neither graph args nor (if pure) a key.
+    specs = S.span_specs(ds, model_config, "ell", 1, [1, 1, 1, 1, 1, 1])
+    assert [n for n, _ in specs["l2_3_fwd"]] == ["h"]
+    assert [n for n, _ in specs["l2_3_bwd"]] == ["h", "g"]
+    assert [n for n, _ in specs["l3_4_fwd"]] == ["h", "key"]
+
+
+def test_load_partition_validates(tmp_path):
+    good = tmp_path / "part.json"
+    good.write_text(json.dumps(
+        {"balance": [1, 2, 2, 1], "chunks": 4, "schedule": "1f1b",
+         "source": "closed-form"}))
+    part = S.load_partition(str(good))
+    assert part["balance"] == [1, 2, 2, 1]
+    for bad in ([0, 3, 2, 1], [2, 2, 1], [7], "gat4", [], [1.5, 2.5, 1, 1]):
+        p = tmp_path / "bad.json"
+        p.write_text(json.dumps({"balance": bad}))
+        with pytest.raises(ValueError, match="balance"):
+            S.load_partition(str(p))

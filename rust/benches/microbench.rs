@@ -1,7 +1,8 @@
 //! Coordinator micro-benchmarks (no artifacts needed): the host-side hot
 //! paths — sub-graph induce/rebuild, chunk planning, ELL/COO export,
 //! schedule simulation, JSON parse — with simple wall-clock statistics.
-//! These are the L3 §Perf numbers in EXPERIMENTS.md.
+//! The perf trajectory tracks their quick-mode snapshots per commit
+//! (BENCH_*.json; see scripts/bench_diff.py).
 
 use std::time::Instant;
 

@@ -1,0 +1,140 @@
+//! Partitioner micro-benchmarks: the host-side cost of the balance DP,
+//! the (stages, chunks, schedule) sweep, and the modeled-epoch pricing
+//! it leans on — everything is closed-form, so this bench needs no
+//! artifacts and always runs.
+//!
+//! Three sections:
+//!
+//! 1. **balance DP**: `balance_dp` on the pubmed closed-form profile
+//!    across every (stages, chunks) point the CLI sweeps, plus a wider
+//!    synthetic profile to exercise the DP's general path;
+//! 2. **modeled epoch**: `model_epoch` replaying both schedules at the
+//!    config's chunk counts;
+//! 3. **full sweep**: `sweep` end to end — the exact search
+//!    `gnn-pipe partition` runs — with the winner printed so drift in
+//!    the chosen split is visible in bench logs.
+//!
+//! Mean ± stddev per iteration, dumped to `BENCH_partition.json` at the
+//! repo root (CI's `bench-trajectory` job runs `-- --quick` and tracks
+//! the snapshot per commit; the CLI `gnn-pipe bench partition` writes
+//! the same file with `quick: false`).
+
+mod bench_util;
+
+use bench_util::{bench, quick_mode, scaled, write_snapshot};
+
+use gnn_pipe::config::Config;
+use gnn_pipe::pipeline::parse_schedule;
+use gnn_pipe::pipeline::partition::{
+    balance_dp, model_epoch, sweep, CostProfile, SweepConstraints,
+};
+use gnn_pipe::simulator::DEVICES;
+
+fn main() {
+    let quick = quick_mode();
+    let iters = |n: usize| scaled(quick, n);
+    let cfg = Config::load().expect("configs");
+    println!(
+        "== partition microbench (balance DP + sweep{}) ==",
+        if quick { ", quick" } else { "" }
+    );
+
+    let profile = CostProfile::closed_form(
+        &cfg.datasets["pubmed"],
+        &cfg.model,
+        &DEVICES.v100,
+        &CostProfile::default_calibration(),
+    );
+    let devices = cfg.pipeline.devices;
+    let chunk_counts = cfg.pipeline.chunks.clone();
+
+    let mut samples = Vec::new();
+
+    // 1a. The DP across the CLI's whole (stages, chunks) grid.
+    samples.push(bench(
+        &format!("balance_dp (stages 2..={devices} x chunks {chunk_counts:?})"),
+        iters(2000),
+        || {
+            let mut acc = 0usize;
+            for stages in 2..=devices.max(2) {
+                for &chunks in &chunk_counts {
+                    let part = balance_dp(&profile, stages, chunks).unwrap();
+                    acc += part.cut_width;
+                }
+            }
+            std::hint::black_box(acc);
+        },
+    ));
+
+    // 1b. A wider uniform profile: stresses the DP's O(S * L^2) general
+    // path rather than the 6-layer special case.
+    let wide = CostProfile::uniform(6, 1e-3, 2e-3, 64);
+    samples.push(bench("balance_dp (uniform profile, all stage counts)", iters(5000), || {
+        let mut acc = 0.0f64;
+        for stages in 1..=6 {
+            acc += balance_dp(&wide, stages, 4).unwrap().bottleneck_s;
+        }
+        std::hint::black_box(acc);
+    }));
+
+    // 2. The modeled-epoch replay at every (chunks, schedule) point.
+    let schedules: Vec<_> = ["fill-drain", "1f1b"]
+        .iter()
+        .map(|n| parse_schedule(n).unwrap())
+        .collect();
+    let canonical = balance_dp(&profile, devices, 1).unwrap();
+    samples.push(bench(
+        &format!("model_epoch (balance {:?} x 2 schedules)", canonical.balance),
+        iters(2000),
+        || {
+            let mut acc = 0.0f64;
+            for sched in &schedules {
+                for &chunks in &chunk_counts {
+                    let rep = model_epoch(
+                        &profile,
+                        &canonical.balance,
+                        chunks,
+                        sched.as_ref(),
+                    )
+                    .unwrap();
+                    acc += rep.makespan_s;
+                }
+            }
+            std::hint::black_box(acc);
+        },
+    ));
+
+    // 3. The full search the `partition` subcommand runs.
+    let cons = SweepConstraints::defaults(devices, &chunk_counts);
+    let mut winner_desc = String::new();
+    samples.push(bench(
+        &format!(
+            "sweep ({} stages x {} chunks x {} schedules)",
+            cons.stages.len(),
+            cons.chunks.len(),
+            cons.schedules.len()
+        ),
+        iters(1000),
+        || {
+            let report = sweep(&profile, &cons).unwrap();
+            let w = report.winner();
+            winner_desc = format!(
+                "{:?}/c{}/{}",
+                w.balance, w.chunks, w.schedule
+            );
+        },
+    ));
+    println!("  (sweep winner: {winner_desc})");
+
+    let extras = [
+        ("quick", quick.to_string()),
+        ("dp_balance", format!("\"{:?}\"", canonical.balance)),
+        ("sweep_winner", format!("\"{winner_desc}\"")),
+    ];
+    write_snapshot(
+        &cfg.root.join("BENCH_partition.json"),
+        "partition",
+        &extras,
+        &samples,
+    );
+}

@@ -1,8 +1,8 @@
 //! cargo-bench target for E1 (paper Table 1).
 //!
 //! Defaults to GNN_PIPE_BENCH_EPOCHS (or 10) so `cargo bench` finishes in
-//! minutes; the recorded 150-epoch run is in EXPERIMENTS.md (regenerate
-//! with `gnn-pipe bench table1 --epochs 150`).
+//! minutes; regenerate the full 150-epoch run with
+//! `gnn-pipe bench table1 --epochs 150` (CSV lands under results/).
 use gnn_pipe::bench_harness::{bench_table1, BenchCtx};
 
 fn main() {

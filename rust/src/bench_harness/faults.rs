@@ -38,6 +38,8 @@ use super::{framework_label, BenchCtx};
 /// stage work.
 const BENCH_STALL_WATCHDOG_S: f64 = 1.0;
 
+/// E13: seeded chaos scenarios against the serving fleet — measured
+/// completion/failover/retries vs the closed-form availability model.
 pub fn bench_serve_faults(ctx: &BenchCtx) -> Result<String> {
     let sc = &ctx.cfg.serve;
     let backend = sc.backend.clone();

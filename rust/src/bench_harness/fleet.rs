@@ -40,6 +40,8 @@ use crate::train::{flatten_params, init_params};
 
 use super::{framework_label, BenchCtx};
 
+/// E12: the multi-replica serving fleet across replicas x rate x
+/// traffic shape, measured vs the fleet latency model.
 pub fn bench_serve_fleet(ctx: &BenchCtx) -> Result<String> {
     let sc = &ctx.cfg.serve;
     let backend = sc.backend.clone();

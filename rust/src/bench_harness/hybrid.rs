@@ -29,6 +29,8 @@ use crate::util::par::available_threads;
 
 use super::{framework_label, schedule_label, BenchCtx};
 
+/// E10: (replicas, chunks) factorisations of one fixed partition —
+/// pipe-only vs hybrid DGX projections next to measured epochs.
 pub fn bench_hybrid(ctx: &BenchCtx) -> Result<String> {
     let backend = "ell";
     let total = ctx

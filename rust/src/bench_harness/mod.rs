@@ -1,5 +1,9 @@
 //! Bench harness: regenerates every table and figure of the paper's
-//! evaluation section (§7). See DESIGN.md's experiment index (E1-E8).
+//! evaluation section (§7), plus the experiments that grew past it
+//! (hybrid E10, serving E11-E13, partitioning E14, prep-modes E15).
+//! See ARCHITECTURE.md's experiment index for the full E1-E15 list
+//! (E1-E8 are the paper's tables, figures and named ablations; E9 is
+//! the SIGN extension, driven from its own example rather than here).
 //!
 //! Conventions:
 //!   * accuracy/loss numbers are always REAL (trained end to end through
@@ -43,12 +47,19 @@
 //! (crash/stall/slow/flaky/chaos from `crate::faults`) into the fleet
 //! and reports measured completion, failover, degradation and retries
 //! against `Scenarios::fleet_availability`.
+//!
+//! The `partition` bench (E14) compares the hand-authored gat4 split
+//! against the DP balancer and the (stages, chunks, schedule) sweep
+//! winner from `pipeline::partition` — modeled epochs at every chunk
+//! count, measured epochs where artifacts exist, with the
+//! DP-never-worse-than-hand-authored check printed per row.
 
 mod ablation;
 mod faults;
 mod figures;
 mod fleet;
 mod hybrid;
+mod partition;
 mod prep;
 mod runs;
 mod serve;
@@ -60,6 +71,7 @@ pub use faults::bench_serve_faults;
 pub use figures::{bench_fig1, bench_fig2, bench_fig3, bench_fig4};
 pub use fleet::bench_serve_fleet;
 pub use hybrid::bench_hybrid;
+pub use partition::bench_partition;
 pub use prep::bench_prep_modes;
 pub use runs::{BenchCtx, PipelineRun, SingleRun};
 pub use serve::bench_serve;

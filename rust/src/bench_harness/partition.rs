@@ -1,0 +1,227 @@
+//! E14 — auto-partitioning: the hand-authored gat4 split vs the DP
+//! balancer vs the full (stages, chunks, schedule) sweep winner, at
+//! every chunk count the config sweeps.
+//!
+//! Modeled columns price each balance with `partition::model_epoch`
+//! (closed-form roofline profile, the session's schedule); measured
+//! columns are real pipeline training epochs — only available for the
+//! canonical balance, because non-canonical splits need span artifacts
+//! (`aot.py --partition`) that the default artifact dir doesn't carry.
+//! The DP row must never model WORSE than the hand-authored row (it
+//! searches a superset containing that split); the bench prints the
+//! check explicitly per chunk count.
+//!
+//! Emits `partition.csv` and a `BENCH_partition.json` snapshot (CLI
+//! writer: `quick: false`; CI's trajectory job uses
+//! `benches/partition.rs` — same dual-writer convention as
+//! `BENCH_faults.json`).
+
+use std::fmt::Write as _;
+
+use anyhow::Result;
+
+use crate::metrics::{write_bench_snapshot, BenchSample, Table};
+use crate::pipeline::partition::{
+    balance_dp, model_epoch, sweep, CostProfile, SweepConstraints,
+    CANONICAL_BALANCE,
+};
+use crate::simulator::DEVICES;
+
+use super::{framework_label, BenchCtx};
+
+/// E14: hand-authored gat4 vs DP-balanced vs sweep winner — modeled
+/// epochs per chunk count, measured where artifacts exist.
+pub fn bench_partition(ctx: &BenchCtx) -> Result<String> {
+    let ds_name = ctx.cfg.pipeline.pipeline_dataset.clone();
+    let backend = ctx
+        .cfg
+        .pipeline
+        .pipeline_backends
+        .first()
+        .cloned()
+        .unwrap_or_else(|| "ell".to_string());
+    let devices = ctx.cfg.pipeline.devices;
+    let chunk_counts = ctx.cfg.pipeline.chunks.clone();
+    let profile = CostProfile::closed_form(
+        ctx.cfg.dataset(&ds_name)?,
+        &ctx.cfg.model,
+        &DEVICES.v100,
+        &CostProfile::default_calibration(),
+    );
+
+    let mut table = Table::new(&[
+        "Chunks",
+        "Split",
+        "Balance",
+        "Modeled epoch",
+        "Measured epoch",
+        "Bottleneck",
+        "Bubble",
+    ]);
+    let mut csv = String::from(
+        "chunks,split,balance,schedule,modeled_epoch_s,measured_epoch_s,\
+         bottleneck_s,bubble_fraction\n",
+    );
+    let mut snapshot: Vec<BenchSample> = Vec::new();
+    let mut point = |name: String, mean_s: f64| {
+        snapshot.push(BenchSample {
+            name,
+            iters: 1,
+            mean_s,
+            std_s: 0.0,
+            min_s: mean_s,
+        });
+    };
+    let mut dp_never_worse = true;
+
+    for &chunks in &chunk_counts {
+        // Measured epochs exist only for the canonical split — the
+        // artifact dir carries the gat4 stage kinds.
+        let measured = match ctx.pipeline_run(&backend, chunks, false, false) {
+            Ok(run) => Some(run.timing.avg_epoch_s()),
+            Err(e) => {
+                eprintln!(
+                    "[bench] partition: measured run (chunks={chunks}) \
+                     unavailable: {e:#}"
+                );
+                None
+            }
+        };
+        let fmt_measured = |canonical: bool| match (canonical, measured) {
+            (true, Some(s)) => format!("{:.4} s", s),
+            _ => "-".to_string(),
+        };
+
+        let hand = model_epoch(
+            &profile,
+            &CANONICAL_BALANCE,
+            chunks,
+            ctx.schedule.as_ref(),
+        )?;
+        let part = balance_dp(&profile, devices, chunks)?;
+        let dp = model_epoch(
+            &profile,
+            &part.balance,
+            chunks,
+            ctx.schedule.as_ref(),
+        )?;
+        let dp_is_canonical = part.balance[..] == CANONICAL_BALANCE;
+        dp_never_worse &= dp.makespan_s <= hand.makespan_s + 1e-12;
+
+        for (split, balance, rep, canonical, bottleneck) in [
+            (
+                "gat4",
+                CANONICAL_BALANCE.to_vec(),
+                &hand,
+                true,
+                f64::NAN,
+            ),
+            ("dp", part.balance.clone(), &dp, dp_is_canonical, part.bottleneck_s),
+        ] {
+            table.row(&[
+                format!("{chunks}"),
+                split.to_string(),
+                format!("{balance:?}"),
+                format!("{:.4e} s", rep.makespan_s),
+                fmt_measured(canonical),
+                if bottleneck.is_nan() {
+                    "-".to_string()
+                } else {
+                    format!("{bottleneck:.4e} s")
+                },
+                format!("{:.3}", rep.bubble_fraction),
+            ]);
+            let _ = writeln!(
+                csv,
+                "{chunks},{split},\"{balance:?}\",{},{:.6e},{},{},{:.4}",
+                ctx.schedule.name(),
+                rep.makespan_s,
+                match (canonical, measured) {
+                    (true, Some(s)) => format!("{s:.6e}"),
+                    _ => String::new(),
+                },
+                if bottleneck.is_nan() {
+                    String::new()
+                } else {
+                    format!("{bottleneck:.6e}")
+                },
+                rep.bubble_fraction,
+            );
+            point(
+                format!("cli partition {split} modeled epoch (c={chunks})"),
+                rep.makespan_s,
+            );
+        }
+        if let Some(s) = measured {
+            point(format!("cli partition measured epoch (c={chunks})"), s);
+        }
+    }
+    ctx.engine.clear_cache();
+
+    // The full search the `partition` subcommand runs, priced on the
+    // same profile; its winner is a pure function of these inputs.
+    let cons = SweepConstraints::defaults(devices, &chunk_counts);
+    let report = sweep(&profile, &cons)?;
+    let winner = report.winner();
+    table.row(&[
+        format!("{}", winner.chunks),
+        "sweep".to_string(),
+        format!("{:?} ({})", winner.balance, winner.schedule),
+        format!("{:.4e} s", winner.epoch_s),
+        "-".to_string(),
+        format!("{:.4e} s", winner.bottleneck_s),
+        format!("{:.3}", winner.bubble_fraction),
+    ]);
+    let _ = writeln!(
+        csv,
+        "{},sweep,\"{:?}\",{},{:.6e},,{:.6e},{:.4}",
+        winner.chunks,
+        winner.balance,
+        winner.schedule,
+        winner.epoch_s,
+        winner.bottleneck_s,
+        winner.bubble_fraction,
+    );
+    point("cli partition sweep winner epoch".to_string(), winner.epoch_s);
+
+    ctx.write_csv("partition.csv", &csv)?;
+    write_partition_snapshot(ctx, winner.chunks, &winner.balance, &snapshot)?;
+    Ok(format!(
+        "Auto-partitioning — {} {ds_name}, schedule {}, {devices} devices, \
+         closed-form profile (source {})\n{}\n\
+         DP modeled epoch <= hand-authored at every chunk count: {}\n\
+         sweep winner: balance {:?} chunks {} schedule {} — replayable from \
+         (profile, constraints) alone; `gnn-pipe partition --out` writes it \
+         as a partition file\n",
+        framework_label(&backend),
+        ctx.schedule.name(),
+        profile.source,
+        table.render(),
+        if dp_never_worse { "PASS" } else { "FAIL" },
+        winner.balance,
+        winner.chunks,
+        winner.schedule,
+    ))
+}
+
+/// Write the `BENCH_partition.json` perf-trajectory snapshot. Same
+/// dual-writer convention as `BENCH_faults.json`: this CLI sweep writes
+/// `quick: false`, CI's `cargo bench --bench partition -- --quick`
+/// writes `quick: true`, and `bench_diff.py` skips mixed pairs.
+fn write_partition_snapshot(
+    ctx: &BenchCtx,
+    winner_chunks: usize,
+    winner_balance: &[usize],
+    samples: &[BenchSample],
+) -> Result<()> {
+    let extras = [
+        ("quick", "false".to_string()),
+        ("source", "\"gnn-pipe bench partition\"".to_string()),
+        ("winner_chunks", winner_chunks.to_string()),
+        ("winner_balance", format!("\"{winner_balance:?}\"")),
+    ];
+    let path = ctx.cfg.root.join("BENCH_partition.json");
+    write_bench_snapshot(&path, "partition", &extras, samples)?;
+    eprintln!("[bench] wrote {}", path.display());
+    Ok(())
+}

@@ -1,4 +1,4 @@
-//! E9 — prep-mode comparison: the §7.2 host-rebuild stall under the
+//! E15 — prep-mode comparison: the §7.2 host-rebuild stall under the
 //! three [`PrepMode`]s, real CPU runs plus DGX projections priced with
 //! the same mode (`Scenarios::dgx_pipeline_epoch_prep`).
 //!
@@ -16,6 +16,8 @@ use super::{framework_label, schedule_label, BenchCtx};
 
 const MODES: [PrepMode; 3] = [PrepMode::Paper, PrepMode::Cached, PrepMode::Overlap];
 
+/// E15: the three prep modes side by side, with the bitwise-parity
+/// column asserting they are accounting changes only.
 pub fn bench_prep_modes(ctx: &BenchCtx) -> Result<String> {
     let backend = "ell";
     // The stall only exists with micro-batching: use the largest

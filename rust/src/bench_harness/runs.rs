@@ -18,6 +18,7 @@ use crate::pipeline::{
 use crate::runtime::Engine;
 use crate::train::{EvalMetrics, SingleDeviceTrainer};
 
+/// One single-device training run: timing, final eval, curves.
 #[derive(Debug, Clone)]
 pub struct SingleRun {
     pub timing: RunTiming,
@@ -27,6 +28,8 @@ pub struct SingleRun {
     pub val_acc: Curve,
 }
 
+/// One pipeline training run: timing, pipeline + full-graph evals,
+/// curves, and retention/prep accounting.
 #[derive(Debug, Clone)]
 pub struct PipelineRun {
     pub timing: RunTiming,
@@ -83,6 +86,8 @@ impl BenchCtx {
         Self::with_schedule(epochs, parse_schedule(&cfg.pipeline.schedule)?)
     }
 
+    /// A context with an explicit schedule (the CLI default comes
+    /// from the config).
     pub fn with_schedule(
         epochs: usize,
         schedule: Arc<dyn Schedule>,
@@ -252,6 +257,7 @@ impl BenchCtx {
         Ok(run)
     }
 
+    /// Write one results/ CSV (no-op when CSV output is disabled).
     pub fn write_csv(&self, name: &str, contents: &str) -> Result<()> {
         let path = self.results_dir.join(name);
         std::fs::write(&path, contents)?;

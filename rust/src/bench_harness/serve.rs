@@ -35,6 +35,8 @@ use crate::train::{flatten_params, init_params};
 
 use super::{framework_label, BenchCtx};
 
+/// E11: the serving path at several (rate, max_batch) operating
+/// points, measured vs the closed-form latency model.
 pub fn bench_serve(ctx: &BenchCtx) -> Result<String> {
     let sc = &ctx.cfg.serve;
     let backend = sc.backend.clone();

@@ -11,6 +11,7 @@ use crate::simulator::{Scenarios, DEVICES};
 
 use super::{framework_label, BenchCtx};
 
+/// E1: the paper's Table 1 — single-device runs, both frameworks.
 pub fn bench_table1(ctx: &BenchCtx) -> Result<String> {
     let mut table = Table::new(&[
         "Compute", "Framework", "Cora ms", "CiteSeer ms", "PubMed ms",

@@ -22,6 +22,7 @@ use super::{framework_label, schedule_label, BenchCtx};
 /// the paper's shape (setup ≫ steady-state epoch).
 const DGX_SETUP_S: f64 = 7.0;
 
+/// E2: the paper's Table 2 — the comprehensive PubMed benchmark.
 pub fn bench_table2(ctx: &BenchCtx) -> Result<String> {
     let epochs = ctx.epochs;
     let mut table = Table::new(&[

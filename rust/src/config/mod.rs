@@ -117,6 +117,78 @@ pub struct PipelineConfig {
     /// 0 = auto (`min(replicas, cores)`); 1 = the sequential replica
     /// loop. Results are bit-identical at any value.
     pub replica_threads: usize,
+    /// How the pipeline stages are chosen (overridable per run with
+    /// `--partition`): "gat4" runs the hand-authored split, "auto" asks
+    /// `pipeline::partition::balance_dp` to derive it from the
+    /// closed-form cost profile, and any other value is read as a path
+    /// to a partition file written by `gnn-pipe partition --out`.
+    pub partition: String,
+}
+
+impl PipelineConfig {
+    const KNOWN_KEYS: [&'static str; 10] = [
+        "devices",
+        "balance",
+        "chunks",
+        "pipeline_dataset",
+        "pipeline_backends",
+        "schedule",
+        "prep",
+        "replicas",
+        "replica_threads",
+        "partition",
+    ];
+
+    /// Parse `configs/pipeline.json`. Like [`ServeConfig::from_json`],
+    /// every present key must be known — a typo like `partiton`
+    /// silently falling back to a default is the failure mode this
+    /// check exists to catch.
+    pub fn from_json(p: &Json) -> Result<PipelineConfig> {
+        let obj = p.as_obj().context("configs/pipeline.json must be an object")?;
+        reject_unknown_keys("configs/pipeline.json", obj.keys(), &Self::KNOWN_KEYS)?;
+        let arr_usize = |key: &str| -> Result<Vec<usize>> {
+            Ok(p.req(key)?
+                .as_arr()
+                .with_context(|| format!("{key} must be an array"))?
+                .iter()
+                .filter_map(Json::as_usize)
+                .collect())
+        };
+        Ok(PipelineConfig {
+            devices: p.u("devices")?,
+            balance: arr_usize("balance")?,
+            chunks: arr_usize("chunks")?,
+            pipeline_dataset: p.s("pipeline_dataset")?.to_string(),
+            pipeline_backends: p
+                .req("pipeline_backends")?
+                .as_arr()
+                .context("pipeline_backends must be an array")?
+                .iter()
+                .filter_map(|j| j.as_str().map(String::from))
+                .collect(),
+            // Optional keys: older configs predate schedules/prep modes.
+            schedule: p
+                .get("schedule")
+                .and_then(Json::as_str)
+                .unwrap_or("fill-drain")
+                .to_string(),
+            prep: p
+                .get("prep")
+                .and_then(Json::as_str)
+                .unwrap_or("paper")
+                .to_string(),
+            replicas: p.get("replicas").and_then(Json::as_usize).unwrap_or(1),
+            replica_threads: p
+                .get("replica_threads")
+                .and_then(Json::as_usize)
+                .unwrap_or(0),
+            partition: p
+                .get("partition")
+                .and_then(Json::as_str)
+                .unwrap_or("gat4")
+                .to_string(),
+        })
+    }
 }
 
 /// Serving defaults: the Rust view of `configs/serve.json` (all keys
@@ -212,23 +284,7 @@ impl ServeConfig {
     /// suggested).
     pub fn from_json(s: &Json) -> Result<ServeConfig> {
         let obj = s.as_obj().context("configs/serve.json must be an object")?;
-        for key in obj.keys() {
-            if !Self::KNOWN_KEYS.contains(&key.as_str()) {
-                let near = Self::KNOWN_KEYS
-                    .iter()
-                    .min_by_key(|k| edit_distance(key, k))
-                    .filter(|k| edit_distance(key, k) <= 3);
-                let hint = match near {
-                    Some(k) => format!(" (did you mean {k:?}?)"),
-                    None => String::new(),
-                };
-                anyhow::bail!(
-                    "configs/serve.json: unknown key {key:?}{hint}; \
-                     known keys: {}",
-                    Self::KNOWN_KEYS.join(", ")
-                );
-            }
-        }
+        reject_unknown_keys("configs/serve.json", obj.keys(), &Self::KNOWN_KEYS)?;
         let mut serve = ServeConfig::default();
         if let Some(v) = s.get("backend").and_then(Json::as_str) {
             serve.backend = v.to_string();
@@ -274,6 +330,34 @@ impl ServeConfig {
         }
         Ok(serve)
     }
+}
+
+/// Shared strict-key gate for config objects: every present key must be
+/// one of `known`, otherwise error by name with the nearest known key
+/// suggested. Silent fallback-to-default on a typo is the failure mode
+/// this exists to catch.
+fn reject_unknown_keys<'a>(
+    file: &str,
+    keys: impl Iterator<Item = &'a String>,
+    known: &[&str],
+) -> Result<()> {
+    for key in keys {
+        if !known.contains(&key.as_str()) {
+            let near = known
+                .iter()
+                .min_by_key(|k| edit_distance(key, k))
+                .filter(|k| edit_distance(key, k) <= 3);
+            let hint = match near {
+                Some(k) => format!(" (did you mean {k:?}?)"),
+                None => String::new(),
+            };
+            anyhow::bail!(
+                "{file}: unknown key {key:?}{hint}; known keys: {}",
+                known.join(", ")
+            );
+        }
+    }
+    Ok(())
 }
 
 /// Plain Levenshtein distance, for did-you-mean hints on config keys.
@@ -358,44 +442,9 @@ impl Config {
             epochs: m.u("epochs")?,
         };
 
-        let p = read_json(&root.join("configs/pipeline.json"))?;
-        let arr_usize = |key: &str| -> Result<Vec<usize>> {
-            Ok(p.req(key)?
-                .as_arr()
-                .with_context(|| format!("{key} must be an array"))?
-                .iter()
-                .filter_map(Json::as_usize)
-                .collect())
-        };
-        let pipeline = PipelineConfig {
-            devices: p.u("devices")?,
-            balance: arr_usize("balance")?,
-            chunks: arr_usize("chunks")?,
-            pipeline_dataset: p.s("pipeline_dataset")?.to_string(),
-            pipeline_backends: p
-                .req("pipeline_backends")?
-                .as_arr()
-                .context("pipeline_backends must be an array")?
-                .iter()
-                .filter_map(|j| j.as_str().map(String::from))
-                .collect(),
-            // Optional keys: older configs predate schedules/prep modes.
-            schedule: p
-                .get("schedule")
-                .and_then(Json::as_str)
-                .unwrap_or("fill-drain")
-                .to_string(),
-            prep: p
-                .get("prep")
-                .and_then(Json::as_str)
-                .unwrap_or("paper")
-                .to_string(),
-            replicas: p.get("replicas").and_then(Json::as_usize).unwrap_or(1),
-            replica_threads: p
-                .get("replica_threads")
-                .and_then(Json::as_usize)
-                .unwrap_or(0),
-        };
+        let pipeline_path = root.join("configs/pipeline.json");
+        let pipeline = PipelineConfig::from_json(&read_json(&pipeline_path)?)
+            .with_context(|| format!("loading {}", pipeline_path.display()))?;
 
         // Optional file with optional (but strictly known) keys:
         // serving defaults.
@@ -443,6 +492,34 @@ mod tests {
         assert!(c.pipeline.replicas >= 1);
         // 0 = auto-resolve to min(replicas, cores) at group creation.
         assert_eq!(c.pipeline.replica_threads, 0);
+        // The shipped default runs the hand-authored split (bitwise
+        // baseline); "auto" and file paths are opt-in per run.
+        assert_eq!(c.pipeline.partition, "gat4");
+    }
+
+    #[test]
+    fn pipeline_config_rejects_unknown_keys_by_name() {
+        let base = r#""devices": 4, "balance": [2, 1, 2, 1], "chunks": [1],
+                       "pipeline_dataset": "pubmed", "pipeline_backends": ["ell"]"#;
+        let j = Json::parse(&format!("{{{base}, \"partiton\": \"auto\"}}")).unwrap();
+        let err = PipelineConfig::from_json(&j).unwrap_err().to_string();
+        assert!(err.contains("partiton"), "error must name the bad key: {err}");
+        assert!(
+            err.contains("did you mean \"partition\""),
+            "error must suggest the near miss: {err}"
+        );
+        // A key nothing resembles still errors, just without a hint.
+        let j = Json::parse(&format!("{{{base}, \"qqqqqqqqqqqq\": 1}}")).unwrap();
+        let err = PipelineConfig::from_json(&j).unwrap_err().to_string();
+        assert!(err.contains("qqqqqqqqqqqq") && !err.contains("did you mean"));
+        // Optional keys default; present ones overlay.
+        let j = Json::parse(&format!("{{{base}}}")).unwrap();
+        let p = PipelineConfig::from_json(&j).unwrap();
+        assert_eq!(p.partition, "gat4");
+        assert_eq!(p.schedule, "fill-drain");
+        let j = Json::parse(&format!("{{{base}, \"partition\": \"auto\"}}")).unwrap();
+        let p = PipelineConfig::from_json(&j).unwrap();
+        assert_eq!(p.partition, "auto");
     }
 
     #[test]

@@ -9,7 +9,8 @@
 //!   * per-node degree capped at `ell_k - 1` so the ELL width K always
 //!     suffices (the real graphs have hub nodes above K; the cap drops a
 //!     small number of edge *stubs*, counted in the report — the paper's
-//!     phenomena do not depend on hubs, see DESIGN.md §ELL);
+//!     phenomena do not depend on hubs, see ARCHITECTURE.md §Hardware
+//!     adaptation);
 //!   * bag-of-words features: each class owns a topic block of the
 //!     vocabulary where word activation probability is boosted (TOPIC_BOOST), then
 //!     rows are L1-normalised (the standard Planetoid preprocessing).

@@ -5,7 +5,7 @@
 //! feature/class counts from `configs/datasets.json`) by a
 //! degree-capped, homophilous stochastic block model with
 //! class-correlated sparse bag-of-words features (see `generator`).
-//! DESIGN.md §Substitutions explains why this preserves the paper's
+//! ARCHITECTURE.md §Substitutions explains why this preserves the paper's
 //! phenomena; `gnn-pipe data --dataset X` prints the realised statistics
 //! next to the published targets.
 

@@ -70,6 +70,7 @@ pub enum FaultScenario {
 }
 
 impl FaultScenario {
+    /// Parse a CLI scenario name (`--faults`).
     pub fn parse(s: &str) -> Result<FaultScenario> {
         Ok(match s {
             "none" => FaultScenario::None,
@@ -84,6 +85,7 @@ impl FaultScenario {
         })
     }
 
+    /// The CLI/report name of this scenario.
     pub fn name(&self) -> &'static str {
         match self {
             FaultScenario::None => "none",
@@ -95,6 +97,7 @@ impl FaultScenario {
         }
     }
 
+    /// Every scenario, in report order.
     pub fn all() -> &'static [FaultScenario] {
         &[
             FaultScenario::None,
@@ -313,25 +316,30 @@ pub struct StageFaults {
 }
 
 impl StageFaults {
+    /// No injected faults.
     pub fn new() -> StageFaults {
         StageFaults::default()
     }
 
+    /// Inject a stall of `duration_s` before (stage, micro_batch).
     pub fn with_stall(mut self, stage: usize, micro_batch: usize, duration_s: f64) -> StageFaults {
         self.stalls.push((stage, micro_batch, duration_s));
         self
     }
 
+    /// Add a uniform per-batch slowdown.
     pub fn with_slow(mut self, per_batch_s: f64) -> StageFaults {
         self.slow_batch_s += per_batch_s.max(0.0);
         self
     }
 
+    /// Inject `count` transient (retryable) errors at (stage, micro_batch).
     pub fn with_transient(mut self, stage: usize, micro_batch: usize, count: usize) -> StageFaults {
         self.transients.lock().unwrap().push((stage, micro_batch, count));
         self
     }
 
+    /// True when nothing is injected (the fault-free fast path).
     pub fn is_empty(&self) -> bool {
         self.stalls.is_empty()
             && self.slow_batch_s <= 0.0
@@ -348,6 +356,7 @@ impl StageFaults {
         self.abort.store(false, Ordering::SeqCst);
     }
 
+    /// Whether a peer worker tripped the shared abort flag.
     pub fn aborted(&self) -> bool {
         self.abort.load(Ordering::SeqCst)
     }

@@ -2,7 +2,7 @@
 //!
 //! Row i: slot 0 is the self-loop, then neighbours, zero-padded to K.
 //! This is the rectangular, maskable layout the Pallas kernel consumes
-//! (DESIGN.md §Hardware adaptation). Degree must be < K — the synthetic
+//! (ARCHITECTURE.md §Hardware adaptation). Degree must be < K — the synthetic
 //! generator guarantees it (degree cap), and `from_graph` enforces it.
 
 use anyhow::Result;

@@ -1,6 +1,6 @@
 //! Graph statistics: degree distribution, components, homophily — used
 //! by `gnn-pipe data` to validate the synthetic datasets against the
-//! published profiles and by EXPERIMENTS.md's dataset table.
+//! published profiles (ARCHITECTURE.md §Substitutions).
 
 use super::Graph;
 

@@ -16,16 +16,21 @@
 //!   a build-once cache, or an epoch-overlap prefetcher, with
 //!   device-resident static inputs), Adam, the training loops, the
 //!   device/DGX performance simulator (which replays the same schedules
-//!   and prep modes to price bubbles and stalls), an inference serving
-//!   subsystem ([`serve`]: deterministic traffic traces, dynamic
-//!   request batching, a forward-only streaming schedule and
-//!   tail-latency accounting), and the bench harness that regenerates
+//!   and prep modes to price bubbles and stalls), an auto-balancing
+//!   partitioner ([`pipeline::partition`]: DP over contiguous layer
+//!   groupings + a simulator-guided (stages, chunks, schedule) sweep),
+//!   an inference serving subsystem ([`serve`]: deterministic traffic
+//!   traces, dynamic request batching, a forward-only streaming
+//!   schedule, tail-latency accounting, and a multi-replica fleet with
+//!   JSQ routing + SLO-aware admission), deterministic fault injection
+//!   with failover ([`faults`]), and the bench harness that regenerates
 //!   every table and figure of the paper.
 //!
 //! Python never runs on the training path: after `make artifacts` the
 //! binary is self-contained, executing the HLO via the PJRT CPU client.
 //!
-//! See DESIGN.md for the system inventory and experiment index.
+//! See ARCHITECTURE.md for the subsystem map, the determinism
+//! contracts, and the experiment index.
 
 pub mod batching;
 pub mod bench_harness;

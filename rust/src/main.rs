@@ -7,7 +7,16 @@
 //!             [--replicas R] [--replica-threads T]
 //!             [--schedule fill-drain|1f1b]
 //!             [--prep paper|cached|overlap]
+//!             [--partition gat4|auto|FILE]
+//!             [--repartition-check]
 //!             [--star] [--graph-aware]               pipeline training
+//!   partition [--stages S] [--dataset D]
+//!             [--source closed-form|measured]
+//!             [--backend B] [--epochs N] [--out F]   DP-balance the stage
+//!                                                   split and sweep
+//!                                                   (stages, chunks,
+//!                                                   schedule) for the
+//!                                                   cheapest modeled epoch
 //!   serve     [--backend B] [--rate R] [--requests N]
 //!             [--max-batch B] [--max-wait-ms W] [--seed S]
 //!             [--replicas R] [--traffic poisson|mmpp|diurnal|flash]
@@ -21,7 +30,7 @@
 //!   bench     table1|table2|fig1|fig2|fig3|fig4|
 //!             ablation-chunker|edge-retention|
 //!             prep-modes|hybrid|serve|serve-fleet|
-//!             serve-faults|all
+//!             serve-faults|partition|all
 //!             [--epochs N] [--schedule S] [--prep P] [--replicas R]
 //!             [--replica-threads T]
 //!   inspect                                          artifact manifest summary
@@ -36,13 +45,18 @@ use gnn_pipe::config::Config;
 use gnn_pipe::data::generate;
 use gnn_pipe::faults::{FaultPlan, FaultScenario};
 use gnn_pipe::graph::GraphStats;
+use gnn_pipe::metrics::Table;
+use gnn_pipe::pipeline::partition::{
+    balance_dp, spec_for_balance, sweep, CostProfile, PartitionFile,
+    SweepConstraints, CANONICAL_BALANCE,
+};
 use gnn_pipe::pipeline::{parse_schedule, PipelineSpec, PipelineTrainer, PrepMode};
 use gnn_pipe::runtime::{Engine, Manifest};
 use gnn_pipe::serve::{
     generate_trace, BatchPolicy, FleetPolicy, FleetSession, RouterKind,
     SloPolicy, TraceSpec, TrafficShape,
 };
-use gnn_pipe::simulator::Scenarios;
+use gnn_pipe::simulator::{Scenarios, DEVICES};
 use gnn_pipe::train::{flatten_params, init_params, SingleDeviceTrainer};
 use gnn_pipe::util::cli::Args;
 
@@ -55,7 +69,10 @@ USAGE:
   gnn-pipe pipeline  [--backend <ell|edgewise>] [--chunks K] [--replicas R] [--epochs N]
                      [--replica-threads T]
                      [--schedule fill-drain|1f1b] [--prep paper|cached|overlap]
+                     [--partition gat4|auto|<file>] [--repartition-check]
                      [--star] [--graph-aware]
+  gnn-pipe partition [--stages S] [--dataset <name>] [--source closed-form|measured]
+                     [--backend <ell|edgewise>] [--epochs N] [--out <file>]
   gnn-pipe serve     [--backend <ell|edgewise>] [--rate R] [--requests N]
                      [--max-batch B] [--max-wait-ms W] [--seed S]
                      [--replicas R] [--traffic poisson|mmpp|diurnal|flash]
@@ -63,7 +80,7 @@ USAGE:
                      [--service-model-ms M]
                      [--faults none|crash|stall|slow|flaky|chaos]
                      [--fault-seed S] [--watchdog-s W]
-  gnn-pipe bench     <table1|table2|fig1|fig2|fig3|fig4|ablation-chunker|edge-retention|prep-modes|hybrid|serve|serve-fleet|serve-faults|all>
+  gnn-pipe bench     <table1|table2|fig1|fig2|fig3|fig4|ablation-chunker|edge-retention|prep-modes|hybrid|serve|serve-fleet|serve-faults|partition|all>
                      [--epochs N] [--schedule fill-drain|1f1b] [--prep paper|cached|overlap]
                      [--replicas R] [--replica-threads T]
   gnn-pipe inspect
@@ -105,6 +122,41 @@ REPLICA THREADS (--replica-threads, default from configs/pipeline.json;
                reported as replica_cpu_s, so wall/cpu is the realised
                host-concurrency speedup.
   T = 1        the sequential replica loop (the pre-concurrency code path)
+
+PARTITION (--partition on pipeline, default from configs/pipeline.json:
+gat4; `gnn-pipe partition` runs the search standalone):
+  gat4         the hand-authored paper split (the paper labels it
+               [2,1,2,1]; the executable module grouping is [2,2,1,1] —
+               the second dropout lives with ELU in stage 1)
+  auto         DP-balance the closed-form cost profile at the config's
+               (devices, chunks) and train under the result. The DP
+               minimizes the pipeline BOTTLENECK — the max per-stage
+               cost, compute plus boundary transfers at the cuts — over
+               contiguous layer groupings; ties break to the narrowest
+               total cut width, then to the latest cuts, so the split is
+               a pure function of (profile, constraints). On the paper's
+               pubmed GAT it reproduces the gat4 grouping, and the
+               canonical balance compiles to EXACTLY the hand-authored
+               spec — training under `--partition auto` is bit-identical
+               to the default path.
+  <file>       a partition file written by `gnn-pipe partition --out F`:
+               the sweep's winning (balance, chunks, schedule),
+               replayable from (profile, constraints) alone.
+               Non-canonical balances emit generic span artifact kinds
+               (l{a}_{b}_fwd / l{a}_{b}loss_bwd) that
+               `python -m compile.aot --partition F` knows how to lower.
+  --repartition-check   after training, fold the run's measured stage
+               means back into the DP and LOG when measured drift would
+               now pick a different split. It NEVER switches mid-run — a
+               switch would change artifact kinds and break the bitwise
+               replay contract; rerun `gnn-pipe partition` to adopt it.
+  `gnn-pipe partition` prints every priced (stages, chunks, schedule)
+  point and the winner; --source closed-form (default) prices the
+  roofline profile, --source measured times a short real run first and
+  folds the per-stage means onto the closed-form template. `bench
+  partition` compares hand-authored vs DP-balanced vs sweep winner
+  (modeled, plus measured where artifacts exist) and writes
+  partition.csv + BENCH_partition.json.
 
 SERVE (defaults from configs/serve.json; every number below is derived
 from the seed, so a run is replayable bit for bit):
@@ -205,6 +257,7 @@ fn run() -> Result<()> {
         "data" => cmd_data(&args),
         "train" => cmd_train(&args),
         "pipeline" => cmd_pipeline(&args),
+        "partition" => cmd_partition(&args),
         "serve" => cmd_serve(&args),
         "bench" => cmd_bench(&args),
         "inspect" => cmd_inspect(),
@@ -310,6 +363,10 @@ fn cmd_pipeline(args: &Args) -> Result<()> {
         args.opt_usize("replica-threads", cfg.pipeline.replica_threads)?;
     let schedule = parse_schedule(args.opt_str("schedule", &cfg.pipeline.schedule))?;
     let prep = args.opt_parse("prep", PrepMode::parse(&cfg.pipeline.prep)?)?;
+    let partition_sel =
+        args.opt_str("partition", &cfg.pipeline.partition).to_string();
+    let (spec, balance, partition_label) =
+        resolve_partition(&cfg, &partition_sel, chunks)?;
     let dataset = cfg.pipeline.pipeline_dataset.clone();
 
     let engine = Engine::from_artifacts_dir(&cfg.artifacts_dir())?;
@@ -319,6 +376,9 @@ fn cmd_pipeline(args: &Args) -> Result<()> {
     trainer.prep = prep;
     trainer.replicas = replicas;
     trainer.replica_threads = replica_threads;
+    trainer.spec = spec;
+    trainer.balance = balance;
+    trainer.repartition_check = args.flag("repartition-check");
     if star {
         trainer = trainer.full_graph_variant();
     }
@@ -326,13 +386,13 @@ fn cmd_pipeline(args: &Args) -> Result<()> {
         trainer.chunker = Box::new(GraphAwareChunker);
     }
     println!(
-        "pipeline training {dataset}/{backend} chunks={chunks}{} replicas={replicas} replica-threads={} schedule={} prep={} ({} devices/replica, balance {:?}) for {epochs} epochs...",
+        "pipeline training {dataset}/{backend} chunks={chunks}{} replicas={replicas} replica-threads={} schedule={} prep={} ({} devices/replica, partition {}) for {epochs} epochs...",
         if star { "*" } else { "" },
         if replica_threads == 0 { "auto".to_string() } else { replica_threads.to_string() },
         trainer.schedule.name(),
         prep.name(),
         cfg.pipeline.devices,
-        cfg.pipeline.balance
+        partition_label
     );
     let res = trainer.train(&cfg.model, epochs)?;
     println!("edge retention     {:.4}", res.retention.retained_fraction);
@@ -363,6 +423,137 @@ fn cmd_pipeline(args: &Args) -> Result<()> {
     println!("train acc   {}", res.train_acc.sparkline(60));
     for (s, (f, b)) in res.stage_means.iter().enumerate() {
         println!("stage {s}: mean fwd {:.2} ms, mean bwd {:.2} ms", f * 1e3, b * 1e3);
+    }
+    Ok(())
+}
+
+/// Resolve `--partition` (or the configs/pipeline.json `partition` key)
+/// into the spec to train plus its module counts and a display label:
+/// "gat4" is the hand-authored spec, "auto" DP-balances the closed-form
+/// profile at (devices, chunks), anything else is read as a partition
+/// file written by `gnn-pipe partition --out`.
+fn resolve_partition(
+    cfg: &Config,
+    sel: &str,
+    chunks: usize,
+) -> Result<(PipelineSpec, Vec<usize>, String)> {
+    match sel {
+        "gat4" => Ok((
+            PipelineSpec::gat4(),
+            CANONICAL_BALANCE.to_vec(),
+            "gat4 (hand-authored)".to_string(),
+        )),
+        "auto" => {
+            let profile = CostProfile::closed_form(
+                cfg.dataset(&cfg.pipeline.pipeline_dataset)?,
+                &cfg.model,
+                &DEVICES.v100,
+                &CostProfile::default_calibration(),
+            );
+            let part = balance_dp(&profile, cfg.pipeline.devices, chunks.max(1))?;
+            let label = format!(
+                "auto (DP balance {:?}, modeled bottleneck {:.3e} s)",
+                part.balance, part.bottleneck_s
+            );
+            Ok((part.to_spec()?, part.balance, label))
+        }
+        path => {
+            let pf = PartitionFile::read(std::path::Path::new(path))?;
+            let label = format!(
+                "file {path} (balance {:?}, source {})",
+                pf.balance, pf.source
+            );
+            Ok((spec_for_balance(&pf.balance)?, pf.balance, label))
+        }
+    }
+}
+
+fn cmd_partition(args: &Args) -> Result<()> {
+    let cfg = Config::load()?;
+    let dataset =
+        args.opt_str("dataset", &cfg.pipeline.pipeline_dataset).to_string();
+    let stages = args.opt_usize("stages", cfg.pipeline.devices)?;
+    let source = args.opt_str("source", "closed-form").to_string();
+    let ds_profile = cfg.dataset(&dataset)?;
+    let template = CostProfile::closed_form(
+        ds_profile,
+        &cfg.model,
+        &DEVICES.v100,
+        &CostProfile::default_calibration(),
+    );
+    let profile = match source.as_str() {
+        "closed-form" => template,
+        "measured" => {
+            let backend = args.opt_str("backend", "ell").to_string();
+            let epochs = args.opt_usize("epochs", 5)?;
+            let chunks = cfg.pipeline.chunks.iter().copied().max().unwrap_or(1);
+            let engine = Engine::from_artifacts_dir(&cfg.artifacts_dir())?;
+            let ds = generate(ds_profile)?;
+            let trainer = PipelineTrainer::new(&engine, &ds, &backend, chunks);
+            println!(
+                "measuring stage timings: {dataset}/{backend} chunks={chunks} \
+                 for {epochs} epochs..."
+            );
+            let res = trainer.train(&cfg.model, epochs)?;
+            CostProfile::fold_measured(
+                &template,
+                &res.stage_means,
+                &CANONICAL_BALANCE,
+            )?
+        }
+        other => anyhow::bail!(
+            "unknown --source {other:?}: expected closed-form or measured"
+        ),
+    };
+    let cons = SweepConstraints::defaults(stages, &cfg.pipeline.chunks);
+    let report = sweep(&profile, &cons)?;
+    let winner = report.winner();
+
+    println!(
+        "partition search for {dataset} ({} points: stages {:?} x chunks {:?} \
+         x schedules {:?}; source {}):",
+        report.points.len(),
+        cons.stages,
+        cons.chunks,
+        cons.schedules,
+        profile.source
+    );
+    let mut table = Table::new(&[
+        "stages", "chunks", "schedule", "balance", "bottleneck", "epoch",
+        "bubble", "",
+    ]);
+    for (i, p) in report.points.iter().enumerate() {
+        table.row(&[
+            p.stages.to_string(),
+            p.chunks.to_string(),
+            p.schedule.clone(),
+            format!("{:?}", p.balance),
+            format!("{:.3e} s", p.bottleneck_s),
+            format!("{:.3e} s", p.epoch_s),
+            format!("{:.3}", p.bubble_fraction),
+            if i == report.best { "<- winner".to_string() } else { String::new() },
+        ]);
+    }
+    print!("{}", table.render());
+    println!(
+        "winner: balance {:?} chunks {} schedule {} (modeled epoch {:.3e} s, \
+         bottleneck {:.3e} s)",
+        winner.balance,
+        winner.chunks,
+        winner.schedule,
+        winner.epoch_s,
+        winner.bottleneck_s
+    );
+    if winner.balance[..] == CANONICAL_BALANCE {
+        println!(
+            "the winning balance is the canonical gat4 grouping: training under \
+             `--partition auto` is bit-identical to the hand-authored spec"
+        );
+    }
+    if let Some(out) = args.opt("out") {
+        let pf = PartitionFile::from_point(winner, &profile.source);
+        pf.write(std::path::Path::new(out))?;
+        println!("wrote {out}");
     }
     Ok(())
 }
@@ -543,6 +734,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
             "serve" => bench::bench_serve(ctx),
             "serve-fleet" => bench::bench_serve_fleet(ctx),
             "serve-faults" => bench::bench_serve_faults(ctx),
+            "partition" => bench::bench_partition(ctx),
             other => anyhow::bail!("unknown bench {other:?}"),
         }
     };
@@ -550,7 +742,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
         for name in [
             "table1", "table2", "fig1", "fig2", "fig3", "fig4",
             "ablation-chunker", "edge-retention", "prep-modes", "hybrid",
-            "serve", "serve-fleet", "serve-faults",
+            "serve", "serve-fleet", "serve-faults", "partition",
         ] {
             outputs.push(run(name, &ctx)?);
         }

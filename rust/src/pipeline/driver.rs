@@ -95,6 +95,16 @@ pub struct PipelineTrainer<'e> {
     pub prep_cache: Arc<MicrobatchCache>,
     pub seed: u64,
     pub eval_every: usize,
+    /// Module counts per stage for `spec` (the partitioner's view of
+    /// the layout). Only consulted by the `--repartition-check` drift
+    /// log; defaults to the canonical gat4 grouping.
+    pub balance: Vec<usize>,
+    /// After training, fold the measured stage means back into the
+    /// partitioner and LOG (never switch) when the DP would now pick a
+    /// different split (CLI `--repartition-check`). A mid-run switch
+    /// would change artifact kinds and break bitwise replay, so this is
+    /// advisory only.
+    pub repartition_check: bool,
 }
 
 #[derive(Debug)]
@@ -179,6 +189,8 @@ impl<'e> PipelineTrainer<'e> {
             prep_cache: Arc::new(MicrobatchCache::new()),
             seed: 0,
             eval_every: 10,
+            balance: super::partition::CANONICAL_BALANCE.to_vec(),
+            repartition_check: false,
         }
     }
 
@@ -187,6 +199,34 @@ impl<'e> PipelineTrainer<'e> {
         assert_eq!(self.chunks, 1, "1* variant requires chunks == 1");
         self.rebuild = false;
         self
+    }
+
+    /// `--repartition-check`: fold the run's measured stage means back
+    /// into the partitioner and log (never switch) when the DP would
+    /// now pick a different split. Best-effort — a failure here must
+    /// not fail the training run.
+    fn log_repartition_drift(&self, mc: &ModelConfig, stage_means: &[(f64, f64)]) {
+        use super::partition::{drift_check, CostProfile};
+        let template = CostProfile::closed_form(
+            &self.dataset.profile,
+            mc,
+            &crate::simulator::DEVICES.v100,
+            &CostProfile::default_calibration(),
+        );
+        match drift_check(&template, stage_means, &self.balance, self.chunks) {
+            Ok(Some(part)) => eprintln!(
+                "repartition-check: measured timings now favour balance \
+                 {:?} (bottleneck {:.3e}s) over the running {:?}; NOT \
+                 switching mid-run — rerun with `gnn-pipe partition` to \
+                 adopt it",
+                part.balance, part.bottleneck_s, self.balance
+            ),
+            Ok(None) => eprintln!(
+                "repartition-check: measured timings confirm balance {:?}",
+                self.balance
+            ),
+            Err(e) => eprintln!("repartition-check skipped: {e:#}"),
+        }
     }
 
     pub fn train(&self, mc: &ModelConfig, epochs: usize) -> Result<PipelineResult> {
@@ -320,7 +360,7 @@ impl<'e> PipelineTrainer<'e> {
         let params = unflatten_params(st.flat, &order)?;
         let pipeline_eval = pipeline_evaluator.metrics(&params)?;
         let full_eval = full_evaluator.metrics(&params)?;
-        let stage_means = (0..n_stages)
+        let stage_means: Vec<(f64, f64)> = (0..n_stages)
             .map(|s| {
                 (
                     st.stage_fwd_sum[s] / st.stage_calls.max(1) as f64,
@@ -328,6 +368,10 @@ impl<'e> PipelineTrainer<'e> {
                 )
             })
             .collect();
+
+        if self.repartition_check && self.balance.len() == n_stages {
+            self.log_repartition_drift(mc, &stage_means);
+        }
 
         Ok(PipelineResult {
             timing: st.timing,

@@ -48,6 +48,16 @@
 //! DGX layout, and `simulator::host_concurrency_speedup` models the
 //! host-side speedup `bench hybrid` measures.
 //!
+//! Hand-authoring the spec is no longer the only option: the
+//! **[`partition`]** module turns a per-layer cost profile (measured
+//! stage timings folded down, or the simulator's closed-form roofline)
+//! into a balanced spec via a bottleneck-minimizing DP, and sweeps
+//! (stages, chunks, schedule) for the cheapest modeled operating point
+//! (CLI `gnn-pipe partition`, `--partition auto|<file>`). The chosen
+//! split is a pure function of its inputs, and the canonical result
+//! compiles to exactly [`PipelineSpec::gat4`], keeping auto-partitioned
+//! runs inside the bitwise-determinism contracts.
+//!
 //! The same engine also has a **forward-only serving mode**: a
 //! forward-only [`PipelineSpec`] (deterministic per-stage eval
 //! artifacts, no backward, no stash) plus the [`ServeStream`] schedule
@@ -78,6 +88,7 @@
 mod chunkprep;
 mod driver;
 mod engine;
+pub mod partition;
 mod prep;
 mod replica;
 mod schedule;

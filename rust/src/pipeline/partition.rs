@@ -1,0 +1,1045 @@
+//! Auto-balancing pipeline partitioner: turn a per-layer cost profile
+//! into a balanced [`PipelineSpec`] and search the (stages, chunks,
+//! schedule) space for the cheapest modeled operating point.
+//!
+//! The GAT is a fixed sequence of six modules (the *layer universe*,
+//! [`LAYERS`]): `[Dropout, GAT1, ELU, Dropout, GAT2, LogSoftmax]`.
+//! A partition is a contiguous grouping of that sequence into stages,
+//! written as a *balance* vector of module counts. The hand-authored
+//! split the paper labels `balance=[2,1,2,1]` (Listing 1 counts the
+//! modules per device *before* the compiled stages folded the second
+//! dropout into stage 1 — see `python/compile/model.py::stage1`) is, in
+//! executable module counts, [`CANONICAL_BALANCE`] = `[2, 2, 1, 1]`:
+//! `[Dropout,GAT1] [ELU,Dropout] [GAT2] [LogSoftmax]`.
+//!
+//! ## The DP and its invariant
+//!
+//! [`balance_dp`] minimizes the **pipeline bottleneck**: the maximum
+//! per-stage cost over one micro-batch, where a stage's cost is the
+//! fwd+bwd compute of its layers *plus the boundary traffic it owns*
+//! (activation out + cotangent in on each cut edge, priced at NVLink
+//! rates) — the time no schedule can hide, because every micro-batch
+//! must pass through the slowest stage and its links. Ties are broken
+//! deterministically: smallest total cut width first (fewer bytes on
+//! the wire), then the lexicographically largest balance (cuts pushed
+//! downstream), so the same profile always yields the same split.
+//!
+//! ```
+//! use gnn_pipe::pipeline::partition::{balance_dp, CostProfile};
+//!
+//! // Six layers of equal cost and equal width: the only way to keep the
+//! // max per-stage cost minimal over 3 stages is two layers per stage.
+//! let profile = CostProfile::uniform(6, 1.0, 2.0, 64);
+//! let part = balance_dp(&profile, 3, 1).unwrap();
+//! assert_eq!(part.balance, vec![2, 2, 2]);
+//! // The bottleneck really is the max per-stage cost: no other
+//! // 3-stage grouping of these layers has a smaller one.
+//! assert!(part.bottleneck_s >= 2.0 * (1.0 + 2.0));
+//! ```
+//!
+//! ## The sweep
+//!
+//! [`sweep`] prices every (stages, chunks, schedule) point in the given
+//! constraint set: DP-balance at that point, then run the discrete-event
+//! pipeline model ([`crate::simulator::simulate_pipeline_with`]) on the
+//! resulting per-stage costs — the same simulator that prices the real
+//! spec — and keep the point with the lowest modeled epoch (one
+//! full-batch optimiser step). The whole search is a pure function of
+//! `(profile, constraints)`: no clocks, no RNG, so a chosen partition is
+//! replayable bit-for-bit from its inputs (`gnn-pipe partition --out`
+//! writes them next to the choice).
+//!
+//! Cost profiles come from two sources ([`CostProfile::closed_form`]
+//! from the device model's roofline, or [`CostProfile::fold_measured`]
+//! distributing measured per-stage [`crate::pipeline::StageTiming`]
+//! means over the layers of each stage). When the DP answer for a
+//! measured profile drifts away from the running split, the driver's
+//! `--repartition-check` logs the better balance — it never silently
+//! switches specs mid-run, preserving the bitwise-determinism
+//! contracts.
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::{DatasetProfile, ModelConfig};
+use crate::simulator::{
+    simulate_pipeline_with, Calibration, DeviceModel, PipelineSimInput,
+    PipelineSimReport, DEVICES,
+};
+use crate::util::json::Json;
+
+use super::schedule::{parse_schedule, Schedule};
+use super::spec::{PipelineSpec, StageInput, StageSpec};
+
+/// One module of the GAT sequence: static structure (what flows out of
+/// it, what it needs) — costs live in [`CostProfile`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Layer {
+    /// Module name, used in generic artifact kinds and reports.
+    pub name: &'static str,
+    /// Parameter tensors this module owns (flat calling convention
+    /// indices are assigned in sequence order).
+    pub params: usize,
+    /// Whether the module reads the graph structure (GAT layers).
+    pub needs_graph: bool,
+    /// Whether the module consumes RNG (dropout, incl. attention
+    /// dropout inside the GAT layers).
+    pub stochastic: bool,
+}
+
+/// The six-module GAT sequence, in execution order. Output widths are
+/// dataset-dependent and live in [`CostProfile::layers`].
+pub const LAYERS: [Layer; 6] = [
+    Layer { name: "dropout0", params: 0, needs_graph: false, stochastic: true },
+    Layer { name: "gat1", params: 4, needs_graph: true, stochastic: true },
+    Layer { name: "elu", params: 0, needs_graph: false, stochastic: false },
+    Layer { name: "dropout1", params: 0, needs_graph: false, stochastic: true },
+    Layer { name: "gat2", params: 4, needs_graph: true, stochastic: true },
+    Layer { name: "logsoftmax", params: 0, needs_graph: false, stochastic: false },
+];
+
+/// The hand-authored gat4 split in executable module counts:
+/// `[Dropout,GAT1] [ELU,Dropout] [GAT2] [LogSoftmax]`. A partition with
+/// this balance compiles to exactly [`PipelineSpec::gat4`], so runs
+/// under it are bit-identical to the hand-authored path.
+pub const CANONICAL_BALANCE: [usize; 4] = [2, 2, 1, 1];
+
+/// Rematerialising backward over forward cost ratio used by the
+/// closed-form profile: the bwd executable replays the forward and then
+/// runs the reverse pass, so ~2x the forward's arithmetic.
+pub const BWD_OVER_FWD: f64 = 2.0;
+
+/// Per-layer cost entry: full-graph (chunks = 1) seconds plus the
+/// static structure the DP needs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LayerCost {
+    pub name: &'static str,
+    /// Forward seconds for a full-graph micro-batch.
+    pub fwd_s: f64,
+    /// Backward (rematerialising) seconds for a full-graph micro-batch.
+    pub bwd_s: f64,
+    /// f32 elements per node flowing OUT of this layer — the width of a
+    /// cut placed immediately after it.
+    pub out_width: usize,
+    pub params: usize,
+    pub needs_graph: bool,
+    pub stochastic: bool,
+}
+
+/// A per-layer cost profile: everything [`balance_dp`] and [`sweep`]
+/// read. Pure data — two equal profiles always produce identical
+/// partitions.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CostProfile {
+    pub layers: Vec<LayerCost>,
+    /// Full-graph node count (scales costs down to micro-batches and
+    /// sizes boundary transfers).
+    pub nodes: usize,
+    /// Bytes of graph structure uploaded per chunk node when a stage
+    /// rebuilds its sub-graph (ELL row: k neighbour ids + k values).
+    pub graph_bytes_per_node: f64,
+    /// Host-side sub-graph rebuild seconds per chunk node (the paper's
+    /// §7.2 term; measured when available, modeled otherwise).
+    pub rebuild_s_per_node: f64,
+    /// Where the costs came from ("closed-form" or "measured") — recorded
+    /// in partition files so every choice is attributable.
+    pub source: String,
+}
+
+impl CostProfile {
+    /// A synthetic profile of `n` identical layers — doctests, unit
+    /// tests and microbenches.
+    pub fn uniform(n: usize, fwd_s: f64, bwd_s: f64, out_width: usize) -> CostProfile {
+        let layers = (0..n)
+            .map(|i| LayerCost {
+                name: LAYERS[i % LAYERS.len()].name,
+                fwd_s,
+                bwd_s,
+                out_width,
+                params: 0,
+                needs_graph: false,
+                stochastic: false,
+            })
+            .collect();
+        CostProfile {
+            layers,
+            nodes: 1,
+            graph_bytes_per_node: 0.0,
+            rebuild_s_per_node: 0.0,
+            source: "uniform".into(),
+        }
+    }
+
+    /// The calibration used when no measurement exists: a conservative
+    /// 20% of the target device's roofline, matching what the measured
+    /// GAT kernels typically achieve (see `Scenarios::calibrate_from_cpu`).
+    pub fn default_calibration() -> Calibration {
+        Calibration {
+            achieved_gflops: DEVICES.v100.peak_gflops * 0.2,
+            efficiency: 0.2,
+        }
+    }
+
+    /// Closed-form per-layer costs from the device model's roofline —
+    /// the "no measurement exists" source. FLOP/byte counts are the
+    /// simulator's analytic estimates for each module at full-graph
+    /// shape; `dev.exec_time` prices them under `cal`.
+    pub fn closed_form(
+        ds: &DatasetProfile,
+        mc: &ModelConfig,
+        dev: &DeviceModel,
+        cal: &Calibration,
+    ) -> CostProfile {
+        let n = ds.nodes as f64;
+        let e = ds.e_cap() as f64;
+        let f = ds.features as f64;
+        let h = mc.heads as f64;
+        let hd = (mc.heads * mc.hidden) as f64;
+        let c = ds.classes as f64;
+        let hidden = mc.hidden as f64;
+
+        // (flops, bytes) of each module's forward at full-graph shape.
+        // Dropout: mask gen + compare + scale; elementwise read/write.
+        let drop = |w: f64| (3.0 * n * w, 12.0 * n * w);
+        // GAT layer: dense projection, per-edge attention (score, leaky
+        // relu, softmax, attn dropout), weighted aggregation, bias.
+        let gat = |in_w: f64, out_per_head: f64| {
+            let proj = 2.0 * n * in_w * h * out_per_head;
+            let scores = 4.0 * n * h * out_per_head + 12.0 * e * h;
+            let agg = 2.0 * e * h * out_per_head + n * h * out_per_head;
+            let flops = proj + scores + agg;
+            let bytes =
+                4.0 * (n * in_w + n * h * out_per_head + 3.0 * e * h + in_w * h * out_per_head);
+            (flops, bytes)
+        };
+        let elu = (3.0 * n * hd, 8.0 * n * hd);
+        let lsm = (5.0 * n * c, 8.0 * n * c);
+
+        let shapes = [drop(f), gat(f, hidden), elu, drop(hd), gat(hd, c), lsm];
+        let widths = [
+            ds.features,
+            mc.heads * mc.hidden,
+            mc.heads * mc.hidden,
+            mc.heads * mc.hidden,
+            ds.classes,
+            ds.classes,
+        ];
+        let layers = LAYERS
+            .iter()
+            .zip(shapes.iter().zip(widths.iter()))
+            .map(|(l, (&(flops, bytes), &w))| {
+                let fwd_s = dev.exec_time(flops, bytes, cal);
+                LayerCost {
+                    name: l.name,
+                    fwd_s,
+                    bwd_s: BWD_OVER_FWD * fwd_s,
+                    out_width: w,
+                    params: l.params,
+                    needs_graph: l.needs_graph,
+                    stochastic: l.stochastic,
+                }
+            })
+            .collect();
+        CostProfile {
+            layers,
+            nodes: ds.nodes,
+            // ELL row per node: ell_k neighbour ids (i32) + ell_k values.
+            graph_bytes_per_node: 8.0 * ds.ell_k as f64,
+            // Host rebuild ≈ copying the row at main-memory memcpy rates.
+            rebuild_s_per_node: 8.0 * ds.ell_k as f64 / 2e9,
+            source: "closed-form".into(),
+        }
+    }
+
+    /// Fold measured per-stage `(fwd, bwd)` means (from
+    /// `PipelineResult::stage_means`) down to per-layer costs: each
+    /// stage's measured seconds are distributed over its layers
+    /// proportionally to `template`'s closed-form weights, so stage sums
+    /// match the measurement exactly and intra-stage ratios follow the
+    /// analytic model. `balance` says which layers each measured stage
+    /// covered.
+    pub fn fold_measured(
+        template: &CostProfile,
+        stage_means: &[(f64, f64)],
+        balance: &[usize],
+    ) -> Result<CostProfile> {
+        if balance.len() != stage_means.len() {
+            bail!(
+                "balance has {} stages but {} stage timings were measured",
+                balance.len(),
+                stage_means.len()
+            );
+        }
+        if balance.iter().sum::<usize>() != template.layers.len() {
+            bail!(
+                "balance {:?} does not cover the {}-layer profile",
+                balance,
+                template.layers.len()
+            );
+        }
+        let mut layers = template.layers.clone();
+        let mut at = 0usize;
+        for (&count, &(fwd, bwd)) in balance.iter().zip(stage_means) {
+            let span = &mut layers[at..at + count];
+            let fwd_sum: f64 = span.iter().map(|l| l.fwd_s).sum();
+            let bwd_sum: f64 = span.iter().map(|l| l.bwd_s).sum();
+            for l in span.iter_mut() {
+                // Template weight, or an even split when the template
+                // assigns the whole span zero cost.
+                let wf = if fwd_sum > 0.0 { l.fwd_s / fwd_sum } else { 1.0 / count as f64 };
+                let wb = if bwd_sum > 0.0 { l.bwd_s / bwd_sum } else { 1.0 / count as f64 };
+                l.fwd_s = fwd * wf;
+                l.bwd_s = bwd * wb;
+            }
+            at += count;
+        }
+        Ok(CostProfile {
+            layers,
+            source: "measured".into(),
+            ..template.clone()
+        })
+    }
+}
+
+/// Per-micro-batch round-trip link time of one cut of `width` f32
+/// elements per node: activation forward + cotangent backward, both at
+/// NVLink rates (the paper's intra-node fabric).
+fn cut_xfer_s(width: usize, n_c: usize) -> f64 {
+    2.0 * DEVICES.nvlink.transfer_time(4.0 * (n_c * width) as f64)
+}
+
+/// Cost of the stage covering `layers[j..i)` for one micro-batch at
+/// `chunks`: compute scaled to the chunk's node share, plus the boundary
+/// traffic the stage owns (its incoming and outgoing cut, when present).
+/// Shared verbatim by the DP, the brute-force test oracle, and the
+/// modeled-epoch builder, so all three agree bit-for-bit.
+fn group_cost(profile: &CostProfile, j: usize, i: usize, chunks: usize) -> f64 {
+    let n_c = profile.nodes.div_ceil(chunks.max(1));
+    let scale = n_c as f64 / profile.nodes.max(1) as f64;
+    let mut cost = 0.0;
+    for l in &profile.layers[j..i] {
+        cost += (l.fwd_s + l.bwd_s) * scale;
+    }
+    if j > 0 {
+        cost += cut_xfer_s(profile.layers[j - 1].out_width, n_c);
+    }
+    if i < profile.layers.len() {
+        cost += cut_xfer_s(profile.layers[i - 1].out_width, n_c);
+    }
+    cost
+}
+
+/// A chosen contiguous split of the layer universe.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Partition {
+    /// Module counts per stage; sums to the profile's layer count.
+    pub balance: Vec<usize>,
+    /// The minimized objective: max per-stage cost (compute + owned
+    /// boundary traffic) for one micro-batch, seconds.
+    pub bottleneck_s: f64,
+    /// Total cut width (f32 elements per node over all boundaries) —
+    /// the secondary tie-break.
+    pub cut_width: usize,
+    /// The chunk count the costs were evaluated at.
+    pub chunks: usize,
+}
+
+/// Split `profile`'s layers into `stages` contiguous groups minimizing
+/// the pipeline bottleneck (see the module doc for the invariant and
+/// tie-breaks). Pure: equal inputs give equal outputs.
+///
+/// `stages` may be 1 (the whole model on one device — useful as a
+/// baseline even though [`PipelineSpec`] itself requires >= 2 stages);
+/// `stages > layers` is rejected with a clear error.
+pub fn balance_dp(profile: &CostProfile, stages: usize, chunks: usize) -> Result<Partition> {
+    let l = profile.layers.len();
+    if stages == 0 {
+        bail!("cannot partition into 0 stages");
+    }
+    if stages > l {
+        bail!(
+            "cannot split {l} layers into {stages} stages: at most one stage per \
+             layer (stages <= {l})"
+        );
+    }
+
+    // Phase 1: minimal bottleneck B*. f[s][i] = min over j of
+    // max(f[s-1][j], cost of group [j, i)).
+    let inf = f64::INFINITY;
+    let mut f = vec![vec![inf; l + 1]; stages + 1];
+    f[0][0] = 0.0;
+    for s in 1..=stages {
+        for i in s..=l {
+            for j in (s - 1)..i {
+                if f[s - 1][j].is_finite() {
+                    let cand = f[s - 1][j].max(group_cost(profile, j, i, chunks));
+                    if cand < f[s][i] {
+                        f[s][i] = cand;
+                    }
+                }
+            }
+        }
+    }
+    let bottleneck = f[stages][l];
+
+    // Phase 2: among B*-feasible splits, minimal total cut width.
+    // Suffix DP so phase 3 can reconstruct from the front: g[s][i] =
+    // min cut width for layers[i..] in s groups, every group <= B*.
+    let big = usize::MAX;
+    let mut g = vec![vec![big; l + 1]; stages + 1];
+    g[0][l] = 0;
+    for s in 1..=stages {
+        for i in (0..l).rev() {
+            for k in 1..=(l - i) {
+                let end = i + k;
+                if group_cost(profile, i, end, chunks) > bottleneck {
+                    continue;
+                }
+                if g[s - 1][end] == big {
+                    continue;
+                }
+                let cut = if end < l { profile.layers[end - 1].out_width } else { 0 };
+                let cand = cut + g[s - 1][end];
+                if cand < g[s][i] {
+                    g[s][i] = cand;
+                }
+            }
+        }
+    }
+    let cut_width = g[stages][0];
+    debug_assert_ne!(cut_width, big, "phase-2 DP lost the phase-1 optimum");
+
+    // Phase 3: reconstruct the lexicographically largest balance on the
+    // (B*, W*) optimum: greedily take the largest feasible first group
+    // that still reaches the suffix optimum.
+    let mut balance = Vec::with_capacity(stages);
+    let mut at = 0usize;
+    for s in (1..=stages).rev() {
+        let mut chosen = 0usize;
+        for k in (1..=(l - at)).rev() {
+            let end = at + k;
+            if group_cost(profile, at, end, chunks) > bottleneck || g[s - 1][end] == big {
+                continue;
+            }
+            let cut = if end < l { profile.layers[end - 1].out_width } else { 0 };
+            if cut + g[s - 1][end] == g[s][at] {
+                chosen = k;
+                break;
+            }
+        }
+        debug_assert!(chosen > 0, "phase-3 reconstruction lost the optimum");
+        balance.push(chosen);
+        at += chosen;
+    }
+    Ok(Partition {
+        balance,
+        bottleneck_s: bottleneck,
+        cut_width,
+        chunks,
+    })
+}
+
+impl Partition {
+    /// The [`PipelineSpec`] this split compiles to. [`CANONICAL_BALANCE`]
+    /// maps to exactly [`PipelineSpec::gat4`] — same artifact kinds, so
+    /// runs under it are bit-identical to the hand-authored path. Any
+    /// other split emits generic span kinds (`l{a}_{b}_fwd` for layers
+    /// `[a, b)`, `l{a}_{b}loss_bwd` on the final stage) that
+    /// `python/compile/aot.py --partition <file>` knows how to compile.
+    pub fn to_spec(&self) -> Result<PipelineSpec> {
+        spec_for_balance(&self.balance)
+    }
+}
+
+/// Build the [`PipelineSpec`] for an arbitrary balance vector over
+/// [`LAYERS`] (see [`Partition::to_spec`]).
+pub fn spec_for_balance(balance: &[usize]) -> Result<PipelineSpec> {
+    let l = LAYERS.len();
+    if balance.iter().sum::<usize>() != l || balance.iter().any(|&b| b == 0) {
+        bail!(
+            "balance {balance:?} must be positive module counts summing to {l} \
+             (the {l}-module GAT sequence)"
+        );
+    }
+    if balance.len() < 2 {
+        bail!(
+            "balance {balance:?} has fewer than 2 stages: a pipeline spec needs \
+             at least 2 (use the single-device path for 1)"
+        );
+    }
+    if balance[..] == CANONICAL_BALANCE {
+        return Ok(PipelineSpec::gat4());
+    }
+    let mut stages = Vec::with_capacity(balance.len());
+    let mut at = 0usize;
+    let mut param_off = 0usize;
+    for (s, &count) in balance.iter().enumerate() {
+        let (a, b) = (at, at + count);
+        let span = &LAYERS[a..b];
+        let p_start = param_off;
+        param_off += span.iter().map(|l| l.params).sum::<usize>();
+        let last = s + 1 == balance.len();
+        let mut fwd_inputs = vec![if a == 0 { StageInput::Features } else { StageInput::Activation }];
+        if span.iter().any(|l| l.needs_graph) {
+            fwd_inputs.push(StageInput::Graph);
+        }
+        if span.iter().any(|l| l.stochastic) {
+            fwd_inputs.push(StageInput::Key);
+        }
+        let mut bwd_inputs = fwd_inputs.clone();
+        if last {
+            bwd_inputs.push(StageInput::LabelsMask);
+        }
+        stages.push(StageSpec {
+            fwd_kind: format!("l{a}_{b}_fwd"),
+            bwd_kind: if last { format!("l{a}_{b}loss_bwd") } else { format!("l{a}_{b}_bwd") },
+            params: (p_start, param_off),
+            fwd_inputs,
+            bwd_inputs,
+        });
+        at = b;
+    }
+    let spec = PipelineSpec {
+        stages,
+        param_count: param_off,
+        forward_only: false,
+    };
+    spec.validate().context("generated partition spec")?;
+    Ok(spec)
+}
+
+/// The modeled epoch of one balance at one (chunks, schedule) point:
+/// per-stage costs from the profile, boundary transfers at NVLink
+/// rates, host-rebuild round trips (PCIe down, rebuild, graph upload)
+/// charged at graph-consuming stages when chunks > 1 — then the same
+/// discrete-event replay the simulator uses for real specs. One epoch
+/// is one full-batch optimiser step, so the makespan IS the epoch time.
+pub fn model_epoch(
+    profile: &CostProfile,
+    balance: &[usize],
+    chunks: usize,
+    schedule: &dyn Schedule,
+) -> Result<PipelineSimReport> {
+    let l = profile.layers.len();
+    if balance.iter().sum::<usize>() != l || balance.iter().any(|&b| b == 0) {
+        bail!("balance {balance:?} must be positive counts summing to {l}");
+    }
+    let chunks = chunks.max(1);
+    let n_c = profile.nodes.div_ceil(chunks);
+    let scale = n_c as f64 / profile.nodes.max(1) as f64;
+    let stages = balance.len();
+    let mut fwd_s = Vec::with_capacity(stages);
+    let mut bwd_s = Vec::with_capacity(stages);
+    let mut xfer = Vec::with_capacity(stages.saturating_sub(1));
+    let mut rebuild_s = Vec::with_capacity(stages);
+    let mut at = 0usize;
+    for (s, &count) in balance.iter().enumerate() {
+        let span = &profile.layers[at..at + count];
+        let fwd: f64 = span.iter().map(|l| l.fwd_s * scale).sum();
+        let bwd: f64 = span.iter().map(|l| l.bwd_s * scale).sum();
+        fwd_s.push(vec![fwd; chunks]);
+        bwd_s.push(vec![bwd; chunks]);
+        at += count;
+        if s + 1 < stages {
+            let t = DEVICES.nvlink.transfer_time(4.0 * (n_c * span[count - 1].out_width) as f64);
+            xfer.push(vec![t; chunks]);
+        }
+        // Sub-graph rebuild round trip: indices down over PCIe, host
+        // rebuild, structure back up. Only when chunking splits the
+        // graph (chunks == 1 keeps it device-resident) and the stage
+        // actually consumes it.
+        let needs_graph = span.iter().any(|l| l.needs_graph);
+        let stall = if needs_graph && chunks > 1 {
+            DEVICES.pcie.transfer_time(4.0 * n_c as f64)
+                + profile.rebuild_s_per_node * n_c as f64
+                + DEVICES.pcie.transfer_time(profile.graph_bytes_per_node * n_c as f64)
+        } else {
+            0.0
+        };
+        rebuild_s.push(vec![stall; chunks]);
+    }
+    let input = PipelineSimInput {
+        fwd_s,
+        bwd_s,
+        xfer_fwd_s: xfer.clone(),
+        xfer_bwd_s: xfer,
+        rebuild_s,
+    };
+    Ok(simulate_pipeline_with(&input, schedule))
+}
+
+/// The sweep's search space. `schedules` are names accepted by
+/// [`parse_schedule`] ("fill-drain", "1f1b").
+#[derive(Debug, Clone, PartialEq)]
+pub struct SweepConstraints {
+    pub stages: Vec<usize>,
+    pub chunks: Vec<usize>,
+    pub schedules: Vec<String>,
+}
+
+impl SweepConstraints {
+    /// The CLI defaults: 2..=devices stages, the config's chunk list,
+    /// both training schedules.
+    pub fn defaults(devices: usize, chunks: &[usize]) -> SweepConstraints {
+        SweepConstraints {
+            stages: (2..=devices.max(2)).collect(),
+            chunks: chunks.to_vec(),
+            schedules: vec!["fill-drain".into(), "1f1b".into()],
+        }
+    }
+}
+
+/// One priced point of the sweep.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SweepPoint {
+    pub stages: usize,
+    pub chunks: usize,
+    pub schedule: String,
+    pub balance: Vec<usize>,
+    pub bottleneck_s: f64,
+    pub epoch_s: f64,
+    pub bubble_fraction: f64,
+}
+
+/// The full sweep: every point priced, plus the index of the winner.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SweepReport {
+    pub points: Vec<SweepPoint>,
+    pub best: usize,
+}
+
+impl SweepReport {
+    /// The point with the lowest modeled epoch time.
+    pub fn winner(&self) -> &SweepPoint {
+        &self.points[self.best]
+    }
+}
+
+/// Price every (stages, chunks, schedule) point in `cons` and pick the
+/// lowest modeled epoch. Deterministic: points are visited in the given
+/// order and the winner only moves on a strictly lower epoch, so the
+/// result is a pure function of `(profile, constraints)`.
+pub fn sweep(profile: &CostProfile, cons: &SweepConstraints) -> Result<SweepReport> {
+    let mut points = Vec::new();
+    let mut best: Option<usize> = None;
+    for &stages in &cons.stages {
+        for &chunks in &cons.chunks {
+            let part = balance_dp(profile, stages, chunks)?;
+            for name in &cons.schedules {
+                let schedule = parse_schedule(name)?;
+                let report = model_epoch(profile, &part.balance, chunks, schedule.as_ref())?;
+                points.push(SweepPoint {
+                    stages,
+                    chunks,
+                    schedule: name.clone(),
+                    balance: part.balance.clone(),
+                    bottleneck_s: part.bottleneck_s,
+                    epoch_s: report.makespan_s,
+                    bubble_fraction: report.bubble_fraction,
+                });
+                let i = points.len() - 1;
+                let improves = match best {
+                    None => true,
+                    Some(b) => points[i].epoch_s < points[b].epoch_s,
+                };
+                if improves {
+                    best = Some(i);
+                }
+            }
+        }
+    }
+    let best = best.context("sweep constraints produced no points")?;
+    Ok(SweepReport { points, best })
+}
+
+/// A partition file: the replayable record `gnn-pipe partition --out`
+/// writes and `--partition <file>` / `aot.py --partition` read.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PartitionFile {
+    pub balance: Vec<usize>,
+    pub chunks: usize,
+    pub schedule: String,
+    pub source: String,
+    pub bottleneck_s: f64,
+    pub modeled_epoch_s: f64,
+}
+
+impl PartitionFile {
+    /// Record a sweep winner, stamping the profile's cost source.
+    pub fn from_point(point: &SweepPoint, source: &str) -> PartitionFile {
+        PartitionFile {
+            balance: point.balance.clone(),
+            chunks: point.chunks,
+            schedule: point.schedule.clone(),
+            source: source.into(),
+            bottleneck_s: point.bottleneck_s,
+            modeled_epoch_s: point.epoch_s,
+        }
+    }
+
+    /// Serialize; stable field order, layer names included so the file
+    /// is self-describing for the Python compile side.
+    pub fn to_json(&self) -> String {
+        let balance: Vec<String> = self.balance.iter().map(|b| b.to_string()).collect();
+        let layers: Vec<String> = LAYERS.iter().map(|l| format!("\"{}\"", l.name)).collect();
+        format!(
+            "{{\n  \"version\": 1,\n  \"balance\": [{}],\n  \"stages\": {},\n  \
+             \"chunks\": {},\n  \"schedule\": \"{}\",\n  \"source\": \"{}\",\n  \
+             \"bottleneck_s\": {:e},\n  \"modeled_epoch_s\": {:e},\n  \
+             \"layers\": [{}]\n}}\n",
+            balance.join(", "),
+            self.balance.len(),
+            self.chunks,
+            self.schedule,
+            self.source,
+            self.bottleneck_s,
+            self.modeled_epoch_s,
+            layers.join(", "),
+        )
+    }
+
+    /// Parse the JSON written by [`PartitionFile::to_json`]; only
+    /// `balance` is required, the rest default (chunks 1, fill-drain).
+    pub fn parse(text: &str) -> Result<PartitionFile> {
+        let j = Json::parse(text).context("partition file")?;
+        let balance: Vec<usize> = j
+            .req("balance")?
+            .as_arr()
+            .context("partition file: balance must be an array")?
+            .iter()
+            .map(|v| {
+                v.as_usize()
+                    .context("partition file: balance entries must be integers")
+            })
+            .collect::<Result<_>>()?;
+        if balance.is_empty() || balance.iter().any(|&b| b == 0) {
+            bail!("partition file: balance {balance:?} must be positive module counts");
+        }
+        Ok(PartitionFile {
+            balance,
+            chunks: j.get("chunks").and_then(|v| v.as_usize()).unwrap_or(1),
+            schedule: j
+                .get("schedule")
+                .and_then(|v| v.as_str())
+                .unwrap_or("fill-drain")
+                .to_string(),
+            source: j
+                .get("source")
+                .and_then(|v| v.as_str())
+                .unwrap_or("unknown")
+                .to_string(),
+            bottleneck_s: j.get("bottleneck_s").and_then(|v| v.as_f64()).unwrap_or(0.0),
+            modeled_epoch_s: j
+                .get("modeled_epoch_s")
+                .and_then(|v| v.as_f64())
+                .unwrap_or(0.0),
+        })
+    }
+
+    /// Read and parse a partition file from disk.
+    pub fn read(path: &std::path::Path) -> Result<PartitionFile> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading partition file {}", path.display()))?;
+        PartitionFile::parse(&text)
+    }
+
+    /// Serialize to disk ([`PartitionFile::to_json`] format).
+    pub fn write(&self, path: &std::path::Path) -> Result<()> {
+        std::fs::write(path, self.to_json())
+            .with_context(|| format!("writing partition file {}", path.display()))
+    }
+}
+
+/// The between-epoch drift check (`--repartition-check`): fold the
+/// epoch's measured stage means onto the template, re-run the DP at the
+/// same (stages, chunks), and return the better balance when it differs
+/// from the running one. The caller LOGS this — it never switches specs
+/// mid-run (a switch would change artifact kinds and break the bitwise
+/// replay contract).
+pub fn drift_check(
+    template: &CostProfile,
+    stage_means: &[(f64, f64)],
+    balance: &[usize],
+    chunks: usize,
+) -> Result<Option<Partition>> {
+    let measured = CostProfile::fold_measured(template, stage_means, balance)?;
+    let part = balance_dp(&measured, balance.len(), chunks)?;
+    if part.balance != balance {
+        return Ok(Some(part));
+    }
+    Ok(None)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+    use crate::pipeline::{FillDrain, OneFOneB};
+
+    fn pubmed_profile() -> CostProfile {
+        let cfg = Config::load().unwrap();
+        let ds = &cfg.datasets["pubmed"];
+        CostProfile::closed_form(
+            ds,
+            &cfg.model,
+            &DEVICES.v100,
+            &CostProfile::default_calibration(),
+        )
+    }
+
+    /// Brute-force oracle: enumerate every composition, apply the same
+    /// (bottleneck, cut width, lexicographically largest) ordering.
+    fn brute_force(profile: &CostProfile, stages: usize, chunks: usize) -> Partition {
+        fn compositions(l: usize, s: usize) -> Vec<Vec<usize>> {
+            if s == 1 {
+                return vec![vec![l]];
+            }
+            let mut out = Vec::new();
+            for first in 1..=(l - s + 1) {
+                for mut rest in compositions(l - first, s - 1) {
+                    let mut v = vec![first];
+                    v.append(&mut rest);
+                    out.push(v);
+                }
+            }
+            out
+        }
+        let mut best: Option<Partition> = None;
+        for balance in compositions(profile.layers.len(), stages) {
+            let mut bottleneck = 0.0f64;
+            let mut cut_width = 0usize;
+            let mut at = 0;
+            for (s, &count) in balance.iter().enumerate() {
+                bottleneck = bottleneck.max(group_cost(profile, at, at + count, chunks));
+                at += count;
+                if s + 1 < balance.len() {
+                    cut_width += profile.layers[at - 1].out_width;
+                }
+            }
+            let cand = Partition { balance, bottleneck_s: bottleneck, cut_width, chunks };
+            let better = match &best {
+                None => true,
+                Some(b) => {
+                    (cand.bottleneck_s, cand.cut_width) < (b.bottleneck_s, b.cut_width)
+                        || ((cand.bottleneck_s, cand.cut_width)
+                            == (b.bottleneck_s, b.cut_width)
+                            && cand.balance > b.balance)
+                }
+            };
+            if better {
+                best = Some(cand);
+            }
+        }
+        best.unwrap()
+    }
+
+    #[test]
+    fn dp_matches_brute_force_on_random_profiles() {
+        crate::testutil::prop::check(60, |rng| {
+            let l = 2 + rng.below(6); // 2..=7 layers
+            let mut profile = CostProfile::uniform(l, 0.0, 0.0, 0);
+            for layer in profile.layers.iter_mut() {
+                layer.fwd_s = rng.range_f64(0.0, 1.0);
+                layer.bwd_s = rng.range_f64(0.0, 2.0);
+                layer.out_width = rng.below(4) * 32;
+            }
+            profile.nodes = 1000;
+            for stages in 1..=l {
+                for chunks in [1usize, 4] {
+                    let dp = balance_dp(&profile, stages, chunks).unwrap();
+                    let bf = brute_force(&profile, stages, chunks);
+                    assert_eq!(dp.balance, bf.balance, "S={stages} c={chunks}");
+                    assert_eq!(dp.bottleneck_s, bf.bottleneck_s);
+                    assert_eq!(dp.cut_width, bf.cut_width);
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn single_stage_is_the_whole_model() {
+        let p = CostProfile::uniform(6, 1.0, 2.0, 8);
+        let part = balance_dp(&p, 1, 1).unwrap();
+        assert_eq!(part.balance, vec![6]);
+        assert_eq!(part.cut_width, 0);
+    }
+
+    #[test]
+    fn stages_equal_layers_is_all_ones() {
+        let p = CostProfile::uniform(6, 1.0, 2.0, 8);
+        let part = balance_dp(&p, 6, 1).unwrap();
+        assert_eq!(part.balance, vec![1; 6]);
+    }
+
+    #[test]
+    fn stages_beyond_layers_rejected_with_clear_error() {
+        let p = CostProfile::uniform(6, 1.0, 2.0, 8);
+        let err = balance_dp(&p, 7, 1).unwrap_err().to_string();
+        assert!(err.contains("6 layers"), "unhelpful error: {err}");
+        assert!(err.contains("7 stages"), "unhelpful error: {err}");
+    }
+
+    #[test]
+    fn cost_ties_break_deterministically_toward_late_cuts() {
+        // Three equal-bottleneck 2-stage splits ([1,3],[2,2],[3,1]):
+        // zero widths tie the secondary too, so the lexicographically
+        // largest balance wins.
+        let mut p = CostProfile::uniform(4, 0.0, 0.0, 0);
+        p.layers[0].fwd_s = 1.0;
+        p.layers[3].fwd_s = 1.0;
+        let a = balance_dp(&p, 2, 1).unwrap();
+        let b = balance_dp(&p, 2, 1).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(a.balance, vec![3, 1]);
+    }
+
+    #[test]
+    fn closed_form_pubmed_picks_the_canonical_split() {
+        // The acceptance path: `--partition auto` at 4 stages must land
+        // on the hand-authored gat4 grouping, so auto runs stay
+        // bit-identical to the baseline.
+        let profile = pubmed_profile();
+        for chunks in [1usize, 2, 3, 4, 8] {
+            let part = balance_dp(&profile, 4, chunks).unwrap();
+            assert_eq!(part.balance, CANONICAL_BALANCE.to_vec(), "chunks={chunks}");
+        }
+    }
+
+    #[test]
+    fn dp_modeled_epoch_never_worse_than_hand_authored() {
+        let profile = pubmed_profile();
+        for chunks in [1usize, 2, 3, 4] {
+            for sched in [&FillDrain as &dyn Schedule, &OneFOneB] {
+                let dp = balance_dp(&profile, 4, chunks).unwrap();
+                let auto = model_epoch(&profile, &dp.balance, chunks, sched).unwrap();
+                let hand =
+                    model_epoch(&profile, &CANONICAL_BALANCE, chunks, sched).unwrap();
+                assert!(
+                    auto.makespan_s <= hand.makespan_s + 1e-12,
+                    "chunks={chunks}: DP {} > gat4 {}",
+                    auto.makespan_s,
+                    hand.makespan_s
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn sweep_is_reproducible_from_inputs_alone() {
+        let profile = pubmed_profile();
+        let cons = SweepConstraints::defaults(4, &[1, 2, 3, 4]);
+        let a = sweep(&profile, &cons).unwrap();
+        let b = sweep(&profile, &cons).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(a.points.len(), 3 * 4 * 2);
+        let w = a.winner();
+        assert!(w.epoch_s > 0.0 && w.epoch_s.is_finite());
+        for p in &a.points {
+            assert!(w.epoch_s <= p.epoch_s);
+        }
+    }
+
+    #[test]
+    fn canonical_balance_compiles_to_gat4_exactly() {
+        let spec = spec_for_balance(&CANONICAL_BALANCE).unwrap();
+        let gat4 = PipelineSpec::gat4();
+        assert_eq!(spec.num_stages(), gat4.num_stages());
+        for (a, b) in spec.stages.iter().zip(&gat4.stages) {
+            assert_eq!(a.fwd_kind, b.fwd_kind);
+            assert_eq!(a.bwd_kind, b.bwd_kind);
+            assert_eq!(a.params, b.params);
+            assert_eq!(a.fwd_inputs, b.fwd_inputs);
+            assert_eq!(a.bwd_inputs, b.bwd_inputs);
+        }
+        assert_eq!(spec.artifact_kinds(), gat4.artifact_kinds());
+    }
+
+    #[test]
+    fn generic_balance_compiles_to_valid_span_spec() {
+        let spec = spec_for_balance(&[1, 2, 2, 1]).unwrap();
+        spec.validate().unwrap();
+        assert_eq!(spec.stages[0].fwd_kind, "l0_1_fwd");
+        assert_eq!(spec.stages[0].params, (0, 0));
+        assert_eq!(spec.stages[1].fwd_kind, "l1_3_fwd");
+        assert_eq!(spec.stages[1].params, (0, 4));
+        assert_eq!(spec.stages[2].params, (4, 8));
+        assert_eq!(spec.stages[3].bwd_kind, "l5_6loss_bwd");
+        assert_eq!(spec.param_count, 8);
+        // Graph + key inputs follow the span contents.
+        assert!(!spec.stages[0].fwd_inputs.contains(&StageInput::Graph));
+        assert!(spec.stages[0].fwd_inputs.contains(&StageInput::Key));
+        assert!(spec.stages[1].fwd_inputs.contains(&StageInput::Graph));
+        assert!(!spec.stages[3].fwd_inputs.contains(&StageInput::Key));
+    }
+
+    #[test]
+    fn bad_balances_rejected() {
+        assert!(spec_for_balance(&[2, 2, 2, 2]).is_err()); // sums to 8
+        assert!(spec_for_balance(&[3, 0, 2, 1]).is_err()); // empty stage
+        assert!(spec_for_balance(&[6]).is_err()); // < 2 stages
+    }
+
+    #[test]
+    fn partition_file_roundtrips() {
+        let profile = pubmed_profile();
+        let report = sweep(&profile, &SweepConstraints::defaults(4, &[1, 2, 4])).unwrap();
+        let file = PartitionFile::from_point(report.winner(), &profile.source);
+        let back = PartitionFile::parse(&file.to_json()).unwrap();
+        assert_eq!(back, file);
+        let dir = std::env::temp_dir()
+            .join(format!("gnn-pipe-partition-test-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("partition.json");
+        file.write(&path).unwrap();
+        assert_eq!(PartitionFile::read(&path).unwrap(), file);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn fold_measured_preserves_stage_sums() {
+        let template = pubmed_profile();
+        let means = vec![(4e-3, 8e-3), (1e-3, 2e-3), (2e-3, 4e-3), (0.5e-3, 1e-3)];
+        let folded =
+            CostProfile::fold_measured(&template, &means, &CANONICAL_BALANCE).unwrap();
+        let mut at = 0;
+        for (&count, &(fwd, bwd)) in CANONICAL_BALANCE.iter().zip(&means) {
+            let span = &folded.layers[at..at + count];
+            let f: f64 = span.iter().map(|l| l.fwd_s).sum();
+            let b: f64 = span.iter().map(|l| l.bwd_s).sum();
+            assert!((f - fwd).abs() < 1e-12);
+            assert!((b - bwd).abs() < 1e-12);
+            at += count;
+        }
+        assert_eq!(folded.source, "measured");
+        // Mismatched shapes are rejected, not mis-folded.
+        assert!(CostProfile::fold_measured(&template, &means[..3], &CANONICAL_BALANCE).is_err());
+        assert!(CostProfile::fold_measured(&template, &means, &[2, 2, 1]).is_err());
+    }
+
+    #[test]
+    fn drift_check_flags_only_real_drift() {
+        let template = pubmed_profile();
+        // Measurements matching the closed-form shape: no drift.
+        let balanced: Vec<(f64, f64)> = {
+            let mut v = Vec::new();
+            let mut at = 0;
+            for &count in CANONICAL_BALANCE.iter() {
+                let span = &template.layers[at..at + count];
+                v.push((
+                    span.iter().map(|l| l.fwd_s).sum(),
+                    span.iter().map(|l| l.bwd_s).sum(),
+                ));
+                at += count;
+            }
+            v
+        };
+        assert!(drift_check(&template, &balanced, &CANONICAL_BALANCE, 4)
+            .unwrap()
+            .is_none());
+        // Stage 2 (GAT2) suddenly dominating: the DP answer moves.
+        let mut drifted = balanced.clone();
+        drifted[2] = (drifted[0].0 * 40.0, drifted[0].1 * 40.0);
+        let hint = drift_check(&template, &drifted, &CANONICAL_BALANCE, 4).unwrap();
+        assert!(hint.is_some());
+        assert_ne!(hint.unwrap().balance, CANONICAL_BALANCE.to_vec());
+    }
+}

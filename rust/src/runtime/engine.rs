@@ -83,8 +83,8 @@ pub struct Executable {
     exe: xla::PjRtLoadedExecutable,
     /// Client handle for explicit input-buffer creation. The crate's
     /// `execute(&[Literal])` path leaks its internally-created input
-    /// buffers (~input-size bytes per call, measured; see
-    /// EXPERIMENTS.md §Perf L3); we therefore upload inputs ourselves
+    /// buffers (~input-size bytes per call, measured with
+    /// examples/leak_test.rs); we therefore upload inputs ourselves
     /// via `buffer_from_host_buffer` (whose `PjRtBuffer` has a correct
     /// Drop) and call `execute_b`.
     client: xla::PjRtClient,

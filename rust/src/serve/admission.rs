@@ -82,6 +82,8 @@ pub struct AdmissionGate {
 }
 
 impl AdmissionGate {
+    /// Build a gate; the floor is the latency a request pays even on
+    /// an idle replica (batch wait + modeled service).
     pub fn new(slo: SloPolicy, max_wait_s: f64, service_model_s: f64) -> AdmissionGate {
         AdmissionGate {
             slo,
@@ -128,6 +130,8 @@ impl AdmissionGate {
         self.slo.p99_target_s - self.floor_s
     }
 
+    /// Admit, defer or shed a request given the routed replica's
+    /// backlog seconds (pure: same backlog, same decision).
     pub fn decide(&self, backlog_s: f64) -> AdmissionDecision {
         let backlog = backlog_s.max(0.0);
         let slack = self.slack_s();

@@ -44,10 +44,12 @@ pub struct ServeBatch {
 }
 
 impl ServeBatch {
+    /// Number of member requests.
     pub fn len(&self) -> usize {
         self.requests.len()
     }
 
+    /// True when no requests were batched.
     pub fn is_empty(&self) -> bool {
         self.requests.is_empty()
     }

@@ -111,6 +111,7 @@ pub enum RouterKind {
 }
 
 impl RouterKind {
+    /// Parse a CLI router name (`--router`).
     pub fn parse(s: &str) -> Result<RouterKind> {
         match s {
             "jsq" => Ok(RouterKind::Jsq),
@@ -121,6 +122,7 @@ impl RouterKind {
         }
     }
 
+    /// The CLI/report name of this router.
     pub fn name(&self) -> &'static str {
         match self {
             RouterKind::Jsq => "jsq",
@@ -520,6 +522,7 @@ pub struct FleetReport {
 }
 
 impl FleetReport {
+    /// The printed fleet summary (per-replica rows + totals).
     pub fn render(&self) -> String {
         let mut s = String::new();
         let _ = writeln!(
@@ -605,6 +608,7 @@ pub struct FleetSession<'e> {
 }
 
 impl<'e> FleetSession<'e> {
+    /// A fleet session over one engine/dataset/backend triple.
     pub fn new(engine: &'e Engine, ds: &'e Dataset, backend: &str) -> FleetSession<'e> {
         FleetSession {
             session: ServeSession::new(engine, ds, backend),
@@ -623,6 +627,7 @@ impl<'e> FleetSession<'e> {
         self.session.watchdog_s = watchdog_s;
     }
 
+    /// The configured stage-link watchdog, seconds.
     pub fn watchdog_s(&self) -> f64 {
         self.session.watchdog_s
     }

@@ -30,6 +30,7 @@ pub struct RequestLatency {
 }
 
 impl RequestLatency {
+    /// End-to-end request latency: queue + prep + execute + download.
     pub fn total_s(&self) -> f64 {
         self.queue_s + self.prep_s + self.execute_s + self.download_s
     }
@@ -108,6 +109,7 @@ pub struct ServeReport {
 }
 
 impl ServeReport {
+    /// The printed serving summary (percentiles + throughput).
     pub fn render(&self) -> String {
         let mut s = String::new();
         let _ = writeln!(

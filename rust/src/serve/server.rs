@@ -110,6 +110,7 @@ pub struct ServeSession<'e> {
 }
 
 impl<'e> ServeSession<'e> {
+    /// A serving session over one engine/dataset/backend triple.
     pub fn new(engine: &'e Engine, ds: &'e Dataset, backend: &str) -> ServeSession<'e> {
         ServeSession {
             engine,

@@ -80,6 +80,7 @@ pub enum TrafficShape {
 }
 
 impl TrafficShape {
+    /// Parse a CLI traffic-shape name (`--traffic`).
     pub fn parse(s: &str) -> anyhow::Result<TrafficShape> {
         match s {
             "poisson" => Ok(TrafficShape::Poisson),
@@ -93,6 +94,7 @@ impl TrafficShape {
         }
     }
 
+    /// The CLI/report name of this shape.
     pub fn name(&self) -> &'static str {
         match self {
             TrafficShape::Poisson => "poisson",
@@ -115,6 +117,7 @@ impl TrafficShape {
         }
     }
 
+    /// Every traffic shape, in report order.
     pub fn all() -> [TrafficShape; 4] {
         [
             TrafficShape::Poisson,

@@ -1,5 +1,5 @@
 //! Device & DGX performance simulator — the substitution for the paper's
-//! Xeon / T4 / 4xV100 testbed (DESIGN.md §Substitutions).
+//! Xeon / T4 / 4xV100 testbed (ARCHITECTURE.md §Substitutions).
 //!
 //! Philosophy: *measure* everything measurable, *project* only the
 //! device speeds. A real CPU run calibrates the achieved fraction of

@@ -15,6 +15,7 @@ pub struct Args {
 /// (or `--key=v`) is an option.
 pub const BOOL_FLAGS: &[&str] = &[
     "verbose", "sim-only", "real-only", "quiet", "help", "no-warmup", "fast",
+    "repartition-check",
 ];
 
 impl Args {

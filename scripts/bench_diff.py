@@ -241,6 +241,17 @@ def selfcheck() -> int:
          snaps(**{"BENCH_faults.json": faults}),
          snaps(**{"BENCH_faults.json": faults_plus_avail}),
          strict=True, expect_text="(new sample)")
+    # The partition snapshot's first appearance (PR adding the
+    # auto-partitioner): no previous BENCH_partition.json artifact
+    # exists, so it is skipped, never flagged — even strict.
+    partition = _snapshot(
+        {"balance_dp (stages 2..=4 x chunks [1, 2, 3, 4])": 0.0004,
+         "sweep (3 stages x 4 chunks x 2 schedules)": 0.003},
+        sweep_winner="\"[2, 2, 1, 1]/c4/1f1b\"")
+    case("first-run BENCH_partition.json is skipped", 0,
+         snaps(**{"BENCH_x.json": base}),
+         snaps(**{"BENCH_x.json": base, "BENCH_partition.json": partition}),
+         strict=True, expect_text="BENCH_partition.json: new snapshot")
 
     if failures:
         print(f"self-check FAILED: {failures}")
