@@ -1,0 +1,272 @@
+//! E16 — versioned canary rollout: one deterministic trace replayed
+//! against the store's two newest parameter versions under several
+//! rollout policies, reporting per-version served counts and tail
+//! latency, the logit divergence between versions, and the rollback
+//! gate's verdict.
+//!
+//! The two versions are published through the real store machinery
+//! (checksummed records, temp-file + fsync + atomic rename) and loaded
+//! back out of it, so the bench exercises the same durability path the
+//! CLI does. Per the swap contract, rows served by the base version are
+//! bit-identical to the pure base run (the `base max|Δ|` column must be
+//! exactly 0); rows served by the candidate differ because the
+//! *parameters* differ — that divergence is the signal a real canary
+//! watches.
+//!
+//! Emits `canary.csv` and a `BENCH_params.json` snapshot (CLI writer:
+//! `quick: false` — same dual-writer convention as `BENCH_fleet.json`).
+
+use std::fmt::Write as _;
+
+use anyhow::Result;
+
+use crate::metrics::{write_bench_snapshot, BenchSample, Table};
+use crate::runtime::HostTensor;
+use crate::serve::{
+    generate_trace, BatchPolicy, FleetPolicy, FleetSession, LatencySummary,
+    RolloutGate, RolloutPolicy, RouterKind, TraceSpec, TrafficShape,
+};
+use crate::store::{flat_to_vec, vec_to_flat, Record, Store, Version};
+use crate::train::{flatten_params, init_params};
+
+use super::{framework_label, BenchCtx};
+
+/// E16: canary/hot-swap rollouts between two store versions — served
+/// split, per-version tails, logit divergence, rollback verdict.
+pub fn bench_serve_canary(ctx: &BenchCtx) -> Result<String> {
+    let sc = &ctx.cfg.serve;
+    let backend = sc.backend.clone();
+    let ds_name = ctx.cfg.pipeline.pipeline_dataset.clone();
+    if !FleetSession::artifacts_available(&ctx.engine, &ds_name, &backend) {
+        return Ok(format!(
+            "Canary rollout — skipped: {ds_name}/{backend} serving artifacts \
+             not in the manifest (artifact dir predates the serving \
+             subsystem; re-run `make artifacts`)\n"
+        ));
+    }
+    let ds = ctx.dataset(&ds_name)?;
+    let profile = ctx.cfg.dataset(&ds_name)?;
+    let order = ctx.engine.manifest.param_order.clone();
+
+    // Publish two genuinely different parameter versions (different
+    // init seeds) through the real store, freshly per bench session.
+    let store_dir = ctx.results_dir.join("canary_store");
+    let _ = std::fs::remove_dir_all(&store_dir);
+    let mut store = Store::open(&store_dir)?;
+    for version_seed in [sc.seed, sc.seed + 1] {
+        let flat = flat_to_vec(&flatten_params(
+            &init_params(profile, &ctx.cfg.model, version_seed),
+            &order,
+        )?)?;
+        let mut rec = Record::new();
+        rec.put_u64("seed", version_seed);
+        rec.put_f32s("flat", &flat);
+        store.publish(&rec)?;
+    }
+    let (base_v, cand_v) = store.latest_pair().expect("two versions published");
+    let template =
+        flatten_params(&init_params(profile, &ctx.cfg.model, sc.seed), &order)?;
+    let load = |v: Version| -> Result<Vec<HostTensor>> {
+        let flat = store.load(v.seq)?.f32s("flat")?;
+        let mut params = template.clone();
+        vec_to_flat(&flat, &mut params)?;
+        Ok(params)
+    };
+    let base_params = load(base_v)?;
+    let cand_params = load(cand_v)?;
+
+    let requests = sc.requests.max(8).min(32 * sc.max_batch);
+    let trace = generate_trace(
+        &TraceSpec { rate_hz: sc.rate_hz, requests, seed: sc.seed },
+        TrafficShape::Poisson,
+        profile.nodes,
+    );
+    let policy =
+        BatchPolicy { max_batch: sc.max_batch, max_wait_s: sc.max_wait_ms / 1e3 };
+    let fleet = FleetPolicy {
+        replicas: 2,
+        router: RouterKind::Jsq,
+        slo: None,
+        service_model_s: sc.service_model_ms.max(0.0) / 1e3,
+    };
+    let swap_half_s = 0.5 * requests as f64 / sc.rate_hz;
+    let session = FleetSession::new(&ctx.engine, ds, &backend);
+
+    // The pure base run every row's base-served logits are diffed
+    // against (RolloutPolicy::none() routes every batch to base).
+    eprintln!(
+        "[bench] serve-canary {ds_name}/{backend} v{} -> v{} \
+         requests={requests}...",
+        base_v.seq, cand_v.seq
+    );
+    let pure = session.run_rollout(
+        &base_params,
+        &cand_params,
+        (base_v, cand_v),
+        &trace,
+        &policy,
+        &fleet,
+        &RolloutPolicy::none(),
+    )?;
+
+    let rows: Vec<(&str, RolloutPolicy)> = vec![
+        ("base-only", RolloutPolicy::none()),
+        (
+            "canary-25",
+            RolloutPolicy {
+                canary: 0.25,
+                swap_at_s: None,
+                seed: sc.seed,
+                gate: None,
+            },
+        ),
+        (
+            "swap-half",
+            RolloutPolicy {
+                canary: 0.0,
+                swap_at_s: Some(swap_half_s),
+                seed: sc.seed,
+                gate: None,
+            },
+        ),
+        (
+            "gate-trip",
+            RolloutPolicy {
+                canary: 0.25,
+                swap_at_s: None,
+                seed: sc.seed,
+                // A p99 target below any physically possible latency:
+                // the gate must trip and the rollout must roll back.
+                gate: Some(RolloutGate { p99_target_s: 1e-9 }),
+            },
+        ),
+    ];
+
+    let mut table = Table::new(&[
+        "Policy",
+        "Served base/cand",
+        "Batches canary/swap",
+        "Rolled back",
+        "base p99",
+        "cand p99",
+        "base max|d|",
+        "cand max|d|",
+    ]);
+    let mut csv = String::from(
+        "policy,canary,swap_at_s,base_seq,candidate_seq,served_base,\
+         served_candidate,canary_batches,swapped_batches,rolled_back,\
+         gate_p99_s,base_p99_s,cand_p99_s,base_max_abs_diff,\
+         cand_max_abs_diff\n",
+    );
+    let mut snapshot: Vec<BenchSample> = Vec::new();
+
+    for (label, rollout) in &rows {
+        let out = session.run_rollout(
+            &base_params,
+            &cand_params,
+            (base_v, cand_v),
+            &trace,
+            &policy,
+            &fleet,
+            rollout,
+        )?;
+        // Per-version tails and logit divergence vs the pure base run.
+        let (mut base_tot, mut cand_tot) = (Vec::new(), Vec::new());
+        let (mut base_diff, mut cand_diff) = (0.0f64, 0.0f64);
+        for i in 0..trace.len() {
+            let Some(seq) = out.request_version[i] else { continue };
+            let total = out.latencies[i].total_s();
+            let d = out.request_logits[i]
+                .iter()
+                .zip(&pure.request_logits[i])
+                .map(|(a, b)| (a - b).abs() as f64)
+                .fold(0.0f64, f64::max);
+            if seq == base_v.seq {
+                base_tot.push(total);
+                base_diff = base_diff.max(d);
+            } else {
+                cand_tot.push(total);
+                cand_diff = cand_diff.max(d);
+            }
+        }
+        let base_p99 = LatencySummary::from_samples(&base_tot).p99_s;
+        let cand_p99 = LatencySummary::from_samples(&cand_tot).p99_s;
+        let r = &out.rollout;
+        anyhow::ensure!(
+            base_diff == 0.0,
+            "base-served rows must be bit-identical to the pure base run \
+             (policy {label}, max |d| = {base_diff:e})"
+        );
+
+        table.row(&[
+            label.to_string(),
+            format!("{}/{}", r.served_base, r.served_candidate),
+            format!("{}/{}", r.canary_batches, r.swapped_batches),
+            if r.rolled_back { "YES".into() } else { "no".into() },
+            format!("{:.1} ms", base_p99 * 1e3),
+            format!("{:.1} ms", cand_p99 * 1e3),
+            format!("{base_diff:.1e}"),
+            format!("{cand_diff:.1e}"),
+        ]);
+        let _ = writeln!(
+            csv,
+            "{label},{},{},{},{},{},{},{},{},{},{},{:.6},{:.6},{:e},{:e}",
+            rollout.canary,
+            rollout.swap_at_s.unwrap_or(0.0),
+            r.base_seq,
+            r.candidate_seq,
+            r.served_base,
+            r.served_candidate,
+            r.canary_batches,
+            r.swapped_batches,
+            r.rolled_back,
+            r.gate_p99_s.unwrap_or(0.0),
+            base_p99,
+            cand_p99,
+            base_diff,
+            cand_diff,
+        );
+        let mut point = |name: String, mean_s: f64| {
+            snapshot.push(BenchSample {
+                name,
+                iters: requests,
+                mean_s,
+                std_s: 0.0,
+                min_s: mean_s,
+            });
+        };
+        point(format!("cli canary base p99 ({label})"), base_p99);
+        point(format!("cli canary cand p99 ({label})"), cand_p99);
+        point(
+            format!("cli canary candidate share ({label})"),
+            r.served_candidate as f64 / (r.served_base + r.served_candidate).max(1) as f64,
+        );
+    }
+    ctx.engine.clear_cache();
+
+    ctx.write_csv("canary.csv", &csv)?;
+    let extras = [
+        ("quick", "false".to_string()),
+        ("source", "\"gnn-pipe bench serve-canary\"".to_string()),
+    ];
+    let path = ctx.cfg.root.join("BENCH_params.json");
+    write_bench_snapshot(&path, "params", &extras, &snapshot)?;
+    eprintln!("[bench] wrote {}", path.display());
+
+    Ok(format!(
+        "Canary rollout — {} {ds_name}, 2 replicas, base v{} vs candidate \
+         v{}, {requests} requests (trace seed {}, swap at {swap_half_s:.2} s)\n\
+         {}\n\
+         base max|d| is the largest absolute logit difference between \
+         base-served rows and the pure base run — the swap contract pins \
+         it to exactly 0; cand max|d| is the real divergence between the \
+         two parameter versions. gate-trip's target is impossibly tight, \
+         so its rollout must report ROLLED BACK with every request on \
+         base\n",
+        framework_label(&backend),
+        base_v.seq,
+        cand_v.seq,
+        sc.seed,
+        table.render()
+    ))
+}

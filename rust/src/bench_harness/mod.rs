@@ -48,6 +48,11 @@
 //! and reports measured completion, failover, degradation and retries
 //! against `Scenarios::fleet_availability`.
 //!
+//! The `serve-canary` bench (E16) replays one trace against the two
+//! newest versions of a crash-safe parameter store (`crate::store`)
+//! under canary/hot-swap/rollback policies and reports per-version
+//! served splits, tails and logit divergence.
+//!
 //! The `partition` bench (E14) compares the hand-authored gat4 split
 //! against the DP balancer and the (stages, chunks, schedule) sweep
 //! winner from `pipeline::partition` — modeled epochs at every chunk
@@ -55,6 +60,7 @@
 //! DP-never-worse-than-hand-authored check printed per row.
 
 mod ablation;
+mod canary;
 mod faults;
 mod figures;
 mod fleet;
@@ -67,6 +73,7 @@ mod table1;
 mod table2;
 
 pub use ablation::{bench_ablation_chunker, bench_edge_retention};
+pub use canary::bench_serve_canary;
 pub use faults::bench_serve_faults;
 pub use figures::{bench_fig1, bench_fig2, bench_fig3, bench_fig4};
 pub use fleet::bench_serve_fleet;

@@ -257,10 +257,11 @@ impl BenchCtx {
         Ok(run)
     }
 
-    /// Write one results/ CSV (no-op when CSV output is disabled).
+    /// Write one results/ CSV, atomically — a crash mid-write leaves
+    /// the previous file (or none), never a truncated one.
     pub fn write_csv(&self, name: &str, contents: &str) -> Result<()> {
         let path = self.results_dir.join(name);
-        std::fs::write(&path, contents)?;
+        crate::util::fsio::atomic_write_str(&path, contents)?;
         eprintln!("[bench] wrote {}", path.display());
         Ok(())
     }

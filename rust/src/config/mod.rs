@@ -123,10 +123,18 @@ pub struct PipelineConfig {
     /// closed-form cost profile, and any other value is read as a path
     /// to a partition file written by `gnn-pipe partition --out`.
     pub partition: String,
+    /// Default crash-safe checkpoint store directory for train/pipeline
+    /// runs (overridable per run with `--checkpoint-dir`); "" disables
+    /// checkpointing.
+    pub checkpoint_dir: String,
+    /// Default checkpoint cadence in completed epochs (overridable per
+    /// run with `--checkpoint-every`); 0 = final-epoch-only when a
+    /// store is configured.
+    pub checkpoint_every: usize,
 }
 
 impl PipelineConfig {
-    const KNOWN_KEYS: [&'static str; 10] = [
+    const KNOWN_KEYS: [&'static str; 12] = [
         "devices",
         "balance",
         "chunks",
@@ -137,6 +145,8 @@ impl PipelineConfig {
         "replicas",
         "replica_threads",
         "partition",
+        "checkpoint_dir",
+        "checkpoint_every",
     ];
 
     /// Parse `configs/pipeline.json`. Like [`ServeConfig::from_json`],
@@ -187,6 +197,15 @@ impl PipelineConfig {
                 .and_then(Json::as_str)
                 .unwrap_or("gat4")
                 .to_string(),
+            checkpoint_dir: p
+                .get("checkpoint_dir")
+                .and_then(Json::as_str)
+                .unwrap_or("")
+                .to_string(),
+            checkpoint_every: p
+                .get("checkpoint_every")
+                .and_then(Json::as_usize)
+                .unwrap_or(0),
         })
     }
 }
@@ -236,6 +255,18 @@ pub struct ServeConfig {
     /// independent of the trace seed so the same traffic can replay
     /// under different fault draws.
     pub fault_seed: u64,
+    /// Versioned parameter store directory for rollouts (`--store-dir`);
+    /// "" = none configured.
+    pub store_dir: String,
+    /// Default canary fraction: the share of pre-swap batches routed to
+    /// the candidate version (0 disables the canary).
+    pub canary: f64,
+    /// Default hot-swap point in virtual seconds: batches closing at or
+    /// after this instant serve the candidate (0 = no swap).
+    pub swap_at_s: f64,
+    /// Rollback gate: modeled p99 ceiling for the candidate cohort,
+    /// milliseconds (0 = no gate, the rollout always goes through).
+    pub canary_p99_ms: f64,
 }
 
 impl Default for ServeConfig {
@@ -255,12 +286,16 @@ impl Default for ServeConfig {
             service_model_ms: 25.0,
             faults: "none".into(),
             fault_seed: 0,
+            store_dir: String::new(),
+            canary: 0.0,
+            swap_at_s: 0.0,
+            canary_p99_ms: 0.0,
         }
     }
 }
 
 impl ServeConfig {
-    const KNOWN_KEYS: [&'static str; 14] = [
+    const KNOWN_KEYS: [&'static str; 18] = [
         "backend",
         "rate_hz",
         "requests",
@@ -275,6 +310,10 @@ impl ServeConfig {
         "service_model_ms",
         "faults",
         "fault_seed",
+        "store_dir",
+        "canary",
+        "swap_at_s",
+        "canary_p99_ms",
     ];
 
     /// Overlay `configs/serve.json` onto the defaults. Every present
@@ -327,6 +366,18 @@ impl ServeConfig {
         }
         if let Some(v) = s.get("fault_seed").and_then(Json::as_usize) {
             serve.fault_seed = v as u64;
+        }
+        if let Some(v) = s.get("store_dir").and_then(Json::as_str) {
+            serve.store_dir = v.to_string();
+        }
+        if let Some(v) = s.get("canary").and_then(Json::as_f64) {
+            serve.canary = v;
+        }
+        if let Some(v) = s.get("swap_at_s").and_then(Json::as_f64) {
+            serve.swap_at_s = v;
+        }
+        if let Some(v) = s.get("canary_p99_ms").and_then(Json::as_f64) {
+            serve.canary_p99_ms = v;
         }
         Ok(serve)
     }
@@ -520,6 +571,27 @@ mod tests {
         let j = Json::parse(&format!("{{{base}, \"partition\": \"auto\"}}")).unwrap();
         let p = PipelineConfig::from_json(&j).unwrap();
         assert_eq!(p.partition, "auto");
+        // The checkpoint keys overlay like any other; typos are named.
+        let j = Json::parse(&format!(
+            "{{{base}, \"checkpoint_dir\": \"artifacts/ckpt\", \
+             \"checkpoint_every\": 25}}"
+        ))
+        .unwrap();
+        let p = PipelineConfig::from_json(&j).unwrap();
+        assert_eq!(p.checkpoint_dir, "artifacts/ckpt");
+        assert_eq!(p.checkpoint_every, 25);
+        let j = Json::parse(&format!("{{{base}}}")).unwrap();
+        let p = PipelineConfig::from_json(&j).unwrap();
+        assert_eq!(p.checkpoint_dir, "", "checkpointing defaults off");
+        assert_eq!(p.checkpoint_every, 0);
+        let j = Json::parse(&format!("{{{base}, \"checkpont_dir\": \"x\"}}"))
+            .unwrap();
+        let err = PipelineConfig::from_json(&j).unwrap_err().to_string();
+        assert!(err.contains("checkpont_dir"), "{err}");
+        assert!(
+            err.contains("did you mean \"checkpoint_dir\""),
+            "error must suggest the near miss: {err}"
+        );
     }
 
     #[test]
@@ -563,6 +635,41 @@ mod tests {
         assert_eq!(s.replicas, 4);
         assert_eq!(s.slo_p99_ms, 150.0);
         assert_eq!(s.max_batch, ServeConfig::default().max_batch);
+    }
+
+    #[test]
+    fn serve_config_rollout_keys_parse_and_typos_name_the_offender() {
+        // The rollout knobs overlay like any other serve key.
+        let j = Json::parse(
+            r#"{"store_dir": "artifacts/store", "canary": 0.25,
+                "swap_at_s": 2.5, "canary_p99_ms": 400.0}"#,
+        )
+        .unwrap();
+        let s = ServeConfig::from_json(&j).unwrap();
+        assert_eq!(s.store_dir, "artifacts/store");
+        assert_eq!(s.canary, 0.25);
+        assert_eq!(s.swap_at_s, 2.5);
+        assert_eq!(s.canary_p99_ms, 400.0);
+        // Defaults: no store, canary off, no swap, no gate.
+        let d = ServeConfig::default();
+        assert_eq!(d.store_dir, "");
+        assert_eq!(d.canary, 0.0);
+        assert_eq!(d.swap_at_s, 0.0);
+        assert_eq!(d.canary_p99_ms, 0.0);
+        // A typo'd rollout key is rejected by name with the near miss.
+        let j = Json::parse(r#"{"cannary": 0.1}"#).unwrap();
+        let err = ServeConfig::from_json(&j).unwrap_err().to_string();
+        assert!(err.contains("cannary"), "error must name the bad key: {err}");
+        assert!(
+            err.contains("did you mean \"canary\""),
+            "error must suggest the near miss: {err}"
+        );
+        let j = Json::parse(r#"{"swap_at": 2.5}"#).unwrap();
+        let err = ServeConfig::from_json(&j).unwrap_err().to_string();
+        assert!(
+            err.contains("did you mean \"swap_at_s\""),
+            "error must suggest the near miss: {err}"
+        );
     }
 
     #[test]

@@ -297,6 +297,74 @@ impl FaultPlan {
     }
 }
 
+/// Seeded on-disk corruption events for the parameter store's
+/// crash-safety tests: the two failure shapes `store::Store::open`
+/// must recover from. A plan is pure in its seed, so a corruption
+/// scenario replays bit-identically; [`StoreFault::apply`] mutates a
+/// file **in place** (deliberately non-atomic — it simulates the torn
+/// state an atomic writer can never produce at a version path).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum StoreFault {
+    /// Truncate the file to `frac` of its length — what a write killed
+    /// mid-flight (or a torn rename on a non-atomic filesystem) leaves
+    /// behind.
+    TornWrite {
+        /// Surviving prefix fraction in [0, 1).
+        frac: f64,
+    },
+    /// Flip bit `bit` of the byte at `offset_frac` of the file —
+    /// silent media corruption the checksum footer must catch.
+    BitFlip {
+        /// Victim byte position as a fraction of the length in [0, 1).
+        offset_frac: f64,
+        /// Bit index in [0, 8).
+        bit: u8,
+    },
+}
+
+impl StoreFault {
+    /// Generate `n` alternating torn-write / bit-flip events, pure in
+    /// `seed` (stream tag 5, alongside the fleet chaos streams).
+    pub fn generate(seed: u64, n: usize) -> Vec<StoreFault> {
+        let mut root = Rng::new(seed ^ 0x6661756c74u64); // "fault"
+        let mut rng = root.fork(5);
+        (0..n)
+            .map(|i| {
+                if i % 2 == 0 {
+                    StoreFault::TornWrite { frac: rng.range_f64(0.05, 0.95) }
+                } else {
+                    StoreFault::BitFlip {
+                        offset_frac: rng.next_f64(),
+                        bit: rng.below(8) as u8,
+                    }
+                }
+            })
+            .collect()
+    }
+
+    /// Apply the corruption to the file at `path` in place.
+    pub fn apply(&self, path: &std::path::Path) -> std::io::Result<()> {
+        let bytes = std::fs::read(path)?;
+        let corrupted = match *self {
+            StoreFault::TornWrite { frac } => {
+                let keep = (bytes.len() as f64 * frac.clamp(0.0, 1.0)) as usize;
+                bytes[..keep.min(bytes.len().saturating_sub(1))].to_vec()
+            }
+            StoreFault::BitFlip { offset_frac, bit } => {
+                let mut b = bytes;
+                if !b.is_empty() {
+                    let off = ((b.len() as f64 * offset_frac.clamp(0.0, 1.0))
+                        as usize)
+                        .min(b.len() - 1);
+                    b[off] ^= 1u8 << (bit % 8);
+                }
+                b
+            }
+        };
+        std::fs::write(path, corrupted)
+    }
+}
+
 /// Execution-fault table for one replica's pipeline, consulted by
 /// every stage worker before each forward micro-batch. Shared across
 /// retry attempts so transient counters burn down and the retry
@@ -514,6 +582,57 @@ mod tests {
         );
         f.reset_abort();
         assert!(!f.aborted());
+    }
+
+    #[test]
+    fn store_fault_plans_replay_bit_identically() {
+        let a = StoreFault::generate(9, 6);
+        let b = StoreFault::generate(9, 6);
+        assert_eq!(a, b);
+        assert_ne!(a, StoreFault::generate(10, 6));
+        // Alternating shapes with in-range parameters.
+        for (i, f) in a.iter().enumerate() {
+            match *f {
+                StoreFault::TornWrite { frac } => {
+                    assert_eq!(i % 2, 0);
+                    assert!((0.05..0.95).contains(&frac));
+                }
+                StoreFault::BitFlip { offset_frac, bit } => {
+                    assert_eq!(i % 2, 1);
+                    assert!((0.0..1.0).contains(&offset_frac));
+                    assert!(bit < 8);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn store_faults_corrupt_files_in_place() {
+        let dir = std::env::temp_dir().join(format!(
+            "gnn_pipe_storefault_{}_{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("victim.bin");
+        let original: Vec<u8> = (0u8..=255).collect();
+
+        std::fs::write(&path, &original).unwrap();
+        StoreFault::TornWrite { frac: 0.5 }.apply(&path).unwrap();
+        let torn = std::fs::read(&path).unwrap();
+        assert_eq!(torn.len(), 128);
+        assert_eq!(torn[..], original[..128]);
+
+        std::fs::write(&path, &original).unwrap();
+        StoreFault::BitFlip { offset_frac: 0.25, bit: 3 }.apply(&path).unwrap();
+        let flipped = std::fs::read(&path).unwrap();
+        assert_eq!(flipped.len(), original.len());
+        let diffs: Vec<usize> = (0..original.len())
+            .filter(|&i| flipped[i] != original[i])
+            .collect();
+        assert_eq!(diffs, vec![64]);
+        assert_eq!(flipped[64], original[64] ^ 0x08);
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 
     #[test]

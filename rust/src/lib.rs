@@ -23,8 +23,10 @@
 //!   traces, dynamic request batching, a forward-only streaming
 //!   schedule, tail-latency accounting, and a multi-replica fleet with
 //!   JSQ routing + SLO-aware admission), deterministic fault injection
-//!   with failover ([`faults`]), and the bench harness that regenerates
-//!   every table and figure of the paper.
+//!   with failover ([`faults`]), a crash-safe versioned parameter store
+//!   ([`store`]: durable checkpoint/resume for training, batch-boundary
+//!   hot-swap + canary rollback for serving), and the bench harness
+//!   that regenerates every table and figure of the paper.
 //!
 //! Python never runs on the training path: after `make artifacts` the
 //! binary is self-contained, executing the HLO via the PJRT CPU client.
@@ -44,6 +46,7 @@ pub mod pipeline;
 pub mod runtime;
 pub mod serve;
 pub mod simulator;
+pub mod store;
 pub mod testutil;
 pub mod train;
 pub mod util;

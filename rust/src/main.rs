@@ -2,13 +2,17 @@
 //!
 //! Subcommands:
 //!   data      [--dataset cora|citeseer|pubmed]       synth stats vs profile
-//!   train     --dataset D --backend B [--epochs N]   single-device training
+//!   train     --dataset D --backend B [--epochs N]
+//!             [--checkpoint-dir D] [--checkpoint-every K]
+//!             [--resume]                              single-device training
 //!   pipeline  --backend B --chunks K [--epochs N]
 //!             [--replicas R] [--replica-threads T]
 //!             [--schedule fill-drain|1f1b]
 //!             [--prep paper|cached|overlap]
 //!             [--partition gat4|auto|FILE]
 //!             [--repartition-check]
+//!             [--checkpoint-dir D] [--checkpoint-every K]
+//!             [--resume]
 //!             [--star] [--graph-aware]               pipeline training
 //!   partition [--stages S] [--dataset D]
 //!             [--source closed-form|measured]
@@ -24,13 +28,15 @@
 //!             [--max-defer-ms D] [--service-model-ms M]
 //!             [--faults none|crash|stall|slow|flaky|chaos]
 //!             [--fault-seed S] [--watchdog-s W]
+//!             [--store-dir D] [--canary P] [--swap-at T]
+//!             [--canary-p99-ms X] [--rollout-seed S]
 //!                                                   replay a seeded request
 //!                                                   trace through a fleet of
 //!                                                   forward-only pipelines
 //!   bench     table1|table2|fig1|fig2|fig3|fig4|
 //!             ablation-chunker|edge-retention|
 //!             prep-modes|hybrid|serve|serve-fleet|
-//!             serve-faults|partition|all
+//!             serve-faults|serve-canary|partition|all
 //!             [--epochs N] [--schedule S] [--prep P] [--replicas R]
 //!             [--replica-threads T]
 //!   inspect                                          artifact manifest summary
@@ -51,12 +57,14 @@ use gnn_pipe::pipeline::partition::{
     SweepConstraints, CANONICAL_BALANCE,
 };
 use gnn_pipe::pipeline::{parse_schedule, PipelineSpec, PipelineTrainer, PrepMode};
-use gnn_pipe::runtime::{Engine, Manifest};
+use gnn_pipe::runtime::{Engine, HostTensor, Manifest};
 use gnn_pipe::serve::{
-    generate_trace, BatchPolicy, FleetPolicy, FleetSession, RouterKind,
-    SloPolicy, TraceSpec, TrafficShape,
+    generate_trace, validate_watchdog_s, BatchPolicy, FleetPolicy,
+    FleetSession, RolloutGate, RolloutPolicy, RouterKind, SloPolicy,
+    TraceSpec, TrafficShape,
 };
 use gnn_pipe::simulator::{Scenarios, DEVICES};
+use gnn_pipe::store::{vec_to_flat, Store, Version};
 use gnn_pipe::train::{flatten_params, init_params, SingleDeviceTrainer};
 use gnn_pipe::util::cli::Args;
 
@@ -66,10 +74,12 @@ gnn-pipe — pipe-parallel GAT training (paper reproduction)
 USAGE:
   gnn-pipe data      [--dataset <name>]
   gnn-pipe train     --dataset <name> --backend <ell|edgewise> [--epochs N] [--seed S]
+                     [--checkpoint-dir <dir>] [--checkpoint-every K] [--resume]
   gnn-pipe pipeline  [--backend <ell|edgewise>] [--chunks K] [--replicas R] [--epochs N]
                      [--replica-threads T]
                      [--schedule fill-drain|1f1b] [--prep paper|cached|overlap]
                      [--partition gat4|auto|<file>] [--repartition-check]
+                     [--checkpoint-dir <dir>] [--checkpoint-every K] [--resume]
                      [--star] [--graph-aware]
   gnn-pipe partition [--stages S] [--dataset <name>] [--source closed-form|measured]
                      [--backend <ell|edgewise>] [--epochs N] [--out <file>]
@@ -80,7 +90,9 @@ USAGE:
                      [--service-model-ms M]
                      [--faults none|crash|stall|slow|flaky|chaos]
                      [--fault-seed S] [--watchdog-s W]
-  gnn-pipe bench     <table1|table2|fig1|fig2|fig3|fig4|ablation-chunker|edge-retention|prep-modes|hybrid|serve|serve-fleet|serve-faults|partition|all>
+                     [--store-dir <dir>] [--canary P] [--swap-at T]
+                     [--canary-p99-ms X] [--rollout-seed S]
+  gnn-pipe bench     <table1|table2|fig1|fig2|fig3|fig4|ablation-chunker|edge-retention|prep-modes|hybrid|serve|serve-fleet|serve-faults|serve-canary|partition|all>
                      [--epochs N] [--schedule fill-drain|1f1b] [--prep paper|cached|overlap]
                      [--replicas R] [--replica-threads T]
   gnn-pipe inspect
@@ -241,6 +253,59 @@ a pure function of --fault-seed, independent of the trace seed):
   Scenarios::fleet_availability model prices the expected completion
   rate of the degraded fleet. `bench serve-faults` sweeps scenarios x
   replicas and writes serve_faults.csv + BENCH_faults.json.
+
+CHECKPOINT (--checkpoint-dir on train/pipeline, defaults from
+configs/pipeline.json: checkpoint_dir/checkpoint_every):
+  --checkpoint-dir D    crash-safe versioned parameter store at D: after
+                        every due epoch the trainer durably publishes
+                        (params, Adam state, RNG cursor, metric curves,
+                        epoch) as v000001.ckpt, v000002.ckpt, ... — each
+                        written temp-file + fsync + atomic rename with a
+                        checksum footer, so a kill at ANY instant leaves
+                        either the previous version set or the new one,
+                        never a torn file under a version name.
+  --checkpoint-every K  checkpoint every K completed epochs (the final
+                        epoch always checkpoints; 0 = final-only).
+  --resume              recover and continue: the store sweeps stale
+                        .tmp debris, QUARANTINES truncated/corrupt
+                        versions into quarantine/ (evidence kept, never
+                        served), resumes from the newest valid one, and
+                        refuses a checkpoint whose label/seed/RNG cursor
+                        don't match the run being resumed.
+  RESUME CONTRACT: dropout keys are (seed, epoch)-pure and Adam's
+  recursion state round-trips bit-exactly (floats stored as bit
+  patterns), so a killed-and-resumed run is BIT-IDENTICAL to the
+  uninterrupted run — losses, params, accuracy curves. Only measured
+  wall-clock timings differ (they are measurements, not state, and are
+  deliberately not checkpointed).
+
+ROLLOUT (--canary/--swap-at on serve; defaults from configs/serve.json;
+requires --store-dir with at least two published versions — the two
+newest become (base, candidate)):
+  --store-dir D         read served parameter versions from the store
+                        at D (corrupt versions are quarantined at open
+                        and can never be swapped in).
+  --canary P            route a deterministic fraction P of pre-swap
+                        batches to the candidate version, selected by
+                        hashing (rollout seed, replica, batch index).
+  --swap-at T           hot-swap at virtual time T: batches closing at
+                        or after T serve the candidate. The swap lands
+                        on a batch boundary by construction — a request
+                        is never split across versions (0 = no swap).
+  --canary-p99-ms X     rollback gate: if the modeled p99 of the
+                        candidate cohort exceeds X ms the WHOLE rollout
+                        rolls back to the base version (0 = no gate).
+  --rollout-seed S      the canary coin's seed (default: the trace
+                        seed) — independent knob so one trace can be
+                        canaried differently.
+  SWAP CONTRACT: device-resident parameter buffers are keyed on the
+  version's content hash, so a swap re-uploads exactly once and a
+  replay reuses nothing stale; every served request's logits are
+  bit-identical to a pure run of whichever version served it, and
+  served + shed == offered holds under any rollout. `bench
+  serve-canary` replays one trace against the two newest versions and
+  writes canary.csv + BENCH_params.json (diffed logits, per-version
+  tails, rollback verdict).
 ";
 
 fn main() {
@@ -319,6 +384,18 @@ fn cmd_data(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `--checkpoint-dir` (CLI) overrides configs/pipeline.json's
+/// `checkpoint_dir`; empty/absent everywhere means checkpointing is off.
+fn checkpoint_dir_arg(args: &Args, cfg: &Config) -> Option<std::path::PathBuf> {
+    args.opt("checkpoint-dir")
+        .map(String::from)
+        .or_else(|| {
+            (!cfg.pipeline.checkpoint_dir.is_empty())
+                .then(|| cfg.pipeline.checkpoint_dir.clone())
+        })
+        .map(std::path::PathBuf::from)
+}
+
 fn cmd_train(args: &Args) -> Result<()> {
     let cfg = Config::load()?;
     let dataset = args.opt_str("dataset", "cora").to_string();
@@ -330,6 +407,10 @@ fn cmd_train(args: &Args) -> Result<()> {
     let ds = generate(cfg.dataset(&dataset)?)?;
     let mut trainer = SingleDeviceTrainer::new(&engine, &ds, &backend);
     trainer.seed = seed;
+    trainer.checkpoint_dir = checkpoint_dir_arg(args, &cfg);
+    trainer.checkpoint_every =
+        args.opt_usize("checkpoint-every", cfg.pipeline.checkpoint_every)?;
+    trainer.resume = args.flag("resume");
     println!("training {dataset}/{backend} for {epochs} epochs on CPU...");
     let res = trainer.train(&cfg.model, epochs)?;
     println!("epoch 1 (setup)    {:.4} s", res.timing.epoch1_s);
@@ -379,6 +460,10 @@ fn cmd_pipeline(args: &Args) -> Result<()> {
     trainer.spec = spec;
     trainer.balance = balance;
     trainer.repartition_check = args.flag("repartition-check");
+    trainer.checkpoint_dir = checkpoint_dir_arg(args, &cfg);
+    trainer.checkpoint_every =
+        args.opt_usize("checkpoint-every", cfg.pipeline.checkpoint_every)?;
+    trainer.resume = args.flag("resume");
     if star {
         trainer = trainer.full_graph_variant();
     }
@@ -578,10 +663,34 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let fault_seed = args.opt_usize("fault-seed", sc.fault_seed as usize)? as u64;
     let watchdog_s =
         args.opt_f64("watchdog-s", gnn_pipe::serve::DEFAULT_WATCHDOG_S)?;
+    let canary = args.opt_f64("canary", sc.canary)?;
+    let swap_at_s = args.opt_f64("swap-at", sc.swap_at_s)?;
+    let canary_p99_ms = args.opt_f64("canary-p99-ms", sc.canary_p99_ms)?;
+    let rollout_seed = args.opt_usize("rollout-seed", seed as usize)? as u64;
+    let store_dir = args.opt_str("store-dir", &sc.store_dir).to_string();
     anyhow::ensure!(rate_hz > 0.0, "--rate must be positive");
     anyhow::ensure!(requests > 0, "--requests must be positive");
     anyhow::ensure!(replicas >= 1, "--replicas must be >= 1");
-    anyhow::ensure!(watchdog_s > 0.0, "--watchdog-s must be positive");
+    validate_watchdog_s(watchdog_s)?;
+    anyhow::ensure!(
+        (0.0..=1.0).contains(&canary),
+        "--canary must be a fraction in [0, 1], got {canary}"
+    );
+    anyhow::ensure!(
+        swap_at_s >= 0.0,
+        "--swap-at must be a non-negative virtual time in seconds"
+    );
+    let rollout_on = canary > 0.0 || swap_at_s > 0.0;
+    anyhow::ensure!(
+        !(rollout_on && scenario != FaultScenario::None),
+        "--canary/--swap-at cannot combine with --faults (one experiment \
+         axis per run)"
+    );
+    anyhow::ensure!(
+        !rollout_on || !store_dir.is_empty(),
+        "--canary/--swap-at need --store-dir (a store with at least two \
+         published versions)"
+    );
 
     // Serving artifacts exist for the pipeline dataset (chunks=1).
     let dataset = cfg.pipeline.pipeline_dataset.clone();
@@ -636,43 +745,98 @@ fn cmd_serve(args: &Args) -> Result<()> {
     );
     let mut session = FleetSession::new(&engine, &ds, &backend);
     session.set_watchdog_s(watchdog_s);
-    let faults = (scenario != FaultScenario::None).then_some(&fault_plan);
-    let out = session.run_with_faults(&params, &trace, &policy, &fleet, faults)?;
-    print!("{}", out.report.render());
-
-    if scenario != FaultScenario::None {
-        // Price the degraded fleet: expected completion rate given the
-        // replicas the chaos plan kills and when it kills them.
-        let (crashed, crash_frac) =
-            fault_plan.capacity_summary(replicas, requests, watchdog_s);
-        let avail = Scenarios::fleet_availability(
-            &out.report.stage_fwd_means_s,
-            out.report.admitted_rps,
-            replicas,
-            max_batch,
-            max_wait_ms / 1e3,
-            crashed,
-            crash_frac,
-        );
+    let report = if rollout_on {
+        // Versioned rollout: serve the store's two newest versions.
+        let store = Store::open(std::path::Path::new(&store_dir))?;
+        for (seq, reason) in store.quarantined() {
+            eprintln!("store: quarantined corrupt v{seq}: {reason}");
+        }
+        let (base_v, cand_v) = store.latest_pair().ok_or_else(|| {
+            anyhow::anyhow!(
+                "store {} has {} valid version(s); a rollout needs two \
+                 (publish checkpoints with train/pipeline --checkpoint-dir)",
+                store.dir().display(),
+                store.versions().len()
+            )
+        })?;
+        let base = version_params(&store, base_v, &params)?;
+        let cand = version_params(&store, cand_v, &params)?;
+        let rollout = RolloutPolicy {
+            canary,
+            swap_at_s: (swap_at_s > 0.0).then_some(swap_at_s),
+            seed: rollout_seed,
+            gate: (canary_p99_ms > 0.0)
+                .then(|| RolloutGate { p99_target_s: canary_p99_ms / 1e3 }),
+        };
         println!(
-            "availability (closed form): {} of {} replicas lost \
-             (degraded {:.0}% of the run), capacity {:.1} -> {:.1} req/s, \
-             expected completion {:.1}%",
-            avail.crashed,
-            avail.replicas,
-            avail.degraded_frac * 100.0,
-            avail.full_capacity_rps,
-            avail.capacity_rps,
-            avail.expected_completion * 100.0,
+            "rollout: base v{} -> candidate v{} (canary {canary:.2}, swap at \
+             {}, gate {})",
+            base_v.seq,
+            cand_v.seq,
+            if swap_at_s > 0.0 {
+                format!("{swap_at_s:.2} s")
+            } else {
+                "off".to_string()
+            },
+            if canary_p99_ms > 0.0 {
+                format!("p99 <= {canary_p99_ms:.0} ms")
+            } else {
+                "off".to_string()
+            },
         );
-    }
+        let out = session.run_rollout(
+            &base,
+            &cand,
+            (base_v, cand_v),
+            &trace,
+            &policy,
+            &fleet,
+            &rollout,
+        )?;
+        print!("{}", out.report.render());
+        println!("{}", out.rollout.render());
+        out.report
+    } else {
+        let faults = (scenario != FaultScenario::None).then_some(&fault_plan);
+        let out =
+            session.run_with_faults(&params, &trace, &policy, &fleet, faults)?;
+        print!("{}", out.report.render());
+
+        if scenario != FaultScenario::None {
+            // Price the degraded fleet: expected completion rate given
+            // the replicas the chaos plan kills and when it kills them.
+            let (crashed, crash_frac) =
+                fault_plan.capacity_summary(replicas, requests, watchdog_s);
+            let avail = Scenarios::fleet_availability(
+                &out.report.stage_fwd_means_s,
+                out.report.admitted_rps,
+                replicas,
+                max_batch,
+                max_wait_ms / 1e3,
+                crashed,
+                crash_frac,
+            );
+            println!(
+                "availability (closed form): {} of {} replicas lost \
+                 (degraded {:.0}% of the run), capacity {:.1} -> {:.1} req/s, \
+                 expected completion {:.1}%",
+                avail.crashed,
+                avail.replicas,
+                avail.degraded_frac * 100.0,
+                avail.full_capacity_rps,
+                avail.capacity_rps,
+                avail.expected_completion * 100.0,
+            );
+        }
+        out.report
+    };
 
     // The closed-form fleet model at this operating point, priced with
     // the run's own measured stage times at the ADMITTED rate (under
     // overload the gate is what keeps the served stream finite).
     let model = Scenarios::fleet_latency(
-        &out.report.stage_fwd_means_s,
-        out.report.admitted_rps,
+        &report.stage_fwd_means_s,
+        report.admitted_rps,
         replicas,
         max_batch,
         max_wait_ms / 1e3,
@@ -698,6 +862,23 @@ fn cmd_serve(args: &Args) -> Result<()> {
         per.utilization,
     );
     Ok(())
+}
+
+/// Load a store version's flat parameter vector into tensors shaped
+/// like `template` (the manifest-ordered seeded init — the shapes are
+/// the model's; the store holds only the values).
+fn version_params(
+    store: &Store,
+    v: Version,
+    template: &[HostTensor],
+) -> Result<Vec<HostTensor>> {
+    let rec = store.load(v.seq)?;
+    let flat = rec.f32s("flat").map_err(|e| {
+        e.context(format!("store v{} has no flat parameter vector", v.seq))
+    })?;
+    let mut out = template.to_vec();
+    vec_to_flat(&flat, &mut out)?;
+    Ok(out)
 }
 
 fn cmd_bench(args: &Args) -> Result<()> {
@@ -734,6 +915,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
             "serve" => bench::bench_serve(ctx),
             "serve-fleet" => bench::bench_serve_fleet(ctx),
             "serve-faults" => bench::bench_serve_faults(ctx),
+            "serve-canary" => bench::bench_serve_canary(ctx),
             "partition" => bench::bench_partition(ctx),
             other => anyhow::bail!("unknown bench {other:?}"),
         }
@@ -742,7 +924,8 @@ fn cmd_bench(args: &Args) -> Result<()> {
         for name in [
             "table1", "table2", "fig1", "fig2", "fig3", "fig4",
             "ablation-chunker", "edge-retention", "prep-modes", "hybrid",
-            "serve", "serve-fleet", "serve-faults", "partition",
+            "serve", "serve-fleet", "serve-faults", "serve-canary",
+            "partition",
         ] {
             outputs.push(run(name, &ctx)?);
         }

@@ -210,13 +210,15 @@ pub struct BenchSample {
 /// Write a perf-trajectory snapshot: `{"bench": ..., <extras>,
 /// "samples": [...]}`. `extras` values are raw JSON (pre-quote strings;
 /// numbers/bools as-is), emitted in order after the bench name so
-/// existing snapshot readers keep their field order.
+/// existing snapshot readers keep their field order. The write is
+/// atomic ([`crate::util::fsio::atomic_write_str`]): a crash mid-write
+/// can never leave truncated JSON to poison the CI trajectory diff.
 pub fn write_bench_snapshot(
     path: &Path,
     bench_name: &str,
     extras: &[(&str, String)],
     samples: &[BenchSample],
-) -> std::io::Result<()> {
+) -> anyhow::Result<()> {
     let mut json = format!("{{\n  \"bench\": \"{bench_name}\",\n");
     for (k, v) in extras {
         let _ = writeln!(json, "  \"{k}\": {v},");
@@ -231,7 +233,7 @@ pub fn write_bench_snapshot(
         json.push_str(if i + 1 < samples.len() { ",\n" } else { "\n" });
     }
     json.push_str("  ]\n}\n");
-    std::fs::write(path, json)
+    crate::util::fsio::atomic_write_str(path, &json)
 }
 
 /// Simple scoped timer.

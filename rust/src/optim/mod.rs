@@ -16,7 +16,7 @@ pub mod allreduce;
 mod adam;
 mod sgd;
 
-pub use adam::Adam;
+pub use adam::{Adam, AdamState};
 pub use allreduce::{tree_allreduce, tree_allreduce_sharded, tree_rounds};
 pub use sgd::Sgd;
 

@@ -31,6 +31,7 @@
 //! path — no reduction, no extra clone.
 
 use std::collections::BTreeMap;
+use std::path::PathBuf;
 use std::sync::mpsc::Receiver;
 use std::sync::Arc;
 
@@ -44,9 +45,11 @@ use crate::data::Dataset;
 use crate::metrics::{Curve, RunTiming, Timer};
 use crate::optim::{Adam, Optimizer};
 use crate::runtime::{Engine, HostTensor};
+use crate::store::{flat_to_vec, vec_to_flat, Store, TrainCheckpoint};
 use crate::train::{
     flatten_params, init_params, unflatten_params, Evaluator,
 };
+use crate::util::rng::Rng;
 
 use super::chunkprep::{
     lossy_union_from_induced, microbatches_from_induced, Microbatch,
@@ -105,6 +108,18 @@ pub struct PipelineTrainer<'e> {
     /// would change artifact kinds and break bitwise replay, so this is
     /// advisory only.
     pub repartition_check: bool,
+    /// Crash-safe checkpoint store directory (`--checkpoint-dir`).
+    /// `None` disables checkpointing.
+    pub checkpoint_dir: Option<PathBuf>,
+    /// Publish a checkpoint every K completed epochs
+    /// (`--checkpoint-every`; the final epoch always checkpoints when a
+    /// store is configured, so 0 = final-only).
+    pub checkpoint_every: usize,
+    /// Resume from the newest valid checkpoint in the store
+    /// (`--resume`). The resumed run is bit-identical to the
+    /// uninterrupted run: dropout keys are `(seed, epoch)`-pure and the
+    /// checkpoint restores params/Adam/curves/epoch cursor exactly.
+    pub resume: bool,
 }
 
 #[derive(Debug)]
@@ -191,6 +206,9 @@ impl<'e> PipelineTrainer<'e> {
             eval_every: 10,
             balance: super::partition::CANONICAL_BALANCE.to_vec(),
             repartition_check: false,
+            checkpoint_dir: None,
+            checkpoint_every: 0,
+            resume: false,
         }
     }
 
@@ -322,23 +340,77 @@ impl<'e> PipelineTrainer<'e> {
             stage_calls: 0,
         };
 
+        // Crash-safe checkpoint store: resume restores the exact
+        // (params, Adam, curves, epoch) state, so the remaining epochs
+        // replay bit-identically to the uninterrupted run.
+        let label = format!(
+            "pipeline:{}:{}:c{}:r{}",
+            p.name, self.backend, self.chunks, self.replicas
+        );
+        let mut store = match &self.checkpoint_dir {
+            Some(dir) => Some(Store::open(dir)?),
+            None => {
+                anyhow::ensure!(
+                    !self.resume,
+                    "--resume requires --checkpoint-dir"
+                );
+                None
+            }
+        };
+        let mut start_epoch = 1usize;
+        if self.resume {
+            let s = store.as_ref().unwrap();
+            for (seq, reason) in s.quarantined() {
+                eprintln!(
+                    "checkpoint store: quarantined corrupt v{seq}: {reason}"
+                );
+            }
+            if let Some(v) = s.latest() {
+                let ckpt = TrainCheckpoint::from_record(&s.load(v.seq)?)?;
+                ckpt.check_resumable(&label, self.seed, epochs)?;
+                vec_to_flat(&ckpt.flat, &mut st.flat)?;
+                st.adam.import_state(ckpt.adam);
+                st.train_loss = ckpt.train_loss;
+                st.train_acc = ckpt.train_acc;
+                st.val_acc = ckpt.val_acc;
+                start_epoch = ckpt.epoch + 1;
+                eprintln!(
+                    "resumed {label} from checkpoint v{} (epoch {} of {epochs})",
+                    v.seq, ckpt.epoch
+                );
+            } else {
+                eprintln!(
+                    "resume: no valid checkpoint in {}; starting fresh",
+                    s.dir().display()
+                );
+            }
+        }
+
         let transfer_base = pipe.transfer_seconds();
         match (&static_mbs, self.prep) {
             (Some(mbs), _) => {
                 let mut feed = MbFeed::Static(mbs.as_slice());
-                self.run_epochs(epochs, &cx, &mut st, &mut feed)?;
+                self.run_epochs(
+                    start_epoch, epochs, &cx, &mut st, &mut feed,
+                    &mut store, &label,
+                )?;
             }
             (None, PrepMode::Overlap) => std::thread::scope(|scope| {
+                // The prefetcher builds one set per REMAINING epoch —
+                // a resumed run consumes exactly that many.
                 let rx = spawn_prefetcher(
                     scope,
                     ds,
                     &plan,
                     &self.backend,
                     &train_mask,
-                    epochs,
+                    (epochs + 1).saturating_sub(start_epoch),
                 );
                 let mut feed = MbFeed::Prefetch(rx);
-                self.run_epochs(epochs, &cx, &mut st, &mut feed)
+                self.run_epochs(
+                    start_epoch, epochs, &cx, &mut st, &mut feed,
+                    &mut store, &label,
+                )
             })?,
             (None, _) => {
                 let mut feed = MbFeed::Rebuild {
@@ -348,7 +420,10 @@ impl<'e> PipelineTrainer<'e> {
                     backend: &self.backend,
                     train_mask: &train_mask,
                 };
-                self.run_epochs(epochs, &cx, &mut st, &mut feed)?;
+                self.run_epochs(
+                    start_epoch, epochs, &cx, &mut st, &mut feed,
+                    &mut store, &label,
+                )?;
             }
         }
         st.timing.transfer_s = pipe.transfer_seconds() - transfer_base;
@@ -386,17 +461,53 @@ impl<'e> PipelineTrainer<'e> {
         })
     }
 
+    /// Publish a checkpoint after `epoch` when one is due: every
+    /// `checkpoint_every` epochs, plus always at the final epoch so a
+    /// completed run leaves its end state durably versioned.
+    fn maybe_checkpoint(
+        &self,
+        store: &mut Option<Store>,
+        label: &str,
+        st: &TrainAccum,
+        epoch: usize,
+        epochs: usize,
+    ) -> Result<()> {
+        let Some(store) = store.as_mut() else { return Ok(()) };
+        let due = epoch == epochs
+            || (self.checkpoint_every > 0 && epoch % self.checkpoint_every == 0);
+        if !due {
+            return Ok(());
+        }
+        let ckpt = TrainCheckpoint {
+            label: label.to_string(),
+            seed: self.seed,
+            epoch,
+            rng_state: Rng::new(self.seed).state(),
+            flat: flat_to_vec(&st.flat)?,
+            adam: st.adam.export_state(),
+            train_loss: st.train_loss.clone(),
+            train_acc: st.train_acc.clone(),
+            val_acc: st.val_acc.clone(),
+        };
+        store.publish(&ckpt.to_record())?;
+        Ok(())
+    }
+
     /// The per-epoch loop, generic over where micro-batches come from.
+    #[allow(clippy::too_many_arguments)]
     fn run_epochs(
         &self,
+        start_epoch: usize,
         epochs: usize,
         cx: &EpochCtx,
         st: &mut TrainAccum,
         feed: &mut MbFeed,
+        store: &mut Option<Store>,
+        label: &str,
     ) -> Result<()> {
         // Owner for prefetched sets (delivered by value each epoch).
         let mut current: Vec<Microbatch> = Vec::new();
-        for epoch in 1..=epochs {
+        for epoch in start_epoch..=epochs {
             let t = Timer::start();
 
             // The paper re-built sub-graphs inside every forward pass;
@@ -471,6 +582,8 @@ impl<'e> PipelineTrainer<'e> {
                 let m = cx.evaluator.metrics(&pm)?;
                 st.val_acc.push(epoch, m.val_acc);
             }
+
+            self.maybe_checkpoint(store, label, st, epoch, epochs)?;
         }
         Ok(())
     }

@@ -78,6 +78,7 @@ use anyhow::{Context, Result};
 
 use crate::faults::StageFaults;
 use crate::runtime::{Engine, ExecInput, Executable, HostTensor};
+use crate::util::hash::Fnv1a;
 
 use super::chunkprep::Microbatch;
 use super::schedule::{Schedule, StageEvent};
@@ -245,6 +246,16 @@ pub struct PipelineEngine {
     /// worker consults the table before each forward micro-batch.
     /// `None` (the default) is a no-op.
     pub faults: Option<Arc<StageFaults>>,
+    /// Content version of the parameter vector (the store's
+    /// `Version::content_hash`). With `device_resident` on, setting
+    /// this keys each stage's parameter tensors into the
+    /// device-resident static-input cache under
+    /// `fnv("param", version, flat index)` — so a serving run uploads
+    /// a parameter version once and every later batch is a cache hit,
+    /// and a hot-swap to a new version re-uploads exactly once under
+    /// fresh keys. `None` (the default, and the training path, where
+    /// params change every step) uploads params on every call.
+    pub param_version: Option<u64>,
 }
 
 type Msg = (usize, HostTensor);
@@ -345,6 +356,7 @@ impl PipelineEngine {
             device_resident: false,
             watchdog_s: None,
             faults: None,
+            param_version: None,
         })
     }
 
@@ -386,6 +398,7 @@ impl PipelineEngine {
             device_resident: false,
             watchdog_s: None,
             faults: None,
+            param_version: None,
         })
     }
 
@@ -570,6 +583,7 @@ impl PipelineEngine {
                     mbs: microbatches,
                     keys: &keys,
                     device_resident: self.device_resident,
+                    param_version: self.param_version,
                     events: self.schedule.events(s, n_stages, m_count),
                     sink,
                     fwd_in: fwd_in[s].take(),
@@ -715,6 +729,10 @@ struct StageWorker<'a> {
     keys: &'a [HostTensor],
     /// Mark per-micro-batch static inputs for device residency.
     device_resident: bool,
+    /// Content version of the parameter vector: with `device_resident`,
+    /// params upload once per version (see
+    /// [`PipelineEngine::param_version`]).
+    param_version: Option<u64>,
     events: Vec<StageEvent>,
     /// Forward-only runs: the final stage streams each batch's primary
     /// output here instead of accumulating `logp`.
@@ -904,8 +922,25 @@ impl StageWorker<'_> {
                 ExecInput::Dyn(t)
             }
         };
-        let mut inp: Vec<ExecInput<'t>> =
-            self.params.iter().map(ExecInput::Dyn).collect();
+        // Versioned serving params ride the same static cache: keyed by
+        // (content version, global flat index), so a new version —
+        // fresh keys — re-uploads exactly once, and the swapped-out
+        // version's buffers age out of use without a flush mid-run.
+        let mut inp: Vec<ExecInput<'t>> = match self.param_version {
+            Some(version) if resident => self
+                .params
+                .iter()
+                .enumerate()
+                .map(|(i, p)| {
+                    let mut h = Fnv1a::new();
+                    h.write(b"param");
+                    h.write_u64(version);
+                    h.write_usize(self.spec.params.0 + i);
+                    ExecInput::Static(h.finish(), p)
+                })
+                .collect(),
+            _ => self.params.iter().map(ExecInput::Dyn).collect(),
+        };
         for i in inputs {
             match i {
                 StageInput::Activation => inp.push(ExecInput::Dyn(
@@ -1140,6 +1175,16 @@ mod tests {
 
     #[test]
     fn engine_error_classification() {
+        // The FULL four-variant classification table. The fleet's retry
+        // loop re-runs is_transient errors and treats everything else
+        // as replica death, so a variant landing in the wrong column is
+        // a serving-availability bug: a retried StagePanic would loop a
+        // deterministic crash forever, a non-retried InjectedFault
+        // would fail chaos runs that are retryable by construction.
+        let panic = EngineError::StagePanic {
+            stage: 0,
+            message: "boom".to_string(),
+        };
         let timeout = EngineError::StageTimeout {
             stage: 1,
             micro_batch: 0,
@@ -1152,13 +1197,36 @@ mod tests {
             what: "activation",
         };
         let injected = EngineError::InjectedFault { stage: 2, micro_batch: 1 };
-        assert!(!timeout.is_disconnect() && !timeout.is_transient());
-        assert!(closed.is_disconnect() && !closed.is_transient());
-        assert!(!injected.is_disconnect() && injected.is_transient());
+        // (variant, is_disconnect, is_transient) — one row per variant;
+        // adding an EngineError variant must extend this table.
+        let table: Vec<(EngineError, bool, bool)> = vec![
+            (panic, false, false),
+            (timeout, false, false),
+            (closed, true, false),
+            (injected.clone(), false, true),
+        ];
+        for (e, disconnect, transient) in &table {
+            assert_eq!(e.is_disconnect(), *disconnect, "{e:?}");
+            assert_eq!(e.is_transient(), *transient, "{e:?}");
+        }
+        // Exactly one variant is retry-worthy, exactly one is
+        // link-teardown collateral.
+        assert_eq!(table.iter().filter(|(e, ..)| e.is_transient()).count(), 1);
+        assert_eq!(table.iter().filter(|(e, ..)| e.is_disconnect()).count(), 1);
         // The triage in execute() keys on the typed chain surviving a
         // context wrap.
         let wrapped = anyhow::Error::new(injected.clone()).context("pipeline stage failed");
         assert!(wrapped
+            .chain()
+            .any(|c| c.downcast_ref::<EngineError>().is_some_and(EngineError::is_transient)));
+        // A non-transient error stays non-transient through the wrap —
+        // the retry loop must not resurrect it.
+        let wrapped = anyhow::Error::new(EngineError::StagePanic {
+            stage: 3,
+            message: "deterministic bug".to_string(),
+        })
+        .context("pipeline stage failed");
+        assert!(!wrapped
             .chain()
             .any(|c| c.downcast_ref::<EngineError>().is_some_and(EngineError::is_transient)));
     }

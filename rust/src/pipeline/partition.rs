@@ -742,9 +742,10 @@ impl PartitionFile {
         PartitionFile::parse(&text)
     }
 
-    /// Serialize to disk ([`PartitionFile::to_json`] format).
+    /// Serialize to disk ([`PartitionFile::to_json`] format), atomically
+    /// — a crash mid-write never leaves a truncated partition file.
     pub fn write(&self, path: &std::path::Path) -> Result<()> {
-        std::fs::write(path, self.to_json())
+        crate::util::fsio::atomic_write_str(path, &self.to_json())
             .with_context(|| format!("writing partition file {}", path.display()))
     }
 }

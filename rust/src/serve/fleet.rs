@@ -95,10 +95,12 @@ use crate::runtime::{Engine, HostTensor};
 use crate::util::par::run_indexed;
 
 use super::admission::{AdmissionDecision, AdmissionGate, SloPolicy};
-use super::batch::BatchPolicy;
+use super::batch::{plan_batches, BatchPolicy, ServeBatch};
 use super::latency::{LatencySummary, RequestLatency};
+use super::rollout::{plan_rollout, RolloutPolicy, RolloutReport};
 use super::server::{ServeOutput, ServeSession};
 use super::trace::Request;
+use crate::store::Version;
 
 /// How the fleet spreads requests over replicas.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -600,6 +602,24 @@ pub struct FleetOutput {
     pub replica_orders: Vec<Vec<usize>>,
 }
 
+/// Everything a rollout run produces: the fleet aggregates plus the
+/// per-request version attribution the invariance tests inspect.
+#[derive(Debug)]
+pub struct RolloutOutput {
+    pub report: FleetReport,
+    pub rollout: RolloutReport,
+    /// The fault-free routing/admission plan the rollout executed.
+    pub plan: FleetPlan,
+    /// Served log-prob row per request, indexed like the trace; empty
+    /// for shed requests.
+    pub request_logits: Vec<Vec<f32>>,
+    /// Indexed like the trace; default (all-zero) for shed requests.
+    pub latencies: Vec<RequestLatency>,
+    /// The store version (sequence number) that served each request;
+    /// `None` for shed requests.
+    pub request_version: Vec<Option<u64>>,
+}
+
 /// A bound serving fleet: one shared [`ServeSession`] driven
 /// concurrently, one thread per replica.
 pub struct FleetSession<'e> {
@@ -829,6 +849,216 @@ impl<'e> FleetSession<'e> {
             request_logits,
             latencies,
             replica_orders,
+        })
+    }
+
+    /// Serve one trace across **two store versions**: a deterministic
+    /// canary fraction and/or a batch-boundary hot-swap route planned
+    /// batches to the candidate version, with automatic rollback when
+    /// the rollout gate's modeled candidate p99 trips (see
+    /// [`super::rollout`]). The routing plan is the ordinary fault-free
+    /// [`plan_fleet`]; version assignment then splits each replica's
+    /// sub-trace into per-version cohorts along its batch plan — a
+    /// request is never split across versions mid-batch, conservation
+    /// (`served + shed == offered`) is untouched, and every served
+    /// row's logits are bit-identical to a pure run of whichever
+    /// version served it.
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_rollout(
+        &self,
+        base_params: &[HostTensor],
+        candidate_params: &[HostTensor],
+        versions: (Version, Version),
+        trace: &[Request],
+        policy: &BatchPolicy,
+        fleet: &FleetPolicy,
+        rollout: &RolloutPolicy,
+    ) -> Result<RolloutOutput> {
+        anyhow::ensure!(!trace.is_empty(), "cannot serve an empty trace");
+        let (base_v, cand_v) = versions;
+        anyhow::ensure!(
+            base_v.seq != cand_v.seq,
+            "rollout needs two distinct store versions (got v{} twice)",
+            base_v.seq
+        );
+        let plan = plan_fleet(trace, policy, fleet);
+        let subs = plan.sub_traces(trace, fleet.replicas);
+        // Each replica's deterministic batch plan over its sub-trace —
+        // the rollout's unit of version assignment.
+        let batch_plans: Vec<Vec<ServeBatch>> = subs
+            .iter()
+            .map(|sub| {
+                if sub.is_empty() {
+                    Vec::new()
+                } else {
+                    let reqs: Vec<Request> =
+                        sub.iter().map(|&(_, q)| q).collect();
+                    plan_batches(&reqs, policy)
+                }
+            })
+            .collect();
+        let close_s: Vec<Vec<f64>> = batch_plans
+            .iter()
+            .map(|bs| bs.iter().map(|b| b.close_s).collect())
+            .collect();
+        let rplan = plan_rollout(&close_s, rollout, fleet.service_model_s);
+
+        // Split each replica's sub-trace into per-version cohorts along
+        // the batch assignment. Order within a cohort stays sorted by
+        // effective arrival (batches and their members already are), so
+        // the per-cohort replay re-plans valid batches.
+        let mut cohorts: Vec<[Vec<(usize, Request)>; 2]> = (0..fleet.replicas)
+            .map(|_| [Vec::new(), Vec::new()])
+            .collect();
+        for r in 0..fleet.replicas {
+            for (bi, b) in batch_plans[r].iter().enumerate() {
+                let side = rplan.candidate[r][bi] as usize;
+                for &local in &b.requests {
+                    cohorts[r][side].push(subs[r][local]);
+                }
+            }
+        }
+
+        let phase = Timer::start();
+        let results: Vec<Result<[Option<ServeOutput>; 2]>> =
+            run_indexed(fleet.replicas, fleet.replicas, |r| {
+                let mut outs = [None, None];
+                for side in 0..2 {
+                    let list = &cohorts[r][side];
+                    if list.is_empty() {
+                        continue;
+                    }
+                    let sub: Vec<Request> =
+                        list.iter().map(|&(_, q)| q).collect();
+                    let (params, key) = if side == 0 {
+                        (base_params, base_v.content_hash)
+                    } else {
+                        (candidate_params, cand_v.content_hash)
+                    };
+                    match self.session.run_versioned(
+                        params,
+                        &sub,
+                        policy,
+                        None,
+                        Some(key),
+                    ) {
+                        Ok(o) => outs[side] = Some(o),
+                        Err(e) => {
+                            return Err(e.context(format!("replica {r}")));
+                        }
+                    }
+                }
+                Ok(outs)
+            });
+        let phase_wall_s = phase.secs();
+
+        let mut request_logits: Vec<Vec<f32>> = vec![Vec::new(); trace.len()];
+        let mut latencies = vec![RequestLatency::default(); trace.len()];
+        let mut request_version: Vec<Option<u64>> = vec![None; trace.len()];
+        let mut per_replica_served = vec![0usize; fleet.replicas];
+        let mut per_replica_wall_s = vec![0.0f64; fleet.replicas];
+        let mut static_hits = 0u64;
+        let mut stage_means: Vec<Vec<f64>> = Vec::new();
+        let (mut served_base, mut served_candidate) = (0usize, 0usize);
+        for (r, res) in results.into_iter().enumerate() {
+            let outs = res?;
+            for (side, out) in outs.into_iter().enumerate() {
+                let Some(out) = out else { continue };
+                per_replica_served[r] += cohorts[r][side].len();
+                per_replica_wall_s[r] += out.report.wall_s;
+                static_hits += out.report.static_hits;
+                stage_means.push(out.report.stage_fwd_means_s.clone());
+                let seq = if side == 0 {
+                    served_base += cohorts[r][side].len();
+                    base_v.seq
+                } else {
+                    served_candidate += cohorts[r][side].len();
+                    cand_v.seq
+                };
+                for (local, &(global, _)) in
+                    cohorts[r][side].iter().enumerate()
+                {
+                    let mut lat = out.latencies[local];
+                    if let Disposition::Served { deferred_s, .. } =
+                        plan.dispositions[global]
+                    {
+                        lat.queue_s += deferred_s;
+                    }
+                    latencies[global] = lat;
+                    request_logits[global] = out.request_logits[local].clone();
+                    request_version[global] = Some(seq);
+                }
+            }
+        }
+
+        let served_lat: Vec<&RequestLatency> = plan
+            .dispositions
+            .iter()
+            .enumerate()
+            .filter(|(_, d)| matches!(d, Disposition::Served { .. }))
+            .map(|(i, _)| &latencies[i])
+            .collect();
+        let summarize = |f: fn(&RequestLatency) -> f64| {
+            LatencySummary::from_samples(
+                &served_lat.iter().map(|&l| f(l)).collect::<Vec<f64>>(),
+            )
+        };
+        let stage_fwd_means_s: Vec<f64> = if stage_means.is_empty() {
+            Vec::new()
+        } else {
+            (0..stage_means[0].len())
+                .map(|s| {
+                    stage_means.iter().map(|m| m[s]).sum::<f64>()
+                        / stage_means.len() as f64
+                })
+                .collect()
+        };
+        let trace_span_s = trace.last().unwrap().arrival_s.max(1e-12);
+        let wall_s = per_replica_wall_s.iter().cloned().fold(0.0, f64::max);
+        let report = FleetReport {
+            backend: self.backend.clone(),
+            replicas: fleet.replicas,
+            router: fleet.router.name().to_string(),
+            offered: trace.len(),
+            served: plan.served,
+            deferred: plan.deferred,
+            shed: plan.shed,
+            shed_rate: plan.shed as f64 / trace.len() as f64,
+            offered_rps: trace.len() as f64 / trace_span_s,
+            admitted_rps: plan.served as f64 / trace_span_s,
+            throughput_rps: plan.served as f64 / wall_s.max(1e-12),
+            wall_s,
+            phase_wall_s,
+            per_replica_served,
+            per_replica_wall_s,
+            static_hits,
+            queue: summarize(|l| l.queue_s),
+            execute: summarize(|l| l.execute_s),
+            total: summarize(|l| l.total_s()),
+            stage_fwd_means_s,
+            failover: 0,
+            degraded: 0,
+            retries: 0,
+            failed: 0,
+            replica_errors: vec![None; fleet.replicas],
+        };
+        let rollout = RolloutReport {
+            base_seq: base_v.seq,
+            candidate_seq: cand_v.seq,
+            served_base,
+            served_candidate,
+            canary_batches: rplan.canary_batches,
+            swapped_batches: rplan.swapped_batches,
+            rolled_back: rplan.rolled_back,
+            gate_p99_s: rplan.gate_p99_s,
+        };
+        Ok(RolloutOutput {
+            report,
+            rollout,
+            plan,
+            request_logits,
+            latencies,
+            request_version,
         })
     }
 }

@@ -57,11 +57,22 @@
 //! hang, and [`AdmissionGate::for_capacity`] brown-outs the degraded
 //! fleet gracefully. The logits of every request that completes are
 //! bit-identical to the fault-free path.
+//!
+//! **Versioned rollouts** ([`rollout`]) connect serving to the
+//! crash-safe parameter store (`crate::store`): a fleet can serve two
+//! store versions at once — a deterministic canary fraction and/or a
+//! batch-boundary hot-swap route planned batches to the candidate,
+//! with automatic rollback when the modeled candidate p99 trips the
+//! gate. Versions never split a batch, device-resident parameter
+//! buffers are keyed on the version's content hash (swap = one
+//! re-upload), and every served row stays bit-identical to a pure run
+//! of whichever version served it.
 
 pub mod admission;
 pub mod batch;
 pub mod fleet;
 pub mod latency;
+pub mod rollout;
 pub mod server;
 pub mod trace;
 
@@ -69,9 +80,15 @@ pub use admission::{AdmissionDecision, AdmissionGate, SloPolicy};
 pub use batch::{plan_batches, BatchPolicy, ServeBatch};
 pub use fleet::{
     plan_fleet, plan_fleet_faults, Disposition, FleetFaultPlan, FleetOutput,
-    FleetPlan, FleetPolicy, FleetReport, FleetSession, RouterKind,
-    FAILOVER_BACKOFF_BATCHES,
+    FleetPlan, FleetPolicy, FleetReport, FleetSession, RolloutOutput,
+    RouterKind, FAILOVER_BACKOFF_BATCHES,
 };
 pub use latency::{LatencySummary, RequestLatency, ServeReport};
-pub use server::{ServeOutput, ServeSession, DEFAULT_WATCHDOG_S};
+pub use rollout::{
+    canary_fraction, plan_rollout, RolloutGate, RolloutPlan, RolloutPolicy,
+    RolloutReport,
+};
+pub use server::{
+    validate_watchdog_s, ServeOutput, ServeSession, DEFAULT_WATCHDOG_S,
+};
 pub use trace::{generate_trace, poisson_trace, Request, TraceSpec, TrafficShape};

@@ -1,0 +1,365 @@
+//! Zero-downtime rollout planning: hot-swap, canary, and rollback for
+//! versioned parameters.
+//!
+//! ## Batch-boundary-only swaps
+//!
+//! A served logit row depends only on `(params, node)`, and the serving
+//! pipeline executes whole batches — so the *unit* of a version change
+//! is the planned batch, never the individual request mid-batch. The
+//! rollout planner ([`plan_rollout`]) takes each replica's deterministic
+//! batch plan (its `close_s` timeline, a pure function of the trace
+//! seed) and assigns every batch to exactly one of two store versions:
+//!
+//! * **hot-swap** — batches whose `close_s` is at or past
+//!   [`RolloutPolicy::swap_at_s`] serve the candidate version: the swap
+//!   lands on a batch boundary by construction, and a request is never
+//!   split across versions;
+//! * **canary** — before the swap point, a deterministic fraction
+//!   [`RolloutPolicy::canary`] of batches serve the candidate, selected
+//!   by hashing `(seed, replica, batch index)` — the same batches every
+//!   replay, no RNG state to carry.
+//!
+//! ## The rollback gate
+//!
+//! [`RolloutGate`] prices the candidate cohort on the virtual timeline
+//! the same way the admission layer does: a per-replica single-server
+//! queue walk (`done = max(prev_done, close_s) + service_model_s`)
+//! yields a modeled latency sample per candidate batch, and if the p99
+//! of those samples exceeds the gate's target the whole rollout is
+//! **rolled back** — every batch serves the base version, swap
+//! included. Decisions are pure over `(batch plans, policy, service
+//! model)`, so a rollback is bit-reproducible and the serving layer
+//! can assert it planned the same fate on every replay.
+//!
+//! The execution layer ([`super::fleet::FleetSession::run_rollout`])
+//! splits each replica's sub-trace into per-version cohorts from this
+//! plan; because logits are `(params, node)`-pure, every request's row
+//! is bit-identical to a pure run of whichever version served it
+//! (`rust/tests/integration_store.rs` pins this).
+
+use crate::util::hash::Fnv1a;
+
+use super::latency::LatencySummary;
+
+/// Candidate-cohort health gate: the modeled p99 the canary must stay
+/// under, or the rollout rolls back.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RolloutGate {
+    /// Modeled p99 target for candidate batches, seconds.
+    pub p99_target_s: f64,
+}
+
+/// The rollout knobs (`gnn-pipe serve --canary P --swap-at T`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RolloutPolicy {
+    /// Fraction of pre-swap batches routed to the candidate version
+    /// (deterministic per `(seed, replica, batch)`); 0 disables the
+    /// canary.
+    pub canary: f64,
+    /// Virtual time at which the fleet hot-swaps: batches closing at or
+    /// after this instant serve the candidate. `None` = no swap.
+    pub swap_at_s: Option<f64>,
+    /// Seed for the canary hash — independent of the trace seed so the
+    /// same trace can be canaried differently.
+    pub seed: u64,
+    /// `None` = no rollback gate (the rollout always goes through).
+    pub gate: Option<RolloutGate>,
+}
+
+impl RolloutPolicy {
+    /// No canary, no swap: everything serves the base version.
+    pub fn none() -> RolloutPolicy {
+        RolloutPolicy { canary: 0.0, swap_at_s: None, seed: 0, gate: None }
+    }
+}
+
+/// The deterministic per-batch version assignment for one fleet run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RolloutPlan {
+    /// `candidate[replica][batch]`: true when that batch serves the
+    /// candidate version. All false after a rollback.
+    pub candidate: Vec<Vec<bool>>,
+    /// Pre-swap batches the canary hash routed to the candidate (as
+    /// planned, counted even when the gate then rolled back).
+    pub canary_batches: usize,
+    /// Batches at/past the swap point (as planned).
+    pub swapped_batches: usize,
+    /// The gate tripped: every batch reverts to the base version.
+    pub rolled_back: bool,
+    /// The modeled candidate-cohort p99 the gate evaluated; `None`
+    /// when no batch was planned onto the candidate.
+    pub gate_p99_s: Option<f64>,
+}
+
+impl RolloutPlan {
+    /// Batches assigned to the candidate in the *final* plan.
+    pub fn candidate_batches(&self) -> usize {
+        self.candidate
+            .iter()
+            .map(|r| r.iter().filter(|&&c| c).count())
+            .sum()
+    }
+}
+
+/// The deterministic canary coin: a uniform-ish fraction in `[0, 1)`
+/// from `(seed, replica, batch)`. Pure — the same batch lands on the
+/// same side of the threshold on every replay.
+pub fn canary_fraction(seed: u64, replica: usize, batch: usize) -> f64 {
+    let mut h = Fnv1a::new();
+    h.write(b"canary");
+    h.write_u64(seed);
+    h.write_usize(replica);
+    h.write_usize(batch);
+    // Top 53 bits -> [0, 1) with full f64 mantissa resolution.
+    (h.finish() >> 11) as f64 / 9_007_199_254_740_992.0
+}
+
+/// Assign every planned batch to a version, then gate the candidate
+/// cohort. `batch_close_s[r]` is replica `r`'s batch-close timeline
+/// (from [`super::batch::plan_batches`] over its sub-trace). Pure over
+/// `(timelines, policy, service_model_s)`. Panics if `policy.canary`
+/// is outside `[0, 1]`.
+pub fn plan_rollout(
+    batch_close_s: &[Vec<f64>],
+    policy: &RolloutPolicy,
+    service_model_s: f64,
+) -> RolloutPlan {
+    assert!(
+        (0.0..=1.0).contains(&policy.canary),
+        "canary fraction {} outside [0, 1]",
+        policy.canary
+    );
+    let mut candidate: Vec<Vec<bool>> = Vec::with_capacity(batch_close_s.len());
+    let (mut canary_batches, mut swapped_batches) = (0usize, 0usize);
+    for (r, closes) in batch_close_s.iter().enumerate() {
+        let mut flags = Vec::with_capacity(closes.len());
+        for (b, &close_s) in closes.iter().enumerate() {
+            let swapped =
+                policy.swap_at_s.is_some_and(|t| close_s >= t);
+            let canaried = !swapped
+                && policy.canary > 0.0
+                && canary_fraction(policy.seed, r, b) < policy.canary;
+            if swapped {
+                swapped_batches += 1;
+            } else if canaried {
+                canary_batches += 1;
+            }
+            flags.push(swapped || canaried);
+        }
+        candidate.push(flags);
+    }
+
+    // Gate: price the candidate cohort as a per-replica single-server
+    // virtual queue (same modeling stance as the admission gate) and
+    // take the p99 over all candidate batches' modeled latencies.
+    let svc = service_model_s.max(0.0);
+    let mut samples = Vec::new();
+    for (r, closes) in batch_close_s.iter().enumerate() {
+        let mut done = 0.0f64;
+        for (b, &close_s) in closes.iter().enumerate() {
+            if !candidate[r][b] {
+                continue;
+            }
+            done = done.max(close_s) + svc;
+            samples.push(done - close_s);
+        }
+    }
+    let gate_p99_s = (!samples.is_empty())
+        .then(|| LatencySummary::from_samples(&samples).p99_s);
+    let rolled_back = match (&policy.gate, gate_p99_s) {
+        (Some(g), Some(p99)) => p99 > g.p99_target_s,
+        _ => false,
+    };
+    if rolled_back {
+        for flags in &mut candidate {
+            for f in flags.iter_mut() {
+                *f = false;
+            }
+        }
+    }
+    RolloutPlan {
+        candidate,
+        canary_batches,
+        swapped_batches,
+        rolled_back,
+        gate_p99_s,
+    }
+}
+
+/// What `gnn-pipe serve --canary/--swap-at` prints about the rollout,
+/// and what `bench serve-canary` snapshots.
+#[derive(Debug, Clone, Default)]
+pub struct RolloutReport {
+    /// Store sequence numbers of the two versions.
+    pub base_seq: u64,
+    pub candidate_seq: u64,
+    /// Served requests per version in the final plan.
+    pub served_base: usize,
+    pub served_candidate: usize,
+    pub canary_batches: usize,
+    pub swapped_batches: usize,
+    pub rolled_back: bool,
+    pub gate_p99_s: Option<f64>,
+}
+
+impl RolloutReport {
+    pub fn render(&self) -> String {
+        let gate = match self.gate_p99_s {
+            Some(p) => format!("{:.1} ms", p * 1e3),
+            None => "-".to_string(),
+        };
+        format!(
+            "rollout: base v{} served {} / candidate v{} served {} \
+             ({} canary batches, {} swapped, gate p99 {gate}{})",
+            self.base_seq,
+            self.served_base,
+            self.candidate_seq,
+            self.served_candidate,
+            self.canary_batches,
+            self.swapped_batches,
+            if self.rolled_back { ", ROLLED BACK" } else { "" },
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn timelines() -> Vec<Vec<f64>> {
+        // Two replicas, batches closing every 10 ms.
+        (0..2)
+            .map(|r| {
+                (0..200)
+                    .map(|b| 0.010 * (b as f64 + 1.0) + r as f64 * 1e-4)
+                    .collect()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn canary_fraction_is_deterministic_and_in_range() {
+        let mut sum = 0.0;
+        for b in 0..4096 {
+            let f = canary_fraction(7, 1, b);
+            assert!((0.0..1.0).contains(&f));
+            assert_eq!(f, canary_fraction(7, 1, b));
+            sum += f;
+        }
+        let mean = sum / 4096.0;
+        assert!((0.4..0.6).contains(&mean), "mean {mean} far from uniform");
+        // Different seeds decorrelate the coin.
+        assert_ne!(canary_fraction(7, 1, 3), canary_fraction(8, 1, 3));
+    }
+
+    #[test]
+    fn no_canary_no_swap_serves_everything_on_base() {
+        let plan = plan_rollout(&timelines(), &RolloutPolicy::none(), 0.01);
+        assert_eq!(plan.candidate_batches(), 0);
+        assert_eq!(plan.canary_batches, 0);
+        assert_eq!(plan.swapped_batches, 0);
+        assert!(!plan.rolled_back);
+        assert_eq!(plan.gate_p99_s, None);
+    }
+
+    #[test]
+    fn full_canary_serves_everything_on_candidate() {
+        let policy = RolloutPolicy {
+            canary: 1.0,
+            swap_at_s: None,
+            seed: 3,
+            gate: None,
+        };
+        let plan = plan_rollout(&timelines(), &policy, 0.001);
+        assert_eq!(plan.candidate_batches(), 400);
+        assert_eq!(plan.canary_batches, 400);
+    }
+
+    #[test]
+    fn canary_share_tracks_the_requested_fraction() {
+        let policy = RolloutPolicy {
+            canary: 0.3,
+            swap_at_s: None,
+            seed: 11,
+            gate: None,
+        };
+        let plan = plan_rollout(&timelines(), &policy, 0.001);
+        let share = plan.candidate_batches() as f64 / 400.0;
+        assert!((0.2..0.4).contains(&share), "share {share}");
+        // Deterministic: the same batches every replay.
+        assert_eq!(plan, plan_rollout(&timelines(), &policy, 0.001));
+    }
+
+    #[test]
+    fn swap_assigns_exactly_the_suffix_at_a_batch_boundary() {
+        let policy = RolloutPolicy {
+            canary: 0.0,
+            swap_at_s: Some(1.0),
+            seed: 0,
+            gate: None,
+        };
+        let plan = plan_rollout(&timelines(), &policy, 0.001);
+        for (r, closes) in timelines().iter().enumerate() {
+            for (b, &close_s) in closes.iter().enumerate() {
+                assert_eq!(
+                    plan.candidate[r][b],
+                    close_s >= 1.0,
+                    "replica {r} batch {b}"
+                );
+            }
+        }
+        assert!(plan.swapped_batches > 0);
+        assert_eq!(plan.canary_batches, 0);
+    }
+
+    #[test]
+    fn gate_trips_and_rolls_back_to_all_base() {
+        // Service model far slower than the batch cadence: the virtual
+        // candidate queue diverges and the modeled p99 blows up.
+        let hot = RolloutPolicy {
+            canary: 1.0,
+            swap_at_s: None,
+            seed: 5,
+            gate: Some(RolloutGate { p99_target_s: 0.05 }),
+        };
+        let plan = plan_rollout(&timelines(), &hot, 0.100);
+        assert!(plan.rolled_back);
+        assert_eq!(plan.candidate_batches(), 0, "rollback reverts every batch");
+        assert!(plan.gate_p99_s.unwrap() > 0.05);
+        // The planned counts survive the rollback for reporting.
+        assert_eq!(plan.canary_batches, 400);
+        // A feasible target keeps the rollout.
+        let ok = RolloutPolicy {
+            gate: Some(RolloutGate { p99_target_s: 10.0 }),
+            ..hot
+        };
+        let plan = plan_rollout(&timelines(), &ok, 0.001);
+        assert!(!plan.rolled_back);
+        assert_eq!(plan.candidate_batches(), 400);
+    }
+
+    #[test]
+    fn gate_without_candidates_never_trips() {
+        let policy = RolloutPolicy {
+            canary: 0.0,
+            swap_at_s: None,
+            seed: 0,
+            gate: Some(RolloutGate { p99_target_s: 1e-9 }),
+        };
+        let plan = plan_rollout(&timelines(), &policy, 0.1);
+        assert!(!plan.rolled_back);
+        assert_eq!(plan.gate_p99_s, None);
+    }
+
+    #[test]
+    #[should_panic(expected = "canary fraction")]
+    fn out_of_range_canary_panics() {
+        let policy = RolloutPolicy {
+            canary: 1.5,
+            swap_at_s: None,
+            seed: 0,
+            gate: None,
+        };
+        plan_rollout(&timelines(), &policy, 0.01);
+    }
+}

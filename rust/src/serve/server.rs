@@ -93,6 +93,21 @@ pub struct ServeOutput {
 /// the replica forever. Generous enough for slow CI machines.
 pub const DEFAULT_WATCHDOG_S: f64 = 10.0;
 
+/// Reject nonsensical watchdog settings with a configuration error at
+/// parse time. Zero is the dangerous one: every stage-link recv would
+/// time out instantly, so the fleet would spin `StageTimeout`s instead
+/// of serving — a config mistake, not a chaos experiment, and it must
+/// say so. Shared by `gnn-pipe serve` and anything else that accepts
+/// `--watchdog-s`.
+pub fn validate_watchdog_s(watchdog_s: f64) -> anyhow::Result<()> {
+    anyhow::ensure!(
+        watchdog_s.is_finite() && watchdog_s > 0.0,
+        "--watchdog-s must be a positive number of seconds (got \
+         {watchdog_s}); 0 would time out every stage link instantly"
+    );
+    Ok(())
+}
+
 /// A bound serving session: dataset + backend + the shared prep cache.
 pub struct ServeSession<'e> {
     engine: &'e Engine,
@@ -160,6 +175,28 @@ impl<'e> ServeSession<'e> {
         policy: &BatchPolicy,
         faults: Option<Arc<StageFaults>>,
     ) -> Result<ServeOutput> {
+        self.run_versioned(params, trace, policy, faults, None)
+    }
+
+    /// [`run_faulted`] serving one *store version* of the parameters:
+    /// `param_version` keys the device-resident parameter buffers on
+    /// [`crate::store::Version::content_hash`], so replaying against a
+    /// version the pipeline already uploaded is a static-cache hit and
+    /// a hot-swap re-uploads exactly once. Logits depend only on
+    /// `(params, node)`, so a versioned run is bit-identical to the
+    /// unversioned run with the same parameter values — the rollout
+    /// layer (`serve::rollout`) exploits this to split a trace into
+    /// per-version cohorts without perturbing any served row.
+    ///
+    /// [`run_faulted`]: ServeSession::run_faulted
+    pub fn run_versioned(
+        &self,
+        params: &[HostTensor],
+        trace: &[Request],
+        policy: &BatchPolicy,
+        faults: Option<Arc<StageFaults>>,
+        param_version: Option<u64>,
+    ) -> Result<ServeOutput> {
         anyhow::ensure!(!trace.is_empty(), "cannot serve an empty trace");
         let n = self.ds.profile.nodes;
         for (i, r) in trace.iter().enumerate() {
@@ -204,6 +241,7 @@ impl<'e> ServeSession<'e> {
         pipe.device_resident = true;
         pipe.watchdog_s = Some(self.watchdog_s.max(1e-3));
         pipe.faults = faults;
+        pipe.param_version = param_version;
         self.engine.warm_up(&pipe.artifact_names)?;
         let setup_s = setup.secs();
 
@@ -340,5 +378,31 @@ impl<'e> ServeSession<'e> {
                 .collect(),
         };
         Ok(ServeOutput { report, request_logits, latencies, completion_order })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn watchdog_validation_rejects_zero_and_nonsense() {
+        // 0 is the dangerous misconfiguration: every stage-link recv
+        // would time out instantly, spinning StageTimeouts instead of
+        // serving. It must be a clear config error at parse time.
+        let err = validate_watchdog_s(0.0).unwrap_err().to_string();
+        assert!(err.contains("--watchdog-s"), "names the flag: {err}");
+        assert!(err.contains("positive"), "says what's wrong: {err}");
+        assert!(
+            err.contains("instantly"),
+            "explains the failure mode zero would cause: {err}"
+        );
+        assert!(validate_watchdog_s(-1.0).is_err());
+        assert!(validate_watchdog_s(f64::NAN).is_err());
+        assert!(validate_watchdog_s(f64::INFINITY).is_err());
+        // Any positive finite value is fine, including sub-second test
+        // watchdogs and the serving default.
+        validate_watchdog_s(0.05).unwrap();
+        validate_watchdog_s(DEFAULT_WATCHDOG_S).unwrap();
     }
 }

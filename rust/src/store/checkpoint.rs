@@ -1,0 +1,275 @@
+//! Training checkpoint payloads: everything a trainer must persist so
+//! `--resume` is bit-identical to the uninterrupted run.
+//!
+//! The contract: dropout keys are derived per `(seed, epoch)` and the
+//! optimizer's recursion state is pure f32/u64, so `(flat params, Adam
+//! state, metric curves, epoch cursor, seed, RNG cursor)` fully
+//! determines the remainder of a run. [`TrainCheckpoint`] round-trips
+//! all of it through a [`Record`] losslessly (floats as bit patterns).
+
+use anyhow::Result;
+
+use super::record::Record;
+use crate::metrics::Curve;
+use crate::optim::AdamState;
+use crate::runtime::HostTensor;
+use crate::util::rng::Rng;
+
+/// A trainer's resumable state after some number of completed epochs.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TrainCheckpoint {
+    /// Run identity (`"pipeline:pubmed:ell:c4"`-style); `--resume`
+    /// refuses a checkpoint whose label doesn't match the run being
+    /// resumed — silently continuing a different configuration would
+    /// void the bit-identity contract.
+    pub label: String,
+    /// The run's training seed (drives dropout keys and init).
+    pub seed: u64,
+    /// Completed epochs; the resumed run continues at `epoch + 1`.
+    pub epoch: usize,
+    /// Resumable RNG stream cursor ([`crate::util::rng::Rng::state`]).
+    pub rng_state: u64,
+    /// The flat parameter vector, in manifest order.
+    pub flat: Vec<f32>,
+    /// Adam's step count and moment estimates.
+    pub adam: AdamState,
+    pub train_loss: Curve,
+    pub train_acc: Curve,
+    pub val_acc: Curve,
+}
+
+/// Concatenate a flat parameter tensor list (manifest order) into one
+/// f32 vector for checkpointing. Bit patterns are preserved end to end
+/// ([`Record::put_f32s`] stores bits, not decimal renderings).
+pub fn flat_to_vec(flat: &[HostTensor]) -> Result<Vec<f32>> {
+    let mut out = Vec::new();
+    for t in flat {
+        out.extend_from_slice(t.as_f32()?);
+    }
+    Ok(out)
+}
+
+/// Overwrite a live flat parameter list's payloads from a checkpointed
+/// vector. Shapes come from the freshly initialised tensors; a total
+/// length mismatch means the checkpoint belongs to a different model
+/// and is refused.
+pub fn vec_to_flat(values: &[f32], flat: &mut [HostTensor]) -> Result<()> {
+    let total: usize = flat
+        .iter()
+        .map(|t| t.as_f32().map(<[f32]>::len))
+        .sum::<Result<usize>>()?;
+    anyhow::ensure!(
+        values.len() == total,
+        "checkpoint has {} parameter values but the model has {total}",
+        values.len()
+    );
+    let mut pos = 0;
+    for t in flat {
+        let dst = t.as_f32_mut()?;
+        dst.copy_from_slice(&values[pos..pos + dst.len()]);
+        pos += dst.len();
+    }
+    Ok(())
+}
+
+fn put_curve(rec: &mut Record, name: &str, c: &Curve) {
+    rec.put_usizes(&format!("{name}.epochs"), &c.epochs);
+    rec.put_f64s(&format!("{name}.values"), &c.values);
+}
+
+fn get_curve(rec: &Record, name: &str) -> Result<Curve> {
+    let epochs = rec.usizes(&format!("{name}.epochs"))?;
+    let values = rec.f64s(&format!("{name}.values"))?;
+    anyhow::ensure!(
+        epochs.len() == values.len(),
+        "curve {name}: {} epochs vs {} values",
+        epochs.len(),
+        values.len()
+    );
+    Ok(Curve { epochs, values })
+}
+
+impl TrainCheckpoint {
+    /// Refuse to resume the wrong run: label, seed and RNG cursor must
+    /// match the run being resumed, and the checkpoint cannot sit past
+    /// the requested epoch count. Both trainers derive their per-epoch
+    /// dropout keys from `(seed, epoch)`, so the host RNG stream cursor
+    /// stays at [`Rng::new`]`(seed)`'s state for the whole run — the
+    /// cursor is persisted and checked so a future stateful sampler
+    /// inherits a verified slot rather than a silent default.
+    pub fn check_resumable(
+        &self,
+        label: &str,
+        seed: u64,
+        epochs: usize,
+    ) -> Result<()> {
+        anyhow::ensure!(
+            self.label == label,
+            "checkpoint is for run {:?}, not {label:?} — refusing to \
+             resume a different configuration",
+            self.label
+        );
+        anyhow::ensure!(
+            self.seed == seed,
+            "checkpoint seed {} does not match run seed {seed}",
+            self.seed
+        );
+        anyhow::ensure!(
+            self.rng_state == Rng::new(seed).state(),
+            "checkpoint RNG cursor {:#018x} does not match the run's \
+             stream for seed {seed}",
+            self.rng_state
+        );
+        anyhow::ensure!(
+            self.epoch <= epochs,
+            "checkpoint already covers epoch {} of a {epochs}-epoch run",
+            self.epoch
+        );
+        Ok(())
+    }
+
+    pub fn to_record(&self) -> Record {
+        let mut rec = Record::new();
+        rec.put_str("label", &self.label);
+        rec.put_u64("seed", self.seed);
+        rec.put_u64("epoch", self.epoch as u64);
+        rec.put_u64("rng_state", self.rng_state);
+        rec.put_f32s("flat", &self.flat);
+        rec.put_u64("adam.t", self.adam.t);
+        // Ragged Vec<Vec<f32>> as (lengths, concatenation).
+        let lens: Vec<usize> = self.adam.m.iter().map(Vec::len).collect();
+        rec.put_usizes("adam.lens", &lens);
+        let cat = |vv: &[Vec<f32>]| -> Vec<f32> {
+            vv.iter().flat_map(|v| v.iter().copied()).collect()
+        };
+        rec.put_f32s("adam.m", &cat(&self.adam.m));
+        rec.put_f32s("adam.v", &cat(&self.adam.v));
+        put_curve(&mut rec, "train_loss", &self.train_loss);
+        put_curve(&mut rec, "train_acc", &self.train_acc);
+        put_curve(&mut rec, "val_acc", &self.val_acc);
+        rec
+    }
+
+    pub fn from_record(rec: &Record) -> Result<TrainCheckpoint> {
+        let lens = rec.usizes("adam.lens")?;
+        let split = |flat: Vec<f32>| -> Result<Vec<Vec<f32>>> {
+            let total: usize = lens.iter().sum();
+            anyhow::ensure!(
+                flat.len() == total,
+                "adam moments: {} values but lens sum to {total}",
+                flat.len()
+            );
+            let mut out = Vec::with_capacity(lens.len());
+            let mut pos = 0;
+            for &n in &lens {
+                out.push(flat[pos..pos + n].to_vec());
+                pos += n;
+            }
+            Ok(out)
+        };
+        Ok(TrainCheckpoint {
+            label: rec.str_("label")?.to_string(),
+            seed: rec.u64("seed")?,
+            epoch: rec.u64("epoch")? as usize,
+            rng_state: rec.u64("rng_state")?,
+            flat: rec.f32s("flat")?,
+            adam: AdamState {
+                t: rec.u64("adam.t")?,
+                m: split(rec.f32s("adam.m")?)?,
+                v: split(rec.f32s("adam.v")?)?,
+            },
+            train_loss: get_curve(rec, "train_loss")?,
+            train_acc: get_curve(rec, "train_acc")?,
+            val_acc: get_curve(rec, "val_acc")?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> TrainCheckpoint {
+        TrainCheckpoint {
+            label: "pipeline:pubmed:ell:c4".into(),
+            seed: 17,
+            epoch: 42,
+            rng_state: 0xDEAD_BEEF_0BAD_F00D,
+            flat: vec![1.0, -2.5, f32::MIN_POSITIVE, 0.0],
+            adam: AdamState {
+                t: 42,
+                m: vec![vec![0.1, 0.2], vec![], vec![0.3]],
+                v: vec![vec![0.4, 0.5], vec![], vec![0.6]],
+            },
+            train_loss: Curve {
+                epochs: vec![1, 2],
+                values: vec![1.9, 1.4],
+            },
+            train_acc: Curve { epochs: vec![1, 2], values: vec![0.3, 0.5] },
+            val_acc: Curve { epochs: vec![2], values: vec![0.45] },
+        }
+    }
+
+    #[test]
+    fn record_round_trip_is_lossless() {
+        let ckpt = sample();
+        let rec = ckpt.to_record();
+        let back = TrainCheckpoint::from_record(&rec).unwrap();
+        assert_eq!(back, ckpt);
+        // And the full wire round trip too.
+        let (bytes, _) = rec.encode();
+        let back2 =
+            TrainCheckpoint::from_record(&Record::decode(&bytes).unwrap())
+                .unwrap();
+        assert_eq!(back2, ckpt);
+    }
+
+    #[test]
+    fn ragged_moment_split_is_validated() {
+        let mut rec = sample().to_record();
+        // Lie about the lengths: the sum no longer matches the payload.
+        rec.put_usizes("adam.lens", &[1, 1, 1, 7]);
+        assert!(TrainCheckpoint::from_record(&rec).is_err());
+    }
+
+    #[test]
+    fn flat_tensor_round_trip_is_bit_exact() {
+        let flat = vec![
+            HostTensor::f32(vec![2, 2], vec![1.0, -0.0, f32::NAN, 4.0]),
+            HostTensor::f32(vec![3], vec![5.0, 6.0, 7.0]),
+        ];
+        let values = flat_to_vec(&flat).unwrap();
+        assert_eq!(values.len(), 7);
+        let mut fresh = vec![
+            HostTensor::f32(vec![2, 2], vec![0.0; 4]),
+            HostTensor::f32(vec![3], vec![0.0; 3]),
+        ];
+        vec_to_flat(&values, &mut fresh).unwrap();
+        for (a, b) in flat.iter().zip(&fresh) {
+            let (a, b) = (a.as_f32().unwrap(), b.as_f32().unwrap());
+            assert_eq!(a.len(), b.len());
+            for (x, y) in a.iter().zip(b) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+        // A different model's value count is refused.
+        let err = vec_to_flat(&values[..5], &mut fresh).unwrap_err();
+        assert!(err.to_string().contains("parameter values"), "{err}");
+    }
+
+    #[test]
+    fn resume_refuses_the_wrong_run() {
+        let mut ckpt = sample();
+        ckpt.rng_state = Rng::new(17).state();
+        let label = "pipeline:pubmed:ell:c4";
+        ckpt.check_resumable(label, 17, 100).unwrap();
+        // Completed runs resume as a no-op (epoch == epochs).
+        ckpt.check_resumable(label, 17, 42).unwrap();
+        assert!(ckpt.check_resumable("train:cora:ell", 17, 100).is_err());
+        assert!(ckpt.check_resumable(label, 18, 100).is_err());
+        assert!(ckpt.check_resumable(label, 17, 41).is_err());
+        let mut bad_rng = ckpt.clone();
+        bad_rng.rng_state ^= 1;
+        assert!(bad_rng.check_resumable(label, 17, 100).is_err());
+    }
+}

@@ -1,0 +1,295 @@
+//! Crash-safe versioned parameter store.
+//!
+//! A [`Store`] is a directory of monotonically numbered record files
+//! (`v000001.ckpt`, `v000002.ckpt`, ...), each a checksummed
+//! [`Record`]. Writes are durable by construction — temp file + fsync +
+//! atomic rename via [`crate::util::fsio::atomic_write`] — so a crash
+//! at any instant leaves either the previous version set or the new
+//! one, never a torn file under a version name.
+//!
+//! [`Store::open`] is the recovery path: it sweeps stale `.tmp` files
+//! (the debris of a killed write), validates every version file's
+//! magic/format/checksum, **quarantines** the invalid ones into
+//! `quarantine/` (keeping the evidence without ever serving it), and
+//! exposes the newest valid version as [`Store::latest`]. Training
+//! checkpoints ([`TrainCheckpoint`]) and served parameter versions ride
+//! the same machinery; the serving hot-swap path keys device-resident
+//! buffers on [`Version::content_hash`], so a swapped-in version
+//! re-uploads exactly once.
+
+mod checkpoint;
+mod record;
+
+pub use checkpoint::{flat_to_vec, vec_to_flat, TrainCheckpoint};
+pub use record::{Record, FORMAT, MAGIC};
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::util::fsio::{atomic_write, TMP_SUFFIX};
+
+/// One valid on-disk version.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Version {
+    /// Monotonic sequence number (file name `v{seq:06}.ckpt`).
+    pub seq: u64,
+    /// The record's checksum footer — its content identity. The serve
+    /// path keys device-resident parameter buffers on this.
+    pub content_hash: u64,
+}
+
+/// A directory of versioned, checksummed records.
+#[derive(Debug)]
+pub struct Store {
+    dir: PathBuf,
+    /// Valid versions, ascending by `seq`.
+    versions: Vec<Version>,
+    /// `(seq, reason)` for every file quarantined by [`Store::open`].
+    quarantined: Vec<(u64, String)>,
+}
+
+impl Store {
+    /// Open (creating if absent) the store at `dir`, sweep write debris,
+    /// validate every version and quarantine the corrupt ones. After
+    /// `open` returns, every version the store lists decodes cleanly —
+    /// corrupt candidates can never be served or resumed from.
+    pub fn open(dir: &Path) -> Result<Store> {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("create store dir {}", dir.display()))?;
+        let qdir = dir.join("quarantine");
+        std::fs::create_dir_all(&qdir)
+            .with_context(|| format!("create {}", qdir.display()))?;
+
+        let mut versions = Vec::new();
+        let mut quarantined = Vec::new();
+        for entry in std::fs::read_dir(dir)
+            .with_context(|| format!("read store dir {}", dir.display()))?
+        {
+            let entry = entry?;
+            if !entry.file_type()?.is_file() {
+                continue;
+            }
+            let name = entry.file_name().to_string_lossy().into_owned();
+            if name.ends_with(TMP_SUFFIX) {
+                // A write killed mid-flight never reached a version
+                // name; its temp file is pure debris.
+                let _ = std::fs::remove_file(entry.path());
+                continue;
+            }
+            let Some(seq) = parse_version_name(&name) else {
+                continue;
+            };
+            match std::fs::read(entry.path())
+                .map_err(anyhow::Error::from)
+                .and_then(|bytes| {
+                    let rec = Record::decode(&bytes)?;
+                    Ok((bytes, rec))
+                }) {
+                Ok((bytes, _)) => {
+                    let hash = u64::from_le_bytes(
+                        bytes[bytes.len() - 8..].try_into().unwrap(),
+                    );
+                    versions.push(Version { seq, content_hash: hash });
+                }
+                Err(e) => {
+                    // Keep the evidence, out of the version namespace.
+                    let mut dst = qdir.join(&name);
+                    let mut n = 1;
+                    while dst.exists() {
+                        dst = qdir.join(format!("{name}.{n}"));
+                        n += 1;
+                    }
+                    std::fs::rename(entry.path(), &dst).with_context(|| {
+                        format!("quarantine {} -> {}", name, dst.display())
+                    })?;
+                    quarantined.push((seq, format!("{e:#}")));
+                }
+            }
+        }
+        versions.sort_unstable_by_key(|v| v.seq);
+        quarantined.sort_unstable_by_key(|&(seq, _)| seq);
+        Ok(Store { dir: dir.to_path_buf(), versions, quarantined })
+    }
+
+    /// Durably write `record` as the next version. The version file
+    /// appears atomically: concurrent readers (or a crash) see either
+    /// the store without it or with it complete and checksummed.
+    pub fn publish(&mut self, record: &Record) -> Result<Version> {
+        let seq = self.versions.last().map_or(1, |v| v.seq + 1);
+        let (bytes, content_hash) = record.encode();
+        atomic_write(&self.version_path(seq), &bytes)?;
+        let v = Version { seq, content_hash };
+        self.versions.push(v);
+        Ok(v)
+    }
+
+    /// Load and verify one version.
+    pub fn load(&self, seq: u64) -> Result<Record> {
+        let path = self.version_path(seq);
+        let bytes = std::fs::read(&path)
+            .with_context(|| format!("read {}", path.display()))?;
+        Record::decode(&bytes)
+            .with_context(|| format!("decode {}", path.display()))
+    }
+
+    /// The newest valid version, if any.
+    pub fn latest(&self) -> Option<Version> {
+        self.versions.last().copied()
+    }
+
+    /// The two newest valid versions as `(base, candidate)` — the pair
+    /// a canary rollout serves. `None` until two versions exist.
+    pub fn latest_pair(&self) -> Option<(Version, Version)> {
+        let n = self.versions.len();
+        (n >= 2).then(|| (self.versions[n - 2], self.versions[n - 1]))
+    }
+
+    /// All valid versions, ascending by sequence number.
+    pub fn versions(&self) -> &[Version] {
+        &self.versions
+    }
+
+    /// `(seq, reason)` for every file `open` quarantined.
+    pub fn quarantined(&self) -> &[(u64, String)] {
+        &self.quarantined
+    }
+
+    /// Re-scan the directory — the serving watch path, picking up
+    /// versions published by another process (and quarantining anything
+    /// that arrived corrupt).
+    pub fn refresh(&mut self) -> Result<()> {
+        *self = Store::open(&self.dir)?;
+        Ok(())
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// The on-disk path of a version (exists only for valid, published
+    /// versions; exposed for tests and tooling).
+    pub fn version_path(&self, seq: u64) -> PathBuf {
+        self.dir.join(format!("v{seq:06}.ckpt"))
+    }
+}
+
+/// Parse `v{seq}.ckpt` file names; anything else is not a version.
+fn parse_version_name(name: &str) -> Option<u64> {
+    let stem = name.strip_prefix('v')?.strip_suffix(".ckpt")?;
+    if stem.is_empty() || !stem.bytes().all(|b| b.is_ascii_digit()) {
+        return None;
+    }
+    stem.parse().ok()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "gnn_pipe_store_{tag}_{}_{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn rec(x: u64) -> Record {
+        let mut r = Record::new();
+        r.put_u64("x", x);
+        r.put_f32s("params", &[x as f32, -1.0]);
+        r
+    }
+
+    #[test]
+    fn publish_load_latest_round_trip() {
+        let dir = tmp_dir("basic");
+        let mut store = Store::open(&dir).unwrap();
+        assert!(store.latest().is_none());
+        let v1 = store.publish(&rec(1)).unwrap();
+        let v2 = store.publish(&rec(2)).unwrap();
+        assert_eq!((v1.seq, v2.seq), (1, 2));
+        assert_ne!(v1.content_hash, v2.content_hash);
+        assert_eq!(store.latest().unwrap(), v2);
+        assert_eq!(store.latest_pair().unwrap(), (v1, v2));
+        assert_eq!(store.load(1).unwrap().u64("x").unwrap(), 1);
+        assert_eq!(store.load(2).unwrap().u64("x").unwrap(), 2);
+        // Reopen sees the same state, and content hashes survive.
+        let reopened = Store::open(&dir).unwrap();
+        assert_eq!(reopened.versions(), store.versions());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn open_quarantines_truncated_and_corrupt_versions() {
+        let dir = tmp_dir("quarantine");
+        let mut store = Store::open(&dir).unwrap();
+        store.publish(&rec(1)).unwrap();
+        store.publish(&rec(2)).unwrap();
+        store.publish(&rec(3)).unwrap();
+        // Truncate v2 (a torn write) and flip a byte in v3 (bit rot).
+        let p2 = store.version_path(2);
+        let full = std::fs::read(&p2).unwrap();
+        std::fs::write(&p2, &full[..full.len() / 2]).unwrap();
+        let p3 = store.version_path(3);
+        let mut bytes = std::fs::read(&p3).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x40;
+        std::fs::write(&p3, &bytes).unwrap();
+
+        let recovered = Store::open(&dir).unwrap();
+        // Recovery lands on the newest VALID version: v1.
+        assert_eq!(recovered.latest().unwrap().seq, 1);
+        assert_eq!(
+            recovered.quarantined().iter().map(|q| q.0).collect::<Vec<_>>(),
+            vec![2, 3]
+        );
+        // The corrupt files moved to quarantine/ — evidence kept, never
+        // listed as versions again.
+        assert!(!recovered.version_path(2).exists());
+        assert!(dir.join("quarantine").join("v000002.ckpt").exists());
+        assert!(dir.join("quarantine").join("v000003.ckpt").exists());
+        // A fresh publish continues the sequence after the quarantined
+        // numbers are out of the namespace.
+        let mut recovered = recovered;
+        let v = recovered.publish(&rec(4)).unwrap();
+        assert_eq!(v.seq, 2);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn open_sweeps_stale_tmp_files() {
+        let dir = tmp_dir("tmp_sweep");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("v000009.ckpt.123.tmp"), b"partial").unwrap();
+        let store = Store::open(&dir).unwrap();
+        assert!(store.versions().is_empty());
+        assert!(!dir.join("v000009.ckpt.123.tmp").exists());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn refresh_picks_up_new_versions() {
+        let dir = tmp_dir("refresh");
+        let mut a = Store::open(&dir).unwrap();
+        let mut b = Store::open(&dir).unwrap();
+        a.publish(&rec(1)).unwrap();
+        assert!(b.latest().is_none());
+        b.refresh().unwrap();
+        assert_eq!(b.latest().unwrap().seq, 1);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn version_name_parsing_is_strict() {
+        assert_eq!(parse_version_name("v000001.ckpt"), Some(1));
+        assert_eq!(parse_version_name("v42.ckpt"), Some(42));
+        assert_eq!(parse_version_name("v.ckpt"), None);
+        assert_eq!(parse_version_name("v00a001.ckpt"), None);
+        assert_eq!(parse_version_name("x000001.ckpt"), None);
+        assert_eq!(parse_version_name("v000001.json"), None);
+    }
+}

@@ -3,6 +3,7 @@
 //! CPU or GPU), Adam in the coordinator.
 
 use std::collections::BTreeMap;
+use std::path::PathBuf;
 
 use anyhow::Result;
 
@@ -11,6 +12,8 @@ use crate::data::Dataset;
 use crate::metrics::{Curve, RunTiming, Timer};
 use crate::optim::{Adam, Optimizer};
 use crate::runtime::{Engine, HostTensor};
+use crate::store::{flat_to_vec, vec_to_flat, Store, TrainCheckpoint};
+use crate::util::rng::Rng;
 
 use super::eval::{EvalMetrics, Evaluator};
 use super::init::{flatten_params, init_params, unflatten_params};
@@ -22,6 +25,16 @@ pub struct SingleDeviceTrainer<'e> {
     pub seed: u64,
     /// Evaluate metrics every `eval_every` epochs (0 = only at the end).
     pub eval_every: usize,
+    /// Crash-safe checkpoint store directory (`--checkpoint-dir`);
+    /// `None` disables checkpointing.
+    pub checkpoint_dir: Option<PathBuf>,
+    /// Checkpoint every K completed epochs (the final epoch always
+    /// checkpoints when a store is configured; 0 = final-only).
+    pub checkpoint_every: usize,
+    /// Resume from the newest valid checkpoint: bit-identical to the
+    /// uninterrupted run (dropout keys are `(seed, epoch)`-pure, and
+    /// params/Adam/curves/epoch restore exactly).
+    pub resume: bool,
 }
 
 #[derive(Debug)]
@@ -44,6 +57,9 @@ impl<'e> SingleDeviceTrainer<'e> {
             backend: backend.to_string(),
             seed: 0,
             eval_every: 10,
+            checkpoint_dir: None,
+            checkpoint_every: 0,
+            resume: false,
         }
     }
 
@@ -87,11 +103,54 @@ impl<'e> SingleDeviceTrainer<'e> {
         let mut train_acc = Curve::default();
         let mut val_acc = Curve::default();
 
+        // Crash-safe checkpoint store (same machinery as the pipeline
+        // trainer): resume restores the exact post-epoch state, so the
+        // remaining epochs replay bit-identically.
+        let label = format!("train:{}:{}", p.name, self.backend);
+        let mut store = match &self.checkpoint_dir {
+            Some(dir) => Some(Store::open(dir)?),
+            None => {
+                anyhow::ensure!(
+                    !self.resume,
+                    "--resume requires --checkpoint-dir"
+                );
+                None
+            }
+        };
+        let mut start_epoch = 1usize;
+        if self.resume {
+            let s = store.as_ref().unwrap();
+            for (seq, reason) in s.quarantined() {
+                eprintln!(
+                    "checkpoint store: quarantined corrupt v{seq}: {reason}"
+                );
+            }
+            if let Some(v) = s.latest() {
+                let ckpt = TrainCheckpoint::from_record(&s.load(v.seq)?)?;
+                ckpt.check_resumable(&label, self.seed, epochs)?;
+                vec_to_flat(&ckpt.flat, &mut flat)?;
+                adam.import_state(ckpt.adam);
+                train_loss = ckpt.train_loss;
+                train_acc = ckpt.train_acc;
+                val_acc = ckpt.val_acc;
+                start_epoch = ckpt.epoch + 1;
+                eprintln!(
+                    "resumed {label} from checkpoint v{} (epoch {} of {epochs})",
+                    v.seq, ckpt.epoch
+                );
+            } else {
+                eprintln!(
+                    "resume: no valid checkpoint in {}; starting fresh",
+                    s.dir().display()
+                );
+            }
+        }
+
         // Epoch 1 includes compile (the paper's "setup" epoch).
         let compile_timer = Timer::start();
         let exe = self.engine.executable(&name)?;
 
-        for epoch in 1..=epochs {
+        for epoch in start_epoch..=epochs {
             let t = Timer::start();
             let mut inputs = flat.clone();
             inputs.extend(fixed.iter().cloned());
@@ -118,6 +177,26 @@ impl<'e> SingleDeviceTrainer<'e> {
                 let m = evaluator.metrics(&pm)?;
                 train_acc.push(epoch, m.train_acc);
                 val_acc.push(epoch, m.val_acc);
+            }
+
+            if let Some(s) = store.as_mut() {
+                let due = epoch == epochs
+                    || (self.checkpoint_every > 0
+                        && epoch % self.checkpoint_every == 0);
+                if due {
+                    let ckpt = TrainCheckpoint {
+                        label: label.clone(),
+                        seed: self.seed,
+                        epoch,
+                        rng_state: Rng::new(self.seed).state(),
+                        flat: flat_to_vec(&flat)?,
+                        adam: adam.export_state(),
+                        train_loss: train_loss.clone(),
+                        train_acc: train_acc.clone(),
+                        val_acc: val_acc.clone(),
+                    };
+                    s.publish(&ckpt.to_record())?;
+                }
             }
         }
 

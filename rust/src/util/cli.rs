@@ -15,7 +15,7 @@ pub struct Args {
 /// (or `--key=v`) is an option.
 pub const BOOL_FLAGS: &[&str] = &[
     "verbose", "sim-only", "real-only", "quiet", "help", "no-warmup", "fast",
-    "repartition-check",
+    "repartition-check", "resume",
 ];
 
 impl Args {

@@ -1,0 +1,100 @@
+//! Crash-safe file writes: temp file + fsync + atomic rename.
+//!
+//! Every durable artifact this crate emits — parameter-store versions,
+//! bench CSVs, `BENCH_*.json` snapshots, partition files — goes through
+//! [`atomic_write`], so a crash mid-write can never leave a truncated
+//! file at the destination path: the incomplete bytes live in a
+//! same-directory `*.tmp` sibling that readers ignore (and
+//! `store::Store::open` sweeps).
+
+use std::io::Write as _;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// Suffix of in-flight temporary files. Writers create `NAME.<pid>.tmp`
+/// next to the destination (same filesystem, so the rename is atomic);
+/// a crash leaves only the `.tmp` behind.
+pub const TMP_SUFFIX: &str = ".tmp";
+
+/// Write `bytes` to `path` atomically: create a `.tmp` sibling, write,
+/// fsync, then rename over the destination. After a successful return
+/// the file at `path` holds exactly `bytes`; after a crash at ANY point
+/// it holds either its previous contents or the new ones, never a
+/// prefix.
+pub fn atomic_write(path: &Path, bytes: &[u8]) -> Result<()> {
+    let dir = path.parent().filter(|p| !p.as_os_str().is_empty());
+    let file_name = path
+        .file_name()
+        .and_then(|n| n.to_str())
+        .with_context(|| format!("atomic_write: bad path {}", path.display()))?;
+    let tmp = path.with_file_name(format!(
+        "{file_name}.{}{TMP_SUFFIX}",
+        std::process::id()
+    ));
+    let mut f = std::fs::File::create(&tmp)
+        .with_context(|| format!("create {}", tmp.display()))?;
+    f.write_all(bytes)
+        .and_then(|()| f.sync_all())
+        .with_context(|| format!("write {}", tmp.display()))?;
+    drop(f);
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("rename {} -> {}", tmp.display(), path.display()))?;
+    // Durability of the *name* needs the directory entry synced too.
+    // Best-effort: some filesystems refuse O_RDONLY dir fsync.
+    if let Some(d) = dir {
+        if let Ok(dh) = std::fs::File::open(d) {
+            let _ = dh.sync_all();
+        }
+    }
+    Ok(())
+}
+
+/// String-payload convenience over [`atomic_write`], mirroring
+/// `std::fs::write` call sites.
+pub fn atomic_write_str(path: &Path, contents: &str) -> Result<()> {
+    atomic_write(path, contents.as_bytes())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn atomic_write_round_trips_bytes() {
+        let dir = std::env::temp_dir().join(format!(
+            "gnn_pipe_fsio_{}_{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("out.bin");
+        atomic_write(&path, b"hello").unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), b"hello");
+        // Overwrite is atomic too: the new contents fully replace the old.
+        atomic_write(&path, b"a longer second payload").unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), b"a longer second payload");
+        // No .tmp siblings survive a successful write.
+        let leftovers: Vec<_> = std::fs::read_dir(&dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .filter(|e| e.file_name().to_string_lossy().ends_with(TMP_SUFFIX))
+            .collect();
+        assert!(leftovers.is_empty(), "stale tmp files: {leftovers:?}");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn atomic_write_str_matches_fs_write() {
+        let dir = std::env::temp_dir().join(format!(
+            "gnn_pipe_fsio_str_{}_{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("out.txt");
+        atomic_write_str(&path, "line\n").unwrap();
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), "line\n");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -2,6 +2,7 @@
 //! content hashing, bounded host parallelism.
 
 pub mod cli;
+pub mod fsio;
 pub mod hash;
 pub mod json;
 pub mod par;

@@ -1,0 +1,460 @@
+//! Parameter-store invariants: crash-safe checkpoints and versioned
+//! rollouts.
+//!
+//! Host-side tests (always run, no artifacts needed) pin the recovery
+//! and planning layers: a corrupted newest checkpoint is quarantined
+//! and recovery lands on the newest *valid* one, the resume contract
+//! refuses mismatched runs, and rollout plans are pure functions of
+//! `(batch timelines, policy)` that only ever assign whole batches.
+//!
+//! End-to-end tests (skipped gracefully when `make artifacts` has not
+//! run) pin the two acceptance contracts of the robustness issue:
+//!
+//! * **kill-resume parity** — a training run killed after a checkpoint,
+//!   whose newest checkpoint then rots on disk, resumes from the
+//!   newest valid version and finishes with parameters, curves, and
+//!   final eval **bitwise identical** to the uninterrupted run;
+//! * **hot-swap invariance** — a canary/hot-swap rollout serves every
+//!   request exactly once (served + shed == offered), never splits a
+//!   batch across versions, and every served row is bit-identical to a
+//!   pure run of whichever version served it; a corrupt candidate is
+//!   quarantined and can never be swapped in, and a tripped gate rolls
+//!   the whole fleet back to base, bit for bit.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::path::PathBuf;
+
+use gnn_pipe::config::Config;
+use gnn_pipe::data::generate;
+use gnn_pipe::faults::StoreFault;
+use gnn_pipe::metrics::Curve;
+use gnn_pipe::optim::AdamState;
+use gnn_pipe::runtime::{Engine, HostTensor};
+use gnn_pipe::serve::{
+    generate_trace, plan_batches, plan_rollout, BatchPolicy, FleetPolicy,
+    FleetSession, Request, RolloutGate, RolloutPolicy, RouterKind,
+    ServeSession, TraceSpec, TrafficShape,
+};
+use gnn_pipe::store::{
+    flat_to_vec, vec_to_flat, Record, Store, TrainCheckpoint, Version,
+};
+use gnn_pipe::train::{flatten_params, init_params, SingleDeviceTrainer};
+use gnn_pipe::util::rng::Rng;
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "gnn_pipe_integration_store_{tag}_{}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+// ---------------------------------------------------------------------
+// Host-side: recovery, the resume contract, rollout planning.
+// ---------------------------------------------------------------------
+
+fn host_ckpt(epoch: usize) -> TrainCheckpoint {
+    TrainCheckpoint {
+        label: "train:cora:ell".into(),
+        seed: 7,
+        epoch,
+        rng_state: Rng::new(7).state(),
+        flat: (0..8).map(|i| epoch as f32 + i as f32 * 0.25).collect(),
+        adam: AdamState {
+            t: epoch as u64,
+            m: vec![vec![0.125; 5], vec![0.5; 3]],
+            v: vec![vec![0.25; 5], vec![0.75; 3]],
+        },
+        train_loss: Curve {
+            epochs: (1..=epoch).collect(),
+            values: (1..=epoch).map(|e| 2.0 / e as f64).collect(),
+        },
+        ..TrainCheckpoint::default()
+    }
+}
+
+#[test]
+fn corrupt_checkpoint_recovers_to_newest_valid_and_resume_refuses_wrong_runs()
+{
+    let dir = tmp_dir("resume_host");
+    let mut store = Store::open(&dir).unwrap();
+    store.publish(&host_ckpt(2).to_record()).unwrap();
+    store.publish(&host_ckpt(4).to_record()).unwrap();
+    // The newest checkpoint rots on disk (silent media corruption — a
+    // torn write can't land under a version name, the rename is atomic).
+    StoreFault::BitFlip { offset_frac: 0.5, bit: 2 }
+        .apply(&store.version_path(2))
+        .unwrap();
+
+    let store = Store::open(&dir).unwrap();
+    assert_eq!(
+        store.quarantined().iter().map(|q| q.0).collect::<Vec<_>>(),
+        vec![2],
+        "the rotted version must be quarantined"
+    );
+    assert!(
+        dir.join("quarantine").join("v000002.ckpt").exists(),
+        "quarantine keeps the evidence"
+    );
+    let v = store.latest().unwrap();
+    assert_eq!(v.seq, 1, "recovery lands on the newest VALID checkpoint");
+    let back =
+        TrainCheckpoint::from_record(&store.load(v.seq).unwrap()).unwrap();
+    assert_eq!(back, host_ckpt(2), "the epoch-2 state round-trips losslessly");
+
+    // The resume contract: right run resumes, wrong run is refused.
+    back.check_resumable("train:cora:ell", 7, 10).unwrap();
+    back.check_resumable("train:cora:ell", 7, 2).unwrap(); // legal no-op
+    assert!(back.check_resumable("train:cora:ell", 8, 10).is_err());
+    assert!(back.check_resumable("pipeline:pubmed:ell:c4", 7, 10).is_err());
+    assert!(back.check_resumable("train:cora:ell", 7, 1).is_err());
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn rollout_plans_are_pure_and_assign_whole_batches() {
+    // Real batch timelines: a generated trace split over two replicas.
+    let trace = generate_trace(
+        &TraceSpec { rate_hz: 150.0, requests: 600, seed: 21 },
+        TrafficShape::Poisson,
+        500,
+    );
+    let policy = BatchPolicy { max_batch: 6, max_wait_s: 0.02 };
+    let close_s: Vec<Vec<f64>> = (0..2)
+        .map(|r| {
+            let sub: Vec<Request> = trace
+                .iter()
+                .enumerate()
+                .filter(|(i, _)| i % 2 == r)
+                .map(|(_, q)| *q)
+                .collect();
+            plan_batches(&sub, &policy).iter().map(|b| b.close_s).collect()
+        })
+        .collect();
+
+    let mixed = RolloutPolicy {
+        canary: 0.3,
+        swap_at_s: Some(2.0),
+        seed: 9,
+        gate: None,
+    };
+    let a = plan_rollout(&close_s, &mixed, 0.01);
+    let b = plan_rollout(&close_s, &mixed, 0.01);
+    assert_eq!(a, b, "rollout plans must replay bit-identically");
+    assert!(a.canary_batches > 0 && a.swapped_batches > 0);
+    // The swap is a pure suffix of each replica's batch timeline, and
+    // the canary seed actually moves the pre-swap assignment.
+    for (r, closes) in close_s.iter().enumerate() {
+        for (bi, &c) in closes.iter().enumerate() {
+            if c >= 2.0 {
+                assert!(a.candidate[r][bi], "post-swap batch on base");
+            }
+        }
+    }
+    let reseeded = plan_rollout(
+        &close_s,
+        &RolloutPolicy { seed: 10, ..mixed },
+        0.01,
+    );
+    assert_ne!(a.candidate, reseeded.candidate, "canary must follow its seed");
+}
+
+// ---------------------------------------------------------------------
+// End-to-end (artifact-gated).
+// ---------------------------------------------------------------------
+
+/// Engine + the name of a dataset whose train/eval artifacts exist
+/// (`None` skips: artifact dir absent or predates these kinds).
+fn train_engine() -> Option<(Config, Engine, String)> {
+    let cfg = Config::load().ok()?;
+    if !cfg.artifacts_dir().join("manifest.json").exists() {
+        eprintln!("skipping: artifacts missing (run `make artifacts`)");
+        return None;
+    }
+    let eng = Engine::from_artifacts_dir(&cfg.artifacts_dir()).ok()?;
+    let name = ["cora", cfg.pipeline.pipeline_dataset.as_str()]
+        .iter()
+        .find(|d| {
+            eng.manifest.has(&format!("{d}_ell_train_step"))
+                && eng.manifest.has(&format!("{d}_ell_eval_fwd"))
+        })
+        .map(|d| d.to_string());
+    let Some(name) = name else {
+        eprintln!("skipping: no training artifacts in the manifest");
+        return None;
+    };
+    Some((cfg, eng, name))
+}
+
+fn serve_engine() -> Option<(Config, Engine)> {
+    let cfg = Config::load().ok()?;
+    if !cfg.artifacts_dir().join("manifest.json").exists() {
+        eprintln!("skipping: artifacts missing (run `make artifacts`)");
+        return None;
+    }
+    let eng = Engine::from_artifacts_dir(&cfg.artifacts_dir()).ok()?;
+    if !ServeSession::artifacts_available(
+        &eng,
+        &cfg.pipeline.pipeline_dataset,
+        "ell",
+    ) {
+        eprintln!("skipping: serving artifacts missing; re-run `make artifacts`");
+        return None;
+    }
+    Some((cfg, eng))
+}
+
+#[test]
+fn kill_resume_is_bit_identical_to_the_uninterrupted_run() {
+    let Some((cfg, eng, ds_name)) = train_engine() else { return };
+    let profile = cfg.dataset(&ds_name).unwrap();
+    let ds = generate(profile).unwrap();
+    let dir = tmp_dir("resume_e2e");
+    const EPOCHS: usize = 4;
+    const KILL_AFTER: usize = 2;
+
+    let trainer = |dir: Option<PathBuf>, resume: bool| {
+        let mut t = SingleDeviceTrainer::new(&eng, &ds, "ell");
+        t.seed = 7;
+        t.eval_every = 1;
+        t.checkpoint_dir = dir;
+        t.checkpoint_every = 1;
+        t.resume = resume;
+        t
+    };
+
+    // The reference: one uninterrupted run, no store involved.
+    let want = trainer(None, false).train(&cfg.model, EPOCHS).unwrap();
+
+    // The "killed" run: checkpoint every epoch, die after epoch 2 (the
+    // on-disk state a SIGKILL leaves behind) — then the newest
+    // checkpoint rots, so resume must quarantine it and pick up from
+    // epoch 1, NOT restart from scratch and NOT trust the bad file.
+    trainer(Some(dir.clone()), false)
+        .train(&cfg.model, KILL_AFTER)
+        .unwrap();
+    let store = Store::open(&dir).unwrap();
+    assert_eq!(store.versions().len(), KILL_AFTER);
+    StoreFault::TornWrite { frac: 0.6 }
+        .apply(&store.version_path(KILL_AFTER as u64))
+        .unwrap();
+
+    let got = trainer(Some(dir.clone()), true).train(&cfg.model, EPOCHS).unwrap();
+
+    // The corrupt checkpoint went to quarantine and the finished run
+    // checkpointed its final epoch.
+    let store = Store::open(&dir).unwrap();
+    assert!(dir.join("quarantine").join("v000002.ckpt").exists());
+    let last = TrainCheckpoint::from_record(
+        &store.load(store.latest().unwrap().seq).unwrap(),
+    )
+    .unwrap();
+    assert_eq!(last.epoch, EPOCHS);
+
+    // Bit-identity: parameters, every curve, the final eval.
+    let order = eng.manifest.param_order.clone();
+    let bits = |params: &BTreeMap<String, HostTensor>| -> Vec<u32> {
+        flat_to_vec(&flatten_params(params, &order).unwrap())
+            .unwrap()
+            .iter()
+            .map(|x| x.to_bits())
+            .collect()
+    };
+    assert_eq!(
+        bits(&got.params),
+        bits(&want.params),
+        "resumed final parameters diverge from the uninterrupted run"
+    );
+    assert_eq!(got.train_loss, want.train_loss);
+    assert_eq!(got.train_acc, want.train_acc);
+    assert_eq!(got.val_acc, want.val_acc);
+    assert_eq!(got.final_metrics.val_acc, want.final_metrics.val_acc);
+    assert_eq!(got.final_metrics.test_acc, want.final_metrics.test_acc);
+    assert_eq!(got.final_metrics.train_loss, want.final_metrics.train_loss);
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn hot_swap_is_batch_atomic_and_rollback_and_quarantine_safe() {
+    let Some((cfg, eng)) = serve_engine() else { return };
+    let ds_name = cfg.pipeline.pipeline_dataset.clone();
+    let profile = cfg.dataset(&ds_name).unwrap();
+    let ds = generate(profile).unwrap();
+    let order = eng.manifest.param_order.clone();
+    let dir = tmp_dir("rollout_e2e");
+
+    // Publish two real parameter versions, then a third that rots on
+    // disk before anyone reads it.
+    let mut store = Store::open(&dir).unwrap();
+    let publish = |store: &mut Store, seed: u64| -> Version {
+        let flat = flat_to_vec(
+            &flatten_params(&init_params(profile, &cfg.model, seed), &order)
+                .unwrap(),
+        )
+        .unwrap();
+        let mut rec = Record::new();
+        rec.put_u64("seed", seed);
+        rec.put_f32s("flat", &flat);
+        store.publish(&rec).unwrap()
+    };
+    publish(&mut store, 3);
+    publish(&mut store, 4);
+    let rotten = publish(&mut store, 5);
+    StoreFault::BitFlip { offset_frac: 0.3, bit: 5 }
+        .apply(&store.version_path(rotten.seq))
+        .unwrap();
+
+    // A corrupt candidate is quarantined and can NEVER be swapped in:
+    // the rollout pair skips it and lands on the two newest valid.
+    let store = Store::open(&dir).unwrap();
+    assert_eq!(
+        store.quarantined().iter().map(|q| q.0).collect::<Vec<_>>(),
+        vec![rotten.seq]
+    );
+    let (base_v, cand_v) = store.latest_pair().unwrap();
+    assert_eq!(
+        (base_v.seq, cand_v.seq),
+        (1, 2),
+        "the corrupt candidate must be out of the version namespace"
+    );
+
+    let template =
+        flatten_params(&init_params(profile, &cfg.model, 3), &order).unwrap();
+    let load = |v: Version| -> Vec<HostTensor> {
+        let flat = store.load(v.seq).unwrap().f32s("flat").unwrap();
+        let mut params = template.clone();
+        vec_to_flat(&flat, &mut params).unwrap();
+        params
+    };
+    let (base, cand) = (load(base_v), load(cand_v));
+
+    let trace = generate_trace(
+        &TraceSpec { rate_hz: 120.0, requests: 36, seed: 11 },
+        TrafficShape::Poisson,
+        profile.nodes,
+    );
+    let policy = BatchPolicy { max_batch: 4, max_wait_s: 0.05 };
+    let fleet = FleetPolicy {
+        replicas: 2,
+        router: RouterKind::Jsq,
+        slo: None,
+        service_model_s: 0.02,
+    };
+    let session = FleetSession::new(&eng, &ds, "ell");
+    let run = |rollout: &RolloutPolicy| {
+        session
+            .run_rollout(
+                &base,
+                &cand,
+                (base_v, cand_v),
+                &trace,
+                &policy,
+                &fleet,
+                rollout,
+            )
+            .unwrap()
+    };
+
+    // A canary AND a mid-trace hot-swap at once: the hardest mix.
+    let mixed = RolloutPolicy {
+        canary: 0.5,
+        swap_at_s: Some(0.5 * trace.len() as f64 / 120.0),
+        seed: 9,
+        gate: None,
+    };
+    let a = run(&mixed);
+    let b = run(&mixed);
+    assert_eq!(a.plan, b.plan, "rollout replays must share one plan");
+    assert_eq!(a.request_version, b.request_version);
+    assert_eq!(
+        a.request_logits, b.request_logits,
+        "rollout logits must be bit-identical across replays"
+    );
+    // Conservation: every request served exactly once, none lost.
+    assert_eq!(a.report.served + a.report.shed, trace.len());
+    assert_eq!(a.report.shed, 0, "no SLO gate, nothing to shed");
+    assert_eq!(
+        a.rollout.served_base + a.rollout.served_candidate,
+        trace.len()
+    );
+    assert!(
+        a.rollout.served_base > 0 && a.rollout.served_candidate > 0,
+        "the mixed policy must split traffic across versions"
+    );
+
+    // Per-request parity against pure runs of each version: a served
+    // row depends only on (params, node), so swapping at batch
+    // boundaries must leave it bit-identical to the single-version run.
+    let pure_base = run(&RolloutPolicy::none());
+    let pure_cand = run(&RolloutPolicy {
+        canary: 1.0,
+        swap_at_s: None,
+        seed: 9,
+        gate: None,
+    });
+    assert!(pure_base
+        .request_version
+        .iter()
+        .all(|v| *v == Some(base_v.seq)));
+    assert!(pure_cand
+        .request_version
+        .iter()
+        .all(|v| *v == Some(cand_v.seq)));
+    assert_ne!(
+        pure_base.request_logits, pure_cand.request_logits,
+        "the two published versions must actually disagree"
+    );
+    for i in 0..trace.len() {
+        let seq = a.request_version[i].expect("request lost its version");
+        let want = if seq == base_v.seq {
+            &pure_base.request_logits[i]
+        } else {
+            &pure_cand.request_logits[i]
+        };
+        assert_eq!(
+            &a.request_logits[i], want,
+            "request {i} (v{seq}) diverges from the pure v{seq} run"
+        );
+    }
+
+    // Batch atomicity: the batch is the unit of version assignment —
+    // recompute each replica's batch plan and check no batch served
+    // two versions.
+    for sub in a.plan.sub_traces(&trace, fleet.replicas) {
+        let reqs: Vec<Request> = sub.iter().map(|&(_, q)| q).collect();
+        for batch in plan_batches(&reqs, &policy) {
+            let versions: BTreeSet<u64> = batch
+                .requests
+                .iter()
+                .map(|&local| a.request_version[sub[local].0].unwrap())
+                .collect();
+            assert_eq!(
+                versions.len(),
+                1,
+                "a batch was split across versions — swap not batch-atomic"
+            );
+        }
+    }
+
+    // The rollback gate: an impossibly tight p99 target must revert the
+    // whole fleet to base — bit-for-bit the pure base run.
+    let gated = RolloutPolicy {
+        canary: 0.5,
+        swap_at_s: None,
+        seed: 9,
+        gate: Some(RolloutGate { p99_target_s: 1e-9 }),
+    };
+    let rb = run(&gated);
+    assert!(rb.rollout.rolled_back, "the gate must trip");
+    assert_eq!(rb.rollout.served_candidate, 0);
+    assert!(
+        rb.rollout.canary_batches > 0,
+        "the plan canaried before the gate tripped (counts survive rollback)"
+    );
+    assert_eq!(
+        rb.request_logits, pure_base.request_logits,
+        "a rolled-back rollout must serve exactly the base version"
+    );
+    std::fs::remove_dir_all(&dir).unwrap();
+}

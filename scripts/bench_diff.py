@@ -28,21 +28,28 @@ from pathlib import Path
 
 
 def load_snapshots(directory: Path, exclude: Path | None = None):
-    """{filename: {sample_name: mean_s}} for every BENCH_*.json below
-    `directory` (artifact downloads sometimes nest one level). Paths
-    under `exclude` are skipped — in CI the new dir is the repo root,
-    which CONTAINS the downloaded previous artifact; without the
-    exclusion the previous snapshots shadow the fresh ones and the
+    """({filename: {sample_name: mean_s}}, {unreadable filenames}) for
+    every BENCH_*.json below `directory` (artifact downloads sometimes
+    nest one level). Unreadable, truncated, or non-object files go into
+    the second set with a warning instead of crashing — a corrupt
+    *baseline* must degrade to "first run", never fail the trajectory
+    job. Paths under `exclude` are skipped — in CI the new dir is the
+    repo root, which CONTAINS the downloaded previous artifact; without
+    the exclusion the previous snapshots shadow the fresh ones and the
     comparison degenerates to prev-vs-prev."""
     out = {}
+    unreadable = set()
     exclude = exclude.resolve() if exclude else None
     for path in sorted(directory.rglob("BENCH_*.json")):
         if exclude and exclude in path.resolve().parents:
             continue
         try:
             data = json.loads(path.read_text())
-        except (OSError, json.JSONDecodeError) as e:
+            if not isinstance(data, dict):
+                raise ValueError(f"expected a JSON object, got {type(data).__name__}")
+        except (OSError, ValueError) as e:  # JSONDecodeError is a ValueError
             print(f"::warning::unreadable snapshot {path}: {e}")
+            unreadable.add(path.name)
             continue
         samples = {
             s["name"]: float(s["mean_s"])
@@ -50,7 +57,7 @@ def load_snapshots(directory: Path, exclude: Path | None = None):
             if "name" in s and "mean_s" in s
         }
         out[path.name] = {"samples": samples, "quick": data.get("quick")}
-    return out
+    return out, unreadable
 
 
 def fmt_secs(v: float) -> str:
@@ -73,10 +80,10 @@ def compare(prev_dir: Path, new_dir: Path, threshold: float, strict: bool) -> in
     if not new_dir.is_dir():
         print(f"::warning::new-run directory {new_dir} does not exist")
         return 0
-    prev = load_snapshots(prev_dir)
-    new = load_snapshots(new_dir, exclude=prev_dir)
+    prev, prev_bad = load_snapshots(prev_dir)
+    new, _ = load_snapshots(new_dir, exclude=prev_dir)
     if not prev:
-        print(f"no BENCH_*.json under {prev_dir}; nothing to compare")
+        print(f"no readable BENCH_*.json under {prev_dir}; nothing to compare")
         return 0
     if not new:
         print(f"::warning::no BENCH_*.json under {new_dir} to compare")
@@ -86,7 +93,11 @@ def compare(prev_dir: Path, new_dir: Path, threshold: float, strict: bool) -> in
     for fname, new_snap in sorted(new.items()):
         prev_snap = prev.get(fname)
         if prev_snap is None:
-            print(f"{fname}: new snapshot (no previous artifact) — skipped")
+            if fname in prev_bad:
+                print(f"{fname}: previous snapshot unreadable — "
+                      "treating as first run")
+            else:
+                print(f"{fname}: new snapshot (no previous artifact) — skipped")
             continue
         if prev_snap.get("quick") != new_snap.get("quick"):
             print(f"{fname}: quick-mode mismatch vs previous — skipped")
@@ -252,6 +263,36 @@ def selfcheck() -> int:
          snaps(**{"BENCH_x.json": base}),
          snaps(**{"BENCH_x.json": base, "BENCH_partition.json": partition}),
          strict=True, expect_text="BENCH_partition.json: new snapshot")
+    # A corrupt or truncated *baseline* snapshot (interrupted artifact
+    # download, pre-atomic-write crash) must degrade to "first run":
+    # warn, skip that one file, keep diffing the others, exit 0 even
+    # under --strict with a would-be regression in the new side.
+    case("truncated baseline degrades to first run", 0,
+         snaps(**{"BENCH_x.json": base, "BENCH_y.json": base[:17]}),
+         snaps(**{"BENCH_x.json": base,
+                  "BENCH_y.json": _snapshot({"a": 10.0, "b": 2.0})}),
+         strict=True, expect_text="treating as first run")
+    case("non-object baseline JSON degrades to first run", 0,
+         snaps(**{"BENCH_x.json": base, "BENCH_y.json": "[1, 2, 3]"}),
+         snaps(**{"BENCH_x.json": base,
+                  "BENCH_y.json": _snapshot({"a": 10.0})}),
+         strict=True, expect_text="treating as first run")
+    case("all baselines corrupt still exits 0", 0,
+         snaps(**{"BENCH_x.json": "{not json"}),
+         snaps(**{"BENCH_x.json": base}), strict=True,
+         expect_text="no readable BENCH_*.json")
+    # The parameter-store snapshot's first appearance (PR adding the
+    # versioned store + canary rollout): no previous BENCH_params.json
+    # artifact exists, so it is skipped, never flagged — even strict.
+    params = _snapshot(
+        {"cli canary base p99 (canary-25)": 0.05,
+         "cli canary candidate p99 (canary-25)": 0.06,
+         "cli canary base p99 (gate-trip)": 0.05},
+        source="bench serve-canary")
+    case("first-run BENCH_params.json is skipped", 0,
+         snaps(**{"BENCH_x.json": base}),
+         snaps(**{"BENCH_x.json": base, "BENCH_params.json": params}),
+         strict=True, expect_text="BENCH_params.json: new snapshot")
 
     if failures:
         print(f"self-check FAILED: {failures}")
