@@ -131,10 +131,16 @@ pub struct PipelineConfig {
     /// run with `--checkpoint-every`); 0 = final-epoch-only when a
     /// store is configured.
     pub checkpoint_every: usize,
+    /// Default Chrome-trace output path for pipeline runs (overridable
+    /// per run with `--trace-out`); "" disables tracing.
+    pub trace_out: String,
+    /// Default Prometheus-text metrics dump path (overridable per run
+    /// with `--metrics-out`); "" disables the dump.
+    pub metrics_out: String,
 }
 
 impl PipelineConfig {
-    const KNOWN_KEYS: [&'static str; 12] = [
+    const KNOWN_KEYS: [&'static str; 14] = [
         "devices",
         "balance",
         "chunks",
@@ -147,6 +153,8 @@ impl PipelineConfig {
         "partition",
         "checkpoint_dir",
         "checkpoint_every",
+        "trace_out",
+        "metrics_out",
     ];
 
     /// Parse `configs/pipeline.json`. Like [`ServeConfig::from_json`],
@@ -206,6 +214,16 @@ impl PipelineConfig {
                 .get("checkpoint_every")
                 .and_then(Json::as_usize)
                 .unwrap_or(0),
+            trace_out: p
+                .get("trace_out")
+                .and_then(Json::as_str)
+                .unwrap_or("")
+                .to_string(),
+            metrics_out: p
+                .get("metrics_out")
+                .and_then(Json::as_str)
+                .unwrap_or("")
+                .to_string(),
         })
     }
 }
@@ -267,6 +285,12 @@ pub struct ServeConfig {
     /// Rollback gate: modeled p99 ceiling for the candidate cohort,
     /// milliseconds (0 = no gate, the rollout always goes through).
     pub canary_p99_ms: f64,
+    /// Default Chrome-trace output path for serve runs (overridable per
+    /// run with `--trace-out`); "" disables tracing.
+    pub trace_out: String,
+    /// Default Prometheus-text metrics dump path (overridable per run
+    /// with `--metrics-out`); "" disables the dump.
+    pub metrics_out: String,
 }
 
 impl Default for ServeConfig {
@@ -290,12 +314,14 @@ impl Default for ServeConfig {
             canary: 0.0,
             swap_at_s: 0.0,
             canary_p99_ms: 0.0,
+            trace_out: String::new(),
+            metrics_out: String::new(),
         }
     }
 }
 
 impl ServeConfig {
-    const KNOWN_KEYS: [&'static str; 18] = [
+    const KNOWN_KEYS: [&'static str; 20] = [
         "backend",
         "rate_hz",
         "requests",
@@ -314,6 +340,8 @@ impl ServeConfig {
         "canary",
         "swap_at_s",
         "canary_p99_ms",
+        "trace_out",
+        "metrics_out",
     ];
 
     /// Overlay `configs/serve.json` onto the defaults. Every present
@@ -378,6 +406,12 @@ impl ServeConfig {
         }
         if let Some(v) = s.get("canary_p99_ms").and_then(Json::as_f64) {
             serve.canary_p99_ms = v;
+        }
+        if let Some(v) = s.get("trace_out").and_then(Json::as_str) {
+            serve.trace_out = v.to_string();
+        }
+        if let Some(v) = s.get("metrics_out").and_then(Json::as_str) {
+            serve.metrics_out = v.to_string();
         }
         Ok(serve)
     }
@@ -689,6 +723,50 @@ mod tests {
         assert!(err.contains("falt_seed"), "error must name the bad key: {err}");
         assert!(
             err.contains("did you mean \"fault_seed\""),
+            "error must suggest the near miss: {err}"
+        );
+    }
+
+    #[test]
+    fn observability_keys_parse_and_typos_name_the_offender() {
+        // The trace/metrics output paths overlay on both config files.
+        let base = r#""devices": 4, "balance": [2, 1, 2, 1], "chunks": [1],
+                       "pipeline_dataset": "pubmed", "pipeline_backends": ["ell"]"#;
+        let j = Json::parse(&format!(
+            "{{{base}, \"trace_out\": \"trace.json\", \
+             \"metrics_out\": \"metrics.prom\"}}"
+        ))
+        .unwrap();
+        let p = PipelineConfig::from_json(&j).unwrap();
+        assert_eq!(p.trace_out, "trace.json");
+        assert_eq!(p.metrics_out, "metrics.prom");
+        let j = Json::parse(&format!("{{{base}}}")).unwrap();
+        let p = PipelineConfig::from_json(&j).unwrap();
+        assert_eq!(p.trace_out, "", "tracing defaults off");
+        assert_eq!(p.metrics_out, "");
+        let j = Json::parse(
+            r#"{"trace_out": "t.json", "metrics_out": "m.prom"}"#,
+        )
+        .unwrap();
+        let s = ServeConfig::from_json(&j).unwrap();
+        assert_eq!(s.trace_out, "t.json");
+        assert_eq!(s.metrics_out, "m.prom");
+        let d = ServeConfig::default();
+        assert_eq!(d.trace_out, "");
+        assert_eq!(d.metrics_out, "");
+        // Typos are rejected by name with the near miss, in both files.
+        let j = Json::parse(&format!("{{{base}, \"trace_ot\": \"t.json\"}}"))
+            .unwrap();
+        let err = PipelineConfig::from_json(&j).unwrap_err().to_string();
+        assert!(err.contains("trace_ot"), "error must name the bad key: {err}");
+        assert!(
+            err.contains("did you mean \"trace_out\""),
+            "error must suggest the near miss: {err}"
+        );
+        let j = Json::parse(r#"{"metrics_outt": "m.prom"}"#).unwrap();
+        let err = ServeConfig::from_json(&j).unwrap_err().to_string();
+        assert!(
+            err.contains("did you mean \"metrics_out\""),
             "error must suggest the near miss: {err}"
         );
     }

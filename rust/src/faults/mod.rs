@@ -434,10 +434,23 @@ impl StageFaults {
     /// slowdowns; returns a typed transient error when one is armed.
     pub fn before_fwd(&self, stage: usize, m: usize) -> Result<(), EngineError> {
         if stage == 0 && self.slow_batch_s > 0.0 {
+            // Instant trace events mark every injection on the worker's
+            // own lane, so a chaos run's timeline is post-mortem
+            // debuggable without any logs.
+            crate::trace::instant("fault_slow", &[("stage", stage as i64), ("mb", m as i64)]);
             self.interruptible_sleep(self.slow_batch_s);
         }
         for &(s, mb, duration_s) in &self.stalls {
             if s == stage && mb == m {
+                crate::trace::instant(
+                    "fault_stall",
+                    &[
+                        ("stage", stage as i64),
+                        ("mb", m as i64),
+                        ("planned_ms", (duration_s * 1e3) as i64),
+                    ],
+                );
+                crate::metrics::registry::global().inc("fault_stalls_total");
                 self.interruptible_sleep(duration_s);
             }
         }
@@ -445,6 +458,11 @@ impl StageFaults {
         for t in transients.iter_mut() {
             if t.0 == stage && t.1 == m && t.2 > 0 {
                 t.2 -= 1;
+                crate::trace::instant(
+                    "fault_transient",
+                    &[("stage", stage as i64), ("mb", m as i64)],
+                );
+                crate::metrics::registry::global().inc("fault_transients_total");
                 return Err(EngineError::InjectedFault {
                     stage,
                     micro_batch: m,

@@ -25,8 +25,12 @@
 //!   JSQ routing + SLO-aware admission), deterministic fault injection
 //!   with failover ([`faults`]), a crash-safe versioned parameter store
 //!   ([`store`]: durable checkpoint/resume for training, batch-boundary
-//!   hot-swap + canary rollback for serving), and the bench harness
-//!   that regenerates every table and figure of the paper.
+//!   hot-swap + canary rollback for serving), a unified observability
+//!   layer ([`trace`]: deterministic per-stage span events with
+//!   Perfetto export and a trace analyzer; [`metrics::registry`]:
+//!   named counters/gauges/histograms with a Prometheus dump), and the
+//!   bench harness that regenerates every table and figure of the
+//!   paper.
 //!
 //! Python never runs on the training path: after `make artifacts` the
 //! binary is self-contained, executing the HLO via the PJRT CPU client.
@@ -48,6 +52,7 @@ pub mod serve;
 pub mod simulator;
 pub mod store;
 pub mod testutil;
+pub mod trace;
 pub mod train;
 pub mod util;
 

@@ -39,7 +39,18 @@
 //!             serve-faults|serve-canary|partition|all
 //!             [--epochs N] [--schedule S] [--prep P] [--replicas R]
 //!             [--replica-threads T]
+//!   trace     <trace.json>                           analyze a recorded trace:
+//!                                                   per-stage utilization,
+//!                                                   bubble fraction, critical
+//!                                                   path, measured-vs-model
+//!                                                   drift
 //!   inspect                                          artifact manifest summary
+//!
+//! `train`, `pipeline` and `serve` all accept `--trace-out <file>`
+//! (record a Chrome-trace/Perfetto timeline of the run) and
+//! `--metrics-out <file>` (dump the metrics registry as Prometheus
+//! text); defaults come from the `trace_out`/`metrics_out` keys in
+//! configs/pipeline.json and configs/serve.json.
 //!
 //! Run `make artifacts` before anything that executes HLO.
 
@@ -75,12 +86,14 @@ USAGE:
   gnn-pipe data      [--dataset <name>]
   gnn-pipe train     --dataset <name> --backend <ell|edgewise> [--epochs N] [--seed S]
                      [--checkpoint-dir <dir>] [--checkpoint-every K] [--resume]
+                     [--trace-out <file>] [--metrics-out <file>]
   gnn-pipe pipeline  [--backend <ell|edgewise>] [--chunks K] [--replicas R] [--epochs N]
                      [--replica-threads T]
                      [--schedule fill-drain|1f1b] [--prep paper|cached|overlap]
                      [--partition gat4|auto|<file>] [--repartition-check]
                      [--checkpoint-dir <dir>] [--checkpoint-every K] [--resume]
                      [--star] [--graph-aware]
+                     [--trace-out <file>] [--metrics-out <file>]
   gnn-pipe partition [--stages S] [--dataset <name>] [--source closed-form|measured]
                      [--backend <ell|edgewise>] [--epochs N] [--out <file>]
   gnn-pipe serve     [--backend <ell|edgewise>] [--rate R] [--requests N]
@@ -92,6 +105,8 @@ USAGE:
                      [--fault-seed S] [--watchdog-s W]
                      [--store-dir <dir>] [--canary P] [--swap-at T]
                      [--canary-p99-ms X] [--rollout-seed S]
+                     [--trace-out <file>] [--metrics-out <file>]
+  gnn-pipe trace     <trace.json>
   gnn-pipe bench     <table1|table2|fig1|fig2|fig3|fig4|ablation-chunker|edge-retention|prep-modes|hybrid|serve|serve-fleet|serve-faults|serve-canary|partition|all>
                      [--epochs N] [--schedule fill-drain|1f1b] [--prep paper|cached|overlap]
                      [--replicas R] [--replica-threads T]
@@ -306,6 +321,39 @@ newest become (base, candidate)):
   serve-canary` replays one trace against the two newest versions and
   writes canary.csv + BENCH_params.json (diffed logits, per-version
   tails, rollback verdict).
+
+TRACE (--trace-out/--metrics-out on train/pipeline/serve; defaults from
+the trace_out/metrics_out keys in configs/pipeline.json and
+configs/serve.json, \"\" = off):
+  --trace-out F   record the run as a Chrome trace-event timeline at F:
+                  one process (pid) per replica, one thread (tid) per
+                  pipeline stage plus coordinator and prep lanes. Spans
+                  cover per-micro-batch fwd/bwd, stage-link send/recv
+                  waits, sink delivery, prefetch builds, the optimizer
+                  and the all-reduce; instants mark watchdog fires,
+                  injected faults, checkpoint publishes and the serve
+                  fleet's admission/failover verdicts.
+                  LOADING THE TIMELINE: open https://ui.perfetto.dev (or
+                  chrome://tracing) and drag F onto the page — stages
+                  appear as named tracks per replica; click any span for
+                  its duration and args (micro-batch, epoch, ...).
+  --metrics-out F dump the run's named counters and histograms
+                  (watchdog fires, fault injections, prep cache
+                  hits/builds, checkpoint publishes, serve
+                  served/shed/deferred, epoch-seconds quantiles) as
+                  Prometheus text exposition at F.
+  gnn-pipe trace <trace.json> analyzes a recorded timeline offline:
+                  per-stage utilization and bubble fraction over the
+                  steady-state window, a critical-path decomposition of
+                  the bottleneck stage, instant-event totals, and a
+                  measured-vs-model drift table pricing the recorded
+                  spans against the closed-form simulator at the
+                  recorded (stages, chunks, schedule) point.
+  DETERMINISM CONTRACT: the event SEQUENCE (names, args, per-thread
+  order) is a pure function of (seed, config) — two runs at the same
+  point record identical sequences; only timestamps differ. Racy facts
+  (cache hit vs build, retry winners) live in the metrics registry,
+  never in the trace.
 ";
 
 fn main() {
@@ -324,6 +372,7 @@ fn run() -> Result<()> {
         "pipeline" => cmd_pipeline(&args),
         "partition" => cmd_partition(&args),
         "serve" => cmd_serve(&args),
+        "trace" => cmd_trace(&args),
         "bench" => cmd_bench(&args),
         "inspect" => cmd_inspect(),
         _ => {
@@ -396,6 +445,78 @@ fn checkpoint_dir_arg(args: &Args, cfg: &Config) -> Option<std::path::PathBuf> {
         .map(std::path::PathBuf::from)
 }
 
+/// Resolved `--trace-out`/`--metrics-out` for one run (CLI overrides
+/// the config key; empty everywhere = off). Constructing it starts the
+/// trace recorder when a trace path is set, so the run records from its
+/// first event; [`Observability::finish`] stops it and writes the
+/// artifacts.
+struct Observability {
+    trace_out: Option<std::path::PathBuf>,
+    metrics_out: Option<std::path::PathBuf>,
+}
+
+impl Observability {
+    fn from_args(
+        args: &Args,
+        trace_default: &str,
+        metrics_default: &str,
+    ) -> Observability {
+        let resolve = |cli: Option<String>, dflt: &str| {
+            cli.or_else(|| (!dflt.is_empty()).then(|| dflt.to_string()))
+                .map(std::path::PathBuf::from)
+        };
+        let obs = Observability {
+            trace_out: resolve(
+                args.opt("trace-out").map(String::from),
+                trace_default,
+            ),
+            metrics_out: resolve(
+                args.opt("metrics-out").map(String::from),
+                metrics_default,
+            ),
+        };
+        if obs.trace_out.is_some() {
+            gnn_pipe::trace::start();
+        }
+        obs
+    }
+
+    /// Stop the recorder and write whatever was requested.
+    fn finish(&self) -> Result<()> {
+        if let Some(path) = &self.trace_out {
+            let data = gnn_pipe::trace::stop();
+            gnn_pipe::trace::chrome::write_chrome_trace(path, &data)?;
+            println!(
+                "wrote trace {} ({} events; load it at https://ui.perfetto.dev)",
+                path.display(),
+                data.total_events()
+            );
+        }
+        if let Some(path) = &self.metrics_out {
+            gnn_pipe::metrics::registry::global().write_prometheus(path)?;
+            println!("wrote metrics {}", path.display());
+        }
+        Ok(())
+    }
+}
+
+/// Steady-state epoch percentiles, sourced from the metrics registry
+/// histogram the trainer feeds (`train_epoch_s`/`pipeline_epoch_s`)
+/// rather than recomputed from the timing vector; falls back to the
+/// [`RunTiming`](gnn_pipe::metrics::RunTiming) view when the histogram
+/// is empty (e.g. a fully resumed run that trained no epochs).
+fn epoch_percentiles(
+    hist: &str,
+    timing: &gnn_pipe::metrics::RunTiming,
+) -> (f64, f64, f64) {
+    let samples = gnn_pipe::metrics::registry::global().histogram(hist);
+    if samples.is_empty() {
+        timing.epoch_p50_p95_p99()
+    } else {
+        gnn_pipe::metrics::steady_p50_p95_p99(&samples)
+    }
+}
+
 fn cmd_train(args: &Args) -> Result<()> {
     let cfg = Config::load()?;
     let dataset = args.opt_str("dataset", "cora").to_string();
@@ -411,12 +532,17 @@ fn cmd_train(args: &Args) -> Result<()> {
     trainer.checkpoint_every =
         args.opt_usize("checkpoint-every", cfg.pipeline.checkpoint_every)?;
     trainer.resume = args.flag("resume");
+    let obs = Observability::from_args(
+        args,
+        &cfg.pipeline.trace_out,
+        &cfg.pipeline.metrics_out,
+    );
     println!("training {dataset}/{backend} for {epochs} epochs on CPU...");
     let res = trainer.train(&cfg.model, epochs)?;
     println!("epoch 1 (setup)    {:.4} s", res.timing.epoch1_s);
     println!("epochs 2-{epochs}      {:.3} s total", res.timing.epochs_rest_s);
     println!("avg epoch          {:.4} s", res.timing.avg_epoch_s());
-    let (p50, p95, p99) = res.timing.epoch_p50_p95_p99();
+    let (p50, p95, p99) = epoch_percentiles("train_epoch_s", &res.timing);
     println!("epoch p50/p95/p99  {p50:.4} / {p95:.4} / {p99:.4} s (steady state)");
     println!("coordinator (opt)  {:.4} s total", res.timing.coordinator_s);
     println!(
@@ -430,7 +556,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     if !res.val_acc.values.is_empty() {
         println!("val acc     {}", res.val_acc.sparkline(60));
     }
-    Ok(())
+    obs.finish()
 }
 
 fn cmd_pipeline(args: &Args) -> Result<()> {
@@ -470,6 +596,11 @@ fn cmd_pipeline(args: &Args) -> Result<()> {
     if args.flag("graph-aware") {
         trainer.chunker = Box::new(GraphAwareChunker);
     }
+    let obs = Observability::from_args(
+        args,
+        &cfg.pipeline.trace_out,
+        &cfg.pipeline.metrics_out,
+    );
     println!(
         "pipeline training {dataset}/{backend} chunks={chunks}{} replicas={replicas} replica-threads={} schedule={} prep={} ({} devices/replica, partition {}) for {epochs} epochs...",
         if star { "*" } else { "" },
@@ -483,7 +614,7 @@ fn cmd_pipeline(args: &Args) -> Result<()> {
     println!("edge retention     {:.4}", res.retention.retained_fraction);
     println!("epoch 1 (setup)    {:.4} s", res.timing.epoch1_s);
     println!("avg epoch          {:.4} s", res.timing.avg_epoch_s());
-    let (p50, p95, p99) = res.timing.epoch_p50_p95_p99();
+    let (p50, p95, p99) = epoch_percentiles("pipeline_epoch_s", &res.timing);
     println!("epoch p50/p95/p99  {p50:.4} / {p95:.4} / {p99:.4} s (steady state)");
     println!("host rebuild       {:.4} s total (critical path)", res.timing.rebuild_s);
     println!("prep overlapped    {:.4} s total (hidden)", res.timing.prep_overlap_s);
@@ -509,7 +640,7 @@ fn cmd_pipeline(args: &Args) -> Result<()> {
     for (s, (f, b)) in res.stage_means.iter().enumerate() {
         println!("stage {s}: mean fwd {:.2} ms, mean bwd {:.2} ms", f * 1e3, b * 1e3);
     }
-    Ok(())
+    obs.finish()
 }
 
 /// Resolve `--partition` (or the configs/pipeline.json `partition` key)
@@ -726,6 +857,23 @@ fn cmd_serve(args: &Args) -> Result<()> {
         PipelineSpec::gat4_serve().num_stages(),
         requests,
     );
+    let obs =
+        Observability::from_args(args, &sc.trace_out, &sc.metrics_out);
+    gnn_pipe::trace::instant(
+        "run_meta",
+        &[
+            ("kind", gnn_pipe::trace::analyze::KIND_SERVE),
+            ("stages", PipelineSpec::gat4_serve().num_stages() as i64),
+            ("chunks", 1),
+            ("schedule", -1),
+            ("replicas", replicas as i64),
+            // milli-Hz: the analyzer needs sub-req/s rate resolution
+            // through integer args.
+            ("rate_mhz", (rate_hz * 1e3) as i64),
+            ("max_batch", max_batch as i64),
+            ("max_wait_ms", max_wait_ms as i64),
+        ],
+    );
     println!(
         "serving {dataset}/{backend}: {requests} {} requests at {rate_hz:.1} req/s \
          over {replicas} replica(s) ({} router, SLO {}, faults {}; \
@@ -861,6 +1009,22 @@ fn cmd_serve(args: &Args) -> Result<()> {
         },
         per.utilization,
     );
+    obs.finish()
+}
+
+/// `gnn-pipe trace <file>`: offline analysis of a recorded Chrome
+/// trace — per-stage utilization, bubble fraction, critical path, and
+/// the measured-vs-simulator drift table.
+fn cmd_trace(args: &Args) -> Result<()> {
+    let file = args.positional.get(1).map(String::as_str).ok_or_else(|| {
+        anyhow::anyhow!(
+            "usage: gnn-pipe trace <trace.json> (record one with \
+             train/pipeline/serve --trace-out)"
+        )
+    })?;
+    let analysis =
+        gnn_pipe::trace::analyze::analyze_file(std::path::Path::new(file))?;
+    print!("{}", analysis.render());
     Ok(())
 }
 

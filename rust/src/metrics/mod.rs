@@ -6,6 +6,8 @@ use std::fmt::Write as _;
 use std::path::Path;
 use std::time::Instant;
 
+pub mod registry;
+
 /// Wall-clock timing of one training run, separated the way the paper's
 /// Table 2 reports it: a "setup" first epoch (JIT/compile + warm-up)
 /// versus steady-state epochs.
@@ -67,13 +69,18 @@ impl RunTiming {
     /// the paper also reports separately). Falls back to all epochs
     /// when only one was run. Zeros when no epochs were recorded.
     pub fn epoch_p50_p95_p99(&self) -> (f64, f64, f64) {
-        let steady = if self.per_epoch_s.len() > 1 {
-            &self.per_epoch_s[1..]
-        } else {
-            &self.per_epoch_s[..]
-        };
-        p50_p95_p99(steady)
+        steady_p50_p95_p99(&self.per_epoch_s)
     }
+}
+
+/// (p50, p95, p99) of a per-epoch sample excluding the first element —
+/// the compile/setup epoch — falling back to the whole sample when only
+/// one epoch was recorded. Shared by [`RunTiming::epoch_p50_p95_p99`]
+/// and the CLI paths that read epoch histograms back from the
+/// [`registry`] (both views must apply the same steady-state cut).
+pub fn steady_p50_p95_p99(xs: &[f64]) -> (f64, f64, f64) {
+    let steady = if xs.len() > 1 { &xs[1..] } else { xs };
+    p50_p95_p99(steady)
 }
 
 /// Nearest-rank percentiles over an unsorted sample: for each `q` in
@@ -336,9 +343,28 @@ mod tests {
     #[test]
     fn percentiles_edge_cases() {
         assert_eq!(percentiles(&[], &[50.0, 99.0]), vec![0.0, 0.0]);
+        // A single-element sample IS every percentile.
         assert_eq!(percentiles(&[7.0], &[50.0, 95.0, 99.0]), vec![7.0; 3]);
         let (p50, p95, p99) = p50_p95_p99(&[1.0, 2.0]);
         assert_eq!((p50, p95, p99), (1.0, 2.0, 2.0));
+        // All-equal samples collapse to that value at every quantile —
+        // nearest-rank must not interpolate or step off the tie block.
+        let flat = [4.2; 17];
+        assert_eq!(
+            percentiles(&flat, &[0.0, 1.0, 50.0, 95.0, 99.0, 100.0]),
+            vec![4.2; 6]
+        );
+        assert_eq!(p50_p95_p99(&flat), (4.2, 4.2, 4.2));
+    }
+
+    #[test]
+    fn steady_percentiles_match_the_runtiming_view() {
+        let xs = [10.0, 1.0, 2.0, 3.0, 4.0];
+        let t = RunTiming { per_epoch_s: xs.to_vec(), ..Default::default() };
+        assert_eq!(steady_p50_p95_p99(&xs), t.epoch_p50_p95_p99());
+        // The fallbacks agree too.
+        assert_eq!(steady_p50_p95_p99(&[10.0]), (10.0, 10.0, 10.0));
+        assert_eq!(steady_p50_p95_p99(&[]), (0.0, 0.0, 0.0));
     }
 
     #[test]

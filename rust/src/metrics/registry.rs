@@ -1,0 +1,221 @@
+//! Process-wide metrics registry: named counters, gauges, and
+//! histograms behind a single [`global`] handle, with a
+//! Prometheus-text dump (`--metrics-out metrics.prom`).
+//!
+//! This unifies the scattered report prints: anything a subsystem
+//! counts or times mid-run lands here under a stable name, and the
+//! CLIs read the same numbers back instead of recomputing them from
+//! private fields. Unlike [`crate::trace`] events — whose sequences
+//! are deterministic by contract — registry values may record *racy
+//! facts* (which fleet replica won a shared cache build, how many
+//! transient retries fired); that is exactly why they live here and
+//! not in the trace.
+//!
+//! Names are free-form internally; [`Registry::prometheus_text`]
+//! sanitizes them to the `[a-zA-Z_][a-zA-Z0-9_]*` metric-name grammar
+//! at dump time. Output is BTreeMap-ordered, so a dump is a
+//! deterministic function of the recorded values.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::{Mutex, OnceLock};
+
+use anyhow::Result;
+
+use super::percentiles;
+
+/// A named-metrics store. Most code uses the process-wide [`global`]
+/// registry; tests can build their own.
+#[derive(Debug, Default)]
+pub struct Registry {
+    counters: Mutex<BTreeMap<String, u64>>,
+    gauges: Mutex<BTreeMap<String, f64>>,
+    hists: Mutex<BTreeMap<String, Vec<f64>>>,
+}
+
+/// The process-wide registry.
+pub fn global() -> &'static Registry {
+    static GLOBAL: OnceLock<Registry> = OnceLock::new();
+    GLOBAL.get_or_init(Registry::default)
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    /// Increment a counter by 1.
+    pub fn inc(&self, name: &str) {
+        self.add(name, 1);
+    }
+
+    /// Increment a counter by `delta`.
+    pub fn add(&self, name: &str, delta: u64) {
+        let mut c = self.counters.lock().unwrap();
+        *c.entry(name.to_string()).or_insert(0) += delta;
+    }
+
+    /// Read a counter (0 if never touched).
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.lock().unwrap().get(name).copied().unwrap_or(0)
+    }
+
+    /// Set a gauge to the latest value.
+    pub fn set_gauge(&self, name: &str, value: f64) {
+        self.gauges.lock().unwrap().insert(name.to_string(), value);
+    }
+
+    /// Read a gauge (None if never set).
+    pub fn gauge(&self, name: &str) -> Option<f64> {
+        self.gauges.lock().unwrap().get(name).copied()
+    }
+
+    /// Append one observation to a histogram.
+    pub fn observe(&self, name: &str, value: f64) {
+        self.hists
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_default()
+            .push(value);
+    }
+
+    /// Snapshot a histogram's observations in insertion order.
+    pub fn histogram(&self, name: &str) -> Vec<f64> {
+        self.hists
+            .lock()
+            .unwrap()
+            .get(name)
+            .cloned()
+            .unwrap_or_default()
+    }
+
+    /// Remove one metric (all kinds) by name — e.g. a trainer clearing
+    /// its epoch histogram before a fresh run in the same process.
+    pub fn clear(&self, name: &str) {
+        self.counters.lock().unwrap().remove(name);
+        self.gauges.lock().unwrap().remove(name);
+        self.hists.lock().unwrap().remove(name);
+    }
+
+    /// Drop every metric. Tests and back-to-back CLI runs.
+    pub fn reset(&self) {
+        self.counters.lock().unwrap().clear();
+        self.gauges.lock().unwrap().clear();
+        self.hists.lock().unwrap().clear();
+    }
+
+    /// Render the Prometheus text exposition format: counters and
+    /// gauges as single samples, histograms as summaries (p50/p95/p99
+    /// quantiles plus `_sum`/`_count`). Deterministic: metrics are
+    /// name-sorted and values printed with fixed precision.
+    pub fn prometheus_text(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::new();
+        for (name, v) in self.counters.lock().unwrap().iter() {
+            let name = sanitize(name);
+            let _ = writeln!(out, "# TYPE {name} counter");
+            let _ = writeln!(out, "{name} {v}");
+        }
+        for (name, v) in self.gauges.lock().unwrap().iter() {
+            let name = sanitize(name);
+            let _ = writeln!(out, "# TYPE {name} gauge");
+            let _ = writeln!(out, "{name} {v:.9}");
+        }
+        for (name, xs) in self.hists.lock().unwrap().iter() {
+            let name = sanitize(name);
+            let p = percentiles(xs, &[50.0, 95.0, 99.0]);
+            let _ = writeln!(out, "# TYPE {name} summary");
+            let _ = writeln!(out, "{name}{{quantile=\"0.5\"}} {:.9}", p[0]);
+            let _ = writeln!(out, "{name}{{quantile=\"0.95\"}} {:.9}", p[1]);
+            let _ = writeln!(out, "{name}{{quantile=\"0.99\"}} {:.9}", p[2]);
+            let _ = writeln!(out, "{name}_sum {:.9}", xs.iter().sum::<f64>());
+            let _ = writeln!(out, "{name}_count {}", xs.len());
+        }
+        out
+    }
+
+    /// Write [`Self::prometheus_text`] atomically to `path`.
+    pub fn write_prometheus(&self, path: &Path) -> Result<()> {
+        crate::util::fsio::atomic_write_str(path, &self.prometheus_text())
+    }
+}
+
+/// Map an internal metric name onto the Prometheus name grammar.
+fn sanitize(name: &str) -> String {
+    let mut s: String = name
+        .chars()
+        .map(|c| if c.is_ascii_alphanumeric() || c == '_' { c } else { '_' })
+        .collect();
+    if s.chars().next().map_or(true, |c| c.is_ascii_digit()) {
+        s.insert(0, '_');
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_gauges_and_histograms_round_trip() {
+        let r = Registry::new();
+        assert_eq!(r.counter("served"), 0);
+        r.inc("served");
+        r.add("served", 4);
+        assert_eq!(r.counter("served"), 5);
+        assert_eq!(r.gauge("depth"), None);
+        r.set_gauge("depth", 3.5);
+        r.set_gauge("depth", 2.0);
+        assert_eq!(r.gauge("depth"), Some(2.0));
+        r.observe("epoch_s", 1.0);
+        r.observe("epoch_s", 3.0);
+        assert_eq!(r.histogram("epoch_s"), vec![1.0, 3.0]);
+        r.clear("epoch_s");
+        assert!(r.histogram("epoch_s").is_empty());
+        assert_eq!(r.counter("served"), 5, "clear() is per-name");
+        r.reset();
+        assert_eq!(r.counter("served"), 0);
+    }
+
+    #[test]
+    fn prometheus_text_is_deterministic_and_well_formed() {
+        let r = Registry::new();
+        r.add("b_total", 2);
+        r.add("a_total", 1);
+        r.set_gauge("util", 0.5);
+        for v in [1.0, 2.0, 3.0, 4.0] {
+            r.observe("lat_s", v);
+        }
+        let text = r.prometheus_text();
+        assert_eq!(text, r.prometheus_text(), "dump must be stable");
+        // Counters are name-sorted.
+        let a = text.find("a_total 1").unwrap();
+        let b = text.find("b_total 2").unwrap();
+        assert!(a < b);
+        assert!(text.contains("# TYPE util gauge"));
+        assert!(text.contains("# TYPE lat_s summary"));
+        assert!(text.contains("lat_s{quantile=\"0.5\"} 2.000000000"));
+        assert!(text.contains("lat_s_sum 10.000000000"));
+        assert!(text.contains("lat_s_count 4"));
+    }
+
+    #[test]
+    fn names_are_sanitized_to_the_metric_grammar() {
+        assert_eq!(sanitize("pipeline.epoch-s"), "pipeline_epoch_s");
+        assert_eq!(sanitize("99th"), "_99th");
+        assert_eq!(sanitize(""), "_");
+        let r = Registry::new();
+        r.inc("serve/admit");
+        assert!(r.prometheus_text().contains("serve_admit 1"));
+    }
+
+    #[test]
+    fn global_registry_is_shared() {
+        // Use a name no other test or subsystem touches.
+        global().clear("registry_selftest_total");
+        global().inc("registry_selftest_total");
+        assert_eq!(global().counter("registry_selftest_total"), 1);
+        global().clear("registry_selftest_total");
+    }
+}

@@ -320,6 +320,26 @@ impl<'e> PipelineTrainer<'e> {
         let flat = flatten_params(&init_params(p, mc, self.seed), &order)?;
         let n_stages = self.spec.num_stages();
 
+        // Stamp the recording with the run shape the trace analyzer
+        // needs for its measured-vs-model drift table (a no-op unless
+        // `--trace-out` started a recording).
+        crate::trace::instant(
+            "run_meta",
+            &[
+                ("kind", crate::trace::analyze::KIND_PIPELINE),
+                ("stages", n_stages as i64),
+                ("chunks", self.chunks as i64),
+                (
+                    "schedule",
+                    crate::trace::analyze::schedule_id(self.schedule.name()),
+                ),
+                ("replicas", self.replicas as i64),
+            ],
+        );
+        // Fresh epoch histogram per run: the CLI reads its percentile
+        // print back from the registry.
+        crate::metrics::registry::global().clear("pipeline_epoch_s");
+
         let group = ReplicaGroup::new(&pipe, self.replicas, self.replica_threads)?;
         let cx = EpochCtx {
             group: &group,
@@ -508,6 +528,7 @@ impl<'e> PipelineTrainer<'e> {
         // Owner for prefetched sets (delivered by value each epoch).
         let mut current: Vec<Microbatch> = Vec::new();
         for epoch in start_epoch..=epochs {
+            let _epoch_span = crate::trace::span1("epoch", "epoch", epoch as i64);
             let t = Timer::start();
 
             // The paper re-built sub-graphs inside every forward pass;
@@ -517,12 +538,16 @@ impl<'e> PipelineTrainer<'e> {
             let mbs: &[Microbatch] = match feed {
                 MbFeed::Static(m) => *m,
                 MbFeed::Rebuild { pool, ds, plan, backend, train_mask } => {
+                    let _rebuild =
+                        crate::trace::span1("rebuild", "epoch", epoch as i64);
                     let rt = Timer::start();
                     pool.rebuild(ds, plan, backend, train_mask)?;
                     st.timing.rebuild_s += rt.secs();
                     pool.microbatches()
                 }
                 MbFeed::Prefetch(rx) => {
+                    let _wait_span =
+                        crate::trace::span1("prefetch_wait", "epoch", epoch as i64);
                     let wait = Timer::start();
                     let (m, built_s) = rx.recv().map_err(|_| {
                         anyhow::anyhow!(
@@ -537,13 +562,18 @@ impl<'e> PipelineTrainer<'e> {
             };
 
             let key = (self.seed as u32, epoch as u32);
-            let out = cx.group.run_epoch(&st.flat, mbs, key)?;
+            let out = {
+                let _step =
+                    crate::trace::span1("pipeline_step", "epoch", epoch as i64);
+                cx.group.run_epoch(&st.flat, mbs, key)?
+            };
             st.timing.allreduce_s += out.allreduce_s;
             st.timing.replica_cpu_s += out.replica_cpu_s;
             let loss = out.loss_sum / out.mask_count.max(1.0);
             anyhow::ensure!(loss.is_finite(), "loss diverged at epoch {epoch}");
 
             // Normalise sum-grads to mean-grads, then one Adam step.
+            let _opt_span = crate::trace::span1("optimizer", "epoch", epoch as i64);
             let coord = Timer::start();
             let scale = 1.0 / out.mask_count.max(1.0) as f32;
             let grads: Vec<HostTensor> = out
@@ -558,6 +588,7 @@ impl<'e> PipelineTrainer<'e> {
                 .collect();
             st.adam.step(&mut st.flat, &grads)?;
             st.timing.coordinator_s += coord.secs();
+            drop(_opt_span);
 
             // Stochastic training accuracy from the pipeline's own logits.
             st.train_acc
@@ -571,6 +602,7 @@ impl<'e> PipelineTrainer<'e> {
 
             let dt = if epoch == 1 { t.secs() + cx.setup_s } else { t.secs() };
             st.timing.per_epoch_s.push(dt);
+            crate::metrics::registry::global().observe("pipeline_epoch_s", dt);
             if epoch == 1 {
                 st.timing.epoch1_s = dt;
             } else {

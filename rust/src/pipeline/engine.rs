@@ -541,6 +541,11 @@ impl PipelineEngine {
         };
 
         let wall = Instant::now();
+        // Stage workers record trace events on the replica (pid) of the
+        // thread that called execute(): thread-locals don't cross the
+        // scoped spawns below, so the binding is captured here and
+        // re-established inside each worker.
+        let trace_pid = crate::trace::current_pid();
 
         // One (fwd, bwd) channel pair per stage boundary: fwd b -> b+1,
         // bwd b+1 -> b. Receivers are not Clone, so build Option slots
@@ -592,6 +597,7 @@ impl PipelineEngine {
                     bwd_out: bwd_out[s].take(),
                     watchdog,
                     faults: self.faults.clone(),
+                    trace_pid,
                 };
                 // Catch panics at the spawn boundary: a panicking stage
                 // becomes a structured StagePanic error, never a process
@@ -745,10 +751,15 @@ struct StageWorker<'a> {
     watchdog: Option<Duration>,
     /// Injected execution faults, consulted before each forward batch.
     faults: Option<Arc<StageFaults>>,
+    /// Replica (trace pid) of the thread that called `execute()` — the
+    /// worker rebinds its own thread to `(trace_pid, stage)` so spans
+    /// land on the right timeline lane.
+    trace_pid: u32,
 }
 
 impl StageWorker<'_> {
     fn run(mut self) -> Result<WorkerOutput> {
+        crate::trace::bind(self.trace_pid, self.stage as u32);
         let m_count = self.mbs.len();
         // The final stage derives the loss; the first has no upstream.
         let is_loss = self.fwd_out.is_none();
@@ -793,10 +804,13 @@ impl StageWorker<'_> {
                     }
                     let inbound = match &mut fwd_inbox {
                         Some(inbox) => {
+                            let _wait =
+                                crate::trace::span1("recv_activation", "mb", m as i64);
                             Some(inbox.recv(m, self.stage, "activation", self.watchdog)?)
                         }
                         None => None,
                     };
+                    let exec_span = crate::trace::span1("fwd", "mb", m as i64);
                     let t0 = Instant::now();
                     let out = {
                         let inp = self
@@ -807,6 +821,7 @@ impl StageWorker<'_> {
                         format!("stage {} fwd (micro-batch {m})", self.stage)
                     })?;
                     timing.fwd_s.push(t0.elapsed().as_secs_f64());
+                    drop(exec_span);
                     // GPipe rematerialisation: stash only the stage input.
                     if self.spec.stashes_activation() {
                         stash[m] = inbound;
@@ -816,11 +831,14 @@ impl StageWorker<'_> {
                         .next()
                         .with_context(|| format!("stage {} fwd has no outputs", self.stage))?;
                     if let Some(tx) = &self.fwd_out {
+                        let _send =
+                            crate::trace::span1("send_activation", "mb", m as i64);
                         send_link(tx, m, primary, self.stage, "activation")?;
                     } else if let Some(sink) = self.sink {
                         // Forward-only run: stream the batch output out
                         // the moment it exists (the serving subsystem
                         // gathers requested rows and stamps completion).
+                        let _deliver = crate::trace::span1("deliver", "mb", m as i64);
                         sink(m, primary).with_context(|| {
                             format!("batch sink failed on batch {m}")
                         })?;
@@ -845,6 +863,8 @@ impl StageWorker<'_> {
                     );
                     let cotangent = match &mut bwd_inbox {
                         Some(inbox) => {
+                            let _wait =
+                                crate::trace::span1("recv_cotangent", "mb", m as i64);
                             Some(inbox.recv(m, self.stage, "cotangent", self.watchdog)?)
                         }
                         None => None,
@@ -865,11 +885,13 @@ impl StageWorker<'_> {
                     if let Some(g) = cotangent.as_ref() {
                         inp.push(ExecInput::Dyn(g));
                     }
+                    let exec_span = crate::trace::span1("bwd", "mb", m as i64);
                     let t0 = Instant::now();
                     let mut out = self.bwd.run_inputs(&inp).with_context(|| {
                         format!("stage {} bwd (micro-batch {m})", self.stage)
                     })?;
                     timing.bwd_s.push(t0.elapsed().as_secs_f64());
+                    drop(exec_span);
                     let upstream = if is_first {
                         None
                     } else {
@@ -888,6 +910,8 @@ impl StageWorker<'_> {
                     }
                     accumulate(&mut acc, &out)?;
                     if let (Some(tx), Some(g)) = (&self.bwd_out, upstream) {
+                        let _send =
+                            crate::trace::span1("send_cotangent", "mb", m as i64);
                         send_link(tx, m, g, self.stage, "cotangent")?;
                     }
                 }
@@ -1031,12 +1055,22 @@ impl OrderedInbox {
                 }),
                 Some(d) => match self.rx.recv_timeout(d) {
                     Ok(v) => Ok(v),
-                    Err(RecvTimeoutError::Timeout) => Err(EngineError::StageTimeout {
-                        stage,
-                        micro_batch: m,
-                        what,
-                        waited_s: start.elapsed().as_secs_f64(),
-                    }),
+                    Err(RecvTimeoutError::Timeout) => {
+                        // Post-mortem breadcrumb on this stage's lane —
+                        // a chaos-run timeline shows exactly where the
+                        // watchdog tripped without reading any logs.
+                        crate::trace::instant(
+                            "watchdog_fire",
+                            &[("stage", stage as i64), ("mb", m as i64)],
+                        );
+                        crate::metrics::registry::global().inc("watchdog_fires_total");
+                        Err(EngineError::StageTimeout {
+                            stage,
+                            micro_batch: m,
+                            what,
+                            waited_s: start.elapsed().as_secs_f64(),
+                        })
+                    }
                     Err(RecvTimeoutError::Disconnected) => Err(EngineError::LinkClosed {
                         stage,
                         micro_batch: m,

@@ -154,10 +154,19 @@ impl MicrobatchCache {
         train_mask: &[f32],
         induced: Option<&[InducedSubgraph]>,
     ) -> Result<Arc<Vec<Microbatch>>> {
+        // One deterministic span per lookup; whether it was a hit or a
+        // build is visible in the span's duration and recorded in the
+        // registry counters. (Hit-vs-build must NOT become distinct
+        // trace events: under concurrent trainers sharing one cache the
+        // build winner is a race, and trace event sequences are
+        // deterministic by contract.)
+        let _span = crate::trace::span("prep_get_or_build");
         let key = Self::key(ds, plan, backend, train_mask);
         if let Some(hit) = self.entries.lock().unwrap().get(&key) {
+            crate::metrics::registry::global().inc("prep_cache_hits_total");
             return Ok(hit.clone());
         }
+        crate::metrics::registry::global().inc("prep_cache_builds_total");
         let built = match induced {
             Some(subs) => microbatches_from_induced(ds, subs, backend, train_mask)?,
             None => prepare_microbatches_parallel(ds, plan, backend, train_mask)?,
@@ -268,11 +277,17 @@ pub fn spawn_prefetcher<'scope, 'env>(
 ) -> Receiver<PrefetchMsg> {
     let (tx, rx) = sync_channel::<PrefetchMsg>(1);
     scope.spawn(move || {
+        // The prefetcher records on its own reserved timeline lane so
+        // the overlap with pipeline execution is visible in Perfetto.
+        crate::trace::bind(0, crate::trace::TID_PREP);
         // (content fingerprint, content id) per chunk, previous epoch.
         let mut prev: Vec<(u64, u64)> = Vec::new();
-        for _ in 0..epochs {
+        for e in 0..epochs {
+            let build_span =
+                crate::trace::span1("prefetch_build", "epoch", e as i64);
             let t = Timer::start();
             let built = prepare_microbatches_parallel(ds, plan, backend, train_mask);
+            drop(build_span);
             let failed = built.is_err();
             let msg = built.map(|mut mbs| {
                 let mut next = Vec::with_capacity(mbs.len());

@@ -130,6 +130,9 @@ impl<'p> ReplicaGroup<'p> {
         // local batch m draws key.0 + i*per + m (the engine adds the
         // local m).
         let run_one = |i: usize| -> Result<EpochOutput> {
+            // Bind this logical replica's trace lane (pool threads serve
+            // several indices; the sequential path reverts below).
+            crate::trace::set_pid(i as u32);
             let slice = &microbatches[i * per..(i + 1) * per];
             let rkey = (key.0.wrapping_add((i * per) as u32), key.1);
             self.pipe.run_epoch(params, slice, rkey)
@@ -145,6 +148,10 @@ impl<'p> ReplicaGroup<'p> {
             // The sequential replica loop, today's exact path.
             (0..r).map(run_one).collect()
         };
+        // run_one may have rebound this thread's lane (with threads <= 1
+        // run_indexed degenerates to the calling thread); the merge and
+        // all-reduce below belong to the coordinator of replica 0.
+        crate::trace::set_pid(0);
         // Wall-clock of the whole replica phase: with threads < R the
         // replicas run in waves, so the max over per-replica spans would
         // under-report — the phase timer is the honest number.
@@ -178,6 +185,7 @@ impl<'p> ReplicaGroup<'p> {
             grad_parts.push(out.grads);
         }
         let reduce = Timer::start();
+        let reduce_span = crate::trace::span1("allreduce", "replicas", r as i64);
         // Sharded reduction (one shard per worker thread) when the group
         // is concurrent; the serial tree otherwise. Bitwise-identical
         // results either way — the per-element association is the same.
@@ -186,6 +194,7 @@ impl<'p> ReplicaGroup<'p> {
         } else {
             tree_allreduce(grad_parts)?
         };
+        drop(reduce_span);
         Ok(EpochOutput {
             loss_sum,
             mask_count,

@@ -470,6 +470,80 @@ pub fn plan_fleet_faults(
     }
 }
 
+/// Record one planning outcome as trace instants, in deterministic
+/// trace-index order: the `fleet_plan` totals the analyzer prices
+/// throughput against, per-replica crash/doom marks, and one admission
+/// verdict per request (`admission_admit`/`admission_defer`/
+/// `admission_shed`, or `failover_reroute`/`brownout_shed` where the
+/// failover pass changed the base disposition). Only called when
+/// tracing is enabled — the per-request walk is not free.
+fn emit_plan_events(fp: &FleetFaultPlan) {
+    let plan = &fp.plan;
+    crate::trace::instant(
+        "fleet_plan",
+        &[
+            ("served", plan.served as i64),
+            ("deferred", plan.deferred as i64),
+            ("shed", plan.shed as i64),
+            ("failover", fp.failover as i64),
+            ("brownout_shed", fp.degraded as i64),
+        ],
+    );
+    for (r, crash) in fp.crashed.iter().enumerate() {
+        if let Some(k) = crash {
+            crate::trace::instant(
+                "replica_crash",
+                &[("replica", r as i64), ("after", *k as i64)],
+            );
+        }
+    }
+    for (r, doomed) in fp.doomed.iter().enumerate() {
+        if *doomed {
+            crate::trace::instant("replica_doomed", &[("replica", r as i64)]);
+        }
+    }
+    let pairs = fp.base.dispositions.iter().zip(plan.dispositions.iter());
+    for (i, (base, d)) in pairs.enumerate() {
+        match (base, d) {
+            (
+                Disposition::Served { replica: from, .. },
+                Disposition::Served { replica: to, deferred_s },
+            ) if from != to => {
+                crate::trace::instant(
+                    "failover_reroute",
+                    &[
+                        ("req", i as i64),
+                        ("from", *from as i64),
+                        ("to", *to as i64),
+                        ("deferred_us", (deferred_s * 1e6) as i64),
+                    ],
+                );
+            }
+            (Disposition::Served { .. }, Disposition::Shed) => {
+                crate::trace::instant("brownout_shed", &[("req", i as i64)]);
+            }
+            (Disposition::Shed, Disposition::Shed) => {
+                crate::trace::instant("admission_shed", &[("req", i as i64)]);
+            }
+            (_, Disposition::Served { replica, deferred_s }) => {
+                let name = if *deferred_s > 0.0 {
+                    "admission_defer"
+                } else {
+                    "admission_admit"
+                };
+                crate::trace::instant(
+                    name,
+                    &[
+                        ("req", i as i64),
+                        ("replica", *replica as i64),
+                        ("deferred_us", (deferred_s * 1e6) as i64),
+                    ],
+                );
+            }
+        }
+    }
+}
+
 /// The fleet run's aggregate report: what `gnn-pipe serve --replicas R`
 /// prints and `bench serve-fleet` compares against
 /// `Scenarios::fleet_latency`.
@@ -685,6 +759,18 @@ impl<'e> FleetSession<'e> {
         let fault_plan =
             plan_fleet_faults(trace, policy, fleet, faults, self.session.watchdog_s);
         let plan = fault_plan.plan.clone();
+        // Planning outcome -> observability. Emission lives here, after
+        // the pure walks return — `plan_fleet`/`plan_fleet_faults` are
+        // equality-pinned pure functions and must stay side-effect free.
+        if crate::trace::enabled() {
+            emit_plan_events(&fault_plan);
+        }
+        let reg = crate::metrics::registry::global();
+        reg.add("serve_requests_total", trace.len() as u64);
+        reg.add("serve_served_total", plan.served as u64);
+        reg.add("serve_deferred_total", plan.deferred as u64);
+        reg.add("serve_shed_total", plan.shed as u64);
+        reg.add("serve_failover_total", fault_plan.failover as u64);
         let subs = plan.sub_traces(trace, fleet.replicas);
         // A doomed replica executes its BASE sub-trace — the stall must
         // really run and trip the downstream watchdog — but its output
@@ -701,6 +787,10 @@ impl<'e> FleetSession<'e> {
         let phase = Timer::start();
         let results: Vec<(Option<ServeOutput>, Option<String>, usize)> =
             run_indexed(fleet.replicas, fleet.replicas, |r| {
+                // This thread now works replica r's trace lane; the
+                // stage workers it spawns inherit the pid and bind
+                // their own stage tids.
+                crate::trace::set_pid(r as u32);
                 let doomed = fault_plan.doomed[r];
                 let list = if doomed { &base_subs[r] } else { &subs[r] };
                 if list.is_empty() {
@@ -732,6 +822,15 @@ impl<'e> FleetSession<'e> {
                             });
                             if transient && !doomed && retries < MAX_REPLICA_RETRIES {
                                 retries += 1;
+                                crate::trace::instant(
+                                    "replica_retry",
+                                    &[
+                                        ("replica", r as i64),
+                                        ("retry", retries as i64),
+                                    ],
+                                );
+                                crate::metrics::registry::global()
+                                    .inc("serve_retries_total");
                                 continue;
                             }
                             let e = e.context(format!("replica {r}"));
@@ -740,6 +839,9 @@ impl<'e> FleetSession<'e> {
                     }
                 }
             });
+        // With one replica run_indexed degenerates to the calling
+        // thread; the merge below belongs to replica 0's coordinator.
+        crate::trace::set_pid(0);
         let phase_wall_s = phase.secs();
 
         let mut outs: Vec<Option<ServeOutput>> = Vec::with_capacity(fleet.replicas);
@@ -882,6 +984,21 @@ impl<'e> FleetSession<'e> {
             base_v.seq
         );
         let plan = plan_fleet(trace, policy, fleet);
+        crate::trace::instant(
+            "fleet_plan",
+            &[
+                ("served", plan.served as i64),
+                ("deferred", plan.deferred as i64),
+                ("shed", plan.shed as i64),
+                ("failover", 0),
+                ("brownout_shed", 0),
+            ],
+        );
+        let reg = crate::metrics::registry::global();
+        reg.add("serve_requests_total", trace.len() as u64);
+        reg.add("serve_served_total", plan.served as u64);
+        reg.add("serve_deferred_total", plan.deferred as u64);
+        reg.add("serve_shed_total", plan.shed as u64);
         let subs = plan.sub_traces(trace, fleet.replicas);
         // Each replica's deterministic batch plan over its sub-trace —
         // the rollout's unit of version assignment.
@@ -922,6 +1039,7 @@ impl<'e> FleetSession<'e> {
         let phase = Timer::start();
         let results: Vec<Result<[Option<ServeOutput>; 2]>> =
             run_indexed(fleet.replicas, fleet.replicas, |r| {
+                crate::trace::set_pid(r as u32);
                 let mut outs = [None, None];
                 for side in 0..2 {
                     let list = &cohorts[r][side];
@@ -950,6 +1068,7 @@ impl<'e> FleetSession<'e> {
                 }
                 Ok(outs)
             });
+        crate::trace::set_pid(0);
         let phase_wall_s = phase.secs();
 
         let mut request_logits: Vec<Vec<f32>> = vec![Vec::new(); trace.len()];

@@ -119,6 +119,8 @@ impl Store {
         let seq = self.versions.last().map_or(1, |v| v.seq + 1);
         let (bytes, content_hash) = record.encode();
         atomic_write(&self.version_path(seq), &bytes)?;
+        crate::trace::instant("store_publish", &[("seq", seq as i64)]);
+        crate::metrics::registry::global().inc("store_publishes_total");
         let v = Version { seq, content_hash };
         self.versions.push(v);
         Ok(v)

@@ -1,0 +1,191 @@
+//! Chrome trace-event / Perfetto export of a [`TraceData`]: the
+//! `--trace-out trace.json` sink. Load the file at <https://ui.perfetto.dev>
+//! or `chrome://tracing` — processes are replicas (`pid` = replica
+//! index), threads are pipeline stages plus the reserved coordinator
+//! and prep lanes (`tid`), named via `process_name`/`thread_name`
+//! metadata events.
+//!
+//! The format is the JSON `traceEvents` array of the Trace Event
+//! spec: `B`/`E` duration pairs and scoped `i` instants, `ts` in
+//! microseconds (fractional), normalised so the first event is t=0.
+//! Serialization goes through [`crate::util::json::Json`], the same
+//! writer/parser the analyzer reads the file back with.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::util::json::Json;
+
+use super::{tid_label, Event, EventKind, TraceData};
+
+fn obj(fields: Vec<(&str, Json)>) -> Json {
+    Json::Obj(
+        fields
+            .into_iter()
+            .map(|(k, v)| (k.to_string(), v))
+            .collect::<BTreeMap<String, Json>>(),
+    )
+}
+
+fn metadata(name: &str, pid: u32, tid: u32, label: String) -> Json {
+    obj(vec![
+        ("name", Json::Str(name.to_string())),
+        ("ph", Json::Str("M".to_string())),
+        ("pid", Json::Num(pid as f64)),
+        ("tid", Json::Num(tid as f64)),
+        ("args", obj(vec![("name", Json::Str(label))])),
+    ])
+}
+
+fn event(pid: u32, tid: u32, e: &Event, t0_ns: u64) -> Json {
+    let ph = match e.kind {
+        EventKind::Begin => "B",
+        EventKind::End => "E",
+        EventKind::Instant => "i",
+    };
+    let mut fields = vec![
+        ("name", Json::Str(e.name.to_string())),
+        ("ph", Json::Str(ph.to_string())),
+        ("pid", Json::Num(pid as f64)),
+        ("tid", Json::Num(tid as f64)),
+        ("ts", Json::Num((e.ts_ns - t0_ns) as f64 / 1e3)),
+    ];
+    if e.kind == EventKind::Instant {
+        // Thread-scoped instants: render as a marker on the track.
+        fields.push(("s", Json::Str("t".to_string())));
+    }
+    if !e.args.is_empty() {
+        let args = e
+            .args
+            .iter()
+            .map(|&(k, v)| (k, Json::Num(v as f64)))
+            .collect();
+        fields.push(("args", obj(args)));
+    }
+    obj(fields)
+}
+
+/// Build the Chrome trace-event JSON document for a recording.
+pub fn chrome_trace_json(data: &TraceData) -> Json {
+    let t0_ns = data
+        .tracks
+        .iter()
+        .flat_map(|t| t.events.iter().map(|e| e.ts_ns))
+        .min()
+        .unwrap_or(0);
+    let mut events = Vec::with_capacity(data.total_events() + 2 * data.tracks.len());
+    let mut named_pids = BTreeSet::new();
+    for t in &data.tracks {
+        if named_pids.insert(t.pid) {
+            events.push(metadata(
+                "process_name",
+                t.pid,
+                0,
+                format!("replica {}", t.pid),
+            ));
+        }
+        events.push(metadata("thread_name", t.pid, t.tid, tid_label(t.tid)));
+    }
+    for t in &data.tracks {
+        for e in &t.events {
+            events.push(event(t.pid, t.tid, e, t0_ns));
+        }
+    }
+    Json::Obj(BTreeMap::from([
+        ("displayTimeUnit".to_string(), Json::Str("ms".to_string())),
+        ("traceEvents".to_string(), Json::Arr(events)),
+    ]))
+}
+
+/// Write the recording as Chrome trace-event JSON (atomically — a
+/// crash mid-write never leaves a truncated file).
+pub fn write_chrome_trace(path: &Path, data: &TraceData) -> Result<()> {
+    crate::util::fsio::atomic_write_str(path, &chrome_trace_json(data).to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::{Track, TID_COORD};
+
+    fn sample() -> TraceData {
+        let stage = Track {
+            pid: 0,
+            tid: 1,
+            events: vec![
+                Event {
+                    name: "fwd",
+                    kind: EventKind::Begin,
+                    ts_ns: 2_000,
+                    args: vec![("mb", 0)],
+                },
+                Event {
+                    name: "fwd",
+                    kind: EventKind::End,
+                    ts_ns: 5_500,
+                    args: Vec::new(),
+                },
+            ],
+        };
+        let coord = Track {
+            pid: 0,
+            tid: TID_COORD,
+            events: vec![Event {
+                name: "store_publish",
+                kind: EventKind::Instant,
+                ts_ns: 6_000,
+                args: vec![("seq", 3)],
+            }],
+        };
+        TraceData { tracks: vec![stage, coord] }
+    }
+
+    #[test]
+    fn exports_metadata_events_and_normalised_timestamps() {
+        let json = chrome_trace_json(&sample());
+        let events = json.get("traceEvents").unwrap().as_arr().unwrap();
+        // 1 process_name + 2 thread_name + 3 events.
+        assert_eq!(events.len(), 6);
+        let phs: Vec<&str> = events
+            .iter()
+            .map(|e| e.get("ph").unwrap().as_str().unwrap())
+            .collect();
+        assert_eq!(phs, vec!["M", "M", "M", "B", "E", "i"]);
+        // The earliest event lands at ts=0; the rest keep their offsets
+        // in microseconds.
+        let b = &events[3];
+        assert_eq!(b.get("ts").unwrap().as_f64().unwrap(), 0.0);
+        let e = &events[4];
+        assert_eq!(e.get("ts").unwrap().as_f64().unwrap(), 3.5);
+        // Args survive as numbers; instants are thread-scoped.
+        assert_eq!(
+            b.get("args").unwrap().get("mb").unwrap().as_f64().unwrap(),
+            0.0
+        );
+        let i = &events[5];
+        assert_eq!(i.get("s").unwrap().as_str().unwrap(), "t");
+    }
+
+    #[test]
+    fn export_round_trips_through_the_json_parser() {
+        let text = chrome_trace_json(&sample()).to_string();
+        let parsed = Json::parse(&text).expect("exporter must emit valid JSON");
+        let events = parsed.get("traceEvents").unwrap().as_arr().unwrap();
+        for ev in events {
+            // Every event (metadata included) carries the core fields.
+            assert!(ev.get("ph").is_some());
+            assert!(ev.get("pid").is_some());
+            assert!(ev.get("tid").is_some());
+        }
+    }
+
+    #[test]
+    fn empty_recording_is_still_a_valid_document() {
+        let json = chrome_trace_json(&TraceData::default());
+        let text = json.to_string();
+        let parsed = Json::parse(&text).unwrap();
+        assert!(parsed.get("traceEvents").unwrap().as_arr().unwrap().is_empty());
+    }
+}

@@ -1,0 +1,489 @@
+//! Structured run tracing: a low-overhead, per-thread event recorder
+//! behind every layer that keeps timers — the pipeline engine's stage
+//! workers (per-microbatch Fwd/Bwd spans, link send/recv waits), the
+//! prep/prefetch threads, the replica group and its all-reduce rounds,
+//! the serving fleet (batch execution, admission verdicts, failover
+//! reroutes, watchdog fires) and the checkpoint store.
+//!
+//! ## Recording model
+//!
+//! Events are typed ([`Event`]): span begin/end pairs plus instant
+//! markers, with `&'static str` names and small integer args. Each
+//! recording thread appends to its own buffer, registered under a
+//! `(pid, tid)` *track* identity — pid is the replica index, tid the
+//! pipeline stage (or a reserved lane: [`TID_COORD`], [`TID_PREP`]) —
+//! so the hot path is one atomic enabled-check, a monotonic-clock
+//! read, and a `Vec` push behind an uncontended per-track mutex.
+//! Nothing is serialized until [`stop`] drains the registry into a
+//! [`TraceData`], which the Chrome/Perfetto exporter ([`chrome`]) and
+//! the `gnn-pipe trace` analyzer ([`analyze`]) consume.
+//!
+//! When tracing is off (the default — it is enabled only by
+//! `--trace-out`), every recording call is a single relaxed atomic
+//! load and an early return; `rust/benches/trace.rs` pins the
+//! overhead of both paths.
+//!
+//! ## The determinism contract
+//!
+//! Per track, the event *sequence* — names, args, ordering — is a pure
+//! function of (seed, config); only timestamps vary between runs
+//! (`rust/tests/integration_trace.rs` pins this, and
+//! [`TraceData::signature`] is the timestamp-free comparison form).
+//! Two consequences shape the instrumentation sites:
+//!
+//! * every event lands on the track of the *logical* worker (replica
+//!   r, stage s), never the OS thread — `run_indexed`'s index-stealing
+//!   pool rebinds the thread ([`bind`]) at the top of each task;
+//! * racy facts (which replica's thread won a shared
+//!   [`MicrobatchCache`](crate::pipeline::MicrobatchCache) build, say)
+//!   are recorded as [`metrics::registry`](crate::metrics::registry)
+//!   counters, not trace events: the cache emits one deterministic
+//!   `prep_get_or_build` span whose *duration* shows hit vs build,
+//!   while the hit/build counts go to the registry.
+
+pub mod analyze;
+pub mod chrome;
+
+use std::cell::{Cell, RefCell};
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+/// Reserved tid for a replica's coordinator thread (the driver loop,
+/// routing/admission verdicts, all-reduce rounds). Stage tids are the
+/// stage indices themselves, so reserved lanes start high.
+pub const TID_COORD: u32 = 1000;
+/// Reserved tid for the Overlap-mode prefetch thread.
+pub const TID_PREP: u32 = 1001;
+
+/// One integer event argument: `(name, value)`.
+pub type Arg = (&'static str, i64);
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EventKind {
+    /// Span start; closed by the next matching [`EventKind::End`] on
+    /// the same track (spans nest per track).
+    Begin,
+    /// Span end.
+    End,
+    /// A point event (watchdog fire, fault injection, admission
+    /// verdict, checkpoint publish).
+    Instant,
+}
+
+/// One recorded event. `ts_ns` is monotonic nanoseconds since the
+/// process trace clock's origin — comparable across tracks, excluded
+/// from the determinism contract.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Event {
+    pub name: &'static str,
+    pub kind: EventKind,
+    pub ts_ns: u64,
+    pub args: Vec<Arg>,
+}
+
+/// One `(pid, tid)` lane of the recorded timeline, events in recording
+/// order.
+#[derive(Debug, Clone)]
+pub struct Track {
+    pub pid: u32,
+    pub tid: u32,
+    pub events: Vec<Event>,
+}
+
+/// A drained recording: tracks sorted by `(pid, tid)`.
+#[derive(Debug, Clone, Default)]
+pub struct TraceData {
+    pub tracks: Vec<Track>,
+}
+
+impl TraceData {
+    pub fn total_events(&self) -> usize {
+        self.tracks.iter().map(|t| t.events.len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.total_events() == 0
+    }
+
+    /// The timestamp-free rendering of the recording — one line per
+    /// event (kind, name, args) grouped per track. Two runs with
+    /// identical (seed, config) must produce identical signatures;
+    /// this is the form the determinism tests diff.
+    pub fn signature(&self) -> String {
+        let mut out = String::new();
+        for t in &self.tracks {
+            let _ = writeln!(out, "track {}/{}", t.pid, t.tid);
+            for e in &t.events {
+                let kind = match e.kind {
+                    EventKind::Begin => "B",
+                    EventKind::End => "E",
+                    EventKind::Instant => "I",
+                };
+                let _ = write!(out, "  {kind} {}", e.name);
+                for (k, v) in &e.args {
+                    let _ = write!(out, " {k}={v}");
+                }
+                out.push('\n');
+            }
+        }
+        out
+    }
+}
+
+/// The human label of a tid lane (Perfetto thread names, analyzer
+/// rows).
+pub fn tid_label(tid: u32) -> String {
+    match tid {
+        TID_COORD => "coordinator".to_string(),
+        TID_PREP => "prep".to_string(),
+        t => format!("stage {t}"),
+    }
+}
+
+type Buf = Arc<Mutex<Vec<Event>>>;
+
+struct Recorder {
+    enabled: AtomicBool,
+    /// Bumped by [`start`]/[`stop`]; a thread whose cached track
+    /// binding is from an older generation rebinds before recording,
+    /// so stale buffers from a drained session are never written.
+    generation: AtomicU64,
+    tracks: Mutex<BTreeMap<(u32, u32), Buf>>,
+}
+
+fn recorder() -> &'static Recorder {
+    static R: OnceLock<Recorder> = OnceLock::new();
+    R.get_or_init(|| Recorder {
+        enabled: AtomicBool::new(false),
+        generation: AtomicU64::new(0),
+        tracks: Mutex::new(BTreeMap::new()),
+    })
+}
+
+/// The process-wide trace clock origin: timestamps are monotonic
+/// nanoseconds since the first trace call, so sessions never need to
+/// synchronize a start time with already-running threads.
+fn now_ns() -> u64 {
+    static T0: OnceLock<Instant> = OnceLock::new();
+    T0.get_or_init(Instant::now).elapsed().as_nanos() as u64
+}
+
+thread_local! {
+    /// The replica index ambient on this thread ([`set_pid`]); spawned
+    /// stage workers inherit it explicitly via
+    /// [`current_pid`] -> worker field -> [`bind`].
+    static AMBIENT_PID: Cell<u32> = Cell::new(0);
+    /// Cached `(generation, buffer)` track binding for this thread.
+    static BOUND: RefCell<Option<(u64, Buf)>> = RefCell::new(None);
+}
+
+fn buf_for(pid: u32, tid: u32) -> Buf {
+    recorder()
+        .tracks
+        .lock()
+        .unwrap()
+        .entry((pid, tid))
+        .or_default()
+        .clone()
+}
+
+fn push(ev: Event) {
+    let gen = recorder().generation.load(Ordering::Acquire);
+    BOUND.with(|b| {
+        let mut slot = b.borrow_mut();
+        let stale = match &*slot {
+            Some((g, _)) => *g != gen,
+            None => true,
+        };
+        if stale {
+            // Unbound (or stale) threads record on their ambient
+            // replica's coordinator lane.
+            let pid = AMBIENT_PID.with(Cell::get);
+            *slot = Some((gen, buf_for(pid, TID_COORD)));
+        }
+        let (_, buf) = slot.as_ref().unwrap();
+        buf.lock().unwrap().push(ev);
+    });
+}
+
+/// Begin a recording session: clear any previous tracks and enable
+/// event collection. Not re-entrant — one session at a time per
+/// process (the CLI enables it once, around one run).
+pub fn start() {
+    let r = recorder();
+    r.tracks.lock().unwrap().clear();
+    r.generation.fetch_add(1, Ordering::AcqRel);
+    r.enabled.store(true, Ordering::Release);
+}
+
+/// Disable collection and drain every track, sorted by `(pid, tid)`.
+/// Call after the run's worker threads have joined; a straggler still
+/// holding a stale binding can no longer write into the drained data.
+pub fn stop() -> TraceData {
+    let r = recorder();
+    r.enabled.store(false, Ordering::Release);
+    r.generation.fetch_add(1, Ordering::AcqRel);
+    let taken = std::mem::take(&mut *r.tracks.lock().unwrap());
+    let tracks = taken
+        .into_iter()
+        .map(|((pid, tid), buf)| {
+            let events = match Arc::try_unwrap(buf) {
+                Ok(m) => m.into_inner().unwrap(),
+                Err(shared) => shared.lock().unwrap().clone(),
+            };
+            Track { pid, tid, events }
+        })
+        .collect();
+    TraceData { tracks }
+}
+
+/// Is a recording session active? The hot-path gate: every recording
+/// helper returns immediately when false.
+pub fn enabled() -> bool {
+    recorder().enabled.load(Ordering::Relaxed)
+}
+
+/// `!enabled()` — the baseline the overhead bench compares against.
+pub fn disabled() -> bool {
+    !enabled()
+}
+
+/// Set the ambient replica index for this thread and bind it to that
+/// replica's coordinator lane. Replica/fleet task closures call this
+/// first so events land on the *logical* replica's track regardless of
+/// which pool thread ran the task.
+pub fn set_pid(pid: u32) {
+    bind(pid, TID_COORD);
+}
+
+/// The ambient replica index on this thread (0 unless [`set_pid`] /
+/// [`bind`] changed it). The engine captures this on the calling
+/// thread and hands it to its spawned stage workers.
+pub fn current_pid() -> u32 {
+    AMBIENT_PID.with(Cell::get)
+}
+
+/// Bind this thread's subsequent events to track `(pid, tid)`. Stage
+/// workers bind `(replica, stage)`; the prefetcher binds
+/// `(0, TID_PREP)`.
+pub fn bind(pid: u32, tid: u32) {
+    AMBIENT_PID.with(|p| p.set(pid));
+    if !enabled() {
+        // Drop any cached binding so a later session rebinds fresh.
+        BOUND.with(|b| *b.borrow_mut() = None);
+        return;
+    }
+    let gen = recorder().generation.load(Ordering::Acquire);
+    let buf = buf_for(pid, tid);
+    BOUND.with(|b| *b.borrow_mut() = Some((gen, buf)));
+}
+
+/// Record an instant event on this thread's track. No-op when
+/// disabled.
+pub fn instant(name: &'static str, args: &[Arg]) {
+    if !enabled() {
+        return;
+    }
+    push(Event {
+        name,
+        kind: EventKind::Instant,
+        ts_ns: now_ns(),
+        args: args.to_vec(),
+    });
+}
+
+/// A RAII span: records `Begin` on creation, `End` on drop. Disarmed
+/// (free) when tracing is disabled, and the `End` is suppressed if the
+/// session ended mid-span.
+#[must_use = "dropping a Span immediately closes it"]
+pub struct Span {
+    name: &'static str,
+    generation: u64,
+    armed: bool,
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        if !self.armed || !enabled() {
+            return;
+        }
+        if recorder().generation.load(Ordering::Acquire) != self.generation {
+            return;
+        }
+        push(Event {
+            name: self.name,
+            kind: EventKind::End,
+            ts_ns: now_ns(),
+            args: Vec::new(),
+        });
+    }
+}
+
+fn span_with(name: &'static str, args: Vec<Arg>) -> Span {
+    if !enabled() {
+        return Span { name, generation: 0, armed: false };
+    }
+    let generation = recorder().generation.load(Ordering::Acquire);
+    push(Event { name, kind: EventKind::Begin, ts_ns: now_ns(), args });
+    Span { name, generation, armed: true }
+}
+
+/// Open a span with no args on this thread's track.
+pub fn span(name: &'static str) -> Span {
+    span_with(name, Vec::new())
+}
+
+/// Open a span with one integer arg (`mb`, `epoch`, ...).
+pub fn span1(name: &'static str, key: &'static str, value: i64) -> Span {
+    span_with(name, vec![(key, value)])
+}
+
+/// Open a span with an explicit arg list.
+pub fn span_args(name: &'static str, args: &[Arg]) -> Span {
+    span_with(name, args.to_vec())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Tracing state is process-global; every test that starts a
+    /// session holds this lock (ignoring poisoning — an earlier failed
+    /// test must not cascade).
+    fn session_lock() -> std::sync::MutexGuard<'static, ()> {
+        static LOCK: Mutex<()> = Mutex::new(());
+        LOCK.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    #[test]
+    fn disabled_recording_is_a_no_op() {
+        let _g = session_lock();
+        assert!(disabled());
+        instant("never", &[("x", 1)]);
+        let s = span1("no", "mb", 3);
+        drop(s);
+        start();
+        let data = stop();
+        assert!(data.is_empty(), "pre-session events must not leak in");
+    }
+
+    #[test]
+    fn spans_and_instants_land_in_order_on_bound_tracks() {
+        let _g = session_lock();
+        start();
+        bind(0, TID_COORD);
+        {
+            let _e = span1("epoch", "epoch", 1);
+            instant("store_publish", &[("seq", 1)]);
+        }
+        let data = stop();
+        assert_eq!(data.tracks.len(), 1);
+        let t = &data.tracks[0];
+        assert_eq!((t.pid, t.tid), (0, TID_COORD));
+        let kinds: Vec<EventKind> = t.events.iter().map(|e| e.kind).collect();
+        assert_eq!(
+            kinds,
+            vec![EventKind::Begin, EventKind::Instant, EventKind::End]
+        );
+        assert_eq!(t.events[0].name, "epoch");
+        assert_eq!(t.events[0].args, vec![("epoch", 1)]);
+        assert_eq!(t.events[2].name, "epoch");
+        // Timestamps are monotone within a track.
+        assert!(t.events[0].ts_ns <= t.events[1].ts_ns);
+        assert!(t.events[1].ts_ns <= t.events[2].ts_ns);
+    }
+
+    #[test]
+    fn tracks_sort_by_pid_then_tid_and_threads_keep_their_lane() {
+        let _g = session_lock();
+        start();
+        std::thread::scope(|scope| {
+            for pid in (0..3u32).rev() {
+                scope.spawn(move || {
+                    bind(pid, pid); // stage tid == pid for the test
+                    let _s = span1("fwd", "mb", pid as i64);
+                });
+            }
+        });
+        bind(0, TID_COORD);
+        instant("done", &[]);
+        let data = stop();
+        let ids: Vec<(u32, u32)> =
+            data.tracks.iter().map(|t| (t.pid, t.tid)).collect();
+        assert_eq!(ids, vec![(0, 0), (0, TID_COORD), (1, 1), (2, 2)]);
+        for t in &data.tracks {
+            if t.tid != TID_COORD {
+                assert_eq!(t.events.len(), 2, "one B/E pair per stage lane");
+            }
+        }
+    }
+
+    #[test]
+    fn signature_is_timestamp_free_and_replays_identically() {
+        let _g = session_lock();
+        let record = || {
+            start();
+            bind(1, 0);
+            {
+                let _s = span1("fwd", "mb", 0);
+                std::thread::sleep(std::time::Duration::from_micros(50));
+            }
+            instant("watchdog_fire", &[("stage", 0), ("mb", 2)]);
+            stop().signature()
+        };
+        let a = record();
+        let b = record();
+        assert_eq!(a, b, "same event program must give the same signature");
+        assert!(a.contains("track 1/0"));
+        assert!(a.contains("B fwd mb=0"));
+        assert!(a.contains("I watchdog_fire stage=0 mb=2"));
+        assert!(!a.contains("ts"), "signatures carry no timestamps");
+    }
+
+    #[test]
+    fn stale_bindings_from_a_previous_session_rebind() {
+        let _g = session_lock();
+        start();
+        bind(2, 5);
+        instant("first", &[]);
+        let first = stop();
+        assert_eq!(first.tracks.len(), 1);
+        // Same thread, new session, no explicit rebind: the cached
+        // binding is stale and must fall back to the ambient pid's
+        // coordinator lane instead of writing into the drained buffer.
+        start();
+        instant("second", &[]);
+        let second = stop();
+        assert_eq!(second.tracks.len(), 1);
+        let t = &second.tracks[0];
+        assert_eq!((t.pid, t.tid), (2, TID_COORD));
+        assert_eq!(t.events[0].name, "second");
+        assert_eq!(first.tracks[0].events.len(), 1, "no cross-session leak");
+        bind(0, TID_COORD); // reset the ambient pid for other tests
+    }
+
+    #[test]
+    fn span_end_is_suppressed_when_the_session_ends_mid_span() {
+        let _g = session_lock();
+        start();
+        bind(0, TID_COORD);
+        let s = span("epoch");
+        let data = stop();
+        drop(s); // must not panic or resurrect a track
+        assert_eq!(data.total_events(), 1);
+        start();
+        let empty = stop();
+        assert!(empty.is_empty(), "the orphaned End must not leak forward");
+    }
+
+    #[test]
+    fn tid_labels() {
+        assert_eq!(tid_label(0), "stage 0");
+        assert_eq!(tid_label(3), "stage 3");
+        assert_eq!(tid_label(TID_COORD), "coordinator");
+        assert_eq!(tid_label(TID_PREP), "prep");
+    }
+}

@@ -146,11 +146,25 @@ impl<'e> SingleDeviceTrainer<'e> {
             }
         }
 
+        crate::trace::instant(
+            "run_meta",
+            &[
+                ("kind", crate::trace::analyze::KIND_TRAIN),
+                ("stages", 1),
+                ("chunks", 1),
+                ("schedule", -1),
+                ("replicas", 1),
+            ],
+        );
+        crate::metrics::registry::global().clear("train_epoch_s");
+
         // Epoch 1 includes compile (the paper's "setup" epoch).
         let compile_timer = Timer::start();
         let exe = self.engine.executable(&name)?;
 
         for epoch in start_epoch..=epochs {
+            let _epoch_span =
+                crate::trace::span1("epoch", "epoch", epoch as i64);
             let t = Timer::start();
             let mut inputs = flat.clone();
             inputs.extend(fixed.iter().cloned());
@@ -160,11 +174,14 @@ impl<'e> SingleDeviceTrainer<'e> {
             anyhow::ensure!(loss.is_finite(), "loss diverged at epoch {epoch}");
             let grads = &out[1..];
             let coord_t = Timer::start();
+            let opt_span = crate::trace::span("optimizer");
             adam.step(&mut flat, grads)?;
+            drop(opt_span);
             timing.coordinator_s += coord_t.secs();
 
             let dt = if epoch == 1 { compile_timer.secs() } else { t.secs() };
             timing.per_epoch_s.push(dt);
+            crate::metrics::registry::global().observe("train_epoch_s", dt);
             if epoch == 1 {
                 timing.epoch1_s = dt;
             } else {

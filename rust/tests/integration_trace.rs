@@ -1,0 +1,317 @@
+//! Tracing-subsystem invariants: the determinism contract, the
+//! Chrome/Perfetto export, and the `gnn-pipe trace` analyzer.
+//!
+//! Host-side tests (always run, no artifacts needed) pin:
+//!
+//! * **event-sequence determinism** — two recordings of the same
+//!   multi-replica, multi-stage workload through the real thread pool
+//!   produce bit-identical [`TraceData::signature`]s (names, args,
+//!   per-track ordering; timestamps excluded by construction);
+//! * **export validity** — a `--trace-out` file written by
+//!   [`write_chrome_trace`] parses as Chrome trace-event JSON (the
+//!   format Perfetto and `chrome://tracing` load), with every event
+//!   carrying `ph`/`pid`/`tid` and threads named via metadata;
+//! * **analyzer round-trip** — `analyze_file` on that file reports
+//!   per-stage utilization, a critical-path decomposition, and a
+//!   measured-vs-model drift table.
+//!
+//! The end-to-end test (skipped gracefully when `make artifacts` has
+//! not run) pins the acceptance contract on the real pipeline: two
+//! identical (seed, config) `PipelineEngine::run_epoch` recordings
+//! have bit-identical signatures, and their export analyzes into
+//! utilization rows for every stage lane.
+
+use std::path::PathBuf;
+use std::sync::Mutex;
+use std::time::Duration;
+
+use gnn_pipe::batching::{Chunker, SequentialChunker};
+use gnn_pipe::config::Config;
+use gnn_pipe::data::generate;
+use gnn_pipe::pipeline::{
+    prepare_microbatches, FillDrain, PipelineEngine, PipelineSpec,
+};
+use gnn_pipe::runtime::Engine;
+use gnn_pipe::trace::analyze::{analyze_file, KIND_PIPELINE};
+use gnn_pipe::trace::chrome::write_chrome_trace;
+use gnn_pipe::trace::{self, TraceData, TID_COORD};
+use gnn_pipe::train::{flatten_params, init_params};
+use gnn_pipe::util::json::Json;
+use gnn_pipe::util::par::run_indexed;
+
+/// The recorder is process-global and tests in this binary run
+/// concurrently: every test that starts a session holds this lock
+/// (ignoring poisoning — an earlier failed test must not cascade).
+fn session_lock() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: Mutex<()> = Mutex::new(());
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn tmp_file(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!(
+        "gnn_pipe_integration_trace_{tag}_{}.json",
+        std::process::id()
+    ))
+}
+
+/// A deterministic stand-in for one traced run: R replicas through the
+/// real index-stealing pool, each spawning one worker thread per stage
+/// (exactly the engine's topology), every lane emitting the real event
+/// vocabulary with args derived from (replica, stage, microbatch).
+fn synthetic_run(replicas: usize, stages: usize, mbs: usize) -> TraceData {
+    trace::start();
+    trace::instant(
+        "run_meta",
+        &[
+            ("kind", KIND_PIPELINE),
+            ("stages", stages as i64),
+            ("chunks", mbs as i64),
+            ("schedule", 0),
+            ("replicas", replicas as i64),
+        ],
+    );
+    run_indexed(replicas, replicas.min(2), |r| {
+        trace::set_pid(r as u32);
+        let step = trace::span1("pipeline_step", "epoch", 2);
+        std::thread::scope(|scope| {
+            for s in 0..stages {
+                scope.spawn(move || {
+                    trace::bind(r as u32, s as u32);
+                    for m in 0..mbs {
+                        {
+                            let _w =
+                                trace::span1("recv_activation", "mb", m as i64);
+                        }
+                        let exec = trace::span1("fwd", "mb", m as i64);
+                        std::thread::sleep(Duration::from_micros(200));
+                        drop(exec);
+                    }
+                    for m in (0..mbs).rev() {
+                        let exec = trace::span1("bwd", "mb", m as i64);
+                        std::thread::sleep(Duration::from_micros(400));
+                        drop(exec);
+                        let _send =
+                            trace::span1("send_cotangent", "mb", m as i64);
+                    }
+                });
+            }
+        });
+        drop(step);
+        trace::instant("watchdog_fire", &[("stage", 0), ("mb", r as i64)]);
+    });
+    trace::set_pid(0);
+    trace::stop()
+}
+
+// ---------------------------------------------------------------------
+// Host-side: the determinism contract.
+// ---------------------------------------------------------------------
+
+#[test]
+fn event_sequences_are_deterministic_across_identical_runs() {
+    let _g = session_lock();
+    let a = synthetic_run(2, 3, 4);
+    let b = synthetic_run(2, 3, 4);
+    assert!(!a.is_empty());
+    assert_eq!(
+        a.signature(),
+        b.signature(),
+        "same (seed, config) must replay the same event sequence"
+    );
+    // Every logical lane got its own track: per replica, one
+    // coordinator lane plus one lane per stage, replicas 0 and 1.
+    let ids: Vec<(u32, u32)> =
+        a.tracks.iter().map(|t| (t.pid, t.tid)).collect();
+    assert_eq!(
+        ids,
+        vec![
+            (0, 0),
+            (0, 1),
+            (0, 2),
+            (0, TID_COORD),
+            (1, 0),
+            (1, 1),
+            (1, 2),
+            (1, TID_COORD),
+        ]
+    );
+    // Stage lanes carry the full per-microbatch program in order.
+    let sig = a.signature();
+    assert!(sig.contains("B fwd mb=0"));
+    assert!(sig.contains("B bwd mb=3"));
+    assert!(sig.contains("I watchdog_fire stage=0 mb=1"));
+}
+
+#[test]
+fn a_disabled_recorder_records_nothing_across_the_same_workload() {
+    let _g = session_lock();
+    assert!(trace::disabled(), "tests must leave the recorder off");
+    // The same workload without start(): every call must be a no-op,
+    // and a subsequent session must not inherit any of it.
+    run_indexed(2, 2, |r| {
+        trace::set_pid(r as u32);
+        let _s = trace::span1("fwd", "mb", r as i64);
+        trace::instant("watchdog_fire", &[("stage", 0)]);
+    });
+    trace::set_pid(0);
+    trace::start();
+    let data = trace::stop();
+    assert!(data.is_empty(), "disabled-phase events must not leak in");
+}
+
+// ---------------------------------------------------------------------
+// Host-side: export validity + analyzer round-trip.
+// ---------------------------------------------------------------------
+
+#[test]
+fn chrome_export_is_valid_trace_json_and_the_analyzer_reads_it_back() {
+    let data = {
+        let _g = session_lock();
+        synthetic_run(1, 2, 3)
+    };
+    let path = tmp_file("chrome_smoke");
+    write_chrome_trace(&path, &data).expect("write trace");
+
+    // The file is well-formed Chrome trace-event JSON: a traceEvents
+    // array whose every entry has ph/pid/tid, with thread-name
+    // metadata — the structure Perfetto / chrome://tracing load.
+    let text = std::fs::read_to_string(&path).expect("read trace");
+    let doc = Json::parse(&text).expect("trace file must be valid JSON");
+    let events = doc
+        .get("traceEvents")
+        .and_then(Json::as_arr)
+        .expect("traceEvents array");
+    assert!(events.len() > data.total_events(), "events + metadata");
+    for ev in events {
+        assert!(ev.get("ph").is_some());
+        assert!(ev.get("pid").is_some());
+        assert!(ev.get("tid").is_some());
+    }
+    assert!(
+        events.iter().any(|e| {
+            e.get("ph").and_then(Json::as_str) == Some("M")
+                && e.get("args")
+                    .and_then(|a| a.get("name"))
+                    .and_then(Json::as_str)
+                    == Some("stage 1")
+        }),
+        "stage lanes must be named for the timeline UI"
+    );
+
+    // The analyzer reduces the same file to the report of
+    // `gnn-pipe trace`: utilization rows per stage lane, a
+    // critical-path decomposition, and the drift table.
+    let analysis = analyze_file(&path).expect("analyze");
+    assert_eq!(analysis.stages.len(), 2);
+    for row in &analysis.stages {
+        assert_eq!(row.fwd_count, 3);
+        assert_eq!(row.bwd_count, 3);
+        assert!(row.util > 0.0 && row.util <= 1.0);
+        assert!((row.util + row.bubble - 1.0).abs() < 1e-9);
+    }
+    assert!(analysis.bottleneck.is_some());
+    assert!(
+        !analysis.drift.is_empty(),
+        "pipeline run_meta must yield a measured-vs-model table"
+    );
+    assert_eq!(analysis.instant_counts["watchdog_fire"], 1);
+    let report = analysis.render();
+    assert!(report.contains("run: pipeline"));
+    assert!(report.contains("bubble"));
+    assert!(report.contains("critical path"));
+
+    let _ = std::fs::remove_file(&path);
+}
+
+// ---------------------------------------------------------------------
+// End-to-end: the real pipeline under the recorder (needs artifacts).
+// ---------------------------------------------------------------------
+
+#[test]
+fn real_pipeline_epochs_trace_deterministically_and_analyze() {
+    let cfg = Config::load().expect("configs");
+    if !cfg.artifacts_dir().join("manifest.json").exists() {
+        eprintln!("skipping: artifacts missing (run `make artifacts`)");
+        return;
+    }
+    let engine =
+        Engine::from_artifacts_dir(&cfg.artifacts_dir()).expect("engine");
+    let profile = cfg.dataset("pubmed").unwrap().clone();
+    let ds = generate(&profile).unwrap();
+    let chunks = 4usize;
+    let plan = SequentialChunker.plan(&ds.graph, chunks);
+    let train_mask = ds.splits.train_mask(profile.nodes);
+    let mbs = prepare_microbatches(&ds, &plan, "ell", &train_mask).unwrap();
+    let pipe = PipelineEngine::new(
+        &engine,
+        "pubmed",
+        "ell",
+        chunks,
+        PipelineSpec::gat4(),
+        std::sync::Arc::new(FillDrain),
+    )
+    .expect("pipeline engine");
+    engine.warm_up(&pipe.artifact_names).expect("warm-up");
+    let params_map = init_params(&profile, &cfg.model, 0);
+    let params =
+        flatten_params(&params_map, &engine.manifest.param_order).unwrap();
+
+    // One traced run: the run_meta stamp the pipeline CLI records, then
+    // two steady steps, exactly as the driver loop shapes them.
+    let record = || {
+        let _g = session_lock();
+        trace::start();
+        trace::instant(
+            "run_meta",
+            &[
+                ("kind", KIND_PIPELINE),
+                ("stages", PipelineSpec::gat4().num_stages() as i64),
+                ("chunks", chunks as i64),
+                ("schedule", 0),
+                ("replicas", 1),
+            ],
+        );
+        for epoch in 2..4i64 {
+            let step = trace::span1("pipeline_step", "epoch", epoch);
+            let _ = pipe.run_epoch(&params, &mbs, (0, 1)).unwrap();
+            drop(step);
+        }
+        trace::stop()
+    };
+    let a = record();
+    let b = record();
+    assert_eq!(
+        a.signature(),
+        b.signature(),
+        "identical (seed, config) pipeline runs must replay identical \
+         event sequences"
+    );
+
+    // Each of the 4 stages recorded per-microbatch fwd+bwd spans on
+    // its own lane, per step.
+    let stages = PipelineSpec::gat4().num_stages();
+    for s in 0..stages as u32 {
+        let track = a
+            .tracks
+            .iter()
+            .find(|t| (t.pid, t.tid) == (0, s))
+            .expect("stage lane");
+        let fwd = track.events.iter().filter(|e| e.name == "fwd").count();
+        assert_eq!(fwd, 2 * 2 * chunks, "2 steps x B/E x chunks");
+    }
+
+    // The export analyzes: one utilization row per stage over the two
+    // steady windows, and the drift table prices the schedule.
+    let path = tmp_file("real_pipeline");
+    write_chrome_trace(&path, &a).expect("write trace");
+    let analysis = analyze_file(&path).expect("analyze");
+    assert_eq!(analysis.windows, 2);
+    assert_eq!(analysis.stages.len(), stages);
+    for row in &analysis.stages {
+        assert_eq!(row.fwd_count, 2 * chunks);
+        assert_eq!(row.bwd_count, 2 * chunks);
+        assert!(row.util > 0.0);
+    }
+    assert!(!analysis.drift.is_empty());
+    let _ = std::fs::remove_file(&path);
+}

@@ -293,6 +293,18 @@ def selfcheck() -> int:
          snaps(**{"BENCH_x.json": base}),
          snaps(**{"BENCH_x.json": base, "BENCH_params.json": params}),
          strict=True, expect_text="BENCH_params.json: new snapshot")
+    # The trace snapshot's first appearance (PR adding the tracing
+    # subsystem + overhead bench): no previous BENCH_trace.json artifact
+    # exists, so it is skipped, never flagged — even strict.
+    trace = _snapshot(
+        {"record+drain 10k spans + 10k instants": 0.002,
+         "synthetic epoch (trace disabled)": 0.006,
+         "synthetic epoch (instrumented)": 0.0061},
+        overhead_pct="1.7")
+    case("first-run BENCH_trace.json is skipped", 0,
+         snaps(**{"BENCH_x.json": base}),
+         snaps(**{"BENCH_x.json": base, "BENCH_trace.json": trace}),
+         strict=True, expect_text="BENCH_trace.json: new snapshot")
 
     if failures:
         print(f"self-check FAILED: {failures}")
